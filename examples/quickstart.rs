@@ -1,0 +1,55 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. loads the **tiny** AOT artifact (whose matmuls went through the
+//!    L1 Pallas qmatmul kernel — `pallas: true` in the manifest),
+//! 2. trains it for a few dozen steps from rust via PJRT (no python),
+//! 3. saves a checkpoint and reloads it into the pure-rust FloatSD8
+//!    inference engine,
+//! 4. prints the 4× weight-memory saving.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use floatsd_lstm::data::make_source;
+use floatsd_lstm::lstm::model::{build_tiny_from_params, ParamBag};
+use floatsd_lstm::runtime::{Runtime, TrainSession};
+use floatsd_lstm::tensorfile::read_tensors;
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.client.platform_name());
+
+    // -- train the Pallas-kernel artifact ---------------------------------
+    let mut session = TrainSession::new(&mut rt, "tiny_fsd8m16")?;
+    println!(
+        "artifact tiny_fsd8m16 (pallas={}): {} state tensors",
+        session.artifact.pallas, session.task.n_state
+    );
+    let task = session.task.clone();
+    let mut src = make_source(
+        &task.name, task.batch, &task.x_shape, &task.y_shape,
+        task.vocab, task.vocab_tgt, task.n_classes, 2, 1,
+    )?;
+    for step in 0..60 {
+        let m = session.step(&src.next_train())?;
+        if step % 10 == 0 {
+            println!("step {step:>3}: loss {:.4}  ppl {:.2}", m.mean_loss(), m.perplexity());
+        }
+    }
+    let eval = session.eval(src.eval_set())?;
+    println!("eval: loss {:.4}  ppl {:.2}", eval.mean_loss(), eval.perplexity());
+
+    // -- hand the weights to the rust inference engine --------------------
+    let ckpt = std::env::temp_dir().join("quickstart.tensors");
+    session.save_checkpoint(&ckpt)?;
+    let bag = ParamBag::from_tensors(read_tensors(&ckpt)?);
+    let engine = build_tiny_from_params(&bag)?;
+    let logits = engine.forward(&[3, 1, 4, 1, 5]);
+    let next: usize = logits.last().unwrap().iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap();
+    println!("engine: argmax next-token after [3,1,4,1,5] = {next}");
+    let (sd8, fp32) = engine.weight_bytes();
+    println!("engine weight storage: {sd8} B (FloatSD8) vs {fp32} B (FP32) — {}x", fp32 / sd8);
+    Ok(())
+}

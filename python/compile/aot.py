@@ -1,0 +1,268 @@
+"""AOT compile path: lower every (task × precision-scheme) train/eval
+step to **HLO text** and emit the interchange artifacts consumed by the
+rust coordinator.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts`` → ``artifacts/``):
+
+* ``<task>_<scheme>.train.hlo.txt`` / ``.eval.hlo.txt`` — the AOT steps;
+* ``<task>.init.tensors``  — initial (params, optimizer) state, one f32
+  tensor per pytree leaf in flattening order (the order rust feeds back);
+* ``golden/formats.tensors`` — jnp quantizer outputs pinning the grids
+  to the bit-exact rust ``formats::`` implementations;
+* ``manifest.json`` — shapes, state layouts, scheme table, artifact map.
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import lstm, precision, tasks, tensorio
+from .kernels import quant, ref
+
+SEED = 20200711  # fixed: every scheme starts from identical weights
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def state_specs(state):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state
+    )
+
+
+def flatten_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(np.asarray(leaf))
+    return names, leaves
+
+
+# ----------------------------------------------------------------------
+# Artifact set
+# ----------------------------------------------------------------------
+
+
+def artifact_plan() -> list[tuple[str, str, bool]]:
+    """(task, scheme, use_pallas) triples to lower.
+
+    ``ab1`` is numerically identical to ``fsd8`` — aliased in the
+    manifest instead of recompiled. The tiny task is lowered through the
+    L1 Pallas kernels to prove the full-stack composition.
+    """
+    plan = []
+    for task in ("pos", "nli", "mt", "lm"):
+        for scheme in ("fp32", "fsd8", "fsd8m16"):
+            plan.append((task, scheme, False))
+    for scheme in ("ab2", "ab3", "ab4", "ab5", "fsd8sr"):
+        plan.append(("lm", scheme, False))
+    plan.append(("tiny", "fp32", False))
+    plan.append(("tiny", "fsd8m16", True))
+    return plan
+
+
+def lower_artifact(task: str, scheme: str, use_pallas: bool, out_dir: str,
+                   manifest: dict) -> None:
+    cfg = precision.all_schemes()[scheme]
+    lstm.USE_PALLAS_MATMUL = use_pallas
+    try:
+        init_state, train_step, eval_step, spec = tasks.make_steps(task, cfg)
+        state = init_state(SEED)
+        sspec = state_specs(state)
+        bsz = spec.batch
+        x_spec = jax.ShapeDtypeStruct((bsz, *spec.x_shape), jnp.int32)
+        y_spec = jax.ShapeDtypeStruct((bsz, *spec.y_shape), jnp.int32)
+
+        name = f"{task}_{scheme}"
+        train_path = f"{name}.train.hlo.txt"
+        eval_path = f"{name}.eval.hlo.txt"
+
+        # keep_unused=True: the eval step ignores the optimizer state,
+        # and jit would silently prune those parameters from the HLO
+        # signature — the rust driver needs a stable (state, x, y) ABI.
+        lowered_t = jax.jit(train_step, keep_unused=True).lower(sspec, x_spec, y_spec)
+        with open(os.path.join(out_dir, train_path), "w") as f:
+            f.write(to_hlo_text(lowered_t))
+        lowered_e = jax.jit(eval_step, keep_unused=True).lower(sspec, x_spec, y_spec)
+        with open(os.path.join(out_dir, eval_path), "w") as f:
+            f.write(to_hlo_text(lowered_e))
+
+        # init state (scheme-independent given task: same seed & arch; the
+        # optimizer layout is also identical) — write once per task.
+        init_file = f"{task}.init.tensors"
+        init_full = os.path.join(out_dir, init_file)
+        names, leaves = flatten_with_names(state)
+        if not os.path.exists(init_full):
+            tensorio.write_tensors(init_full, list(zip(names, leaves)))
+
+        manifest["tasks"].setdefault(
+            task,
+            {
+                "init": init_file,
+                "n_state": len(leaves),
+                "state_names": names,
+                "state_shapes": [list(a.shape) for a in leaves],
+                "batch": bsz,
+                "x_shape": list(spec.x_shape),
+                "y_shape": list(spec.y_shape),
+                "vocab": spec.vocab,
+                "vocab_tgt": spec.vocab_tgt,
+                "n_classes": spec.n_classes,
+                "optimizer": spec.optimizer,
+                "lr": spec.lr,
+                "metric": spec.metric,
+                "clip_norm": spec.clip_norm,
+            },
+        )
+        manifest["artifacts"][name] = {
+            "task": task,
+            "scheme": scheme,
+            "train": train_path,
+            "eval": eval_path,
+            "pallas": use_pallas,
+        }
+        print(f"  lowered {name} (pallas={use_pallas})")
+    finally:
+        lstm.USE_PALLAS_MATMUL = False
+
+
+# ----------------------------------------------------------------------
+# Golden vectors (rust <-> jnp grid pinning)
+# ----------------------------------------------------------------------
+
+
+def write_golden(out_dir: str) -> None:
+    gd = os.path.join(out_dir, "golden")
+    os.makedirs(gd, exist_ok=True)
+    rng = np.random.default_rng(7)
+
+    # Mixed-scale probe covering normals, subnormals, ties, saturation.
+    xs = np.concatenate(
+        [
+            rng.uniform(-6, 6, 2048),
+            rng.uniform(-1, 1, 1024) * 10.0 ** rng.uniform(-8, 5, 1024),
+            np.array([0.0, -0.0, 1.0, -1.0, 0.5, 4.5, -4.5, 1e9, -1e9,
+                      2.0**-16, 2.0**-25, 114688.0, 2.25 * 2.0**-7]),
+            quant.SD8_VALUES_F64,  # every sd8 grid point must be a fixpoint
+        ]
+    ).astype(np.float32)
+
+    tensors = [
+        ("x", xs),
+        ("fp8", np.asarray(ref.ref_fp8_round(jnp.asarray(xs)))),
+        ("fp16", np.asarray(ref.ref_fp16_round(jnp.asarray(xs)))),
+        ("sd8", np.asarray(ref.ref_floatsd8_round(jnp.asarray(xs)))),
+        ("sig2", np.asarray(ref.ref_sigmoid_sd8(jnp.asarray(xs)))),
+        ("sig1", np.asarray(quant.sigmoid_floatsd8_one_region(jnp.asarray(xs)))),
+        ("sd8_grid", quant.SD8_VALUES.astype(np.float32)),
+    ]
+
+    # qmatmul golden
+    x = rng.uniform(-2, 2, (16, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 16)).astype(np.float32)
+    y = np.asarray(ref.ref_qmatmul(jnp.asarray(x), jnp.asarray(w)))
+    tensors += [("mm_x", x), ("mm_w", w), ("mm_y", y)]
+
+    # lstm gate golden (Eq. 5/6 elementwise half)
+    zf, zi, zo, zg = (rng.uniform(-4, 4, 256).astype(np.float32) for _ in range(4))
+    c = rng.uniform(-2, 2, 256).astype(np.float32)
+    co, ho = ref.ref_lstm_gates(*(jnp.asarray(a) for a in (zf, zi, zo, zg, c)))
+    tensors += [
+        ("g_zf", zf), ("g_zi", zi), ("g_zo", zo), ("g_zg", zg), ("g_c", c),
+        ("g_c_out", np.asarray(co)), ("g_h_out", np.asarray(ho)),
+    ]
+
+    tensorio.write_tensors(os.path.join(gd, "formats.tensors"), tensors)
+    print(f"  wrote golden vectors ({len(tensors)} tensors)")
+
+
+# ----------------------------------------------------------------------
+# main
+# ----------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names (task_scheme) to lower",
+    )
+    ap.add_argument("--golden-only", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    write_golden(out_dir)
+    if args.golden_only:
+        return
+
+    manifest: dict = {
+        "format_version": 1,
+        "seed": SEED,
+        "tasks": {},
+        "artifacts": {},
+        "schemes": {
+            name: {
+                "weights": c.weights,
+                "activations": c.activations,
+                "first_layer_acts": c.first_layer_acts,
+                "last_layer_acts": c.last_layer_acts,
+                "gradients": c.gradients,
+                "master": c.master,
+                "sigmoid": c.sigmoid,
+                "accum": c.accum,
+                "loss_scale": c.loss_scale,
+                "stochastic_gradients": c.stochastic_gradients,
+            }
+            for name, c in precision.all_schemes().items()
+        },
+        "sd8_values": [float(v) for v in quant.SD8_VALUES],
+    }
+
+    plan = artifact_plan()
+    if args.only:
+        keep = set(args.only.split(","))
+        plan = [p for p in plan if f"{p[0]}_{p[1]}" in keep]
+
+    for task, scheme, use_pallas in plan:
+        lower_artifact(task, scheme, use_pallas, out_dir, manifest)
+
+    # ab1 is numerically fsd8 (Table V row 1): alias, don't recompile.
+    if "lm_fsd8" in manifest["artifacts"]:
+        manifest["artifacts"]["lm_ab1"] = dict(
+            manifest["artifacts"]["lm_fsd8"], scheme="ab1"
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifact entries to manifest.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

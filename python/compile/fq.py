@@ -1,0 +1,103 @@
+"""Fake-quantization machinery (the QPyTorch-equivalent, from scratch).
+
+``fq(x, fwd, bwd)`` quantizes the value on the forward pass with the
+``fwd`` grid and the incoming cotangent on the backward pass with the
+``bwd`` grid — this is how the paper's "FP8 forward activations and FP8
+backward activations/gradients" are realised inside a single
+differentiable graph (QPyTorch does the same with autograd Functions).
+
+``ste_*`` variants give piecewise-constant quantizers a useful gradient
+(straight-through / true-function derivative), required for the
+FloatSD8-quantized sigmoid whose exact derivative is 0 a.e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fq(fwd_name: str, bwd_name: str):
+    f = quant.get_quantizer(fwd_name)
+    b = quant.get_quantizer(bwd_name)
+
+    @jax.custom_vjp
+    def _fq(x):
+        return f(x)
+
+    def _fwd(x):
+        return f(x), None
+
+    def _bwd(_, g):
+        return (b(g),)
+
+    _fq.defvjp(_fwd, _bwd)
+    return _fq
+
+
+def fq(x, fwd: str, bwd: str = "none"):
+    """Quantize forward with `fwd`, quantize the cotangent with `bwd`.
+
+    Both names index :data:`quant.QUANTIZERS`
+    ('none' | 'fp8' | 'fp16' | 'sd8'). ``fq(x, 'none', 'none')`` is the
+    identity and costs nothing after tracing.
+    """
+    if fwd == "none" and bwd == "none":
+        return x
+    return _make_fq(fwd, bwd)(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sigmoid_sd8(bwd_name: str):
+    b = quant.get_quantizer(bwd_name)
+
+    @jax.custom_vjp
+    def _qsig(x):
+        return quant.sigmoid_floatsd8(x)
+
+    def _fwd(x):
+        s = jax.nn.sigmoid(x)
+        return quant.sigmoid_floatsd8(x), s
+
+    def _bwd(s, g):
+        # straight-through: derivative of the *unquantized* sigmoid,
+        # cotangent quantized to the backward-activation grid.
+        return (b(g * s * (1.0 - s)),)
+
+    _qsig.defvjp(_fwd, _bwd)
+    return _qsig
+
+
+def sigmoid_sd8(x, bwd: str = "none"):
+    """Two-region FloatSD8-quantized sigmoid with an STE gradient."""
+    return _make_sigmoid_sd8(bwd)(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_tanh_q(fwd_name: str, bwd_name: str):
+    f = quant.get_quantizer(fwd_name)
+    b = quant.get_quantizer(bwd_name)
+
+    @jax.custom_vjp
+    def _qtanh(x):
+        return f(jnp.tanh(x))
+
+    def _fwd(x):
+        t = jnp.tanh(x)
+        return f(t), t
+
+    def _bwd(t, g):
+        return (b(g * (1.0 - t * t)),)
+
+    _qtanh.defvjp(_fwd, _bwd)
+    return _qtanh
+
+
+def tanh_q(x, fwd: str = "none", bwd: str = "none"):
+    """tanh with quantized output (activation grid) and STE gradient."""
+    return _make_tanh_q(fwd, bwd)(x)

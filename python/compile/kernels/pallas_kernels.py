@@ -1,0 +1,265 @@
+"""L1 — Pallas kernels for the FloatSD8 hot paths.
+
+All kernels are authored TPU-shaped (BlockSpec-tiled for VMEM, branch-free
+vector code for the VPU, MXU-sized matmul tiles) but are **lowered with
+``interpret=True``**: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode turns each kernel into plain HLO that any
+backend runs. Correctness is the contract here (pytest vs ``ref.py``);
+real-TPU performance is *estimated* in DESIGN.md §8 from the BlockSpec
+VMEM footprints.
+
+Hardware-adaptation notes (paper ASIC → TPU, DESIGN.md §3):
+
+* the ASIC's "≤2 partial products per weight" becomes a branch-free
+  **midpoint-rank quantizer**: rank = Σ (x ≥ midpoint) over the 128-entry
+  midpoint table, then a one-hot contraction against the 129-entry value
+  grid — no gathers, no sorts, pure VPU compare/add. The tables ride
+  into VMEM as broadcast operands (every grid step maps block 0), the
+  Pallas analogue of pinning a small LUT in scratchpad;
+* the ASIC's output-stationary PE with FP16 accumulation becomes a
+  K-revisiting matmul grid that accumulates f32 in the output tile and
+  rounds to the binary16 grid once per output tile (the paper's
+  accumulation boundary).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+
+# ----------------------------------------------------------------------
+# Branch-free quantizer bodies (shared by several kernels)
+# ----------------------------------------------------------------------
+
+
+def _sd8_round_vector(x, mids, grid):
+    """FloatSD8 round via midpoint rank + one-hot contraction.
+
+    Equivalent to quant.floatsd8_round but with no searchsorted (which
+    has no TPU lowering): rank(x) = #{midpoints m : m <= x} for x >= 0
+    (ties away from zero) and #{m : m < x} for x < 0.
+    """
+    xe = x[..., None]
+    rank_pos = jnp.sum((mids <= xe).astype(jnp.int32), axis=-1)
+    rank_neg = jnp.sum((mids < xe).astype(jnp.int32), axis=-1)
+    rank = jnp.where(x >= 0, rank_pos, rank_neg)
+    # one-hot contraction instead of gather (VPU-friendly)
+    onehot = (rank[..., None] == jax.lax.iota(jnp.int32, grid.shape[0])).astype(x.dtype)
+    out = jnp.sum(onehot * grid.astype(x.dtype), axis=-1)
+    return jnp.where(jnp.isnan(x), jnp.zeros_like(x), out)
+
+
+def _fp8_round_vector(x):
+    """FP8 (1-5-2) RNE — already branch-free in quant.fp8_round."""
+    return quant.fp8_round(x)
+
+
+def _fp16_round_vector(x):
+    return quant.fp16_round(x)
+
+
+def _sd8_tables():
+    """The (midpoints, grid) LUT pair fed to kernels as operands."""
+    return jnp.asarray(quant.SD8_MIDPOINTS), jnp.asarray(quant.SD8_VALUES)
+
+
+def _table_spec(table):
+    """BlockSpec broadcasting a small LUT to every grid step (block 0)."""
+    return pl.BlockSpec(table.shape, lambda *_: (0,) * table.ndim)
+
+
+# ----------------------------------------------------------------------
+# Elementwise kernels
+# ----------------------------------------------------------------------
+
+
+def _elementwise_call(body, x, block=4096, with_tables=False):
+    """Tile a flat elementwise kernel over 1-D VMEM-sized blocks.
+
+    ``body(x_block [, mids, grid])`` computes the per-element result;
+    when ``with_tables`` the SD8 LUTs are passed as broadcast operands.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # pad to a multiple of the block so BlockSpec tiling is exact
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    grid_steps = flat.shape[0] // block
+
+    operands = [flat]
+    in_specs = [pl.BlockSpec((block,), lambda i: (i,))]
+    if with_tables:
+        mids, grid = _sd8_tables()
+        operands += [mids, grid]
+        in_specs += [_table_spec(mids), _table_spec(grid)]
+
+    def kernel(x_ref, *rest):
+        o_ref = rest[-1]
+        tables = tuple(r[...] for r in rest[:-1])
+        o_ref[...] = body(x_ref[...], *tables)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid_steps,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(*operands)
+    if pad:
+        out = out[:n]
+    return out.reshape(x.shape)
+
+
+def floatsd8_round_pallas(x, block=4096):
+    """Pallas FloatSD8 quantizer (vs ref_floatsd8_round)."""
+    return _elementwise_call(_sd8_round_vector, x, block, with_tables=True)
+
+
+def fp8_round_pallas(x, block=4096):
+    """Pallas FP8 quantizer (vs ref_fp8_round)."""
+    return _elementwise_call(_fp8_round_vector, x, block)
+
+
+def _sigmoid_sd8_body(v, mids, grid):
+    s = jnp.float32(1.0) / (jnp.float32(1.0) + jnp.exp(-jnp.abs(v)))
+    q_neg = _sd8_round_vector(jnp.float32(1.0) - s, mids, grid)
+    return jnp.where(v <= 0, q_neg, jnp.float32(1.0) - q_neg)
+
+
+def sigmoid_sd8_pallas(x, block=4096):
+    """Pallas two-region quantized sigmoid (vs ref_sigmoid_sd8)."""
+    return _elementwise_call(_sigmoid_sd8_body, x, block, with_tables=True)
+
+
+# ----------------------------------------------------------------------
+# Quantized matmul (the forward-pass GEMM of Eq. 1-4)
+# ----------------------------------------------------------------------
+
+
+def qmatmul_pallas(x, w, bm=32, bn=64, bk=32):
+    """FP8(x) × FloatSD8(w) → FP16-rounded result, tiled (bm, bn, bk).
+
+    Output-stationary: the (m, n) output tile accumulates in f32 across
+    the k grid dimension and is rounded to the binary16 grid on the last
+    k step — exactly the paper's PE accumulation discipline, with the
+    FP16 boundary at the output tile.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    nk = k // bk
+    mids, grid = _sd8_tables()
+
+    def kernel(x_ref, w_ref, mids_ref, grid_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        xq = _fp8_round_vector(x_ref[...])
+        wq = _sd8_round_vector(w_ref[...], mids_ref[...], grid_ref[...])
+        o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _finish():
+            o_ref[...] = _fp16_round_vector(o_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            _table_spec(mids),
+            _table_spec(grid),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, mids, grid)
+
+
+# ----------------------------------------------------------------------
+# Fused LSTM gate kernel (Eq. 5/6 elementwise half)
+# ----------------------------------------------------------------------
+
+
+def lstm_gates_pallas(z_f, z_i, z_o, z_g, c_prev, block=1024):
+    """Fused quantized gate math: returns (c_t, h_t).
+
+    One VMEM pass over five inputs and two outputs; all the per-element
+    quantization (σ→FloatSD8 two-region, tanh→FP8, FP16 cell-state
+    accumulation, FP8 output) happens in-register.
+    """
+    shape = z_f.shape
+    flats = [a.reshape(-1) for a in (z_f, z_i, z_o, z_g, c_prev)]
+    n = flats[0].shape[0]
+    pad = (-n) % block
+    if pad:
+        flats = [jnp.concatenate([f, jnp.zeros((pad,), f.dtype)]) for f in flats]
+    grid_steps = flats[0].shape[0] // block
+    mids, grid = _sd8_tables()
+
+    def kernel(f_ref, i_ref, o_ref, g_ref, c_ref, mids_ref, grid_ref,
+               co_ref, ho_ref):
+        mids_v, grid_v = mids_ref[...], grid_ref[...]
+        f = _sigmoid_sd8_body(f_ref[...], mids_v, grid_v)
+        i = _sigmoid_sd8_body(i_ref[...], mids_v, grid_v)
+        o = _sigmoid_sd8_body(o_ref[...], mids_v, grid_v)
+        g = _fp8_round_vector(jnp.tanh(g_ref[...]))
+        # cell state is architecturally FP16 (see ref.ref_lstm_gates)
+        cp = _fp16_round_vector(c_ref[...])
+        c = _fp16_round_vector(f * cp + i * g)
+        h = _fp8_round_vector(o * _fp8_round_vector(jnp.tanh(c)))
+        co_ref[...] = c
+        ho_ref[...] = h
+
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    c_out, h_out = pl.pallas_call(
+        kernel,
+        grid=(grid_steps,),
+        in_specs=[spec] * 5 + [_table_spec(mids), _table_spec(grid)],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(flats[0].shape, z_f.dtype),
+            jax.ShapeDtypeStruct(flats[0].shape, z_f.dtype),
+        ],
+        interpret=True,
+    )(*flats, mids, grid)
+    if pad:
+        c_out, h_out = c_out[:n], h_out[:n]
+    return c_out.reshape(shape), h_out.reshape(shape)
+
+
+# ----------------------------------------------------------------------
+# VMEM / MXU static analysis (perf estimation, DESIGN.md §8)
+# ----------------------------------------------------------------------
+
+
+def qmatmul_vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    """VMEM bytes resident for one qmatmul grid step (x, w, o tiles +
+    the two SD8 LUTs)."""
+    luts = (quant.SD8_MIDPOINTS.size + quant.SD8_VALUES.size) * dtype_bytes
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes + luts
+
+
+def qmatmul_mxu_utilization(bm, bn, bk, mxu=128):
+    """Fraction of the 128×128 MXU systolic array a (bm,bn,bk) tile keeps
+    busy: min(bm,mxu)/mxu * min(bn,mxu)/mxu (bk streams through)."""
+    return min(bm, mxu) / mxu * min(bn, mxu) / mxu
+
+
+def perf_estimate(bm=32, bn=64, bk=32):
+    """Static perf summary used by DESIGN.md §8 / EXPERIMENTS.md §Perf."""
+    return {
+        "vmem_bytes": qmatmul_vmem_bytes(bm, bn, bk),
+        "mxu_utilization": qmatmul_mxu_utilization(bm, bn, bk),
+        "blocks": (bm, bn, bk),
+    }

@@ -1,0 +1,204 @@
+"""Quantization grids shared by the L1 Pallas kernels and the L2 model.
+
+These are the pure-jnp *definitions* of the paper's number formats; the
+rust crate implements the same grids bit-exactly in
+``rust/src/formats/`` and the two are pinned together by the golden
+vectors written by ``aot.py`` (checked by ``rust/tests/golden_formats.rs``).
+
+Formats (paper Table II / VI):
+
+* **FloatSD8** (weights ``w``, quantized sigmoid outputs ``s``): 3-bit
+  exponent (bias 7) + 31-value SD mantissa codebook ``g0 + g1/4`` with
+  ``g0 in {0,±1,±2,±4}``, ``g1 in {0,±1,±2}``. 129 distinct values.
+  Round to nearest, ties away from zero (hardware midpoint compare).
+* **FP8 (1-5-2)** (gradients ``g``, activations ``a``): bias 15,
+  subnormals, RNE, saturating at ±114688 [Wang et al., NeurIPS 2018].
+* **FP16** (master copy ``m``, last-layer activations ``o``, and *all
+  accumulations*): IEEE binary16 RNE via numpy's float16.
+
+Everything here is traceable (no python branching on values), so the
+same functions run inside jax.jit, lax.scan, custom_vjp and Pallas
+(interpret mode).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# FloatSD8 grid construction (mirrors rust formats::floatsd)
+# ----------------------------------------------------------------------
+
+SD8_EXP_BIAS = 7
+SD8_EXP_LEVELS = 8
+
+
+def _sd8_mantissas() -> np.ndarray:
+    """The 31 distinct mantissa values g0 + g1/4, ascending."""
+    vals = set()
+    for g0 in (-4, -2, -1, 0, 1, 2, 4):
+        for g1 in (-2, -1, 0, 1, 2):
+            vals.add(g0 * 4 + g1)  # in units of 1/4
+    return np.array(sorted(v / 4.0 for v in vals), dtype=np.float64)
+
+
+def _sd8_values() -> np.ndarray:
+    """All distinct representable FloatSD8 values, ascending (129)."""
+    m = _sd8_mantissas()
+    vals = set()
+    for e in range(SD8_EXP_LEVELS):
+        for mv in m:
+            vals.add(float(mv) * 2.0 ** (e - SD8_EXP_BIAS))
+    return np.array(sorted(vals), dtype=np.float64)
+
+
+SD8_MANTISSAS = _sd8_mantissas()
+SD8_VALUES_F64 = _sd8_values()
+#: the FloatSD8 grid as f32 (every entry is exactly representable)
+SD8_VALUES = SD8_VALUES_F64.astype(np.float32)
+#: midpoints between consecutive grid values (exact in f32: dyadic)
+SD8_MIDPOINTS = (0.5 * (SD8_VALUES_F64[:-1] + SD8_VALUES_F64[1:])).astype(np.float32)
+SD8_MAX = float(SD8_VALUES[-1])  # 4.5
+SD8_MIN_POSITIVE = float(SD8_VALUES[SD8_VALUES > 0][0])  # 0.25 * 2^-7
+
+
+def floatsd8_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest FloatSD8 value, ties away from zero.
+
+    NaN maps to 0 (mirrors rust). Implemented with two searchsorted
+    passes so the tie direction depends on the operand sign, exactly
+    like the hardware midpoint comparator.
+    """
+    x32 = x.astype(jnp.float32)
+    mids = jnp.asarray(SD8_MIDPOINTS)
+    grid = jnp.asarray(SD8_VALUES)
+    idx_pos = jnp.searchsorted(mids, x32, side="right")
+    idx_neg = jnp.searchsorted(mids, x32, side="left")
+    idx = jnp.where(x32 >= 0, idx_pos, idx_neg)
+    out = grid[jnp.clip(idx, 0, grid.shape[0] - 1)]
+    return jnp.where(jnp.isnan(x32), jnp.float32(0.0), out).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# FP8 (1-5-2)
+# ----------------------------------------------------------------------
+
+F8_BIAS = 15
+F8_MAX = 1.75 * 65536.0  # 114688 = (1 + 3/4) * 2^16
+F8_MIN_NORMAL_EXP = -14  # value exponent of the smallest normal
+F8_SUBNORMAL_ULP = 2.0 ** -16
+
+
+def _exact_pow2(e: jnp.ndarray) -> jnp.ndarray:
+    """2**e for integer e in [-126, 127], *exact* (XLA's exp2 lowers to
+    exp(e·ln2) which is off by ulps — fatal for grid construction)."""
+    bits = ((e + 127) << 23).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def fp8_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the FP8 (1-5-2) grid: RNE, subnormals, saturating.
+
+    Grid spacing for a value with exponent E (value in [2^E, 2^(E+1)))
+    is 2^(E-2); below 2^-14 the spacing is the fixed subnormal ulp
+    2^-16. ``jnp.round`` is round-half-to-even, matching the rust RNE.
+    NaN saturates to +max (mirrors rust).
+    """
+    x32 = x.astype(jnp.float32)
+    a = jnp.abs(x32)
+    # frexp: a = f * 2^e with f in [0.5, 1)  =>  value exponent E = e - 1.
+    _, e = jnp.frexp(jnp.where(a > 0, a, jnp.float32(1.0)))
+    value_exp = e.astype(jnp.int32) - 1
+    ulp_exp = jnp.maximum(value_exp, F8_MIN_NORMAL_EXP) - 2
+    ulp = _exact_pow2(ulp_exp)
+    q = jnp.round(a / ulp) * ulp
+    q = jnp.minimum(q, jnp.float32(F8_MAX))
+    q = jnp.where(a == 0, jnp.float32(0.0), q)
+    q = jnp.where(jnp.isnan(x32), jnp.float32(F8_MAX), q * jnp.sign(x32) + 0.0)
+    # note: q * sign(x) keeps signed zeros out (we use +0 uniformly)
+    return q.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# FP16
+# ----------------------------------------------------------------------
+
+
+def fp16_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the IEEE binary16 grid (RNE) and back to f32."""
+    return x.astype(jnp.float16).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Two-region quantized sigmoid / activation quantizers (paper §III-C)
+# ----------------------------------------------------------------------
+
+
+def sigmoid_floatsd8(x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7)/(8): ``Q(σ(x))`` for x ≤ 0 and ``1 − Q(σ(−x))`` for x > 0.
+
+    The positive branch is *exactly* the value the hardware computes as
+    the two-FloatSD8 pair ``(+1, −Q(σ(−x)))`` summed in the MAC; here we
+    return the summed scalar because the MAC consumes the pair natively.
+    """
+    s = jnp.float32(1.0) / (jnp.float32(1.0) + jnp.exp(-jnp.abs(x.astype(jnp.float32))))
+    # σ(-|x|) = 1 - σ(|x|)
+    q_neg = floatsd8_round(jnp.float32(1.0) - s)  # = Q(sigma(-|x|))
+    out = jnp.where(x <= 0, q_neg, jnp.float32(1.0) - q_neg)
+    return out.astype(x.dtype)
+
+
+def sigmoid_floatsd8_one_region(x: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 4's strawman: apply Q(σ(x)) over the whole input range.
+
+    Only used to regenerate the paper's Fig. 4 error plot and the
+    ablation bench; training always uses the two-region version.
+    """
+    s = jnp.float32(1.0) / (jnp.float32(1.0) + jnp.exp(-x.astype(jnp.float32)))
+    return floatsd8_round(s).astype(x.dtype)
+
+
+def fp8_round_stochastic(x: jnp.ndarray) -> jnp.ndarray:
+    """FP8 with *bit-reuse* stochastic rounding (extension ablation).
+
+    The paper rejected stochastic rounding for hardware complexity
+    (§III-D); we implement it deterministically — the random threshold is
+    a hash of the operand's own low mantissa bits, so the op stays pure
+    and AOT-compilable (no RNG key plumbing through the artifact).
+    """
+    x32 = x.astype(jnp.float32)
+    a = jnp.abs(x32)
+    _, e = jnp.frexp(jnp.where(a > 0, a, jnp.float32(1.0)))
+    value_exp = e.astype(jnp.int32) - 1
+    ulp_exp = jnp.maximum(value_exp, F8_MIN_NORMAL_EXP) - 2
+    ulp = _exact_pow2(ulp_exp)
+    scaled = a / ulp
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    # integer hash of the raw bits -> uniform threshold in [0, 1)
+    bits = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    h = bits * jnp.uint32(0x9E3779B9)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    thresh = (h >> 8).astype(jnp.float32) * jnp.float32(2.0**-24)
+    q = (lo + (frac > thresh).astype(jnp.float32)) * ulp
+    q = jnp.minimum(q, jnp.float32(F8_MAX))
+    q = jnp.where(a == 0, jnp.float32(0.0), q)
+    q = jnp.where(jnp.isnan(x32), jnp.float32(F8_MAX), q * jnp.sign(x32) + 0.0)
+    return q.astype(x.dtype)
+
+
+QUANTIZERS = {
+    "none": lambda x: x,
+    "fp8": fp8_round,
+    "fp8sr": fp8_round_stochastic,
+    "fp16": fp16_round,
+    "sd8": floatsd8_round,
+}
+
+
+def get_quantizer(name: str):
+    """Look up a quantizer by config name ('none'|'fp8'|'fp16'|'sd8')."""
+    return QUANTIZERS[name]

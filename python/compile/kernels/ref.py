@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for every Pallas kernel (the CORE correctness signal).
+
+Each ``ref_*`` function defines the mathematically-intended result of the
+corresponding kernel in ``pallas_kernels.py``; pytest
+(``python/tests/test_kernels.py``) asserts allclose/bit-equality across a
+hypothesis sweep of shapes and value distributions.
+
+The oracle itself is pinned to the bit-exact rust implementation through
+the golden vectors (``aot.py --golden``), closing the loop:
+
+    rust formats  ==golden==  ref.py  ==pytest==  pallas kernels
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quant
+
+
+def ref_floatsd8_round(x):
+    """FloatSD8 round-to-nearest (ties away from zero)."""
+    return quant.floatsd8_round(x)
+
+
+def ref_fp8_round(x):
+    """FP8 (1-5-2) RNE with subnormals + saturation."""
+    return quant.fp8_round(x)
+
+
+def ref_fp16_round(x):
+    """IEEE binary16 RNE."""
+    return quant.fp16_round(x)
+
+
+def ref_sigmoid_sd8(x):
+    """Two-region FloatSD8-quantized sigmoid (paper Eq. 7/8)."""
+    return quant.sigmoid_floatsd8(x)
+
+
+def ref_qmatmul(x, w):
+    """Quantized matmul: the paper's forward-pass GEMM semantics.
+
+    ``x`` is rounded to FP8, ``w`` to FloatSD8, the product is
+    accumulated and the result rounded to the FP16 grid (the paper's
+    FP16-accumulation boundary, modeled at the dot output — see
+    DESIGN.md §6 for the fidelity note; per-add rounding is validated
+    separately by the rust hardware simulator).
+    """
+    xq = quant.fp8_round(x)
+    wq = quant.floatsd8_round(w)
+    acc = jnp.dot(xq.astype(jnp.float32), wq.astype(jnp.float32))
+    return quant.fp16_round(acc).astype(x.dtype)
+
+
+def ref_lstm_gates(z_f, z_i, z_o, z_g, c_prev):
+    """The quantized elementwise half of an LSTM cell (paper Eq. 5/6).
+
+    σ-gates are FloatSD8-quantized (two-region), the cell gate uses
+    tanh rounded to FP8, the cell state and output accumulate on the
+    FP16 grid, and h is re-quantized to FP8 (activation precision).
+
+    The incoming cell state is architecturally FP16 (it is the output
+    of the previous step's FP16 accumulation), so we round it to the
+    grid at entry. This also makes every product below exactly
+    representable in f32 (≤ 11+11 significant bits), so the result is
+    independent of FMA/fusion choices — bit-stable across backends.
+    """
+    c_prev = quant.fp16_round(c_prev)
+    f = quant.sigmoid_floatsd8(z_f)
+    i = quant.sigmoid_floatsd8(z_i)
+    o = quant.sigmoid_floatsd8(z_o)
+    g = quant.fp8_round(jnp.tanh(z_g))
+    c = quant.fp16_round(f * c_prev + i * g)
+    h = quant.fp8_round(o * quant.fp8_round(jnp.tanh(c)))
+    return c, h

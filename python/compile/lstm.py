@@ -1,0 +1,239 @@
+"""L2 — quantized LSTM building blocks (paper Eq. 1-6 with §III hooks).
+
+Every block takes a :class:`..precision.PrecisionConfig`; with the fp32
+baseline config every quantizer is the identity and this file reduces to
+a vanilla LSTM, so *one* code path produces both curves in Fig. 6.
+
+Where each precision knob lands (paper Table II/VI):
+
+* ``cfg.weights`` — every weight matrix entering a matmul (Eq. 1-4
+  and all dense layers);
+* ``cfg.activations`` / ``first_layer_acts`` / ``last_layer_acts`` —
+  quantize the *inputs* of matmuls (forward) and their cotangents
+  (backward = the paper's "backward activations");
+* ``cfg.sigmoid`` — gates f, i, o via the two-region FloatSD8 σ;
+* ``cfg.accum`` — FP16 rounding at every dot-product output and at the
+  cell-state accumulation (Eq. 5);
+* ``cfg.gradients`` — cotangent grid (see also ``optim.py`` for the
+  weight-gradient quantization at the update).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import fq
+from .precision import PrecisionConfig
+
+
+def _grad_name(cfg: PrecisionConfig) -> str:
+    if cfg.gradients == "fp8" and cfg.stochastic_gradients:
+        return "fp8sr"
+    return cfg.gradients
+
+
+#: when True (set by aot.py for the quickstart/tiny artifacts), quantized
+#: matmuls are lowered through the L1 Pallas qmatmul kernel so the full
+#: L1→L2→L3 composition is exercised; the jnp path is numerically
+#: identical (pytest pins kernel == ref) and lowers to leaner HLO for the
+#: larger experiment artifacts. See DESIGN.md §2.
+USE_PALLAS_MATMUL = False
+
+
+def _auto_blocks(m: int, n: int, k: int):
+    """Largest power-of-two-ish divisors ≤ (32, 64, 32) for exact tiling."""
+
+    def best(dim, cap):
+        d = min(dim, cap)
+        while dim % d:
+            d -= 1
+        return d
+
+    return best(m, 32), best(n, 64), best(k, 32)
+
+
+@jax.custom_vjp
+def _pallas_qmatmul_2d(x, w):
+    from .kernels import pallas_kernels
+
+    bm, bn, bk = _auto_blocks(x.shape[0], w.shape[1], x.shape[1])
+    return pallas_kernels.qmatmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+
+
+def _pallas_qmatmul_fwd(x, w):
+    from .kernels import quant
+
+    return _pallas_qmatmul_2d(x, w), (quant.fp8_round(x), quant.floatsd8_round(w))
+
+
+def _pallas_qmatmul_bwd(res, g):
+    # Mirrors the autodiff of the jnp path: STE through the fp16 output
+    # rounding; cotangents flow through the quantized operands. The fp8
+    # quantization of the activation cotangent is applied by the
+    # enclosing fq hook, exactly as in the jnp path.
+    from .kernels import quant
+
+    xq, wq = res
+    return g @ wq.T, xq.T @ g
+
+
+_pallas_qmatmul_2d.defvjp(_pallas_qmatmul_fwd, _pallas_qmatmul_bwd)
+
+
+def qmatmul(xq, wq, cfg: PrecisionConfig):
+    """Quantized matmul with the FP16 accumulation boundary.
+
+    Inputs are already fake-quantized by the caller; the Pallas path
+    re-quantizes in-kernel (idempotent, bit-identical).
+    """
+    if (
+        USE_PALLAS_MATMUL
+        and cfg.accum == "fp16"
+        and cfg.weights == "sd8"
+        and cfg.activations == "fp8"
+    ):
+        shape = xq.shape
+        x2d = xq.reshape(-1, shape[-1])
+        y = _pallas_qmatmul_2d(x2d, wq)
+        return y.reshape(*shape[:-1], wq.shape[1])
+    return fq.fq(xq @ wq, cfg.accum, "none")
+
+
+def acc_round(x, cfg: PrecisionConfig):
+    """The paper's FP16 accumulation boundary."""
+    return fq.fq(x, cfg.accum, "none")
+
+
+def quantize_weight(w, cfg: PrecisionConfig):
+    """FloatSD8 weight quantization with straight-through gradient
+    (gradient flows unchanged to the master copy; the master copy itself
+    is rounded in optim.py)."""
+    return fq.fq(w, cfg.weights, "none")
+
+
+def qdense(p, x, cfg: PrecisionConfig, act: str):
+    """Quantized dense layer: y = round_acc(fq(x) @ Q(w) + b).
+
+    ``act`` is the activation grid for this layer's *input* ('fp8',
+    'fp16' or 'none' — callers pass cfg.activations / first / last as
+    appropriate).
+    """
+    xq = fq.fq(x, act, _grad_name(cfg))
+    wq = quantize_weight(p["w"], cfg)
+    b = fq.fq(p["b"], "fp16" if cfg.accum == "fp16" else "none", "none")
+    return qmatmul(xq, wq, cfg) + b
+
+
+def lstm_cell(p, x, h, c, cfg: PrecisionConfig, x_act: str):
+    """One LSTM step (Eq. 1-6) under the precision config.
+
+    ``x_act`` is the grid of the incoming activation `x` (first layer
+    uses cfg.first_layer_acts, stacked layers use cfg.activations).
+    Weights are packed as wx [D, 4H], wh [H, 4H], b [4H] in gate order
+    (f, i, o, g) — one fused matmul per input, like cuDNN/paper Fig. 7's
+    four PEs fed from the same input registers.
+    """
+    g = _grad_name(cfg)
+    xq = fq.fq(x, x_act, g)
+    hq = fq.fq(h, cfg.activations, g)
+    wx = quantize_weight(p["wx"], cfg)
+    wh = quantize_weight(p["wh"], cfg)
+    b = fq.fq(p["b"], "fp16" if cfg.accum == "fp16" else "none", "none")
+    z = qmatmul(xq, wx, cfg) + qmatmul(hq, wh, cfg) + b
+    zf, zi, zo, zg = jnp.split(z, 4, axis=-1)
+
+    if cfg.sigmoid == "sd8":
+        f = fq.sigmoid_sd8(zf, bwd=g)
+        i = fq.sigmoid_sd8(zi, bwd=g)
+        o = fq.sigmoid_sd8(zo, bwd=g)
+    else:
+        f = jax.nn.sigmoid(zf)
+        i = jax.nn.sigmoid(zi)
+        o = jax.nn.sigmoid(zo)
+    gg = fq.tanh_q(zg, fwd=cfg.activations, bwd=g)
+
+    c_new = acc_round(f * c + i * gg, cfg)
+    tc = fq.tanh_q(c_new, fwd=cfg.activations, bwd=g)
+    h_new = fq.fq(o * tc, cfg.activations, g)
+    return h_new, c_new
+
+
+def lstm_layer(p, xs, cfg: PrecisionConfig, x_act: str, reverse: bool = False):
+    """Run a unidirectional LSTM over ``xs`` [T, B, D] → hs [T, B, H]."""
+    hdim = p["wh"].shape[0]
+    bsz = xs.shape[1]
+    h0 = jnp.zeros((bsz, hdim), xs.dtype)
+    c0 = jnp.zeros((bsz, hdim), xs.dtype)
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_cell(p, x, h, c, cfg, x_act)
+        return (h, c), h
+
+    (h_last, c_last), hs = jax.lax.scan(step, (h0, c0), xs, reverse=reverse)
+    return hs, (h_last, c_last)
+
+
+def bilstm_layer(p, xs, cfg: PrecisionConfig, x_act: str):
+    """Bidirectional layer: concat of forward and backward passes.
+
+    ``p`` = {'fwd': cell-params, 'bwd': cell-params}; output [T, B, 2H].
+    """
+    hs_f, (hf, _) = lstm_layer(p["fwd"], xs, cfg, x_act, reverse=False)
+    hs_b, (hb, _) = lstm_layer(p["bwd"], xs, cfg, x_act, reverse=True)
+    return jnp.concatenate([hs_f, hs_b], axis=-1), (hf, hb)
+
+
+def embedding(p, ids, cfg: PrecisionConfig):
+    """Embedding lookup; outputs are the paper's "first layer"
+    activations (the embedding *inputs* are just indices — §IV-B(a))."""
+    e = jnp.take(p["emb"], ids, axis=0)
+    return fq.fq(e, cfg.first_layer_acts, _grad_name(cfg))
+
+
+def output_logits(p, x, cfg: PrecisionConfig):
+    """Output (last) layer: dense fed by hidden activations; its
+    activations (the logits) live on cfg.last_layer_acts."""
+    y = qdense(p, x, cfg, act=cfg.activations)
+    return fq.fq(y, cfg.last_layer_acts, _grad_name(cfg))
+
+
+# ----------------------------------------------------------------------
+# Parameter initialisation (PyTorch-style, matching the paper's claim of
+# "common weight initialization methods without modification" §III-B)
+# ----------------------------------------------------------------------
+
+
+def init_lstm_cell(key, in_dim: int, hidden: int, dtype=jnp.float32):
+    """U(-1/sqrt(H), 1/sqrt(H)) — torch.nn.LSTM default."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(hidden)
+    return {
+        "wx": jax.random.uniform(k1, (in_dim, 4 * hidden), dtype, -s, s),
+        "wh": jax.random.uniform(k2, (hidden, 4 * hidden), dtype, -s, s),
+        "b": jax.random.uniform(k3, (4 * hidden,), dtype, -s, s),
+    }
+
+
+def init_bilstm(key, in_dim: int, hidden: int, dtype=jnp.float32):
+    kf, kb = jax.random.split(key)
+    return {
+        "fwd": init_lstm_cell(kf, in_dim, hidden, dtype),
+        "bwd": init_lstm_cell(kb, in_dim, hidden, dtype),
+    }
+
+
+def init_dense(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    """Kaiming-uniform fan-in (torch.nn.Linear default)."""
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(in_dim)
+    return {
+        "w": jax.random.uniform(k1, (in_dim, out_dim), dtype, -s, s),
+        "b": jax.random.uniform(k2, (out_dim,), dtype, -s, s),
+    }
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    """N(0, 0.1) embeddings (kept modest so FP8 covers the range)."""
+    return {"emb": 0.1 * jax.random.normal(key, (vocab, dim), dtype)}

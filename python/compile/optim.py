@@ -1,0 +1,103 @@
+"""Optimizers + the paper's weight-update discipline (§III-B, §IV-C).
+
+The paper keeps a *master copy* of the weights in conventional FP
+(FP32 originally, FP16 in the modified scheme), updates it with the
+standard rule, then re-quantizes to FloatSD8 for the next iteration
+(the re-quantization lives in the model's forward pass — ``lstm.
+quantize_weight``). Here we implement:
+
+* gradient post-processing: unscale (loss scaling ×1024), FP8
+  quantization of the weight gradients ("all gradients" — Table II),
+  optional global-norm clipping (LM task, both schemes identically);
+* ADAM (UDPOS/SNLI/Multi30K) and SGD (WikiText-2) updates;
+* master-copy rounding to the FP16 grid when cfg.master == 'fp16'
+  (Table IV column 4) — Adam moments stay f32 (the paper quantizes
+  only the master copy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant
+from .precision import PrecisionConfig
+
+
+def _quantize_grads(grads, cfg: PrecisionConfig):
+    name = cfg.gradients
+    if name == "fp8" and cfg.stochastic_gradients:
+        name = "fp8sr"
+    if name == "none":
+        return grads
+    q = quant.get_quantizer(name)
+    return jax.tree_util.tree_map(q, grads)
+
+
+def _round_master(params, cfg: PrecisionConfig):
+    if cfg.master == "fp16":
+        return jax.tree_util.tree_map(quant.fp16_round, params)
+    return params
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    total = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (total + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def process_grads(grads, cfg: PrecisionConfig, clip_norm: float | None):
+    """Paper order: quantize the (loss-scaled) gradients to FP8 first —
+    that is what the hardware produces — then unscale and (optionally)
+    clip for the update arithmetic."""
+    grads = _quantize_grads(grads, cfg)
+    grads = jax.tree_util.tree_map(lambda g: g / cfg.loss_scale, grads)
+    if clip_norm is not None:
+        grads = _clip_by_global_norm(grads, clip_norm)
+    return grads
+
+
+# ----------------------------------------------------------------------
+# ADAM
+# ----------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, cfg: PrecisionConfig, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1**t)
+    vhat_scale = 1.0 / (1.0 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return _round_master(params, cfg), {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------
+# SGD (WikiText-2 task)
+# ----------------------------------------------------------------------
+
+
+def sgd_init(params):
+    return {"t": jnp.zeros((), jnp.float32)}
+
+
+def sgd_update(params, grads, state, cfg: PrecisionConfig, lr=1.0):
+    params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return _round_master(params, cfg), {"t": state["t"] + 1.0}
+
+
+OPTIMIZERS = {
+    "adam": (adam_init, adam_update),
+    "sgd": (sgd_init, sgd_update),
+}

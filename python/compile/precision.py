@@ -1,0 +1,133 @@
+"""Precision configurations — Tables II, V and VI of the paper as code.
+
+A :class:`PrecisionConfig` names the grid used for each variable class;
+``'none'`` means keep f32 (the FP32 baseline sets everything to
+``'none'``). Presets:
+
+* :func:`fp32` — baseline (Table IV column 2, Fig. 6 dashed curves);
+* :func:`paper_original` — Table II: FloatSD8 w, FP8 g/a, FP32 master,
+  FloatSD8 σ, FP16 accumulation, loss scale 1024;
+* :func:`paper_modified` — Table VI: FP16 master + FP16 last-layer
+  activations (the scheme the paper recommends);
+* :func:`table5_rows` — the five first/last/other activation ablations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Which quantization grid each variable class lives on."""
+
+    name: str
+    #: weight grid used in all matmuls ('sd8' or 'none')
+    weights: str = "none"
+    #: hidden-layer activation grid ('fp8' / 'fp16' / 'none')
+    activations: str = "none"
+    #: first-layer activations = embedding outputs (Table V col 1)
+    first_layer_acts: str = "none"
+    #: last-layer activations = output-layer pre-softmax (Table V col 2)
+    last_layer_acts: str = "none"
+    #: gradient grid, applied to backward activations and weight grads
+    gradients: str = "none"
+    #: master-copy grid ('fp32' or 'fp16') — Table IV column 4
+    master: str = "fp32"
+    #: sigmoid-output grid ('sd8' two-region, or 'none')
+    sigmoid: str = "none"
+    #: accumulation boundary ('fp16' rounds dot outputs, or 'none')
+    accum: str = "none"
+    #: loss-scaling factor (paper: single static factor 1024)
+    loss_scale: float = 1.0
+    #: use stochastic rounding for FP8 gradients (paper ablation: the
+    #: paper chose regular rounding for hardware simplicity; we expose
+    #: the alternative for the extension bench)
+    stochastic_gradients: bool = False
+
+    def is_baseline(self) -> bool:
+        return self.weights == "none" and self.activations == "none"
+
+
+def fp32() -> PrecisionConfig:
+    """IEEE single-precision baseline."""
+    return PrecisionConfig(name="fp32")
+
+
+def paper_original() -> PrecisionConfig:
+    """Table II: the initially-proposed scheme (FP32 master, FP8 acts
+    everywhere including first/last layers)."""
+    return PrecisionConfig(
+        name="fsd8",
+        weights="sd8",
+        activations="fp8",
+        first_layer_acts="fp8",
+        last_layer_acts="fp8",
+        gradients="fp8",
+        master="fp32",
+        sigmoid="sd8",
+        accum="fp16",
+        loss_scale=1024.0,
+    )
+
+
+def paper_modified() -> PrecisionConfig:
+    """Table VI: the recommended scheme — FP16 master copy and FP16
+    last-layer activations, everything else as Table II."""
+    return dataclasses.replace(
+        paper_original(),
+        name="fsd8m16",
+        master="fp16",
+        last_layer_acts="fp16",
+    )
+
+
+def with_master(cfg: PrecisionConfig, master: str) -> PrecisionConfig:
+    """Table IV column 4: same scheme, FP16 master copy."""
+    return dataclasses.replace(cfg, name=f"{cfg.name}_m{master[2:]}", master=master)
+
+
+def table5_rows() -> list[PrecisionConfig]:
+    """The five activation-precision settings of Table V (on the LM task,
+    FP32 master, everything else per Table II)."""
+    rows = [
+        ("ab1", "fp8", "fp8", "fp8"),
+        ("ab2", "fp16", "fp16", "fp16"),
+        ("ab3", "fp8", "fp16", "fp8"),
+        ("ab4", "fp16", "fp8", "fp8"),
+        ("ab5", "fp16", "fp16", "fp8"),
+    ]
+    out = []
+    for name, first, last, other in rows:
+        out.append(
+            dataclasses.replace(
+                paper_original(),
+                name=name,
+                first_layer_acts=first,
+                last_layer_acts=last,
+                activations=other,
+            )
+        )
+    return out
+
+
+def stochastic_variant() -> PrecisionConfig:
+    """Extension ablation: Table II scheme with stochastic FP8 gradient
+    rounding (the paper cites it as better-performing but rejected it
+    for hardware complexity)."""
+    return dataclasses.replace(
+        paper_original(), name="fsd8sr", stochastic_gradients=True
+    )
+
+
+#: every named scheme, for CLI/bench lookup
+def all_schemes() -> dict[str, PrecisionConfig]:
+    schemes = {
+        "fp32": fp32(),
+        "fsd8": paper_original(),
+        "fsd8m16": paper_modified(),
+        "fsd8sr": stochastic_variant(),
+    }
+    for r in table5_rows():
+        schemes[r.name] = r
+    return schemes

@@ -1,0 +1,71 @@
+"""Tensor-file interchange between the python compile path and rust.
+
+A deliberately tiny binary format (``.tensors``) both sides implement
+from scratch (rust: ``rust/src/tensorfile``):
+
+    magic  b"TSF1"
+    u32    n_tensors                      (little-endian throughout)
+    repeat n_tensors times:
+        u16  name_len ; name (utf-8)
+        u8   dtype    (0 = f32, 1 = i32)
+        u8   ndim
+        u32  dims[ndim]
+        raw  data (C order, little-endian)
+
+Used for: initial model/optimizer state (``<task>.init.tensors``),
+golden vectors pinning jnp quantizers to the bit-exact rust formats,
+and checkpoints written back by the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TSF1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.dtype(np.float32), 1: np.dtype(np.int32)}
+
+
+def write_tensors(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    """Write named arrays (f32/i32 only) to ``path``."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            # NB: not ascontiguousarray — it promotes 0-d arrays to 1-d;
+            # tobytes() below already emits C order for any layout.
+            arr = np.asarray(arr)
+            if arr.dtype not in DTYPES:
+                if arr.dtype in (np.float64, np.float16):
+                    arr = arr.astype(np.float32)
+                elif arr.dtype in (np.int64, np.uint32, np.int8, np.uint8):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensors(path: str) -> list[tuple[str, np.ndarray]]:
+    """Read a ``.tensors`` file (round-trip of :func:`write_tensors`)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = DTYPES_INV[dtype_code]
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(count * dtype.itemsize), dtype=dtype)
+            out.append((name, data.reshape(dims).copy()))
+    return out

@@ -1,0 +1,130 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) — the core L1 signal.
+
+hypothesis sweeps shapes, block sizes and value distributions; every
+assertion is bit-equality (the kernels must implement the *same grid*,
+not an approximation).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _rand(shape, seed, scale=4.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(-scale, scale, shape).astype(np.float32)
+    )
+
+
+# ----------------------------------------------------------------------
+# Elementwise kernels
+# ----------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 300), block=st.sampled_from([16, 64, 256]),
+       seed=st.integers(0, 2**16), scale=st.sampled_from([0.01, 1.0, 8.0, 1e4]))
+def test_sd8_kernel_matches_ref(n, block, seed, scale):
+    x = _rand((n,), seed, scale)
+    assert np.array_equal(pk.floatsd8_round_pallas(x, block=block),
+                          ref.ref_floatsd8_round(x))
+
+
+@given(n=st.integers(1, 300), block=st.sampled_from([16, 64, 256]),
+       seed=st.integers(0, 2**16), scale=st.sampled_from([1e-5, 1.0, 1e5]))
+def test_fp8_kernel_matches_ref(n, block, seed, scale):
+    x = _rand((n,), seed, scale)
+    assert np.array_equal(pk.fp8_round_pallas(x, block=block), ref.ref_fp8_round(x))
+
+
+@given(n=st.integers(1, 300), block=st.sampled_from([16, 64]),
+       seed=st.integers(0, 2**16))
+def test_sigmoid_kernel_matches_ref(n, block, seed):
+    x = _rand((n,), seed, 9.0)
+    assert np.array_equal(pk.sigmoid_sd8_pallas(x, block=block),
+                          ref.ref_sigmoid_sd8(x))
+
+
+def test_kernels_handle_multidim():
+    x = _rand((7, 5, 3), 1)
+    assert np.array_equal(pk.floatsd8_round_pallas(x, block=16),
+                          ref.ref_floatsd8_round(x))
+
+
+def test_kernels_handle_specials():
+    x = jnp.array([0.0, -0.0, 1e9, -1e9, 4.5, -4.5, 2.0**-20])
+    assert np.array_equal(pk.floatsd8_round_pallas(x, block=8),
+                          ref.ref_floatsd8_round(x))
+    assert np.array_equal(pk.fp8_round_pallas(x, block=8), ref.ref_fp8_round(x))
+
+
+# ----------------------------------------------------------------------
+# qmatmul
+# ----------------------------------------------------------------------
+
+
+@given(
+    mnk=st.sampled_from([(16, 16, 16), (32, 64, 32), (64, 32, 64), (8, 8, 8)]),
+    blocks=st.sampled_from([(8, 8, 8), (16, 16, 16)]),
+    seed=st.integers(0, 2**16),
+)
+def test_qmatmul_matches_ref(mnk, blocks, seed):
+    m, n, k = mnk
+    bm, bn, bk = blocks
+    if m % bm or n % bn or k % bk:
+        return  # skip indivisible combos
+    x = _rand((m, k), seed, 2.0)
+    w = _rand((k, n), seed + 1, 1.0)
+    got = pk.qmatmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+    want = ref.ref_qmatmul(x, w)
+    assert np.array_equal(got, want)
+
+
+def test_qmatmul_multi_k_blocks_accumulate_f32():
+    """Accumulation across k blocks must happen in f32 with a single
+    fp16 rounding at the end — many small k-blocks must equal one big
+    block exactly."""
+    x = _rand((16, 64), 3, 2.0)
+    w = _rand((64, 16), 4, 1.0)
+    one = pk.qmatmul_pallas(x, w, bm=16, bn=16, bk=64)
+    many = pk.qmatmul_pallas(x, w, bm=16, bn=16, bk=8)
+    assert np.array_equal(one, many)
+
+
+def test_qmatmul_rejects_indivisible():
+    with pytest.raises(AssertionError):
+        pk.qmatmul_pallas(_rand((10, 16), 0), _rand((16, 8), 1), bm=4, bn=4, bk=5)
+
+
+# ----------------------------------------------------------------------
+# Fused LSTM gates
+# ----------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 200), block=st.sampled_from([16, 64]),
+       seed=st.integers(0, 2**16))
+def test_lstm_gates_match_ref(n, block, seed):
+    rng = np.random.default_rng(seed)
+    zs = [jnp.asarray(rng.uniform(-4, 4, n).astype(np.float32)) for _ in range(4)]
+    c = jnp.asarray(rng.uniform(-2, 2, n).astype(np.float32))
+    co, ho = pk.lstm_gates_pallas(*zs, c, block=block)
+    rco, rho = ref.ref_lstm_gates(*zs, c)
+    assert np.array_equal(co, rco)
+    assert np.array_equal(ho, rho)
+
+
+# ----------------------------------------------------------------------
+# Static perf model sanity (DESIGN.md §8)
+# ----------------------------------------------------------------------
+
+
+def test_vmem_budget():
+    est = pk.perf_estimate(bm=32, bn=64, bk=32)
+    assert est["vmem_bytes"] < 4 * 2**20, "tile set must fit VMEM"
+    assert 0 < est["mxu_utilization"] <= 1

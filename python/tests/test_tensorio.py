@@ -1,0 +1,38 @@
+"""Round-trip tests for the .tensors interchange format."""
+
+import numpy as np
+import pytest
+
+from compile import tensorio
+
+
+def test_round_trip(tmp_path):
+    p = str(tmp_path / "t.tensors")
+    tensors = [
+        ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b/nested", np.array([-1, 0, 7], dtype=np.int32)),
+        ("scalar", np.float32(3.5).reshape(())),
+        ("empty_name_ok", np.zeros((0,), np.float32)),
+    ]
+    tensorio.write_tensors(p, tensors)
+    back = tensorio.read_tensors(p)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, want), (_, got) in zip(tensors, back):
+        assert want.dtype == got.dtype
+        assert want.shape == got.shape
+        assert np.array_equal(want, got)
+
+
+def test_dtype_coercion(tmp_path):
+    p = str(tmp_path / "t.tensors")
+    tensorio.write_tensors(p, [("x", np.array([1.5], np.float64)),
+                               ("y", np.array([2], np.int64))])
+    back = dict(tensorio.read_tensors(p))
+    assert back["x"].dtype == np.float32
+    assert back["y"].dtype == np.int32
+
+
+def test_rejects_unsupported(tmp_path):
+    with pytest.raises(TypeError):
+        tensorio.write_tensors(str(tmp_path / "t.tensors"),
+                               [("x", np.array(["s"], dtype=object))])

@@ -1,0 +1,35 @@
+//! Fig. 4 — quantization error of the *one-region* quantized sigmoid
+//! (Eq. 7 applied to the whole input range). Writes the error series
+//! to results/fig4_sigmoid_quant_error.csv and prints summary rows.
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::qmath::qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region};
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = Csv::new(
+        results_dir().join("fig4_sigmoid_quant_error.csv"),
+        "x,sigma,one_region_error,two_region_error",
+    );
+    let (mut max_pos, mut max_neg) = (0f64, 0f64);
+    for i in 0..=3200 {
+        let x = -8.0 + i as f32 * 0.005;
+        let s = 1.0 / (1.0 + (-x as f64).exp());
+        let e1 = (sigmoid_sd8_one_region(x) as f64 - s).abs();
+        let e2 = (sigmoid_sd8(x) as f64 - s).abs();
+        if x > 0.0 {
+            max_pos = max_pos.max(e1);
+        } else {
+            max_neg = max_neg.max(e1);
+        }
+        csv.rowf(&[x as f64, s, e1, e2]);
+    }
+    let path = csv.finish()?;
+    println!("fig4: wrote {}", path.display());
+    println!("one-region max error:  x>0 {max_pos:.4}   x<=0 {max_neg:.4}");
+    println!(
+        "paper's point: the positive side error is unbalanced ({:.1}x the negative side)",
+        max_pos / max_neg
+    );
+    assert!(max_pos > 1.5 * max_neg, "Fig. 4 asymmetry must reproduce");
+    Ok(())
+}

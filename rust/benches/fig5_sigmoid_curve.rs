@@ -1,0 +1,30 @@
+//! Fig. 5 — σ(x) vs the two-region quantized σ (Eq. 8) on x ∈ [0, 8].
+//! Writes results/fig5_sigmoid_curve.csv.
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::qmath::qsigmoid::{sigmoid_sd8, SigmoidLut};
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = Csv::new(
+        results_dir().join("fig5_sigmoid_curve.csv"),
+        "x,sigma,quantized_sigma",
+    );
+    let mut max_err = 0f64;
+    for i in 0..=1600 {
+        let x = i as f32 * 0.005;
+        let s = 1.0 / (1.0 + (-x as f64).exp());
+        let q = sigmoid_sd8(x) as f64;
+        max_err = max_err.max((q - s).abs());
+        csv.rowf(&[x as f64, s, q]);
+    }
+    let path = csv.finish()?;
+    println!("fig5: wrote {}", path.display());
+    println!("two-region max error on [0,8]: {max_err:.4}");
+    let lut = SigmoidLut::build();
+    println!(
+        "merged σ+Q LUT: {} non-zero entries (paper §III-C: 42)",
+        lut.nonzero_entries()
+    );
+    assert_eq!(lut.nonzero_entries(), 42);
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Fig. 6 — training curves for the four tasks, FP32 baseline vs the
+//! proposed FloatSD8 scheme, on identical data streams.
+//!
+//! Heavy target: by default runs the presets divided by FSD_BENCH_DIV
+//! (default 4). Set FSD_BENCH_DIV=1 for the full Fig. 6 regeneration
+//! (recorded in EXPERIMENTS.md). Curves land in results/curves/*.csv
+//! (one file per artifact — these ARE the Fig. 6 series).
+
+use floatsd_lstm::coordinator::{run_suite};
+use floatsd_lstm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let div: usize = std::env::var("FSD_BENCH_DIV").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mut rt = Runtime::new("artifacts")?;
+    println!("fig6: presets / {div} (FSD_BENCH_DIV to change)");
+    for task in ["pos", "nli", "mt", "lm"] {
+        let names = [format!("{task}_fp32"), format!("{task}_fsd8")];
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let results = run_suite(&mut rt, &refs, div)?;
+        println!("\n--- Fig. 6 ({task}) ---");
+        println!("epoch | {:>12} | {:>12}", names[0], names[1]);
+        let n = results[0].curve.len();
+        for e in 0..n {
+            println!(
+                "{e:>5} | {:>12.3} | {:>12.3}",
+                results[0].curve[e].eval_metric, results[1].curve[e].eval_metric
+            );
+        }
+    }
+    println!("\nfig6: per-epoch CSVs in results/curves/");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Software-MAC throughput: architectural MAC (`mac_exact`), the
+//! bit-level pipeline model, the serial-round ablation, and a plain
+//! f32 FMA baseline. This is the L3 hot-path microbench behind the
+//! §Perf iteration log.
+
+use floatsd_lstm::benchlib::{bench, black_box};
+use floatsd_lstm::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
+use floatsd_lstm::hardware::mac_sim::MacPipeline;
+use floatsd_lstm::qmath::mac::{mac_exact, mac_serial};
+use floatsd_lstm::rng::SplitMix64;
+
+fn main() {
+    let mut rng = SplitMix64::new(1);
+    let n = 4096;
+    let xs: Vec<Fp8> = (0..n).map(|_| Fp8::from_f32(rng.uniform(-4.0, 4.0))).collect();
+    let ws: Vec<FloatSd8> = (0..n).map(|_| FLOAT_SD8.encode(rng.uniform(-1.0, 1.0))).collect();
+    let xf: Vec<f32> = xs.iter().map(|x| x.to_f32()).collect();
+    let wf: Vec<f32> = ws.iter().map(|w| FLOAT_SD8.decode(*w)).collect();
+
+    let groups = n / 4;
+    let s = bench("mac_exact (4-pair groups)", || {
+        let mut acc = Fp16::ZERO;
+        for g in 0..groups {
+            acc = mac_exact(acc, &xs[g * 4..g * 4 + 4], &ws[g * 4..g * 4 + 4]);
+        }
+        black_box(acc);
+    });
+    println!("{s}  -> {:.1} M MAC-groups/s", s.throughput(groups) / 1e6);
+
+    let s = bench("mac_serial (per-add round)", || {
+        let mut acc = Fp16::ZERO;
+        for g in 0..groups {
+            acc = mac_serial(acc, &xs[g * 4..g * 4 + 4], &ws[g * 4..g * 4 + 4]);
+        }
+        black_box(acc);
+    });
+    println!("{s}  -> {:.1} M MAC-groups/s", s.throughput(groups) / 1e6);
+
+    let s = bench("bit-level pipeline model", || {
+        let mut acc = Fp16::ZERO;
+        for g in 0..groups {
+            acc = MacPipeline::compute(acc, &xs[g * 4..g * 4 + 4], &ws[g * 4..g * 4 + 4]);
+        }
+        black_box(acc);
+    });
+    println!("{s}  -> {:.1} M MAC-groups/s", s.throughput(groups) / 1e6);
+
+    let s = bench("plain f32 dot (baseline)", || {
+        let mut acc = 0f32;
+        for i in 0..n {
+            acc += xf[i] * wf[i];
+        }
+        black_box(acc);
+    });
+    println!("{s}  -> {:.1} M mul-adds/s", s.throughput(n) / 1e6);
+}

@@ -1,0 +1,22 @@
+//! §V-A claim: PE utilization vs batch size — "with the batch size
+//! larger than five, the hardware utilization would reach 100%".
+//! Writes results/pe_utilization.csv (batch, cycles, utilization).
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::hardware::pe::ProcessingElement;
+
+fn main() -> anyhow::Result<()> {
+    let mut csv = Csv::new(results_dir().join("pe_utilization.csv"), "batch,cycles,utilization");
+    println!("batch | cycles | utilization   (64x256 matvec per lane)");
+    for batch in 1..=12usize {
+        let pe = ProcessingElement::new(batch);
+        let s = pe.schedule_cycles(64, 256, batch);
+        println!("{batch:>5} | {:>6} | {:>10.1}%", s.cycles, s.utilization * 100.0);
+        csv.rowf(&[batch as f64, s.cycles as f64, s.utilization]);
+    }
+    let path = csv.finish()?;
+    println!("pe_utilization: wrote {}", path.display());
+    let full = ProcessingElement::new(5).schedule_cycles(64, 256, 5);
+    assert!(full.utilization > 0.99, "batch-5 must reach ~100% (paper §V-A)");
+    Ok(())
+}

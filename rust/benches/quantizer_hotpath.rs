@@ -1,0 +1,45 @@
+//! Quantizer hot-path throughput (L3 §Perf target: ≥ 1e8 elem/s for
+//! the FloatSD8 quantizer): encode, quantize, fp8 and fp16 rounds.
+
+use floatsd_lstm::benchlib::{bench, black_box};
+use floatsd_lstm::formats::{round_f16, round_f8, FLOAT_SD8};
+use floatsd_lstm::rng::SplitMix64;
+
+fn main() {
+    let mut rng = SplitMix64::new(9);
+    let xs: Vec<f32> = (0..65536).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let mut out = vec![0f32; xs.len()];
+
+    let s = bench("floatsd8 quantize 64k", || {
+        for (o, &x) in out.iter_mut().zip(&xs) {
+            *o = FLOAT_SD8.quantize(x);
+        }
+        black_box(&out);
+    });
+    println!("{s}  -> {:.1} M elem/s", s.throughput(xs.len()) / 1e6);
+
+    let s = bench("floatsd8 encode 64k", || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(FLOAT_SD8.encode(x).0 as u32);
+        }
+        black_box(acc);
+    });
+    println!("{s}  -> {:.1} M elem/s", s.throughput(xs.len()) / 1e6);
+
+    let s = bench("fp8 round 64k", || {
+        for (o, &x) in out.iter_mut().zip(&xs) {
+            *o = round_f8(x);
+        }
+        black_box(&out);
+    });
+    println!("{s}  -> {:.1} M elem/s", s.throughput(xs.len()) / 1e6);
+
+    let s = bench("fp16 round 64k", || {
+        for (o, &x) in out.iter_mut().zip(&xs) {
+            *o = round_f16(x);
+        }
+        black_box(&out);
+    });
+    println!("{s}  -> {:.1} M elem/s", s.throughput(xs.len()) / 1e6);
+}

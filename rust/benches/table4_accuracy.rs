@@ -1,0 +1,51 @@
+//! Table IV — final metric across the four tasks under {FP32 baseline,
+//! FloatSD8 (Table II), FloatSD8 + FP16 master (Table VI)}.
+//!
+//! FSD_BENCH_DIV (default 4) scales the training length; the full run
+//! (div=1) is what EXPERIMENTS.md records. Also prints our Table III
+//! (hyperparameters) and the Table II/VI precision settings header.
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::config::preset_for;
+use floatsd_lstm::coordinator::run_suite;
+use floatsd_lstm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let div: usize = std::env::var("FSD_BENCH_DIV").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mut rt = Runtime::new("artifacts")?;
+
+    println!("Table III (our scaled hyperparameters):");
+    println!("  task  epochs steps/epoch batch");
+    for t in ["pos", "nli", "mt", "lm"] {
+        let p = preset_for(t);
+        let b = rt.manifest.task(t)?.batch;
+        println!("  {t:<5} {:>6} {:>11} {:>5}", p.epochs, p.steps_per_epoch, b);
+    }
+    println!("\nprecision schemes under test: fp32 (baseline), fsd8 (Table II), fsd8m16 (Table VI)");
+    println!("running with presets / {div}\n");
+
+    let mut csv = Csv::new(results_dir().join("table4.csv"), "task,metric,fp32,fsd8,fsd8m16");
+    println!("{:<6} {:>12} {:>10} {:>10} {:>10}", "task", "metric", "fp32", "fsd8", "fsd8m16");
+    for task in ["pos", "nli", "mt", "lm"] {
+        let names =
+            [format!("{task}_fp32"), format!("{task}_fsd8"), format!("{task}_fsd8m16")];
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let r = run_suite(&mut rt, &refs, div)?;
+        println!(
+            "{task:<6} {:>12} {:>10.3} {:>10.3} {:>10.3}",
+            r[0].metric_name, r[0].best_metric, r[1].best_metric, r[2].best_metric
+        );
+        csv.row(&[
+            task.to_string(),
+            r[0].metric_name.clone(),
+            format!("{:.4}", r[0].best_metric),
+            format!("{:.4}", r[1].best_metric),
+            format!("{:.4}", r[2].best_metric),
+        ]);
+    }
+    let path = csv.finish()?;
+    println!("\ntable4: wrote {}", path.display());
+    println!("paper Table IV: UDPOS 89.05/89.09/89.13, SNLI 79.28/79.32/79.24,");
+    println!("                Multi30K 37.02/36.87/37.26, WikiText-2 87.83/98.94/91.06");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table V — the WikiText-2 activation-precision ablation: five
+//! (first-layer, last-layer, other-layers) settings on the LM task.
+//! FSD_BENCH_DIV (default 4) scales training length.
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::coordinator::run_suite;
+use floatsd_lstm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let div: usize = std::env::var("FSD_BENCH_DIV").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mut rt = Runtime::new("artifacts")?;
+
+    // Table V rows: (first, last, other) — ab1 == fsd8 (all FP8)
+    let rows = [
+        ("lm_ab1", "FP8", "FP8", "FP8"),
+        ("lm_ab2", "FP16", "FP16", "FP16"),
+        ("lm_ab3", "FP8", "FP16", "FP8"),
+        ("lm_ab4", "FP16", "FP8", "FP8"),
+        ("lm_ab5", "FP16", "FP16", "FP8"),
+    ];
+    let names: Vec<&str> = rows.iter().map(|r| r.0).collect();
+    println!("Table V (LM task, presets / {div}):");
+    let results = run_suite(&mut rt, &names, div)?;
+
+    let mut csv = Csv::new(
+        results_dir().join("table5.csv"),
+        "artifact,first_layer,last_layer,other_layers,perplexity",
+    );
+    println!("{:<8} {:>6} {:>6} {:>7} {:>12}", "row", "first", "last", "other", "perplexity");
+    for (r, (name, first, last, other)) in results.iter().zip(&rows) {
+        println!("{name:<8} {first:>6} {last:>6} {other:>7} {:>12.3}", r.best_metric);
+        csv.row(&[
+            name.to_string(), first.to_string(), last.to_string(),
+            other.to_string(), format!("{:.4}", r.best_metric),
+        ]);
+    }
+    let path = csv.finish()?;
+    println!("\ntable5: wrote {}", path.display());
+    println!("paper Table V ppl: 98.94 / 88.92 / 89.87 / 99.81 / 89.59");
+    println!("(shape criterion: last-layer FP16 rows ≈ all-FP16 row; last-layer FP8 rows degrade)");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table VII — area/power of the FP32 MAC vs the FloatSD8 MAC at 40 nm
+//! / 400 MHz, from the gate-level cost model (EDA substitution,
+//! DESIGN.md §4). Writes results/table7.csv with the full component
+//! breakdown.
+
+use floatsd_lstm::benchlib::{results_dir, Csv};
+use floatsd_lstm::hardware::cost;
+
+fn main() -> anyhow::Result<()> {
+    let (fp32, fsd8, ar, pr) = cost::table7();
+    let mut csv = Csv::new(
+        results_dir().join("table7.csv"),
+        "design,component,ge,area_um2,power_mw",
+    );
+    for r in [&fp32, &fsd8] {
+        println!("\n{} — total {:.0} GE", r.name, r.total_ge());
+        for c in &r.components {
+            println!("  {:<28} {:>9.0} GE", c.name, c.ge);
+            csv.row(&[
+                r.name.to_string(),
+                c.name.to_string(),
+                format!("{:.0}", c.ge),
+                format!("{:.1}", c.ge * cost::GE_AREA_UM2),
+                format!("{:.4}", c.ge * c.activity * cost::PWR_UW_PER_GE_MHZ * cost::FREQ_MHZ / 1000.0),
+            ]);
+        }
+        csv.row(&[
+            r.name.to_string(), "TOTAL".into(),
+            format!("{:.0}", r.total_ge()),
+            format!("{:.1}", r.area_um2()),
+            format!("{:.4}", r.power_mw()),
+        ]);
+    }
+    println!("\nTable VII (40nm CMOS, period 2.5ns):");
+    println!("  {:<22} {:>10} {:>10}", "Type", "Area µm²", "Power mW");
+    println!("  {:<22} {:>10.0} {:>10.3}", "FP32", fp32.area_um2(), fp32.power_mw());
+    println!("  {:<22} {:>10.0} {:>10.3}", "FloatSD8", fsd8.area_um2(), fsd8.power_mw());
+    println!("  measured ratios: {ar:.2}x area, {pr:.2}x power");
+    println!("  paper:           7.66x area, 5.75x power (26661/3479 µm², 2.920/0.508 mW)");
+    let path = csv.finish()?;
+    println!("table7: wrote {}", path.display());
+    Ok(())
+}

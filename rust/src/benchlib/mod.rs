@@ -1,0 +1,156 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/median/p99 statistics
+//! and a black-box to defeat constant folding. Every `cargo bench`
+//! target (`rust/benches/*.rs`, `harness = false`) uses this, plus a
+//! small CSV writer for the figure-series outputs the paper plots.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported black box.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    /// ns per iteration (mean).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    /// Throughput in items/sec given items per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3?}/iter (median {:.3?}, p99 {:.3?}, min {:.3?}, n={})",
+            self.name, self.mean, self.median, self.p99, self.min, self.iters
+        )
+    }
+}
+
+/// Run `f` with warmup, auto-scaled iteration count (targets ~0.5 s of
+/// measurement), and return stats.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    let mut warm_iters = 0usize;
+    while t0.elapsed() < Duration::from_millis(100) {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = t0.elapsed() / warm_iters.max(1) as u32;
+    let target = Duration::from_millis(500);
+    let iters = (target.as_nanos() / per_iter.as_nanos().max(1)).clamp(10, 1_000_000) as usize;
+
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters.min(10_000));
+    let sample_batches = iters.min(200);
+    let batch = (iters / sample_batches).max(1);
+    for _ in 0..sample_batches {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed() / batch as u32);
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters: sample_batches * batch,
+        mean,
+        median: samples[n / 2],
+        p99: samples[(n * 99 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// CSV writer for figure-series outputs (the bench targets write the
+/// paper's plots as CSV under `results/`).
+pub struct Csv {
+    path: std::path::PathBuf,
+    buf: String,
+}
+
+impl Csv {
+    pub fn new(path: impl Into<std::path::PathBuf>, header: &str) -> Self {
+        let mut buf = String::new();
+        buf.push_str(header);
+        buf.push('\n');
+        Csv { path: path.into(), buf }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.buf.push_str(&fields.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs);
+    }
+
+    pub fn finish(self) -> anyhow::Result<std::path::PathBuf> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&self.path, self.buf)?;
+        Ok(self.path)
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from(
+        std::env::var("FSD_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
+    );
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let s = bench("spin", || {
+            for i in 0..100u64 {
+                x = black_box(x.wrapping_add(i));
+            }
+        });
+        assert!(s.iters >= 10);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.min <= s.median && s.median <= s.p99);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let p = std::env::temp_dir().join("fsd_bench_test.csv");
+        let mut c = Csv::new(&p, "a,b");
+        c.rowf(&[1.0, 2.5]);
+        c.row(&["x".into(), "y".into()]);
+        let written = c.finish().unwrap();
+        let body = std::fs::read_to_string(written).unwrap();
+        assert_eq!(body, "a,b\n1,2.5\nx,y\n");
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CLI argument parser (clap is unavailable offline): ordered
+//! positionals + `--flag[=value]` options, with typed accessors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand, positionals, options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first element = argv[0], skipped).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut args = Args::default();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn require_opt(&self, key: &str) -> Result<&str> {
+        match self.opt(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(std::iter::once("bin".to_string()).chain(s.split_whitespace().map(String::from)))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--name tok` consumes `tok` as the value (there is
+        // no schema to disambiguate); boolean flags go last or use `=`.
+        let a = parse("train extra --artifact lm_fsd8 --epochs=5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("artifact"), Some("lm_fsd8"));
+        assert_eq!(a.opt_usize("epochs", 1).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn flag_at_end_and_defaults() {
+        let a = parse("bench --quick");
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.opt_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.opt_usize("div", 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_usize_errors() {
+        let a = parse("x --n abc");
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn required_opt() {
+        let a = parse("x");
+        assert!(a.require_opt("artifact").is_err());
+    }
+}

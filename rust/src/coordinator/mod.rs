@@ -1,0 +1,195 @@
+//! L3 experiment coordinator: runs the paper's experiments end-to-end
+//! (train → per-epoch eval → metric curves → final results), writes
+//! CSV/JSONL logs, and provides the multi-experiment drivers behind
+//! the Table IV / Table V / Fig. 6 bench targets.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{preset_for, scaled, TrainPreset};
+use crate::data::make_source;
+use crate::runtime::{Runtime, StepMetrics, TrainSession};
+
+/// One experiment = one artifact trained with a preset.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub artifact: String,
+    pub preset: TrainPreset,
+    pub data_seed: u64,
+    /// write per-epoch curve CSV + JSONL log under results/
+    pub log: bool,
+}
+
+impl ExperimentSpec {
+    /// Standard spec for an artifact (preset from our Table III),
+    /// optionally scaled down by `div` for quick runs.
+    pub fn standard(rt: &Runtime, artifact: &str, div: usize) -> Result<Self> {
+        let info = rt.manifest.artifact(artifact)?;
+        Ok(ExperimentSpec {
+            artifact: artifact.to_string(),
+            preset: scaled(preset_for(&info.task), div),
+            data_seed: 20200711,
+            log: true,
+        })
+    }
+}
+
+/// A point on the Fig. 6 training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub eval_metric: f32,
+    pub eval_loss: f32,
+}
+
+/// Result of one experiment run.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub artifact: String,
+    pub metric_name: String,
+    pub curve: Vec<EpochPoint>,
+    pub final_metric: f32,
+    /// best (max for accuracy, min for perplexity) eval metric seen
+    pub best_metric: f32,
+    pub wall: std::time::Duration,
+    pub steps: u64,
+    pub transfer_time: std::time::Duration,
+    pub execute_time: std::time::Duration,
+}
+
+/// Run one experiment to completion.
+pub fn run_experiment(rt: &mut Runtime, spec: &ExperimentSpec) -> Result<ExperimentResult> {
+    let t0 = Instant::now();
+    let mut session = TrainSession::new(rt, &spec.artifact)?;
+    let task = session.task.clone();
+    let mut source = make_source(
+        &task.name,
+        task.batch,
+        &task.x_shape,
+        &task.y_shape,
+        task.vocab,
+        task.vocab_tgt,
+        task.n_classes,
+        spec.preset.eval_batches,
+        spec.data_seed,
+    )?;
+
+    let metric_name = task.metric.clone();
+    let higher_better = metric_name == "accuracy";
+    let mut curve = Vec::with_capacity(spec.preset.epochs);
+    let mut best = if higher_better { f32::MIN } else { f32::MAX };
+
+    let mut log = if spec.log { Some(ExperimentLog::new(&spec.artifact)?) } else { None };
+
+    for epoch in 0..spec.preset.epochs {
+        let mut train_agg = StepMetrics::default();
+        for _ in 0..spec.preset.steps_per_epoch {
+            let batch = source.next_train();
+            let m = session.step(&batch)?;
+            train_agg.loss_sum += m.loss_sum;
+            train_agg.metric_sum += m.metric_sum;
+            train_agg.count += m.count;
+        }
+        let eval = session.eval(source.eval_set())?;
+        let point = EpochPoint {
+            epoch,
+            train_loss: train_agg.mean_loss(),
+            eval_metric: eval.named(&metric_name),
+            eval_loss: eval.mean_loss(),
+        };
+        if higher_better {
+            best = best.max(point.eval_metric);
+        } else {
+            best = best.min(point.eval_metric);
+        }
+        if let Some(l) = &mut log {
+            l.epoch(&point, &metric_name)?;
+        }
+        eprintln!(
+            "[{}] epoch {:>2}: train_loss {:.4}  eval {} {:.3}",
+            spec.artifact, epoch, point.train_loss, metric_name, point.eval_metric
+        );
+        curve.push(point);
+    }
+
+    let final_metric = curve.last().map(|p| p.eval_metric).unwrap_or(f32::NAN);
+    if let Some(l) = log {
+        l.finish()?;
+    }
+    Ok(ExperimentResult {
+        artifact: spec.artifact.clone(),
+        metric_name,
+        curve,
+        final_metric,
+        best_metric: best,
+        wall: t0.elapsed(),
+        steps: session.steps_done,
+        transfer_time: session.transfer_time,
+        execute_time: session.execute_time,
+    })
+}
+
+/// Run a list of artifacts sequentially, returning results in order.
+/// (PJRT-CPU saturates the machine's cores per executable, so the
+/// coordinator runs experiments back-to-back rather than oversubscribing;
+/// the queue abstraction still centralizes logging and failure handling.)
+pub fn run_suite(
+    rt: &mut Runtime,
+    artifacts: &[&str],
+    div: usize,
+) -> Result<Vec<ExperimentResult>> {
+    let mut out = Vec::with_capacity(artifacts.len());
+    for a in artifacts {
+        let spec = ExperimentSpec::standard(rt, a, div)?;
+        out.push(run_experiment(rt, &spec).with_context(|| format!("experiment {a}"))?);
+    }
+    Ok(out)
+}
+
+/// CSV + JSONL logging for one experiment.
+struct ExperimentLog {
+    csv: std::fs::File,
+    jsonl: std::fs::File,
+}
+
+impl ExperimentLog {
+    fn new(artifact: &str) -> Result<Self> {
+        let dir = crate::benchlib::results_dir().join("curves");
+        std::fs::create_dir_all(&dir)?;
+        let mut csv = std::fs::File::create(dir.join(format!("{artifact}.csv")))?;
+        writeln!(csv, "epoch,train_loss,eval_loss,eval_metric")?;
+        let jsonl = std::fs::File::create(dir.join(format!("{artifact}.jsonl")))?;
+        Ok(ExperimentLog { csv, jsonl })
+    }
+
+    fn epoch(&mut self, p: &EpochPoint, metric: &str) -> Result<()> {
+        writeln!(
+            self.csv,
+            "{},{},{},{}",
+            p.epoch, p.train_loss, p.eval_loss, p.eval_metric
+        )?;
+        writeln!(
+            self.jsonl,
+            "{{\"epoch\":{},\"train_loss\":{},\"eval_loss\":{},\"{}\":{}}}",
+            p.epoch, p.train_loss, p.eval_loss, metric, p.eval_metric
+        )?;
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<()> {
+        self.csv.flush()?;
+        self.jsonl.flush()?;
+        Ok(())
+    }
+}
+
+/// Checkpoint directory helper.
+pub fn checkpoint_path(artifact: &str) -> PathBuf {
+    let dir = crate::benchlib::results_dir().join("checkpoints");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("{artifact}.tensors"))
+}

@@ -1,0 +1,98 @@
+//! Synthetic workload generators standing in for the paper's four NLP
+//! datasets (substitution table in DESIGN.md §4). Each generator
+//! produces int32 batches with exactly the shapes the AOT artifacts
+//! expect, plus a held-out eval stream; all are deterministic in the
+//! seed so every precision scheme trains on the *identical* token
+//! stream (the paper's controlled-comparison requirement).
+//!
+//! | module | stands in for | task structure |
+//! |---|---|---|
+//! | [`pos`] | UDPOS | template-grammar POS tagging with context-dependent ambiguous words |
+//! | [`nli`] | SNLI | premise/hypothesis pairs, rule-generated 3-way labels |
+//! | [`translation`] | Multi30K | deterministic reverse+relabel "translation" |
+//! | [`lm`] | WikiText-2 | Zipf-vocabulary order-2 Markov language stream |
+
+pub mod lm;
+pub mod nli;
+pub mod pos;
+pub mod translation;
+
+/// One int32 batch: flattened x and y plus their shapes.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+}
+
+/// A deterministic batch stream (train) + a fixed eval set.
+pub trait BatchSource {
+    /// Next training batch (advances the stream).
+    fn next_train(&mut self) -> Batch;
+    /// The fixed held-out eval set.
+    fn eval_set(&self) -> &[Batch];
+}
+
+/// Build the generator for a task by name with the shapes the manifest
+/// dictates.
+pub fn make_source(
+    task: &str,
+    batch: usize,
+    x_shape: &[usize],
+    y_shape: &[usize],
+    vocab: usize,
+    vocab_tgt: usize,
+    n_classes: usize,
+    eval_batches: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn BatchSource>> {
+    Ok(match task {
+        "pos" => Box::new(pos::PosGen::new(batch, x_shape[0], vocab, n_classes, eval_batches, seed)),
+        "nli" => Box::new(nli::NliGen::new(batch, x_shape[1], vocab, eval_batches, seed)),
+        "mt" => Box::new(translation::MtGen::new(
+            batch, x_shape[0], y_shape[0], vocab, vocab_tgt, eval_batches, seed,
+        )),
+        "lm" | "tiny" => Box::new(lm::LmGen::new(batch, x_shape[0], vocab, eval_batches, seed)),
+        other => anyhow::bail!("unknown task {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_tasks() {
+        let specs: &[(&str, Vec<usize>, Vec<usize>, usize, usize, usize)] = &[
+            ("pos", vec![24], vec![24], 600, 0, 12),
+            ("nli", vec![2, 16], vec![], 800, 0, 3),
+            ("mt", vec![16], vec![17], 400, 400, 0),
+            ("lm", vec![32], vec![32], 2000, 0, 0),
+            ("tiny", vec![8], vec![8], 64, 0, 0),
+        ];
+        for (task, xs, ys, v, vt, nc) in specs {
+            let mut src = make_source(task, 4, xs, ys, *v, *vt, *nc, 2, 7).unwrap();
+            let b = src.next_train();
+            assert_eq!(b.x.len(), 4 * xs.iter().product::<usize>(), "{task} x");
+            let want_y = 4 * ys.iter().product::<usize>().max(1);
+            assert_eq!(b.y.len(), want_y, "{task} y");
+            assert_eq!(src.eval_set().len(), 2, "{task} eval");
+            // all ids in range
+            for &t in &b.x {
+                assert!((t as usize) < *v, "{task}: x token {t} >= vocab {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn streams_are_deterministic_in_seed() {
+        let mk = || make_source("lm", 2, &[8], &[8], 100, 0, 0, 1, 42).unwrap();
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..5 {
+            let (ba, bb) = (a.next_train(), b.next_train());
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+        }
+    }
+}

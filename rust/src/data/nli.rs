@@ -1,0 +1,161 @@
+//! SNLI stand-in: premise/hypothesis pairs with rule-generated labels.
+//!
+//! * **entailment (0)** — hypothesis is a random subsequence of the
+//!   premise (token subset ⇒ entailed);
+//! * **contradiction (1)** — hypothesis is a premise subsequence with
+//!   the reserved NEG token (id 1) spliced in;
+//! * **neutral (2)** — hypothesis drawn independently of the premise.
+//!
+//! The decision signal is token overlap + NEG detection through the
+//! encoder — the same "compare two encoded sentences through FC
+//! layers" pathway as the SNLI model.
+
+use crate::rng::SplitMix64;
+
+use super::{Batch, BatchSource};
+
+pub const PAD: i32 = 0;
+pub const NEG: i32 = 1;
+const RESERVED: usize = 2;
+
+pub struct NliGen {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    rng: SplitMix64,
+    eval: Vec<Batch>,
+}
+
+impl NliGen {
+    pub fn new(batch: usize, seq: usize, vocab: usize, eval_batches: usize, seed: u64) -> Self {
+        assert!(vocab > RESERVED + 8);
+        let mut g = NliGen { batch, seq, vocab, rng: SplitMix64::new(seed), eval: Vec::new() };
+        let mut eval_rng = SplitMix64::new(seed ^ 0xAAAA_5555_0000);
+        g.eval = (0..eval_batches).map(|_| g.gen_batch(&mut eval_rng)).collect();
+        g
+    }
+
+    fn content_word(&self, rng: &mut SplitMix64) -> i32 {
+        (RESERVED + rng.next_below((self.vocab - RESERVED) as u64) as usize) as i32
+    }
+
+    fn gen_pair(&self, rng: &mut SplitMix64) -> (Vec<i32>, Vec<i32>, i32) {
+        let premise: Vec<i32> = (0..self.seq).map(|_| self.content_word(rng)).collect();
+        let label = rng.next_below(3) as i32;
+        let mut hyp = vec![PAD; self.seq];
+        match label {
+            0 => {
+                // subsequence (keep each token with p=0.5, at least 2)
+                let mut k = 0;
+                for &w in &premise {
+                    if rng.next_f32() < 0.5 && k < self.seq {
+                        hyp[k] = w;
+                        k += 1;
+                    }
+                }
+                for need in k..2 {
+                    hyp[need] = premise[need];
+                }
+            }
+            1 => {
+                let mut k = 0;
+                for &w in &premise {
+                    if rng.next_f32() < 0.5 && k < self.seq - 1 {
+                        hyp[k] = w;
+                        k += 1;
+                    }
+                }
+                // splice NEG at a random kept position
+                let pos = rng.next_below((k.max(1) + 1) as u64) as usize;
+                hyp.insert(pos, NEG);
+                hyp.truncate(self.seq);
+            }
+            _ => {
+                for slot in hyp.iter_mut() {
+                    *slot = self.content_word(rng);
+                }
+            }
+        }
+        (premise, hyp, label)
+    }
+
+    fn gen_batch(&self, rng: &mut SplitMix64) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * 2 * self.seq);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let (p, h, label) = self.gen_pair(rng);
+            x.extend(&p);
+            x.extend(&h);
+            y.push(label);
+        }
+        Batch {
+            x,
+            y,
+            x_shape: vec![self.batch, 2, self.seq],
+            y_shape: vec![self.batch],
+        }
+    }
+}
+
+impl BatchSource for NliGen {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = SplitMix64::new(self.rng.next_u64());
+        self.gen_batch(&mut rng)
+    }
+
+    fn eval_set(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_balanced_and_in_range() {
+        let mut g = NliGen::new(64, 16, 800, 1, 3);
+        let mut counts = [0usize; 3];
+        for _ in 0..20 {
+            let b = g.next_train();
+            for &l in &b.y {
+                counts[l as usize] += 1;
+            }
+        }
+        for c in counts {
+            assert!(c > 250, "label counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn contradiction_contains_neg_token() {
+        let g = NliGen::new(1, 16, 800, 1, 4);
+        let mut rng = SplitMix64::new(9);
+        let mut checked = 0;
+        for _ in 0..200 {
+            let (_, h, label) = g.gen_pair(&mut rng);
+            if label == 1 {
+                assert!(h.contains(&NEG), "contradiction without NEG: {h:?}");
+                checked += 1;
+            } else if label == 0 {
+                assert!(!h.contains(&NEG));
+            }
+        }
+        assert!(checked > 30);
+    }
+
+    #[test]
+    fn entailment_is_subsequence() {
+        let g = NliGen::new(1, 16, 800, 1, 5);
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..200 {
+            let (p, h, label) = g.gen_pair(&mut rng);
+            if label == 0 {
+                // every non-pad hyp token appears in the premise
+                for &w in h.iter().filter(|&&w| w != PAD) {
+                    assert!(p.contains(&w), "{w} not in premise");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! UDPOS stand-in: POS tagging over a synthetic template grammar.
+//!
+//! * tag sequences follow a bigram grammar (each tag has a preferred
+//!   successor distribution) — mimics syntactic structure;
+//! * each tag owns a disjoint word inventory, **except** a 25% slice of
+//!   "ambiguous" words shared between two tags: for those, the correct
+//!   tag is decidable only from the *previous* tag — this is what makes
+//!   the task require recurrent context rather than a per-token lookup,
+//!   the property that makes LSTM quantization errors visible.
+
+use crate::rng::SplitMix64;
+
+use super::{Batch, BatchSource};
+
+pub struct PosGen {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    n_tags: usize,
+    rng: SplitMix64,
+    eval: Vec<Batch>,
+    /// words_per_tag[t] = (lo, hi) id range owned by tag t
+    spans: Vec<(usize, usize)>,
+    /// ambiguous word ids: shared between tag t and (t+1)%n
+    amb_lo: usize,
+}
+
+impl PosGen {
+    pub fn new(
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        n_tags: usize,
+        eval_batches: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_tags >= 2 && vocab > 4 * n_tags);
+        // reserve the top quarter of the vocab for ambiguous words
+        let amb_lo = vocab - vocab / 4;
+        let per_tag = amb_lo / n_tags;
+        let spans: Vec<(usize, usize)> =
+            (0..n_tags).map(|t| (t * per_tag, (t + 1) * per_tag)).collect();
+        let mut gen = PosGen {
+            batch,
+            seq,
+            vocab,
+            n_tags,
+            rng: SplitMix64::new(seed),
+            eval: Vec::new(),
+            spans,
+            amb_lo,
+        };
+        // held-out eval stream: independent generator state
+        let mut eval_rng = SplitMix64::new(seed ^ 0xEEEE_0000_1111);
+        gen.eval = (0..eval_batches).map(|_| gen.gen_batch(&mut eval_rng)).collect();
+        gen
+    }
+
+    fn next_tag(&self, prev: usize, rng: &mut SplitMix64) -> usize {
+        // bigram grammar: 60% preferred successor (prev+1), 40% uniform
+        if rng.next_f32() < 0.6 {
+            (prev + 1) % self.n_tags
+        } else {
+            rng.next_below(self.n_tags as u64) as usize
+        }
+    }
+
+    fn gen_batch(&self, rng: &mut SplitMix64) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        let amb_per_pair = (self.vocab - self.amb_lo) / self.n_tags;
+        for _ in 0..self.batch {
+            let mut tag = rng.next_below(self.n_tags as u64) as usize;
+            for t in 0..self.seq {
+                if t > 0 {
+                    tag = self.next_tag(tag, rng);
+                }
+                // 25% of tokens are ambiguous words: word id encodes the
+                // *pair* (tag, tag+1) — the tag label is still `tag`, so
+                // the model must read the bigram context.
+                let word = if rng.next_f32() < 0.25 && amb_per_pair > 0 {
+                    let k = rng.next_below(amb_per_pair as u64) as usize;
+                    // the pair index is min(tag, paired) so both tags of a
+                    // pair emit the same word ids
+                    let pair = tag % self.n_tags;
+                    let pair = pair.min((pair + self.n_tags - 1) % self.n_tags);
+                    self.amb_lo + (pair * amb_per_pair + k) % (self.vocab - self.amb_lo)
+                } else {
+                    let (lo, hi) = self.spans[tag];
+                    lo + rng.next_below((hi - lo) as u64) as usize
+                };
+                x.push(word as i32);
+                y.push(tag as i32);
+            }
+        }
+        Batch {
+            x,
+            y,
+            x_shape: vec![self.batch, self.seq],
+            y_shape: vec![self.batch, self.seq],
+        }
+    }
+}
+
+impl BatchSource for PosGen {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = SplitMix64::new(self.rng.next_u64());
+        self.gen_batch(&mut rng)
+    }
+
+    fn eval_set(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut g = PosGen::new(8, 24, 600, 12, 3, 1);
+        let b = g.next_train();
+        assert_eq!(b.x.len(), 8 * 24);
+        for (&w, &t) in b.x.iter().zip(&b.y) {
+            assert!((0..600).contains(&(w as usize)));
+            assert!((0..12).contains(&(t as usize)));
+        }
+    }
+
+    #[test]
+    fn unambiguous_words_determine_tags() {
+        // words below amb_lo belong to exactly one tag span
+        let g = PosGen::new(4, 24, 600, 12, 1, 2);
+        let mut seen: std::collections::HashMap<i32, i32> = Default::default();
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..50 {
+            let b = g.gen_batch(&mut rng);
+            for (&w, &t) in b.x.iter().zip(&b.y) {
+                if (w as usize) < g.amb_lo {
+                    let prev = seen.insert(w, t);
+                    if let Some(p) = prev {
+                        assert_eq!(p, t, "word {w} got two tags");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ambiguous_words_exist_and_are_shared() {
+        let g = PosGen::new(16, 24, 600, 12, 1, 4);
+        let mut tags_per_word: std::collections::HashMap<i32, std::collections::HashSet<i32>> =
+            Default::default();
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..200 {
+            let b = g.gen_batch(&mut rng);
+            for (&w, &t) in b.x.iter().zip(&b.y) {
+                if (w as usize) >= g.amb_lo {
+                    tags_per_word.entry(w).or_default().insert(t);
+                }
+            }
+        }
+        let shared = tags_per_word.values().filter(|s| s.len() >= 2).count();
+        assert!(shared > 0, "no ambiguous word observed with 2 tags");
+    }
+}

@@ -1,0 +1,133 @@
+//! Multi30K stand-in: deterministic synthetic "translation".
+//!
+//! Source sentences are Zipf-distributed token sequences; the target
+//! "language" is `BOS · map(reverse(source))` where `map` is a fixed
+//! bijective token relabeling — a deterministic transformation with
+//! the long-range dependency structure (reversal) that an
+//! encoder-decoder LSTM must carry through its bottleneck, like real
+//! translation re-ordering.
+
+use crate::rng::{SplitMix64, Zipf};
+
+use super::{Batch, BatchSource};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+const RESERVED: usize = 2;
+
+pub struct MtGen {
+    batch: usize,
+    src_len: usize,
+    tgt_len: usize,
+    vocab_src: usize,
+    vocab_tgt: usize,
+    zipf: Zipf,
+    rng: SplitMix64,
+    eval: Vec<Batch>,
+}
+
+impl MtGen {
+    pub fn new(
+        batch: usize,
+        src_len: usize,
+        tgt_len: usize,
+        vocab_src: usize,
+        vocab_tgt: usize,
+        eval_batches: usize,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(tgt_len, src_len + 1, "target = BOS + mapped reverse");
+        let mut g = MtGen {
+            batch,
+            src_len,
+            tgt_len,
+            vocab_src,
+            vocab_tgt,
+            zipf: Zipf::new(vocab_src - RESERVED, 1.05),
+            rng: SplitMix64::new(seed),
+            eval: Vec::new(),
+        };
+        let mut eval_rng = SplitMix64::new(seed ^ 0x7777_1234_0000);
+        g.eval = (0..eval_batches).map(|_| g.gen_batch(&mut eval_rng)).collect();
+        g
+    }
+
+    /// The fixed "translation lexicon": bijective over content ids.
+    #[inline]
+    pub fn map_token(&self, w: i32) -> i32 {
+        let n = (self.vocab_tgt - RESERVED) as i64;
+        let c = (w as i64) - RESERVED as i64;
+        // multiplier coprime with n for bijectivity (n even ⇒ use odd mult)
+        (RESERVED as i64 + (c * 7 + 3).rem_euclid(n)) as i32
+    }
+
+    fn gen_batch(&self, rng: &mut SplitMix64) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.src_len);
+        let mut y = Vec::with_capacity(self.batch * self.tgt_len);
+        for _ in 0..self.batch {
+            let src: Vec<i32> = (0..self.src_len)
+                .map(|_| (RESERVED + self.zipf.sample(rng)) as i32)
+                .collect();
+            y.push(BOS);
+            for &w in src.iter().rev() {
+                y.push(self.map_token(w));
+            }
+            x.extend(src);
+        }
+        Batch {
+            x,
+            y,
+            x_shape: vec![self.batch, self.src_len],
+            y_shape: vec![self.batch, self.tgt_len],
+        }
+    }
+}
+
+impl BatchSource for MtGen {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = SplitMix64::new(self.rng.next_u64());
+        self.gen_batch(&mut rng)
+    }
+
+    fn eval_set(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_is_mapped_reverse_of_source() {
+        let mut g = MtGen::new(4, 16, 17, 400, 400, 1, 6);
+        let b = g.next_train();
+        for i in 0..4 {
+            let src = &b.x[i * 16..(i + 1) * 16];
+            let tgt = &b.y[i * 17..(i + 1) * 17];
+            assert_eq!(tgt[0], BOS);
+            for (k, &w) in src.iter().rev().enumerate() {
+                assert_eq!(tgt[1 + k], g.map_token(w));
+            }
+        }
+    }
+
+    #[test]
+    fn lexicon_is_bijective() {
+        let g = MtGen::new(1, 16, 17, 400, 400, 1, 7);
+        let mut seen = std::collections::HashSet::new();
+        for w in RESERVED as i32..400 {
+            let m = g.map_token(w);
+            assert!((RESERVED as i32..400).contains(&m));
+            assert!(seen.insert(m), "collision at {w}");
+        }
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let mut g = MtGen::new(8, 16, 17, 400, 400, 1, 8);
+        let b = g.next_train();
+        assert!(b.x.iter().all(|&w| (RESERVED as i32..400).contains(&w)));
+        assert!(b.y.iter().all(|&w| (0..400).contains(&w)));
+    }
+}

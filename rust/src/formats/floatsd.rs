@@ -1,0 +1,425 @@
+//! **FloatSD8** — the paper's 8-bit weight format (§III-A).
+//!
+//! Layout: 3-bit exponent field + a 5-bit code for the two SD groups:
+//!
+//! * MSG: 3-digit SD group, values `{+4, +2, +1, 0, −1, −2, −4}`
+//!   (digit weights 4/2/1, at most one non-zero digit — Table I);
+//! * second group: 2-digit SD group, values `{+2, +1, 0, −1, −2}`
+//!   (digit weights continue below the MSG, so its group value is scaled
+//!   by 1/4).
+//!
+//! Mantissa `m = g0 + g1/4` ⇒ 7×5 = 35 combinations of which **31 are
+//! distinct** (±0.5 and ±1.5 are each expressible two ways), so 5 bits
+//! suffice. Value `v = m · 2^(e − 7)` (the 3-bit exponent is biased by 7
+//! — the paper leaves the bias unspecified; 7 covers both weight
+//! initialisation ranges and the σ-output range `(0, 0.5]` used by the
+//! two-region sigmoid quantizer, and reproduces the paper's "42 LUT
+//! entries" count — verified in `qmath::qsigmoid` tests).
+//!
+//! The canonical 8-bit code is `eee r rrrr` = `exp << 5 | rank`, where
+//! `rank ∈ 0..31` indexes the ascending mantissa codebook (rank 15 = 0).
+//!
+//! A FloatSD8 weight generates **at most two partial products**
+//! ([`FloatSdFormat::partial_products`]) — each a signed power of two —
+//! which is the entire hardware story of §V.
+
+use std::sync::OnceLock;
+
+/// Exponent bias used by this implementation (see module docs).
+pub const SD8_EXP_BIAS: i32 = 7;
+/// Exponent field width.
+pub const SD8_EXP_BITS: u32 = 3;
+/// Number of distinct mantissa values.
+pub const SD8_MANTISSA_COUNT: usize = 31;
+
+/// A FloatSD8 value stored as its canonical 8-bit code.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct FloatSd8(pub u8);
+
+/// Up to two signed power-of-two partial products: `(sign, exponent)`
+/// meaning `sign * 2^exponent`. This is what the hardware multiplier
+/// consumes (Fig. 8's partial product generator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartialProducts {
+    pub terms: [(i8, i32); 2],
+    pub len: u8,
+}
+
+impl PartialProducts {
+    /// Evaluate the decomposition back to f32 (test/debug helper).
+    pub fn value(&self) -> f32 {
+        self.iter().map(|(s, e)| s as f32 * 2f32.powi(e)).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (i8, i32)> + '_ {
+        self.terms.iter().copied().take(self.len as usize)
+    }
+}
+
+/// A FloatSD format instance: codebooks, full value grid, quantizer.
+///
+/// Built once (see [`FLOAT_SD8`]); all lookups afterwards are allocation-
+/// free. The same tables are exported to JAX via the golden-vector
+/// artifacts so both sides share one grid.
+#[derive(Debug)]
+pub struct FloatSdFormat {
+    pub exp_bits: u32,
+    pub exp_bias: i32,
+    /// The 31 distinct mantissa values, ascending (index = rank).
+    mantissa: Vec<f32>,
+    /// Canonical `(g0, g1)` group decomposition per rank (fewest non-zero
+    /// digits wins ties, then larger `g0`).
+    groups: Vec<(i8, i8)>,
+    /// Every distinct representable value, ascending.
+    values: Vec<f32>,
+    /// Midpoints between consecutive `values` (len = values.len() - 1).
+    midpoints: Vec<f32>,
+    /// Canonical code for each entry of `values`.
+    codes: Vec<u8>,
+}
+
+impl FloatSdFormat {
+    /// Build the FloatSD8 format (3-bit exponent, 3+2-digit groups).
+    pub fn new_sd8() -> Self {
+        // --- mantissa codebook -------------------------------------------------
+        let g0s: [i8; 7] = [-4, -2, -1, 0, 1, 2, 4];
+        let g1s: [i8; 5] = [-2, -1, 0, 1, 2];
+        // value-in-quarters -> best (g0, g1)
+        let mut best: std::collections::BTreeMap<i32, (i8, i8)> = Default::default();
+        for &g0 in &g0s {
+            for &g1 in &g1s {
+                let q = g0 as i32 * 4 + g1 as i32; // mantissa in units of 1/4
+                let cand = (g0, g1);
+                let cost = |(a, b): (i8, i8)| (a != 0) as u32 * 1 + (b != 0) as u32;
+                match best.get(&q) {
+                    Some(&cur) if cost(cur) < cost(cand) => {}
+                    Some(&cur) if cost(cur) == cost(cand) && cur.0.abs() >= cand.0.abs() => {}
+                    _ => {
+                        best.insert(q, cand);
+                    }
+                }
+            }
+        }
+        assert_eq!(best.len(), SD8_MANTISSA_COUNT);
+        let mantissa: Vec<f32> = best.keys().map(|&q| q as f32 / 4.0).collect();
+        let groups: Vec<(i8, i8)> = best.values().copied().collect();
+
+        // --- full value grid ---------------------------------------------------
+        // code -> value for all (exp, rank); dedup to distinct values while
+        // remembering a canonical code (prefer the largest-mantissa
+        // representation, i.e. the smallest exponent, like a normalized
+        // hardware encoding).
+        let mut pairs: Vec<(f32, u8)> = Vec::new();
+        for e in 0..(1u8 << SD8_EXP_BITS) {
+            for (rank, &m) in mantissa.iter().enumerate() {
+                let v = m * 2f32.powi(e as i32 - SD8_EXP_BIAS);
+                pairs.push((v, (e << 5) | rank as u8));
+            }
+        }
+        pairs.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                // canonical tie-break: smaller exponent field first
+                .then((a.1 >> 5).cmp(&(b.1 >> 5)))
+        });
+        let mut values: Vec<f32> = Vec::new();
+        let mut codes: Vec<u8> = Vec::new();
+        for (v, c) in pairs {
+            if values.last().map_or(true, |&last| v != last) {
+                values.push(v);
+                codes.push(c);
+            }
+        }
+        // canonical zero: exp 0, rank of 0
+        let zero_rank = mantissa.iter().position(|&m| m == 0.0).unwrap() as u8;
+        let zi = values.iter().position(|&v| v == 0.0).unwrap();
+        codes[zi] = zero_rank;
+
+        let midpoints: Vec<f32> =
+            values.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+
+        FloatSdFormat {
+            exp_bits: SD8_EXP_BITS,
+            exp_bias: SD8_EXP_BIAS,
+            mantissa,
+            groups,
+            values,
+            midpoints,
+            codes,
+        }
+    }
+
+    /// The 31 mantissa values, ascending.
+    pub fn mantissa_codebook(&self) -> &[f32] {
+        &self.mantissa
+    }
+
+    /// All distinct representable values, ascending.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Largest representable magnitude (= 4.5 · 2^(7−bias) = 4.5).
+    pub fn max_value(&self) -> f32 {
+        *self.values.last().unwrap()
+    }
+
+    /// Smallest positive representable value (= 0.25 · 2^(−bias)).
+    pub fn min_positive(&self) -> f32 {
+        let zi = self.values.iter().position(|&v| v == 0.0).unwrap();
+        self.values[zi + 1]
+    }
+
+    /// Round `x` to the nearest representable value. Ties round **away
+    /// from zero** (the hardware compares against midpoints and takes the
+    /// upper bucket, mirrored for negatives). Saturates at ±max; NaN → 0.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.values[self.quantize_index(x)]
+    }
+
+    /// Index into [`Self::values`] of the quantization of `x`.
+    #[inline]
+    pub fn quantize_index(&self, x: f32) -> usize {
+        if x.is_nan() {
+            return self.values.iter().position(|&v| v == 0.0).unwrap();
+        }
+        if x >= 0.0 {
+            self.midpoints.partition_point(|&m| m <= x)
+        } else {
+            self.midpoints.partition_point(|&m| m < x)
+        }
+    }
+
+    /// Quantize and return the canonical 8-bit code.
+    #[inline]
+    pub fn encode(&self, x: f32) -> FloatSd8 {
+        FloatSd8(self.codes[self.quantize_index(x)])
+    }
+
+    /// Decode an arbitrary (not necessarily canonical) 8-bit code.
+    #[inline]
+    pub fn decode(&self, code: FloatSd8) -> f32 {
+        let (e, rank) = (code.0 >> 5, (code.0 & 0x1f) as usize);
+        debug_assert!(rank < SD8_MANTISSA_COUNT, "rank {rank} out of range");
+        let rank = rank.min(SD8_MANTISSA_COUNT - 1);
+        self.mantissa[rank] * 2f32.powi(e as i32 - self.exp_bias)
+    }
+
+    /// The `(g0, g1)` SD-group decomposition of a code's mantissa.
+    #[inline]
+    pub fn to_groups(&self, code: FloatSd8) -> (i8, i8) {
+        let rank = ((code.0 & 0x1f) as usize).min(SD8_MANTISSA_COUNT - 1);
+        self.groups[rank]
+    }
+
+    /// Build a code from exponent field + group values (must be legal).
+    pub fn from_groups(&self, exp: u8, g0: i8, g1: i8) -> Option<FloatSd8> {
+        if exp >= (1 << self.exp_bits) {
+            return None;
+        }
+        let m = g0 as f32 + g1 as f32 / 4.0;
+        let rank = self.mantissa.iter().position(|&c| c == m)?;
+        // validate group legality
+        crate::formats::sd::SdGroup::new(3, g0 as i32)?;
+        crate::formats::sd::SdGroup::new(2, g1 as i32)?;
+        Some(FloatSd8((exp << 5) | rank as u8))
+    }
+
+    /// The ≤2 signed power-of-two partial products of a code — the whole
+    /// point of the format: multiplying `x` by this weight is
+    /// `Σ sign_i · (x << exp_i)`.
+    pub fn partial_products(&self, code: FloatSd8) -> PartialProducts {
+        let (g0, g1) = self.to_groups(code);
+        let e = (code.0 >> 5) as i32 - self.exp_bias;
+        let mut terms = [(0i8, 0i32); 2];
+        let mut len = 0u8;
+        if g0 != 0 {
+            let shift = g0.unsigned_abs().trailing_zeros() as i32;
+            terms[len as usize] = (g0.signum(), e + shift);
+            len += 1;
+        }
+        if g1 != 0 {
+            let shift = g1.unsigned_abs().trailing_zeros() as i32 - 2;
+            terms[len as usize] = (g1.signum(), e + shift);
+            len += 1;
+        }
+        PartialProducts { terms, len }
+    }
+
+    /// Number of distinct representable values (tests / docs).
+    pub fn distinct_value_count(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// The process-wide FloatSD8 format instance.
+pub static FLOAT_SD8_CELL: OnceLock<FloatSdFormat> = OnceLock::new();
+
+/// Accessor struct so call-sites can write `FLOAT_SD8.quantize(x)`.
+pub struct FloatSd8Handle;
+
+impl std::ops::Deref for FloatSd8Handle {
+    type Target = FloatSdFormat;
+    fn deref(&self) -> &FloatSdFormat {
+        FLOAT_SD8_CELL.get_or_init(FloatSdFormat::new_sd8)
+    }
+}
+
+/// Global FloatSD8 format: `FLOAT_SD8.quantize(x)`, `FLOAT_SD8.encode(x)`…
+pub static FLOAT_SD8: FloatSd8Handle = FloatSd8Handle;
+
+impl FloatSd8 {
+    /// Quantize an f32 to its canonical FloatSD8 code.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        FLOAT_SD8.encode(x)
+    }
+
+    /// Decode to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        FLOAT_SD8.decode(self)
+    }
+
+    /// Raw code.
+    #[inline]
+    pub const fn to_bits(self) -> u8 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fmt() -> &'static FloatSdFormat {
+        FLOAT_SD8_CELL.get_or_init(FloatSdFormat::new_sd8)
+    }
+
+    #[test]
+    fn mantissa_codebook_is_the_31_paper_values() {
+        let f = fmt();
+        let expected: Vec<f32> = vec![
+            -4.5, -4.25, -4.0, -3.75, -3.5, -2.5, -2.25, -2.0, -1.75, -1.5, -1.25,
+            -1.0, -0.75, -0.5, -0.25, 0.0, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75,
+            2.0, 2.25, 2.5, 3.5, 3.75, 4.0, 4.25, 4.5,
+        ];
+        assert_eq!(f.mantissa_codebook(), expected.as_slice());
+    }
+
+    #[test]
+    fn groups_are_legal_and_reconstruct_mantissa() {
+        let f = fmt();
+        for (rank, &m) in f.mantissa_codebook().iter().enumerate() {
+            let (g0, g1) = f.groups[rank];
+            assert!(crate::formats::sd::SdGroup::new(3, g0 as i32).is_some());
+            assert!(crate::formats::sd::SdGroup::new(2, g1 as i32).is_some());
+            assert_eq!(g0 as f32 + g1 as f32 / 4.0, m, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn duplicates_use_fewest_nonzero_digits() {
+        let f = fmt();
+        // 0.5 is representable as (0,+2) [1 digit] or (1,-2) [2 digits].
+        let rank = f.mantissa_codebook().iter().position(|&m| m == 0.5).unwrap();
+        assert_eq!(f.groups[rank], (0, 2));
+    }
+
+    #[test]
+    fn range_constants() {
+        let f = fmt();
+        assert_eq!(f.max_value(), 4.5);
+        assert_eq!(f.min_positive(), 0.25 * 2f32.powi(-7));
+    }
+
+    #[test]
+    fn encode_decode_round_trip_on_grid() {
+        let f = fmt();
+        for &v in f.values() {
+            let code = f.encode(v);
+            assert_eq!(f.decode(code), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn every_code_decodes_into_grid() {
+        let f = fmt();
+        for e in 0..8u8 {
+            for rank in 0..31u8 {
+                let v = f.decode(FloatSd8((e << 5) | rank));
+                assert!(
+                    f.values().iter().any(|&g| g == v),
+                    "code e={e} rank={rank} -> {v} not on grid"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_nearest_with_ties_away_from_zero() {
+        let f = fmt();
+        let vals = f.values();
+        for i in 0..vals.len() - 1 {
+            let (lo, hi) = (vals[i], vals[i + 1]);
+            let mid = 0.5 * (lo + hi);
+            // strictly inside each half
+            let eps = (hi - lo) * 1e-3;
+            assert_eq!(f.quantize(mid - eps), lo, "below midpoint of [{lo},{hi}]");
+            assert_eq!(f.quantize(mid + eps), hi, "above midpoint of [{lo},{hi}]");
+            // at the midpoint: away from zero
+            let expect = if mid >= 0.0 { hi } else { lo };
+            assert_eq!(f.quantize(mid), expect, "tie at {mid} in [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates_and_handles_nan() {
+        let f = fmt();
+        assert_eq!(f.quantize(1e9), 4.5);
+        assert_eq!(f.quantize(-1e9), -4.5);
+        assert_eq!(f.quantize(f32::NAN), 0.0);
+        assert_eq!(f.quantize(0.0), 0.0);
+    }
+
+    #[test]
+    fn partial_products_reconstruct_every_value() {
+        let f = fmt();
+        for &v in f.values() {
+            let code = f.encode(v);
+            let pp = f.partial_products(code);
+            assert!(pp.len <= 2, "more than two partial products for {v}");
+            assert_eq!(pp.value(), v, "decomposition of {v}");
+        }
+    }
+
+    #[test]
+    fn zero_has_no_partial_products() {
+        let f = fmt();
+        let pp = f.partial_products(f.encode(0.0));
+        assert_eq!(pp.len, 0);
+    }
+
+    #[test]
+    fn distinct_value_count_is_stable() {
+        // 31 mantissas x 8 exponents with power-of-two overlap chains.
+        // This count is part of the format contract (the JAX side builds
+        // the same grid); pin it.
+        let f = fmt();
+        // 31 mantissas x 8 exponents = 248 codes; power-of-two overlap
+        // chains (e.g. 0.25·2^e = 0.5·2^(e-1) = 1·2^(e-2) …) collapse
+        // them to 64 positive + 0 + 64 negative = 129 distinct values.
+        assert_eq!(f.distinct_value_count(), 129);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let f = fmt();
+        for i in 0..5000 {
+            let x = (i as f32 - 2500.0) / 300.0;
+            let q = f.quantize(x);
+            assert_eq!(f.quantize(q), q, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! IEEE 754 binary16 ("FP16") implemented bit-exactly in software.
+//!
+//! The paper's central complexity claim (§IV-C) is that **FP16 addition
+//! suffices for every accumulation** in LSTM training once weights are
+//! FloatSD8 and activations/gradients are FP8. To honour that claim we
+//! need an FP16 whose rounding we control exactly — the offline build
+//! has no `half` crate, and hardware simulation needs the raw bits
+//! anyway — so this is a from-scratch binary16:
+//!
+//! * 1 sign bit, 5 exponent bits (bias 15), 10 mantissa bits
+//! * subnormals, ±inf and NaN fully supported
+//! * `f32 -> f16` uses round-to-nearest-even (RNE), matching both IEEE
+//!   hardware and `numpy.float16`, which is what the JAX side uses —
+//!   the golden-vector test pins the two together.
+
+/// An IEEE binary16 value stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Fp16(pub u16);
+
+const F16_SIGN: u16 = 0x8000;
+const F16_EXP_MASK: u16 = 0x7c00;
+const F16_MAN_MASK: u16 = 0x03ff;
+
+impl Fp16 {
+    pub const ZERO: Fp16 = Fp16(0);
+    pub const ONE: Fp16 = Fp16(0x3c00);
+    pub const INFINITY: Fp16 = Fp16(0x7c00);
+    pub const NEG_INFINITY: Fp16 = Fp16(0xfc00);
+    /// Largest finite value, 65504.
+    pub const MAX: Fp16 = Fp16(0x7bff);
+    /// Smallest positive normal, 2^-14.
+    pub const MIN_POSITIVE: Fp16 = Fp16(0x0400);
+    /// Smallest positive subnormal, 2^-24.
+    pub const MIN_SUBNORMAL: Fp16 = Fp16(0x0001);
+
+    /// Construct from raw bits.
+    #[inline]
+    pub const fn from_bits(bits: u16) -> Self {
+        Fp16(bits)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert an `f32` to binary16 with round-to-nearest-even.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp32 = ((bits >> 23) & 0xff) as i32;
+        let man32 = bits & 0x007f_ffff;
+
+        // Inf / NaN propagate; NaN keeps a payload bit so it stays NaN.
+        if exp32 == 0xff {
+            let nan_payload = if man32 != 0 { 0x0200 } else { 0 };
+            return Fp16(sign | F16_EXP_MASK | nan_payload);
+        }
+
+        // Re-bias: f32 exponent-127 == f16 exponent-15.
+        let exp = exp32 - 127 + 15;
+
+        if exp >= 0x1f {
+            // Overflow -> infinity (IEEE RNE semantics).
+            return Fp16(sign | F16_EXP_MASK);
+        }
+
+        if exp <= 0 {
+            // Result is subnormal (or rounds up into the smallest normal).
+            if exp < -10 {
+                // Below half of the smallest subnormal: rounds to zero.
+                // (exp == -10 is exactly 2^-25 * 1.m which can round up.)
+                return Fp16(sign);
+            }
+            // f32 subnormal inputs are < 2^-126, far below f16 range; the
+            // implicit bit is only valid for normals. exp32 == 0 implies
+            // exp == -112 which was caught above, so `man` is normal here.
+            let man = man32 | 0x0080_0000; // make implicit bit explicit
+            let shift = (14 - exp) as u32; // 14..=24
+            let man16 = (man >> shift) as u16;
+            let rem = man & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut h = sign | man16;
+            if rem > half || (rem == half && (man16 & 1) == 1) {
+                h += 1; // may carry into the exponent: 0x03ff+1 = 0x0400, correct
+            }
+            return Fp16(h);
+        }
+
+        // Normal: keep top 10 of 23 mantissa bits, RNE on the rest.
+        let man16 = (man32 >> 13) as u16;
+        let rem = man32 & 0x1fff;
+        let mut h = sign | ((exp as u16) << 10) | man16;
+        if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+            // Carry propagation into the exponent (and potentially up to
+            // infinity at 0x7c00) is exactly what IEEE wants.
+            h += 1;
+        }
+        Fp16(h)
+    }
+
+    /// Correctly-rounded conversion from `f64` (single RNE rounding).
+    ///
+    /// `Fp16::from_f32(x as f32)` double-rounds (f64→f32 RNE, then
+    /// f32→f16 RNE) which can differ from the correctly-rounded result
+    /// exactly at f16 tie points. The MAC's contract is *exact sum,
+    /// round once* (Fig. 8's Wallace tree + single round stage), so we
+    /// go through a round-to-odd f32 intermediate: with 13 extra
+    /// mantissa bits, RNE(odd-rounded x) == RNE(x) — the classic
+    /// double-rounding fix.
+    pub fn from_f64(x: f64) -> Self {
+        let y = x as f32; // RNE
+        if y as f64 == x || !y.is_finite() {
+            return Fp16::from_f32(y);
+        }
+        let odd = if y.to_bits() & 1 == 1 {
+            y
+        } else if (y as f64) < x {
+            y.next_up()
+        } else {
+            y.next_down()
+        };
+        Fp16::from_f32(odd)
+    }
+
+    /// Convert to `f32` (exact — every binary16 value is representable).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & F16_SIGN) as u32) << 16;
+        let exp = ((self.0 & F16_EXP_MASK) >> 10) as u32;
+        let man = (self.0 & F16_MAN_MASK) as u32;
+        let bits = match exp {
+            0 => {
+                if man == 0 {
+                    sign // +-0
+                } else {
+                    // Subnormal: value = man * 2^-24 (exact in f32; the
+                    // multiply is a power-of-two scale of an integer).
+                    let v = man as f32 * 2f32.powi(-24);
+                    return f32::from_bits(sign | v.to_bits());
+                }
+            }
+            0x1f => sign | 0x7f80_0000 | (man << 13), // inf / nan
+            _ => sign | ((exp + 127 - 15) << 23) | (man << 13),
+        };
+        f32::from_bits(bits)
+    }
+
+    /// True if the value is NaN.
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & F16_EXP_MASK) == F16_EXP_MASK && (self.0 & F16_MAN_MASK) != 0
+    }
+
+    /// True if the value is +inf or -inf.
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & !F16_SIGN) == F16_EXP_MASK
+    }
+
+    /// True for zero or subnormal.
+    #[inline]
+    pub fn is_subnormal_or_zero(self) -> bool {
+        (self.0 & F16_EXP_MASK) == 0
+    }
+
+    /// FP16 addition: performed in f32 and rounded back to the f16 grid.
+    ///
+    /// A single f32 add of two f16 operands is exact (f32 has enough
+    /// mantissa for any aligned sum of two 11-bit mantissas), so
+    /// `round(f32-add)` is bit-identical to a native IEEE f16 adder with
+    /// RNE — this is the paper's FP16 accumulator.
+    #[inline]
+    pub fn add(self, other: Fp16) -> Fp16 {
+        Fp16::from_f32(self.to_f32() + other.to_f32())
+    }
+
+    /// FP16 multiplication (same exactness argument as [`Fp16::add`]).
+    #[inline]
+    pub fn mul(self, other: Fp16) -> Fp16 {
+        Fp16::from_f32(self.to_f32() * other.to_f32())
+    }
+}
+
+impl std::fmt::Display for Fp16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for Fp16 {
+    fn from(x: f32) -> Self {
+        Fp16::from_f32(x)
+    }
+}
+
+impl From<Fp16> for f32 {
+    fn from(h: Fp16) -> f32 {
+        h.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference f16->f32 decode, independent arithmetic (no bit tricks).
+    fn decode_ref(bits: u16) -> f32 {
+        let sign = if bits & 0x8000 != 0 { -1.0f64 } else { 1.0 };
+        let exp = ((bits >> 10) & 0x1f) as i32;
+        let man = (bits & 0x3ff) as f64;
+        let v = match exp {
+            0 => sign * man * 2f64.powi(-24),
+            0x1f => {
+                if man == 0.0 {
+                    sign * f64::INFINITY
+                } else {
+                    f64::NAN
+                }
+            }
+            _ => sign * (1.0 + man / 1024.0) * 2f64.powi(exp - 15),
+        };
+        v as f32
+    }
+
+    #[test]
+    fn decode_matches_reference_for_all_65536_codes() {
+        for bits in 0..=u16::MAX {
+            let got = Fp16(bits).to_f32();
+            let want = decode_ref(bits);
+            if want.is_nan() {
+                assert!(got.is_nan(), "bits {bits:#06x}: want NaN got {got}");
+            } else {
+                assert_eq!(got, want, "bits {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_all_finite_codes() {
+        for bits in 0..=u16::MAX {
+            let h = Fp16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = Fp16::from_f32(h.to_f32());
+            assert_eq!(back.0, h.0, "bits {bits:#06x} -> {} -> {:#06x}", h.to_f32(), back.0);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Fp16::from_f32(1.0).0, 0x3c00);
+        assert_eq!(Fp16::from_f32(-2.0).0, 0xc000);
+        assert_eq!(Fp16::from_f32(65504.0).0, 0x7bff);
+        assert_eq!(Fp16::from_f32(65536.0).0, 0x7c00); // overflow -> inf
+        assert_eq!(Fp16::from_f32(2f32.powi(-24)).0, 0x0001); // min subnormal
+        assert_eq!(Fp16::from_f32(2f32.powi(-14)).0, 0x0400); // min normal
+        assert_eq!(Fp16::from_f32(0.0).0, 0x0000);
+        assert_eq!(Fp16::from_f32(-0.0).0, 0x8000);
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 (even mantissa) and
+        // 1.0009765625; RNE keeps the even one.
+        let tie = 1.0 + 2f32.powi(-11);
+        assert_eq!(Fp16::from_f32(tie).0, 0x3c00);
+        // Next tie up: 1 + 3*2^-11 is halfway between man=1 and man=2 -> man=2.
+        let tie2 = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(Fp16::from_f32(tie2).0, 0x3c02);
+    }
+
+    #[test]
+    fn rounding_is_nearest() {
+        // For a dense sweep, from_f32(x) must be one of the two codes
+        // bracketing x and the nearer one when not a tie.
+        let mut prev = f32::NEG_INFINITY;
+        for bits in 0..0x7c00u16 {
+            let v = Fp16(bits).to_f32();
+            assert!(v > prev, "f16 grid must be strictly increasing on positives");
+            prev = v;
+        }
+        for i in 0..10_000 {
+            let x = (i as f32 - 5000.0) / 77.3;
+            let q = Fp16::from_f32(x).to_f32();
+            // distance to q must be <= distance to q's neighbours
+            let qb = Fp16::from_f32(x).0;
+            for nb in [qb.wrapping_sub(1), qb.wrapping_add(1)] {
+                let h = Fp16(nb);
+                if h.is_nan() || h.is_infinite() {
+                    continue;
+                }
+                // skip sign-boundary artifacts
+                if (nb & 0x8000) != (qb & 0x8000) {
+                    continue;
+                }
+                assert!(
+                    (x - q).abs() <= (x - h.to_f32()).abs() + 1e-12,
+                    "x={x}: chose {q} but {} is closer",
+                    h.to_f32()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subnormal_rounding_boundary() {
+        // 2^-25 is exactly half of the min subnormal; ties-to-even -> 0.
+        assert_eq!(Fp16::from_f32(2f32.powi(-25)).0, 0x0000);
+        // Slightly above rounds up to the min subnormal.
+        assert_eq!(Fp16::from_f32(2f32.powi(-25) * 1.001).0, 0x0001);
+        // 3*2^-25 is a tie between subnormal 1 and 2 -> even (2).
+        assert_eq!(Fp16::from_f32(3.0 * 2f32.powi(-25)).0, 0x0002);
+    }
+
+    #[test]
+    fn add_is_fp16_grid_exact() {
+        let a = Fp16::from_f32(1.0);
+        let b = Fp16::from_f32(2f32.powi(-11)); // below 1 ulp of 1.0
+        // 1.0 + 2^-11 ties back to 1.0 on the grid.
+        assert_eq!(a.add(b).0, a.0);
+        assert_eq!(Fp16::from_f32(1.5).add(Fp16::from_f32(2.5)).to_f32(), 4.0);
+    }
+}

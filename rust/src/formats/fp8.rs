@@ -1,0 +1,231 @@
+//! FP8 (1-5-2) — the 8-bit floating-point format of Wang et al.
+//! (NeurIPS 2018), used by the paper for **gradients and activations**
+//! (§III-D, Table II): 1 sign bit, 5 exponent bits (bias 15), 2 mantissa
+//! bits.
+//!
+//! Semantics implemented here (and mirrored in
+//! `python/compile/kernels/quant.py`):
+//!
+//! * subnormals supported (min positive = 2^-16);
+//! * round-to-nearest-even from f32;
+//! * **saturating**: values beyond ±max-normal (±1.75·2^16 = ±114688)
+//!   clamp to ±max instead of producing infinity — there is no inf/NaN
+//!   encoding at runtime (QPyTorch's `float_quantize(..., rounding=
+//!   "nearest")` behaves the same way); NaN inputs map to +max to keep
+//!   training numerics observable rather than poisoning silently.
+//!
+//! The exponent range is deliberately wide (2^-16..2^16): the paper
+//! relies on this plus ×1024 loss scaling to keep backward activations
+//! representable (§IV-A).
+
+/// An FP8 (1-5-2) value stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Fp8(pub u8);
+
+const F8_SIGN: u8 = 0x80;
+const F8_EXP_MASK: u8 = 0x7c;
+const F8_MAN_MASK: u8 = 0x03;
+/// Exponent bias.
+pub const F8_BIAS: i32 = 15;
+/// Largest finite magnitude: (1 + 3/4) * 2^(31-15) = 114688.
+pub const F8_MAX: f32 = 1.75 * 65536.0;
+/// Smallest positive normal: 2^(1-15) = 2^-14.
+pub const F8_MIN_NORMAL: f32 = 6.103515625e-5;
+/// Smallest positive subnormal: 0.25 * 2^-14 = 2^-16.
+pub const F8_MIN_SUBNORMAL: f32 = 1.52587890625e-5;
+
+impl Fp8 {
+    pub const ZERO: Fp8 = Fp8(0);
+    pub const ONE: Fp8 = Fp8(0x3c); // exp=15, man=0
+    pub const MAX: Fp8 = Fp8(0x7f);
+    pub const MIN: Fp8 = Fp8(0xff);
+
+    /// Construct from raw bits.
+    #[inline]
+    pub const fn from_bits(bits: u8) -> Self {
+        Fp8(bits)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u8 {
+        self.0
+    }
+
+    /// Quantize an `f32` to FP8 with RNE + saturation.
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return Fp8::MAX;
+        }
+        let sign = if x.is_sign_negative() { F8_SIGN } else { 0 };
+        let a = x.abs();
+        if a >= F8_MAX {
+            // Saturate. Note IEEE RNE would overflow to inf only above
+            // (max + 1/2 ulp); the paper's hardware clamps, so we clamp
+            // everywhere above max for monotonicity.
+            return Fp8(sign | 0x7f);
+        }
+        if a == 0.0 {
+            return Fp8(sign); // signed zero
+        }
+
+        let bits = a.to_bits();
+        let exp32 = ((bits >> 23) & 0xff) as i32;
+        let man32 = bits & 0x007f_ffff;
+        // Unbiased exponent of `a` (a is normal in f32: anything subnormal
+        // in f32 is < 2^-126, far below half of F8_MIN_SUBNORMAL -> 0).
+        if exp32 == 0 {
+            return Fp8(sign);
+        }
+        let e = exp32 - 127;
+        let e8 = e + F8_BIAS;
+
+        if e8 >= 1 {
+            // Normal range: round 23-bit mantissa to 2 bits.
+            let man8 = (man32 >> 21) as u8;
+            let rem = man32 & 0x1f_ffff;
+            let half = 0x10_0000;
+            let mut code = sign | ((e8 as u8) << 2) | man8;
+            if rem > half || (rem == half && (man8 & 1) == 1) {
+                // Carry may bump the exponent; if it overflows past
+                // exp=31 man=3 it would wrap into sign — but that can only
+                // happen from a >= F8_MAX which we already clamped...
+                // except for the last half-ulp below max; guard anyway.
+                if (code & !F8_SIGN) == 0x7f {
+                    return Fp8(sign | 0x7f);
+                }
+                code += 1;
+            }
+            return Fp8(code);
+        }
+
+        // Subnormal result: value = man8 * 2^-16, man8 in 0..=3.
+        // Compute round(a / 2^-16) with RNE.
+        let scaled = a * 65536.0; // exact (power-of-two scale)
+        let floor = scaled.floor();
+        let frac = scaled - floor;
+        let mut man8 = floor as u32;
+        if frac > 0.5 || (frac == 0.5 && man8 & 1 == 1) {
+            man8 += 1;
+        }
+        if man8 >= 4 {
+            // Rounded up into the smallest normal.
+            return Fp8(sign | (1 << 2));
+        }
+        Fp8(sign | man8 as u8)
+    }
+
+    /// Exact conversion to `f32`.
+    pub fn to_f32(self) -> f32 {
+        let sign = if self.0 & F8_SIGN != 0 { -1.0f32 } else { 1.0 };
+        let exp = ((self.0 & F8_EXP_MASK) >> 2) as i32;
+        let man = (self.0 & F8_MAN_MASK) as f32;
+        if exp == 0 {
+            sign * man * 2f32.powi(-16) // subnormal (or zero)
+        } else {
+            sign * (1.0 + man / 4.0) * 2f32.powi(exp - F8_BIAS)
+        }
+    }
+
+    /// All 256 representable values (including -0), ascending by code
+    /// within each sign. Useful for exhaustive tests and LUT builds.
+    pub fn all_values() -> Vec<f32> {
+        (0..=u8::MAX).map(|b| Fp8(b).to_f32()).collect()
+    }
+}
+
+impl std::fmt::Display for Fp8 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for Fp8 {
+    fn from(x: f32) -> Self {
+        Fp8::from_f32(x)
+    }
+}
+
+impl From<Fp8> for f32 {
+    fn from(v: Fp8) -> f32 {
+        v.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_256_codes() {
+        for b in 0..=u8::MAX {
+            let v = Fp8(b).to_f32();
+            let back = Fp8::from_f32(v);
+            // -0 and +0 collapse is acceptable only sign-preserved:
+            assert_eq!(back.0, b, "code {b:#04x} -> {v} -> {:#04x}", back.0);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Fp8::from_f32(1.0).0, 0x3c);
+        assert_eq!(Fp8(0x3c).to_f32(), 1.0);
+        assert_eq!(Fp8::from_f32(1.25).0, 0x3d);
+        assert_eq!(Fp8::from_f32(1.75).0, 0x3f);
+        assert_eq!(Fp8::from_f32(F8_MAX).0, 0x7f);
+        assert_eq!(Fp8::from_f32(1e9).0, 0x7f, "saturation");
+        assert_eq!(Fp8::from_f32(-1e9).0, 0xff, "saturation");
+        assert_eq!(Fp8::from_f32(2f32.powi(-16)).0, 0x01, "min subnormal");
+        assert_eq!(Fp8::from_f32(2f32.powi(-14)).0, 0x04, "min normal");
+        assert_eq!(Fp8::from_f32(0.0).0, 0x00);
+    }
+
+    #[test]
+    fn grid_is_monotonic() {
+        // Positive codes 0..0x7f decode to strictly increasing values.
+        let mut prev = -1.0f32;
+        for b in 0..=0x7fu8 {
+            let v = Fp8(b).to_f32();
+            assert!(v > prev, "code {b:#04x}: {v} <= {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn quantize_is_nearest() {
+        let grid: Vec<f32> = (0..=0x7fu8).map(|b| Fp8(b).to_f32()).collect();
+        for i in 0..20_000 {
+            let x = (i as f32 / 20_000.0 - 0.5) * 300_000.0;
+            let q = Fp8::from_f32(x).to_f32();
+            let best = grid
+                .iter()
+                .map(|g| (x.abs() - g).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(
+                ((x.abs() - q.abs()).abs() - best).abs() <= best * 1e-6 + 1e-12,
+                "x={x} q={q} best-dist={best}"
+            );
+        }
+    }
+
+    #[test]
+    fn rne_tie_behavior() {
+        // Halfway between 1.0 (code 0x3c, even) and 1.25 (0x3d) is 1.125:
+        assert_eq!(Fp8::from_f32(1.125).0, 0x3c, "tie to even (down)");
+        // Halfway between 1.25 (0x3d, odd) and 1.5 (0x3e): 1.375 -> up to even.
+        assert_eq!(Fp8::from_f32(1.375).0, 0x3e, "tie to even (up)");
+    }
+
+    #[test]
+    fn subnormal_ties() {
+        let ulp = 2f32.powi(-16);
+        assert_eq!(Fp8::from_f32(0.5 * ulp).0, 0x00, "tie to even at 0");
+        assert_eq!(Fp8::from_f32(1.5 * ulp).0, 0x02, "tie to even at 2");
+        assert_eq!(Fp8::from_f32(3.5 * ulp).0, 0x04, "tie rounds into min normal");
+    }
+
+    #[test]
+    fn nan_maps_to_max() {
+        assert_eq!(Fp8::from_f32(f32::NAN).0, 0x7f);
+    }
+}

@@ -1,0 +1,254 @@
+//! Signed-digit (SD) group machinery behind the FloatSD representation
+//! (paper §II-B, Fig. 2, Table I).
+//!
+//! A *K-digit SD group* holds at most **one** non-zero digit, each digit
+//! being ±1 at some binary position inside the group, so a group takes
+//! one of `2K + 1` values: `{0, ±1, ±2, …, ±2^(K-1)}`. A multiplication
+//! by a group is therefore a single shifted add/subtract — that is the
+//! whole complexity story of the paper.
+//!
+//! This module provides:
+//! * [`group_values`] — the `2K+1` values of a K-digit group (Table I is
+//!   `group_values(3)`);
+//! * [`zero_digit_probability`] — the paper's `(2K-1)/(2K+1)` digit-level
+//!   zero probability, cross-checked against exhaustive enumeration;
+//! * [`csd_zero_probability`] — the canonical-signed-digit comparison
+//!   point (≈ 2/3) quoted in §II-B;
+//! * [`GenericFloatSd`] — the full FloatSD format of Fig. 2 (arbitrary
+//!   group list + exponent), including the group-truncation shortcut of
+//!   Fig. 3 used for low-cost inference/backprop.
+
+/// The `2K+1` values representable by a K-digit SD group with at most one
+/// non-zero digit, in descending order as the paper's Table I lists them:
+/// `+2^(K-1) … +2, +1, 0, -1, -2 … -2^(K-1)`.
+pub fn group_values(k: u32) -> Vec<i32> {
+    assert!(k >= 1 && k <= 16, "group width out of range");
+    let mut v: Vec<i32> = (0..k).rev().map(|i| 1i32 << i).collect();
+    v.push(0);
+    v.extend((0..k).map(|i| -(1i32 << i)));
+    v
+}
+
+/// Probability that a single digit inside a K-digit SD group is zero,
+/// assuming the `2K+1` group values are equiprobable — the paper's
+/// `(2K-1)/(2K+1)` (§II-B; 71.4% for K = 3).
+pub fn zero_digit_probability(k: u32) -> f64 {
+    (2.0 * k as f64 - 1.0) / (2.0 * k as f64 + 1.0)
+}
+
+/// Digit-level zero probability of Canonical Signed Digit recoding for
+/// long words (tends to 2/3 ≈ 66.6%, the figure the paper compares
+/// against). For an n-digit CSD word the expected fraction of zeros is
+/// `2/3 + 1/(9n) * (1 - (-1/2)^n)` → we return the asymptote.
+pub fn csd_zero_probability() -> f64 {
+    2.0 / 3.0
+}
+
+/// One SD group instance: `value ∈ {0, ±2^i, i < width}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SdGroup {
+    /// Number of digits in the group.
+    pub width: u32,
+    /// The group's value (must be 0 or ±2^i with i < width).
+    pub value: i32,
+}
+
+impl SdGroup {
+    /// Create a group, validating the one-non-zero-digit constraint.
+    pub fn new(width: u32, value: i32) -> Option<Self> {
+        let mag = value.unsigned_abs();
+        if value == 0 || (mag.is_power_of_two() && mag < (1 << width)) {
+            Some(SdGroup { width, value })
+        } else {
+            None
+        }
+    }
+
+    /// Number of non-zero digits this group contributes to a multiply
+    /// (0 or 1) — i.e. the number of partial products.
+    pub fn nonzero_digits(&self) -> u32 {
+        (self.value != 0) as u32
+    }
+
+    /// The shift amount of the non-zero digit (None if zero).
+    pub fn shift(&self) -> Option<u32> {
+        if self.value == 0 {
+            None
+        } else {
+            Some(self.value.unsigned_abs().trailing_zeros())
+        }
+    }
+}
+
+/// The general FloatSD format of Fig. 2: an exponent field plus a list
+/// of SD groups forming the mantissa. Group *i* (0 = most significant)
+/// has its own width; the MSG's digit weights start at `2^(w0 - 1)` and
+/// each subsequent group continues at the next lower binary positions.
+///
+/// `mantissa_value = Σ_i g_i · 2^(-offset_i)` where `offset_i` is the
+/// number of digits in groups 0..i *below* the MSG's unit digit — i.e.
+/// groups are laid out as contiguous binary digit positions, exactly
+/// like Fig. 2's "eight three-digit groups".
+#[derive(Clone, Debug)]
+pub struct GenericFloatSd {
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Exponent bias.
+    pub exp_bias: i32,
+    /// Widths of the SD groups, most-significant first.
+    pub group_widths: Vec<u32>,
+}
+
+impl GenericFloatSd {
+    /// The Fig. 2 example: 8-bit exponent, eight 3-digit groups.
+    pub fn fig2_example() -> Self {
+        GenericFloatSd { exp_bits: 8, exp_bias: 127, group_widths: vec![3; 8] }
+    }
+
+    /// Mantissa value of a list of group values (`groups[i]` must be a
+    /// legal value for width `group_widths[i]`). The MSG is interpreted
+    /// with its least-significant digit at binary weight 2^0; each later
+    /// group continues below it.
+    pub fn mantissa_value(&self, groups: &[i32]) -> f64 {
+        assert_eq!(groups.len(), self.group_widths.len());
+        let mut weight_lsb = 0i32; // lsb position of current group, relative to MSG lsb = 0
+        let mut acc = 0f64;
+        for (i, (&g, &w)) in groups.iter().zip(&self.group_widths).enumerate() {
+            if i > 0 {
+                weight_lsb -= w as i32;
+            }
+            acc += g as f64 * 2f64.powi(weight_lsb);
+        }
+        acc
+    }
+
+    /// Full value given an exponent-field code and group values.
+    pub fn value(&self, exp_code: u32, groups: &[i32]) -> f64 {
+        assert!(exp_code < (1 << self.exp_bits));
+        self.mantissa_value(groups) * 2f64.powi(exp_code as i32 - self.exp_bias)
+    }
+
+    /// Fig. 3's truncation: keep only the first `n` mantissa digit groups
+    /// (for inference / backprop), zeroing the rest.
+    pub fn truncate_groups(&self, groups: &[i32], n: usize) -> Vec<i32> {
+        groups
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| if i < n { g } else { 0 })
+            .collect()
+    }
+
+    /// Maximum number of partial products a multiply by this format can
+    /// generate = number of groups (one non-zero digit each).
+    pub fn max_partial_products(&self) -> usize {
+        self.group_widths.len()
+    }
+
+    /// Enumerate every legal mantissa combination (careful: grows as
+    /// Π(2w_i+1); fine for the small formats used in tests).
+    pub fn enumerate_mantissas(&self) -> Vec<Vec<i32>> {
+        let mut out: Vec<Vec<i32>> = vec![vec![]];
+        for &w in &self.group_widths {
+            let vals = group_values(w);
+            let mut next = Vec::with_capacity(out.len() * vals.len());
+            for prefix in &out {
+                for &v in &vals {
+                    let mut p = prefix.clone();
+                    p.push(v);
+                    next.push(p);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_three_digit_group() {
+        // Paper Table I: +4,+2,+1,0,-1,-2,-4.
+        assert_eq!(group_values(3), vec![4, 2, 1, 0, -1, -2, -4]);
+    }
+
+    #[test]
+    fn two_digit_group() {
+        assert_eq!(group_values(2), vec![2, 1, 0, -1, -2]);
+    }
+
+    #[test]
+    fn zero_probability_formula_matches_enumeration() {
+        for k in 1..=8u32 {
+            // Enumerate: each of the 2K+1 values, count zero digits of K.
+            let vals = group_values(k);
+            let total_digits = (vals.len() as u32 * k) as f64;
+            let nonzero: u32 = vals.iter().map(|v| (*v != 0) as u32).sum();
+            let zero_digits = total_digits - nonzero as f64;
+            let p = zero_digits / total_digits;
+            assert!(
+                (p - zero_digit_probability(k)).abs() < 1e-12,
+                "k={k}: {p} vs formula {}",
+                zero_digit_probability(k)
+            );
+        }
+        // The paper's headline number for K=3:
+        assert!((zero_digit_probability(3) - 0.7142857).abs() < 1e-6);
+        assert!(zero_digit_probability(3) > csd_zero_probability());
+    }
+
+    #[test]
+    fn sd_group_validation() {
+        assert!(SdGroup::new(3, 4).is_some());
+        assert!(SdGroup::new(3, 3).is_none(), "3 needs two non-zero digits");
+        assert!(SdGroup::new(3, 8).is_none(), "8 is outside a 3-digit group");
+        assert!(SdGroup::new(3, -4).is_some());
+        assert!(SdGroup::new(3, 0).is_some());
+        assert_eq!(SdGroup::new(3, 4).unwrap().shift(), Some(2));
+        assert_eq!(SdGroup::new(3, 0).unwrap().nonzero_digits(), 0);
+    }
+
+    #[test]
+    fn fig2_format_shape() {
+        let f = GenericFloatSd::fig2_example();
+        assert_eq!(f.max_partial_products(), 8);
+        // mantissa of [4,0,0,0,0,0,0,0] is 4.0
+        let mut g = vec![0; 8];
+        g[0] = 4;
+        assert_eq!(f.mantissa_value(&g), 4.0);
+        // second group's +2 sits 3 digits below the MSG lsb: 2 * 2^-3
+        let mut g = vec![0; 8];
+        g[1] = 2;
+        assert_eq!(f.mantissa_value(&g), 0.25);
+    }
+
+    #[test]
+    fn fig3_truncation() {
+        let f = GenericFloatSd::fig2_example();
+        let g = vec![4, 2, 1, -1, 2, -4, 1, 1];
+        let t = f.truncate_groups(&g, 2);
+        assert_eq!(t, vec![4, 2, 0, 0, 0, 0, 0, 0]);
+        // Truncation error is bounded by the weight of group 2's position.
+        let err = (f.mantissa_value(&g) - f.mantissa_value(&t)).abs();
+        assert!(err <= 2f64.powi(-6) * 4.0 * 2.0);
+    }
+
+    #[test]
+    fn floatsd8_mantissa_layout_matches_paper() {
+        // FloatSD8 = 3-digit MSG + 2-digit second group: m = g0 + g1/4.
+        let f = GenericFloatSd { exp_bits: 3, exp_bias: 7, group_widths: vec![3, 2] };
+        assert_eq!(f.mantissa_value(&[1, 0]), 1.0);
+        assert_eq!(f.mantissa_value(&[0, 1]), 0.25);
+        assert_eq!(f.mantissa_value(&[0, 2]), 0.5);
+        assert_eq!(f.mantissa_value(&[4, -2]), 3.5);
+        // 35 combinations, 31 distinct (paper §III-A).
+        let all = f.enumerate_mantissas();
+        assert_eq!(all.len(), 35);
+        let mut vals: Vec<f64> = all.iter().map(|g| f.mantissa_value(g)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert_eq!(vals.len(), 31);
+    }
+}

@@ -1,0 +1,164 @@
+//! The LSTM neuron circuit of paper Fig. 9: four PEs (one per gate
+//! matmul), σ/tanh LUTs, cell-state memory and two elementwise
+//! FloatSD8 MACs computing Eq. (5)/(6).
+//!
+//! Numerics are cross-checked against the software engine
+//! ([`crate::lstm::cell::QLstmCell`]): identical results step for step.
+//! The cycle model reports per-block occupancy: the four PEs run in
+//! parallel (they share the input bus but have independent MAC pipes);
+//! the elementwise stage is 2 MACs wide.
+
+use crate::formats::{round_f16, round_f8, Fp16, Fp8};
+use crate::lstm::cell::QLstmCell;
+use crate::qmath::qsigmoid::{sigmoid_sd8, tanh_fp8};
+
+use super::pe::ProcessingElement;
+
+/// Cycle/throughput report for one LSTM step on the Fig. 9 unit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitStats {
+    /// cycles of the (parallel) PE matmul phase = max over the 4 PEs
+    pub pe_cycles: u64,
+    /// cycles of the LUT + elementwise MAC phase
+    pub elementwise_cycles: u64,
+    pub pe_utilization: f64,
+}
+
+/// The Fig. 9 unit driving a [`QLstmCell`]'s weights.
+pub struct LstmUnit<'a> {
+    pub cell: &'a QLstmCell,
+    /// batch interleave depth of each PE (≥ 5 for full utilization)
+    pub interleave: usize,
+}
+
+impl<'a> LstmUnit<'a> {
+    pub fn new(cell: &'a QLstmCell, interleave: usize) -> Self {
+        LstmUnit { cell, interleave }
+    }
+
+    /// One time step for a batch, computed the way the circuit does:
+    /// PEs produce the four gate pre-activation blocks, LUTs quantize,
+    /// the two MACs produce c and h. Returns (new h, new c, stats).
+    ///
+    /// `xs[b]` must be on the FP8 grid; `hs[b]`/`cs[b]` are the
+    /// recurrent state (FP8/FP16 grids).
+    pub fn step_batch(
+        &self,
+        xs: &[Vec<f32>],
+        hs: &[Vec<f32>],
+        cs: &[Vec<f32>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, UnitStats) {
+        let hd = self.cell.hidden;
+        let batch = xs.len();
+        let pe = ProcessingElement::new(self.interleave);
+
+        // ---- phase 1: the four gate PEs (schedule: each handles the
+        // [hd x (D+H)] slice of the fused matmuls; we model the fused
+        // wx|wh matmul as the x-part then h-part streamed through).
+        let xs8: Vec<Vec<Fp8>> =
+            xs.iter().map(|x| x.iter().map(|&v| Fp8::from_f32(v)).collect()).collect();
+        let hs8: Vec<Vec<Fp8>> =
+            hs.iter().map(|h| h.iter().map(|&v| Fp8::from_f32(v)).collect()).collect();
+        let bias16: Vec<Fp16> = self.cell.bias.iter().map(|&b| Fp16::from_f32(b)).collect();
+        let zero16 = vec![Fp16::ZERO; 4 * hd];
+
+        let (zx, sx) = pe.forward(&self.cell.wx, &xs8, &bias16);
+        let (zh, sh) = pe.forward(&self.cell.wh, &hs8, &zero16);
+        // four PEs run the four gate row-blocks concurrently: the time
+        // is (total groups / 4 PEs), utilization from the pipe model.
+        let pe_cycles = (sx.cycles + sh.cycles) / 4;
+        let pe_util = (sx.utilization + sh.utilization) / 2.0;
+
+        // ---- phase 2: LUTs + elementwise MACs (Eq. 5/6)
+        let mut h_out = vec![vec![0f32; hd]; batch];
+        let mut c_out = vec![vec![0f32; hd]; batch];
+        for b in 0..batch {
+            for j in 0..hd {
+                let z = |g: usize| zx[b][g * hd + j].to_f32() + zh[b][g * hd + j].to_f32();
+                let f = sigmoid_sd8(z(0));
+                let i = sigmoid_sd8(z(1));
+                let o = sigmoid_sd8(z(2));
+                let g = tanh_fp8(z(3));
+                let cj = round_f16(f * cs[b][j] + i * g);
+                c_out[b][j] = cj;
+                h_out[b][j] = round_f8(o * tanh_fp8(cj));
+            }
+        }
+        // elementwise stage: each output element takes one MAC group
+        // through a 5-deep pipe, 2 MACs wide, batch-interleaved.
+        let elem_ops = (batch * hd) as u64;
+        let elementwise_cycles = elem_ops.div_ceil(2) + 5;
+
+        let stats = UnitStats {
+            pe_cycles,
+            elementwise_cycles,
+            pe_utilization: pe_util,
+        };
+        (h_out, c_out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::cell::CellScratch;
+    use crate::rng::SplitMix64;
+
+    fn rand_cell(d: usize, hd: usize, seed: u64) -> QLstmCell {
+        let mut rng = SplitMix64::new(seed);
+        let wx: Vec<f32> = (0..d * 4 * hd).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let wh: Vec<f32> = (0..hd * 4 * hd).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let b: Vec<f32> = (0..4 * hd).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        QLstmCell::from_jax_layout(d, hd, &wx, &wh, &b)
+    }
+
+    #[test]
+    fn unit_matches_software_engine_bit_exactly() {
+        let (d, hd, batch) = (8, 12, 6);
+        let cell = rand_cell(d, hd, 21);
+        let unit = LstmUnit::new(&cell, 5);
+        let mut rng = SplitMix64::new(22);
+
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..d).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect())
+            .collect();
+        let hs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..hd).map(|_| round_f8(rng.uniform(-1.0, 1.0))).collect())
+            .collect();
+        let cs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..hd).map(|_| round_f16(rng.uniform(-1.5, 1.5))).collect())
+            .collect();
+
+        let (hu, cu, _) = unit.step_batch(&xs, &hs, &cs);
+
+        let mut scratch = CellScratch::new(hd);
+        for b in 0..batch {
+            let mut h = hs[b].clone();
+            let mut c = cs[b].clone();
+            cell.step(&xs[b], &mut h, &mut c, &mut scratch);
+            assert_eq!(hu[b], h, "h mismatch, lane {b}");
+            assert_eq!(cu[b], c, "c mismatch, lane {b}");
+        }
+    }
+
+    #[test]
+    fn utilization_improves_with_interleave() {
+        let cell = rand_cell(8, 8, 30);
+        let mk_inputs = |batch: usize, seed: u64| {
+            let mut rng = SplitMix64::new(seed);
+            let xs: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..8).map(|_| round_f8(rng.uniform(-1.0, 1.0))).collect())
+                .collect();
+            let hs = vec![vec![0f32; 8]; batch];
+            let cs = vec![vec![0f32; 8]; batch];
+            (xs, hs, cs)
+        };
+        let (xs, hs, cs) = mk_inputs(1, 1);
+        let (_, _, s1) = LstmUnit::new(&cell, 1).step_batch(&xs, &hs, &cs);
+        let (xs, hs, cs) = mk_inputs(6, 2);
+        let (_, _, s6) = LstmUnit::new(&cell, 6).step_batch(&xs, &hs, &cs);
+        assert!(s6.pe_utilization > s1.pe_utilization * 3.0,
+                "batch-6 {} vs batch-1 {}", s6.pe_utilization, s1.pe_utilization);
+        assert!(s6.pe_utilization > 0.95);
+    }
+}

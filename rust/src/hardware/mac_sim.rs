@@ -1,0 +1,343 @@
+//! Bit-level, cycle-level simulator of the five-stage pipelined
+//! FloatSD8 MAC (paper Fig. 8).
+//!
+//! Pipeline stages:
+//!
+//! 1. **Decode / PPG / max-exp** — the 4 FloatSD8 weights are decoded
+//!    into ≤ 8 signed shift amounts; partial products are formed as
+//!    (±fp8-significand, exponent) pairs; the maximum exponent among
+//!    the partial products and the accumulator is found.
+//! 2. **Align** — every significand is shifted right by
+//!    `max_exp − own_exp` into a common fixed-point frame.
+//! 3. **CSA** — Wallace-tree carry-save addition of the 9 aligned terms
+//!    (modeled as an exact integer sum; carry-save order does not
+//!    change the value).
+//! 4. **Round** — round-to-nearest-even at the FP16 mantissa boundary.
+//! 5. **Normalize** — pack to binary16.
+//!
+//! Numerics contract: `MacPipeline` produces **bit-identical** results
+//! to the architectural spec `qmath::mac_exact` (see tests) — this is
+//! the "we built the circuit and it computes the right thing" evidence
+//! the paper gets from RTL simulation.
+//!
+//! The cycle model exposes the §V-A hazard: the accumulator is only
+//! available 5 cycles after issue, so a single output stream stalls the
+//! pipe (20% utilization) while ≥ 5 interleaved outputs (batch ≥ 5)
+//! reach 100% — reproduced by `pe::ProcessingElement`.
+
+use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
+
+/// Fixed-point scale: every partial product and the accumulator are
+/// integers in units of 2^-26 (the finest bit any operand can carry:
+/// fp8 subnormal LSB 2^-18 × sd8 second-group LSB 2^-9 ≈ 2^-27 — one
+/// guard octave below covers the fp16 accumulator subnormal LSB 2^-24).
+pub const FRAC_BITS: i32 = 28;
+
+/// A partial product before alignment: signed fp8 significand (≤ 3 bits
+/// + sign) and its power-of-two exponent.
+#[derive(Clone, Copy, Debug)]
+pub struct PartialProduct {
+    /// signed significand in units of 2^exp (|sig| ≤ 7)
+    pub sig: i32,
+    /// power-of-two exponent of the significand unit
+    pub exp: i32,
+}
+
+/// Decompose an FP8 operand into (significand, exponent): value =
+/// sig · 2^exp with sig ∈ [−7, 7] (3-bit magnitude + sign).
+fn fp8_sig_exp(x: Fp8) -> (i32, i32) {
+    let bits = x.to_bits();
+    let sign = if bits & 0x80 != 0 { -1 } else { 1 };
+    let e = ((bits >> 2) & 0x1f) as i32;
+    let m = (bits & 0x03) as i32;
+    if e == 0 {
+        (sign * m, -16) // subnormal: m · 2^-16
+    } else {
+        (sign * (4 + m), e - 15 - 2) // (1 + m/4) · 2^(e-15) = (4+m) · 2^(e-17)
+    }
+}
+
+/// Stage-1 output: decoded partial products for one 4-pair group.
+#[derive(Clone, Debug, Default)]
+pub struct Stage1 {
+    pub pps: Vec<PartialProduct>,
+    pub max_exp: i32,
+}
+
+/// The five-stage pipelined MAC.
+#[derive(Debug, Default)]
+pub struct MacPipeline {
+    /// Cycle counter (advances by 1 per [`MacPipeline::issue`] and per
+    /// [`MacPipeline::tick`]).
+    pub cycle: u64,
+    /// Busy-until cycle per in-flight result tag (hazard tracking).
+    in_flight: Vec<u64>,
+    /// Total issued groups (for utilization stats).
+    pub issued: u64,
+}
+
+/// Pipeline depth (result latency in cycles) — paper §V-A: "the PE
+/// would have to wait for five cycles before computing another outcome".
+pub const PIPELINE_DEPTH: u64 = 5;
+
+impl MacPipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---------------- datapath (bit-level, stage by stage) ----------------
+
+    /// Stage 1: decode weights, generate partial products, max exponent.
+    pub fn stage1(acc: Fp16, xs: &[Fp8], ws: &[FloatSd8]) -> Stage1 {
+        let mut pps = Vec::with_capacity(2 * ws.len() + 1);
+        for (&x, &w) in xs.iter().zip(ws) {
+            let (sig, e) = fp8_sig_exp(x);
+            for (s, we) in FLOAT_SD8.partial_products(w).iter() {
+                // product of (sig·2^e) by (±2^we): still a ≤3-bit significand
+                pps.push(PartialProduct { sig: sig * s as i32, exp: e + we });
+            }
+        }
+        // the accumulator enters the tree as one more term: decompose
+        // the fp16 into (signed 11-bit significand, exponent)
+        let (asig, aexp) = fp16_sig_exp(acc);
+        if asig != 0 {
+            pps.push(PartialProduct { sig: asig, exp: aexp });
+        }
+        let max_exp = pps.iter().map(|p| p.exp).max().unwrap_or(0);
+        Stage1 { pps, max_exp }
+    }
+
+    /// Stage 2+3: align to the fixed-point frame and sum exactly (the
+    /// Wallace tree is value-preserving; we model the value).
+    pub fn stage23(s1: &Stage1) -> i64 {
+        let mut sum: i64 = 0;
+        for p in &s1.pps {
+            let shift = p.exp + FRAC_BITS;
+            debug_assert!(
+                (0..63).contains(&shift),
+                "alignment shift {shift} out of datapath range"
+            );
+            sum += (p.sig as i64) << shift;
+        }
+        sum
+    }
+
+    /// Stage 4+5: round the fixed-point sum to binary16 (RNE) and pack.
+    pub fn stage45(sum: i64) -> Fp16 {
+        round_fixed_to_f16(sum, FRAC_BITS as u32)
+    }
+
+    /// Full combinational result of one group (the value the pipeline
+    /// produces 5 cycles after issue).
+    pub fn compute(acc: Fp16, xs: &[Fp8], ws: &[FloatSd8]) -> Fp16 {
+        Self::stage45(Self::stage23(&Self::stage1(acc, xs, ws)))
+    }
+
+    // ---------------- cycle model ----------------
+
+    /// Issue one MAC group for result tag `tag` (e.g. a batch lane).
+    /// Returns the cycle at which the result (and thus the accumulator
+    /// for the next group of the same tag) is available. If the tag's
+    /// previous result is not ready yet, the issue *stalls* until it is.
+    pub fn issue(&mut self, tag: usize) -> u64 {
+        if self.in_flight.len() <= tag {
+            self.in_flight.resize(tag + 1, 0);
+        }
+        // RAW hazard on the accumulator: wait for the tag's last result.
+        if self.cycle < self.in_flight[tag] {
+            self.cycle = self.in_flight[tag];
+        }
+        self.cycle += 1; // occupy one issue slot
+        self.issued += 1;
+        let ready = self.cycle + PIPELINE_DEPTH - 1;
+        self.in_flight[tag] = ready;
+        ready
+    }
+
+    /// Advance one idle cycle.
+    pub fn tick(&mut self) {
+        self.cycle += 1;
+    }
+
+    /// Issue-slot utilization so far: groups issued / cycles elapsed.
+    pub fn utilization(&self) -> f64 {
+        if self.cycle == 0 {
+            0.0
+        } else {
+            self.issued as f64 / self.cycle as f64
+        }
+    }
+}
+
+/// Decompose an FP16 into (signed significand, exponent): value =
+/// sig · 2^exp, |sig| ≤ 2047.
+fn fp16_sig_exp(x: Fp16) -> (i32, i32) {
+    let bits = x.to_bits();
+    let sign = if bits & 0x8000 != 0 { -1 } else { 1 };
+    let e = ((bits >> 10) & 0x1f) as i32;
+    let m = (bits & 0x3ff) as i32;
+    if e == 0 {
+        (sign * m, -24) // subnormal / zero
+    } else {
+        (sign * (1024 + m), e - 15 - 10)
+    }
+}
+
+/// Round an exact fixed-point value (units of 2^-frac_bits) to binary16
+/// with round-to-nearest-even — the stage-4/5 rounder.
+pub fn round_fixed_to_f16(v: i64, frac_bits: u32) -> Fp16 {
+    if v == 0 {
+        return Fp16::ZERO;
+    }
+    let neg = v < 0;
+    let mag = v.unsigned_abs();
+    let msb = 63 - mag.leading_zeros(); // position of the leading 1
+    let exp = msb as i32 - frac_bits as i32; // value in [2^exp, 2^(exp+1))
+
+    // fp16 normal needs exp in [-14, 15]; below that, subnormal frame.
+    let (man_lsb_exp, biased) = if exp >= -14 {
+        (exp - 10, exp + 15) // 10 fraction bits below the implicit one
+    } else {
+        (-24, 0) // subnormal: fixed LSB at 2^-24
+    };
+    // bit position (in the fixed-point frame) of the mantissa LSB:
+    let lsb_pos = man_lsb_exp + frac_bits as i32;
+    if lsb_pos <= 0 {
+        // every bit of v is at or above the mantissa LSB: exact integer
+        let man = (mag as i64) << (-lsb_pos);
+        return pack_f16(neg, biased, man as u64);
+    }
+    let lsb_pos = lsb_pos as u32;
+    let man = mag >> lsb_pos;
+    let rem = mag & ((1u64 << lsb_pos) - 1);
+    let half = 1u64 << (lsb_pos - 1);
+    let mut man = man;
+    if rem > half || (rem == half && man & 1 == 1) {
+        man += 1; // may carry: 0x7ff+1 = 0x800 handled by pack (exp bump)
+    }
+    pack_f16(neg, biased, man)
+}
+
+/// Pack (sign, biased exponent, mantissa-with-implicit-bit) to binary16,
+/// handling the carry-out of rounding and overflow saturation to inf.
+fn pack_f16(neg: bool, mut biased: i32, mut man: u64) -> Fp16 {
+    // mantissa with implicit bit: normal expects 1024..=2047
+    if biased > 0 {
+        if man >= 2048 {
+            man >>= 1;
+            biased += 1;
+        }
+        if man < 1024 {
+            // can happen when the rounded value came in subnormal frame
+            // (biased computed > 0 only for normals — not this path)
+            debug_assert!(false, "unnormalized normal");
+        }
+        if biased >= 0x1f {
+            return if neg { Fp16::NEG_INFINITY } else { Fp16::INFINITY };
+        }
+        let bits = ((neg as u16) << 15) | ((biased as u16) << 10) | ((man - 1024) as u16);
+        Fp16::from_bits(bits)
+    } else {
+        // subnormal frame: man is the raw 10-bit fraction (may round up
+        // into the smallest normal, man == 1024 → exp 1, man 0)
+        if man >= 1024 {
+            let bits = ((neg as u16) << 15) | (1 << 10) | ((man - 1024) as u16);
+            return Fp16::from_bits(bits);
+        }
+        let bits = ((neg as u16) << 15) | man as u16;
+        Fp16::from_bits(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qmath::mac::{mac_exact, MAC_GROUP};
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn fp8_decomposition_reconstructs() {
+        for b in 0..=u8::MAX {
+            let x = Fp8::from_bits(b);
+            let (sig, exp) = fp8_sig_exp(x);
+            let v = sig as f64 * 2f64.powi(exp);
+            assert_eq!(v as f32, x.to_f32(), "fp8 bits {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn fp16_decomposition_reconstructs() {
+        for b in (0..=u16::MAX).step_by(7) {
+            let x = Fp16::from_bits(b);
+            if x.is_nan() || x.is_infinite() {
+                continue;
+            }
+            let (sig, exp) = fp16_sig_exp(x);
+            assert_eq!((sig as f64 * 2f64.powi(exp)) as f32, x.to_f32());
+        }
+    }
+
+    #[test]
+    fn round_fixed_matches_from_f64() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..100_000 {
+            let v = (rng.next_u64() >> 20) as i64 - (1i64 << 43);
+            let got = round_fixed_to_f16(v, FRAC_BITS as u32);
+            let want = Fp16::from_f64(v as f64 * 2f64.powi(-FRAC_BITS));
+            assert_eq!(got.0, want.0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_architectural_mac_on_random_vectors() {
+        let mut rng = SplitMix64::new(6);
+        for trial in 0..20_000 {
+            let n = 1 + (rng.next_below(MAC_GROUP as u64) as usize);
+            let xs: Vec<Fp8> = (0..n)
+                .map(|_| Fp8::from_f32((rng.next_f32() - 0.5) * 1000.0))
+                .collect();
+            let ws: Vec<FloatSd8> = (0..n)
+                .map(|_| FLOAT_SD8.encode((rng.next_f32() - 0.5) * 9.0))
+                .collect();
+            let acc = Fp16::from_f32((rng.next_f32() - 0.5) * 64.0);
+            let got = MacPipeline::compute(acc, &xs, &ws);
+            let want = mac_exact(acc, &xs, &ws);
+            assert_eq!(got.0, want.0, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn partial_product_count_bounded() {
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..1000 {
+            let xs: Vec<Fp8> = (0..4).map(|_| Fp8::from_f32(rng.uniform(-8.0, 8.0))).collect();
+            let ws: Vec<FloatSd8> =
+                (0..4).map(|_| FLOAT_SD8.encode(rng.uniform(-4.5, 4.5))).collect();
+            let s1 = MacPipeline::stage1(Fp16::ZERO, &xs, &ws);
+            assert!(s1.pps.len() <= 8, "more than 8 partial products");
+        }
+    }
+
+    #[test]
+    fn single_stream_utilization_is_one_fifth() {
+        let mut pipe = MacPipeline::new();
+        for _ in 0..100 {
+            pipe.issue(0);
+        }
+        let u = pipe.utilization();
+        assert!((u - 0.2).abs() < 0.02, "single-tag utilization {u}");
+    }
+
+    #[test]
+    fn five_interleaved_streams_reach_full_utilization() {
+        let mut pipe = MacPipeline::new();
+        for round in 0..100 {
+            for tag in 0..5 {
+                let _ = round; // round-robin over 5 tags
+                pipe.issue(tag);
+            }
+        }
+        let u = pipe.utilization();
+        assert!(u > 0.99, "batch-5 utilization {u}");
+    }
+}

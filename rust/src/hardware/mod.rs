@@ -1,0 +1,32 @@
+//! Hardware model of the paper's §V: the FloatSD8 MAC, the LSTM PE and
+//! the LSTM neuron circuit — plus the 40 nm synthesis cost model that
+//! regenerates Table VII.
+//!
+//! The paper validated its design with Synopsys DC + PrimeTime at 40 nm;
+//! we have no EDA tools, so (per the substitution rule, DESIGN.md §4)
+//! the same questions are answered by two simulators built from scratch:
+//!
+//! * [`mac_sim`] — a **bit-level, cycle-level** model of the five-stage
+//!   pipelined FloatSD8 MAC of Fig. 8 (decode → partial products + max
+//!   exponent → align → carry-save add → round/normalize). Its numerics
+//!   are proven identical to the architectural definition
+//!   (`qmath::mac_exact`) by exhaustive/random cross-tests.
+//! * [`cost`] — a gate-level area/power estimator over the synthesizable
+//!   components of both MACs (FP32 vs FloatSD8), using published 40 nm
+//!   standard-cell figures. Regenerates the Table VII comparison (the
+//!   claim is the *ratio*: 7.66× area, 5.75× power).
+//! * [`pe`] — the output-stationary processing element of Fig. 7 with
+//!   its partial-sum register file; reproduces the §V-A utilization
+//!   claim (batch ≥ 5 ⇒ 100%).
+//! * [`lstm_unit`] — the Fig. 9 neuron circuit: 4 PEs + σ/tanh LUTs +
+//!   2 elementwise MACs; runs real inference cycle-accurately and is
+//!   numerically cross-checked against the [`crate::lstm`] engine.
+
+pub mod cost;
+pub mod lstm_unit;
+pub mod mac_sim;
+pub mod pe;
+
+pub use cost::{mac_cost_fp32, mac_cost_fsd8, CostReport};
+pub use mac_sim::MacPipeline;
+pub use pe::ProcessingElement;

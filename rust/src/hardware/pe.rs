@@ -1,0 +1,163 @@
+//! The LSTM processing element (paper Fig. 7): output-stationary matrix
+//! multiply between FP8 inputs and FloatSD8 weights with partial-sum
+//! registers, built on the five-stage pipelined MAC.
+//!
+//! Reproduces both the *numerics* (via [`MacPipeline::compute`]) and
+//! the *schedule*: one MAC group (4 pairs) issues per cycle; a group
+//! whose accumulator is still in flight stalls (§V-A), so utilization
+//! is `min(1, interleaved_outputs / 5)` — the paper's "with the batch
+//! size larger than five, the hardware utilization would reach 100%".
+
+use crate::formats::{Fp16, Fp8};
+use crate::qmath::vector::QMatrix;
+
+use super::mac_sim::{MacPipeline, PIPELINE_DEPTH};
+
+/// Schedule/throughput statistics of one PE run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeStats {
+    pub cycles: u64,
+    pub mac_groups: u64,
+    pub utilization: f64,
+}
+
+/// Output-stationary PE: weights resident, inputs streamed, one
+/// partial-sum register per (output-neuron, batch-lane) pair.
+pub struct ProcessingElement {
+    /// How many output streams are interleaved in the pipe at once
+    /// (the batch dimension of §V-A; register file depth).
+    pub interleave: usize,
+}
+
+impl ProcessingElement {
+    pub fn new(interleave: usize) -> Self {
+        assert!(interleave >= 1);
+        ProcessingElement { interleave }
+    }
+
+    /// Run `y[b] = W x[b] + bias` for a batch, bit-exactly via the
+    /// pipelined MAC, and report the cycle schedule.
+    ///
+    /// `xs` is `[batch][cols]` of FP8 codes; returns `[batch][rows]`.
+    pub fn forward(
+        &self,
+        w: &QMatrix,
+        xs: &[Vec<Fp8>],
+        bias: &[Fp16],
+    ) -> (Vec<Vec<Fp16>>, PeStats) {
+        let batch = xs.len();
+        let mut out = vec![vec![Fp16::ZERO; w.rows]; batch];
+        let mut pipe = MacPipeline::new();
+
+        // schedule: for each output row, stream the k-dimension in MAC
+        // groups, interleaving `interleave` batch lanes round-robin so
+        // the accumulator RAW hazard is hidden.
+        let groups_per_row = w.cols.div_ceil(4);
+        for r in 0..w.rows {
+            let row = w.row_codes(r);
+            for (ci, chunk) in xs.chunks(self.interleave).enumerate() {
+                let base = ci * self.interleave;
+                // init accumulators with the bias
+                let mut accs: Vec<Fp16> = vec![bias[r]; chunk.len()];
+                for g in 0..groups_per_row {
+                    let lo = g * 4;
+                    let hi = (lo + 4).min(w.cols);
+                    for (lane, x) in chunk.iter().enumerate() {
+                        pipe.issue(lane);
+                        accs[lane] =
+                            MacPipeline::compute(accs[lane], &x[lo..hi], &row[lo..hi]);
+                    }
+                }
+                for (lane, acc) in accs.into_iter().enumerate() {
+                    out[base + lane][r] = acc;
+                }
+            }
+        }
+        // drain the pipe
+        for _ in 0..PIPELINE_DEPTH {
+            pipe.tick();
+        }
+        let stats = PeStats {
+            cycles: pipe.cycle,
+            mac_groups: pipe.issued,
+            utilization: pipe.issued as f64 / pipe.cycle as f64,
+        };
+        (out, stats)
+    }
+
+    /// Pure schedule model (no numerics): cycles to compute a
+    /// `rows × cols` matvec over `batch` lanes with this interleave
+    /// depth. Used by the utilization bench (Fig. 7 / §V-A claim).
+    pub fn schedule_cycles(&self, rows: usize, cols: usize, batch: usize) -> PeStats {
+        let mut pipe = MacPipeline::new();
+        let groups_per_row = cols.div_ceil(4);
+        for _r in 0..rows {
+            for chunk_start in (0..batch).step_by(self.interleave) {
+                let lanes = (batch - chunk_start).min(self.interleave);
+                for _g in 0..groups_per_row {
+                    for lane in 0..lanes {
+                        pipe.issue(lane);
+                    }
+                }
+            }
+        }
+        for _ in 0..PIPELINE_DEPTH {
+            pipe.tick();
+        }
+        PeStats {
+            cycles: pipe.cycle,
+            mac_groups: pipe.issued,
+            utilization: pipe.issued as f64 / pipe.cycle as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::round_f8;
+    use crate::qmath::mac::{dot_fsd8_fp8, MacMode};
+    use crate::rng::SplitMix64;
+
+    fn setup(rows: usize, cols: usize, batch: usize) -> (QMatrix, Vec<Vec<Fp8>>, Vec<Fp16>) {
+        let mut rng = SplitMix64::new((rows * 31 + cols * 7 + batch) as u64);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w = QMatrix::from_f32(rows, cols, &data);
+        let xs: Vec<Vec<Fp8>> = (0..batch)
+            .map(|_| (0..cols).map(|_| Fp8::from_f32(round_f8(rng.uniform(-3.0, 3.0)))).collect())
+            .collect();
+        let bias: Vec<Fp16> = (0..rows).map(|_| Fp16::from_f32(rng.uniform(-0.5, 0.5))).collect();
+        (w, xs, bias)
+    }
+
+    #[test]
+    fn pe_numerics_match_architectural_dot() {
+        let (w, xs, bias) = setup(6, 18, 4);
+        let pe = ProcessingElement::new(4);
+        let (out, _) = pe.forward(&w, &xs, &bias);
+        for (b, x) in xs.iter().enumerate() {
+            for r in 0..w.rows {
+                let want = dot_fsd8_fp8(bias[r], x, w.row_codes(r), MacMode::Exact);
+                assert_eq!(out[b][r].0, want.0, "b={b} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_rises_with_batch_saturating_at_five() {
+        let pe1 = ProcessingElement::new(1).schedule_cycles(16, 64, 1);
+        let pe2 = ProcessingElement::new(2).schedule_cycles(16, 64, 2);
+        let pe5 = ProcessingElement::new(5).schedule_cycles(16, 64, 5);
+        let pe8 = ProcessingElement::new(8).schedule_cycles(16, 64, 8);
+        assert!(pe1.utilization < 0.25, "batch1 {}", pe1.utilization);
+        assert!(pe2.utilization < 0.45, "batch2 {}", pe2.utilization);
+        assert!(pe5.utilization > 0.95, "batch5 {}", pe5.utilization);
+        assert!(pe8.utilization > 0.97, "batch8 {}", pe8.utilization);
+    }
+
+    #[test]
+    fn mac_group_count_is_work_volume() {
+        let s = ProcessingElement::new(4).schedule_cycles(8, 32, 4);
+        assert_eq!(s.mac_groups, 8 * (32 / 4) as u64 * 4);
+    }
+}

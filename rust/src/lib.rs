@@ -1,0 +1,43 @@
+//! # floatsd-lstm
+//!
+//! Reproduction of **"Low-Complexity LSTM Training and Inference with
+//! FloatSD8 Weight Representation"** (Liu & Chiueh, IJCNN 2020) as a
+//! three-layer rust + JAX/Pallas stack:
+//!
+//! * **L1** — Pallas kernels (FloatSD8/FP8 quantizers, quantized matmul,
+//!   two-region quantized sigmoid) authored in `python/compile/kernels/`,
+//!   lowered at build time.
+//! * **L2** — the quantized LSTM training step (forward/backward with
+//!   fake-quantization hooks, Adam/SGD, loss scaling) in
+//!   `python/compile/model.py`, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** — this crate: the runtime coordinator that loads the AOT
+//!   artifacts via PJRT ([`runtime`]), drives training experiments
+//!   ([`coordinator`]), generates the synthetic workloads ([`data`]),
+//!   and hosts the paper's numeric formats ([`formats`]), software
+//!   quantized math ([`qmath`]), a pure-rust quantized LSTM inference
+//!   engine ([`lstm`]) and the gate/cycle-level hardware model of the
+//!   paper's FloatSD8 MAC and LSTM neuron circuit ([`hardware`]).
+//!
+//! Python never runs at inference/training-loop time: `make artifacts`
+//! runs once, then the rust binary is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index (every table and figure of
+//! the paper mapped to a module and a bench target) and `EXPERIMENTS.md`
+//! for measured results.
+
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod hardware;
+pub mod lstm;
+pub mod qmath;
+pub mod rng;
+pub mod runtime;
+pub mod tensorfile;
+pub mod testing;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

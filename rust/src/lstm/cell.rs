@@ -1,0 +1,212 @@
+//! The quantized LSTM cell (paper Eq. 1-6 under the §III scheme).
+//!
+//! Numerics contract (all pinned by tests):
+//!
+//! * matmuls: FP8 inputs × FloatSD8 weights, exact 4-group sums, one
+//!   FP16 rounding per group (`qmath::vector::matvec_fast` ==
+//!   `hardware::MacPipeline` bit-for-bit);
+//! * gates f/i/o: two-region FloatSD8 sigmoid (Eq. 7/8);
+//! * cell gate g and tanh(c): FP8-quantized tanh;
+//! * cell state: `c = round_f16(f·c + i·g)` with the two products exact
+//!   in f32 (≤ 11+11 significant bits) and the sum rounded at f32 then
+//!   f16 — byte-identical to the L2 JAX graph (see ref.ref_lstm_gates);
+//! * output: `h = round_f8(o · tanh_q(c))`.
+
+use crate::formats::{round_f16, round_f8};
+use crate::qmath::qsigmoid::{sigmoid_sd8, tanh_fp8};
+use crate::qmath::vector::{matvec_fast, QMatrix};
+
+/// Gate packing order within the fused weight matrices (must match
+/// `python/compile/lstm.py`: f, i, o, g).
+pub const GATE_ORDER: [&str; 4] = ["f", "i", "o", "g"];
+
+/// A quantized LSTM cell: fused weights `wx [4H][D]`, `wh [4H][H]`
+/// (row-major, one row per output unit — transposed vs the JAX layout,
+/// which is column-major `[D][4H]`; the loader handles the transpose).
+pub struct QLstmCell {
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub wx: QMatrix,
+    pub wh: QMatrix,
+    /// bias on the FP16 grid
+    pub bias: Vec<f32>,
+}
+
+/// Scratch buffers reused across time steps (no allocation in the hot
+/// loop).
+pub struct CellScratch {
+    zx: Vec<f32>,
+    zh: Vec<f32>,
+}
+
+impl CellScratch {
+    pub fn new(hidden: usize) -> Self {
+        CellScratch { zx: vec![0.0; 4 * hidden], zh: vec![0.0; 4 * hidden] }
+    }
+}
+
+impl QLstmCell {
+    /// Build from f32 weights in the **JAX layout**: `wx [D][4H]`
+    /// col-major-for-us (i.e. `wx_jax[d][j]` = weight from input d to
+    /// unit j), quantizing to FloatSD8.
+    pub fn from_jax_layout(
+        input_dim: usize,
+        hidden: usize,
+        wx_jax: &[f32], // D x 4H row-major
+        wh_jax: &[f32], // H x 4H row-major
+        bias: &[f32],   // 4H
+    ) -> Self {
+        assert_eq!(wx_jax.len(), input_dim * 4 * hidden);
+        assert_eq!(wh_jax.len(), hidden * 4 * hidden);
+        assert_eq!(bias.len(), 4 * hidden);
+        let transpose = |src: &[f32], rows: usize, cols: usize| {
+            // src is rows x cols; produce cols x rows (row-major)
+            let mut t = vec![0f32; src.len()];
+            for r in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r] = src[r * cols + c];
+                }
+            }
+            t
+        };
+        let wx_t = transpose(wx_jax, input_dim, 4 * hidden);
+        let wh_t = transpose(wh_jax, hidden, 4 * hidden);
+        QLstmCell {
+            input_dim,
+            hidden,
+            wx: QMatrix::from_f32(4 * hidden, input_dim, &wx_t),
+            wh: QMatrix::from_f32(4 * hidden, hidden, &wh_t),
+            bias: bias.iter().map(|&b| round_f16(b)).collect(),
+        }
+    }
+
+    /// One time step. `x` must already be on the FP8 grid (the caller
+    /// quantizes embeddings / inter-layer activations); `h`/`c` are the
+    /// recurrent state (h on FP8, c on FP16 — maintained by this fn).
+    pub fn step(
+        &self,
+        x: &[f32],
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+        scratch: &mut CellScratch,
+    ) {
+        let hdim = self.hidden;
+        debug_assert_eq!(x.len(), self.input_dim);
+        debug_assert_eq!(h.len(), hdim);
+
+        // z = round_chain(wx·x) + round_chain(wh·h) + b   (Eq. 1-4 fused)
+        let zero_bias = vec![0.0f32; 4 * hdim];
+        matvec_fast(&self.wx, x, &self.bias, &mut scratch.zx);
+        matvec_fast(&self.wh, h, &zero_bias, &mut scratch.zh);
+
+        for j in 0..hdim {
+            // gate pre-activations (f32 add of two f16-grid values —
+            // exact, both have ≤11-bit significands and close exponents
+            // ... not exact in general; matches the L2 graph which also
+            // adds the two matmul outputs in f32)
+            let zf = scratch.zx[j] + scratch.zh[j];
+            let zi = scratch.zx[hdim + j] + scratch.zh[hdim + j];
+            let zo = scratch.zx[2 * hdim + j] + scratch.zh[2 * hdim + j];
+            let zg = scratch.zx[3 * hdim + j] + scratch.zh[3 * hdim + j];
+
+            let f = sigmoid_sd8(zf);
+            let i = sigmoid_sd8(zi);
+            let o = sigmoid_sd8(zo);
+            let g = tanh_fp8(zg);
+
+            // Eq. 5: FP16 cell-state accumulation (products exact in f32)
+            let cj = round_f16(f * c[j] + i * g);
+            c[j] = cj;
+            // Eq. 6: FP8 output activation
+            h[j] = round_f8(o * tanh_fp8(cj));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{round_f8, FLOAT_SD8};
+    use crate::rng::SplitMix64;
+
+    fn rand_cell(d: usize, hdim: usize, seed: u64) -> QLstmCell {
+        let mut rng = SplitMix64::new(seed);
+        let wx: Vec<f32> = (0..d * 4 * hdim).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let wh: Vec<f32> = (0..hdim * 4 * hdim).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let b: Vec<f32> = (0..4 * hdim).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b)
+    }
+
+    #[test]
+    fn transpose_is_correct() {
+        // wx_jax[d][j]: make a 2x8 (d=2, 4H=8 with H=2) pattern and
+        // check the QMatrix row for unit j holds wx_jax[.][j].
+        let d = 2;
+        let hdim = 2;
+        let wx: Vec<f32> = (0..d * 4 * hdim).map(|i| (i as f32) / 8.0).collect();
+        let wh = vec![0.0; hdim * 4 * hdim];
+        let b = vec![0.0; 4 * hdim];
+        let cell = QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+        for j in 0..4 * hdim {
+            let row = cell.wx.row_decoded(j);
+            for dd in 0..d {
+                assert_eq!(row[dd], FLOAT_SD8.quantize(wx[dd * 4 * hdim + j]));
+            }
+        }
+    }
+
+    #[test]
+    fn state_stays_on_grids() {
+        let cell = rand_cell(6, 8, 1);
+        let mut rng = SplitMix64::new(2);
+        let mut h = vec![0.0f32; 8];
+        let mut c = vec![0.0f32; 8];
+        let mut scratch = CellScratch::new(8);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..6).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();
+            cell.step(&x, &mut h, &mut c, &mut scratch);
+            for &v in &h {
+                assert_eq!(v, round_f8(v), "h not on FP8 grid");
+            }
+            for &v in &c {
+                assert_eq!(v, crate::formats::round_f16(v), "c not on FP16 grid");
+            }
+        }
+    }
+
+    #[test]
+    fn forget_gate_saturation_preserves_memory_scale() {
+        // With hugely positive forget-gate bias and zero input/cell
+        // gates, c must persist exactly (f quantizes to 1.0 via Eq. 8).
+        let d = 2;
+        let hdim = 2;
+        let wx = vec![0.0; d * 4 * hdim];
+        let wh = vec![0.0; hdim * 4 * hdim];
+        let mut b = vec![0.0; 4 * hdim];
+        b[0] = 30.0; // f-gate unit 0
+        b[1] = 30.0;
+        b[hdim..2 * hdim].iter_mut().for_each(|v| *v = -30.0); // i = 0
+        let cell = QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+        let mut h = vec![0.0; hdim];
+        let mut c = vec![0.25, -1.5];
+        let mut s = CellScratch::new(hdim);
+        cell.step(&[0.0, 0.0], &mut h, &mut c, &mut s);
+        assert_eq!(c, vec![0.25, -1.5], "perfect forget-gate memory");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cell = rand_cell(4, 4, 7);
+        let x = vec![0.5, -0.25, 1.0, 0.0];
+        let run = || {
+            let mut h = vec![0.0; 4];
+            let mut c = vec![0.0; 4];
+            let mut s = CellScratch::new(4);
+            for _ in 0..5 {
+                cell.step(&x, &mut h, &mut c, &mut s);
+            }
+            (h, c)
+        };
+        assert_eq!(run(), run());
+    }
+}

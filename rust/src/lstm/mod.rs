@@ -1,0 +1,20 @@
+//! Pure-rust quantized LSTM **inference engine** — the deployable
+//! counterpart of the training stack: FloatSD8 weights (1 byte each),
+//! FP8 activations, FP16 accumulation, quantized-σ gates. No python, no
+//! XLA; this is what the paper's accelerator executes, in software.
+//!
+//! * [`cell`] — the quantized LSTM cell (Eq. 1-6 with §III quantizers),
+//!   numerics aligned with the L2 JAX graph (golden-pinned) and with
+//!   the Fig. 9 hardware unit (bit-exact cross-test);
+//! * [`model`] — layers/stacks: embedding, (bi)LSTM layers, dense
+//!   head; loads weights from `.tensors` checkpoints written by the
+//!   coordinator;
+//! * [`reference`] — the FP32 reference engine (the paper's baseline),
+//!   same API, plain f32 arithmetic.
+
+pub mod cell;
+pub mod model;
+pub mod reference;
+
+pub use cell::QLstmCell;
+pub use model::{Dense, Embedding, QLstmLayer, QLstmStack};

@@ -1,0 +1,271 @@
+//! Model-level blocks of the inference engine: embedding, LSTM layers
+//! (uni/bidirectional), dense heads, and a stack container that loads
+//! weights from `.tensors` files (JAX pytree leaves written by aot.py
+//! or checkpoints written by the coordinator).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::{round_f16, round_f8};
+use crate::qmath::vector::{matvec_fast, QMatrix};
+use crate::tensorfile::Tensor;
+
+use super::cell::{CellScratch, QLstmCell};
+
+/// Embedding table (kept in f32; its *outputs* are the paper's
+/// first-layer activations and are FP8-quantized here).
+pub struct Embedding {
+    pub vocab: usize,
+    pub dim: usize,
+    pub table: Vec<f32>,
+}
+
+impl Embedding {
+    pub fn lookup_fp8(&self, id: usize, out: &mut [f32]) {
+        assert!(id < self.vocab, "token id {id} out of range {}", self.vocab);
+        let row = &self.table[id * self.dim..(id + 1) * self.dim];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o = round_f8(v);
+        }
+    }
+}
+
+/// Dense layer with FloatSD8 weights (out = W·x + b, FP16-chained).
+pub struct Dense {
+    pub w: QMatrix, // rows = out, cols = in
+    pub bias: Vec<f32>,
+}
+
+impl Dense {
+    /// From JAX layout `w [in][out]` row-major.
+    pub fn from_jax_layout(in_dim: usize, out_dim: usize, w: &[f32], b: &[f32]) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim);
+        let mut t = vec![0f32; w.len()];
+        for r in 0..in_dim {
+            for c in 0..out_dim {
+                t[c * in_dim + r] = w[r * out_dim + c];
+            }
+        }
+        Dense {
+            w: QMatrix::from_f32(out_dim, in_dim, &t),
+            bias: b.iter().map(|&x| round_f16(x)).collect(),
+        }
+    }
+
+    /// `x` must be on the FP8 grid already.
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        matvec_fast(&self.w, x, &self.bias, out);
+    }
+}
+
+/// One (optionally bidirectional) quantized LSTM layer.
+pub struct QLstmLayer {
+    pub fwd: QLstmCell,
+    pub bwd: Option<QLstmCell>,
+}
+
+impl QLstmLayer {
+    pub fn out_dim(&self) -> usize {
+        self.fwd.hidden * if self.bwd.is_some() { 2 } else { 1 }
+    }
+
+    /// Run over a sequence `xs [T][D]` (FP8 grid), producing `[T][out]`
+    /// FP8 hidden activations (inter-layer activation quantization).
+    pub fn forward(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let t_len = xs.len();
+        let hdim = self.fwd.hidden;
+        let odim = self.out_dim();
+        let mut out = vec![vec![0f32; odim]; t_len];
+
+        let mut h = vec![0f32; hdim];
+        let mut c = vec![0f32; hdim];
+        let mut scratch = CellScratch::new(hdim);
+        for (t, x) in xs.iter().enumerate() {
+            self.fwd.step(x, &mut h, &mut c, &mut scratch);
+            out[t][..hdim].copy_from_slice(&h);
+        }
+        if let Some(bwd) = &self.bwd {
+            let mut h = vec![0f32; hdim];
+            let mut c = vec![0f32; hdim];
+            let mut scratch = CellScratch::new(hdim);
+            for (t, x) in xs.iter().enumerate().rev() {
+                bwd.step(x, &mut h, &mut c, &mut scratch);
+                out[t][hdim..].copy_from_slice(&h);
+            }
+        }
+        out
+    }
+}
+
+/// A named-parameter view over a `.tensors` file for model assembly.
+pub struct ParamBag {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl ParamBag {
+    pub fn from_tensors(tensors: Vec<Tensor>) -> Self {
+        ParamBag { tensors: tensors.into_iter().map(|t| (t.name.clone(), t)).collect() }
+    }
+
+    /// Fetch an f32 tensor by trying several name spellings (JAX
+    /// keystr paths look like `['params']['l1']['wx']`).
+    pub fn f32(&self, keys: &[&str]) -> Result<(Vec<usize>, Vec<f32>)> {
+        for k in keys {
+            if let Some(t) = self.tensors.get(*k) {
+                let data = t.as_f32().context("dtype")?;
+                return Ok((t.shape.clone(), data));
+            }
+        }
+        bail!(
+            "none of {keys:?} found; have: {:?}",
+            self.tensors.keys().take(8).collect::<Vec<_>>()
+        )
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+}
+
+/// A generic quantized stack: embedding → LSTM layers → dense head.
+/// Covers the pos/lm/tiny topologies (the examples and benches build
+/// the nli/mt variants from the same blocks).
+pub struct QLstmStack {
+    pub embed: Embedding,
+    pub layers: Vec<QLstmLayer>,
+    pub head: Dense,
+}
+
+impl QLstmStack {
+    /// Forward one token sequence → per-step logits `[T][n_out]`.
+    pub fn forward(&self, ids: &[usize]) -> Vec<Vec<f32>> {
+        let mut xs: Vec<Vec<f32>> = ids
+            .iter()
+            .map(|&id| {
+                let mut e = vec![0f32; self.embed.dim];
+                self.embed.lookup_fp8(id, &mut e);
+                e
+            })
+            .collect();
+        for layer in &self.layers {
+            xs = layer.forward(&xs);
+        }
+        let n_out = self.head.w.rows;
+        xs.iter()
+            .map(|h| {
+                let mut y = vec![0f32; n_out];
+                self.head.forward(h, &mut y);
+                y
+            })
+            .collect()
+    }
+
+    /// Total weight storage in bytes with FloatSD8 packing (the paper's
+    /// memory-footprint argument) vs FP32.
+    pub fn weight_bytes(&self) -> (usize, usize) {
+        let mut sd8 = 0usize;
+        for l in &self.layers {
+            sd8 += l.fwd.wx.storage_bytes() + l.fwd.wh.storage_bytes();
+            if let Some(b) = &l.bwd {
+                sd8 += b.wx.storage_bytes() + b.wh.storage_bytes();
+            }
+        }
+        sd8 += self.head.w.storage_bytes();
+        (sd8, sd8 * 4)
+    }
+}
+
+/// Build the `tiny` LM topology (embed → 1×LSTM → dense) from a
+/// `.tensors` state written by aot.py / the coordinator.
+pub fn build_tiny_from_params(bag: &ParamBag) -> Result<QLstmStack> {
+    let (esh, emb) = bag.f32(&["['params']['emb']['emb']"])?;
+    let (vocab, dim) = (esh[0], esh[1]);
+    let (_, wx) = bag.f32(&["['params']['l1']['wx']"])?;
+    let (whs, wh) = bag.f32(&["['params']['l1']['wh']"])?;
+    let (_, b) = bag.f32(&["['params']['l1']['b']"])?;
+    let hidden = whs[0];
+    let (_, ow) = bag.f32(&["['params']['out']['w']"])?;
+    let (obs, ob) = bag.f32(&["['params']['out']['b']"])?;
+    Ok(QLstmStack {
+        embed: Embedding { vocab, dim, table: emb.to_vec() },
+        layers: vec![QLstmLayer {
+            fwd: QLstmCell::from_jax_layout(dim, hidden, &wx, &wh, &b),
+            bwd: None,
+        }],
+        head: Dense::from_jax_layout(hidden, obs[0], &ow, &ob),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn rand_stack(vocab: usize, dim: usize, hidden: usize, out: usize, seed: u64) -> QLstmStack {
+        let mut rng = SplitMix64::new(seed);
+        let table: Vec<f32> = (0..vocab * dim).map(|_| rng.normal() * 0.1).collect();
+        let wx: Vec<f32> = (0..dim * 4 * hidden).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hidden * 4 * hidden).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let ow: Vec<f32> = (0..hidden * out).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let ob: Vec<f32> = (0..out).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        QLstmStack {
+            embed: Embedding { vocab, dim, table },
+            layers: vec![QLstmLayer {
+                fwd: QLstmCell::from_jax_layout(dim, hidden, &wx, &wh, &b),
+                bwd: None,
+            }],
+            head: Dense::from_jax_layout(hidden, out, &ow, &ob),
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let stack = rand_stack(16, 4, 8, 16, 1);
+        let logits = stack.forward(&[1, 5, 3, 0, 15]);
+        assert_eq!(logits.len(), 5);
+        assert_eq!(logits[0].len(), 16);
+    }
+
+    #[test]
+    fn bidirectional_layer_concats() {
+        let mut rng = SplitMix64::new(3);
+        let d = 4;
+        let hdim = 6;
+        let mk = |rng: &mut SplitMix64| {
+            let wx: Vec<f32> = (0..d * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+            let wh: Vec<f32> = (0..hdim * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+            let b = vec![0.0; 4 * hdim];
+            QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b)
+        };
+        let layer = QLstmLayer { fwd: mk(&mut rng), bwd: Some(mk(&mut rng)) };
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..d).map(|_| crate::formats::round_f8(rng.uniform(-1.0, 1.0))).collect()).collect();
+        let out = layer.forward(&xs);
+        assert_eq!(out[0].len(), 12);
+        // perturbing the last input must not change fwd half at t=0
+        let mut xs2 = xs.clone();
+        xs2[4][0] = crate::formats::round_f8(xs[4][0] + 1.0);
+        let out2 = layer.forward(&xs2);
+        assert_eq!(out[0][..6], out2[0][..6], "fwd causal");
+        assert_ne!(out[0][6..], out2[0][6..], "bwd anticausal");
+    }
+
+    #[test]
+    fn weight_bytes_ratio_is_4x() {
+        let stack = rand_stack(16, 4, 8, 16, 2);
+        let (sd8, fp32) = stack.weight_bytes();
+        assert_eq!(fp32, 4 * sd8);
+    }
+
+    #[test]
+    fn embedding_output_on_fp8_grid() {
+        let stack = rand_stack(16, 4, 8, 16, 4);
+        let mut e = vec![0f32; 4];
+        stack.embed.lookup_fp8(3, &mut e);
+        for &v in &e {
+            assert_eq!(v, crate::formats::round_f8(v));
+        }
+    }
+}

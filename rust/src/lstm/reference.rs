@@ -1,0 +1,108 @@
+//! FP32 reference engine — the paper's baseline arithmetic, same API
+//! as the quantized engine (used by the ablation/throughput benches
+//! and as the numerical anchor for quantization-error measurements).
+
+/// Plain f32 LSTM cell with the same JAX weight layout as
+/// [`super::cell::QLstmCell`].
+pub struct F32LstmCell {
+    pub input_dim: usize,
+    pub hidden: usize,
+    /// row-major [4H][D] (transposed at construction like the Q cell)
+    pub wx: Vec<f32>,
+    /// row-major [4H][H]
+    pub wh: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl F32LstmCell {
+    pub fn from_jax_layout(
+        input_dim: usize,
+        hidden: usize,
+        wx_jax: &[f32],
+        wh_jax: &[f32],
+        bias: &[f32],
+    ) -> Self {
+        let transpose = |src: &[f32], rows: usize, cols: usize| {
+            let mut t = vec![0f32; src.len()];
+            for r in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r] = src[r * cols + c];
+                }
+            }
+            t
+        };
+        F32LstmCell {
+            input_dim,
+            hidden,
+            wx: transpose(wx_jax, input_dim, 4 * hidden),
+            wh: transpose(wh_jax, hidden, 4 * hidden),
+            bias: bias.to_vec(),
+        }
+    }
+
+    fn matvec(w: &[f32], rows: usize, cols: usize, x: &[f32], bias: &[f32], out: &mut [f32]) {
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            let mut acc = bias[r];
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            out[r] = acc;
+        }
+    }
+
+    pub fn step(&self, x: &[f32], h: &mut Vec<f32>, c: &mut Vec<f32>) {
+        let hd = self.hidden;
+        let mut zx = vec![0f32; 4 * hd];
+        let mut zh = vec![0f32; 4 * hd];
+        let zero = vec![0f32; 4 * hd];
+        Self::matvec(&self.wx, 4 * hd, self.input_dim, x, &self.bias, &mut zx);
+        Self::matvec(&self.wh, 4 * hd, hd, h, &zero, &mut zh);
+        let sigmoid = |v: f32| 1.0 / (1.0 + (-v).exp());
+        for j in 0..hd {
+            let f = sigmoid(zx[j] + zh[j]);
+            let i = sigmoid(zx[hd + j] + zh[hd + j]);
+            let o = sigmoid(zx[2 * hd + j] + zh[2 * hd + j]);
+            let g = (zx[3 * hd + j] + zh[3 * hd + j]).tanh();
+            c[j] = f * c[j] + i * g;
+            h[j] = o * c[j].tanh();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::cell::{CellScratch, QLstmCell};
+    use crate::rng::SplitMix64;
+
+    /// The quantized engine must track the FP32 reference closely on
+    /// well-conditioned weights — the paper's entire premise. This is a
+    /// sanity bound, not bit-exactness.
+    #[test]
+    fn quantized_tracks_reference() {
+        let (d, hd) = (8, 16);
+        let mut rng = SplitMix64::new(10);
+        let wx: Vec<f32> = (0..d * 4 * hd).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hd * 4 * hd).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * hd).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let qcell = QLstmCell::from_jax_layout(d, hd, &wx, &wh, &b);
+        let rcell = F32LstmCell::from_jax_layout(d, hd, &wx, &wh, &b);
+
+        let (mut qh, mut qc) = (vec![0f32; hd], vec![0f32; hd]);
+        let (mut rh, mut rc) = (vec![0f32; hd], vec![0f32; hd]);
+        let mut s = CellScratch::new(hd);
+        let mut max_err = 0f32;
+        for _ in 0..10 {
+            let x: Vec<f32> =
+                (0..d).map(|_| crate::formats::round_f8(rng.uniform(-1.0, 1.0))).collect();
+            qcell.step(&x, &mut qh, &mut qc, &mut s);
+            rcell.step(&x, &mut rh, &mut rc);
+            for j in 0..hd {
+                max_err = max_err.max((qh[j] - rh[j]).abs());
+            }
+        }
+        assert!(max_err < 0.25, "quantized diverges from fp32: {max_err}");
+        assert!(max_err > 0.0, "suspiciously exact — quantization inactive?");
+    }
+}

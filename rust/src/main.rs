@@ -1,0 +1,146 @@
+//! `floatsd-lstm` — CLI entrypoint of the L3 coordinator.
+//!
+//! ```text
+//! floatsd-lstm info                      # manifest + scheme tables (II/VI)
+//! floatsd-lstm formats                   # Table I + FloatSD8 grid facts
+//! floatsd-lstm hardware                  # Table VII cost breakdown
+//! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]
+//! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16
+//! ```
+
+use anyhow::{bail, Result};
+
+use floatsd_lstm::cli::Args;
+use floatsd_lstm::coordinator::{run_experiment, run_suite, ExperimentSpec};
+use floatsd_lstm::formats::FLOAT_SD8;
+use floatsd_lstm::hardware::cost;
+use floatsd_lstm::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => info(&args),
+        Some("formats") => formats(),
+        Some("hardware") => hardware(),
+        Some("train") => train(&args),
+        Some("suite") => suite(&args),
+        _ => {
+            eprintln!(
+                "usage: floatsd-lstm <info|formats|hardware|train|suite> [options]\n\
+                 see `rust/src/main.rs` docs for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.client.platform_name());
+    println!("tasks:");
+    for (name, t) in &rt.manifest.tasks {
+        println!(
+            "  {name:<6} batch={:<3} x{:?} vocab={} opt={} lr={} metric={}",
+            t.batch, t.x_shape, t.vocab, t.optimizer, t.lr, t.metric
+        );
+    }
+    println!("\nprecision schemes (paper Tables II/VI):");
+    println!(
+        "  {:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
+        "scheme", "w", "g", "a", "first", "last", "m", "s", "scale"
+    );
+    for (name, s) in &rt.manifest.schemes {
+        println!(
+            "  {name:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
+            s.weights, s.gradients, s.activations, s.first_layer_acts,
+            s.last_layer_acts, s.master, s.sigmoid, s.loss_scale
+        );
+    }
+    println!("\nartifacts: {}", rt.manifest.artifacts.len());
+    for name in rt.manifest.artifacts.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn formats() -> Result<()> {
+    println!("Table I — 3-digit SD group values:");
+    for v in floatsd_lstm::formats::sd::group_values(3) {
+        println!("  {v:+}");
+    }
+    println!(
+        "\nzero-digit probability K=3: {:.3} (CSD: {:.3})",
+        floatsd_lstm::formats::sd::zero_digit_probability(3),
+        floatsd_lstm::formats::sd::csd_zero_probability()
+    );
+    println!("\nFloatSD8: 3-bit exponent (bias 7) + 31-value mantissa codebook");
+    println!("mantissas: {:?}", FLOAT_SD8.mantissa_codebook());
+    println!("distinct values: {}", FLOAT_SD8.distinct_value_count());
+    println!("range: ±{} … ±{}", FLOAT_SD8.min_positive(), FLOAT_SD8.max_value());
+    let lut = floatsd_lstm::qmath::qsigmoid::SigmoidLut::build();
+    println!("quantized-σ LUT non-zero entries (paper: 42): {}", lut.nonzero_entries());
+    Ok(())
+}
+
+fn hardware() -> Result<()> {
+    let (fp32, fsd8, ar, pr) = cost::table7();
+    for r in [&fp32, &fsd8] {
+        println!(
+            "{} — {:.0} GE, {:.0} µm², {:.3} mW @400 MHz",
+            r.name,
+            r.total_ge(),
+            r.area_um2(),
+            r.power_mw()
+        );
+        for c in &r.components {
+            println!("   {:<28} {:>8.0} GE", c.name, c.ge);
+        }
+    }
+    println!("\nTable VII comparison (paper: 7.66x area, 5.75x power):");
+    println!("  area ratio  {ar:.2}x");
+    println!("  power ratio {pr:.2}x");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let artifact = args.require_opt("artifact")?.to_string();
+    let div = args.opt_usize("div", 1)?;
+    let mut rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
+    let mut spec = ExperimentSpec::standard(&rt, &artifact, div)?;
+    if let Some(e) = args.opt("epochs") {
+        spec.preset.epochs = e.parse()?;
+    }
+    let res = run_experiment(&mut rt, &spec)?;
+    println!(
+        "{}: final {} {:.3} (best {:.3}) in {:.1?} [{} steps, exec {:.1?}, transfer {:.1?}]",
+        res.artifact,
+        res.metric_name,
+        res.final_metric,
+        res.best_metric,
+        res.wall,
+        res.steps,
+        res.execute_time,
+        res.transfer_time
+    );
+    Ok(())
+}
+
+fn suite(args: &Args) -> Result<()> {
+    let task = args.opt_or("task", "lm");
+    let div = args.opt_usize("div", 1)?;
+    let mut rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
+    let names: Vec<String> =
+        ["fp32", "fsd8", "fsd8m16"].iter().map(|s| format!("{task}_{s}")).collect();
+    for n in &names {
+        if !rt.manifest.artifacts.contains_key(n) {
+            bail!("artifact {n} not found — run `make artifacts`");
+        }
+    }
+    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let results = run_suite(&mut rt, &refs, div)?;
+    println!("\n=== {task}: Table IV row ===");
+    for r in &results {
+        println!("  {:<16} {:>10.3} ({})", r.artifact, r.final_metric, r.metric_name);
+    }
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! The FloatSD8 × FP8 → FP16 multiply-accumulate (paper Fig. 8).
+//!
+//! Hardware semantics (five-stage pipeline, §V-A):
+//!
+//! 1. decode 4 FloatSD8 weights → ≤ 2 signed shifts each;
+//! 2. generate ≤ 8 partial products (each = FP8 mantissa shifted);
+//!    find the max exponent;
+//! 3. align all partial products + the previous FP16 accumulator to the
+//!    max exponent, add in a Wallace carry-save tree — **exactly**, no
+//!    intermediate rounding;
+//! 4./5. round + normalize the sum to FP16 once.
+//!
+//! [`mac_exact`] reproduces this: the product sum is computed exactly
+//! (every term is a dyadic rational with few significant bits — f64
+//! holds the whole sum of 8 products + accumulator without error) and
+//! rounded to the binary16 grid once per 4-pair group. [`mac_serial`]
+//! is the ablation alternative (round after every add) used by the
+//! accumulation-boundary bench.
+
+use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
+
+/// Accumulation discipline for a MAC group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MacMode {
+    /// Exact Wallace-tree sum, single FP16 rounding per group (hardware).
+    Exact,
+    /// FP16 rounding after every individual add (strawman ablation).
+    Serial,
+}
+
+/// Number of weight/input pairs one MAC consumes per cycle (Fig. 7:
+/// "four FP8 inputs, four FloatSD8 weights … same IO bandwidth as an
+/// FP32 MAC").
+pub const MAC_GROUP: usize = 4;
+
+/// One hardware MAC group: `round_f16(acc + Σ_i x_i · w_i)` with the
+/// sum computed exactly (Wallace tree semantics).
+///
+/// Exactness argument: each product is (fp8 value) × (±2^a ± 2^b) — a
+/// dyadic rational with ≤ 4 significant mantissa bits per partial
+/// product; 8 partial products + an FP16 accumulator span < 52 bits
+/// between the largest and smallest exponent in range, so an f64 sum is
+/// exact. (The full bit-level datapath is replicated in
+/// `hardware::mac_sim` and cross-checked against this function.)
+pub fn mac_exact(acc: Fp16, xs: &[Fp8], ws: &[FloatSd8]) -> Fp16 {
+    debug_assert_eq!(xs.len(), ws.len());
+    debug_assert!(xs.len() <= MAC_GROUP);
+    let mut sum = acc.to_f32() as f64;
+    for (&x, &w) in xs.iter().zip(ws) {
+        let xv = x.to_f32() as f64;
+        for (s, e) in FLOAT_SD8.partial_products(w).iter() {
+            sum += xv * s as f64 * 2f64.powi(e);
+        }
+    }
+    // single correctly-rounded f64→f16 (Fig. 8 rounds once; going
+    // through f32 would double-round)
+    Fp16::from_f64(sum)
+}
+
+/// Ablation: FP16 rounding after *every* add (no carry-save tree).
+pub fn mac_serial(acc: Fp16, xs: &[Fp8], ws: &[FloatSd8]) -> Fp16 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let mut acc = acc;
+    for (&x, &w) in xs.iter().zip(ws) {
+        let xv = x.to_f32();
+        for (s, e) in FLOAT_SD8.partial_products(w).iter() {
+            let pp = xv * s as f32 * 2f32.powi(e); // exact: power-of-2 scale
+            acc = acc.add(Fp16::from_f32(pp));
+        }
+    }
+    acc
+}
+
+/// Dispatch by mode.
+pub fn mac(mode: MacMode, acc: Fp16, xs: &[Fp8], ws: &[FloatSd8]) -> Fp16 {
+    match mode {
+        MacMode::Exact => mac_exact(acc, xs, ws),
+        MacMode::Serial => mac_serial(acc, xs, ws),
+    }
+}
+
+/// Full dot product driven in groups of [`MAC_GROUP`] (the PE inner
+/// loop, Fig. 7): `round_f16` once per group, accumulator carried
+/// between groups in FP16 — the paper's "FP16 additions suffice".
+pub fn dot_fsd8_fp8(bias: Fp16, xs: &[Fp8], ws: &[FloatSd8], mode: MacMode) -> Fp16 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let mut acc = bias;
+    for (xc, wc) in xs.chunks(MAC_GROUP).zip(ws.chunks(MAC_GROUP)) {
+        acc = mac(mode, acc, xc, wc);
+    }
+    acc
+}
+
+/// The count of partial products a weight vector generates — the
+/// paper's complexity metric (§IV-C: ≤ 2 per weight vs 23+ for FP32).
+pub fn partial_product_count(ws: &[FloatSd8]) -> usize {
+    ws.iter()
+        .map(|&w| FLOAT_SD8.partial_products(w).len as usize)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn rand_inputs(n: usize, seed: u64) -> (Vec<Fp8>, Vec<FloatSd8>) {
+        let mut rng = SplitMix64::new(seed);
+        let xs: Vec<Fp8> = (0..n)
+            .map(|_| Fp8::from_f32((rng.next_f32() - 0.5) * 8.0))
+            .collect();
+        let ws: Vec<FloatSd8> = (0..n)
+            .map(|_| FLOAT_SD8.encode((rng.next_f32() - 0.5) * 2.0))
+            .collect();
+        (xs, ws)
+    }
+
+    #[test]
+    fn single_pair_equals_plain_multiply() {
+        let (xs, ws) = rand_inputs(64, 1);
+        for (&x, &w) in xs.iter().zip(&ws) {
+            let got = mac_exact(Fp16::ZERO, &[x], &[w]);
+            let want = Fp16::from_f32(x.to_f32() * w.to_f32());
+            assert_eq!(got.0, want.0, "x={} w={}", x.to_f32(), w.to_f32());
+        }
+    }
+
+    #[test]
+    fn group_sum_exactness() {
+        // The exact mode must equal an f64 reference sum rounded once.
+        let (xs, ws) = rand_inputs(4, 2);
+        let acc = Fp16::from_f32(0.375);
+        let got = mac_exact(acc, &xs, &ws);
+        let want: f64 = acc.to_f32() as f64
+            + xs.iter()
+                .zip(&ws)
+                .map(|(x, w)| x.to_f32() as f64 * w.to_f32() as f64)
+                .sum::<f64>();
+        assert_eq!(got.0, Fp16::from_f32(want as f32).0);
+    }
+
+    #[test]
+    fn dot_is_group_serial() {
+        let (xs, ws) = rand_inputs(16, 3);
+        let mut acc = Fp16::ZERO;
+        for i in (0..16).step_by(4) {
+            acc = mac_exact(acc, &xs[i..i + 4], &ws[i..i + 4]);
+        }
+        assert_eq!(dot_fsd8_fp8(Fp16::ZERO, &xs, &ws, MacMode::Exact).0, acc.0);
+    }
+
+    #[test]
+    fn partial_products_at_most_two_per_weight() {
+        let (_, ws) = rand_inputs(256, 4);
+        assert!(partial_product_count(&ws) <= 2 * ws.len());
+    }
+
+    #[test]
+    fn serial_and_exact_agree_on_disjoint_magnitudes() {
+        // When all terms have the same sign & similar magnitude the two
+        // disciplines agree (no cancellation, no sticky-bit effects at
+        // f16 precision for tiny sums of 2-3-bit mantissas)... assert on
+        // a crafted case rather than in general.
+        let xs = vec![Fp8::from_f32(1.0); 4];
+        let ws = vec![FLOAT_SD8.encode(0.5); 4];
+        let a = mac_exact(Fp16::ZERO, &xs, &ws);
+        let b = mac_serial(Fp16::ZERO, &xs, &ws);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.to_f32(), 2.0);
+    }
+
+    #[test]
+    fn modes_can_differ_under_cancellation() {
+        // Documented difference: serial rounding loses low bits that the
+        // exact tree keeps. Find one case (it exists) to pin behaviour.
+        let mut found = false;
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..20_000 {
+            let xs: Vec<Fp8> = (0..4)
+                .map(|_| Fp8::from_f32((rng.next_f32() - 0.5) * 2048.0))
+                .collect();
+            let ws: Vec<FloatSd8> = (0..4)
+                .map(|_| FLOAT_SD8.encode((rng.next_f32() - 0.5) * 4.0))
+                .collect();
+            if mac_exact(Fp16::ZERO, &xs, &ws).0 != mac_serial(Fp16::ZERO, &xs, &ws).0 {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "expected at least one divergence in 20k trials");
+    }
+}

@@ -1,0 +1,21 @@
+//! Quantized arithmetic: the software mirror of the paper's MAC datapath.
+//!
+//! * [`qsigmoid`] — the two-region FloatSD8-quantized sigmoid (Eq. 7/8)
+//!   and its LUT realisation (§III-C: σ + quantization merged into one
+//!   lookup table; 42 non-zero entries for the non-positive branch);
+//! * [`mac`] — the FloatSD8×FP8→FP16 multiply-accumulate with the
+//!   hardware's *exact-sum-then-round* semantics (Fig. 8: partial
+//!   products aligned and added in a carry-save tree, rounded once);
+//! * [`vector`] — matvec/matmul built from the MAC (the rust inference
+//!   engine hot path), with a bit-identical fast path.
+//!
+//! Everything here is cross-validated three ways: against the jnp
+//! golden vectors, against the bit-level pipelined MAC simulator in
+//! [`crate::hardware`], and against the pure-f32 reference.
+
+pub mod mac;
+pub mod qsigmoid;
+pub mod vector;
+
+pub use mac::{mac_exact, mac_serial, MacMode};
+pub use qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8, SigmoidLut};

@@ -1,0 +1,177 @@
+//! Two-region FloatSD8-quantized sigmoid (paper §III-C, Eq. 7/8) and
+//! the merged σ+quantization LUT of the hardware (§III-C last ¶, §V-B).
+//!
+//! * Eq. (7): `y = Q(σ(x))` for `x ≤ 0` — one FloatSD8 number;
+//! * Eq. (8): `y = 1 − Q(σ(−x))` for `x > 0` — the hardware represents
+//!   this as the *pair* (+1, −Q(σ(−x))) and feeds both to the MAC; the
+//!   scalar value returned here is their sum.
+//!
+//! With exponent bias 7 the non-positive branch hits exactly **42
+//! non-zero grid points** (plus underflow to 0 for x ≲ −9.7), matching
+//! the paper's "only 42 possible values … the depth of the LUT can be
+//! reduced" — verified by [`SigmoidLut`]'s enumeration test.
+
+use crate::formats::{round_f8, FLOAT_SD8};
+
+/// `Q(σ(x))` / `1 − Q(σ(−x))` — the two-region quantized sigmoid.
+///
+/// Matches `python/compile/kernels/quant.sigmoid_floatsd8` bit-for-bit
+/// (pinned by the golden vectors).
+#[inline]
+pub fn sigmoid_sd8(x: f32) -> f32 {
+    // σ(−|x|) = 1 − σ(|x|), computed the same way as the jnp side to
+    // keep the last-ulp behaviour identical: s = 1/(1+e^{-|x|}).
+    let s = 1.0f32 / (1.0 + (-x.abs()).exp());
+    let q_neg = FLOAT_SD8.quantize(1.0 - s);
+    if x <= 0.0 {
+        q_neg
+    } else {
+        1.0 - q_neg
+    }
+}
+
+/// Fig. 4's strawman: single-region quantization over the whole range.
+/// Kept only for the Fig. 4 bench and the ablation study.
+#[inline]
+pub fn sigmoid_sd8_one_region(x: f32) -> f32 {
+    let s = 1.0f32 / (1.0 + (-x).exp());
+    FLOAT_SD8.quantize(s)
+}
+
+/// tanh with FP8-quantized output (cell-gate / cell-state path — the
+/// paper keeps tanh outputs on the activation grid, Table II).
+#[inline]
+pub fn tanh_fp8(x: f32) -> f32 {
+    round_f8(x.tanh())
+}
+
+/// The hardware LUT: thresholds on x mapping directly to quantized
+/// σ outputs for the non-positive branch (σ and Q merged, §III-C).
+///
+/// Entry `k` covers `x ∈ (threshold[k], threshold[k+1]]` and yields
+/// `value[k]`. The positive branch reuses the same table via Eq. (8).
+pub struct SigmoidLut {
+    /// Ascending input thresholds: x at which the output steps up.
+    pub thresholds: Vec<f32>,
+    /// Output value for each interval (len = thresholds.len() + 1).
+    pub values: Vec<f32>,
+}
+
+impl SigmoidLut {
+    /// Build the LUT by enumerating the FloatSD8 grid points in (0, ½]
+    /// and inverting σ at the quantization midpoints.
+    pub fn build() -> Self {
+        // grid points reachable as Q(σ(x)), x ≤ 0: all values in (0, 0.5]
+        let grid: Vec<f32> = FLOAT_SD8
+            .values()
+            .iter()
+            .copied()
+            .filter(|&v| v > 0.0 && v <= 0.5)
+            .collect();
+        // outputs: 0 (underflow), then grid ascending
+        let mut values = vec![0.0f32];
+        values.extend(&grid);
+        // threshold between value[k] and value[k+1]: x where σ(x) crosses
+        // the quantization midpoint m = (v_k + v_{k+1})/2 (ties go up,
+        // consistent with quantize's away-from-zero rule on positives):
+        // x = logit(m) = ln(m / (1−m)).
+        let mut thresholds = Vec::with_capacity(values.len() - 1);
+        for k in 0..values.len() - 1 {
+            let m = 0.5 * (values[k] + values[k + 1]);
+            thresholds.push((m / (1.0 - m)).ln());
+        }
+        SigmoidLut { thresholds, values }
+    }
+
+    /// Number of *non-zero* output entries (the paper's LUT depth).
+    pub fn nonzero_entries(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Evaluate via the LUT (non-positive branch + Eq. 8 reflection).
+    pub fn eval(&self, x: f32) -> f32 {
+        let xa = if x <= 0.0 { x } else { -x };
+        // binary search over thresholds: index of first threshold >= xa
+        let k = self.thresholds.partition_point(|&t| t < xa);
+        let v = self.values[k];
+        if x <= 0.0 {
+            v
+        } else {
+            1.0 - v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetry_eq7_eq8() {
+        for i in 0..2000 {
+            let x = (i as f32 - 1000.0) / 100.0;
+            let a = sigmoid_sd8(x);
+            let b = sigmoid_sd8(-x);
+            assert_eq!(a + b, 1.0, "q({x}) + q({}) != 1", -x);
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = -1.0f32;
+        for i in 0..4000 {
+            let x = (i as f32 - 2000.0) / 200.0;
+            let q = sigmoid_sd8(x);
+            assert!(q >= prev, "sigmoid_sd8 not monotone at {x}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn nonpositive_branch_on_grid() {
+        for i in 0..=1000 {
+            let x = -(i as f32) / 100.0;
+            let q = sigmoid_sd8(x);
+            assert!(
+                FLOAT_SD8.values().contains(&q),
+                "q({x}) = {q} not a FloatSD8 value"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_has_paper_42_nonzero_entries() {
+        let lut = SigmoidLut::build();
+        assert_eq!(lut.nonzero_entries(), 42, "paper §III-C: 42 values");
+    }
+
+    #[test]
+    fn lut_matches_direct_evaluation() {
+        let lut = SigmoidLut::build();
+        for i in 0..8000 {
+            let x = (i as f32 - 4000.0) / 250.0; // [-16, 16]
+            let direct = sigmoid_sd8(x);
+            let via_lut = lut.eval(x);
+            assert_eq!(
+                direct, via_lut,
+                "x={x}: direct {direct} vs lut {via_lut}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_behaviour() {
+        assert_eq!(sigmoid_sd8(-30.0), 0.0, "deep negative underflows to 0");
+        assert_eq!(sigmoid_sd8(30.0), 1.0, "deep positive saturates to 1");
+        assert_eq!(sigmoid_sd8(0.0), 0.5, "σ(0) = 0.5 is on the grid");
+    }
+
+    #[test]
+    fn tanh_fp8_on_grid() {
+        for i in 0..200 {
+            let x = (i as f32 - 100.0) / 10.0;
+            let t = tanh_fp8(x);
+            assert_eq!(t, round_f8(t), "tanh_fp8({x}) not on the FP8 grid");
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Vector/matrix kernels built on the quantized MAC — the rust
+//! inference engine's hot path.
+//!
+//! Two implementations with **identical numerics**:
+//!
+//! * [`matvec_mac`] — drives `mac::dot_fsd8_fp8` pair-by-pair; the
+//!   readable, obviously-hardware-faithful version;
+//! * [`matvec_fast`] — the optimized path: weights pre-decoded to f32
+//!   once per matrix, f64 group accumulation (exact, see mac.rs) with
+//!   one FP16 rounding per 4-group; no per-element encode/decode.
+//!
+//! `tests::fast_equals_mac` pins the two together; the engine and the
+//! benches use the fast path.
+
+use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
+
+use super::mac::{dot_fsd8_fp8, MacMode, MAC_GROUP};
+
+/// A weight matrix stored in encoded FloatSD8 form, row-major
+/// `[out][in]` (each output neuron's weights are contiguous — the
+/// PE's weight-stationary layout).
+pub struct QMatrix {
+    pub rows: usize, // outputs
+    pub cols: usize, // inputs
+    pub codes: Vec<FloatSd8>,
+    /// decoded f32 copy for the fast path (built once)
+    decoded: Vec<f32>,
+}
+
+impl QMatrix {
+    /// Quantize a row-major f32 matrix `[rows][cols]` into FloatSD8.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let codes: Vec<FloatSd8> = data.iter().map(|&v| FLOAT_SD8.encode(v)).collect();
+        let decoded = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
+        QMatrix { rows, cols, codes, decoded }
+    }
+
+    #[inline]
+    pub fn row_codes(&self, r: usize) -> &[FloatSd8] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_decoded(&self, r: usize) -> &[f32] {
+        &self.decoded[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Bytes of weight storage (8 bits/weight) — the paper's memory
+    /// footprint argument (§I, §III-E).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len()
+    }
+}
+
+/// y[r] = round chain of (bias[r] + Σ_c x[c]·W[r,c]) via the MAC.
+pub fn matvec_mac(w: &QMatrix, x: &[Fp8], bias: &[Fp16], mode: MacMode) -> Vec<Fp16> {
+    assert_eq!(x.len(), w.cols);
+    assert_eq!(bias.len(), w.rows);
+    (0..w.rows)
+        .map(|r| dot_fsd8_fp8(bias[r], x, w.row_codes(r), mode))
+        .collect()
+}
+
+/// Optimized path, numerically identical to
+/// `matvec_mac(.., MacMode::Exact)`:
+/// decoded weights, f64 exact group sums, one f16 round per group.
+pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), w.cols);
+    assert_eq!(bias.len(), w.rows);
+    assert_eq!(out.len(), w.rows);
+    for r in 0..w.rows {
+        let row = w.row_decoded(r);
+        let mut acc = bias[r]; // callers keep bias on the f16 grid
+        let mut c = 0;
+        while c + MAC_GROUP <= w.cols {
+            let g = x[c] as f64 * row[c] as f64
+                + x[c + 1] as f64 * row[c + 1] as f64
+                + x[c + 2] as f64 * row[c + 2] as f64
+                + x[c + 3] as f64 * row[c + 3] as f64;
+            acc = Fp16::from_f64(acc as f64 + g).to_f32();
+            c += MAC_GROUP;
+        }
+        if c < w.cols {
+            let mut g = 0f64;
+            for cc in c..w.cols {
+                g += x[cc] as f64 * row[cc] as f64;
+            }
+            acc = Fp16::from_f64(acc as f64 + g).to_f32();
+        }
+        out[r] = acc;
+    }
+}
+
+/// Batched fast matvec: `ys[b] = W · xs[b] + bias` for a whole batch
+/// (the PE's output-stationary batch loop, §V-A).
+pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), batch * w.cols);
+    assert_eq!(out.len(), batch * w.rows);
+    for b in 0..batch {
+        let x = &xs[b * w.cols..(b + 1) * w.cols];
+        let y = &mut out[b * w.rows..(b + 1) * w.rows];
+        matvec_fast(w, x, bias, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (QMatrix, Vec<f32>, Vec<f32>) {
+        let mut rng = SplitMix64::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w = QMatrix::from_f32(rows, cols, &data);
+        // x on the FP8 grid, bias on the f16 grid (architectural contract)
+        let x: Vec<f32> = (0..cols)
+            .map(|_| crate::formats::round_f8(rng.uniform(-4.0, 4.0)))
+            .collect();
+        let bias: Vec<f32> = (0..rows)
+            .map(|_| crate::formats::round_f16(rng.uniform(-0.5, 0.5)))
+            .collect();
+        (w, x, bias)
+    }
+
+    #[test]
+    fn fast_equals_mac() {
+        for &(r, c) in &[(3, 4), (8, 16), (5, 7), (16, 33), (1, 1)] {
+            let (w, x, bias) = setup(r, c, (r * 100 + c) as u64);
+            let x8: Vec<Fp8> = x.iter().map(|&v| Fp8::from_f32(v)).collect();
+            let b16: Vec<Fp16> = bias.iter().map(|&v| Fp16::from_f32(v)).collect();
+            let via_mac = matvec_mac(&w, &x8, &b16, MacMode::Exact);
+            let mut fast = vec![0f32; r];
+            matvec_fast(&w, &x, &bias, &mut fast);
+            for i in 0..r {
+                assert_eq!(
+                    via_mac[i].to_f32(),
+                    fast[i],
+                    "({r}x{c}) row {i}: mac={} fast={}",
+                    via_mac[i].to_f32(),
+                    fast[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_one_byte_per_weight() {
+        let (w, _, _) = setup(8, 8, 1);
+        assert_eq!(w.storage_bytes(), 64);
+    }
+
+    #[test]
+    fn matmul_fast_matches_per_row() {
+        let (w, _, bias) = setup(6, 12, 2);
+        let mut rng = SplitMix64::new(3);
+        let batch = 5;
+        let xs: Vec<f32> = (0..batch * 12)
+            .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
+            .collect();
+        let mut out = vec![0f32; batch * 6];
+        matmul_fast(&w, &xs, batch, &bias, &mut out);
+        for b in 0..batch {
+            let mut y = vec![0f32; 6];
+            matvec_fast(&w, &xs[b * 12..(b + 1) * 12], &bias, &mut y);
+            assert_eq!(&out[b * 6..(b + 1) * 6], y.as_slice());
+        }
+    }
+
+    #[test]
+    fn weights_land_on_sd8_grid() {
+        let (w, _, _) = setup(4, 4, 9);
+        for r in 0..4 {
+            for &v in w.row_decoded(r) {
+                assert!(FLOAT_SD8.values().contains(&v));
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! PJRT runtime: load the AOT artifacts (`*.hlo.txt`), compile them on
+//! the CPU PJRT client, and drive training/eval loops from rust — no
+//! python anywhere on this path.
+//!
+//! Interchange contract (see `python/compile/aot.py`):
+//!
+//! * train step inputs:  `state[0..n], x:i32, y:i32`
+//!   outputs: 1-tuple of `(state[0..n], loss_sum, metric_sum, count)`
+//! * eval step inputs:   same; outputs `(loss_sum, metric_sum, count)`
+//!
+//! State round-trips through host literals once per step (PJRT's tuple
+//! output buffers cannot be re-fed without decomposition — measured in
+//! EXPERIMENTS.md §Perf; batch-dominated, not the bottleneck at these
+//! model sizes).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactInfo, Manifest, TaskInfo};
+use crate::data::Batch;
+use crate::tensorfile;
+
+/// The shared PJRT client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Load + compile one HLO text file (cached by file name).
+    pub fn load_hlo(&mut self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {file}"))?;
+        eprintln!("[runtime] compiled {file} in {:.2?}", t0.elapsed());
+        let exe = Arc::new(exe);
+        self.cache.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load initial state tensors for a task.
+    pub fn load_init_state(&self, task: &TaskInfo) -> Result<Vec<xla::Literal>> {
+        let path = self.manifest.dir.join(&task.init_file);
+        let tensors = tensorfile::read_tensors(&path)?;
+        if tensors.len() != task.n_state {
+            bail!(
+                "init state has {} tensors, manifest says {}",
+                tensors.len(),
+                task.n_state
+            );
+        }
+        tensors.iter().map(literal_from_tensor).collect()
+    }
+}
+
+fn literal_from_tensor(t: &tensorfile::Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    match t.dtype {
+        tensorfile::DType::F32 => {
+            let v = t.as_f32()?;
+            let lit = if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&dims)?
+            };
+            Ok(lit)
+        }
+        tensorfile::DType::I32 => {
+            let v = t.as_i32()?;
+            let lit = if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&dims)?
+            };
+            Ok(lit)
+        }
+    }
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+/// Per-step metrics returned by the train step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss_sum: f32,
+    pub metric_sum: f32,
+    pub count: f32,
+}
+
+impl StepMetrics {
+    pub fn mean_loss(&self) -> f32 {
+        self.loss_sum / self.count.max(1.0)
+    }
+
+    pub fn accuracy(&self) -> f32 {
+        self.metric_sum / self.count.max(1.0)
+    }
+
+    pub fn perplexity(&self) -> f32 {
+        self.mean_loss().exp()
+    }
+
+    /// The task's headline metric by name.
+    pub fn named(&self, metric: &str) -> f32 {
+        match metric {
+            "accuracy" => self.accuracy() * 100.0,
+            _ => self.perplexity(),
+        }
+    }
+}
+
+/// A live training session over one artifact: owns the model/optimizer
+/// state and the compiled executables.
+pub struct TrainSession {
+    pub artifact: ArtifactInfo,
+    pub task: TaskInfo,
+    train_exe: Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: Arc<xla::PjRtLoadedExecutable>,
+    pub state: Vec<xla::Literal>,
+    pub steps_done: u64,
+    /// cumulative host<->device transfer time (perf accounting)
+    pub transfer_time: std::time::Duration,
+    /// cumulative execute time
+    pub execute_time: std::time::Duration,
+}
+
+impl TrainSession {
+    /// Create a session for `artifact_name`, loading the initial state.
+    pub fn new(rt: &mut Runtime, artifact_name: &str) -> Result<TrainSession> {
+        let artifact = rt.manifest.artifact(artifact_name)?.clone();
+        let task = rt.manifest.task(&artifact.task)?.clone();
+        let train_exe = rt.load_hlo(&artifact.train_hlo)?;
+        let eval_exe = rt.load_hlo(&artifact.eval_hlo)?;
+        let state = rt.load_init_state(&task)?;
+        Ok(TrainSession {
+            artifact,
+            task,
+            train_exe,
+            eval_exe,
+            state,
+            steps_done: 0,
+            transfer_time: Default::default(),
+            execute_time: Default::default(),
+        })
+    }
+
+    fn batch_shapes(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let x = literal_i32(&batch.x, &batch.x_shape)?;
+        let y = literal_i32(&batch.y, &batch.y_shape)?;
+        Ok((x, y))
+    }
+
+    /// One training step: feeds the state + batch, replaces the state
+    /// with the returned one, and reports the step metrics.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        let t0 = Instant::now();
+        let (x, y) = self.batch_shapes(batch)?;
+        let mut args: Vec<&xla::Literal> = self.state.iter().collect();
+        args.push(&x);
+        args.push(&y);
+        let t1 = Instant::now();
+        let result = self.train_exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let t2 = Instant::now();
+        let mut parts = out.to_tuple()?;
+        let n = self.task.n_state;
+        if parts.len() != n + 3 {
+            bail!("train step returned {} outputs, want {}", parts.len(), n + 3);
+        }
+        let count = scalar_f32(&parts.pop().unwrap())?;
+        let metric_sum = scalar_f32(&parts.pop().unwrap())?;
+        let loss_sum = scalar_f32(&parts.pop().unwrap())?;
+        self.state = parts;
+        self.steps_done += 1;
+        self.transfer_time += t1 - t0 + t2.elapsed();
+        self.execute_time += t2 - t1;
+        Ok(StepMetrics { loss_sum, metric_sum, count })
+    }
+
+    /// Evaluate over a set of batches (aggregated).
+    pub fn eval(&self, batches: &[Batch]) -> Result<StepMetrics> {
+        let mut agg = StepMetrics::default();
+        for b in batches {
+            let (x, y) = self.batch_shapes(b)?;
+            let mut args: Vec<&xla::Literal> = self.state.iter().collect();
+            args.push(&x);
+            args.push(&y);
+            let result = self.eval_exe.execute::<&xla::Literal>(&args)?;
+            let out = result[0][0].to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            if parts.len() != 3 {
+                bail!("eval step returned {} outputs, want 3", parts.len());
+            }
+            agg.loss_sum += scalar_f32(&parts[0])?;
+            agg.metric_sum += scalar_f32(&parts[1])?;
+            agg.count += scalar_f32(&parts[2])?;
+        }
+        Ok(agg)
+    }
+
+    /// Save the current state as a checkpoint (`.tensors`).
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut tensors = Vec::with_capacity(self.state.len());
+        for (i, lit) in self.state.iter().enumerate() {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let name = self
+                .task
+                .state_names
+                .get(i)
+                .cloned()
+                .unwrap_or_else(|| format!("state_{i}"));
+            let data = lit.to_vec::<f32>()?;
+            tensors.push(tensorfile::Tensor::from_f32(&name, &dims, &data));
+        }
+        tensorfile::write_tensors(path, &tensors)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,200 @@
+//! `.tensors` binary interchange (rust side of
+//! `python/compile/tensorio.py`) plus a minimal JSON value parser for
+//! `artifacts/manifest.json` (no serde in the offline vendor set).
+//!
+//! Format:
+//! ```text
+//! magic b"TSF1" | u32 n | n × { u16 name_len, name,
+//!                               u8 dtype (0=f32, 1=i32), u8 ndim,
+//!                               u32 dims[ndim], raw LE data }
+//! ```
+
+pub mod json;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"TSF1";
+
+/// Element type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A named dense tensor (C-order).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// raw little-endian bytes, len = product(shape) * 4
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(name: &str, shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.to_string(), dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(name: &str, shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.to_string(), dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 (zero-copy on little-endian hosts would need unsafe;
+    /// we decode — these files are small).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Read a `.tensors` file.
+pub fn read_tensors(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let n = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf8")?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let dtype = match hdr[0] {
+            0 => DType::F32,
+            1 => DType::I32,
+            d => bail!("{name}: unknown dtype {d}"),
+        };
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut data = vec![0u8; count * 4];
+        f.read_exact(&mut data)?;
+        out.push(Tensor { name, dtype, shape, data });
+    }
+    Ok(out)
+}
+
+/// Write a `.tensors` file (checkpoints, generated datasets).
+pub fn write_tensors(path: impl AsRef<Path>, tensors: &[Tensor]) -> Result<()> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let nb = t.name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[if t.dtype == DType::F32 { 0 } else { 1 }, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("fsd_tensors_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.tensors");
+        let tensors = vec![
+            Tensor::from_f32("a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::from_i32("b/x", &[4], &[-1, 0, 7, i32::MAX]),
+            Tensor::from_f32("scalar", &[], &[3.5]),
+            Tensor::from_f32("empty", &[0], &[]),
+        ];
+        write_tensors(&p, &tensors).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back.len(), 4);
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.dtype, b.dtype);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(back[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(back[1].as_i32().unwrap(), vec![-1, 0, 7, i32::MAX]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("fsd_tensors_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.tensors");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::from_f32("x", &[1], &[1.0]);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

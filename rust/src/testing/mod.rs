@@ -1,0 +1,103 @@
+//! proptest-lite: a tiny property-testing harness (no proptest crate
+//! offline). Deterministic generator streams + a fixed trial budget;
+//! on failure it reports the seed so the case replays exactly.
+//!
+//! ```
+//! use floatsd_lstm::testing::{property, Gen};
+//! property("abs is nonneg", 1000, |g: &mut Gen| {
+//!     let x = g.f32_range(-10.0, 10.0);
+//!     assert!(x.abs() >= 0.0, "x={x}");
+//! });
+//! ```
+
+use crate::rng::SplitMix64;
+
+/// Value generator handed to each property trial.
+pub struct Gen {
+    rng: SplitMix64,
+    /// seed of this trial (printed on failure)
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Log-uniform magnitude with random sign — good coverage of float
+    /// grids across binades.
+    pub fn f32_log(&mut self, min_exp: i32, max_exp: i32) -> f32 {
+        let e = self.rng.uniform(min_exp as f32, max_exp as f32);
+        let m = self.rng.uniform(1.0, 2.0);
+        let s = if self.rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        s * m * (e as f64).exp2() as f32
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.rng.next_below(n as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_range(lo, hi)).collect()
+    }
+}
+
+/// Run `trials` deterministic trials of `prop`. Panics (with the trial
+/// seed) on the first failing case. Override the base seed with
+/// `FSD_PROPTEST_SEED` to replay a reported failure.
+pub fn property<F: Fn(&mut Gen)>(name: &str, trials: u64, prop: F) {
+    let base: u64 = std::env::var("FSD_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF0A7_5D81);
+    for t in 0..trials {
+        let seed = base.wrapping_add(t.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: SplitMix64::new(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at trial {t} (replay with FSD_PROPTEST_SEED={seed} and trials=1)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_trials() {
+        let count = std::cell::Cell::new(0u64);
+        property("count", 50, |_g| {
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_reports_failures() {
+        property("fail", 10, |g| {
+            let x = g.f32_range(0.0, 1.0);
+            assert!(x < 0.0, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        property("bounds", 200, |g| {
+            let v = g.f32_range(-3.0, 5.0);
+            assert!((-3.0..=5.0).contains(&v));
+            let u = g.usize_below(17);
+            assert!(u < 17);
+            let l = g.f32_log(-10, 10).abs();
+            assert!(l == 0.0 || (2f32.powi(-11)..2f32.powi(12)).contains(&l));
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! End-to-end integration: rust coordinator → PJRT → AOT train step.
+//! Requires `make artifacts` (tests skip politely otherwise).
+
+use floatsd_lstm::coordinator::{run_experiment, ExperimentSpec};
+use floatsd_lstm::config::TrainPreset;
+use floatsd_lstm::data::make_source;
+use floatsd_lstm::lstm::model::{build_tiny_from_params, ParamBag};
+use floatsd_lstm::runtime::{Runtime, TrainSession};
+use floatsd_lstm::tensorfile::read_tensors;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn tiny_quantized_training_reduces_loss_via_pjrt() {
+    let Some(mut rt) = runtime() else { return };
+    let mut session = TrainSession::new(&mut rt, "tiny_fsd8m16").expect("session");
+    let task = session.task.clone();
+    let mut src = make_source(
+        &task.name, task.batch, &task.x_shape, &task.y_shape,
+        task.vocab, task.vocab_tgt, task.n_classes, 2, 99,
+    )
+    .unwrap();
+    // average the first and last 10 steps (single-batch losses are noisy)
+    let mut losses = Vec::new();
+    for _ in 0..450 {
+        let b = src.next_train();
+        let m = session.step(&b).expect("step");
+        let loss = m.mean_loss();
+        assert!(loss.is_finite(), "loss must stay finite");
+        losses.push(loss);
+    }
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail < head * 0.95,
+        "quantized training did not learn: {head} -> {tail}"
+    );
+}
+
+#[test]
+fn fp32_and_quantized_share_init_and_both_run() {
+    let Some(mut rt) = runtime() else { return };
+    let mut a = TrainSession::new(&mut rt, "tiny_fp32").expect("fp32");
+    let mut b = TrainSession::new(&mut rt, "tiny_fsd8m16").expect("fsd8m16");
+    let mut src = make_source("tiny", 8, &[8], &[8], 64, 0, 0, 1, 7).unwrap();
+    let batch = src.next_train();
+    let ma = a.step(&batch).unwrap();
+    let mb = b.step(&batch).unwrap();
+    // same init, same data: losses start in the same neighbourhood but
+    // are NOT identical (quantization is active)
+    assert!((ma.mean_loss() - mb.mean_loss()).abs() < 0.5);
+    assert_ne!(ma.loss_sum.to_bits(), mb.loss_sum.to_bits());
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let Some(mut rt) = runtime() else { return };
+    let session = TrainSession::new(&mut rt, "tiny_fp32").expect("session");
+    let src = make_source("tiny", 8, &[8], &[8], 64, 0, 0, 3, 5).unwrap();
+    let e1 = session.eval(src.eval_set()).unwrap();
+    let e2 = session.eval(src.eval_set()).unwrap();
+    assert_eq!(e1.loss_sum.to_bits(), e2.loss_sum.to_bits());
+    assert!(e1.count > 0.0);
+}
+
+#[test]
+fn checkpoint_round_trip_and_engine_load() {
+    let Some(mut rt) = runtime() else { return };
+    let session = TrainSession::new(&mut rt, "tiny_fsd8m16").expect("session");
+    let dir = std::env::temp_dir().join("fsd_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.ckpt.tensors");
+    session.save_checkpoint(&path).expect("save");
+
+    // the rust inference engine can consume the same state file
+    let bag = ParamBag::from_tensors(read_tensors(&path).unwrap());
+    let stack = build_tiny_from_params(&bag).expect("assemble engine");
+    let logits = stack.forward(&[1, 2, 3, 4]);
+    assert_eq!(logits.len(), 4);
+    assert_eq!(logits[0].len(), 64);
+    assert!(logits.iter().flatten().all(|v| v.is_finite()));
+}
+
+#[test]
+fn experiment_runner_produces_monotone_epochs_and_logs() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = ExperimentSpec {
+        artifact: "tiny_fp32".into(),
+        preset: TrainPreset { epochs: 2, steps_per_epoch: 5, eval_batches: 2 },
+        data_seed: 11,
+        log: true,
+    };
+    let res = run_experiment(&mut rt, &spec).expect("experiment");
+    assert_eq!(res.curve.len(), 2);
+    assert_eq!(res.steps, 10);
+    let csv = floatsd_lstm::benchlib::results_dir().join("curves/tiny_fp32.csv");
+    assert!(csv.exists(), "curve CSV missing");
+}
+
+#[test]
+fn engine_matches_pjrt_eval_loss_roughly() {
+    // Cross-validation of the rust engine against the AOT eval graph on
+    // the *same* weights: the engine is hardware-disciplined while the
+    // L2 graph models at the dot boundary, so we compare the resulting
+    // mean loss within a coarse tolerance (they share grids everywhere
+    // else). This catches layout/transpose mistakes immediately.
+    let Some(mut rt) = runtime() else { return };
+    let session = TrainSession::new(&mut rt, "tiny_fsd8m16").expect("session");
+    let src = make_source("tiny", 8, &[8], &[8], 64, 0, 0, 1, 13).unwrap();
+    let batch = &src.eval_set()[0];
+    let pjrt = session.eval(std::slice::from_ref(batch)).unwrap();
+
+    let dir = std::env::temp_dir().join("fsd_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cross.tensors");
+    session.save_checkpoint(&path).unwrap();
+    let bag = ParamBag::from_tensors(read_tensors(&path).unwrap());
+    let stack = build_tiny_from_params(&bag).unwrap();
+
+    let mut loss_sum = 0f64;
+    let mut count = 0f64;
+    for b in 0..8 {
+        let ids: Vec<usize> = batch.x[b * 8..(b + 1) * 8].iter().map(|&t| t as usize).collect();
+        let logits = stack.forward(&ids);
+        for (t, lg) in logits.iter().enumerate() {
+            let y = batch.y[b * 8 + t] as usize;
+            let mx = lg.iter().cloned().fold(f32::MIN, f32::max);
+            let lse: f32 = lg.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            loss_sum += (lse - lg[y]) as f64;
+            count += 1.0;
+        }
+    }
+    let engine_loss = (loss_sum / count) as f32;
+    let pjrt_loss = pjrt.mean_loss();
+    assert!(
+        (engine_loss - pjrt_loss).abs() < 0.15 * pjrt_loss.max(1.0),
+        "engine {engine_loss} vs pjrt {pjrt_loss}"
+    );
+}

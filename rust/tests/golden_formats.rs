@@ -1,0 +1,131 @@
+//! Golden-vector pinning: the jnp quantizers (L1/L2 semantics) must be
+//! bit-identical to the rust `formats::` implementations. Produced by
+//! `python -m compile.aot` (requires `make artifacts` — tests skip with
+//! a note if the artifacts are absent).
+
+use floatsd_lstm::formats::{round_f16, round_f8, round_sd8, FLOAT_SD8};
+use floatsd_lstm::qmath::qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8};
+use floatsd_lstm::tensorfile::read_tensors;
+
+fn golden() -> Option<std::collections::HashMap<String, (Vec<usize>, Vec<f32>)>> {
+    let path = std::path::Path::new("artifacts/golden/formats.tensors");
+    if !path.exists() {
+        eprintln!("SKIP: {path:?} missing (run `make artifacts`)");
+        return None;
+    }
+    let tensors = read_tensors(path).expect("read golden");
+    Some(
+        tensors
+            .into_iter()
+            .map(|t| {
+                let data = t.as_f32().expect("golden tensors are f32");
+                (t.name, (t.shape, data))
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn sd8_grid_matches_python() {
+    let Some(g) = golden() else { return };
+    let (_, grid) = &g["sd8_grid"];
+    assert_eq!(grid.len(), FLOAT_SD8.values().len());
+    for (a, b) in grid.iter().zip(FLOAT_SD8.values()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn elementwise_quantizers_bit_exact() {
+    let Some(g) = golden() else { return };
+    let (_, xs) = &g["x"];
+    let checks: [(&str, fn(f32) -> f32); 4] = [
+        ("fp8", round_f8),
+        ("fp16", round_f16),
+        ("sd8", round_sd8),
+        ("sig2", sigmoid_sd8),
+    ];
+    for (name, f) in checks {
+        let (_, want) = &g[name];
+        let mut mismatches = 0;
+        for (i, (&x, &w)) in xs.iter().zip(want).enumerate() {
+            let got = f(x);
+            if got.to_bits() != w.to_bits() {
+                // -0.0 vs 0.0 is an acceptable representation difference
+                if got == 0.0 && w == 0.0 {
+                    continue;
+                }
+                mismatches += 1;
+                if mismatches < 5 {
+                    eprintln!("{name}[{i}] x={x}: rust {got} vs jnp {w}");
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "{name}: {mismatches} mismatches");
+    }
+}
+
+#[test]
+fn one_region_sigmoid_matches() {
+    let Some(g) = golden() else { return };
+    let (_, xs) = &g["x"];
+    let (_, want) = &g["sig1"];
+    for (&x, &w) in xs.iter().zip(want) {
+        let got = sigmoid_sd8_one_region(x);
+        assert!(
+            got.to_bits() == w.to_bits() || (got == 0.0 && w == 0.0),
+            "x={x}: rust {got} vs jnp {w}"
+        );
+    }
+}
+
+#[test]
+fn lstm_gates_match_python_reference() {
+    let Some(g) = golden() else { return };
+    let (zf, zi, zo, zg, c) = (
+        &g["g_zf"].1, &g["g_zi"].1, &g["g_zo"].1, &g["g_zg"].1, &g["g_c"].1,
+    );
+    let (want_c, want_h) = (&g["g_c_out"].1, &g["g_h_out"].1);
+    for i in 0..zf.len() {
+        // mirror ref.ref_lstm_gates exactly (c rounded to fp16 at entry,
+        // f32 product-sum, fp16 round)
+        let cp = round_f16(c[i]);
+        let f = sigmoid_sd8(zf[i]);
+        let ii = sigmoid_sd8(zi[i]);
+        let o = sigmoid_sd8(zo[i]);
+        let gg = round_f8(zg[i].tanh());
+        let c_new = round_f16(f * cp + ii * gg);
+        let h_new = round_f8(o * tanh_fp8(c_new));
+        assert_eq!(c_new.to_bits(), want_c[i].to_bits(), "c[{i}]");
+        assert_eq!(h_new.to_bits(), want_h[i].to_bits(), "h[{i}]");
+    }
+}
+
+#[test]
+fn qmatmul_close_to_python() {
+    // jnp accumulates the dot in f32 with backend-defined order; the
+    // rust engine uses the hardware's exact-group discipline, so we
+    // allow ≤ 1 fp16 ulp (DESIGN.md §6 fidelity note).
+    let Some(g) = golden() else { return };
+    let (xsh, x) = &g["mm_x"];
+    let (wsh, w) = &g["mm_w"];
+    let (_, want) = &g["mm_y"];
+    let (m, k, n) = (xsh[0], xsh[1], wsh[1]);
+
+    // model-mirror: f64 exact dot of quantized operands, single f16 round
+    let mut worst = 0i32;
+    for r in 0..m {
+        for cn in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += round_f8(x[r * k + kk]) as f64 * round_sd8(w[kk * n + cn]) as f64;
+            }
+            let got = floatsd_lstm::formats::Fp16::from_f64(acc);
+            let wv = floatsd_lstm::formats::Fp16::from_f32(want[r * n + cn]);
+            let d = (got.0 as i32 - wv.0 as i32).abs();
+            worst = worst.max(d);
+            assert!(d <= 1, "({r},{cn}): rust {} vs jnp {} ({d} ulp)", got.to_f32(), wv.to_f32());
+        }
+    }
+    eprintln!("qmatmul worst fp16 ulp distance: {worst}");
+}

@@ -1,0 +1,131 @@
+//! Property tests (proptest-lite) over the numeric formats and the
+//! quantized math — invariants the whole stack relies on.
+
+use floatsd_lstm::formats::{round_f16, round_f8, round_sd8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
+use floatsd_lstm::qmath::mac::{mac_exact, MAC_GROUP};
+use floatsd_lstm::qmath::qsigmoid::sigmoid_sd8;
+use floatsd_lstm::testing::{property, Gen};
+
+#[test]
+fn quantizers_are_idempotent() {
+    property("idempotence", 3000, |g: &mut Gen| {
+        let x = g.f32_log(-30, 20);
+        for (name, q) in [("sd8", round_sd8 as fn(f32) -> f32), ("fp8", round_f8), ("fp16", round_f16)] {
+            let once = q(x);
+            assert_eq!(q(once).to_bits(), once.to_bits(), "{name}({x})");
+        }
+    });
+}
+
+#[test]
+fn quantizers_are_monotone() {
+    property("monotonicity", 3000, |g: &mut Gen| {
+        let a = g.f32_range(-10.0, 10.0);
+        let b = g.f32_range(-10.0, 10.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(round_sd8(lo) <= round_sd8(hi), "sd8 order at {lo},{hi}");
+        assert!(round_f8(lo) <= round_f8(hi), "fp8 order at {lo},{hi}");
+        assert!(round_f16(lo) <= round_f16(hi), "fp16 order at {lo},{hi}");
+    });
+}
+
+#[test]
+fn quantizers_are_odd_functions() {
+    property("symmetry", 3000, |g: &mut Gen| {
+        let x = g.f32_log(-20, 18);
+        assert_eq!(round_sd8(-x), -round_sd8(x));
+        assert_eq!(round_f8(-x), -round_f8(x));
+    });
+}
+
+#[test]
+fn sd8_encode_decode_identity_on_grid() {
+    property("encode∘decode", 2000, |g: &mut Gen| {
+        let x = g.f32_range(-5.0, 5.0);
+        let q = round_sd8(x);
+        let code = FLOAT_SD8.encode(q);
+        assert_eq!(FLOAT_SD8.decode(code), q);
+    });
+}
+
+#[test]
+fn sd8_error_bounded_by_local_gap() {
+    property("nearest", 2000, |g: &mut Gen| {
+        let x = g.f32_range(-4.5, 4.5);
+        let q = round_sd8(x);
+        let vals = FLOAT_SD8.values();
+        let best = vals.iter().map(|v| (x - v).abs()).fold(f32::INFINITY, f32::min);
+        assert!((x - q).abs() <= best + best * 1e-6, "x={x} q={q} best={best}");
+    });
+}
+
+#[test]
+fn sigmoid_quantized_complementarity() {
+    property("Eq7/8 complement", 2000, |g: &mut Gen| {
+        let x = g.f32_range(-12.0, 12.0);
+        assert_eq!(sigmoid_sd8(x) + sigmoid_sd8(-x), 1.0, "x={x}");
+    });
+}
+
+#[test]
+fn mac_exact_commutes_with_pair_order() {
+    property("MAC permutation invariance", 1000, |g: &mut Gen| {
+        let n = 1 + g.usize_below(MAC_GROUP);
+        let xs: Vec<Fp8> = (0..n).map(|_| Fp8::from_f32(g.f32_range(-64.0, 64.0))).collect();
+        let ws: Vec<FloatSd8> =
+            (0..n).map(|_| FLOAT_SD8.encode(g.f32_range(-4.5, 4.5))).collect();
+        let acc = Fp16::from_f32(g.f32_range(-8.0, 8.0));
+        let fwd = mac_exact(acc, &xs, &ws);
+        let mut xr = xs.clone();
+        let mut wr = ws.clone();
+        xr.reverse();
+        wr.reverse();
+        let rev = mac_exact(acc, &xr, &wr);
+        // the Wallace tree is a sum — order cannot matter
+        assert_eq!(fwd.0, rev.0);
+    });
+}
+
+#[test]
+fn fp16_from_f64_is_correctly_rounded() {
+    property("from_f64 == nearest", 4000, |g: &mut Gen| {
+        let x = g.f32_log(-20, 14) as f64 * (1.0 + g.f32_range(-1e-4, 1e-4) as f64);
+        let got = Fp16::from_f64(x);
+        // reference: scan the two bracketing f16 codes around from_f32
+        let approx = Fp16::from_f32(x as f32);
+        let mut best = approx;
+        let mut bestd = (best.to_f32() as f64 - x).abs();
+        for delta in [-2i32, -1, 1, 2] {
+            let code = (approx.0 as i32 + delta).clamp(0, u16::MAX as i32) as u16;
+            let cand = Fp16::from_bits(code);
+            if cand.is_nan() || cand.is_infinite() {
+                continue;
+            }
+            if (cand.to_f32() >= 0.0) != (x >= 0.0) {
+                continue;
+            }
+            let d = (cand.to_f32() as f64 - x).abs();
+            if d < bestd {
+                best = cand;
+                bestd = d;
+            }
+        }
+        let gotd = (got.to_f32() as f64 - x).abs();
+        assert!(
+            gotd <= bestd + f64::EPSILON,
+            "x={x}: from_f64 gave {} (d={gotd}), nearest is {} (d={bestd})",
+            got.to_f32(),
+            best.to_f32()
+        );
+    });
+}
+
+#[test]
+fn fp8_saturates_never_overflows() {
+    property("fp8 saturation", 2000, |g: &mut Gen| {
+        let x = g.f32_log(-5, 38);
+        let q = round_f8(x);
+        assert!(q.abs() <= 114688.0, "fp8({x}) = {q} exceeds max");
+        assert!(q.is_finite());
+    });
+}
