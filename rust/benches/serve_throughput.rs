@@ -1,0 +1,101 @@
+//! Serving throughput: batched `step_batch` tokens/s vs the unbatched
+//! per-sequence engine, across micro-batch sizes, plus the full
+//! scheduler/worker server end-to-end. Writes
+//! `results/serve_throughput.csv` (batch, tokens_per_s, speedup).
+//!
+//! The win mechanism: the weight-stationary `matmul_fast` streams each
+//! decoded weight row once per micro-batch instead of once per stream,
+//! and the flat `StackScratch` removes the sequential path's per-token
+//! `Vec` allocations.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use floatsd_lstm::benchlib::{bench, black_box, results_dir, Csv};
+use floatsd_lstm::lstm::synthetic_stack;
+use floatsd_lstm::rng::SplitMix64;
+use floatsd_lstm::serve::demo::drive_load;
+use floatsd_lstm::serve::{ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let (vocab, dim, hidden, layers) = (256usize, 64usize, 192usize, 2usize);
+    let seq_len = 32usize;
+    let stack = synthetic_stack(vocab, dim, hidden, layers, vocab, 20200711);
+    println!(
+        "model: vocab={vocab} dim={dim} hidden={hidden}x{layers} | seq_len={seq_len}\n"
+    );
+
+    let mut rng = SplitMix64::new(42);
+    let mut csv = Csv::new(results_dir().join("serve_throughput.csv"), "batch,tokens_per_s,speedup");
+
+    // ---- baseline: the unbatched per-sequence engine path ------------
+    let seqs: Vec<Vec<usize>> = (0..8)
+        .map(|_| (0..seq_len).map(|_| rng.next_below(vocab as u64) as usize).collect())
+        .collect();
+    let mut i = 0;
+    let base = bench("unbatched QLstmStack::forward (1 stream)", || {
+        black_box(stack.forward(&seqs[i % seqs.len()]));
+        i += 1;
+    });
+    let base_tps = base.throughput(seq_len);
+    println!("{base}");
+    println!("  -> {base_tps:.0} tokens/s (baseline)\n");
+    csv.rowf(&[1.0, base_tps, 1.0]);
+
+    // ---- batched kernel path across micro-batch sizes ----------------
+    let mut batched8_beats_baseline = None;
+    for &batch in &[2usize, 4, 8, 16, 32] {
+        // ids[t] = the token every stream feeds at step t
+        let ids: Vec<Vec<usize>> = (0..seq_len)
+            .map(|_| (0..batch).map(|_| rng.next_below(vocab as u64) as usize).collect())
+            .collect();
+        let mut scratch = stack.scratch(batch);
+        let stats = bench(&format!("batched step_batch (B={batch})"), || {
+            scratch.reset_states();
+            for ids_t in &ids {
+                stack.step_batch(ids_t, &mut scratch);
+            }
+            black_box(&scratch.logits);
+        });
+        let tps = stats.throughput(batch * seq_len);
+        let speedup = tps / base_tps;
+        println!("{stats}");
+        println!("  -> {tps:.0} tokens/s ({speedup:.2}x vs unbatched)\n");
+        csv.rowf(&[batch as f64, tps, speedup]);
+        if batch == 8 {
+            batched8_beats_baseline = Some(speedup > 1.0);
+        }
+    }
+
+    // ---- end-to-end: scheduler + worker pool + session store ----------
+    let shared = Arc::new(stack);
+    for &(workers, max_batch) in &[(1usize, 16usize), (4, 16)] {
+        let server = Server::start(
+            shared.clone(),
+            ServeConfig { workers, max_batch, batch_window: Duration::from_micros(200) },
+        );
+        let t0 = std::time::Instant::now();
+        let streamed = drive_load(&server, &shared, 64, 64, 4);
+        let wall = t0.elapsed();
+        let agg = server.stats();
+        println!(
+            "server end-to-end ({workers} workers, max-batch {max_batch}): \
+             {:.0} tokens/s | occupancy {:.2} | latency {}",
+            streamed as f64 / wall.as_secs_f64(),
+            agg.mean_occupancy,
+            agg.latency
+        );
+        server.shutdown();
+    }
+
+    let path = csv.finish()?;
+    println!("\nwrote {}", path.display());
+    match batched8_beats_baseline {
+        Some(true) => println!("OK: batched tokens/s exceeds unbatched baseline at batch >= 8"),
+        Some(false) => println!("WARN: batch=8 did not beat the unbatched baseline on this host"),
+        None => {}
+    }
+    Ok(())
+}

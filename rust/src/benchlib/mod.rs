@@ -70,16 +70,59 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
         }
         samples.push(t.elapsed() / batch as u32);
     }
-    samples.sort();
-    let n = samples.len();
-    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let p = Percentiles::of(&mut samples);
     BenchStats {
         name: name.to_string(),
         iters: sample_batches * batch,
-        mean,
-        median: samples[n / 2],
-        p99: samples[(n * 99 / 100).min(n - 1)],
-        min: samples[0],
+        mean: p.mean,
+        median: p.p50,
+        p99: p.p99,
+        min: p.min,
+    }
+}
+
+/// Percentile summary over raw duration samples — the serving engine's
+/// latency statistics (p50/p99 per shard and aggregated), reusing the
+/// same reporting conventions as [`BenchStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Percentiles {
+    pub n: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Percentiles {
+    /// Summarize a sample set (sorts in place; empty input → zeros).
+    /// Single source of truth for the percentile-index convention —
+    /// both [`bench`] and the serving stats go through here.
+    pub fn of(samples: &mut [Duration]) -> Percentiles {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        Percentiles {
+            n,
+            mean,
+            p50: samples[n / 2],
+            p99: samples[(n * 99 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+impl std::fmt::Display for Percentiles {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:.3?}, p50 {:.3?}, p99 {:.3?}, max {:.3?} (n={})",
+            self.mean, self.p50, self.p99, self.max, self.n
+        )
     }
 }
 
@@ -141,6 +184,20 @@ mod tests {
         assert!(s.iters >= 10);
         assert!(s.mean.as_nanos() > 0);
         assert!(s.min <= s.median && s.median <= s.p99);
+    }
+
+    #[test]
+    fn percentiles_ordering_and_edges() {
+        assert_eq!(Percentiles::of(&mut []).n, 0);
+        let mut one = vec![Duration::from_micros(5)];
+        let p = Percentiles::of(&mut one);
+        assert_eq!(p.p50, p.p99);
+        assert_eq!(p.max, Duration::from_micros(5));
+        let mut many: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let p = Percentiles::of(&mut many);
+        assert!(p.p50 <= p.p99 && p.p99 <= p.max);
+        assert_eq!(p.max, Duration::from_micros(100));
+        assert_eq!(p.n, 100);
     }
 
     #[test]

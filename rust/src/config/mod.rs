@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::tensorfile::json::Json;
 
@@ -114,6 +114,17 @@ impl Manifest {
                         lr: jnum(t, "lr"),
                         metric: jstr(t, "metric"),
                     },
+                );
+            }
+        }
+        // fail fast on metric typos — `StepMetrics::named` panics on an
+        // unknown name, which would otherwise surface only after a full
+        // training run, at first eval
+        for (name, t) in &tasks {
+            if t.metric != "accuracy" && t.metric != "perplexity" {
+                bail!(
+                    "task {name}: unknown metric {:?} (expected \"accuracy\" or \"perplexity\")",
+                    t.metric
                 );
             }
         }

@@ -21,13 +21,24 @@
 //! Python never runs at inference/training-loop time: `make artifacts`
 //! runs once, then the rust binary is self-contained.
 //!
+//! On top of the inference engine sits [`serve`]: a batched,
+//! multi-threaded serving core (per-client session state, dynamic
+//! micro-batching, a sharded worker pool) behind the
+//! `floatsd-lstm serve` subcommand.
+//!
+//! The PJRT-dependent layers ([`runtime`], [`coordinator`], the
+//! train/suite CLI paths) are gated behind the default-off `pjrt`
+//! cargo feature so the crate builds and tests fully offline.
+//!
 //! See `DESIGN.md` for the experiment index (every table and figure of
-//! the paper mapped to a module and a bench target) and `EXPERIMENTS.md`
-//! for measured results.
+//! the paper mapped to a module and a bench target) and for the serve
+//! subsystem's architecture and batching contract; `EXPERIMENTS.md`
+//! holds measured results.
 
 pub mod benchlib;
 pub mod cli;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
 pub mod formats;
@@ -35,7 +46,9 @@ pub mod hardware;
 pub mod lstm;
 pub mod qmath;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tensorfile;
 pub mod testing;
 

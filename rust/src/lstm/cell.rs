@@ -14,7 +14,7 @@
 
 use crate::formats::{round_f16, round_f8};
 use crate::qmath::qsigmoid::{sigmoid_sd8, tanh_fp8};
-use crate::qmath::vector::{matvec_fast, QMatrix};
+use crate::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
 
 /// Gate packing order within the fused weight matrices (must match
 /// `python/compile/lstm.py`: f, i, o, g).
@@ -37,11 +37,45 @@ pub struct QLstmCell {
 pub struct CellScratch {
     zx: Vec<f32>,
     zh: Vec<f32>,
+    zero_bias: Vec<f32>,
 }
 
 impl CellScratch {
     pub fn new(hidden: usize) -> Self {
-        CellScratch { zx: vec![0.0; 4 * hidden], zh: vec![0.0; 4 * hidden] }
+        CellScratch {
+            zx: vec![0.0; 4 * hidden],
+            zh: vec![0.0; 4 * hidden],
+            zero_bias: vec![0.0; 4 * hidden],
+        }
+    }
+}
+
+/// Flat scratch for the batched step: pre-activations for up to
+/// `max_batch` streams, reused across time steps — the serving hot
+/// loop allocates nothing per token.
+pub struct BatchScratch {
+    hidden: usize,
+    zx: Vec<f32>,
+    zh: Vec<f32>,
+    zero_bias: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new(hidden: usize, max_batch: usize) -> Self {
+        BatchScratch {
+            hidden,
+            zx: vec![0.0; max_batch * 4 * hidden],
+            zh: vec![0.0; max_batch * 4 * hidden],
+            zero_bias: vec![0.0; 4 * hidden],
+        }
+    }
+
+    fn ensure(&mut self, batch: usize) {
+        let need = batch * 4 * self.hidden;
+        if self.zx.len() < need {
+            self.zx.resize(need, 0.0);
+            self.zh.resize(need, 0.0);
+        }
     }
 }
 
@@ -95,19 +129,63 @@ impl QLstmCell {
         debug_assert_eq!(h.len(), hdim);
 
         // z = round_chain(wx·x) + round_chain(wh·h) + b   (Eq. 1-4 fused)
-        let zero_bias = vec![0.0f32; 4 * hdim];
         matvec_fast(&self.wx, x, &self.bias, &mut scratch.zx);
-        matvec_fast(&self.wh, h, &zero_bias, &mut scratch.zh);
+        matvec_fast(&self.wh, h, &scratch.zero_bias, &mut scratch.zh);
 
+        self.gates_inplace(&scratch.zx, &scratch.zh, h, c);
+    }
+
+    /// One time step for `batch` independent streams at once, all
+    /// buffers flat: `xs [B*D]`, `hs`/`cs [B*H]` (stream-major). The
+    /// matmuls go through the weight-stationary
+    /// [`matmul_fast`](crate::qmath::vector::matmul_fast) so each
+    /// decoded weight row is streamed once per batch; the per-unit gate
+    /// math is the *same code* as [`Self::step`] — outputs are
+    /// bit-identical to `batch` independent `step` calls.
+    pub fn step_batch(
+        &self,
+        xs: &[f32],
+        hs: &mut [f32],
+        cs: &mut [f32],
+        batch: usize,
+        scratch: &mut BatchScratch,
+    ) {
+        let hdim = self.hidden;
+        assert_eq!(scratch.hidden, hdim, "scratch built for a different hidden size");
+        assert_eq!(xs.len(), batch * self.input_dim);
+        assert_eq!(hs.len(), batch * hdim);
+        assert_eq!(cs.len(), batch * hdim);
+        scratch.ensure(batch);
+        let BatchScratch { zx, zh, zero_bias, .. } = scratch;
+
+        matmul_fast(&self.wx, xs, batch, &self.bias, &mut zx[..batch * 4 * hdim]);
+        matmul_fast(&self.wh, hs, batch, zero_bias, &mut zh[..batch * 4 * hdim]);
+
+        for b in 0..batch {
+            self.gates_inplace(
+                &zx[b * 4 * hdim..(b + 1) * 4 * hdim],
+                &zh[b * 4 * hdim..(b + 1) * 4 * hdim],
+                &mut hs[b * hdim..(b + 1) * hdim],
+                &mut cs[b * hdim..(b + 1) * hdim],
+            );
+        }
+    }
+
+    /// The per-unit gate/state update shared by [`Self::step`] and
+    /// [`Self::step_batch`] — single source of truth for the Eq. 5/6
+    /// numerics, which is what makes the two paths bit-identical.
+    #[inline]
+    fn gates_inplace(&self, zx: &[f32], zh: &[f32], h: &mut [f32], c: &mut [f32]) {
+        let hdim = self.hidden;
         for j in 0..hdim {
             // gate pre-activations (f32 add of two f16-grid values —
             // exact, both have ≤11-bit significands and close exponents
             // ... not exact in general; matches the L2 graph which also
             // adds the two matmul outputs in f32)
-            let zf = scratch.zx[j] + scratch.zh[j];
-            let zi = scratch.zx[hdim + j] + scratch.zh[hdim + j];
-            let zo = scratch.zx[2 * hdim + j] + scratch.zh[2 * hdim + j];
-            let zg = scratch.zx[3 * hdim + j] + scratch.zh[3 * hdim + j];
+            let zf = zx[j] + zh[j];
+            let zi = zx[hdim + j] + zh[hdim + j];
+            let zo = zx[2 * hdim + j] + zh[2 * hdim + j];
+            let zg = zx[3 * hdim + j] + zh[3 * hdim + j];
 
             let f = sigmoid_sd8(zf);
             let i = sigmoid_sd8(zi);

@@ -17,4 +17,6 @@ pub mod model;
 pub mod reference;
 
 pub use cell::QLstmCell;
-pub use model::{Dense, Embedding, QLstmLayer, QLstmStack};
+pub use model::{
+    synthetic_stack, Dense, Embedding, QLstmLayer, QLstmStack, StackScratch, StreamState,
+};

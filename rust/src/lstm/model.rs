@@ -8,10 +8,11 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::formats::{round_f16, round_f8};
-use crate::qmath::vector::{matvec_fast, QMatrix};
+use crate::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use crate::rng::SplitMix64;
 use crate::tensorfile::Tensor;
 
-use super::cell::{CellScratch, QLstmCell};
+use super::cell::{BatchScratch, CellScratch, QLstmCell};
 
 /// Embedding table (kept in f32; its *outputs* are the paper's
 /// first-layer activations and are FP8-quantized here).
@@ -161,6 +162,147 @@ impl QLstmStack {
             .collect()
     }
 
+    /// Output (logit) dimension of the dense head.
+    pub fn n_out(&self) -> usize {
+        self.head.w.rows
+    }
+
+    /// True when every layer is forward-only — the precondition for
+    /// incremental (token-at-a-time) streaming and thus for serving.
+    pub fn is_unidirectional(&self) -> bool {
+        self.layers.iter().all(|l| l.bwd.is_none())
+    }
+
+    /// Hidden size of each layer, in order.
+    pub fn hidden_dims(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.fwd.hidden).collect()
+    }
+
+    /// Fresh zeroed per-stream recurrent state (one `(h, c)` pair per
+    /// layer), ready for [`Self::step_batch`] via
+    /// [`StackScratch::load_state`].
+    pub fn new_stream_state(&self) -> StreamState {
+        StreamState {
+            h: self.layers.iter().map(|l| vec![0f32; l.fwd.hidden]).collect(),
+            c: self.layers.iter().map(|l| vec![0f32; l.fwd.hidden]).collect(),
+        }
+    }
+
+    /// Build the reusable flat scratch for batched stepping (sized for
+    /// `max_batch` streams; grows on demand).
+    pub fn scratch(&self, max_batch: usize) -> StackScratch {
+        let max_batch = max_batch.max(1);
+        let mut width = self.embed.dim;
+        for l in &self.layers {
+            width = width.max(l.fwd.hidden);
+        }
+        StackScratch {
+            batch_cap: max_batch,
+            hs: self.layers.iter().map(|l| vec![0f32; max_batch * l.fwd.hidden]).collect(),
+            cs: self.layers.iter().map(|l| vec![0f32; max_batch * l.fwd.hidden]).collect(),
+            logits: vec![0f32; max_batch * self.n_out()],
+            x: vec![0f32; max_batch * width],
+            width,
+            cells: self
+                .layers
+                .iter()
+                .map(|l| BatchScratch::new(l.fwd.hidden, max_batch))
+                .collect(),
+        }
+    }
+
+    /// Advance `ids.len()` independent streams by **one token each**.
+    ///
+    /// The streams' recurrent state lives flat in `scratch.hs`/`scratch.cs`
+    /// (stream-major, `[b*H .. (b+1)*H]` per stream — use
+    /// [`StackScratch::load_state`]/[`StackScratch::store_state`] to move
+    /// per-session state in and out). Logits land in
+    /// `scratch.logits[b*n_out ..]`. Unidirectional stacks only.
+    ///
+    /// Batching contract: outputs and post-states are **bit-identical**
+    /// to stepping each stream alone (`batch = 1`), which in turn is
+    /// bit-identical to the sequential [`Self::forward`] path — pinned
+    /// by `tests/batched_equivalence.rs`.
+    pub fn step_batch(&self, ids: &[usize], scratch: &mut StackScratch) {
+        let batch = ids.len();
+        assert!(
+            self.is_unidirectional(),
+            "step_batch: bidirectional layers cannot stream token-at-a-time"
+        );
+        scratch.ensure(self, batch);
+        let StackScratch { hs, cs, logits, x, width, cells, .. } = scratch;
+
+        // embed → FP8 first-layer activations, gathered flat
+        let dim = self.embed.dim;
+        for (b, &id) in ids.iter().enumerate() {
+            self.embed.lookup_fp8(id, &mut x[b * dim..(b + 1) * dim]);
+        }
+
+        // LSTM layers: x (flat [B*in]) → h (flat [B*H]), then h becomes
+        // the next layer's input (inter-layer activations are already
+        // on the FP8 grid — h is produced by round_f8).
+        let mut in_dim = dim;
+        for (l, layer) in self.layers.iter().enumerate() {
+            let hdim = layer.fwd.hidden;
+            layer.fwd.step_batch(
+                &x[..batch * in_dim],
+                &mut hs[l][..batch * hdim],
+                &mut cs[l][..batch * hdim],
+                batch,
+                &mut cells[l],
+            );
+            x[..batch * hdim].copy_from_slice(&hs[l][..batch * hdim]);
+            in_dim = hdim;
+        }
+        debug_assert!(in_dim <= *width);
+
+        // dense head over the last layer's hidden state
+        let n_out = self.n_out();
+        matmul_fast(
+            &self.head.w,
+            &x[..batch * in_dim],
+            batch,
+            &self.head.bias,
+            &mut logits[..batch * n_out],
+        );
+    }
+
+    /// Forward `seqs.len()` full (possibly ragged) sequences in
+    /// lockstep micro-batches, returning per-sequence logit series
+    /// `[T_i][n_out]` — the offline counterpart of the serving loop,
+    /// bit-identical to calling [`Self::forward`] on each sequence.
+    pub fn forward_batch(&self, seqs: &[&[usize]]) -> Vec<Vec<Vec<f32>>> {
+        let n = seqs.len();
+        let n_out = self.n_out();
+        let mut states: Vec<StreamState> = (0..n).map(|_| self.new_stream_state()).collect();
+        let mut scratch = self.scratch(n);
+        let mut out: Vec<Vec<Vec<f32>>> =
+            seqs.iter().map(|s| Vec::with_capacity(s.len())).collect();
+        let t_max = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+
+        let mut ids = Vec::with_capacity(n);
+        let mut active = Vec::with_capacity(n);
+        for t in 0..t_max {
+            ids.clear();
+            active.clear();
+            for (i, s) in seqs.iter().enumerate() {
+                if t < s.len() {
+                    active.push(i);
+                    ids.push(s[t]);
+                }
+            }
+            for (slot, &i) in active.iter().enumerate() {
+                scratch.load_state(slot, &states[i]);
+            }
+            self.step_batch(&ids, &mut scratch);
+            for (slot, &i) in active.iter().enumerate() {
+                scratch.store_state(slot, &mut states[i]);
+                out[i].push(scratch.logits[slot * n_out..(slot + 1) * n_out].to_vec());
+            }
+        }
+        out
+    }
+
     /// Total weight storage in bytes with FloatSD8 packing (the paper's
     /// memory-footprint argument) vs FP32.
     pub fn weight_bytes(&self) -> (usize, usize) {
@@ -173,6 +315,106 @@ impl QLstmStack {
         }
         sd8 += self.head.w.storage_bytes();
         (sd8, sd8 * 4)
+    }
+}
+
+/// Per-stream (per serving session) recurrent state: one `(h, c)` pair
+/// per layer, h on the FP8 grid, c on the FP16 grid. Small enough to
+/// copy in and out of the flat batch slots each scheduled step — state
+/// movement is O(H) per layer while the step itself is O(H²).
+#[derive(Clone, Debug, Default)]
+pub struct StreamState {
+    pub h: Vec<Vec<f32>>,
+    pub c: Vec<Vec<f32>>,
+}
+
+/// Reusable flat buffers for [`QLstmStack::step_batch`] — gathered
+/// state slots, layer pre-activations, and logits. One per worker
+/// thread; nothing allocates in the steady-state serving loop.
+pub struct StackScratch {
+    batch_cap: usize,
+    /// per-layer flat h state, stream-major (`[b*H .. (b+1)*H]`)
+    pub hs: Vec<Vec<f32>>,
+    /// per-layer flat c state, stream-major
+    pub cs: Vec<Vec<f32>>,
+    /// flat logits of the last `step_batch`, `[b*n_out .. (b+1)*n_out]`
+    pub logits: Vec<f32>,
+    x: Vec<f32>,
+    width: usize,
+    cells: Vec<BatchScratch>,
+}
+
+impl StackScratch {
+    fn ensure(&mut self, stack: &QLstmStack, batch: usize) {
+        if batch <= self.batch_cap {
+            return;
+        }
+        self.batch_cap = batch;
+        for (l, layer) in stack.layers.iter().enumerate() {
+            self.hs[l].resize(batch * layer.fwd.hidden, 0.0);
+            self.cs[l].resize(batch * layer.fwd.hidden, 0.0);
+        }
+        self.logits.resize(batch * stack.n_out(), 0.0);
+        self.x.resize(batch * self.width, 0.0);
+    }
+
+    /// Copy a stream's state into batch slot `slot` before stepping.
+    pub fn load_state(&mut self, slot: usize, st: &StreamState) {
+        for (l, h) in st.h.iter().enumerate() {
+            let hd = h.len();
+            self.hs[l][slot * hd..(slot + 1) * hd].copy_from_slice(h);
+            self.cs[l][slot * hd..(slot + 1) * hd].copy_from_slice(&st.c[l]);
+        }
+    }
+
+    /// Copy batch slot `slot` back into a stream's state after stepping.
+    pub fn store_state(&self, slot: usize, st: &mut StreamState) {
+        for (l, h) in st.h.iter_mut().enumerate() {
+            let hd = h.len();
+            h.copy_from_slice(&self.hs[l][slot * hd..(slot + 1) * hd]);
+            st.c[l].copy_from_slice(&self.cs[l][slot * hd..(slot + 1) * hd]);
+        }
+    }
+
+    /// Zero every state slot (fresh streams in every slot — bench use).
+    pub fn reset_states(&mut self) {
+        for v in self.hs.iter_mut().chain(self.cs.iter_mut()) {
+            v.fill(0.0);
+        }
+    }
+}
+
+/// Build a deterministic randomly-initialized quantized stack — the
+/// self-contained model behind the `serve` demo, the serving benches,
+/// and the batched-equivalence tests (no checkpoint required).
+pub fn synthetic_stack(
+    vocab: usize,
+    dim: usize,
+    hidden: usize,
+    n_layers: usize,
+    n_out: usize,
+    seed: u64,
+) -> QLstmStack {
+    let mut rng = SplitMix64::new(seed);
+    let table: Vec<f32> = (0..vocab * dim).map(|_| rng.normal() * 0.1).collect();
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut in_dim = dim;
+    for _ in 0..n_layers.max(1) {
+        let wx: Vec<f32> = (0..in_dim * 4 * hidden).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hidden * 4 * hidden).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        layers.push(QLstmLayer {
+            fwd: QLstmCell::from_jax_layout(in_dim, hidden, &wx, &wh, &b),
+            bwd: None,
+        });
+        in_dim = hidden;
+    }
+    let ow: Vec<f32> = (0..hidden * n_out).map(|_| rng.uniform(-0.3, 0.3)).collect();
+    let ob: Vec<f32> = (0..n_out).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    QLstmStack {
+        embed: Embedding { vocab, dim, table },
+        layers,
+        head: Dense::from_jax_layout(hidden, n_out, &ow, &ob),
     }
 }
 

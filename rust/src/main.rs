@@ -1,20 +1,25 @@
 //! `floatsd-lstm` — CLI entrypoint of the L3 coordinator.
 //!
 //! ```text
-//! floatsd-lstm info                      # manifest + scheme tables (II/VI)
+//! floatsd-lstm info                      # manifest + scheme tables (II/VI)   [pjrt]
 //! floatsd-lstm formats                   # Table I + FloatSD8 grid facts
 //! floatsd-lstm hardware                  # Table VII cost breakdown
-//! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]
-//! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16
+//! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
+//!                                        # batched inference server + load gen
+//! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]                          [pjrt]
+//! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```
+//!
+//! Subcommands marked `[pjrt]` need the crate built with
+//! `--features pjrt` (and real XLA bindings in place of the offline
+//! stub); everything else — including the serving engine — is pure
+//! rust and always available.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use floatsd_lstm::cli::Args;
-use floatsd_lstm::coordinator::{run_experiment, run_suite, ExperimentSpec};
 use floatsd_lstm::formats::FLOAT_SD8;
 use floatsd_lstm::hardware::cost;
-use floatsd_lstm::runtime::Runtime;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -22,45 +27,17 @@ fn main() -> Result<()> {
         Some("info") => info(&args),
         Some("formats") => formats(),
         Some("hardware") => hardware(),
+        Some("serve") => floatsd_lstm::serve::demo::run(&args),
         Some("train") => train(&args),
         Some("suite") => suite(&args),
         _ => {
             eprintln!(
-                "usage: floatsd-lstm <info|formats|hardware|train|suite> [options]\n\
+                "usage: floatsd-lstm <info|formats|hardware|serve|train|suite> [options]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())
         }
     }
-}
-
-fn info(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
-    println!("platform: {}", rt.client.platform_name());
-    println!("tasks:");
-    for (name, t) in &rt.manifest.tasks {
-        println!(
-            "  {name:<6} batch={:<3} x{:?} vocab={} opt={} lr={} metric={}",
-            t.batch, t.x_shape, t.vocab, t.optimizer, t.lr, t.metric
-        );
-    }
-    println!("\nprecision schemes (paper Tables II/VI):");
-    println!(
-        "  {:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
-        "scheme", "w", "g", "a", "first", "last", "m", "s", "scale"
-    );
-    for (name, s) in &rt.manifest.schemes {
-        println!(
-            "  {name:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
-            s.weights, s.gradients, s.activations, s.first_layer_acts,
-            s.last_layer_acts, s.master, s.sigmoid, s.loss_scale
-        );
-    }
-    println!("\nartifacts: {}", rt.manifest.artifacts.len());
-    for name in rt.manifest.artifacts.keys() {
-        println!("  {name}");
-    }
-    Ok(())
 }
 
 fn formats() -> Result<()> {
@@ -102,7 +79,43 @@ fn hardware() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn info(args: &Args) -> Result<()> {
+    use floatsd_lstm::runtime::Runtime;
+
+    let rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.client.platform_name());
+    println!("tasks:");
+    for (name, t) in &rt.manifest.tasks {
+        println!(
+            "  {name:<6} batch={:<3} x{:?} vocab={} opt={} lr={} metric={}",
+            t.batch, t.x_shape, t.vocab, t.optimizer, t.lr, t.metric
+        );
+    }
+    println!("\nprecision schemes (paper Tables II/VI):");
+    println!(
+        "  {:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
+        "scheme", "w", "g", "a", "first", "last", "m", "s", "scale"
+    );
+    for (name, s) in &rt.manifest.schemes {
+        println!(
+            "  {name:<8} {:>4} {:>5} {:>6} {:>5} {:>5} {:>5} {:>5} {:>6}",
+            s.weights, s.gradients, s.activations, s.first_layer_acts,
+            s.last_layer_acts, s.master, s.sigmoid, s.loss_scale
+        );
+    }
+    println!("\nartifacts: {}", rt.manifest.artifacts.len());
+    for name in rt.manifest.artifacts.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn train(args: &Args) -> Result<()> {
+    use floatsd_lstm::coordinator::{run_experiment, ExperimentSpec};
+    use floatsd_lstm::runtime::Runtime;
+
     let artifact = args.require_opt("artifact")?.to_string();
     let div = args.opt_usize("div", 1)?;
     let mut rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
@@ -125,7 +138,12 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn suite(args: &Args) -> Result<()> {
+    use anyhow::bail;
+    use floatsd_lstm::coordinator::run_suite;
+    use floatsd_lstm::runtime::Runtime;
+
     let task = args.opt_or("task", "lm");
     let div = args.opt_usize("div", 1)?;
     let mut rt = Runtime::new(args.opt_or("artifacts", "artifacts"))?;
@@ -143,4 +161,27 @@ fn suite(args: &Args) -> Result<()> {
         println!("  {:<16} {:>10.3} ({})", r.artifact, r.final_metric, r.metric_name);
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn info(_args: &Args) -> Result<()> {
+    pjrt_unavailable("info")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn train(_args: &Args) -> Result<()> {
+    pjrt_unavailable("train")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn suite(_args: &Args) -> Result<()> {
+    pjrt_unavailable("suite")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<()> {
+    anyhow::bail!(
+        "`{cmd}` needs the PJRT training runtime — rebuild with `cargo build --features pjrt` \
+         (and point the `xla` dependency at real PJRT bindings; see vendor/xla)"
+    )
 }

@@ -62,6 +62,33 @@ pub fn matvec_mac(w: &QMatrix, x: &[Fp8], bias: &[Fp16], mode: MacMode) -> Vec<F
         .collect()
 }
 
+/// The per-row kernel both fast paths share: one decoded weight row
+/// against one input vector, f64-exact group sums, one FP16 rounding
+/// per [`MAC_GROUP`]. Keeping this in one place is what makes the
+/// batched path *bit-identical* to the per-vector path by construction.
+#[inline]
+fn dot_row_chained(row: &[f32], x: &[f32], bias: f32) -> f32 {
+    let cols = row.len();
+    let mut acc = bias; // callers keep bias on the f16 grid
+    let mut c = 0;
+    while c + MAC_GROUP <= cols {
+        let g = x[c] as f64 * row[c] as f64
+            + x[c + 1] as f64 * row[c + 1] as f64
+            + x[c + 2] as f64 * row[c + 2] as f64
+            + x[c + 3] as f64 * row[c + 3] as f64;
+        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+        c += MAC_GROUP;
+    }
+    if c < cols {
+        let mut g = 0f64;
+        for cc in c..cols {
+            g += x[cc] as f64 * row[cc] as f64;
+        }
+        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+    }
+    acc
+}
+
 /// Optimized path, numerically identical to
 /// `matvec_mac(.., MacMode::Exact)`:
 /// decoded weights, f64 exact group sums, one f16 round per group.
@@ -70,37 +97,30 @@ pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), w.rows);
     for r in 0..w.rows {
-        let row = w.row_decoded(r);
-        let mut acc = bias[r]; // callers keep bias on the f16 grid
-        let mut c = 0;
-        while c + MAC_GROUP <= w.cols {
-            let g = x[c] as f64 * row[c] as f64
-                + x[c + 1] as f64 * row[c + 1] as f64
-                + x[c + 2] as f64 * row[c + 2] as f64
-                + x[c + 3] as f64 * row[c + 3] as f64;
-            acc = Fp16::from_f64(acc as f64 + g).to_f32();
-            c += MAC_GROUP;
-        }
-        if c < w.cols {
-            let mut g = 0f64;
-            for cc in c..w.cols {
-                g += x[cc] as f64 * row[cc] as f64;
-            }
-            acc = Fp16::from_f64(acc as f64 + g).to_f32();
-        }
-        out[r] = acc;
+        out[r] = dot_row_chained(w.row_decoded(r), x, bias[r]);
     }
 }
 
-/// Batched fast matvec: `ys[b] = W · xs[b] + bias` for a whole batch
-/// (the PE's output-stationary batch loop, §V-A).
+/// Batched fast matvec: `ys[b] = W · xs[b] + bias` for a whole batch.
+///
+/// **Weight-stationary** loop order (the serving engine's amortization
+/// argument, mirroring the PE's §V-A batch loop): the row loop is
+/// outermost, so each decoded FloatSD8 row is streamed from memory
+/// once per *batch* instead of once per *stream*. For weight matrices
+/// larger than cache this is where batched serving wins its
+/// throughput. Each `(row, stream)` pair runs the identical
+/// [`dot_row_chained`] kernel, so results are bit-identical to
+/// `batch` independent [`matvec_fast`] calls.
 pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
     assert_eq!(xs.len(), batch * w.cols);
+    assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), batch * w.rows);
-    for b in 0..batch {
-        let x = &xs[b * w.cols..(b + 1) * w.cols];
-        let y = &mut out[b * w.rows..(b + 1) * w.rows];
-        matvec_fast(w, x, bias, y);
+    for r in 0..w.rows {
+        let row = w.row_decoded(r);
+        let b_r = bias[r];
+        for b in 0..batch {
+            out[b * w.rows + r] = dot_row_chained(row, &xs[b * w.cols..(b + 1) * w.cols], b_r);
+        }
     }
 }
 
@@ -152,18 +172,25 @@ mod tests {
 
     #[test]
     fn matmul_fast_matches_per_row() {
-        let (w, _, bias) = setup(6, 12, 2);
-        let mut rng = SplitMix64::new(3);
-        let batch = 5;
-        let xs: Vec<f32> = (0..batch * 12)
-            .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
-            .collect();
-        let mut out = vec![0f32; batch * 6];
-        matmul_fast(&w, &xs, batch, &bias, &mut out);
-        for b in 0..batch {
-            let mut y = vec![0f32; 6];
-            matvec_fast(&w, &xs[b * 12..(b + 1) * 12], &bias, &mut y);
-            assert_eq!(&out[b * 6..(b + 1) * 6], y.as_slice());
+        // includes cols not a multiple of MAC_GROUP (12, 7, 5) and a
+        // degenerate 1x1 — the weight-stationary loop reorder must stay
+        // bit-identical to per-stream matvec_fast in every tail case.
+        for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1)] {
+            let (w, _, bias) = setup(rows, cols, (rows * 1000 + cols) as u64);
+            let mut rng = SplitMix64::new(3);
+            let batch = 5;
+            let xs: Vec<f32> = (0..batch * cols)
+                .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
+                .collect();
+            let mut out = vec![0f32; batch * rows];
+            matmul_fast(&w, &xs, batch, &bias, &mut out);
+            for b in 0..batch {
+                let mut y = vec![0f32; rows];
+                matvec_fast(&w, &xs[b * cols..(b + 1) * cols], &bias, &mut y);
+                for (a, e) in out[b * rows..(b + 1) * rows].iter().zip(&y) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "({rows}x{cols}) stream {b}");
+                }
+            }
         }
     }
 

@@ -128,12 +128,39 @@ impl StepMetrics {
         self.mean_loss().exp()
     }
 
-    /// The task's headline metric by name.
+    /// The task's headline metric by name. Panics on an unrecognized
+    /// name — silently defaulting to perplexity hid manifest typos
+    /// (an "acuracy" task would report perplexity as its accuracy).
     pub fn named(&self, metric: &str) -> f32 {
         match metric {
             "accuracy" => self.accuracy() * 100.0,
-            _ => self.perplexity(),
+            "perplexity" => self.perplexity(),
+            other => panic!(
+                "unknown metric name {other:?} (expected \"accuracy\" or \"perplexity\") — \
+                 check the task's `metric` field in the artifacts manifest"
+            ),
         }
+    }
+}
+
+#[cfg(test)]
+mod metric_tests {
+    use super::StepMetrics;
+
+    fn m() -> StepMetrics {
+        StepMetrics { loss_sum: 2.0, metric_sum: 1.0, count: 2.0 }
+    }
+
+    #[test]
+    fn named_matches_explicitly() {
+        assert_eq!(m().named("accuracy"), 50.0);
+        assert_eq!(m().named("perplexity"), 1f32.exp());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown metric name")]
+    fn named_rejects_unknown_metrics() {
+        let _ = m().named("acuracy");
     }
 }
 

@@ -1,0 +1,162 @@
+//! `floatsd-lstm serve` — self-contained serving demo: builds (or
+//! loads) a quantized stack, starts the [`Server`], drives it with a
+//! synthetic multi-client token-streaming load, and reports
+//! throughput, batch occupancy, and latency percentiles per shard.
+//!
+//! ```text
+//! floatsd-lstm serve [--model ckpt.tensors] [--workers N] [--max-batch B]
+//!                    [--window-us U] [--sessions S] [--tokens T] [--clients C]
+//!                    [--vocab V --dim D --hidden H --layers L]   (synthetic model)
+//! ```
+//!
+//! Each synthetic client owns a slice of the sessions and streams
+//! greedily: it sends one token per session, waits for that round's
+//! replies, and feeds each reply's argmax back as the session's next
+//! token — a closed feedback loop through the recurrent state, so any
+//! session-state mixup would change the token stream immediately.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::lstm::model::{build_tiny_from_params, synthetic_stack, ParamBag};
+use crate::lstm::QLstmStack;
+use crate::tensorfile::read_tensors;
+
+use super::{ServeConfig, Server, SessionId};
+
+/// Entry point for the `serve` subcommand.
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ServeConfig {
+        workers: args.opt_usize("workers", ServeConfig::default().workers)?.max(1),
+        max_batch: args.opt_usize("max-batch", 16)?.max(1),
+        batch_window: Duration::from_micros(args.opt_usize("window-us", 200)? as u64),
+    };
+    let n_sessions = args.opt_usize("sessions", 64)?.max(1);
+    let n_tokens = args.opt_usize("tokens", 256)?;
+    let n_clients = args.opt_usize("clients", 4)?.max(1).min(n_sessions);
+
+    let stack = Arc::new(match args.opt("model") {
+        Some(path) => {
+            let tensors = read_tensors(path).with_context(|| format!("load {path}"))?;
+            build_tiny_from_params(&ParamBag::from_tensors(tensors))
+                .with_context(|| format!("assemble model from {path}"))?
+        }
+        None => synthetic_stack(
+            args.opt_usize("vocab", 256)?,
+            args.opt_usize("dim", 64)?,
+            args.opt_usize("hidden", 128)?,
+            args.opt_usize("layers", 2)?.max(1),
+            args.opt_usize("vocab", 256)?,
+            20200711,
+        ),
+    });
+
+    let (sd8, fp32) = stack.weight_bytes();
+    println!(
+        "model: vocab={} dim={} layers={} hidden={:?} n_out={} | weights {} B FloatSD8 ({} B as FP32)",
+        stack.embed.vocab,
+        stack.embed.dim,
+        stack.layers.len(),
+        stack.hidden_dims(),
+        stack.n_out(),
+        sd8,
+        fp32
+    );
+    println!(
+        "serve: {} workers × max-batch {} × window {:?} | load: {} sessions × {} tokens via {} clients",
+        cfg.workers, cfg.max_batch, cfg.batch_window, n_sessions, n_tokens, n_clients
+    );
+
+    let server = Server::start(stack.clone(), cfg);
+    let t0 = Instant::now();
+    let streamed = drive_load(&server, &stack, n_sessions, n_tokens, n_clients);
+    let wall = t0.elapsed();
+
+    println!("\nper-shard:");
+    for (i, s) in server.shard_stats().iter().enumerate() {
+        println!("  shard {i}: {s}");
+    }
+    let agg = server.stats();
+    println!("aggregate: {agg}");
+    println!(
+        "\nthroughput: {:.0} tokens/s ({} tokens in {:.2?})",
+        streamed as f64 / wall.as_secs_f64(),
+        streamed,
+        wall
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Drive `n_sessions` greedy-decoding sessions (partitioned over
+/// `n_clients` threads) for `n_tokens` rounds; returns tokens streamed.
+pub fn drive_load(
+    server: &Server,
+    stack: &QLstmStack,
+    n_sessions: usize,
+    n_tokens: usize,
+    n_clients: usize,
+) -> u64 {
+    let vocab = stack.embed.vocab;
+    let mut streamed = 0u64;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for client in 0..n_clients {
+            // client c owns sessions {c, c + C, c + 2C, ...}
+            let sessions: Vec<SessionId> =
+                (client..n_sessions).step_by(n_clients).map(|s| s as SessionId).collect();
+            joins.push(scope.spawn(move || {
+                let (tx, rx) = mpsc::channel();
+                let mut next: HashMap<SessionId, usize> =
+                    sessions.iter().map(|&s| (s, s as usize % vocab)).collect();
+                let mut sent = 0u64;
+                for _round in 0..n_tokens {
+                    for &s in &sessions {
+                        server.submit(s, next[&s], tx.clone()).expect("token within vocab");
+                        sent += 1;
+                    }
+                    for _ in 0..sessions.len() {
+                        let reply = rx.recv().expect("server dropped reply channel");
+                        assert!(!reply.is_rejected(), "submit-validated token rejected");
+                        // greedy feedback: the reply's argmax becomes the
+                        // session's next input token
+                        next.insert(reply.session, reply.top_token % vocab);
+                    }
+                }
+                for &s in &sessions {
+                    server.close_session(s);
+                }
+                sent
+            }));
+        }
+        for j in joins {
+            streamed += j.join().expect("client thread");
+        }
+    });
+    streamed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_load_runs_end_to_end() {
+        let stack = Arc::new(synthetic_stack(32, 8, 10, 1, 32, 5));
+        let server = Server::start(
+            stack.clone(),
+            ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) },
+        );
+        let streamed = drive_load(&server, &stack, 6, 5, 2);
+        assert_eq!(streamed, 30);
+        let agg = server.stats();
+        assert_eq!(agg.tokens, 30);
+        assert!(agg.batches > 0 && agg.mean_occupancy >= 1.0);
+        server.shutdown();
+    }
+}

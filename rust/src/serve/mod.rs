@@ -1,0 +1,192 @@
+//! Batched, multi-threaded **inference serving engine** over the
+//! pure-rust FloatSD8 LSTM stack — the deployment layer the paper's
+//! low-complexity arithmetic exists to enable.
+//!
+//! Architecture (one box per module):
+//!
+//! ```text
+//!   clients ──► Server::submit ──► shard = session_id % workers
+//!                                        │
+//!                     ┌──────────────────┴──────────────────┐
+//!                     ▼                                     ▼
+//!              RequestQueue (scheduler)             RequestQueue ...
+//!               deadline- & max-batch-               one per worker
+//!               bounded micro-batches
+//!                     │
+//!                     ▼
+//!              worker thread: SessionStore (h,c per client)
+//!                     │   gather states → QLstmStack::step_batch
+//!                     │   (weight-stationary matmul_fast, flat
+//!                     │    scratch, zero allocation per token)
+//!                     ▼
+//!              replies + ShardStats (tokens/s, p50/p99, occupancy)
+//! ```
+//!
+//! Contracts:
+//!
+//! * **Incremental sessions** — clients stream one token at a time;
+//!   the per-client `(h, c)` state lives server-side in the shard's
+//!   [`session::SessionStore`], so nothing is ever re-computed.
+//! * **Bit-exact batching** — a token's logits are bit-identical no
+//!   matter which micro-batch it rides in (pinned by
+//!   `tests/batched_equivalence.rs`); batching is purely a throughput
+//!   lever, never an accuracy one.
+//! * **Per-session ordering** — the scheduler never places two
+//!   requests of one session in the same micro-batch and preserves
+//!   FIFO order across batches, so pipelined clients are safe.
+//! * **Shard isolation** — a session is owned by exactly one worker
+//!   thread (`session_id % workers`); worker state is lock-free on the
+//!   hot path (the only lock is the request queue).
+
+pub mod demo;
+pub mod scheduler;
+pub mod session;
+pub mod stats;
+pub mod worker;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::lstm::QLstmStack;
+
+pub use scheduler::{Reply, Request, RequestQueue};
+pub use session::{SessionId, SessionStore};
+pub use stats::{ShardStats, StatsSnapshot};
+pub use worker::WorkerPool;
+
+/// Serving engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// worker threads (= session shards)
+    pub workers: usize,
+    /// micro-batch size cap per scheduled step
+    pub max_batch: usize,
+    /// how long the scheduler waits for a batch to fill once the first
+    /// request arrives (the latency/throughput knob)
+    pub batch_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: std::thread::available_parallelism().map_or(2, |n| n.get().min(8)),
+            max_batch: 16,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+/// The serving engine: a shared read-only model + one scheduler queue,
+/// session store, and thread per shard.
+pub struct Server {
+    pool: WorkerPool,
+    workers: usize,
+    vocab: usize,
+}
+
+impl Server {
+    /// Spawn the worker pool over a shared (immutable, hence freely
+    /// shareable) quantized stack. The stack must be unidirectional.
+    pub fn start(stack: Arc<QLstmStack>, cfg: ServeConfig) -> Server {
+        assert!(
+            stack.is_unidirectional(),
+            "serving requires a unidirectional stack (bidirectional layers cannot stream)"
+        );
+        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let workers = cfg.workers;
+        let vocab = stack.embed.vocab;
+        Server { pool: WorkerPool::spawn(stack, &cfg), workers, vocab }
+    }
+
+    /// Which shard (worker) owns a session.
+    pub fn shard_of(&self, session: SessionId) -> usize {
+        (session % self.workers as u64) as usize
+    }
+
+    /// Enqueue one token of one session. The reply (logits for this
+    /// token) arrives on `reply_to`; a session is created implicitly on
+    /// first use. Requests of the same session are processed in
+    /// submission order.
+    ///
+    /// Rejects out-of-vocabulary tokens up front — a bad client input
+    /// must never reach (and panic) a shard worker.
+    pub fn submit(
+        &self,
+        session: SessionId,
+        token: usize,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        if token >= self.vocab {
+            anyhow::bail!("token id {token} out of range for vocab {}", self.vocab);
+        }
+        let shard = self.shard_of(session);
+        self.pool.queues[shard].push(Request::new(session, token, reply_to));
+        Ok(())
+    }
+
+    /// Drop a session's server-side state (frees the shard's map entry).
+    pub fn close_session(&self, session: SessionId) {
+        let shard = self.shard_of(session);
+        self.pool.queues[shard].push_close(session);
+    }
+
+    /// Per-shard statistics snapshots, in shard order.
+    pub fn shard_stats(&self) -> Vec<StatsSnapshot> {
+        self.pool.stats.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Aggregate statistics across all shards (latency percentiles are
+    /// recomputed over the merged sample set, not averaged).
+    pub fn stats(&self) -> StatsSnapshot {
+        stats::merged(&self.pool.stats)
+    }
+
+    /// Stop accepting work, drain the queues, and join the workers.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::synthetic_stack;
+
+    #[test]
+    fn server_round_trips_tokens_across_shards() {
+        let stack = Arc::new(synthetic_stack(32, 8, 12, 1, 32, 11));
+        let server = Server::start(
+            stack.clone(),
+            ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) },
+        );
+        let (tx, rx) = mpsc::channel();
+        let sessions: Vec<SessionId> = (0..5).collect();
+        for &s in &sessions {
+            server.submit(s, (s as usize) % 32, tx.clone()).unwrap();
+        }
+        assert!(
+            server.submit(0, 32, tx.clone()).is_err(),
+            "out-of-vocab token must be rejected at submit"
+        );
+        let mut got = 0;
+        while got < sessions.len() {
+            let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+            assert_eq!(reply.logits.len(), stack.n_out());
+            assert!(reply.logits.iter().all(|v| v.is_finite()));
+            got += 1;
+        }
+        let agg = server.stats();
+        assert_eq!(agg.tokens, sessions.len() as u64);
+        server.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "unidirectional")]
+    fn server_rejects_bidirectional_stacks() {
+        let mut stack = synthetic_stack(16, 4, 6, 1, 16, 3);
+        let extra = synthetic_stack(16, 6, 6, 1, 16, 4).layers.remove(0).fwd;
+        stack.layers[0].bwd = Some(extra);
+        let _ = Server::start(Arc::new(stack), ServeConfig::default());
+    }
+}

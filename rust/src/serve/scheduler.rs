@@ -1,0 +1,286 @@
+//! Dynamic micro-batching scheduler: one bounded-wait request queue
+//! per shard.
+//!
+//! Batch formation rules (the paper-adjacent deployments — FINN-L,
+//! fixed-point RNN serving — all batch across streams to amortize
+//! weight traffic; this queue is where that batching happens):
+//!
+//! * a micro-batch closes as soon as it holds `max_batch` requests, or
+//!   `batch_window` after collection started, whichever comes first —
+//!   the first waiting request is never delayed by more than the
+//!   window;
+//! * at most **one request per session** per batch (a session's second
+//!   in-flight token must see the state produced by its first), and
+//!   requests of one session keep FIFO order across batches;
+//! * session-close commands order correctly against that session's
+//!   still-queued tokens (a close never jumps ahead of them).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::session::SessionId;
+
+/// One token of one session, awaiting scheduling.
+pub struct Request {
+    pub session: SessionId,
+    pub token: usize,
+    /// when the request entered the queue (service-latency clock)
+    pub enqueued: Instant,
+    pub reply_to: mpsc::Sender<Reply>,
+}
+
+impl Request {
+    pub fn new(session: SessionId, token: usize, reply_to: mpsc::Sender<Reply>) -> Request {
+        Request { session, token, enqueued: Instant::now(), reply_to }
+    }
+}
+
+/// The server's answer for one token.
+pub struct Reply {
+    pub session: SessionId,
+    /// full logits for this step (bit-identical to the unbatched
+    /// path). **Empty** means the request was rejected without being
+    /// processed (out-of-vocabulary token that bypassed
+    /// `Server::submit`'s validation).
+    pub logits: Vec<f32>,
+    /// argmax of `logits` — the greedy next token, precomputed so
+    /// load-generating clients don't rescan the vector
+    pub top_token: usize,
+    /// enqueue → reply-ready service latency
+    pub latency: Duration,
+}
+
+impl Reply {
+    /// True when the request was rejected without being processed (see
+    /// [`Reply::logits`]); `top_token` is meaningless in that case.
+    pub fn is_rejected(&self) -> bool {
+        self.logits.is_empty()
+    }
+}
+
+enum Item {
+    Step(Request),
+    Close(SessionId),
+}
+
+struct Inner {
+    q: VecDeque<Item>,
+    shutdown: bool,
+}
+
+/// MPSC micro-batching queue (many client handles push, the owning
+/// worker pops batches).
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for RequestQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a token request (dropped silently after shutdown).
+    pub fn push(&self, r: Request) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.shutdown {
+            g.q.push_back(Item::Step(r));
+            self.cv.notify_one();
+        }
+    }
+
+    /// Enqueue a session close (ordered against that session's tokens).
+    pub fn push_close(&self, session: SessionId) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.shutdown {
+            g.q.push_back(Item::Close(session));
+            self.cv.notify_one();
+        }
+    }
+
+    /// Stop accepting new work and wake the worker; already-queued
+    /// items are still delivered (drain semantics).
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Blockingly collect the next micro-batch into `batch` (cleared
+    /// first) and any due session-closes into `closes` (cleared first).
+    ///
+    /// Returns `false` only once the queue is shut down **and** fully
+    /// drained; until then at least one request or close is delivered
+    /// per call (after shutdown the window wait is skipped so drain is
+    /// prompt).
+    pub fn next_batch(
+        &self,
+        max_batch: usize,
+        window: Duration,
+        batch: &mut Vec<Request>,
+        closes: &mut Vec<SessionId>,
+    ) -> bool {
+        batch.clear();
+        closes.clear();
+        let mut g = self.inner.lock().unwrap();
+
+        // wait for the first item (or shutdown+empty)
+        loop {
+            if !g.q.is_empty() {
+                break;
+            }
+            if g.shutdown {
+                return false;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+
+        let deadline = Instant::now() + window;
+        // items blocked this call (dup-session steps, closes behind
+        // their session's tokens) — drained to here and pushed back to
+        // the queue front afterwards, preserving FIFO. O(1) per item:
+        // no mid-queue removal, so batch formation stays linear in the
+        // items examined even with a deep backlog. Empty in the common
+        // case, so no allocation on the happy path. The scan budget
+        // caps how far past blocked items we look for co-batchable
+        // sessions, so one session pipelining thousands of tokens
+        // can't make every batch shuffle its whole backlog.
+        let scan_budget = max_batch.saturating_mul(8);
+        let mut deferred: VecDeque<Item> = VecDeque::new();
+        loop {
+            // drain from the front; take what's schedulable now
+            while batch.len() < max_batch && deferred.len() < scan_budget {
+                let Some(item) = g.q.pop_front() else { break };
+                match item {
+                    Item::Step(r) => {
+                        // one request per session per batch
+                        if batch.iter().any(|b| b.session == r.session) {
+                            deferred.push_back(Item::Step(r));
+                        } else {
+                            batch.push(r);
+                        }
+                    }
+                    Item::Close(s) => {
+                        // a close may not overtake queued/batched
+                        // tokens of its session
+                        let blocked = batch.iter().any(|b| b.session == s)
+                            || deferred.iter().any(
+                                |it| matches!(it, Item::Step(r) if r.session == s),
+                            );
+                        if blocked {
+                            deferred.push_back(Item::Close(s));
+                        } else {
+                            closes.push(s);
+                        }
+                    }
+                }
+            }
+
+            if batch.len() >= max_batch || g.shutdown {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, _timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        // restore blocked items to the queue front in original order
+        while let Some(it) = deferred.pop_back() {
+            g.q.push_front(it);
+        }
+        // a call that reaches here always carries work: the first-item
+        // wait guaranteed a non-empty queue, and the drain moves at
+        // least that item into `batch` or `closes` (an all-blocked
+        // prefix implies `batch` is non-empty, since blocking requires
+        // a same-session request already batched).
+        debug_assert!(!batch.is_empty() || !closes.is_empty());
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(session: SessionId, token: usize, tx: &mpsc::Sender<Reply>) -> Request {
+        Request::new(session, token, tx.clone())
+    }
+
+    #[test]
+    fn batch_respects_max_and_session_dedupe() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        // session 1 twice: second occurrence must wait for a later batch
+        for (s, t) in [(1u64, 10usize), (2, 20), (1, 11), (3, 30)] {
+            q.push(mk(s, t, &tx));
+        }
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, r.token)).collect();
+        assert_eq!(got, vec![(1, 10), (2, 20), (3, 30)], "dup session deferred, FIFO kept");
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, r.token)).collect();
+        assert_eq!(got, vec![(1, 11)], "deferred token arrives next, in order");
+    }
+
+    #[test]
+    fn close_does_not_overtake_own_session() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(mk(5, 1, &tx));
+        q.push(mk(5, 2, &tx));
+        q.push_close(5);
+        q.push_close(6); // unrelated close may be taken immediately
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 1, "only first token of session 5");
+        assert_eq!(closes, vec![6], "session 5's close still behind its second token");
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 1, "second token of session 5");
+        assert!(closes.is_empty(), "close may not share a batch with its own session's token");
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        assert!(batch.is_empty());
+        assert_eq!(closes, vec![5]);
+    }
+
+    #[test]
+    fn max_batch_closes_immediately_without_waiting_window() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        for s in 0..4u64 {
+            q.push(mk(s, 0, &tx));
+        }
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        let t0 = Instant::now();
+        assert!(q.next_batch(4, Duration::from_secs(5), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1), "full batch must not wait the window");
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(mk(1, 0, &tx));
+        q.shutdown();
+        q.push(mk(2, 0, &tx)); // rejected after shutdown
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        assert!(q.next_batch(8, Duration::from_secs(5), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].session, 1);
+        assert!(!q.next_batch(8, Duration::from_secs(5), &mut batch, &mut closes));
+    }
+}

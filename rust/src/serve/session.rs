@@ -1,0 +1,82 @@
+//! Per-shard session store: the server-side home of each client's
+//! recurrent `(h, c)` state, so clients stream tokens incrementally
+//! instead of resending (and the server recomputing) whole prefixes.
+//!
+//! A store is owned by exactly one worker thread — no interior
+//! locking; cross-shard isolation comes from the `session_id % workers`
+//! routing in [`super::Server`].
+
+use std::collections::HashMap;
+
+use crate::lstm::{QLstmStack, StreamState};
+
+/// Client-chosen session identifier. Sessions are created implicitly
+/// on first use and routed to shard `id % workers` for their lifetime.
+pub type SessionId = u64;
+
+/// One client's server-side state.
+pub struct Session {
+    pub state: StreamState,
+    /// tokens processed for this session (monotonic)
+    pub tokens: u64,
+}
+
+/// All sessions owned by one shard.
+#[derive(Default)]
+pub struct SessionStore {
+    sessions: HashMap<SessionId, Session>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore { sessions: HashMap::new() }
+    }
+
+    /// Fetch a session, creating zeroed state on first use.
+    pub fn open(&mut self, id: SessionId, stack: &QLstmStack) -> &mut Session {
+        self.sessions
+            .entry(id)
+            .or_insert_with(|| Session { state: stack.new_stream_state(), tokens: 0 })
+    }
+
+    pub fn get_mut(&mut self, id: SessionId) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    /// Drop a session's state. Returns whether it existed.
+    pub fn close(&mut self, id: SessionId) -> bool {
+        self.sessions.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::synthetic_stack;
+
+    #[test]
+    fn open_is_idempotent_and_close_frees() {
+        let stack = synthetic_stack(16, 4, 6, 2, 16, 1);
+        let mut store = SessionStore::new();
+        {
+            let s = store.open(42, &stack);
+            assert_eq!(s.tokens, 0);
+            assert_eq!(s.state.h.len(), 2, "one (h,c) pair per layer");
+            assert_eq!(s.state.h[0].len(), 6);
+            s.tokens = 7;
+        }
+        assert_eq!(store.open(42, &stack).tokens, 7, "second open returns same session");
+        assert_eq!(store.len(), 1);
+        assert!(store.close(42));
+        assert!(!store.close(42));
+        assert!(store.is_empty());
+    }
+}

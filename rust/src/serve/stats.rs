@@ -1,0 +1,151 @@
+//! Per-shard serving statistics: token/batch counters on atomics (read
+//! by any thread without stopping the worker) and raw service-latency
+//! samples summarized through [`benchlib::Percentiles`] — the same
+//! reporting machinery the paper benches use.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::benchlib::Percentiles;
+
+/// Cap on retained latency samples per shard: percentiles describe a
+/// sliding window of the most recent samples instead of the full
+/// history, keeping a long-running server's memory bounded and
+/// snapshot cost O(window), not O(lifetime-tokens). Sized so the
+/// `snapshot()` clone under the shard mutex (which the worker also
+/// takes in `record_batch`) stays a ~128 KB memcpy — ample samples
+/// for a stable p99, small enough that a polling monitor doesn't add
+/// visible tail latency to in-flight batches.
+pub const LATENCY_WINDOW: usize = 16_384;
+
+/// Bounded ring of the most recent latency samples.
+#[derive(Default)]
+struct LatencyRing {
+    buf: Vec<Duration>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, d: Duration) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(d);
+        } else {
+            self.buf[self.next] = d;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+/// Live counters for one shard (one worker thread writes, anyone reads).
+#[derive(Default)]
+pub struct ShardStats {
+    tokens: AtomicU64,
+    batches: AtomicU64,
+    latencies: Mutex<LatencyRing>,
+}
+
+/// Point-in-time summary of one shard (or of all shards, merged).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsSnapshot {
+    pub tokens: u64,
+    pub batches: u64,
+    /// mean requests per scheduled micro-batch — how full batches ran
+    pub mean_occupancy: f64,
+    /// enqueue → reply-ready service latency
+    pub latency: Percentiles,
+}
+
+impl ShardStats {
+    pub fn new() -> ShardStats {
+        ShardStats::default()
+    }
+
+    /// Record one scheduled micro-batch and its per-request latencies.
+    pub fn record_batch(&self, batch: usize, lats: &[Duration]) {
+        self.tokens.fetch_add(batch as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.latencies.lock().unwrap();
+        for &l in lats {
+            ring.push(l);
+        }
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut samples = self.latencies.lock().unwrap().buf.clone();
+        let tokens = self.tokens.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        StatsSnapshot {
+            tokens,
+            batches,
+            mean_occupancy: if batches == 0 { 0.0 } else { tokens as f64 / batches as f64 },
+            latency: Percentiles::of(&mut samples),
+        }
+    }
+}
+
+/// Merge shards into one snapshot; percentiles are recomputed over the
+/// union of the raw samples (averaging per-shard percentiles would be
+/// statistically wrong).
+pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
+    let mut samples: Vec<Duration> = Vec::new();
+    let mut tokens = 0u64;
+    let mut batches = 0u64;
+    for s in shards {
+        tokens += s.tokens.load(Ordering::Relaxed);
+        batches += s.batches.load(Ordering::Relaxed);
+        samples.extend_from_slice(&s.latencies.lock().unwrap().buf);
+    }
+    StatsSnapshot {
+        tokens,
+        batches,
+        mean_occupancy: if batches == 0 { 0.0 } else { tokens as f64 / batches as f64 },
+        latency: Percentiles::of(&mut samples),
+    }
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} tokens in {} batches (occupancy {:.2}); latency {}",
+            self.tokens, self.batches, self.mean_occupancy, self.latency
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_merge() {
+        let a = Arc::new(ShardStats::new());
+        let b = Arc::new(ShardStats::new());
+        a.record_batch(4, &[Duration::from_micros(10); 4]);
+        a.record_batch(2, &[Duration::from_micros(30); 2]);
+        b.record_batch(6, &[Duration::from_micros(20); 6]);
+        let sa = a.snapshot();
+        assert_eq!(sa.tokens, 6);
+        assert_eq!(sa.batches, 2);
+        assert!((sa.mean_occupancy - 3.0).abs() < 1e-9);
+        let m = merged(&[a, b]);
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.latency.n, 12);
+        assert_eq!(m.latency.max, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let mut ring = LatencyRing::default();
+        for i in 0..(LATENCY_WINDOW + 10) {
+            ring.push(Duration::from_nanos(i as u64));
+        }
+        assert_eq!(ring.buf.len(), LATENCY_WINDOW, "window never exceeds the cap");
+        // the 10 oldest samples were overwritten in place
+        assert_eq!(ring.buf[0], Duration::from_nanos(LATENCY_WINDOW as u64));
+        assert_eq!(ring.buf[9], Duration::from_nanos(LATENCY_WINDOW as u64 + 9));
+        assert_eq!(ring.buf[10], Duration::from_nanos(10));
+    }
+}

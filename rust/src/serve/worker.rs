@@ -1,0 +1,159 @@
+//! The worker pool: one thread per shard, each owning its session
+//! store, its flat [`StackScratch`], and its request queue. The hot
+//! loop allocates only the per-reply logit vectors; states move
+//! between sessions and batch slots by `memcpy` (O(H) per layer,
+//! against the O(H²) step itself).
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::lstm::QLstmStack;
+
+use super::scheduler::{Reply, Request, RequestQueue};
+use super::session::{SessionId, SessionStore};
+use super::stats::ShardStats;
+use super::ServeConfig;
+
+/// Handles to the running shards.
+pub struct WorkerPool {
+    pub queues: Vec<Arc<RequestQueue>>,
+    pub stats: Vec<Arc<ShardStats>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.workers` shard threads over a shared stack.
+    pub fn spawn(stack: Arc<QLstmStack>, cfg: &ServeConfig) -> WorkerPool {
+        let mut queues = Vec::with_capacity(cfg.workers);
+        let mut stats = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for shard in 0..cfg.workers {
+            let queue = Arc::new(RequestQueue::new());
+            let stat = Arc::new(ShardStats::new());
+            queues.push(queue.clone());
+            stats.push(stat.clone());
+            let stack = stack.clone();
+            let max_batch = cfg.max_batch;
+            let window = cfg.batch_window;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-shard-{shard}"))
+                    .spawn(move || run_worker(&stack, &queue, &stat, max_batch, window))
+                    .expect("spawn shard thread"),
+            );
+        }
+        WorkerPool { queues, stats, handles }
+    }
+
+    /// Signal shutdown, let the workers drain their queues, and join.
+    pub fn shutdown(self) {
+        for q in &self.queues {
+            q.shutdown();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn run_worker(
+    stack: &QLstmStack,
+    queue: &RequestQueue,
+    stats: &ShardStats,
+    max_batch: usize,
+    window: Duration,
+) {
+    let mut store = SessionStore::new();
+    let mut scratch = stack.scratch(max_batch);
+    let n_out = stack.n_out();
+
+    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+    let mut closes: Vec<SessionId> = Vec::new();
+    let mut ids: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut lats: Vec<Duration> = Vec::with_capacity(max_batch);
+    let mut replies: Vec<(Request, Reply)> = Vec::with_capacity(max_batch);
+
+    while queue.next_batch(max_batch, window, &mut batch, &mut closes) {
+        // closes are ordered by the scheduler to never precede queued
+        // tokens of their session, so dropping state here is safe
+        for s in closes.drain(..) {
+            store.close(s);
+        }
+        // defense in depth: Server::submit already rejects
+        // out-of-vocabulary tokens, but a request pushed onto the queue
+        // directly must not panic the shard. Answer it with an explicit
+        // empty-logits rejection (the client may hold its own Sender
+        // clone, so merely dropping the request would leave it blocked
+        // on recv forever).
+        batch.retain(|r| {
+            if r.token < stack.embed.vocab {
+                return true;
+            }
+            let _ = r.reply_to.send(Reply {
+                session: r.session,
+                logits: Vec::new(),
+                top_token: 0,
+                latency: r.enqueued.elapsed(),
+            });
+            false
+        });
+        if batch.is_empty() {
+            continue;
+        }
+
+        // gather: session states → flat batch slots
+        ids.clear();
+        ids.extend(batch.iter().map(|r| r.token));
+        for (slot, r) in batch.iter().enumerate() {
+            let sess = store.open(r.session, stack);
+            scratch.load_state(slot, &sess.state);
+        }
+
+        stack.step_batch(&ids, &mut scratch);
+
+        // scatter: batch slots → session states; build replies
+        lats.clear();
+        replies.clear();
+        let bsz = batch.len();
+        for (slot, r) in batch.drain(..).enumerate() {
+            let sess = store.get_mut(r.session).expect("opened above");
+            scratch.store_state(slot, &mut sess.state);
+            sess.tokens += 1;
+            let logits = scratch.logits[slot * n_out..(slot + 1) * n_out].to_vec();
+            let top_token = argmax(&logits);
+            let latency = r.enqueued.elapsed();
+            lats.push(latency);
+            let reply = Reply { session: r.session, logits, top_token, latency };
+            replies.push((r, reply));
+        }
+        // record before sending so an observer that saw all replies
+        // also sees the matching counters
+        stats.record_batch(bsz, &lats);
+        for (r, reply) in replies.drain(..) {
+            let _ = r.reply_to.send(reply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_takes_first_maximum() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        assert_eq!(argmax(&[0.0, 0.0]), 0);
+    }
+}

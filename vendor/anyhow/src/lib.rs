@@ -1,0 +1,195 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate so the
+//! workspace builds fully offline (the vendored registry is not
+//! available in the build container).
+//!
+//! Implements the subset the repo uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait on `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Error values carry a
+//! context chain that `{:?}` prints `anyhow`-style ("Caused by:").
+
+use std::fmt;
+
+/// An error with a chain of context messages (newest first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        let mut e = self;
+        while let Some(s) = e.source.as_deref() {
+            e = s;
+        }
+        &e.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error` (same as
+// real anyhow) so this blanket conversion stays coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(err) = cur {
+            chain.push(err.to_string());
+            cur = err.source();
+        }
+        let mut built: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            built = Some(match built {
+                None => Error::msg(msg),
+                Some(inner) => inner.context(msg),
+            });
+        }
+        built.unwrap_or_else(|| Error::msg("unknown error"))
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_wraps_results_and_options() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(e.root_cause(), "missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("key {} absent", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "key 7 absent");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too large: {n}");
+            if n == 3 {
+                bail!("three is right out (n={})", n);
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out (n=3)");
+        assert_eq!(f(11).unwrap_err().to_string(), "n too large: 11");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}

@@ -1,0 +1,164 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! The build container has no XLA/PJRT toolchain, so this crate
+//! provides just enough API surface for `floatsd_lstm::runtime` and
+//! `floatsd_lstm::coordinator` to type-check under the `pjrt` feature.
+//! Every entry point that would touch a real PJRT client returns a
+//! descriptive [`Error`] at run time; pure host-side value plumbing
+//! ([`Literal`] construction/reshape) works for real so unit tests of
+//! the calling code can exercise argument marshalling.
+//!
+//! To run the actual training stack, repoint the `xla` path dependency
+//! in `rust/Cargo.toml` at real PJRT bindings exposing this surface.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` converts it
+/// into `anyhow::Error` at call sites).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this build (offline `xla` stub, see vendor/xla); \
+         point the `xla` dependency at real PJRT bindings to enable the training runtime"
+    )))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side tensor value. The stub stores nothing — construction and
+/// reshape succeed (shape bookkeeping only), device round-trips error.
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let old: i64 = self.dims.iter().product();
+        let new: i64 = dims.iter().product();
+        if old != new {
+            return Err(Error(format!("reshape {:?} -> {dims:?}: element count mismatch", self.dims)));
+        }
+        Ok(Literal { dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Array shape (dims only; the stub carries no element type).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: parsing always errors — there is no HLO
+/// parser offline).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle (stub: creation errors).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub: execution errors).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub: readback errors).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping_works() {
+        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error_descriptively() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("offline"), "{e}");
+    }
+}
