@@ -56,6 +56,14 @@ impl LmGen {
         g
     }
 
+    /// The offline trainer's "char-LM" preset: the same order-2 Markov
+    /// language over a character-alphabet-sized vocabulary, with a
+    /// small fixed eval set. Lanes are contiguous streams, so each
+    /// successive batch is the next truncated-BPTT window.
+    pub fn char_lm(batch: usize, seq: usize, vocab: usize, seed: u64) -> Self {
+        LmGen::new(batch, seq, vocab, 2, seed)
+    }
+
     /// The language's deterministic bigram-successor function: a fixed
     /// hash of the context, folded toward small ids so the marginal
     /// stays Zipf-ish.

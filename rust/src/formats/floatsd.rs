@@ -251,6 +251,27 @@ impl FloatSdFormat {
     pub fn distinct_value_count(&self) -> usize {
         self.values.len()
     }
+
+    /// The paper's §III-B weight-update rule under the modified (FP16
+    /// master) scheme of §IV-C: the master copy absorbs the update with
+    /// a single FP16 RNE rounding, and the working weight for the next
+    /// iteration is the **nearest** FloatSD8 code of the new master.
+    ///
+    /// Returns `(new_master, code)`. The master is saturated at the
+    /// largest finite FP16 magnitude so a runaway update can never
+    /// poison it with ±inf (the loss scaler should already have skipped
+    /// such a step — this is defense in depth). Both outputs are
+    /// monotone in `update`: a positive update can never move either
+    /// the master or the decoded weight down (pinned by the property
+    /// tests in `tests/proptest_formats.rs`).
+    #[inline]
+    pub fn apply_update(&self, master: f32, update: f32) -> (f32, FloatSd8) {
+        let mut m = crate::formats::round_f16(master + update);
+        if m.is_infinite() {
+            m = if m > 0.0 { 65504.0 } else { -65504.0 };
+        }
+        (m, self.encode(m))
+    }
 }
 
 /// The process-wide FloatSD8 format instance.
@@ -411,6 +432,26 @@ mod tests {
         // chains (e.g. 0.25·2^e = 0.5·2^(e-1) = 1·2^(e-2) …) collapse
         // them to 64 positive + 0 + 64 negative = 129 distinct values.
         assert_eq!(f.distinct_value_count(), 129);
+    }
+
+    #[test]
+    fn apply_update_basics() {
+        let f = fmt();
+        // zero update: master unchanged, code is the nearest grid point
+        let (m, code) = f.apply_update(0.3, 0.0);
+        assert_eq!(m, crate::formats::round_f16(0.3));
+        assert_eq!(f.decode(code), f.quantize(m));
+        // a sub-grid-gap update still moves the FP16 master even when
+        // the FloatSD8 code cannot move yet — the whole point of the
+        // master-copy scheme (small updates accumulate across steps)
+        let m0 = crate::formats::round_f16(1.0);
+        let (m1, c1) = f.apply_update(m0, 2f32.powi(-9));
+        assert!(m1 > m0, "master must accumulate sub-gap updates");
+        assert_eq!(f.decode(c1), 1.0, "decoded weight unmoved by a tiny update");
+        // saturation instead of inf
+        let (m2, c2) = f.apply_update(65504.0, 1e9);
+        assert_eq!(m2, 65504.0);
+        assert_eq!(f.decode(c2), f.max_value());
     }
 
     #[test]

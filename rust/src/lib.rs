@@ -26,9 +26,16 @@
 //! micro-batching, a sharded worker pool) behind the
 //! `floatsd-lstm serve` subcommand.
 //!
+//! Next to it sits [`train`]: a pure-rust offline quantized training
+//! engine (truncated BPTT, FP8 gradients, FP16 master weights with
+//! FloatSD8 re-encoding, dynamic loss scaling) behind the
+//! `floatsd-lstm train` subcommand — train → checkpoint → serve runs
+//! end to end in this one binary, no XLA required.
+//!
 //! The PJRT-dependent layers ([`runtime`], [`coordinator`], the
-//! train/suite CLI paths) are gated behind the default-off `pjrt`
-//! cargo feature so the crate builds and tests fully offline.
+//! `--artifact` train path and the suite CLI) are gated behind the
+//! default-off `pjrt` cargo feature so the crate builds and tests
+//! fully offline.
 //!
 //! See `DESIGN.md` for the experiment index (every table and figure of
 //! the paper mapped to a module and a bench target) and for the serve
@@ -51,6 +58,7 @@ pub mod runtime;
 pub mod serve;
 pub mod tensorfile;
 pub mod testing;
+pub mod train;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

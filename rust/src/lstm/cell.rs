@@ -52,25 +52,27 @@ impl CellScratch {
 
 /// Flat scratch for the batched step: pre-activations for up to
 /// `max_batch` streams, reused across time steps — the serving hot
-/// loop allocates nothing per token.
+/// loop allocates nothing per token. The tape-recording training
+/// forward (`crate::train::tape`) reuses this same scratch, hence the
+/// `pub(crate)` internals.
 pub struct BatchScratch {
-    hidden: usize,
-    zx: Vec<f32>,
-    zh: Vec<f32>,
-    zero_bias: Vec<f32>,
+    pub(crate) hidden: usize,
+    pub(crate) zx: Vec<f32>,
+    pub(crate) zh: Vec<f32>,
+    pub(crate) zero_bias: Vec<f32>,
 }
 
 impl BatchScratch {
     pub fn new(hidden: usize, max_batch: usize) -> Self {
         BatchScratch {
             hidden,
-            zx: vec![0.0; max_batch * 4 * hidden],
-            zh: vec![0.0; max_batch * 4 * hidden],
+            zx: vec![0.0; max_batch.max(1) * 4 * hidden],
+            zh: vec![0.0; max_batch.max(1) * 4 * hidden],
             zero_bias: vec![0.0; 4 * hidden],
         }
     }
 
-    fn ensure(&mut self, batch: usize) {
+    pub(crate) fn ensure(&mut self, batch: usize) {
         let need = batch * 4 * self.hidden;
         if self.zx.len() < need {
             self.zx.resize(need, 0.0);
@@ -174,8 +176,11 @@ impl QLstmCell {
     /// The per-unit gate/state update shared by [`Self::step`] and
     /// [`Self::step_batch`] — single source of truth for the Eq. 5/6
     /// numerics, which is what makes the two paths bit-identical.
+    /// `pub(crate)` so the tape-recording training forward
+    /// (`crate::train::tape`) drives the *same* kernel and stays
+    /// bit-identical to inference by construction.
     #[inline]
-    fn gates_inplace(&self, zx: &[f32], zh: &[f32], h: &mut [f32], c: &mut [f32]) {
+    pub(crate) fn gates_inplace(&self, zx: &[f32], zh: &[f32], h: &mut [f32], c: &mut [f32]) {
         let hdim = self.hidden;
         for j in 0..hdim {
             // gate pre-activations (f32 add of two f16-grid values —

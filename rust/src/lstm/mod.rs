@@ -10,7 +10,13 @@
 //!   head; loads weights from `.tensors` checkpoints written by the
 //!   coordinator;
 //! * [`reference`] — the FP32 reference engine (the paper's baseline),
-//!   same API, plain f32 arithmetic.
+//!   same API, plain f32 arithmetic — plus the full-precision traced
+//!   forward/BPTT pair that anchors the training engine's gradients
+//!   (`tests/gradcheck.rs`).
+//!
+//! The training-side twins of the cell/stack forward passes
+//! (`step_batch_traced`, `backward_batch`, …) live in [`crate::train`]
+//! as inherent impls on the same types, sharing these kernels.
 
 pub mod cell;
 pub mod model;

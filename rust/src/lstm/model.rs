@@ -418,24 +418,40 @@ pub fn synthetic_stack(
     }
 }
 
-/// Build the `tiny` LM topology (embed → 1×LSTM → dense) from a
-/// `.tensors` state written by aot.py / the coordinator.
+/// Build the LM topology (embed → N×LSTM → dense) from a `.tensors`
+/// state written by aot.py, the coordinator, or the offline trainer's
+/// checkpoints ([`crate::train::Trainer::save_checkpoint`]). Layer
+/// params are named `['params']['l1']..['lN']`; `l1` is required,
+/// further layers are loaded while present (the historical `tiny`
+/// topology is the 1-layer case).
 pub fn build_tiny_from_params(bag: &ParamBag) -> Result<QLstmStack> {
     let (esh, emb) = bag.f32(&["['params']['emb']['emb']"])?;
     let (vocab, dim) = (esh[0], esh[1]);
-    let (_, wx) = bag.f32(&["['params']['l1']['wx']"])?;
-    let (whs, wh) = bag.f32(&["['params']['l1']['wh']"])?;
-    let (_, b) = bag.f32(&["['params']['l1']['b']"])?;
-    let hidden = whs[0];
+    let mut layers = Vec::new();
+    let mut in_dim = dim;
+    for l in 1usize.. {
+        let wx_key = format!("['params']['l{l}']['wx']");
+        if l > 1 && bag.f32(&[wx_key.as_str()]).is_err() {
+            break;
+        }
+        let (_, wx) = bag.f32(&[wx_key.as_str()])?;
+        let wh_key = format!("['params']['l{l}']['wh']");
+        let (whs, wh) = bag.f32(&[wh_key.as_str()])?;
+        let b_key = format!("['params']['l{l}']['b']");
+        let (_, b) = bag.f32(&[b_key.as_str()])?;
+        let hidden = whs[0];
+        layers.push(QLstmLayer {
+            fwd: QLstmCell::from_jax_layout(in_dim, hidden, &wx, &wh, &b),
+            bwd: None,
+        });
+        in_dim = hidden;
+    }
     let (_, ow) = bag.f32(&["['params']['out']['w']"])?;
     let (obs, ob) = bag.f32(&["['params']['out']['b']"])?;
     Ok(QLstmStack {
         embed: Embedding { vocab, dim, table: emb.to_vec() },
-        layers: vec![QLstmLayer {
-            fwd: QLstmCell::from_jax_layout(dim, hidden, &wx, &wh, &b),
-            bwd: None,
-        }],
-        head: Dense::from_jax_layout(hidden, obs[0], &ow, &ob),
+        layers,
+        head: Dense::from_jax_layout(in_dim, obs[0], &ow, &ob),
     })
 }
 

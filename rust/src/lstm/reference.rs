@@ -70,6 +70,158 @@ impl F32LstmCell {
     }
 }
 
+/// The recorded forward of [`F32LstmCell::forward_traced`]: per step,
+/// everything the analytic BPTT needs. Arithmetic is carried in f64 so
+/// the tape is also usable as a finite-difference anchor (the
+/// gradient-check test perturbs f32 weights but evaluates the loss in
+/// f64, keeping FD noise far below the 1e-3 tolerance).
+pub struct RefTape {
+    pub xs: Vec<Vec<f64>>,
+    pub h_prev: Vec<Vec<f64>>,
+    pub c_prev: Vec<Vec<f64>>,
+    /// fused gate pre-activations, `[4H]` per step (f/i/o/g packing)
+    pub z: Vec<Vec<f64>>,
+    pub c_new: Vec<Vec<f64>>,
+    pub h_new: Vec<Vec<f64>>,
+}
+
+/// Analytic BPTT gradients of the reference cell (f64).
+pub struct RefGrads {
+    /// `[4H*D]` row-major — same layout as the cell's `wx`
+    pub dwx: Vec<f64>,
+    /// `[4H*H]` row-major
+    pub dwh: Vec<f64>,
+    pub db: Vec<f64>,
+    /// per-step input cotangents
+    pub dx: Vec<Vec<f64>>,
+}
+
+impl F32LstmCell {
+    /// Full-precision traced forward from the zero state (f64
+    /// arithmetic over the f32 weights). The training engine's
+    /// quantized tape ([`crate::train::tape::CellTape`]) mirrors this
+    /// structure; this one is the numerical anchor.
+    pub fn forward_traced(&self, xs: &[Vec<f32>]) -> RefTape {
+        let hd = self.hidden;
+        let d = self.input_dim;
+        let mut tape = RefTape {
+            xs: Vec::new(),
+            h_prev: Vec::new(),
+            c_prev: Vec::new(),
+            z: Vec::new(),
+            c_new: Vec::new(),
+            h_new: Vec::new(),
+        };
+        let mut h = vec![0f64; hd];
+        let mut c = vec![0f64; hd];
+        let sigmoid = |v: f64| 1.0 / (1.0 + (-v).exp());
+        for x in xs {
+            assert_eq!(x.len(), d);
+            let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let mut z = vec![0f64; 4 * hd];
+            for r in 0..4 * hd {
+                let mut acc = self.bias[r] as f64;
+                for (k, &xv) in x64.iter().enumerate() {
+                    acc += self.wx[r * d + k] as f64 * xv;
+                }
+                for (k, &hv) in h.iter().enumerate() {
+                    acc += self.wh[r * hd + k] as f64 * hv;
+                }
+                z[r] = acc;
+            }
+            tape.xs.push(x64);
+            tape.h_prev.push(h.clone());
+            tape.c_prev.push(c.clone());
+            let mut h_new = vec![0f64; hd];
+            let mut c_new = vec![0f64; hd];
+            for j in 0..hd {
+                let f = sigmoid(z[j]);
+                let i = sigmoid(z[hd + j]);
+                let o = sigmoid(z[2 * hd + j]);
+                let g = z[3 * hd + j].tanh();
+                c_new[j] = f * c[j] + i * g;
+                h_new[j] = o * c_new[j].tanh();
+            }
+            tape.z.push(z);
+            tape.c_new.push(c_new.clone());
+            tape.h_new.push(h_new.clone());
+            h = h_new;
+            c = c_new;
+        }
+        tape
+    }
+
+    /// Analytic truncated-BPTT gradients: given per-step cotangents
+    /// `dh_seq[t]` of the hidden outputs, accumulate `dwx`/`dwh`/`db`
+    /// and return per-step input cotangents. This is the equation set
+    /// the quantized backward in `train::backward` implements under
+    /// the paper's quantization discipline; here it runs unquantized
+    /// in f64 so it can be pinned against central finite differences
+    /// (`tests/gradcheck.rs`).
+    pub fn bptt(&self, tape: &RefTape, dh_seq: &[Vec<f64>]) -> RefGrads {
+        let hd = self.hidden;
+        let d = self.input_dim;
+        let t_n = tape.z.len();
+        assert_eq!(dh_seq.len(), t_n);
+        let sigmoid = |v: f64| 1.0 / (1.0 + (-v).exp());
+        let mut grads = RefGrads {
+            dwx: vec![0f64; 4 * hd * d],
+            dwh: vec![0f64; 4 * hd * hd],
+            db: vec![0f64; 4 * hd],
+            dx: (0..t_n).map(|_| vec![0f64; d]).collect(),
+        };
+        let mut dh_rec = vec![0f64; hd];
+        let mut dc = vec![0f64; hd];
+        let mut dz = vec![0f64; 4 * hd];
+        for t in (0..t_n).rev() {
+            let z = &tape.z[t];
+            for j in 0..hd {
+                let f = sigmoid(z[j]);
+                let i = sigmoid(z[hd + j]);
+                let o = sigmoid(z[2 * hd + j]);
+                let g = z[3 * hd + j].tanh();
+                let th_c = tape.c_new[t][j].tanh();
+                let dh = dh_seq[t][j] + dh_rec[j];
+                let d_o = dh * th_c;
+                let dcj = dc[j] + dh * o * (1.0 - th_c * th_c);
+                let df = dcj * tape.c_prev[t][j];
+                let di = dcj * g;
+                let dg = dcj * i;
+                dc[j] = dcj * f;
+                dz[j] = df * f * (1.0 - f);
+                dz[hd + j] = di * i * (1.0 - i);
+                dz[2 * hd + j] = d_o * o * (1.0 - o);
+                dz[3 * hd + j] = dg * (1.0 - g * g);
+            }
+            for r in 0..4 * hd {
+                let dzr = dz[r];
+                grads.db[r] += dzr;
+                for (k, &xv) in tape.xs[t].iter().enumerate() {
+                    grads.dwx[r * d + k] += dzr * xv;
+                }
+                for (k, &hv) in tape.h_prev[t].iter().enumerate() {
+                    grads.dwh[r * hd + k] += dzr * hv;
+                }
+            }
+            for k in 0..d {
+                let mut acc = 0f64;
+                for r in 0..4 * hd {
+                    acc += self.wx[r * d + k] as f64 * dz[r];
+                }
+                grads.dx[t][k] = acc;
+            }
+            for k in 0..hd {
+                let mut acc = 0f64;
+                for r in 0..4 * hd {
+                    acc += self.wh[r * hd + k] as f64 * dz[r];
+                }
+                dh_rec[k] = acc;
+            }
+        }
+        grads
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -6,14 +6,20 @@
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
 //!                                        # batched inference server + load gen
-//! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]                          [pjrt]
+//! floatsd-lstm train [--steps N --hidden H --out ckpt.tensors ...]
+//!                                        # offline pure-rust quantized training
+//! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```
 //!
-//! Subcommands marked `[pjrt]` need the crate built with
-//! `--features pjrt` (and real XLA bindings in place of the offline
-//! stub); everything else — including the serving engine — is pure
-//! rust and always available.
+//! `train` without `--artifact` runs the offline pure-rust trainer
+//! ([`floatsd_lstm::train`]): a tiny char-LM trained from scratch
+//! under the paper's full quantization scheme, whose checkpoint
+//! `serve --model` loads directly. Subcommands marked `[pjrt]` need
+//! the crate built with `--features pjrt` (and real XLA bindings in
+//! place of the offline stub); everything else — the serving engine
+//! and the offline trainer included — is pure rust and always
+//! available.
 
 use anyhow::Result;
 
@@ -28,6 +34,13 @@ fn main() -> Result<()> {
         Some("formats") => formats(),
         Some("hardware") => hardware(),
         Some("serve") => floatsd_lstm::serve::demo::run(&args),
+        // `--artifact` selects the PJRT/XLA experiment path; without it
+        // the offline pure-rust trainer runs (always available). A bare
+        // `--artifact` flag (value forgotten) must reach the PJRT path
+        // too, so it errors instead of silently training offline.
+        Some("train") if args.opt("artifact").is_none() && !args.has_flag("artifact") => {
+            floatsd_lstm::train::run_cli(&args)
+        }
         Some("train") => train(&args),
         Some("suite") => suite(&args),
         _ => {
@@ -182,6 +195,7 @@ fn suite(_args: &Args) -> Result<()> {
 fn pjrt_unavailable(cmd: &str) -> Result<()> {
     anyhow::bail!(
         "`{cmd}` needs the PJRT training runtime — rebuild with `cargo build --features pjrt` \
-         (and point the `xla` dependency at real PJRT bindings; see vendor/xla)"
+         (and point the `xla` dependency at real PJRT bindings; see vendor/xla). \
+         For pure-rust offline training, run `train` without `--artifact`."
     )
 }

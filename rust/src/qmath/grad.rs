@@ -1,0 +1,201 @@
+//! Gradient-side kernels of the training engine — the backward
+//! siblings of [`super::vector::matvec_fast`]/[`matmul_fast`].
+//!
+//! The backward pass of a quantized matmul `y = W·x` needs two
+//! contractions against the *same* FloatSD8 weight matrix:
+//!
+//! * `dx = Wᵀ·dy` — propagated gradient (a "backward activation",
+//!   FP8 on the wire per paper Table II);
+//! * `dW += dy ⊗ x` — parameter gradient (accumulated across time
+//!   steps and streams, quantized to FP8 once per step like the L2
+//!   graph's `tree_map(fp8, grads)`).
+//!
+//! The transposed contraction uses the identical accumulation
+//! discipline as the forward kernel: exact f64 sums over
+//! [`MAC_GROUP`]-sized groups (here groups of *rows*, i.e. output
+//! units), one FP16 rounding per group — so the paper's "FP16
+//! additions suffice for every accumulation" claim covers the backward
+//! pass too. [`dot_col_chained`] is the single per-column kernel both
+//! the per-vector and the batched path drive, which makes
+//! [`matmul_t_fast`] bit-identical to per-stream [`matvec_t_fast`]
+//! calls by construction (same argument as the forward pair).
+
+use crate::formats::{round_f8, Fp16};
+
+use super::mac::MAC_GROUP;
+use super::vector::QMatrix;
+
+/// One column of the transposed product: `Σ_r dy[r] · W[r, c]`,
+/// f64-exact per [`MAC_GROUP`] rows, one FP16 rounding per group.
+#[inline]
+fn dot_col_chained(w: &QMatrix, c: usize, dy: &[f32]) -> f32 {
+    let rows = w.rows;
+    let mut acc = 0f32;
+    let mut r = 0;
+    while r + MAC_GROUP <= rows {
+        let g = dy[r] as f64 * w.row_decoded(r)[c] as f64
+            + dy[r + 1] as f64 * w.row_decoded(r + 1)[c] as f64
+            + dy[r + 2] as f64 * w.row_decoded(r + 2)[c] as f64
+            + dy[r + 3] as f64 * w.row_decoded(r + 3)[c] as f64;
+        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+        r += MAC_GROUP;
+    }
+    if r < rows {
+        let mut g = 0f64;
+        for rr in r..rows {
+            g += dy[rr] as f64 * w.row_decoded(rr)[c] as f64;
+        }
+        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+    }
+    acc
+}
+
+/// Transposed fast matvec: `out[c] = Σ_r dy[r]·W[r,c]` with the
+/// forward kernel's FP16-per-group accumulation discipline.
+pub fn matvec_t_fast(w: &QMatrix, dy: &[f32], out: &mut [f32]) {
+    assert_eq!(dy.len(), w.rows);
+    assert_eq!(out.len(), w.cols);
+    for c in 0..w.cols {
+        out[c] = dot_col_chained(w, c, dy);
+    }
+}
+
+/// Batched transposed matmul: `outs[b] = Wᵀ·dys[b]` for a whole batch,
+/// column-stationary (each weight column is walked once per batch).
+/// Bit-identical to `batch` independent [`matvec_t_fast`] calls —
+/// every `(column, stream)` pair runs the same [`dot_col_chained`].
+pub fn matmul_t_fast(w: &QMatrix, dys: &[f32], batch: usize, outs: &mut [f32]) {
+    assert_eq!(dys.len(), batch * w.rows);
+    assert_eq!(outs.len(), batch * w.cols);
+    for c in 0..w.cols {
+        for b in 0..batch {
+            outs[b * w.cols + c] = dot_col_chained(w, c, &dys[b * w.rows..(b + 1) * w.rows]);
+        }
+    }
+}
+
+/// Rank-1 parameter-gradient accumulation: `acc[r,c] += dy[r]·x[c]`
+/// (row-major `[rows][cols]`, the QMatrix layout). Plain f32 adds —
+/// the L2 graph also accumulates weight gradients in full precision
+/// and quantizes the *final* tensor to FP8 (see `optim.process_grads`).
+pub fn outer_acc(dy: &[f32], x: &[f32], acc: &mut [f32]) {
+    assert_eq!(acc.len(), dy.len() * x.len());
+    let cols = x.len();
+    for (r, &d) in dy.iter().enumerate() {
+        let row = &mut acc[r * cols..(r + 1) * cols];
+        for (a, &xv) in row.iter_mut().zip(x) {
+            *a += d * xv;
+        }
+    }
+}
+
+/// Quantize a gradient buffer to the FP8 (1-5-2) grid in place — the
+/// paper's "all gradients 8 bits" boundary (Table II).
+pub fn quantize_fp8_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_f8(*x);
+    }
+}
+
+/// True when a raw (still loss-scaled) gradient buffer has overflowed
+/// the FP8 gradient grid: non-finite values or magnitudes at/above
+/// `F8_MAX` mean the FP8 quantization would saturate and corrupt the
+/// update — the dynamic loss scaler treats this as an overflow step.
+pub fn grads_overflow(xs: &[f32]) -> bool {
+    xs.iter().any(|v| !v.is_finite() || v.abs() >= crate::formats::fp8::F8_MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::round_f16;
+    use crate::rng::SplitMix64;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (QMatrix, Vec<f32>) {
+        let mut rng = SplitMix64::new(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w = QMatrix::from_f32(rows, cols, &data);
+        let dy: Vec<f32> = (0..rows).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();
+        (w, dy)
+    }
+
+    #[test]
+    fn transpose_matches_explicit_transposed_forward() {
+        // Wᵀ·dy through the gradient kernel must equal building the
+        // transposed matrix explicitly and running the forward kernel.
+        for &(rows, cols) in &[(8usize, 6usize), (5, 7), (12, 4), (1, 1), (3, 9)] {
+            let (w, dy) = setup(rows, cols, (rows * 31 + cols) as u64);
+            let mut t = vec![0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r] = w.row_decoded(r)[c];
+                }
+            }
+            let wt = QMatrix::from_f32(cols, rows, &t);
+            let zero = vec![0f32; cols];
+            let mut want = vec![0f32; cols];
+            crate::qmath::vector::matvec_fast(&wt, &dy, &zero, &mut want);
+            let mut got = vec![0f32; cols];
+            matvec_t_fast(&w, &dy, &mut got);
+            for c in 0..cols {
+                assert_eq!(got[c].to_bits(), want[c].to_bits(), "({rows}x{cols}) col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_transpose_matches_per_stream() {
+        for &(rows, cols) in &[(6usize, 5usize), (9, 7), (4, 4)] {
+            let (w, _) = setup(rows, cols, 5);
+            let mut rng = SplitMix64::new(11);
+            let batch = 4;
+            let dys: Vec<f32> =
+                (0..batch * rows).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();
+            let mut outs = vec![0f32; batch * cols];
+            matmul_t_fast(&w, &dys, batch, &mut outs);
+            for b in 0..batch {
+                let mut one = vec![0f32; cols];
+                matvec_t_fast(&w, &dys[b * rows..(b + 1) * rows], &mut one);
+                for c in 0..cols {
+                    assert_eq!(
+                        outs[b * cols + c].to_bits(),
+                        one[c].to_bits(),
+                        "({rows}x{cols}) stream {b} col {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_output_lands_on_fp16_grid() {
+        let (w, dy) = setup(8, 6, 3);
+        let mut out = vec![0f32; 6];
+        matvec_t_fast(&w, &dy, &mut out);
+        for &v in &out {
+            assert_eq!(v, round_f16(v), "chained output must sit on the FP16 grid");
+        }
+    }
+
+    #[test]
+    fn outer_acc_is_rank_one_update() {
+        let dy = [1.0f32, -2.0, 0.5];
+        let x = [2.0f32, 4.0];
+        let mut acc = vec![1.0f32; 6];
+        outer_acc(&dy, &x, &mut acc);
+        assert_eq!(acc, vec![3.0, 5.0, -3.0, -7.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn overflow_detection() {
+        assert!(!grads_overflow(&[0.0, 1.0, -114687.0]));
+        assert!(grads_overflow(&[0.0, f32::NAN]));
+        assert!(grads_overflow(&[f32::INFINITY]));
+        assert!(grads_overflow(&[200000.0]));
+        let mut g = vec![3.1f32, -0.2];
+        quantize_fp8_inplace(&mut g);
+        for &v in &g {
+            assert_eq!(v, round_f8(v));
+        }
+    }
+}

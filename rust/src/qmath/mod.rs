@@ -7,15 +7,20 @@
 //!   hardware's *exact-sum-then-round* semantics (Fig. 8: partial
 //!   products aligned and added in a carry-save tree, rounded once);
 //! * [`vector`] — matvec/matmul built from the MAC (the rust inference
-//!   engine hot path), with a bit-identical fast path.
+//!   engine hot path), with a bit-identical fast path;
+//! * [`grad`] — the backward-pass siblings (transposed contractions,
+//!   rank-1 gradient accumulation, FP8 gradient quantization) used by
+//!   the offline training engine in [`crate::train`].
 //!
 //! Everything here is cross-validated three ways: against the jnp
 //! golden vectors, against the bit-level pipelined MAC simulator in
 //! [`crate::hardware`], and against the pure-f32 reference.
 
+pub mod grad;
 pub mod mac;
 pub mod qsigmoid;
 pub mod vector;
 
+pub use grad::{matmul_t_fast, matvec_t_fast, outer_acc, quantize_fp8_inplace};
 pub use mac::{mac_exact, mac_serial, MacMode};
 pub use qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8, SigmoidLut};

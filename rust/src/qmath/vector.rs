@@ -51,6 +51,23 @@ impl QMatrix {
     pub fn storage_bytes(&self) -> usize {
         self.codes.len()
     }
+
+    /// Apply one optimizer step to this matrix under the paper's
+    /// FP16-master scheme (§IV-C): per weight, `masters[k]` absorbs
+    /// `deltas[k]` with one FP16 rounding
+    /// ([`FloatSdFormat::apply_update`](crate::formats::FloatSdFormat::apply_update)),
+    /// and the live code + decoded fast-path copy are re-encoded to the
+    /// nearest FloatSD8 value of the new master.
+    pub fn apply_master_update(&mut self, masters: &mut [f32], deltas: &[f32]) {
+        assert_eq!(masters.len(), self.codes.len());
+        assert_eq!(deltas.len(), self.codes.len());
+        for k in 0..self.codes.len() {
+            let (m, code) = FLOAT_SD8.apply_update(masters[k], deltas[k]);
+            masters[k] = m;
+            self.codes[k] = code;
+            self.decoded[k] = FLOAT_SD8.decode(code);
+        }
+    }
 }
 
 /// y[r] = round chain of (bias[r] + Σ_c x[c]·W[r,c]) via the MAC.
@@ -190,6 +207,25 @@ mod tests {
                 for (a, e) in out[b * rows..(b + 1) * rows].iter().zip(&y) {
                     assert_eq!(a.to_bits(), e.to_bits(), "({rows}x{cols}) stream {b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_master_update_keeps_code_and_decoded_in_sync() {
+        let mut rng = SplitMix64::new(21);
+        let mut masters: Vec<f32> = (0..12)
+            .map(|_| crate::formats::round_f16(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let mut w = QMatrix::from_f32(3, 4, &masters);
+        let deltas: Vec<f32> = (0..12).map(|_| rng.uniform(-0.2, 0.2)).collect();
+        w.apply_master_update(&mut masters, &deltas);
+        for r in 0..3 {
+            for c in 0..4 {
+                let k = r * 4 + c;
+                assert_eq!(masters[k], crate::formats::round_f16(masters[k]));
+                assert_eq!(w.row_decoded(r)[c], FLOAT_SD8.decode(w.row_codes(r)[c]));
+                assert_eq!(w.row_decoded(r)[c], FLOAT_SD8.quantize(masters[k]));
             }
         }
     }

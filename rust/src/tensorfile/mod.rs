@@ -54,6 +54,12 @@ impl Tensor {
         Tensor { name: name.to_string(), dtype: DType::I32, shape: shape.to_vec(), data }
     }
 
+    /// Convenience: a 0-d f32 tensor (checkpoint metadata fields like
+    /// the trainer's `meta/steps`).
+    pub fn scalar_f32(name: &str, value: f32) -> Self {
+        Tensor::from_f32(name, &[], &[value])
+    }
+
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
@@ -180,6 +186,17 @@ mod tests {
         }
         assert_eq!(back[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(back[1].as_i32().unwrap(), vec![-1, 0, 7, i32::MAX]);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let dir = std::env::temp_dir().join("fsd_tensors_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("scalar.tensors");
+        write_tensors(&p, &[Tensor::scalar_f32("meta/steps", 42.0)]).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back[0].shape, Vec::<usize>::new());
+        assert_eq!(back[0].as_f32().unwrap(), vec![42.0]);
     }
 
     #[test]

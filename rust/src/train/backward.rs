@@ -1,0 +1,397 @@
+//! Truncated-BPTT backward passes over the forward tapes — the
+//! gradient twins of `step_batch`/`forward_batch_traced`.
+//!
+//! Quantization discipline (paper Table II + the L2 graph's
+//! fake-quant wiring in `python/compile/fq.py`):
+//!
+//! * quantized forward nonlinearities get **straight-through**
+//!   derivatives: the unquantized σ/tanh slope at the recorded
+//!   pre-activation (exactly `fq.sigmoid_sd8`'s custom VJP);
+//! * per-step gate cotangents `dz` and propagated inter-layer
+//!   gradients `dx` are FP8-quantized ("all gradients 8 bits");
+//! * the two transposed contractions (`Wᵀ·dz`) run the FP16-chained
+//!   [`matmul_t_fast`] kernel; the recurrent cell-state cotangent is
+//!   rounded to FP16 each step (all accumulations ≤ 16 bits);
+//! * parameter gradients accumulate per stream in f32 and are reduced
+//!   in stream order — [`QLstmCell::backward_batch`] is therefore
+//!   **bit-identical** to B independent [`QLstmCell::backward`] calls
+//!   folded with [`CellGrads::add_assign`] in the same order (pinned
+//!   by `tests/batched_equivalence.rs`).
+
+use crate::formats::round_f16;
+use crate::lstm::cell::QLstmCell;
+use crate::lstm::QLstmStack;
+use crate::qmath::grad::{matmul_t_fast, outer_acc, quantize_fp8_inplace};
+use crate::qmath::qsigmoid::{sigmoid_sd8, tanh_fp8};
+
+use super::tape::{CellTape, StackTape};
+
+/// Parameter gradients of one cell, in the QMatrix (row-major
+/// `[out][in]`) layout — the same layout the FP16 master copies use.
+#[derive(Clone, Debug)]
+pub struct CellGrads {
+    pub dwx: Vec<f32>,
+    pub dwh: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl CellGrads {
+    pub fn zeros(cell: &QLstmCell) -> Self {
+        CellGrads {
+            dwx: vec![0.0; 4 * cell.hidden * cell.input_dim],
+            dwh: vec![0.0; 4 * cell.hidden * cell.hidden],
+            db: vec![0.0; 4 * cell.hidden],
+        }
+    }
+
+    /// Elementwise accumulate (the stream-order reduction contract).
+    pub fn add_assign(&mut self, other: &CellGrads) {
+        for (a, b) in self.dwx.iter_mut().zip(&other.dwx) {
+            *a += b;
+        }
+        for (a, b) in self.dwh.iter_mut().zip(&other.dwh) {
+            *a += b;
+        }
+        for (a, b) in self.db.iter_mut().zip(&other.db) {
+            *a += b;
+        }
+    }
+}
+
+/// Parameter gradients of a whole stack.
+pub struct StackGrads {
+    /// embedding-table gradient, `[vocab*dim]`
+    pub emb: Vec<f32>,
+    pub layers: Vec<CellGrads>,
+    /// dense-head weight gradient in QMatrix layout `[n_out*H_top]`
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl StackGrads {
+    pub fn zeros(stack: &QLstmStack) -> Self {
+        StackGrads {
+            emb: vec![0.0; stack.embed.vocab * stack.embed.dim],
+            layers: stack.layers.iter().map(|l| CellGrads::zeros(&l.fwd)).collect(),
+            head_w: vec![0.0; stack.head.w.rows * stack.head.w.cols],
+            head_b: vec![0.0; stack.head.w.rows],
+        }
+    }
+
+    /// All gradient tensors as mutable slices (uniform post-processing:
+    /// overflow check, FP8 quantization, unscaling, clipping).
+    pub fn slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut out: Vec<&mut [f32]> = vec![&mut self.emb, &mut self.head_w, &mut self.head_b];
+        for l in &mut self.layers {
+            out.push(&mut l.dwx);
+            out.push(&mut l.dwh);
+            out.push(&mut l.db);
+        }
+        out
+    }
+}
+
+impl QLstmCell {
+    /// BPTT over a recorded window for `tape.batch` streams.
+    ///
+    /// `dh_seq[t]` is the incoming cotangent of the step-`t` hidden
+    /// output (flat `[B*H]`, from the layer above / the head).
+    /// Parameter gradients are **accumulated into** `grads`; the
+    /// return value is `dx_seq` — per-step input cotangents (flat
+    /// `[B*D]`, FP8 grid), i.e. the `dh_seq` of the layer below.
+    /// Gradients are truncated at the window boundary (`dh`, `dc`
+    /// start at zero; the `t = 0` carry-out is dropped).
+    pub fn backward_batch(
+        &self,
+        tape: &CellTape,
+        dh_seq: &[Vec<f32>],
+        grads: &mut CellGrads,
+    ) -> Vec<Vec<f32>> {
+        let b_n = tape.batch;
+        let hdim = self.hidden;
+        let d = self.input_dim;
+        assert_eq!(tape.input_dim, d, "tape recorded for a different cell");
+        assert_eq!(tape.hidden, hdim, "tape recorded for a different cell");
+        let t_n = tape.steps.len();
+        assert_eq!(dh_seq.len(), t_n);
+
+        // Per-stream accumulators, reduced in stream order at the end:
+        // the accumulation order inside each stream is its own reversed
+        // time order, exactly as in an independent backward call.
+        let mut gbuf: Vec<CellGrads> = (0..b_n).map(|_| CellGrads::zeros(self)).collect();
+        let mut dh_rec = vec![0f32; b_n * hdim];
+        let mut dc = vec![0f32; b_n * hdim];
+        let mut dz = vec![0f32; b_n * 4 * hdim];
+        let mut dx_seq: Vec<Vec<f32>> = (0..t_n).map(|_| vec![0f32; b_n * d]).collect();
+
+        for t in (0..t_n).rev() {
+            let step = &tape.steps[t];
+            assert_eq!(dh_seq[t].len(), b_n * hdim);
+            for b in 0..b_n {
+                self.backward_units(
+                    &step.z[b * 4 * hdim..(b + 1) * 4 * hdim],
+                    &step.c_prev[b * hdim..(b + 1) * hdim],
+                    &step.c_new[b * hdim..(b + 1) * hdim],
+                    &dh_seq[t][b * hdim..(b + 1) * hdim],
+                    &dh_rec[b * hdim..(b + 1) * hdim],
+                    &mut dc[b * hdim..(b + 1) * hdim],
+                    &mut dz[b * 4 * hdim..(b + 1) * 4 * hdim],
+                );
+            }
+            // gate cotangents onto the FP8 gradient grid (Table II)
+            quantize_fp8_inplace(&mut dz);
+            // dx = Wxᵀ·dz — backward activation for the layer below
+            matmul_t_fast(&self.wx, &dz, b_n, &mut dx_seq[t]);
+            quantize_fp8_inplace(&mut dx_seq[t]);
+            // dh_prev = Whᵀ·dz — recurrent cotangent for step t-1
+            matmul_t_fast(&self.wh, &dz, b_n, &mut dh_rec);
+            // parameter gradients
+            for b in 0..b_n {
+                let dzb = &dz[b * 4 * hdim..(b + 1) * 4 * hdim];
+                outer_acc(dzb, &step.x[b * d..(b + 1) * d], &mut gbuf[b].dwx);
+                outer_acc(dzb, &step.h_prev[b * hdim..(b + 1) * hdim], &mut gbuf[b].dwh);
+                for (a, g) in gbuf[b].db.iter_mut().zip(dzb) {
+                    *a += g;
+                }
+            }
+        }
+        for g in &gbuf {
+            grads.add_assign(g);
+        }
+        dx_seq
+    }
+
+    /// Single-stream BPTT (a `batch = 1` tape) — see
+    /// [`Self::backward_batch`] for the contract.
+    pub fn backward(
+        &self,
+        tape: &CellTape,
+        dh_seq: &[Vec<f32>],
+        grads: &mut CellGrads,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(tape.batch, 1, "backward: use backward_batch for batched tapes");
+        self.backward_batch(tape, dh_seq, grads)
+    }
+
+    /// Per-unit backward of Eq. 1–6 for one stream at one step.
+    ///
+    /// Reads the recorded pre-activations `z` and states; consumes the
+    /// incoming hidden cotangent (`dh_in + dh_rec`) and the cell-state
+    /// cotangent `dc` (in: from step t+1, out: for step t-1, rounded
+    /// FP16); writes the gate pre-activation cotangents `dz` (4H).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_units(
+        &self,
+        z: &[f32],
+        c_prev: &[f32],
+        c_new: &[f32],
+        dh_in: &[f32],
+        dh_rec: &[f32],
+        dc: &mut [f32],
+        dz: &mut [f32],
+    ) {
+        let hdim = self.hidden;
+        let sigmoid = |v: f32| 1.0 / (1.0 + (-v).exp());
+        for j in 0..hdim {
+            let zf = z[j];
+            let zi = z[hdim + j];
+            let zo = z[2 * hdim + j];
+            let zg = z[3 * hdim + j];
+
+            // quantized forward values (recomputed — identical to the
+            // forward pass by determinism of the quantizers)
+            let f = sigmoid_sd8(zf);
+            let i = sigmoid_sd8(zi);
+            let o = sigmoid_sd8(zo);
+            let g = tanh_fp8(zg);
+            let tq = tanh_fp8(c_new[j]);
+
+            // straight-through slopes (unquantized nonlinearities)
+            let sf = sigmoid(zf);
+            let si = sigmoid(zi);
+            let so = sigmoid(zo);
+            let th_g = zg.tanh();
+            let th_c = c_new[j].tanh();
+
+            let dh = dh_in[j] + dh_rec[j];
+            // h = round_f8(o · tanh_q(c)) — STE through round_f8
+            let d_o = dh * tq;
+            let dcj = dc[j] + dh * o * (1.0 - th_c * th_c);
+            // c = round_f16(f·c_prev + i·g) — STE through round_f16
+            let df = dcj * c_prev[j];
+            let di = dcj * g;
+            let dg = dcj * i;
+            // carry to step t-1 on the FP16 accumulation grid
+            dc[j] = round_f16(dcj * f);
+
+            dz[j] = df * sf * (1.0 - sf);
+            dz[hdim + j] = di * si * (1.0 - si);
+            dz[2 * hdim + j] = d_o * so * (1.0 - so);
+            dz[3 * hdim + j] = dg * (1.0 - th_g * th_g);
+        }
+    }
+}
+
+impl QLstmStack {
+    /// BPTT through head → layers (top-down) → embedding over a
+    /// recorded window. `dlogits[t]` is the loss cotangent of the
+    /// step-`t` logits (flat `[B*n_out]`, already loss-scaled and on
+    /// the FP8 grid — see [`super::loss::cross_entropy_grad`]).
+    /// Gradients are accumulated into `grads`.
+    pub fn backward_batch(
+        &self,
+        tape: &StackTape,
+        dlogits: &[Vec<f32>],
+        grads: &mut StackGrads,
+    ) {
+        let b_n = tape.batch;
+        let n_out = self.n_out();
+        let h_top = self.layers.last().expect("stack has layers").fwd.hidden;
+        let t_n = tape.tops.len();
+        assert_eq!(dlogits.len(), t_n);
+        assert_eq!(tape.ids.len(), t_n);
+
+        // dense head: dh_top[t] = Wᵀ·dlogits[t]; dW += dlogits ⊗ top
+        let mut dh_seq: Vec<Vec<f32>> = Vec::with_capacity(t_n);
+        for t in 0..t_n {
+            let dl = &dlogits[t];
+            assert_eq!(dl.len(), b_n * n_out);
+            let mut dh = vec![0f32; b_n * h_top];
+            matmul_t_fast(&self.head.w, dl, b_n, &mut dh);
+            quantize_fp8_inplace(&mut dh);
+            for b in 0..b_n {
+                let dlb = &dl[b * n_out..(b + 1) * n_out];
+                outer_acc(dlb, &tape.tops[t][b * h_top..(b + 1) * h_top], &mut grads.head_w);
+                for (a, g) in grads.head_b.iter_mut().zip(dlb) {
+                    *a += g;
+                }
+            }
+            dh_seq.push(dh);
+        }
+
+        // LSTM layers, top-down: each layer's dx becomes the next
+        // lower layer's incoming dh
+        for l in (0..self.layers.len()).rev() {
+            let cell = &self.layers[l].fwd;
+            dh_seq = cell.backward_batch(&tape.layers[l], &dh_seq, &mut grads.layers[l]);
+        }
+
+        // embedding scatter: dL/demb[id] += dx0 (STE through the FP8
+        // lookup rounding)
+        let dim = self.embed.dim;
+        for t in 0..t_n {
+            for b in 0..b_n {
+                let id = tape.ids[t][b];
+                let row = &mut grads.emb[id * dim..(id + 1) * dim];
+                for (a, g) in row.iter_mut().zip(&dh_seq[t][b * dim..(b + 1) * dim]) {
+                    *a += g;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::round_f8;
+    use crate::lstm::cell::BatchScratch;
+    use crate::lstm::reference::F32LstmCell;
+    use crate::rng::SplitMix64;
+
+    /// The quantized BPTT must point in the same direction as the
+    /// full-precision reference BPTT on the same (well-conditioned)
+    /// problem — the paper's trainability premise, gradient edition.
+    #[test]
+    fn quantized_gradients_align_with_reference() {
+        let (d, hdim, t_n) = (4usize, 6usize, 5usize);
+        let mut rng = SplitMix64::new(17);
+        let wx: Vec<f32> = (0..d * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hdim * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * hdim).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let qcell = QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+        let rcell = F32LstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+
+        let xs: Vec<Vec<f32>> = (0..t_n)
+            .map(|_| (0..d).map(|_| round_f8(rng.uniform(-1.0, 1.0))).collect())
+            .collect();
+        let dh_seq: Vec<Vec<f32>> = (0..t_n)
+            .map(|_| (0..hdim).map(|_| round_f8(rng.uniform(-0.5, 0.5))).collect())
+            .collect();
+
+        // quantized path
+        let mut h = vec![0f32; hdim];
+        let mut c = vec![0f32; hdim];
+        let mut scr = BatchScratch::new(hdim, 1);
+        let mut tape = CellTape::new(1, d, hdim);
+        for x in &xs {
+            qcell.step_traced(x, &mut h, &mut c, &mut scr, &mut tape);
+        }
+        let mut grads = CellGrads::zeros(&qcell);
+        qcell.backward(&tape, &dh_seq, &mut grads);
+
+        // reference path
+        let rtape = rcell.forward_traced(&xs);
+        let dh64: Vec<Vec<f64>> = dh_seq
+            .iter()
+            .map(|v| v.iter().map(|&x| x as f64).collect())
+            .collect();
+        let rgrads = rcell.bptt(&rtape, &dh64);
+
+        let cosine = |a: &[f32], b: &[f64]| {
+            let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+            for (x, y) in a.iter().zip(b) {
+                dot += *x as f64 * y;
+                na += (*x as f64) * (*x as f64);
+                nb += y * y;
+            }
+            dot / (na.sqrt() * nb.sqrt()).max(1e-12)
+        };
+        // Loose directional bounds: the quantized path differs from the
+        // reference by FP8 gradient quantization, STE slopes at
+        // quantized operating points, and FP16 accumulation — the
+        // descent *direction* must survive all of that (the paper's
+        // premise), but bitwise agreement is not expected.
+        assert!(
+            cosine(&grads.dwx, &rgrads.dwx) > 0.5,
+            "dwx misaligned: cos={}",
+            cosine(&grads.dwx, &rgrads.dwx)
+        );
+        assert!(
+            cosine(&grads.dwh, &rgrads.dwh) > 0.4,
+            "dwh misaligned: cos={}",
+            cosine(&grads.dwh, &rgrads.dwh)
+        );
+        assert!(
+            cosine(&grads.db, &rgrads.db) > 0.5,
+            "db misaligned: cos={}",
+            cosine(&grads.db, &rgrads.db)
+        );
+    }
+
+    /// Zero incoming cotangents must produce exactly zero gradients.
+    #[test]
+    fn zero_cotangent_gives_zero_grads() {
+        let (d, hdim, t_n) = (3usize, 5usize, 4usize);
+        let mut rng = SplitMix64::new(2);
+        let wx: Vec<f32> = (0..d * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hdim * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b = vec![0.0; 4 * hdim];
+        let cell = QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+        let mut h = vec![0f32; hdim];
+        let mut c = vec![0f32; hdim];
+        let mut scr = BatchScratch::new(hdim, 1);
+        let mut tape = CellTape::new(1, d, hdim);
+        for _ in 0..t_n {
+            let x: Vec<f32> = (0..d).map(|_| round_f8(rng.uniform(-1.0, 1.0))).collect();
+            cell.step_traced(&x, &mut h, &mut c, &mut scr, &mut tape);
+        }
+        let dh_seq = vec![vec![0f32; hdim]; t_n];
+        let mut grads = CellGrads::zeros(&cell);
+        let dx = cell.backward(&tape, &dh_seq, &mut grads);
+        assert!(grads.dwx.iter().all(|&g| g == 0.0));
+        assert!(grads.dwh.iter().all(|&g| g == 0.0));
+        assert!(grads.db.iter().all(|&g| g == 0.0));
+        assert!(dx.iter().flatten().all(|&g| g == 0.0));
+    }
+}

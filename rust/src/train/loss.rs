@@ -1,0 +1,86 @@
+//! Cross-entropy LM head: loss + loss-scaled FP8 logit cotangents.
+//!
+//! The loss itself is measured in f64 (it is a *metric*, never fed
+//! back into the quantized datapath); the cotangent
+//! `(softmax − onehot) / count × scale` is what enters the backward
+//! pass and is therefore FP8-quantized at the source, like every other
+//! gradient in the scheme (Table II + §IV-A loss scaling).
+
+use crate::formats::round_f8;
+
+/// Softmax cross-entropy over one step's flat logits `[B*vocab]`.
+///
+/// Writes the scaled, FP8-quantized cotangents into `dlogits` (same
+/// shape) and returns the **unscaled** summed loss over the `B`
+/// tokens. `inv_count` is `1 / (batch · seq)` (mean reduction over the
+/// whole window), `scale` the current dynamic loss scale.
+pub fn cross_entropy_grad(
+    logits: &[f32],
+    targets: &[usize],
+    vocab: usize,
+    inv_count: f32,
+    scale: f32,
+    dlogits: &mut [f32],
+) -> f64 {
+    assert_eq!(logits.len(), targets.len() * vocab);
+    assert_eq!(dlogits.len(), logits.len());
+    let mut loss = 0f64;
+    for (b, &y) in targets.iter().enumerate() {
+        assert!(y < vocab, "target {y} out of vocab {vocab}");
+        let lg = &logits[b * vocab..(b + 1) * vocab];
+        let mx = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for &v in lg {
+            denom += (v - mx).exp();
+        }
+        loss += (denom.ln() + mx - lg[y]) as f64;
+        let dl = &mut dlogits[b * vocab..(b + 1) * vocab];
+        for (v, out) in dl.iter_mut().enumerate() {
+            let p = (lg[v] - mx).exp() / denom;
+            let onehot = if v == y { 1.0 } else { 0.0 };
+            *out = round_f8((p - onehot) * inv_count * scale);
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_vocab() {
+        let vocab = 8;
+        let logits = vec![0f32; 2 * vocab];
+        let mut dl = vec![0f32; 2 * vocab];
+        let loss = cross_entropy_grad(&logits, &[3, 5], vocab, 1.0, 1.0, &mut dl);
+        let want = 2.0 * (vocab as f64).ln();
+        assert!((loss - want).abs() < 1e-5, "loss {loss} vs {want}");
+    }
+
+    #[test]
+    fn cotangent_signs_and_grid() {
+        let vocab = 4;
+        let logits = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut dl = vec![0f32; 4];
+        cross_entropy_grad(&logits, &[2], vocab, 1.0, 64.0, &mut dl);
+        // target entry negative, all others positive, all on FP8 grid
+        assert!(dl[2] < 0.0, "target cotangent must push its logit up");
+        for (v, &g) in dl.iter().enumerate() {
+            if v != 2 {
+                assert!(g > 0.0, "non-target {v} must be pushed down");
+            }
+            assert_eq!(g, round_f8(g));
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_has_near_zero_loss() {
+        let vocab = 4;
+        let mut logits = vec![0f32; 4];
+        logits[1] = 30.0;
+        let mut dl = vec![0f32; 4];
+        let loss = cross_entropy_grad(&logits, &[1], vocab, 1.0, 1.0, &mut dl);
+        assert!(loss < 1e-6, "confident correct prediction: loss {loss}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Pure-rust **quantized training engine** — the paper's §III/§IV
+//! training scheme (FloatSD8 weights, FP8 gradients/activations, FP16
+//! accumulations and master copies) implemented offline, with no
+//! Python/XLA in the loop. This is the training counterpart of the
+//! [`crate::lstm`] inference engine and shares its kernels:
+//!
+//! * [`tape`] — tape-recording forwards (`step_batch_traced`,
+//!   `forward_batch_traced`) that run the *identical* inference
+//!   kernels and cache what BPTT needs;
+//! * [`backward`] — truncated-BPTT backward passes
+//!   (`QLstmCell::backward`/`backward_batch`,
+//!   `QLstmStack::backward_batch`) under the paper's quantization
+//!   discipline, on the gradient kernels in [`crate::qmath::grad`];
+//! * [`loss`] — cross-entropy LM head with loss-scaled FP8 cotangents;
+//! * [`optimizer`] — FP16 master copies + SGD-momentum + dynamic loss
+//!   scaling; the §III-B re-encode-to-FloatSD8 step lives in
+//!   [`crate::formats::FloatSdFormat::apply_update`];
+//! * [`trainer`] — the `floatsd-lstm train` loop over the
+//!   [`crate::data::lm`] char-LM stream, writing `.tensors`
+//!   checkpoints the serve subsystem loads directly.
+//!
+//! Numerics contracts (all pinned in tier-1 tests):
+//! traced forward ≡ inference forward bit-for-bit;
+//! `backward_batch` ≡ B independent `backward` calls bit-for-bit
+//! (`tests/batched_equivalence.rs`); the BPTT equation set matches
+//! central finite differences on the f32 reference cell
+//! (`tests/gradcheck.rs`); training reduces char-LM loss and its
+//! checkpoints serve bit-identically (`tests/train_offline.rs`).
+
+pub mod backward;
+pub mod loss;
+pub mod optimizer;
+pub mod tape;
+pub mod trainer;
+
+pub use backward::{CellGrads, StackGrads};
+pub use optimizer::{finalize_grads, LossScaler, MasterStack};
+pub use tape::{CellTape, StackTape};
+pub use trainer::{run_cli, StepOutcome, TrainConfig, TrainReport, Trainer};

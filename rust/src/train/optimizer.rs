@@ -1,0 +1,331 @@
+//! The paper's update discipline (§III-B / §IV-C) as an optimizer:
+//! FP16 master copies for every parameter, SGD with momentum on the
+//! masters, FloatSD8 re-encoding of the live weights after each step,
+//! and dynamic loss scaling around the FP8 gradient grid.
+//!
+//! Momentum buffers stay in f32 — the paper (like its L2 mirror in
+//! `python/compile/optim.py`) quantizes only the master copy, not the
+//! optimizer state.
+
+use crate::formats::round_f16;
+use crate::lstm::QLstmStack;
+use crate::qmath::grad::{grads_overflow, quantize_fp8_inplace};
+use crate::rng::SplitMix64;
+
+use super::backward::StackGrads;
+
+/// Dynamic loss scaler: halve on overflow (skip the step), double
+/// after `growth_interval` consecutive good steps.
+#[derive(Clone, Debug)]
+pub struct LossScaler {
+    pub scale: f32,
+    pub growth_interval: u32,
+    pub min_scale: f32,
+    pub max_scale: f32,
+    good: u32,
+    /// steps skipped because the scaled gradients overflowed FP8
+    pub skipped: u64,
+}
+
+impl LossScaler {
+    pub fn new(init: f32) -> Self {
+        LossScaler {
+            scale: init,
+            growth_interval: 250,
+            min_scale: 1.0,
+            max_scale: 32768.0,
+            good: 0,
+            skipped: 0,
+        }
+    }
+
+    /// The gradients overflowed: skip this step and back off.
+    pub fn on_overflow(&mut self) {
+        self.scale = (self.scale * 0.5).max(self.min_scale);
+        self.good = 0;
+        self.skipped += 1;
+    }
+
+    /// A step was applied cleanly; grow the scale periodically.
+    pub fn on_good_step(&mut self) {
+        self.good += 1;
+        if self.good >= self.growth_interval {
+            self.scale = (self.scale * 2.0).min(self.max_scale);
+            self.good = 0;
+        }
+    }
+}
+
+/// FP16 master copy + momentum buffer of one quantized LSTM cell, in
+/// the QMatrix (`[out][in]` row-major) layout.
+pub struct MasterCell {
+    pub wx: Vec<f32>,
+    pub wh: Vec<f32>,
+    pub b: Vec<f32>,
+    vwx: Vec<f32>,
+    vwh: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl MasterCell {
+    pub fn new(wx: Vec<f32>, wh: Vec<f32>, b: Vec<f32>) -> Self {
+        let (nx, nh, nb) = (wx.len(), wh.len(), b.len());
+        MasterCell { wx, wh, b, vwx: vec![0.0; nx], vwh: vec![0.0; nh], vb: vec![0.0; nb] }
+    }
+}
+
+/// FP16 master copies + momentum state for a whole stack. The live
+/// [`QLstmStack`] is the quantized *view* of these masters; after
+/// every applied step [`MasterStack::apply`] re-encodes the view.
+pub struct MasterStack {
+    pub emb: Vec<f32>,
+    pub layers: Vec<MasterCell>,
+    /// dense head weights in QMatrix layout `[n_out*H_top]`
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    v_emb: Vec<f32>,
+    v_head_w: Vec<f32>,
+    v_head_b: Vec<f32>,
+    /// scratch for per-tensor deltas
+    delta: Vec<f32>,
+}
+
+/// SGD-momentum step on one tensor: `v = μ·v + g`, returns `-lr·v`
+/// into `delta`.
+fn momentum_delta(v: &mut [f32], g: &[f32], lr: f32, mu: f32, delta: &mut Vec<f32>) {
+    delta.clear();
+    delta.reserve(g.len());
+    for (vk, &gk) in v.iter_mut().zip(g) {
+        *vk = mu * *vk + gk;
+        delta.push(-lr * *vk);
+    }
+}
+
+impl MasterStack {
+    /// Deterministically initialize masters (FP16 grid) and the
+    /// matching quantized stack for a fresh training run.
+    pub fn init_with_stack(
+        vocab: usize,
+        dim: usize,
+        hidden: usize,
+        n_layers: usize,
+        seed: u64,
+    ) -> (Self, QLstmStack) {
+        use crate::lstm::cell::QLstmCell;
+        use crate::lstm::model::{Dense, Embedding, QLstmLayer};
+        use crate::qmath::vector::QMatrix;
+
+        let mut rng = SplitMix64::new(seed);
+        let f16 = |v: f32| round_f16(v);
+        let emb: Vec<f32> = (0..vocab * dim).map(|_| f16(rng.normal() * 0.1)).collect();
+
+        let mut masters = Vec::with_capacity(n_layers);
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut in_dim = dim;
+        for _ in 0..n_layers.max(1) {
+            // generated directly in the QMatrix layout [4H][in]
+            let wx: Vec<f32> =
+                (0..4 * hidden * in_dim).map(|_| f16(rng.uniform(-0.3, 0.3))).collect();
+            let wh: Vec<f32> =
+                (0..4 * hidden * hidden).map(|_| f16(rng.uniform(-0.3, 0.3))).collect();
+            let b: Vec<f32> = (0..4 * hidden).map(|_| f16(rng.uniform(-0.1, 0.1))).collect();
+            layers.push(QLstmLayer {
+                fwd: QLstmCell {
+                    input_dim: in_dim,
+                    hidden,
+                    wx: QMatrix::from_f32(4 * hidden, in_dim, &wx),
+                    wh: QMatrix::from_f32(4 * hidden, hidden, &wh),
+                    bias: b.clone(),
+                },
+                bwd: None,
+            });
+            masters.push(MasterCell::new(wx, wh, b));
+            in_dim = hidden;
+        }
+
+        let head_w: Vec<f32> =
+            (0..vocab * in_dim).map(|_| f16(rng.uniform(-0.3, 0.3))).collect();
+        let head_b: Vec<f32> = (0..vocab).map(|_| f16(rng.uniform(-0.1, 0.1))).collect();
+        let stack = QLstmStack {
+            embed: Embedding { vocab, dim, table: emb.clone() },
+            layers,
+            head: Dense {
+                w: QMatrix::from_f32(vocab, in_dim, &head_w),
+                bias: head_b.clone(),
+            },
+        };
+        let ms = MasterStack {
+            v_emb: vec![0.0; emb.len()],
+            v_head_w: vec![0.0; head_w.len()],
+            v_head_b: vec![0.0; head_b.len()],
+            emb,
+            layers: masters,
+            head_w,
+            head_b,
+            delta: Vec::new(),
+        };
+        (ms, stack)
+    }
+
+    /// Apply one SGD-momentum step to every parameter: FloatSD8
+    /// tensors go through the master-update/re-encode rule
+    /// ([`QMatrix::apply_master_update`](crate::qmath::vector::QMatrix::apply_master_update));
+    /// FP16-native tensors (biases, embedding) update their master
+    /// directly and copy it into the live stack. `grads` must already
+    /// be unscaled.
+    pub fn apply(&mut self, stack: &mut QLstmStack, grads: &StackGrads, lr: f32, mu: f32) {
+        assert_eq!(stack.layers.len(), self.layers.len());
+        for (l, m) in self.layers.iter_mut().enumerate() {
+            let cell = &mut stack.layers[l].fwd;
+            let g = &grads.layers[l];
+            momentum_delta(&mut m.vwx, &g.dwx, lr, mu, &mut self.delta);
+            cell.wx.apply_master_update(&mut m.wx, &self.delta);
+            momentum_delta(&mut m.vwh, &g.dwh, lr, mu, &mut self.delta);
+            cell.wh.apply_master_update(&mut m.wh, &self.delta);
+            momentum_delta(&mut m.vb, &g.db, lr, mu, &mut self.delta);
+            for (k, d) in self.delta.iter().enumerate() {
+                m.b[k] = round_f16(m.b[k] + d);
+            }
+            cell.bias.copy_from_slice(&m.b);
+        }
+        momentum_delta(&mut self.v_head_w, &grads.head_w, lr, mu, &mut self.delta);
+        stack.head.w.apply_master_update(&mut self.head_w, &self.delta);
+        momentum_delta(&mut self.v_head_b, &grads.head_b, lr, mu, &mut self.delta);
+        for (k, d) in self.delta.iter().enumerate() {
+            self.head_b[k] = round_f16(self.head_b[k] + d);
+        }
+        stack.head.bias.copy_from_slice(&self.head_b);
+        momentum_delta(&mut self.v_emb, &grads.emb, lr, mu, &mut self.delta);
+        for (k, d) in self.delta.iter().enumerate() {
+            self.emb[k] = round_f16(self.emb[k] + d);
+        }
+        stack.embed.table.copy_from_slice(&self.emb);
+    }
+}
+
+/// Post-process raw (still loss-scaled) gradients in the paper's
+/// order: overflow check against the FP8 grid, FP8 quantization,
+/// exact power-of-two unscaling, optional global-norm clipping.
+/// Returns `false` (and leaves the gradients untouched) on overflow —
+/// the caller must skip the step and shrink the scale.
+pub fn finalize_grads(grads: &mut StackGrads, scale: f32, clip_norm: Option<f32>) -> bool {
+    {
+        let slices = grads.slices_mut();
+        if slices.iter().any(|s| grads_overflow(s)) {
+            return false;
+        }
+        let inv = 1.0 / scale;
+        for s in slices {
+            quantize_fp8_inplace(s);
+            for g in s.iter_mut() {
+                *g *= inv;
+            }
+        }
+    }
+    if let Some(max_norm) = clip_norm {
+        let slices = grads.slices_mut();
+        let total: f64 = slices
+            .iter()
+            .map(|s| s.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>())
+            .sum();
+        let total = total.sqrt() as f32;
+        if total > max_norm {
+            let k = max_norm / (total + 1e-6);
+            for s in slices {
+                for g in s.iter_mut() {
+                    *g *= k;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_scaler_halves_and_grows() {
+        let mut s = LossScaler::new(1024.0);
+        s.on_overflow();
+        assert_eq!(s.scale, 512.0);
+        assert_eq!(s.skipped, 1);
+        s.growth_interval = 2;
+        s.on_good_step();
+        assert_eq!(s.scale, 512.0);
+        s.on_good_step();
+        assert_eq!(s.scale, 1024.0, "doubles after the growth interval");
+        for _ in 0..100 {
+            s.on_overflow();
+        }
+        assert_eq!(s.scale, s.min_scale, "never collapses below min_scale");
+    }
+
+    #[test]
+    fn init_masters_match_live_stack() {
+        let (ms, stack) = MasterStack::init_with_stack(16, 4, 6, 2, 3);
+        // masters on the FP16 grid; live SD8 weights are their nearest codes
+        for (l, m) in ms.layers.iter().enumerate() {
+            for &v in &m.wx {
+                assert_eq!(v, round_f16(v));
+            }
+            let cell = &stack.layers[l].fwd;
+            for r in 0..4 * cell.hidden {
+                for c in 0..cell.input_dim {
+                    assert_eq!(
+                        cell.wx.row_decoded(r)[c],
+                        crate::formats::FLOAT_SD8.quantize(m.wx[r * cell.input_dim + c])
+                    );
+                }
+            }
+            assert_eq!(cell.bias, m.b);
+        }
+        assert_eq!(stack.embed.table, ms.emb);
+        assert_eq!(stack.head.bias, ms.head_b);
+    }
+
+    #[test]
+    fn update_moves_master_and_requantizes() {
+        let (mut ms, mut stack) = MasterStack::init_with_stack(8, 3, 4, 1, 9);
+        let mut grads = StackGrads::zeros(&stack);
+        grads.layers[0].db[0] = 1.0;
+        grads.head_b[2] = -2.0;
+        let b0 = ms.layers[0].b[0];
+        let hb2 = ms.head_b[2];
+        ms.apply(&mut stack, &grads, 0.1, 0.0);
+        assert!(ms.layers[0].b[0] < b0, "positive gradient must lower the bias");
+        assert!(ms.head_b[2] > hb2, "negative gradient must raise the bias");
+        assert_eq!(stack.layers[0].fwd.bias[0], ms.layers[0].b[0]);
+        assert_eq!(stack.head.bias[2], ms.head_b[2]);
+    }
+
+    #[test]
+    fn finalize_rejects_overflow_and_unscales() {
+        let (_, stack) = MasterStack::init_with_stack(8, 3, 4, 1, 9);
+        let mut grads = StackGrads::zeros(&stack);
+        grads.emb[0] = 512.0;
+        assert!(finalize_grads(&mut grads, 1024.0, None));
+        assert_eq!(grads.emb[0], 0.5, "power-of-two unscaling is exact");
+        let mut bad = StackGrads::zeros(&stack);
+        bad.head_w[0] = f32::INFINITY;
+        assert!(!finalize_grads(&mut bad, 1024.0, None));
+    }
+
+    #[test]
+    fn finalize_clips_global_norm() {
+        let (_, stack) = MasterStack::init_with_stack(8, 3, 4, 1, 9);
+        let mut grads = StackGrads::zeros(&stack);
+        grads.emb[0] = 3.0;
+        grads.emb[1] = 4.0;
+        assert!(finalize_grads(&mut grads, 1.0, Some(1.0)));
+        let norm: f32 = grads
+            .slices_mut()
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|&g| g * g)
+            .sum::<f32>()
+            .sqrt();
+        assert!(norm <= 1.0 + 1e-4, "clipped norm {norm}");
+    }
+}

@@ -1,0 +1,308 @@
+//! Forward tapes for truncated BPTT: the traced twins of
+//! [`QLstmCell::step_batch`](crate::lstm::cell::QLstmCell::step_batch)
+//! and [`QLstmStack::step_batch`](crate::lstm::QLstmStack::step_batch).
+//!
+//! A traced step runs the **identical** kernels as the inference path
+//! — [`matmul_fast`] for the two weight matmuls and the cell's own
+//! `gates_inplace` for the Eq. 5/6 unit math — and additionally
+//! records, per time step, exactly what the backward pass needs:
+//! layer input `x`, previous state `(h, c)`, the fused gate
+//! pre-activations `z = zx + zh`, and the new cell state. Gate
+//! activations themselves are *recomputed* from `z` in the backward
+//! pass (deterministic, and 4H floats of tape instead of 12H).
+//!
+//! All tape buffers are flat and stream-major (`[b*dim ..]` per
+//! stream), matching the batched kernels, so a `batch = 1` tape is a
+//! plain single-stream tape.
+
+use crate::lstm::cell::{BatchScratch, QLstmCell};
+use crate::lstm::QLstmStack;
+use crate::qmath::vector::{matmul_fast, matvec_fast};
+
+/// Everything the backward pass needs about one time step.
+pub struct TapeStep {
+    /// layer input, flat `[B*D]` (FP8 grid)
+    pub x: Vec<f32>,
+    /// hidden state *entering* the step, flat `[B*H]` (FP8 grid)
+    pub h_prev: Vec<f32>,
+    /// cell state entering the step, flat `[B*H]` (FP16 grid)
+    pub c_prev: Vec<f32>,
+    /// fused gate pre-activations `zx + zh`, flat `[B*4H]`
+    pub z: Vec<f32>,
+    /// cell state leaving the step, flat `[B*H]` (FP16 grid)
+    pub c_new: Vec<f32>,
+}
+
+/// The recorded forward of one cell over one truncation window.
+pub struct CellTape {
+    pub batch: usize,
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub steps: Vec<TapeStep>,
+}
+
+impl CellTape {
+    pub fn new(batch: usize, input_dim: usize, hidden: usize) -> Self {
+        CellTape { batch, input_dim, hidden, steps: Vec::new() }
+    }
+
+    /// Number of recorded time steps.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+impl QLstmCell {
+    /// One traced time step for `batch` streams: advances `hs`/`cs`
+    /// exactly like [`Self::step_batch`] (bit-identical — same matmul
+    /// kernel, same `gates_inplace`, same [`BatchScratch`]) and
+    /// appends a [`TapeStep`].
+    pub fn step_batch_traced(
+        &self,
+        xs: &[f32],
+        hs: &mut [f32],
+        cs: &mut [f32],
+        batch: usize,
+        scratch: &mut BatchScratch,
+        tape: &mut CellTape,
+    ) {
+        let hdim = self.hidden;
+        assert_eq!(xs.len(), batch * self.input_dim);
+        assert_eq!(hs.len(), batch * hdim);
+        assert_eq!(cs.len(), batch * hdim);
+        assert_eq!(tape.batch, batch, "tape built for a different batch size");
+        assert_eq!(scratch.hidden, hdim, "scratch built for a different hidden size");
+        scratch.ensure(batch);
+        let BatchScratch { zx, zh, zero_bias, .. } = scratch;
+        let n = batch * 4 * hdim;
+
+        let mut step = TapeStep {
+            x: xs.to_vec(),
+            h_prev: hs.to_vec(),
+            c_prev: cs.to_vec(),
+            z: vec![0.0; n],
+            c_new: Vec::new(),
+        };
+
+        matmul_fast(&self.wx, xs, batch, &self.bias, &mut zx[..n]);
+        matmul_fast(&self.wh, hs, batch, zero_bias, &mut zh[..n]);
+        for k in 0..n {
+            // same f32 add the gate kernel performs internally
+            step.z[k] = zx[k] + zh[k];
+        }
+        for b in 0..batch {
+            self.gates_inplace(
+                &zx[b * 4 * hdim..(b + 1) * 4 * hdim],
+                &zh[b * 4 * hdim..(b + 1) * 4 * hdim],
+                &mut hs[b * hdim..(b + 1) * hdim],
+                &mut cs[b * hdim..(b + 1) * hdim],
+            );
+        }
+        step.c_new = cs.to_vec();
+        tape.steps.push(step);
+    }
+
+    /// Single-stream traced step (a `batch = 1` [`Self::step_batch_traced`],
+    /// but through [`matvec_fast`] like the scalar inference path —
+    /// the two are pinned bit-identical by `tests/batched_equivalence.rs`).
+    pub fn step_traced(
+        &self,
+        x: &[f32],
+        h: &mut [f32],
+        c: &mut [f32],
+        scratch: &mut BatchScratch,
+        tape: &mut CellTape,
+    ) {
+        let hdim = self.hidden;
+        assert_eq!(tape.batch, 1);
+        assert_eq!(scratch.hidden, hdim, "scratch built for a different hidden size");
+        scratch.ensure(1);
+        let BatchScratch { zx, zh, zero_bias, .. } = scratch;
+        let n = 4 * hdim;
+        let mut step = TapeStep {
+            x: x.to_vec(),
+            h_prev: h.to_vec(),
+            c_prev: c.to_vec(),
+            z: vec![0.0; n],
+            c_new: Vec::new(),
+        };
+        matvec_fast(&self.wx, x, &self.bias, &mut zx[..n]);
+        matvec_fast(&self.wh, h, zero_bias, &mut zh[..n]);
+        for k in 0..n {
+            step.z[k] = zx[k] + zh[k];
+        }
+        self.gates_inplace(&zx[..n], &zh[..n], h, c);
+        step.c_new = c.to_vec();
+        tape.steps.push(step);
+    }
+}
+
+/// The recorded forward of a whole stack over one truncation window.
+pub struct StackTape {
+    pub batch: usize,
+    /// token ids per time step, `ids[t][b]`
+    pub ids: Vec<Vec<usize>>,
+    /// one tape per LSTM layer
+    pub layers: Vec<CellTape>,
+    /// top-layer hidden outputs per step, flat `[B*H_top]` (FP8 grid)
+    /// — the dense head's inputs, needed for its weight gradient
+    pub tops: Vec<Vec<f32>>,
+}
+
+impl StackTape {
+    pub fn new(stack: &QLstmStack, batch: usize) -> Self {
+        let mut in_dim = stack.embed.dim;
+        let mut layers = Vec::with_capacity(stack.layers.len());
+        for l in &stack.layers {
+            layers.push(CellTape::new(batch, in_dim, l.fwd.hidden));
+            in_dim = l.fwd.hidden;
+        }
+        StackTape { batch, ids: Vec::new(), layers, tops: Vec::new() }
+    }
+}
+
+impl QLstmStack {
+    /// Traced forward of one truncated-BPTT window over `batch`
+    /// parallel lanes. `ids[t]` holds the lane tokens at step `t`;
+    /// `hs[l]`/`cs[l]` are the carried per-layer recurrent states
+    /// (flat `[B*H]`, advanced in place — pass them back next window
+    /// for stateful truncated BPTT). Returns per-step logits (flat
+    /// `[B*n_out]`). Numerics are bit-identical to
+    /// [`Self::step_batch`] on the same tokens.
+    pub fn forward_batch_traced(
+        &self,
+        ids: &[Vec<usize>],
+        hs: &mut [Vec<f32>],
+        cs: &mut [Vec<f32>],
+        scratches: &mut [BatchScratch],
+        tape: &mut StackTape,
+    ) -> Vec<Vec<f32>> {
+        assert!(self.is_unidirectional(), "training: bidirectional layers unsupported");
+        assert_eq!(hs.len(), self.layers.len());
+        assert_eq!(scratches.len(), self.layers.len());
+        let batch = tape.batch;
+        let dim = self.embed.dim;
+        let n_out = self.n_out();
+        let width = self.layers.iter().map(|l| l.fwd.hidden).fold(dim, usize::max);
+        let mut x = vec![0f32; batch * width];
+        let mut logits = Vec::with_capacity(ids.len());
+
+        for step_ids in ids {
+            assert_eq!(step_ids.len(), batch);
+            for (b, &id) in step_ids.iter().enumerate() {
+                self.embed.lookup_fp8(id, &mut x[b * dim..(b + 1) * dim]);
+            }
+            let mut in_dim = dim;
+            for (l, layer) in self.layers.iter().enumerate() {
+                let hdim = layer.fwd.hidden;
+                layer.fwd.step_batch_traced(
+                    &x[..batch * in_dim],
+                    &mut hs[l][..batch * hdim],
+                    &mut cs[l][..batch * hdim],
+                    batch,
+                    &mut scratches[l],
+                    &mut tape.layers[l],
+                );
+                x[..batch * hdim].copy_from_slice(&hs[l][..batch * hdim]);
+                in_dim = hdim;
+            }
+            tape.tops.push(x[..batch * in_dim].to_vec());
+            let mut y = vec![0f32; batch * n_out];
+            matmul_fast(&self.head.w, &x[..batch * in_dim], batch, &self.head.bias, &mut y);
+            logits.push(y);
+            tape.ids.push(step_ids.clone());
+        }
+        logits
+    }
+
+    /// Fresh per-layer trace scratches sized for `batch` streams (the
+    /// same [`BatchScratch`] the inference path uses).
+    pub fn trace_scratches(&self, batch: usize) -> Vec<BatchScratch> {
+        self.layers.iter().map(|l| BatchScratch::new(l.fwd.hidden, batch)).collect()
+    }
+
+    /// Fresh zeroed flat per-layer recurrent state for `batch` lanes:
+    /// `(hs, cs)` with `hs[l].len() == batch * hidden[l]`.
+    pub fn zero_flat_state(&self, batch: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let hs = self.layers.iter().map(|l| vec![0f32; batch * l.fwd.hidden]).collect();
+        let cs = self.layers.iter().map(|l| vec![0f32; batch * l.fwd.hidden]).collect();
+        (hs, cs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::round_f8;
+    use crate::lstm::cell::{BatchScratch, QLstmCell};
+    use crate::lstm::synthetic_stack;
+    use crate::rng::SplitMix64;
+
+    fn rand_cell(d: usize, hidden: usize, seed: u64) -> QLstmCell {
+        let mut rng = SplitMix64::new(seed);
+        let wx: Vec<f32> = (0..d * 4 * hidden).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let wh: Vec<f32> =
+            (0..hidden * 4 * hidden).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        QLstmCell::from_jax_layout(d, hidden, &wx, &wh, &b)
+    }
+
+    #[test]
+    fn traced_step_matches_untraced_bitwise() {
+        let (d, hidden, batch, t_len) = (4usize, 7usize, 3usize, 5usize);
+        let cell = rand_cell(d, hidden, 3);
+        let mut rng = SplitMix64::new(9);
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..batch * d).map(|_| round_f8(rng.uniform(-1.5, 1.5))).collect())
+            .collect();
+
+        let mut h1 = vec![0f32; batch * hidden];
+        let mut c1 = vec![0f32; batch * hidden];
+        let mut bs = BatchScratch::new(hidden, batch);
+        let mut h2 = vec![0f32; batch * hidden];
+        let mut c2 = vec![0f32; batch * hidden];
+        let mut ts = BatchScratch::new(hidden, batch);
+        let mut tape = CellTape::new(batch, d, hidden);
+        for t in 0..t_len {
+            cell.step_batch(&xs[t], &mut h1, &mut c1, batch, &mut bs);
+            cell.step_batch_traced(&xs[t], &mut h2, &mut c2, batch, &mut ts, &mut tape);
+            for (a, b) in h1.iter().zip(&h2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "h diverged at t={t}");
+            }
+            for (a, b) in c1.iter().zip(&c2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "c diverged at t={t}");
+            }
+        }
+        assert_eq!(tape.len(), t_len);
+        // tape invariants: c_new of step t == c_prev of step t+1
+        for t in 0..t_len - 1 {
+            assert_eq!(tape.steps[t].c_new, tape.steps[t + 1].c_prev);
+            assert_eq!(tape.steps[t].x, xs[t]);
+        }
+    }
+
+    #[test]
+    fn stack_traced_forward_matches_forward() {
+        let stack = synthetic_stack(24, 5, 6, 2, 24, 11);
+        let seq: Vec<usize> = vec![1, 5, 3, 0, 17, 8];
+        let want = stack.forward(&seq);
+
+        let ids: Vec<Vec<usize>> = seq.iter().map(|&t| vec![t]).collect();
+        let (mut hs, mut cs) = stack.zero_flat_state(1);
+        let mut scr = stack.trace_scratches(1);
+        let mut tape = StackTape::new(&stack, 1);
+        let got = stack.forward_batch_traced(&ids, &mut hs, &mut cs, &mut scr, &mut tape);
+        assert_eq!(got.len(), want.len());
+        for (t, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "logits diverged at t={t}");
+            }
+        }
+        assert_eq!(tape.tops.len(), seq.len());
+        assert_eq!(tape.layers.len(), 2);
+    }
+}

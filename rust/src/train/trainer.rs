@@ -1,0 +1,380 @@
+//! The offline training loop: `data::lm` char-LM stream → traced
+//! forward → cross-entropy → quantized BPTT → FP16-master/FloatSD8
+//! update, with truncated-BPTT state carried across windows (the
+//! `lm` lanes are contiguous streams, so each training batch is one
+//! truncation window of the same B parallel streams).
+//!
+//! Behind `floatsd-lstm train`: trains a tiny char-LM from scratch,
+//! entirely in pure rust, and writes a `.tensors` checkpoint that
+//! `floatsd-lstm serve --model <ckpt>` loads directly — the
+//! train→checkpoint→serve loop in one binary.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::data::lm::LmGen;
+use crate::data::BatchSource;
+use crate::lstm::QLstmStack;
+use crate::tensorfile::{write_tensors, Tensor};
+
+use super::backward::StackGrads;
+use super::loss::cross_entropy_grad;
+use super::optimizer::{finalize_grads, LossScaler, MasterStack};
+use super::tape::StackTape;
+use crate::lstm::cell::BatchScratch;
+
+/// Configuration of one offline training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub batch: usize,
+    /// truncated-BPTT window length
+    pub seq: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    pub loss_scale: f32,
+    pub clip_norm: Option<f32>,
+    pub log_every: usize,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            vocab: 64,
+            dim: 16,
+            hidden: 24,
+            layers: 1,
+            batch: 8,
+            seq: 16,
+            steps: 400,
+            lr: 0.3,
+            momentum: 0.9,
+            seed: 42,
+            loss_scale: 1024.0,
+            clip_norm: None,
+            log_every: 25,
+            checkpoint: None,
+        }
+    }
+}
+
+/// What one [`Trainer::step`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// mean cross-entropy (nats/token) of this window, pre-update
+    pub loss: f64,
+    /// false when the loss scaler skipped the update (overflow)
+    pub applied: bool,
+    /// loss scale used for this window
+    pub scale: f32,
+}
+
+/// Summary of a full [`Trainer::train`] run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f64>,
+    pub steps_applied: usize,
+    pub steps_skipped: u64,
+    pub final_scale: f32,
+}
+
+/// The offline quantized trainer (see module docs).
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub stack: QLstmStack,
+    pub masters: MasterStack,
+    pub scaler: LossScaler,
+    data: LmGen,
+    hs: Vec<Vec<f32>>,
+    cs: Vec<Vec<f32>>,
+    scratches: Vec<BatchScratch>,
+    pub steps_done: usize,
+    pub steps_applied: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Self {
+        let (masters, stack) = MasterStack::init_with_stack(
+            cfg.vocab,
+            cfg.dim,
+            cfg.hidden,
+            cfg.layers,
+            cfg.seed,
+        );
+        let data = LmGen::char_lm(cfg.batch, cfg.seq, cfg.vocab, cfg.seed ^ 0xDA7A);
+        let (hs, cs) = stack.zero_flat_state(cfg.batch);
+        let scratches = stack.trace_scratches(cfg.batch);
+        let scaler = LossScaler::new(cfg.loss_scale);
+        Trainer {
+            cfg,
+            stack,
+            masters,
+            scaler,
+            data,
+            hs,
+            cs,
+            scratches,
+            steps_done: 0,
+            steps_applied: 0,
+        }
+    }
+
+    /// One truncated-BPTT window: forward (traced), loss, backward,
+    /// grad post-processing, update (or skip on overflow).
+    pub fn step(&mut self) -> StepOutcome {
+        let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        let batch = self.data.next_train();
+        let mut ids = vec![vec![0usize; b_n]; seq];
+        let mut targets = vec![vec![0usize; b_n]; seq];
+        for lane in 0..b_n {
+            for t in 0..seq {
+                ids[t][lane] = batch.x[lane * seq + t] as usize;
+                targets[t][lane] = batch.y[lane * seq + t] as usize;
+            }
+        }
+
+        let mut tape = StackTape::new(&self.stack, b_n);
+        let logits = self.stack.forward_batch_traced(
+            &ids,
+            &mut self.hs,
+            &mut self.cs,
+            &mut self.scratches,
+            &mut tape,
+        );
+
+        let scale = self.scaler.scale;
+        let inv_count = 1.0 / (b_n * seq) as f32;
+        let mut loss_sum = 0f64;
+        let mut dlogits = Vec::with_capacity(seq);
+        for t in 0..seq {
+            let mut dl = vec![0f32; b_n * vocab];
+            loss_sum +=
+                cross_entropy_grad(&logits[t], &targets[t], vocab, inv_count, scale, &mut dl);
+            dlogits.push(dl);
+        }
+
+        let mut grads = StackGrads::zeros(&self.stack);
+        self.stack.backward_batch(&tape, &dlogits, &mut grads);
+
+        let applied = finalize_grads(&mut grads, scale, self.cfg.clip_norm);
+        if applied {
+            self.masters.apply(&mut self.stack, &grads, self.cfg.lr, self.cfg.momentum);
+            self.scaler.on_good_step();
+            self.steps_applied += 1;
+        } else {
+            self.scaler.on_overflow();
+        }
+        self.steps_done += 1;
+        StepOutcome { loss: loss_sum / (b_n * seq) as f64, applied, scale }
+    }
+
+    /// Run the configured number of steps; logs every
+    /// `cfg.log_every` windows and writes the checkpoint at the end
+    /// when `cfg.checkpoint` is set.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        for s in 0..self.cfg.steps {
+            let out = self.step();
+            losses.push(out.loss);
+            if self.cfg.log_every > 0 && (s + 1) % self.cfg.log_every == 0 {
+                let window = &losses[losses.len().saturating_sub(self.cfg.log_every)..];
+                let mean: f64 = window.iter().sum::<f64>() / window.len() as f64;
+                println!(
+                    "step {:>5}  loss {:.4}  scale {:>7.0}{}",
+                    s + 1,
+                    mean,
+                    out.scale,
+                    if out.applied { "" } else { "  (skipped)" }
+                );
+            }
+        }
+        if let Some(path) = self.cfg.checkpoint.clone() {
+            self.save_checkpoint(&path)?;
+            println!("checkpoint: {}", path.display());
+        }
+        Ok(TrainReport {
+            losses,
+            steps_applied: self.steps_applied,
+            steps_skipped: self.scaler.skipped,
+            final_scale: self.scaler.scale,
+        })
+    }
+
+    /// Write the FP16 master weights as a `.tensors` checkpoint in the
+    /// JAX-layout naming `build_tiny_from_params` (and therefore
+    /// `floatsd-lstm serve --model`) consumes. Re-loading quantizes
+    /// the masters exactly like the live stack does, so the served
+    /// model's logits are **bit-identical** to this trainer's
+    /// (pinned by `tests/train_offline.rs`).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let ms = &self.masters;
+        let (vocab, dim) = (self.stack.embed.vocab, self.stack.embed.dim);
+        let mut tensors =
+            vec![Tensor::from_f32("['params']['emb']['emb']", &[vocab, dim], &ms.emb)];
+        let mut in_dim = dim;
+        for (l, m) in ms.layers.iter().enumerate() {
+            let hidden = self.stack.layers[l].fwd.hidden;
+            // QMatrix layout [4H][in] -> JAX layout [in][4H]
+            let mut wx = vec![0f32; m.wx.len()];
+            for r in 0..4 * hidden {
+                for k in 0..in_dim {
+                    wx[k * 4 * hidden + r] = m.wx[r * in_dim + k];
+                }
+            }
+            let mut wh = vec![0f32; m.wh.len()];
+            for r in 0..4 * hidden {
+                for k in 0..hidden {
+                    wh[k * 4 * hidden + r] = m.wh[r * hidden + k];
+                }
+            }
+            let idx = l + 1;
+            tensors.push(Tensor::from_f32(
+                &format!("['params']['l{idx}']['wx']"),
+                &[in_dim, 4 * hidden],
+                &wx,
+            ));
+            tensors.push(Tensor::from_f32(
+                &format!("['params']['l{idx}']['wh']"),
+                &[hidden, 4 * hidden],
+                &wh,
+            ));
+            tensors.push(Tensor::from_f32(
+                &format!("['params']['l{idx}']['b']"),
+                &[4 * hidden],
+                &m.b,
+            ));
+            in_dim = hidden;
+        }
+        let n_out = self.stack.n_out();
+        let mut ow = vec![0f32; ms.head_w.len()];
+        for r in 0..n_out {
+            for k in 0..in_dim {
+                ow[k * n_out + r] = ms.head_w[r * in_dim + k];
+            }
+        }
+        tensors.push(Tensor::from_f32("['params']['out']['w']", &[in_dim, n_out], &ow));
+        tensors.push(Tensor::from_f32("['params']['out']['b']", &[n_out], &ms.head_b));
+        tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
+        tensors.push(Tensor::scalar_f32("meta/loss_scale", self.scaler.scale));
+        write_tensors(path, &tensors)
+    }
+}
+
+/// `floatsd-lstm train` (offline path) — see `main.rs` docs.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let parse_f32 = |key: &str, default: f32| -> Result<f32> {
+        match args.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse::<f32>()?),
+        }
+    };
+    let cfg = TrainConfig {
+        vocab: args.opt_usize("vocab", 64)?.max(2),
+        dim: args.opt_usize("dim", 16)?.max(1),
+        hidden: args.opt_usize("hidden", 24)?.max(1),
+        layers: args.opt_usize("layers", 1)?.max(1),
+        batch: args.opt_usize("batch", 8)?.max(1),
+        seq: args.opt_usize("seq", 16)?.max(2),
+        steps: args.opt_usize("steps", 400)?.max(1),
+        lr: parse_f32("lr", 0.3)?,
+        momentum: parse_f32("momentum", 0.9)?,
+        seed: args.opt_usize("seed", 42)? as u64,
+        loss_scale: parse_f32("loss-scale", 1024.0)?,
+        clip_norm: match args.opt("clip") {
+            None => None,
+            Some(v) => Some(v.parse::<f32>()?),
+        },
+        log_every: args.opt_usize("log-every", 25)?,
+        checkpoint: Some(PathBuf::from(args.opt_or("out", "char_lm.tensors"))),
+    };
+    println!(
+        "offline FloatSD8 training: vocab={} dim={} hidden={} layers={} | batch={} seq={} \
+         steps={} lr={} momentum={} loss-scale={}",
+        cfg.vocab,
+        cfg.dim,
+        cfg.hidden,
+        cfg.layers,
+        cfg.batch,
+        cfg.seq,
+        cfg.steps,
+        cfg.lr,
+        cfg.momentum,
+        cfg.loss_scale
+    );
+    let mut trainer = Trainer::new(cfg);
+    let report = trainer.train()?;
+    let head: f64 = report.losses.iter().take(10).sum::<f64>()
+        / report.losses.len().min(10).max(1) as f64;
+    let n = report.losses.len();
+    let tail: f64 = report.losses[n.saturating_sub(10)..].iter().sum::<f64>()
+        / report.losses[n.saturating_sub(10)..].len().max(1) as f64;
+    println!(
+        "done: loss {head:.4} -> {tail:.4} ({} applied, {} skipped, final scale {})",
+        report.steps_applied, report.steps_skipped, report.final_scale
+    );
+    println!("serve it: floatsd-lstm serve --model <checkpoint> --sessions 8 --tokens 32");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            vocab: 32,
+            dim: 8,
+            hidden: 10,
+            layers: 1,
+            batch: 4,
+            seq: 8,
+            steps: 12,
+            lr: 0.3,
+            momentum: 0.9,
+            seed: 5,
+            loss_scale: 1024.0,
+            clip_norm: None,
+            log_every: 0,
+            checkpoint: None,
+        }
+    }
+
+    #[test]
+    fn steps_run_and_loss_is_sane() {
+        let mut t = Trainer::new(tiny_cfg());
+        let out = t.step();
+        assert!(out.loss.is_finite());
+        // first-window loss must sit near ln(vocab) at random init
+        let uniform = (32f64).ln();
+        assert!((out.loss - uniform).abs() < 1.5, "loss {} vs ln V {}", out.loss, uniform);
+        assert_eq!(t.steps_done, 1);
+    }
+
+    #[test]
+    fn weights_stay_on_their_grids_after_updates() {
+        let mut t = Trainer::new(tiny_cfg());
+        for _ in 0..3 {
+            t.step();
+        }
+        let cell = &t.stack.layers[0].fwd;
+        for r in 0..4 * cell.hidden {
+            for &v in cell.wx.row_decoded(r) {
+                assert!(crate::formats::FLOAT_SD8.values().contains(&v));
+            }
+        }
+        for &b in &cell.bias {
+            assert_eq!(b, crate::formats::round_f16(b));
+        }
+        for &e in &t.stack.embed.table {
+            assert_eq!(e, crate::formats::round_f16(e));
+        }
+    }
+}

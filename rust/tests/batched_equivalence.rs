@@ -14,6 +14,7 @@ use floatsd_lstm::lstm::{synthetic_stack, QLstmStack};
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::{ServeConfig, Server};
 use floatsd_lstm::testing::{property, Gen};
+use floatsd_lstm::train::{CellGrads, CellTape};
 
 fn rand_cell(d: usize, hidden: usize, seed: u64) -> QLstmCell {
     let mut rng = SplitMix64::new(seed);
@@ -76,6 +77,96 @@ fn cell_step_batch_matches_independent_steps() {
                 assert_bits_eq(&hs[b * hidden..(b + 1) * hidden], &ref_h[b], &what);
                 let what = format!("c (d={d} H={hidden} B={batch} stream={b})");
                 assert_bits_eq(&cs[b * hidden..(b + 1) * hidden], &ref_c[b], &what);
+            }
+        }
+    }
+}
+
+/// The training mirror of the forward contract: `backward_batch` over
+/// B sequences is bit-identical to B independent `backward` calls —
+/// parameter gradients (folded in stream order with
+/// `CellGrads::add_assign`, the documented reduction contract) AND the
+/// propagated per-step input cotangents. Covers hidden sizes off the
+/// MAC_GROUP grid and the trivial B=1 case.
+#[test]
+fn cell_backward_batch_matches_independent_backward() {
+    for &(d, hidden) in &[(3usize, 5usize), (4, 8), (6, 7)] {
+        for &batch in &[1usize, 3, 5] {
+            let cell = rand_cell(d, hidden, (d * 1000 + hidden) as u64);
+            let mut rng = SplitMix64::new(100 + batch as u64);
+            let t_len = 6;
+            // per-stream FP8 inputs and incoming FP8 cotangents
+            let inputs: Vec<Vec<Vec<f32>>> = (0..batch)
+                .map(|_| {
+                    (0..t_len)
+                        .map(|_| (0..d).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect())
+                        .collect()
+                })
+                .collect();
+            let dhs: Vec<Vec<Vec<f32>>> = (0..batch)
+                .map(|_| {
+                    (0..t_len)
+                        .map(|_| {
+                            (0..hidden).map(|_| round_f8(rng.uniform(-0.5, 0.5))).collect()
+                        })
+                        .collect()
+                })
+                .collect();
+
+            // independent per-stream reference: trace + backward, fold
+            // grads in stream order
+            let mut ref_grads = CellGrads::zeros(&cell);
+            let mut ref_dx: Vec<Vec<Vec<f32>>> = Vec::new();
+            for b in 0..batch {
+                let mut h = vec![0f32; hidden];
+                let mut c = vec![0f32; hidden];
+                let mut scr = BatchScratch::new(hidden, 1);
+                let mut tape = CellTape::new(1, d, hidden);
+                for t in 0..t_len {
+                    cell.step_traced(&inputs[b][t], &mut h, &mut c, &mut scr, &mut tape);
+                }
+                let mut g = CellGrads::zeros(&cell);
+                let dx = cell.backward(&tape, &dhs[b], &mut g);
+                ref_grads.add_assign(&g);
+                ref_dx.push(dx);
+            }
+
+            // batched: same streams in lockstep through flat buffers
+            let mut hs = vec![0f32; batch * hidden];
+            let mut cs = vec![0f32; batch * hidden];
+            let mut scr = BatchScratch::new(hidden, batch);
+            let mut tape = CellTape::new(batch, d, hidden);
+            let mut xs = vec![0f32; batch * d];
+            for t in 0..t_len {
+                for b in 0..batch {
+                    xs[b * d..(b + 1) * d].copy_from_slice(&inputs[b][t]);
+                }
+                cell.step_batch_traced(&xs, &mut hs, &mut cs, batch, &mut scr, &mut tape);
+            }
+            let dh_seq: Vec<Vec<f32>> = (0..t_len)
+                .map(|t| {
+                    let mut flat = vec![0f32; batch * hidden];
+                    for b in 0..batch {
+                        flat[b * hidden..(b + 1) * hidden].copy_from_slice(&dhs[b][t]);
+                    }
+                    flat
+                })
+                .collect();
+            let mut grads = CellGrads::zeros(&cell);
+            let dx_seq = cell.backward_batch(&tape, &dh_seq, &mut grads);
+
+            let what = format!("d={d} H={hidden} B={batch}");
+            assert_bits_eq(&grads.dwx, &ref_grads.dwx, &format!("dwx ({what})"));
+            assert_bits_eq(&grads.dwh, &ref_grads.dwh, &format!("dwh ({what})"));
+            assert_bits_eq(&grads.db, &ref_grads.db, &format!("db ({what})"));
+            for t in 0..t_len {
+                for b in 0..batch {
+                    assert_bits_eq(
+                        &dx_seq[t][b * d..(b + 1) * d],
+                        &ref_dx[b][t],
+                        &format!("dx ({what} t={t} stream={b})"),
+                    );
+                }
             }
         }
     }

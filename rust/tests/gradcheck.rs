@@ -1,0 +1,202 @@
+//! Gradient check: the analytic BPTT of the reference cell
+//! (`lstm::reference::F32LstmCell::bptt`) against central finite
+//! differences, per the precedent of fixed-point RNN training analyses
+//! (the numerics must be validated against a full-precision reference
+//! before trusting the quantized training path built on the same
+//! equation set).
+//!
+//! The loss is a fixed random linear functional of every hidden output
+//! (`L = Σ_t Σ_j p[t][j] · h[t][j]`), which exercises all gate paths
+//! and the recurrent carry at every step. Weights are f32; the traced
+//! forward/loss run in f64, so FD noise sits far below the 1e-3
+//! tolerance.
+
+use floatsd_lstm::lstm::reference::F32LstmCell;
+use floatsd_lstm::rng::SplitMix64;
+
+fn rand_cell(d: usize, hidden: usize, rng: &mut SplitMix64) -> F32LstmCell {
+    let wx: Vec<f32> = (0..d * 4 * hidden).map(|_| rng.uniform(-0.4, 0.4)).collect();
+    let wh: Vec<f32> = (0..hidden * 4 * hidden).map(|_| rng.uniform(-0.4, 0.4)).collect();
+    let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.2, 0.2)).collect();
+    F32LstmCell::from_jax_layout(d, hidden, &wx, &wh, &b)
+}
+
+fn loss(cell: &F32LstmCell, xs: &[Vec<f32>], proj: &[Vec<f64>]) -> f64 {
+    let tape = cell.forward_traced(xs);
+    let mut l = 0f64;
+    for (t, p) in proj.iter().enumerate() {
+        for (j, w) in p.iter().enumerate() {
+            l += w * tape.h_new[t][j];
+        }
+    }
+    l
+}
+
+/// Tensor-level relative error `‖a − fd‖₂ / max(‖fd‖₂, ε)`.
+fn rel_err(analytic: &[f64], fd: &[f64]) -> f64 {
+    assert_eq!(analytic.len(), fd.len());
+    let mut diff = 0f64;
+    let mut norm = 0f64;
+    for (a, f) in analytic.iter().zip(fd) {
+        diff += (a - f) * (a - f);
+        norm += f * f;
+    }
+    diff.sqrt() / norm.sqrt().max(1e-9)
+}
+
+fn wx_of(c: &mut F32LstmCell) -> &mut Vec<f32> {
+    &mut c.wx
+}
+
+fn wh_of(c: &mut F32LstmCell) -> &mut Vec<f32> {
+    &mut c.wh
+}
+
+fn bias_of(c: &mut F32LstmCell) -> &mut Vec<f32> {
+    &mut c.bias
+}
+
+/// Central finite difference over every slot of one parameter tensor,
+/// selected by the `pick` accessor.
+fn fd_tensor(
+    cell: &F32LstmCell,
+    len: usize,
+    xs: &[Vec<f32>],
+    proj: &[Vec<f64>],
+    pick: fn(&mut F32LstmCell) -> &mut Vec<f32>,
+) -> Vec<f64> {
+    let eps = 1e-3f64;
+    let mut fd = Vec::with_capacity(len);
+    for k in 0..len {
+        let mut plus = clone_cell(cell);
+        let w0 = pick(&mut plus)[k] as f64;
+        pick(&mut plus)[k] = (w0 + eps) as f32;
+        let wp = pick(&mut plus)[k] as f64;
+        let lp = loss(&plus, xs, proj);
+        let mut minus = clone_cell(cell);
+        pick(&mut minus)[k] = (w0 - eps) as f32;
+        let wm = pick(&mut minus)[k] as f64;
+        let lm = loss(&minus, xs, proj);
+        // use the *actual* f32 step so weight-storage rounding cancels
+        fd.push((lp - lm) / (wp - wm));
+    }
+    fd
+}
+
+fn clone_cell(c: &F32LstmCell) -> F32LstmCell {
+    F32LstmCell {
+        input_dim: c.input_dim,
+        hidden: c.hidden,
+        wx: c.wx.clone(),
+        wh: c.wh.clone(),
+        bias: c.bias.clone(),
+    }
+}
+
+#[test]
+fn bptt_matches_central_finite_differences() {
+    // ≥3 seeds; hidden sizes include non-multiples of MAC_GROUP (5, 7)
+    for &(seed, d, hidden, t_len) in
+        &[(1u64, 3usize, 5usize, 6usize), (2, 4, 7, 5), (3, 5, 6, 4)]
+    {
+        let mut rng = SplitMix64::new(seed);
+        let cell = rand_cell(d, hidden, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+        let proj: Vec<Vec<f64>> = (0..t_len)
+            .map(|_| (0..hidden).map(|_| rng.uniform(-1.0, 1.0) as f64).collect())
+            .collect();
+
+        let tape = cell.forward_traced(&xs);
+        let grads = cell.bptt(&tape, &proj);
+
+        let fd_wx = fd_tensor(&cell, 4 * hidden * d, &xs, &proj, wx_of);
+        let e = rel_err(&grads.dwx, &fd_wx);
+        assert!(e <= 1e-3, "seed {seed}: dwx rel err {e}");
+
+        let fd_wh = fd_tensor(&cell, 4 * hidden * hidden, &xs, &proj, wh_of);
+        let e = rel_err(&grads.dwh, &fd_wh);
+        assert!(e <= 1e-3, "seed {seed}: dwh rel err {e}");
+
+        let fd_b = fd_tensor(&cell, 4 * hidden, &xs, &proj, bias_of);
+        let e = rel_err(&grads.db, &fd_b);
+        assert!(e <= 1e-3, "seed {seed}: db rel err {e}");
+    }
+}
+
+#[test]
+fn bptt_input_cotangents_match_finite_differences() {
+    let mut rng = SplitMix64::new(9);
+    let (d, hidden, t_len) = (3usize, 5usize, 5usize);
+    let cell = rand_cell(d, hidden, &mut rng);
+    let xs: Vec<Vec<f32>> =
+        (0..t_len).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+    let proj: Vec<Vec<f64>> = (0..t_len)
+        .map(|_| (0..hidden).map(|_| rng.uniform(-1.0, 1.0) as f64).collect())
+        .collect();
+    let tape = cell.forward_traced(&xs);
+    let grads = cell.bptt(&tape, &proj);
+
+    let eps = 1e-3f64;
+    for t in 0..t_len {
+        for k in 0..d {
+            let mut xp = xs.clone();
+            let x0 = xp[t][k] as f64;
+            xp[t][k] = (x0 + eps) as f32;
+            let step_p = xp[t][k] as f64;
+            let lp = loss(&cell, &xp, &proj);
+            let mut xm = xs.clone();
+            xm[t][k] = (x0 - eps) as f32;
+            let step_m = xm[t][k] as f64;
+            let lm = loss(&cell, &xm, &proj);
+            let fd = (lp - lm) / (step_p - step_m);
+            let a = grads.dx[t][k];
+            // mixed tolerance: 1e-3 relative with an absolute floor
+            // above the O(eps²) FD truncation noise
+            assert!(
+                (a - fd).abs() <= 1e-3 * fd.abs() + 1e-5,
+                "dx[{t}][{k}]: analytic {a} vs fd {fd}"
+            );
+        }
+    }
+}
+
+/// The recurrent terms matter: truncating the recurrent cotangent
+/// (zeroing `Whᵀ·dz` feedback) must NOT match finite differences on a
+/// multi-step sequence — guards against a silently-wrong BPTT that
+/// only gets the within-step terms right.
+#[test]
+fn recurrent_cotangent_terms_are_load_bearing() {
+    let mut rng = SplitMix64::new(4);
+    let (d, hidden, t_len) = (3usize, 5usize, 6usize);
+    let cell = rand_cell(d, hidden, &mut rng);
+    let xs: Vec<Vec<f32>> =
+        (0..t_len).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+    // only the LAST step contributes loss: all earlier parameter
+    // gradient flow is via recurrence
+    let mut proj: Vec<Vec<f64>> = (0..t_len).map(|_| vec![0f64; hidden]).collect();
+    for j in 0..hidden {
+        proj[t_len - 1][j] = rng.uniform(-1.0, 1.0) as f64;
+    }
+    let tape = cell.forward_traced(&xs);
+    let grads = cell.bptt(&tape, &proj);
+    // dx at step 0 can only be non-zero through the recurrent chain
+    let dx0_norm: f64 = grads.dx[0].iter().map(|g| g * g).sum::<f64>().sqrt();
+    assert!(dx0_norm > 1e-8, "recurrent gradient flow missing (dx[0] = 0)");
+    // and it must agree with FD
+    let eps = 1e-3f64;
+    let k = 0usize;
+    let mut xp = xs.clone();
+    let x0 = xp[0][k] as f64;
+    xp[0][k] = (x0 + eps) as f32;
+    let sp = xp[0][k] as f64;
+    let mut xm = xs.clone();
+    xm[0][k] = (x0 - eps) as f32;
+    let sm = xm[0][k] as f64;
+    let fd = (loss(&cell, &xp, &proj) - loss(&cell, &xm, &proj)) / (sp - sm);
+    assert!(
+        (grads.dx[0][k] - fd).abs() <= 1e-3 * fd.abs() + 1e-5,
+        "dx[0][{k}] through recurrence: analytic {} vs fd {fd}",
+        grads.dx[0][k]
+    );
+}

@@ -129,3 +129,66 @@ fn fp8_saturates_never_overflows() {
         assert!(q.is_finite());
     });
 }
+
+// ---------------------------------------------------------------------
+// §III-B / §IV-C weight-update rule (FP16 master -> FloatSD8 re-encode)
+// ---------------------------------------------------------------------
+
+#[test]
+fn master_update_reencodes_to_nearest_and_stays_on_fp16_grid() {
+    property("update -> nearest code", 3000, |g: &mut Gen| {
+        let m = round_f16(g.f32_range(-6.0, 6.0));
+        let u = round_f16(g.f32_log(-24, 3)); // FP16 update, subnormals included
+        let (m2, code) = FLOAT_SD8.apply_update(m, u);
+        // master stays on the FP16 grid and finite
+        assert!(m2.is_finite());
+        assert_eq!(m2.to_bits(), round_f16(m2).to_bits(), "master off the FP16 grid");
+        // the re-encoded code decodes to the quantizer's pick ...
+        let w = FLOAT_SD8.decode(code);
+        assert_eq!(w, FLOAT_SD8.quantize(m2), "code is not the quantization of the master");
+        // ... which is a nearest codebook value (brute force over the grid)
+        let best = FLOAT_SD8
+            .values()
+            .iter()
+            .map(|v| (m2 - v).abs())
+            .fold(f32::INFINITY, f32::min);
+        assert!(
+            (m2 - w).abs() <= best * (1.0 + 1e-6) + f32::MIN_POSITIVE,
+            "m2={m2}: |m2-w|={} but nearest grid distance is {best}",
+            (m2 - w).abs()
+        );
+    });
+}
+
+#[test]
+fn master_update_code_round_trips_through_groups() {
+    property("code -> groups -> code", 3000, |g: &mut Gen| {
+        let m = round_f16(g.f32_range(-6.0, 6.0));
+        let u = round_f16(g.f32_log(-20, 2));
+        let (_, code) = FLOAT_SD8.apply_update(m, u);
+        let (g0, g1) = FLOAT_SD8.to_groups(code);
+        let exp = code.to_bits() >> 5;
+        let back = FLOAT_SD8
+            .from_groups(exp, g0, g1)
+            .expect("canonical groups must be legal SD groups");
+        assert_eq!(back, code, "groups ({g0},{g1}) exp {exp} did not round-trip");
+    });
+}
+
+#[test]
+fn sign_consistent_update_never_moves_weight_the_wrong_way() {
+    property("update monotone", 3000, |g: &mut Gen| {
+        let m = round_f16(g.f32_range(-5.0, 5.0));
+        let u = round_f16(g.f32_log(-24, 2));
+        let w_old = FLOAT_SD8.quantize(m);
+        let (m2, code) = FLOAT_SD8.apply_update(m, u);
+        let w_new = FLOAT_SD8.decode(code);
+        if u >= 0.0 {
+            assert!(m2 >= m, "positive update lowered the master: {m} + {u} -> {m2}");
+            assert!(w_new >= w_old, "positive update lowered the weight: {w_old} -> {w_new}");
+        } else {
+            assert!(m2 <= m, "negative update raised the master: {m} + {u} -> {m2}");
+            assert!(w_new <= w_old, "negative update raised the weight: {w_old} -> {w_new}");
+        }
+    });
+}

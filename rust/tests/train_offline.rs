@@ -1,0 +1,104 @@
+//! Tier-1 training smoke tests: the pure-rust quantized trainer
+//! learns a tiny char-LM from scratch (no PJRT, no artifacts — this is
+//! the offline counterpart of `e2e_train.rs`), stays finite under
+//! dynamic loss scaling, and its checkpoints serve bit-identically.
+
+use floatsd_lstm::lstm::model::{build_tiny_from_params, ParamBag};
+use floatsd_lstm::tensorfile::read_tensors;
+use floatsd_lstm::train::{TrainConfig, Trainer};
+
+fn smoke_cfg() -> TrainConfig {
+    TrainConfig {
+        vocab: 48,
+        dim: 12,
+        hidden: 16,
+        layers: 1,
+        batch: 4,
+        seq: 12,
+        steps: 160,
+        lr: 0.4,
+        momentum: 0.9,
+        seed: 7,
+        loss_scale: 1024.0,
+        clip_norm: None,
+        log_every: 0,
+        checkpoint: None,
+    }
+}
+
+#[test]
+fn char_lm_loss_drops_and_checkpoint_serves_bit_identically() {
+    let mut trainer = Trainer::new(smoke_cfg());
+    let report = trainer.train().expect("training");
+    for (s, &l) in report.losses.iter().enumerate() {
+        assert!(l.is_finite(), "loss went non-finite at step {s}");
+    }
+    let head: f64 = report.losses[..15].iter().sum::<f64>() / 15.0;
+    let n = report.losses.len();
+    let tail: f64 = report.losses[n - 15..].iter().sum::<f64>() / 15.0;
+    assert!(
+        tail < head * 0.95,
+        "offline quantized training did not learn: {head:.4} -> {tail:.4}"
+    );
+    assert!(report.steps_applied > 100, "most steps must apply at scale 1024");
+
+    // checkpoint → serve-side stack → bit-identical logits
+    let dir = std::env::temp_dir().join("fsd_train_offline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("char_lm.ckpt.tensors");
+    trainer.save_checkpoint(&path).expect("save checkpoint");
+
+    let bag = ParamBag::from_tensors(read_tensors(&path).expect("read checkpoint"));
+    let served = build_tiny_from_params(&bag).expect("assemble served stack");
+    for seq in [vec![1usize, 5, 3, 0, 40, 8], vec![0, 0, 1, 2], vec![47, 23, 11]] {
+        let want = trainer.stack.forward(&seq);
+        let got = served.forward(&seq);
+        assert_eq!(got.len(), want.len());
+        for (t, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "served logits diverge from trainer at t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn training_is_deterministic_under_a_fixed_seed() {
+    let mut cfg = smoke_cfg();
+    cfg.steps = 25;
+    let mut a = Trainer::new(cfg.clone());
+    let mut b = Trainer::new(cfg);
+    let ra = a.train().expect("run a");
+    let rb = b.train().expect("run b");
+    assert_eq!(ra.losses.len(), rb.losses.len());
+    for (s, (la, lb)) in ra.losses.iter().zip(&rb.losses).enumerate() {
+        assert_eq!(la.to_bits(), lb.to_bits(), "loss diverged at step {s}");
+    }
+    assert_eq!(ra.final_scale, rb.final_scale);
+}
+
+#[test]
+fn dynamic_loss_scaling_recovers_from_an_oversized_scale() {
+    let mut cfg = smoke_cfg();
+    cfg.steps = 80;
+    // absurd initial scale: scaled gradients overflow the FP8 grid, so
+    // the scaler must skip + halve until updates apply again — and the
+    // model (only touched by applied steps) must stay finite throughout
+    cfg.loss_scale = 1e12;
+    let mut trainer = Trainer::new(cfg);
+    let report = trainer.train().expect("training");
+    assert!(report.steps_skipped > 0, "oversized scale must trigger skips");
+    assert!(report.final_scale < 1e12, "scale must back off");
+    assert!(
+        report.steps_applied > 0,
+        "scaler never recovered: final scale {}",
+        report.final_scale
+    );
+    for &l in &report.losses {
+        assert!(l.is_finite());
+    }
+}
