@@ -1,7 +1,10 @@
 //! Serving throughput: batched `step_batch` tokens/s vs the unbatched
 //! per-sequence engine, across micro-batch sizes, plus the full
 //! scheduler/worker server end-to-end. Writes
-//! `results/serve_throughput.csv` (batch, tokens_per_s, speedup).
+//! `results/serve_throughput.csv` (batch, tokens_per_s, speedup) and a
+//! machine-readable `BENCH_serve.json` at the repo root (tokens/s +
+//! p50/p99 per batch size, server end-to-end rows) so the bench
+//! trajectory is trackable across PRs.
 //!
 //! The win mechanism: the weight-stationary `matmul_fast` streams each
 //! decoded weight row once per micro-batch instead of once per stream,
@@ -10,14 +13,38 @@
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use floatsd_lstm::benchlib::{bench, black_box, results_dir, Csv};
+use floatsd_lstm::benchlib::{bench, black_box, results_dir, BenchStats, Csv};
 use floatsd_lstm::lstm::synthetic_stack;
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::demo::drive_load;
 use floatsd_lstm::serve::{ServeConfig, Server};
+use floatsd_lstm::tensorfile::json::Json;
+
+/// `BENCH_serve.json` lands at the repo root (next to CHANGES.md) so
+/// successive PRs overwrite one tracked file, regardless of the cwd
+/// cargo was invoked from.
+fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serve.json")
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// One batch-size row: throughput plus per-iteration latency tails.
+fn batch_row(batch: usize, stats: &BenchStats, tokens_per_s: f64, speedup: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("batch".to_string(), jnum(batch as f64));
+    m.insert("tokens_per_s".to_string(), jnum(tokens_per_s));
+    m.insert("speedup".to_string(), jnum(speedup));
+    m.insert("p50_us".to_string(), jnum(stats.median.as_secs_f64() * 1e6));
+    m.insert("p99_us".to_string(), jnum(stats.p99.as_secs_f64() * 1e6));
+    Json::Obj(m)
+}
 
 fn main() -> anyhow::Result<()> {
     let (vocab, dim, hidden, layers) = (256usize, 64usize, 192usize, 2usize);
@@ -29,6 +56,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = SplitMix64::new(42);
     let mut csv = Csv::new(results_dir().join("serve_throughput.csv"), "batch,tokens_per_s,speedup");
+    let mut json_batches: Vec<Json> = Vec::new();
+    let mut json_server: Vec<Json> = Vec::new();
 
     // ---- baseline: the unbatched per-sequence engine path ------------
     let seqs: Vec<Vec<usize>> = (0..8)
@@ -43,6 +72,7 @@ fn main() -> anyhow::Result<()> {
     println!("{base}");
     println!("  -> {base_tps:.0} tokens/s (baseline)\n");
     csv.rowf(&[1.0, base_tps, 1.0]);
+    json_batches.push(batch_row(1, &base, base_tps, 1.0));
 
     // ---- batched kernel path across micro-batch sizes ----------------
     let mut batched8_beats_baseline = None;
@@ -64,6 +94,7 @@ fn main() -> anyhow::Result<()> {
         println!("{stats}");
         println!("  -> {tps:.0} tokens/s ({speedup:.2}x vs unbatched)\n");
         csv.rowf(&[batch as f64, tps, speedup]);
+        json_batches.push(batch_row(batch, &stats, tps, speedup));
         if batch == 8 {
             batched8_beats_baseline = Some(speedup > 1.0);
         }
@@ -80,18 +111,42 @@ fn main() -> anyhow::Result<()> {
         let streamed = drive_load(&server, &shared, 64, 64, 4);
         let wall = t0.elapsed();
         let agg = server.stats();
+        let e2e_tps = streamed as f64 / wall.as_secs_f64();
         println!(
             "server end-to-end ({workers} workers, max-batch {max_batch}): \
              {:.0} tokens/s | occupancy {:.2} | latency {}",
-            streamed as f64 / wall.as_secs_f64(),
-            agg.mean_occupancy,
-            agg.latency
+            e2e_tps, agg.mean_occupancy, agg.latency
         );
+        let mut m = BTreeMap::new();
+        m.insert("workers".to_string(), jnum(workers as f64));
+        m.insert("max_batch".to_string(), jnum(max_batch as f64));
+        m.insert("tokens_per_s".to_string(), jnum(e2e_tps));
+        m.insert("occupancy".to_string(), jnum(agg.mean_occupancy));
+        m.insert("p50_us".to_string(), jnum(agg.latency.p50.as_secs_f64() * 1e6));
+        m.insert("p99_us".to_string(), jnum(agg.latency.p99.as_secs_f64() * 1e6));
+        json_server.push(Json::Obj(m));
         server.shutdown();
     }
 
     let path = csv.finish()?;
     println!("\nwrote {}", path.display());
+
+    // machine-readable trajectory file at the repo root
+    let mut model = BTreeMap::new();
+    model.insert("vocab".to_string(), jnum(vocab as f64));
+    model.insert("dim".to_string(), jnum(dim as f64));
+    model.insert("hidden".to_string(), jnum(hidden as f64));
+    model.insert("layers".to_string(), jnum(layers as f64));
+    model.insert("seq_len".to_string(), jnum(seq_len as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve_throughput".to_string()));
+    root.insert("model".to_string(), Json::Obj(model));
+    root.insert("baseline_tokens_per_s".to_string(), jnum(base_tps));
+    root.insert("batches".to_string(), Json::Arr(json_batches));
+    root.insert("server".to_string(), Json::Arr(json_server));
+    let json_path = bench_json_path();
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(root)))?;
+    println!("wrote {}", json_path.display());
     match batched8_beats_baseline {
         Some(true) => println!("OK: batched tokens/s exceeds unbatched baseline at batch >= 8"),
         Some(false) => println!("WARN: batch=8 did not beat the unbatched baseline on this host"),

@@ -23,7 +23,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     args.options.insert(name.to_string(), it.next().unwrap());
                 } else {
                     args.flags.push(name.to_string());

@@ -34,8 +34,62 @@ pub trait BatchSource {
     fn eval_set(&self) -> &[Batch];
 }
 
+/// Domain preconditions of the generators (vocabulary floors, class
+/// counts) as errors instead of the constructors' asserts — the single
+/// copy shared by [`make_source`] and the task heads
+/// ([`crate::tasks`]), which build the concrete generator types
+/// directly.
+pub fn check_task_args(
+    task: &str,
+    vocab: usize,
+    vocab_tgt: usize,
+    n_classes: usize,
+) -> anyhow::Result<()> {
+    use anyhow::bail;
+    match task {
+        "pos" => {
+            if n_classes < 2 {
+                bail!("pos: need >= 2 tag classes, got {n_classes}");
+            }
+            if vocab <= 4 * n_classes {
+                bail!(
+                    "pos: vocab {vocab} too small for {n_classes} tags (need > {})",
+                    4 * n_classes
+                );
+            }
+        }
+        "nli" => {
+            if vocab <= 10 {
+                bail!("nli: vocab {vocab} too small (need > 10: 2 reserved + content)");
+            }
+        }
+        "mt" => {
+            if vocab <= 2 || vocab_tgt <= 2 {
+                bail!("mt: vocab {vocab}/vocab_tgt {vocab_tgt} too small (2 ids are reserved)");
+            }
+        }
+        "lm" | "tiny" => {
+            if vocab < 2 {
+                bail!("{task}: vocab {vocab} too small");
+            }
+        }
+        other => bail!("unknown task {other} (expected pos|nli|mt|lm|tiny)"),
+    }
+    Ok(())
+}
+
 /// Build the generator for a task by name with the shapes the manifest
 /// dictates.
+///
+/// `x_shape`/`y_shape` are **per-example** shapes (no batch
+/// dimension), matching the manifest convention: `pos`/`lm` take a
+/// rank-1 `[seq]` for both, `nli` a rank-2 `[2, seq]` premise/
+/// hypothesis pair with a scalar (empty-shape) label, and `mt` rank-1
+/// `[src_len]` / `[src_len + 1]`. Note the per-task index asymmetry —
+/// `nli` reads its sequence length from `x_shape[1]`, everything else
+/// from `x_shape[0]` — which is why ranks are validated up front with
+/// descriptive errors instead of letting indexing (or the generators'
+/// own asserts) panic.
 pub fn make_source(
     task: &str,
     batch: usize,
@@ -47,14 +101,61 @@ pub fn make_source(
     eval_batches: usize,
     seed: u64,
 ) -> anyhow::Result<Box<dyn BatchSource>> {
+    use anyhow::bail;
+
+    let rank = |what: &str, shape: &[usize], want: usize| -> anyhow::Result<()> {
+        if shape.len() != want {
+            bail!(
+                "{task}: {what} must be rank {want} (per-example, no batch dim), \
+                 got shape {shape:?}"
+            );
+        }
+        if shape.iter().any(|&d| d == 0) {
+            bail!("{task}: {what} has a zero dimension: {shape:?}");
+        }
+        Ok(())
+    };
+
+    check_task_args(task, vocab, vocab_tgt, n_classes)?;
     Ok(match task {
-        "pos" => Box::new(pos::PosGen::new(batch, x_shape[0], vocab, n_classes, eval_batches, seed)),
-        "nli" => Box::new(nli::NliGen::new(batch, x_shape[1], vocab, eval_batches, seed)),
-        "mt" => Box::new(translation::MtGen::new(
-            batch, x_shape[0], y_shape[0], vocab, vocab_tgt, eval_batches, seed,
-        )),
-        "lm" | "tiny" => Box::new(lm::LmGen::new(batch, x_shape[0], vocab, eval_batches, seed)),
-        other => anyhow::bail!("unknown task {other}"),
+        "pos" => {
+            rank("x_shape", x_shape, 1)?;
+            rank("y_shape", y_shape, 1)?;
+            if y_shape[0] != x_shape[0] {
+                bail!("pos: tag sequence {y_shape:?} must match token sequence {x_shape:?}");
+            }
+            Box::new(pos::PosGen::new(batch, x_shape[0], vocab, n_classes, eval_batches, seed))
+        }
+        "nli" => {
+            rank("x_shape", x_shape, 2)?;
+            if x_shape[0] != 2 {
+                bail!("nli: x_shape must be [2, seq] (premise/hypothesis), got {x_shape:?}");
+            }
+            if !y_shape.is_empty() {
+                bail!("nli: labels are per-example scalars — y_shape must be [], got {y_shape:?}");
+            }
+            Box::new(nli::NliGen::new(batch, x_shape[1], vocab, eval_batches, seed))
+        }
+        "mt" => {
+            rank("x_shape", x_shape, 1)?;
+            rank("y_shape", y_shape, 1)?;
+            if y_shape[0] != x_shape[0] + 1 {
+                bail!(
+                    "mt: target length {} must be source length {} + 1 (BOS prefix)",
+                    y_shape[0],
+                    x_shape[0]
+                );
+            }
+            Box::new(translation::MtGen::new(
+                batch, x_shape[0], y_shape[0], vocab, vocab_tgt, eval_batches, seed,
+            ))
+        }
+        "lm" | "tiny" => {
+            rank("x_shape", x_shape, 1)?;
+            Box::new(lm::LmGen::new(batch, x_shape[0], vocab, eval_batches, seed))
+        }
+        // unreachable: check_task_args already rejected unknown names
+        other => bail!("unknown task {other}"),
     })
 }
 
@@ -82,6 +183,30 @@ mod tests {
             for &t in &b.x {
                 assert!((t as usize) < *v, "{task}: x token {t} >= vocab {v}");
             }
+        }
+    }
+
+    #[test]
+    fn factory_rejects_bad_shapes_with_descriptive_errors() {
+        // (task, x_shape, y_shape, vocab, vocab_tgt, n_classes, expect)
+        let bad: &[(&str, Vec<usize>, Vec<usize>, usize, usize, usize, &str)] = &[
+            ("pos", vec![24, 2], vec![24], 600, 0, 12, "rank 1"),
+            ("pos", vec![24], vec![12], 600, 0, 12, "must match"),
+            ("pos", vec![24], vec![24], 40, 0, 12, "too small"),
+            ("pos", vec![24], vec![24], 600, 0, 1, ">= 2 tag classes"),
+            ("nli", vec![16], vec![], 800, 0, 3, "rank 2"),
+            ("nli", vec![3, 16], vec![], 800, 0, 3, "[2, seq]"),
+            ("nli", vec![2, 16], vec![1], 800, 0, 3, "scalar"),
+            ("mt", vec![16], vec![16], 400, 400, 0, "+ 1"),
+            ("mt", vec![16], vec![17], 400, 1, 0, "too small"),
+            ("lm", vec![], vec![], 100, 0, 0, "rank 1"),
+            ("lm", vec![0], vec![0], 100, 0, 0, "zero dimension"),
+            ("wat", vec![8], vec![8], 100, 0, 0, "unknown task"),
+        ];
+        for (task, xs, ys, v, vt, nc, needle) in bad {
+            let err = make_source(task, 4, xs, ys, *v, *vt, *nc, 1, 7).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(needle), "{task}: error {msg:?} missing {needle:?}");
         }
     }
 

@@ -32,6 +32,13 @@
 //! `floatsd-lstm train` subcommand — train → checkpoint → serve runs
 //! end to end in this one binary, no XLA required.
 //!
+//! On top of the training engine sits [`tasks`]: the paper's Table-IV
+//! scenario grid as pluggable task heads (language modeling, POS
+//! tagging, NLI classification, encoder–decoder translation) behind
+//! `floatsd-lstm train --task {lm,pos,nli,mt}`, plus the evaluation
+//! harness behind `floatsd-lstm eval` that turns any checkpoint into
+//! a deterministic JSON report across all four workloads.
+//!
 //! The PJRT-dependent layers ([`runtime`], [`coordinator`], the
 //! `--artifact` train path and the suite CLI) are gated behind the
 //! default-off `pjrt` cargo feature so the crate builds and tests
@@ -56,6 +63,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
+pub mod tasks;
 pub mod tensorfile;
 pub mod testing;
 pub mod train;

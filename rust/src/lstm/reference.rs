@@ -51,7 +51,7 @@ impl F32LstmCell {
         }
     }
 
-    pub fn step(&self, x: &[f32], h: &mut Vec<f32>, c: &mut Vec<f32>) {
+    pub fn step(&self, x: &[f32], h: &mut [f32], c: &mut [f32]) {
         let hd = self.hidden;
         let mut zx = vec![0f32; 4 * hd];
         let mut zh = vec![0f32; 4 * hd];
@@ -219,6 +219,82 @@ impl F32LstmCell {
             }
         }
         grads
+    }
+}
+
+/// Full-precision dense head over hidden states (f32 parameters,
+/// f64 arithmetic) + softmax cross-entropy — the reference for the
+/// tagging/classification task heads (`tasks::pos` / `tasks::nli`),
+/// anchored by finite differences in `tests/gradcheck.rs` exactly like
+/// [`F32LstmCell::bptt`].
+pub struct RefDense {
+    pub in_dim: usize,
+    pub n_out: usize,
+    /// row-major `[n_out][in_dim]` (the QMatrix layout)
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl RefDense {
+    /// Logits of one hidden state (f64).
+    pub fn forward(&self, h: &[f64]) -> Vec<f64> {
+        assert_eq!(h.len(), self.in_dim);
+        (0..self.n_out)
+            .map(|r| {
+                let mut acc = self.b[r] as f64;
+                for (k, &hv) in h.iter().enumerate() {
+                    acc += self.w[r * self.in_dim + k] as f64 * hv;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Softmax cross-entropy of one logit row: `(loss, dlogits)`.
+    pub fn ce(logits: &[f64], target: usize) -> (f64, Vec<f64>) {
+        assert!(target < logits.len());
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let denom: f64 = logits.iter().map(|&v| (v - mx).exp()).sum();
+        let loss = denom.ln() + mx - logits[target];
+        let dlogits: Vec<f64> = logits
+            .iter()
+            .enumerate()
+            .map(|(v, &lv)| {
+                let p = (lv - mx).exp() / denom;
+                p - if v == target { 1.0 } else { 0.0 }
+            })
+            .collect();
+        (loss, dlogits)
+    }
+
+    /// Backward of [`Self::forward`]: accumulate `dw += dlogits ⊗ h`,
+    /// `db += dlogits`, return `dh = Wᵀ·dlogits`.
+    pub fn backward(
+        &self,
+        h: &[f64],
+        dlogits: &[f64],
+        dw: &mut [f64],
+        db: &mut [f64],
+    ) -> Vec<f64> {
+        assert_eq!(h.len(), self.in_dim);
+        assert_eq!(dlogits.len(), self.n_out);
+        assert_eq!(dw.len(), self.n_out * self.in_dim);
+        assert_eq!(db.len(), self.n_out);
+        for (r, &dl) in dlogits.iter().enumerate() {
+            db[r] += dl;
+            for (k, &hv) in h.iter().enumerate() {
+                dw[r * self.in_dim + k] += dl * hv;
+            }
+        }
+        (0..self.in_dim)
+            .map(|k| {
+                let mut acc = 0f64;
+                for (r, &dl) in dlogits.iter().enumerate() {
+                    acc += self.w[r * self.in_dim + k] as f64 * dl;
+                }
+                acc
+            })
+            .collect()
     }
 }
 

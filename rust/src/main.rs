@@ -8,18 +8,27 @@
 //!                                        # batched inference server + load gen
 //! floatsd-lstm train [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
+//! floatsd-lstm train --task {lm,pos,nli,mt} [--steps N --out ckpt.tensors ...]
+//!                                        # multi-task offline training (tasks/)
+//! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--out report.json]
+//!                                        # held-out eval grid across all four tasks
 //! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```
 //!
-//! `train` without `--artifact` runs the offline pure-rust trainer
-//! ([`floatsd_lstm::train`]): a tiny char-LM trained from scratch
-//! under the paper's full quantization scheme, whose checkpoint
-//! `serve --model` loads directly. Subcommands marked `[pjrt]` need
-//! the crate built with `--features pjrt` (and real XLA bindings in
-//! place of the offline stub); everything else — the serving engine
-//! and the offline trainer included — is pure rust and always
-//! available.
+//! `train` without `--artifact` runs the offline pure-rust trainer:
+//! with `--task` the multi-task engine ([`floatsd_lstm::tasks`])
+//! trains any of the four Table-IV heads from scratch; without it the
+//! historical char-LM path ([`floatsd_lstm::train`]) runs. Both write
+//! `.tensors` checkpoints; single-stack checkpoints load directly
+//! into `serve --model`, and every task checkpoint feeds
+//! `floatsd-lstm eval`, which rebuilds the task from the checkpoint's
+//! `meta/task_cfg` and emits a deterministic JSON report covering all
+//! four tasks (untrained tasks are scored at preset init). Subcommands
+//! marked `[pjrt]` need the crate built with `--features pjrt` (and
+//! real XLA bindings in place of the offline stub); everything else —
+//! the serving engine, the offline trainers, and the eval harness —
+//! is pure rust and always available.
 
 use anyhow::Result;
 
@@ -35,17 +44,22 @@ fn main() -> Result<()> {
         Some("hardware") => hardware(),
         Some("serve") => floatsd_lstm::serve::demo::run(&args),
         // `--artifact` selects the PJRT/XLA experiment path; without it
-        // the offline pure-rust trainer runs (always available). A bare
+        // the offline pure-rust trainers run (always available). A bare
         // `--artifact` flag (value forgotten) must reach the PJRT path
         // too, so it errors instead of silently training offline.
         Some("train") if args.opt("artifact").is_none() && !args.has_flag("artifact") => {
-            floatsd_lstm::train::run_cli(&args)
+            if args.opt("task").is_some() {
+                floatsd_lstm::tasks::run_train_cli(&args)
+            } else {
+                floatsd_lstm::train::run_cli(&args)
+            }
         }
         Some("train") => train(&args),
+        Some("eval") => floatsd_lstm::tasks::eval::run_cli(&args),
         Some("suite") => suite(&args),
         _ => {
             eprintln!(
-                "usage: floatsd-lstm <info|formats|hardware|serve|train|suite> [options]\n\
+                "usage: floatsd-lstm <info|formats|hardware|serve|train|eval|suite> [options]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())

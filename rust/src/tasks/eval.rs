@@ -1,0 +1,151 @@
+//! Evaluation harness — `floatsd-lstm eval`.
+//!
+//! Loads `.tensors` checkpoints written by the task heads, rebuilds
+//! each task (topology + deterministic held-out stream) from the
+//! checkpoint's own `meta/task_cfg` blob, runs the eval set, and
+//! emits a machine-readable Table-IV-style grid as JSON. The grid
+//! always covers **all four tasks**: tasks without a checkpoint are
+//! evaluated at their deterministic preset initialization and marked
+//! `"source": "init"` — so a single report shows trained-vs-untrained
+//! per workload.
+//!
+//! Determinism contract: same checkpoints in, byte-identical JSON out
+//! (fixed key order via `BTreeMap`, deterministic generators, no
+//! timestamps). Pinned by `tests/tasks_train.rs`.
+//!
+//! Report schema (`schema = "floatsd-eval-v1"`):
+//!
+//! ```json
+//! {
+//!   "schema": "floatsd-eval-v1",
+//!   "tasks": {
+//!     "lm":  { "source": "checkpoint:<path>" | "init",
+//!              "loss": 2.31, "metric": 10.1, "metric_name": "ppl",
+//!              "count": 1024,
+//!              "config": { "vocab": 64, "hidden": 24, ... } },
+//!     "pos": { ... }, "nli": { ... }, "mt": { ... }
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::lstm::model::ParamBag;
+use crate::tensorfile::json::Json;
+use crate::tensorfile::read_tensors;
+
+use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
+
+/// Evaluate one checkpoint: rebuild the task from its `meta/task_cfg`
+/// and run the held-out eval set.
+pub fn evaluate_checkpoint(path: &Path) -> Result<(TaskConfig, TaskEval)> {
+    let tensors = read_tensors(path)?;
+    let meta_text = {
+        let meta = tensors.iter().find(|t| t.name == "meta/task_cfg").with_context(|| {
+            format!(
+                "{}: no meta/task_cfg tensor — not a task checkpoint \
+                 (write one with `floatsd-lstm train --task ...`)",
+                path.display()
+            )
+        })?;
+        meta.as_text()?
+    };
+    let cfg = TaskConfig::from_meta_json(&meta_text)?;
+    let bag = ParamBag::from_tensors(tensors);
+    let head = load_task(cfg.clone(), &bag)?;
+    Ok((cfg, head.evaluate()))
+}
+
+fn entry(cfg: &TaskConfig, eval: &TaskEval, source: &str) -> Json {
+    let num = |v: usize| Json::Num(v as f64);
+    let mut cfg_m = BTreeMap::new();
+    cfg_m.insert("vocab".to_string(), num(cfg.vocab));
+    cfg_m.insert("vocab_tgt".to_string(), num(cfg.vocab_tgt));
+    cfg_m.insert("n_classes".to_string(), num(cfg.n_classes));
+    cfg_m.insert("dim".to_string(), num(cfg.dim));
+    cfg_m.insert("hidden".to_string(), num(cfg.hidden));
+    cfg_m.insert("layers".to_string(), num(cfg.layers));
+    cfg_m.insert("batch".to_string(), num(cfg.batch));
+    cfg_m.insert("seq".to_string(), num(cfg.seq));
+    cfg_m.insert("eval_batches".to_string(), num(cfg.eval_batches));
+    cfg_m.insert("seed".to_string(), Json::Str(cfg.seed.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("source".to_string(), Json::Str(source.to_string()));
+    m.insert("loss".to_string(), Json::Num(eval.loss));
+    m.insert("metric".to_string(), Json::Num(eval.metric));
+    m.insert("metric_name".to_string(), Json::Str(eval.metric_name.to_string()));
+    m.insert("count".to_string(), num(eval.count));
+    m.insert("config".to_string(), Json::Obj(cfg_m));
+    Json::Obj(m)
+}
+
+/// Build the full four-task grid. Checkpoints cover their own task;
+/// the rest are evaluated at preset init. Pure (no output): this is
+/// the embeddable API — `run_cli` owns the human-readable rendering.
+pub fn build_report(models: &[PathBuf]) -> Result<Json> {
+    let mut tasks: BTreeMap<String, Json> = BTreeMap::new();
+    for path in models {
+        let (cfg, eval) = evaluate_checkpoint(path)
+            .with_context(|| format!("evaluate {}", path.display()))?;
+        let name = cfg.task.name().to_string();
+        if tasks.contains_key(&name) {
+            bail!("duplicate checkpoint for task {name}: {}", path.display());
+        }
+        tasks.insert(name, entry(&cfg, &eval, &format!("checkpoint:{}", path.display())));
+    }
+    for kind in TaskKind::ALL {
+        if tasks.contains_key(kind.name()) {
+            continue;
+        }
+        let cfg = TaskConfig::preset(kind);
+        let head = build_task(&cfg)?;
+        let eval = head.evaluate();
+        tasks.insert(kind.name().to_string(), entry(&cfg, &eval, "init"));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("floatsd-eval-v1".to_string()));
+    root.insert("tasks".to_string(), Json::Obj(tasks));
+    Ok(Json::Obj(root))
+}
+
+/// `floatsd-lstm eval [--model a.tensors[,b.tensors...]] [ckpt ...]
+/// [--out report.json]` — see `main.rs` docs.
+///
+/// The human-readable grid goes to **stderr**; stdout carries only
+/// the JSON document, so `floatsd-lstm eval | jq .` works.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let mut models: Vec<PathBuf> = Vec::new();
+    if let Some(list) = args.opt("model") {
+        models.extend(list.split(',').filter(|s| !s.is_empty()).map(PathBuf::from));
+    }
+    models.extend(args.positionals.iter().map(PathBuf::from));
+    let report = build_report(&models)?;
+
+    eprintln!("Table-IV grid (held-out eval):");
+    if let Some(tasks) = report.get("tasks").and_then(Json::as_obj) {
+        for (name, e) in tasks {
+            let s = |k: &str| e.get(k).and_then(Json::as_str).unwrap_or("?");
+            let n = |k: &str| e.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            eprintln!(
+                "  {:<4} loss {:.4}  {} {:.4}  ({} positions)  [{}]",
+                name,
+                n("loss"),
+                s("metric_name"),
+                n("metric"),
+                e.get("count").and_then(Json::as_usize).unwrap_or(0),
+                s("source")
+            );
+        }
+    }
+    let text = report.to_string();
+    println!("{text}");
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, format!("{text}\n")).with_context(|| format!("write {out}"))?;
+        eprintln!("report: {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Language-modeling head: per-step next-token cross-entropy over the
+//! vocabulary, on the `data::lm` Markov stream. The lanes are
+//! contiguous streams, so the recurrent state carries across training
+//! windows (stateful truncated BPTT) — the same protocol as the
+//! char-LM [`crate::train::Trainer`], rehosted on the [`TaskHead`]
+//! contract so it trains and evaluates beside the other heads.
+//! Checkpoints use the unprefixed parameter names and therefore stay
+//! loadable by `floatsd-lstm serve --model`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::lm::LmGen;
+use crate::data::BatchSource;
+use crate::lstm::model::ParamBag;
+use crate::tensorfile::{write_tensors, Tensor};
+use crate::train::{eval_ce, masked_cross_entropy_grad, StackTape};
+
+use super::{
+    load_stack, stack_tensors, to_step_labels, to_steps, SingleStack, TaskConfig, TaskEval,
+    TaskHead, TaskKind,
+};
+
+pub struct LmTask {
+    cfg: TaskConfig,
+    core: SingleStack,
+    gen: LmGen,
+    steps_done: usize,
+}
+
+impl LmTask {
+    pub fn new(cfg: TaskConfig) -> Self {
+        let core = SingleStack::init(
+            cfg.vocab,
+            cfg.dim,
+            cfg.hidden,
+            cfg.layers,
+            cfg.vocab,
+            cfg.batch,
+            cfg.seed,
+        );
+        Self::with_core(cfg, core)
+    }
+
+    pub fn from_bag(cfg: TaskConfig, bag: &ParamBag) -> Result<Self> {
+        let (stack, masters) = load_stack(bag, "")?;
+        let core = SingleStack::from_parts(stack, masters, cfg.batch);
+        Ok(Self::with_core(cfg, core))
+    }
+
+    fn with_core(cfg: TaskConfig, core: SingleStack) -> Self {
+        // same data-seed convention as the char-LM trainer
+        let gen = LmGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.seed ^ 0xDA7A);
+        LmTask { cfg, core, gen, steps_done: 0 }
+    }
+}
+
+impl TaskHead for LmTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::Lm
+    }
+
+    fn config(&self) -> &TaskConfig {
+        &self.cfg
+    }
+
+    fn compute_window(&mut self, scale: f32) -> f64 {
+        let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        let batch = self.gen.next_train();
+        let ids = to_steps(&batch.x, b_n, seq);
+        let targets = to_step_labels(&batch.y, b_n, seq);
+        // state carries across windows: no reset
+        let (tape, logits) = self.core.forward_traced(&ids);
+
+        let inv = 1.0 / (b_n * seq) as f32;
+        let mut loss_sum = 0f64;
+        let mut scored = 0usize;
+        let mut dlogits = Vec::with_capacity(seq);
+        for t in 0..seq {
+            let mut dl = vec![0f32; b_n * vocab];
+            let (l, n) = masked_cross_entropy_grad(
+                &logits[t],
+                &targets[t],
+                vocab,
+                None,
+                inv,
+                scale,
+                &mut dl,
+            );
+            loss_sum += l;
+            scored += n;
+            dlogits.push(dl);
+        }
+        self.core.backward(&tape, &dlogits);
+        self.steps_done += 1;
+        loss_sum / scored.max(1) as f64
+    }
+
+    fn apply_update(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
+        self.core.apply(scale, lr, momentum, clip)
+    }
+
+    fn evaluate(&self) -> TaskEval {
+        let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        // the eval lanes are contiguous held-out streams: carry state
+        // across the fixed eval batches, starting from zero (local
+        // buffers — training state is untouched)
+        let (mut hs, mut cs) = self.core.stack.zero_flat_state(b_n);
+        let mut scr = self.core.stack.trace_scratches(b_n);
+        let mut loss_sum = 0f64;
+        let mut count = 0usize;
+        for batch in self.gen.eval_set() {
+            let ids = to_steps(&batch.x, b_n, seq);
+            let mut tape = StackTape::new(&self.core.stack, b_n);
+            let logits =
+                self.core.stack.forward_batch_traced(&ids, &mut hs, &mut cs, &mut scr, &mut tape);
+            for (t, row) in logits.iter().enumerate() {
+                for b in 0..b_n {
+                    let y = batch.y[b * seq + t] as usize;
+                    loss_sum += eval_ce(&row[b * vocab..(b + 1) * vocab], y);
+                    count += 1;
+                }
+            }
+        }
+        let loss = loss_sum / count.max(1) as f64;
+        TaskEval { task: "lm", loss, metric_name: "ppl", metric: loss.exp(), count }
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut tensors = stack_tensors("", &self.core.stack, &self.core.masters);
+        tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
+        tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
+        write_tensors(path, &tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TaskConfig {
+        let mut cfg = TaskConfig::preset(TaskKind::Lm);
+        cfg.vocab = 32;
+        cfg.dim = 8;
+        cfg.hidden = 10;
+        cfg.batch = 4;
+        cfg.seq = 8;
+        cfg.eval_batches = 2;
+        cfg.seed = 5;
+        cfg
+    }
+
+    #[test]
+    fn first_window_loss_sits_near_uniform() {
+        let mut task = LmTask::new(tiny_cfg());
+        let loss = task.compute_window(1024.0);
+        let uniform = (32f64).ln();
+        assert!((loss - uniform).abs() < 1.5, "loss {loss} vs ln V {uniform}");
+        assert!(task.apply_update(1024.0, 0.3, 0.9, None));
+    }
+
+    #[test]
+    fn evaluation_does_not_disturb_training_state() {
+        let mut task = LmTask::new(tiny_cfg());
+        task.compute_window(1024.0);
+        let hs_before = task.core.hs.clone();
+        let e1 = task.evaluate();
+        let e2 = task.evaluate();
+        assert_eq!(task.core.hs, hs_before, "evaluate touched carried state");
+        assert_eq!(e1.loss.to_bits(), e2.loss.to_bits(), "eval must be deterministic");
+        assert!(e1.count > 0);
+        assert!((e1.metric - e1.loss.exp()).abs() < 1e-12);
+    }
+}

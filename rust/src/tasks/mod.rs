@@ -1,0 +1,787 @@
+//! Multi-task heads + evaluation harness — the paper's Table IV
+//! scenario grid (language modeling, POS tagging, NLI classification,
+//! translation) running offline on the pure-rust quantized training
+//! engine.
+//!
+//! The [`train`](crate::train) subsystem provides the quantized
+//! machinery (traced forwards, STE backward passes, FP16-master
+//! updates, dynamic loss scaling); this module provides the *task
+//! structure* on top:
+//!
+//! * [`TaskHead`] — the per-task contract: one gradient window
+//!   (forward + loss + backward), the buffered update, deterministic
+//!   held-out evaluation, and checkpointing;
+//! * [`lm`] / [`pos`] / [`nli`] / [`mt`] — the four heads, each wired
+//!   to its [`crate::data`] generator, its loss (masked cross-entropy
+//!   honoring PAD where the task has one), and its metric (perplexity,
+//!   tag accuracy, classification accuracy);
+//! * [`TaskTrainer`] — the shared optimizer loop (`floatsd-lstm train
+//!   --task {lm,pos,nli,mt}`): loss-scale bookkeeping and skip/apply
+//!   logic identical to the char-LM [`crate::train::Trainer`];
+//! * [`eval`] — the harness behind `floatsd-lstm eval`: load any
+//!   `.tensors` checkpoint (task topology + generators rebuilt from
+//!   its `meta/task_cfg` blob), run the held-out set, and emit a
+//!   deterministic JSON report covering all four tasks.
+//!
+//! Head wiring, loss masking rules, and the report schema are
+//! documented in `DESIGN.md` ("Tasks & evaluation subsystem").
+
+pub mod eval;
+pub mod lm;
+pub mod mt;
+pub mod nli;
+pub mod pos;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::lstm::cell::{BatchScratch, QLstmCell};
+use crate::lstm::model::{Dense, Embedding, ParamBag, QLstmLayer};
+use crate::lstm::QLstmStack;
+use crate::tensorfile::json::Json;
+use crate::tensorfile::Tensor;
+use crate::train::optimizer::MasterCell;
+use crate::train::{
+    finalize_grads, LossScaler, MasterStack, StackGrads, StackTape, StateCot, StepOutcome,
+};
+
+/// The four offline task heads (paper Table IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// language modeling: per-step next-token CE over the vocabulary
+    Lm,
+    /// POS tagging: per-step classification over the tag set
+    Pos,
+    /// NLI: final-hidden-state 3-way classification of a pair
+    Nli,
+    /// translation: encoder–decoder teacher-forced seq2seq
+    Mt,
+}
+
+impl TaskKind {
+    /// All tasks, in the report's canonical order.
+    pub const ALL: [TaskKind; 4] = [TaskKind::Lm, TaskKind::Pos, TaskKind::Nli, TaskKind::Mt];
+
+    pub fn parse(s: &str) -> Result<TaskKind> {
+        Ok(match s {
+            "lm" => TaskKind::Lm,
+            "pos" => TaskKind::Pos,
+            "nli" => TaskKind::Nli,
+            "mt" => TaskKind::Mt,
+            other => bail!("unknown task {other:?} (expected lm|pos|nli|mt)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Lm => "lm",
+            TaskKind::Pos => "pos",
+            TaskKind::Nli => "nli",
+            TaskKind::Mt => "mt",
+        }
+    }
+}
+
+/// Configuration of one offline task-training run — the multi-task
+/// superset of [`crate::train::TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct TaskConfig {
+    pub task: TaskKind,
+    /// (source) vocabulary
+    pub vocab: usize,
+    /// target-language vocabulary (`mt` only; 0 elsewhere)
+    pub vocab_tgt: usize,
+    /// tag/label classes (`pos`/`nli`; 0 elsewhere)
+    pub n_classes: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub batch: usize,
+    /// per-example sequence length (LM window, POS sentence, NLI
+    /// premise/hypothesis half, MT source length)
+    pub seq: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    pub loss_scale: f32,
+    pub clip_norm: Option<f32>,
+    pub log_every: usize,
+    pub eval_batches: usize,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl TaskConfig {
+    /// The miniature-but-learnable default per task — also what the
+    /// eval harness uses for `"source": "init"` grid entries, so keep
+    /// these stable.
+    pub fn preset(task: TaskKind) -> TaskConfig {
+        let mut cfg = TaskConfig {
+            task,
+            vocab: 64,
+            vocab_tgt: 0,
+            n_classes: 0,
+            dim: 16,
+            hidden: 24,
+            layers: 1,
+            batch: 8,
+            seq: 16,
+            steps: 400,
+            lr: 0.3,
+            momentum: 0.9,
+            seed: 42,
+            loss_scale: 1024.0,
+            clip_norm: None,
+            log_every: 25,
+            eval_batches: 4,
+            checkpoint: None,
+        };
+        match task {
+            TaskKind::Lm => {}
+            TaskKind::Pos => {
+                cfg.vocab = 120;
+                cfg.n_classes = 8;
+                cfg.seq = 12;
+                cfg.steps = 300;
+            }
+            TaskKind::Nli => {
+                cfg.n_classes = 3;
+                cfg.batch = 16;
+                cfg.seq = 8;
+            }
+            TaskKind::Mt => {
+                cfg.vocab = 48;
+                cfg.vocab_tgt = 48;
+                cfg.hidden = 32;
+                cfg.seq = 8;
+            }
+        }
+        cfg
+    }
+
+    /// The JSON metadata blob stored in checkpoints (`meta/task_cfg`):
+    /// everything the eval harness needs to rebuild the model topology
+    /// and the deterministic held-out stream. Training-only knobs
+    /// (lr, momentum, …) are deliberately absent.
+    pub fn to_meta_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        let num = |v: usize| Json::Num(v as f64);
+        m.insert("task".to_string(), Json::Str(self.task.name().to_string()));
+        m.insert("vocab".to_string(), num(self.vocab));
+        m.insert("vocab_tgt".to_string(), num(self.vocab_tgt));
+        m.insert("n_classes".to_string(), num(self.n_classes));
+        m.insert("dim".to_string(), num(self.dim));
+        m.insert("hidden".to_string(), num(self.hidden));
+        m.insert("layers".to_string(), num(self.layers));
+        m.insert("batch".to_string(), num(self.batch));
+        m.insert("seq".to_string(), num(self.seq));
+        m.insert("eval_batches".to_string(), num(self.eval_batches));
+        // decimal string, not a JSON number: a u64 seed above 2^53
+        // would silently lose bits through the f64 number path
+        m.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        Json::Obj(m).to_string()
+    }
+
+    /// Inverse of [`Self::to_meta_json`] (training knobs come from the
+    /// task preset).
+    pub fn from_meta_json(text: &str) -> Result<TaskConfig> {
+        let j = Json::parse(text).context("parse meta/task_cfg")?;
+        let task_name =
+            j.get("task").and_then(Json::as_str).context("task_cfg: missing task")?;
+        let task = TaskKind::parse(task_name)?;
+        let mut cfg = TaskConfig::preset(task);
+        let get = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).with_context(|| format!("task_cfg: missing {k}"))
+        };
+        cfg.vocab = get("vocab")?;
+        cfg.vocab_tgt = get("vocab_tgt")?;
+        cfg.n_classes = get("n_classes")?;
+        cfg.dim = get("dim")?;
+        cfg.hidden = get("hidden")?;
+        cfg.layers = get("layers")?;
+        cfg.batch = get("batch")?;
+        cfg.seq = get("seq")?;
+        cfg.eval_batches = get("eval_batches")?;
+        cfg.seed = j
+            .get("seed")
+            .and_then(Json::as_str)
+            .context("task_cfg: missing seed")?
+            .parse::<u64>()
+            .context("task_cfg: seed is not a u64")?;
+        Ok(cfg)
+    }
+}
+
+/// One row of the Table-IV-style evaluation grid.
+#[derive(Clone, Debug)]
+pub struct TaskEval {
+    pub task: &'static str,
+    /// mean cross-entropy (nats) per scored token/example, held-out
+    pub loss: f64,
+    /// `"ppl"` (lm/mt), `"tag_acc"` (pos), `"cls_acc"` (nli)
+    pub metric_name: &'static str,
+    pub metric: f64,
+    /// scored positions (PAD-masked targets excluded)
+    pub count: usize,
+}
+
+/// The per-task contract on top of the shared quantized machinery.
+///
+/// A window is split in two so the generic trainer owns the
+/// loss-scale bookkeeping: [`Self::compute_window`] buffers the (still
+/// loss-scaled) gradients, [`Self::apply_update`] finalizes and
+/// applies them — or reports the FP8 overflow that makes the trainer
+/// skip the step and shrink the scale.
+pub trait TaskHead {
+    fn kind(&self) -> TaskKind;
+    fn config(&self) -> &TaskConfig;
+    /// Forward (traced) + loss + backward over the next training
+    /// batch; returns the mean unscaled loss per scored position.
+    fn compute_window(&mut self, scale: f32) -> f64;
+    /// Finalize + apply the buffered gradients; `false` = overflow.
+    fn apply_update(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool;
+    /// Deterministic held-out evaluation. Must not disturb training
+    /// state (the LM head's carried lanes keep streaming).
+    fn evaluate(&self) -> TaskEval;
+    /// Write a `.tensors` checkpoint carrying `meta/task_cfg` so
+    /// `floatsd-lstm eval` can rebuild the task from the file alone.
+    fn save_checkpoint(&self, path: &Path) -> Result<()>;
+}
+
+/// Build a fresh (deterministically initialized) head for a config.
+pub fn build_task(cfg: &TaskConfig) -> Result<Box<dyn TaskHead>> {
+    validate(cfg)?;
+    Ok(match cfg.task {
+        TaskKind::Lm => Box::new(lm::LmTask::new(cfg.clone())),
+        TaskKind::Pos => Box::new(pos::PosTask::new(cfg.clone())),
+        TaskKind::Nli => Box::new(nli::NliTask::new(cfg.clone())),
+        TaskKind::Mt => Box::new(mt::MtTask::new(cfg.clone())),
+    })
+}
+
+/// Rebuild a head from checkpointed parameters.
+pub fn load_task(cfg: TaskConfig, bag: &ParamBag) -> Result<Box<dyn TaskHead>> {
+    validate(&cfg)?;
+    Ok(match cfg.task {
+        TaskKind::Lm => Box::new(lm::LmTask::from_bag(cfg, bag)?),
+        TaskKind::Pos => Box::new(pos::PosTask::from_bag(cfg, bag)?),
+        TaskKind::Nli => Box::new(nli::NliTask::from_bag(cfg, bag)?),
+        TaskKind::Mt => Box::new(mt::MtTask::from_bag(cfg, bag)?),
+    })
+}
+
+/// Turn the generators' assert-style preconditions into errors before
+/// any constructor can panic on them. The generator domain rules live
+/// once, in [`crate::data::check_task_args`]; only the model-shape
+/// and head-specific constraints are checked here.
+fn validate(cfg: &TaskConfig) -> Result<()> {
+    if cfg.dim == 0 || cfg.hidden == 0 || cfg.layers == 0 || cfg.batch == 0 {
+        bail!("{}: dim/hidden/layers/batch must all be >= 1", cfg.task.name());
+    }
+    if cfg.seq < 2 {
+        bail!("{}: seq {} too short (need >= 2)", cfg.task.name(), cfg.seq);
+    }
+    if cfg.eval_batches == 0 {
+        bail!("{}: need >= 1 eval batch (the held-out set)", cfg.task.name());
+    }
+    if cfg.task == TaskKind::Nli && cfg.n_classes != 3 {
+        bail!("nli: labels are 3-way (entail/contradict/neutral), got {}", cfg.n_classes);
+    }
+    crate::data::check_task_args(cfg.task.name(), cfg.vocab, cfg.vocab_tgt, cfg.n_classes)
+}
+
+// ---------------------------------------------------------------------
+// shared single-stack machinery
+// ---------------------------------------------------------------------
+
+/// One quantized stack + its FP16 masters + gradient/state buffers —
+/// the building block every head is made of (`mt` uses two: encoder
+/// and decoder).
+pub(crate) struct SingleStack {
+    pub stack: QLstmStack,
+    pub masters: MasterStack,
+    pub grads: StackGrads,
+    /// per-layer flat recurrent state carried between windows (LM) or
+    /// reset per window (pos/nli/mt)
+    pub hs: Vec<Vec<f32>>,
+    pub cs: Vec<Vec<f32>>,
+    scratches: Vec<BatchScratch>,
+    pub batch: usize,
+}
+
+impl SingleStack {
+    pub fn init(
+        vocab: usize,
+        dim: usize,
+        hidden: usize,
+        layers: usize,
+        n_out: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let (masters, stack) =
+            MasterStack::init_with_stack_dims(vocab, dim, hidden, layers, n_out, seed);
+        Self::from_parts(stack, masters, batch)
+    }
+
+    pub fn from_parts(stack: QLstmStack, masters: MasterStack, batch: usize) -> Self {
+        let (hs, cs) = stack.zero_flat_state(batch);
+        let scratches = stack.trace_scratches(batch);
+        let grads = StackGrads::zeros(&stack);
+        SingleStack { stack, masters, grads, hs, cs, scratches, batch }
+    }
+
+    /// Zero the carried recurrent state (per-window reset for tasks
+    /// whose batches are independent examples).
+    pub fn reset_state(&mut self) {
+        for v in self.hs.iter_mut().chain(self.cs.iter_mut()) {
+            v.fill(0.0);
+        }
+    }
+
+    /// Traced forward over `ids[t][b]`, advancing the carried state.
+    pub fn forward_traced(&mut self, ids: &[Vec<usize>]) -> (StackTape, Vec<Vec<f32>>) {
+        let mut tape = StackTape::new(&self.stack, self.batch);
+        let logits = self.stack.forward_batch_traced(
+            ids,
+            &mut self.hs,
+            &mut self.cs,
+            &mut self.scratches,
+            &mut tape,
+        );
+        (tape, logits)
+    }
+
+    /// Forward from fresh zero state with throwaway buffers — the
+    /// evaluation path; never disturbs the carried training state.
+    pub fn forward_fresh(&self, ids: &[Vec<usize>]) -> Vec<Vec<f32>> {
+        let (mut hs, mut cs) = self.stack.zero_flat_state(self.batch);
+        let mut scr = self.stack.trace_scratches(self.batch);
+        let mut tape = StackTape::new(&self.stack, self.batch);
+        self.stack.forward_batch_traced(ids, &mut hs, &mut cs, &mut scr, &mut tape)
+    }
+
+    /// BPTT into freshly zeroed gradient buffers.
+    pub fn backward(&mut self, tape: &StackTape, dlogits: &[Vec<f32>]) {
+        self.backward_carry(tape, dlogits, None);
+    }
+
+    /// BPTT with the seq2seq state bridge; returns the per-layer
+    /// initial-state cotangents (see
+    /// [`QLstmStack::backward_batch_carry`]).
+    pub fn backward_carry(
+        &mut self,
+        tape: &StackTape,
+        dlogits: &[Vec<f32>],
+        carry: Option<&[StateCot]>,
+    ) -> Vec<StateCot> {
+        self.grads = StackGrads::zeros(&self.stack);
+        self.stack.backward_batch_carry(tape, dlogits, carry, &mut self.grads)
+    }
+
+    /// Finalize + apply the buffered gradients (single-stack heads).
+    pub fn apply(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
+        if !finalize_grads(&mut self.grads, scale, clip) {
+            return false;
+        }
+        self.masters.apply(&mut self.stack, &self.grads, lr, momentum);
+        true
+    }
+}
+
+/// Column-major view of a flat `[B][T]` id matrix: `out[t][b]` — the
+/// layout the traced forward consumes.
+pub(crate) fn to_steps(x: &[i32], batch: usize, seq: usize) -> Vec<Vec<usize>> {
+    assert_eq!(x.len(), batch * seq, "flat batch shape mismatch");
+    (0..seq).map(|t| (0..batch).map(|b| x[b * seq + t] as usize).collect()).collect()
+}
+
+/// The same transpose for raw i32 targets (kept i32 so PAD masking
+/// stays representable).
+pub(crate) fn to_step_labels(y: &[i32], batch: usize, seq: usize) -> Vec<Vec<i32>> {
+    assert_eq!(y.len(), batch * seq, "flat batch shape mismatch");
+    (0..seq).map(|t| (0..batch).map(|b| y[b * seq + t]).collect()).collect()
+}
+
+/// Index of the largest logit (first on ties — deterministic).
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// checkpoint naming shared by every head
+// ---------------------------------------------------------------------
+
+/// JAX-keystr parameter name, optionally under a sub-tree prefix
+/// (`"enc"`/`"dec"` for the seq2seq pair; `""` for single-stack heads,
+/// which keeps their checkpoints loadable by
+/// [`crate::lstm::model::build_tiny_from_params`] and thus by `serve`).
+pub(crate) fn param_key(prefix: &str, rest: &str) -> String {
+    if prefix.is_empty() {
+        format!("['params']{rest}")
+    } else {
+        format!("['params']['{prefix}']{rest}")
+    }
+}
+
+/// Serialize one stack's FP16 masters under `prefix` in the JAX layout
+/// (the exact convention of
+/// [`crate::train::Trainer::save_checkpoint`]): reloading re-quantizes
+/// the masters to the same FloatSD8 codes the live stack serves.
+pub(crate) fn stack_tensors(prefix: &str, stack: &QLstmStack, ms: &MasterStack) -> Vec<Tensor> {
+    let (vocab, dim) = (stack.embed.vocab, stack.embed.dim);
+    let mut tensors = vec![Tensor::from_f32(
+        &param_key(prefix, "['emb']['emb']"),
+        &[vocab, dim],
+        &ms.emb,
+    )];
+    let mut in_dim = dim;
+    for (l, m) in ms.layers.iter().enumerate() {
+        let hidden = stack.layers[l].fwd.hidden;
+        // QMatrix layout [4H][in] -> JAX layout [in][4H]
+        let mut wx = vec![0f32; m.wx.len()];
+        for r in 0..4 * hidden {
+            for k in 0..in_dim {
+                wx[k * 4 * hidden + r] = m.wx[r * in_dim + k];
+            }
+        }
+        let mut wh = vec![0f32; m.wh.len()];
+        for r in 0..4 * hidden {
+            for k in 0..hidden {
+                wh[k * 4 * hidden + r] = m.wh[r * hidden + k];
+            }
+        }
+        let idx = l + 1;
+        tensors.push(Tensor::from_f32(
+            &param_key(prefix, &format!("['l{idx}']['wx']")),
+            &[in_dim, 4 * hidden],
+            &wx,
+        ));
+        tensors.push(Tensor::from_f32(
+            &param_key(prefix, &format!("['l{idx}']['wh']")),
+            &[hidden, 4 * hidden],
+            &wh,
+        ));
+        tensors.push(Tensor::from_f32(
+            &param_key(prefix, &format!("['l{idx}']['b']")),
+            &[4 * hidden],
+            &m.b,
+        ));
+        in_dim = hidden;
+    }
+    let n_out = stack.n_out();
+    let mut ow = vec![0f32; ms.head_w.len()];
+    for r in 0..n_out {
+        for k in 0..in_dim {
+            ow[k * n_out + r] = ms.head_w[r * in_dim + k];
+        }
+    }
+    tensors.push(Tensor::from_f32(&param_key(prefix, "['out']['w']"), &[in_dim, n_out], &ow));
+    tensors.push(Tensor::from_f32(&param_key(prefix, "['out']['b']"), &[n_out], &ms.head_b));
+    tensors
+}
+
+/// Inverse of [`stack_tensors`]: rebuild `(live stack, masters)` from
+/// a checkpoint sub-tree. The live weights are re-quantized from the
+/// FP16 masters exactly like a fresh init, so a save → load round trip
+/// serves bit-identical logits.
+pub(crate) fn load_stack(bag: &ParamBag, prefix: &str) -> Result<(QLstmStack, MasterStack)> {
+    let transpose = |src: &[f32], rows: usize, cols: usize| {
+        let mut t = vec![0f32; src.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = src[r * cols + c];
+            }
+        }
+        t
+    };
+
+    let (esh, emb) = bag.f32(&[param_key(prefix, "['emb']['emb']").as_str()])?;
+    if esh.len() != 2 {
+        bail!("embedding under {prefix:?} must be rank 2, got {esh:?}");
+    }
+    let (vocab, dim) = (esh[0], esh[1]);
+    let mut layers = Vec::new();
+    let mut masters = Vec::new();
+    let mut in_dim = dim;
+    for l in 1usize.. {
+        let wx_key = param_key(prefix, &format!("['l{l}']['wx']"));
+        if l > 1 && bag.f32(&[wx_key.as_str()]).is_err() {
+            break;
+        }
+        let (_, wx) = bag.f32(&[wx_key.as_str()])?;
+        let (whs, wh) = bag.f32(&[param_key(prefix, &format!("['l{l}']['wh']")).as_str()])?;
+        let (_, b) = bag.f32(&[param_key(prefix, &format!("['l{l}']['b']")).as_str()])?;
+        let hidden = whs[0];
+        layers.push(QLstmLayer {
+            fwd: QLstmCell::from_jax_layout(in_dim, hidden, &wx, &wh, &b),
+            bwd: None,
+        });
+        masters.push(MasterCell::new(
+            transpose(&wx, in_dim, 4 * hidden),
+            transpose(&wh, hidden, 4 * hidden),
+            b.clone(),
+        ));
+        in_dim = hidden;
+    }
+    let (_, ow) = bag.f32(&[param_key(prefix, "['out']['w']").as_str()])?;
+    let (obs, ob) = bag.f32(&[param_key(prefix, "['out']['b']").as_str()])?;
+    let n_out = obs[0];
+    let stack = QLstmStack {
+        embed: Embedding { vocab, dim, table: emb.clone() },
+        layers,
+        head: Dense::from_jax_layout(in_dim, n_out, &ow, &ob),
+    };
+    let ms = MasterStack::from_parts(emb, masters, transpose(&ow, in_dim, n_out), ob);
+    Ok((stack, ms))
+}
+
+// ---------------------------------------------------------------------
+// the shared training loop
+// ---------------------------------------------------------------------
+
+/// Summary of a full [`TaskTrainer::train`] run.
+#[derive(Clone, Debug)]
+pub struct TaskTrainReport {
+    pub losses: Vec<f64>,
+    /// held-out evaluation at initialization (before any update)
+    pub eval_init: TaskEval,
+    /// held-out evaluation after the last step
+    pub eval_final: TaskEval,
+    pub steps_applied: usize,
+    pub steps_skipped: u64,
+    pub final_scale: f32,
+}
+
+/// The generic offline trainer: any [`TaskHead`] + the char-LM
+/// trainer's loss-scale/skip discipline.
+pub struct TaskTrainer {
+    pub head: Box<dyn TaskHead>,
+    pub scaler: LossScaler,
+    pub steps_done: usize,
+    pub steps_applied: usize,
+}
+
+impl TaskTrainer {
+    pub fn new(cfg: TaskConfig) -> Result<Self> {
+        let scaler = LossScaler::new(cfg.loss_scale);
+        let head = build_task(&cfg)?;
+        Ok(TaskTrainer { head, scaler, steps_done: 0, steps_applied: 0 })
+    }
+
+    /// One window: compute gradients, apply (or skip on overflow).
+    pub fn step(&mut self) -> StepOutcome {
+        let (lr, momentum, clip) = {
+            let c = self.head.config();
+            (c.lr, c.momentum, c.clip_norm)
+        };
+        let scale = self.scaler.scale;
+        let loss = self.head.compute_window(scale);
+        let applied = self.head.apply_update(scale, lr, momentum, clip);
+        if applied {
+            self.scaler.on_good_step();
+            self.steps_applied += 1;
+        } else {
+            self.scaler.on_overflow();
+        }
+        self.steps_done += 1;
+        StepOutcome { loss, applied, scale }
+    }
+
+    /// Run the configured number of steps, bracketed by held-out
+    /// evaluations; writes the checkpoint at the end when configured.
+    pub fn train(&mut self) -> Result<TaskTrainReport> {
+        let (steps, log_every, checkpoint) = {
+            let c = self.head.config();
+            (c.steps, c.log_every, c.checkpoint.clone())
+        };
+        let eval_init = self.head.evaluate();
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let out = self.step();
+            losses.push(out.loss);
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                let window = &losses[losses.len().saturating_sub(log_every)..];
+                let mean: f64 = window.iter().sum::<f64>() / window.len() as f64;
+                println!(
+                    "step {:>5}  loss {:.4}  scale {:>7.0}{}",
+                    s + 1,
+                    mean,
+                    out.scale,
+                    if out.applied { "" } else { "  (skipped)" }
+                );
+            }
+        }
+        let eval_final = self.head.evaluate();
+        if let Some(path) = checkpoint {
+            self.head.save_checkpoint(&path)?;
+            println!("checkpoint: {}", path.display());
+        }
+        Ok(TaskTrainReport {
+            losses,
+            eval_init,
+            eval_final,
+            steps_applied: self.steps_applied,
+            steps_skipped: self.scaler.skipped,
+            final_scale: self.scaler.scale,
+        })
+    }
+}
+
+/// `floatsd-lstm train --task {lm,pos,nli,mt}` — see `main.rs` docs.
+pub fn run_train_cli(args: &Args) -> Result<()> {
+    let task = TaskKind::parse(args.opt("task").unwrap_or("lm"))?;
+    let preset = TaskConfig::preset(task);
+    let parse_f32 = |key: &str, default: f32| -> Result<f32> {
+        match args.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse::<f32>()?),
+        }
+    };
+    let cfg = TaskConfig {
+        task,
+        vocab: args.opt_usize("vocab", preset.vocab)?,
+        vocab_tgt: args.opt_usize("vocab-tgt", preset.vocab_tgt)?,
+        n_classes: args.opt_usize("classes", preset.n_classes)?,
+        dim: args.opt_usize("dim", preset.dim)?.max(1),
+        hidden: args.opt_usize("hidden", preset.hidden)?.max(1),
+        layers: args.opt_usize("layers", preset.layers)?.max(1),
+        batch: args.opt_usize("batch", preset.batch)?.max(1),
+        seq: args.opt_usize("seq", preset.seq)?.max(2),
+        steps: args.opt_usize("steps", preset.steps)?.max(1),
+        lr: parse_f32("lr", preset.lr)?,
+        momentum: parse_f32("momentum", preset.momentum)?,
+        seed: args.opt_usize("seed", preset.seed as usize)? as u64,
+        loss_scale: parse_f32("loss-scale", preset.loss_scale)?,
+        clip_norm: match args.opt("clip") {
+            None => None,
+            Some(v) => Some(v.parse::<f32>()?),
+        },
+        log_every: args.opt_usize("log-every", preset.log_every)?,
+        eval_batches: args.opt_usize("eval-batches", preset.eval_batches)?.max(1),
+        checkpoint: Some(PathBuf::from(
+            args.opt_or("out", &format!("{}.tensors", task.name())),
+        )),
+    };
+    println!(
+        "offline FloatSD8 multi-task training: task={} vocab={}{} dim={} hidden={} layers={} \
+         | batch={} seq={} steps={} lr={} momentum={} loss-scale={}",
+        task.name(),
+        cfg.vocab,
+        if task == TaskKind::Mt { format!("->{}", cfg.vocab_tgt) } else { String::new() },
+        cfg.dim,
+        cfg.hidden,
+        cfg.layers,
+        cfg.batch,
+        cfg.seq,
+        cfg.steps,
+        cfg.lr,
+        cfg.momentum,
+        cfg.loss_scale
+    );
+    let mut trainer = TaskTrainer::new(cfg)?;
+    let report = trainer.train()?;
+    let (e0, e1) = (&report.eval_init, &report.eval_final);
+    let rel = 100.0 * (e0.loss - e1.loss) / e0.loss.max(1e-12);
+    println!(
+        "eval: loss {:.4} -> {:.4} ({rel:+.1}%) | {} {:.4} -> {:.4} over {} positions",
+        e0.loss, e1.loss, e1.metric_name, e0.metric, e1.metric, e1.count
+    );
+    println!(
+        "({} applied, {} skipped, final scale {})",
+        report.steps_applied, report.steps_skipped, report.final_scale
+    );
+    println!("report it: floatsd-lstm eval --model <checkpoint> [--out report.json]");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_cfg_meta_round_trips() {
+        for kind in TaskKind::ALL {
+            let mut cfg = TaskConfig::preset(kind);
+            cfg.vocab += 7;
+            cfg.hidden = 13;
+            // above 2^53: must survive the JSON round trip exactly
+            cfg.seed = (1u64 << 53) + 1;
+            let back = TaskConfig::from_meta_json(&cfg.to_meta_json()).unwrap();
+            assert_eq!(back.task, cfg.task);
+            assert_eq!(back.vocab, cfg.vocab);
+            assert_eq!(back.vocab_tgt, cfg.vocab_tgt);
+            assert_eq!(back.n_classes, cfg.n_classes);
+            assert_eq!(back.dim, cfg.dim);
+            assert_eq!(back.hidden, cfg.hidden);
+            assert_eq!(back.layers, cfg.layers);
+            assert_eq!(back.batch, cfg.batch);
+            assert_eq!(back.seq, cfg.seq);
+            assert_eq!(back.eval_batches, cfg.eval_batches);
+            assert_eq!(back.seed, cfg.seed);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let mut cfg = TaskConfig::preset(TaskKind::Pos);
+        cfg.n_classes = 1;
+        assert!(build_task(&cfg).is_err());
+        let mut cfg = TaskConfig::preset(TaskKind::Nli);
+        cfg.vocab = 4;
+        assert!(build_task(&cfg).is_err());
+        let mut cfg = TaskConfig::preset(TaskKind::Mt);
+        cfg.vocab_tgt = 1;
+        assert!(build_task(&cfg).is_err());
+        let mut cfg = TaskConfig::preset(TaskKind::Lm);
+        cfg.seq = 1;
+        assert!(build_task(&cfg).is_err());
+    }
+
+    #[test]
+    fn step_transposes_are_column_major() {
+        // flat [B=2][T=3]: lane 0 = 1,2,3; lane 1 = 4,5,6
+        let x = [1i32, 2, 3, 4, 5, 6];
+        let ids = to_steps(&x, 2, 3);
+        assert_eq!(ids, vec![vec![1usize, 4], vec![2, 5], vec![3, 6]]);
+        let ys = to_step_labels(&x, 2, 3);
+        assert_eq!(ys[0], vec![1, 4]);
+    }
+
+    #[test]
+    fn argmax_is_first_on_ties() {
+        assert_eq!(argmax(&[0.5, 2.0, 2.0, -1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn save_load_stack_round_trips_bitwise() {
+        use crate::tensorfile::{read_tensors, write_tensors};
+        let core = SingleStack::init(20, 6, 9, 2, 5, 3, 77);
+        let tensors = stack_tensors("enc", &core.stack, &core.masters);
+        let dir = std::env::temp_dir().join("fsd_tasks_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.tensors");
+        write_tensors(&path, &tensors).unwrap();
+        let bag = ParamBag::from_tensors(read_tensors(&path).unwrap());
+        let (stack2, _ms2) = load_stack(&bag, "enc").unwrap();
+        // same topology, bit-identical forward
+        let ids: Vec<Vec<usize>> = vec![vec![1, 7, 19], vec![0, 3, 5], vec![2, 2, 2]];
+        let a = core.forward_fresh(&ids);
+        let b = SingleStack::from_parts(stack2, _ms2, 3).forward_fresh(&ids);
+        for (ra, rb) in a.iter().zip(&b) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "reloaded stack diverged");
+            }
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Translation head: encoder–decoder teacher-forced seq2seq on the
+//! `data::translation` reverse+relabel task.
+//!
+//! Two independent quantized stacks share one gradient step:
+//!
+//! * **encoder** — source embedding → LSTM layers; its dense head is a
+//!   vestigial 1-wide layer that never feeds a loss (`dlogits = []`);
+//! * **decoder** — target embedding → LSTM layers → vocab_tgt head,
+//!   teacher-forced on `y[:, t]` to predict `y[:, t + 1]`.
+//!
+//! The decoder's initial `(h, c)` per layer is the encoder's final
+//! state; in the backward pass the decoder's initial-state cotangents
+//! ([`crate::train::StateCot`]) re-enter the encoder at its last step via
+//! [`backward_batch_carry`](crate::lstm::QLstmStack::backward_batch_carry)
+//! — the gradient bridge that makes the bottleneck trainable. Targets
+//! equal to PAD are masked out of loss and cotangent. Metric:
+//! held-out per-token perplexity (eval CE).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::translation::{MtGen, PAD};
+use crate::data::BatchSource;
+use crate::lstm::model::ParamBag;
+use crate::qmath::grad::grads_overflow;
+use crate::tensorfile::{write_tensors, Tensor};
+use crate::train::{eval_ce, finalize_grads, masked_cross_entropy_grad, StackTape};
+
+use super::{
+    load_stack, stack_tensors, to_steps, SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind,
+};
+
+pub struct MtTask {
+    cfg: TaskConfig,
+    enc: SingleStack,
+    dec: SingleStack,
+    gen: MtGen,
+    steps_done: usize,
+}
+
+impl MtTask {
+    pub fn new(cfg: TaskConfig) -> Self {
+        let enc = SingleStack::init(
+            cfg.vocab,
+            cfg.dim,
+            cfg.hidden,
+            cfg.layers,
+            1, // loss-less head
+            cfg.batch,
+            cfg.seed,
+        );
+        let dec = SingleStack::init(
+            cfg.vocab_tgt,
+            cfg.dim,
+            cfg.hidden,
+            cfg.layers,
+            cfg.vocab_tgt,
+            cfg.batch,
+            cfg.seed ^ 0x00DE_C0DE,
+        );
+        Self::with_parts(cfg, enc, dec)
+    }
+
+    pub fn from_bag(cfg: TaskConfig, bag: &ParamBag) -> Result<Self> {
+        let (es, em) = load_stack(bag, "enc")?;
+        let (ds, dm) = load_stack(bag, "dec")?;
+        let enc = SingleStack::from_parts(es, em, cfg.batch);
+        let dec = SingleStack::from_parts(ds, dm, cfg.batch);
+        Ok(Self::with_parts(cfg, enc, dec))
+    }
+
+    fn with_parts(cfg: TaskConfig, enc: SingleStack, dec: SingleStack) -> Self {
+        let gen = MtGen::new(
+            cfg.batch,
+            cfg.seq,
+            cfg.seq + 1,
+            cfg.vocab,
+            cfg.vocab_tgt,
+            cfg.eval_batches,
+            cfg.seed ^ 0xDA7A,
+        );
+        MtTask { cfg, enc, dec, gen, steps_done: 0 }
+    }
+
+    /// Teacher-forcing split of the flat target matrix `y [B][S+1]`:
+    /// decoder inputs `y[:, t]` and targets `y[:, t + 1]`, both in the
+    /// per-step column layout.
+    fn teacher_forcing(
+        y: &[i32],
+        batch: usize,
+        s_len: usize,
+    ) -> (Vec<Vec<usize>>, Vec<Vec<i32>>) {
+        let t_len = s_len + 1;
+        assert_eq!(y.len(), batch * t_len);
+        let inputs = (0..s_len)
+            .map(|t| (0..batch).map(|b| y[b * t_len + t] as usize).collect())
+            .collect();
+        let targets = (0..s_len)
+            .map(|t| (0..batch).map(|b| y[b * t_len + t + 1]).collect())
+            .collect();
+        (inputs, targets)
+    }
+}
+
+impl TaskHead for MtTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::Mt
+    }
+
+    fn config(&self) -> &TaskConfig {
+        &self.cfg
+    }
+
+    fn compute_window(&mut self, scale: f32) -> f64 {
+        let (b_n, s_len, v_tgt) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab_tgt);
+        let batch = self.gen.next_train();
+        let src_ids = to_steps(&batch.x, b_n, s_len);
+        let (dec_ids, targets) = Self::teacher_forcing(&batch.y, b_n, s_len);
+
+        self.enc.reset_state();
+        let (tape_e, _enc_logits) = self.enc.forward_traced(&src_ids);
+        // state bridge: decoder starts from the encoder's final state
+        self.dec.hs.clone_from(&self.enc.hs);
+        self.dec.cs.clone_from(&self.enc.cs);
+        let (tape_d, logits) = self.dec.forward_traced(&dec_ids);
+
+        let inv = 1.0 / (b_n * s_len) as f32;
+        let mut loss_sum = 0f64;
+        let mut scored = 0usize;
+        let mut dlogits = Vec::with_capacity(s_len);
+        for t in 0..s_len {
+            let mut dl = vec![0f32; b_n * v_tgt];
+            let (l, n) = masked_cross_entropy_grad(
+                &logits[t],
+                &targets[t],
+                v_tgt,
+                Some(PAD),
+                inv,
+                scale,
+                &mut dl,
+            );
+            loss_sum += l;
+            scored += n;
+            dlogits.push(dl);
+        }
+
+        // decoder backward hands back its initial-state cotangents;
+        // they re-enter the encoder at its last step
+        let cots = self.dec.backward_carry(&tape_d, &dlogits, None);
+        self.enc.backward_carry(&tape_e, &[], Some(&cots));
+        self.steps_done += 1;
+        loss_sum / scored.max(1) as f64
+    }
+
+    fn apply_update(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
+        // all-or-nothing across both stacks: a half-applied step would
+        // desynchronize the encoder/decoder pair
+        let overflow = self.enc.grads.slices_mut().iter().any(|s| grads_overflow(s))
+            || self.dec.grads.slices_mut().iter().any(|s| grads_overflow(s));
+        if overflow {
+            return false;
+        }
+        let ok = finalize_grads(&mut self.enc.grads, scale, clip)
+            && finalize_grads(&mut self.dec.grads, scale, clip);
+        debug_assert!(ok, "overflow was checked above");
+        self.enc.masters.apply(&mut self.enc.stack, &self.enc.grads, lr, momentum);
+        self.dec.masters.apply(&mut self.dec.stack, &self.dec.grads, lr, momentum);
+        true
+    }
+
+    fn evaluate(&self) -> TaskEval {
+        let (b_n, s_len, v_tgt) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab_tgt);
+        let t_len = s_len + 1;
+        let mut loss_sum = 0f64;
+        let mut count = 0usize;
+        for batch in self.gen.eval_set() {
+            let src_ids = to_steps(&batch.x, b_n, s_len);
+            let (dec_ids, _) = Self::teacher_forcing(&batch.y, b_n, s_len);
+            // run the bridge on throwaway state: encoder final state
+            // (left in ehs/ecs) becomes the decoder's initial state
+            let (mut ehs, mut ecs) = self.enc.stack.zero_flat_state(b_n);
+            let mut escr = self.enc.stack.trace_scratches(b_n);
+            let mut etape = StackTape::new(&self.enc.stack, b_n);
+            self.enc.stack.forward_batch_traced(
+                &src_ids, &mut ehs, &mut ecs, &mut escr, &mut etape,
+            );
+            let mut dscr = self.dec.stack.trace_scratches(b_n);
+            let mut dtape = StackTape::new(&self.dec.stack, b_n);
+            let logits = self.dec.stack.forward_batch_traced(
+                &dec_ids, &mut ehs, &mut ecs, &mut dscr, &mut dtape,
+            );
+            for (t, row) in logits.iter().enumerate() {
+                for b in 0..b_n {
+                    let y = batch.y[b * t_len + t + 1];
+                    if y == PAD {
+                        continue;
+                    }
+                    loss_sum += eval_ce(&row[b * v_tgt..(b + 1) * v_tgt], y as usize);
+                    count += 1;
+                }
+            }
+        }
+        let loss = loss_sum / count.max(1) as f64;
+        TaskEval { task: "mt", loss, metric_name: "ppl", metric: loss.exp(), count }
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut tensors = stack_tensors("enc", &self.enc.stack, &self.enc.masters);
+        tensors.extend(stack_tensors("dec", &self.dec.stack, &self.dec.masters));
+        tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
+        tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
+        write_tensors(path, &tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TaskConfig {
+        let mut cfg = TaskConfig::preset(TaskKind::Mt);
+        cfg.vocab = 16;
+        cfg.vocab_tgt = 16;
+        cfg.dim = 6;
+        cfg.hidden = 8;
+        cfg.batch = 3;
+        cfg.seq = 4;
+        cfg.eval_batches = 2;
+        cfg.seed = 13;
+        cfg
+    }
+
+    #[test]
+    fn encoder_receives_gradient_through_the_state_bridge() {
+        let mut task = MtTask::new(tiny_cfg());
+        let loss = task.compute_window(1024.0);
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        let enc_wx: f32 = task.enc.grads.layers[0].dwx.iter().map(|g| g.abs()).sum();
+        assert!(enc_wx > 0.0, "no gradient crossed the encoder/decoder bridge");
+        let enc_emb: f32 = task.enc.grads.emb.iter().map(|g| g.abs()).sum();
+        assert!(enc_emb > 0.0, "source embedding untouched by the bridge");
+        // the loss-less encoder head must stay untouched
+        assert!(task.enc.grads.head_w.iter().all(|&g| g == 0.0));
+        assert!(task.enc.grads.head_b.iter().all(|&g| g == 0.0));
+        assert!(task.apply_update(1024.0, 0.3, 0.9, None));
+    }
+
+    #[test]
+    fn first_window_loss_sits_near_uniform_over_target_vocab() {
+        let mut task = MtTask::new(tiny_cfg());
+        let loss = task.compute_window(1024.0);
+        let uniform = (16f64).ln();
+        assert!((loss - uniform).abs() < 1.5, "loss {loss} vs ln V {uniform}");
+    }
+
+    #[test]
+    fn eval_is_deterministic_and_scores_every_target_token() {
+        let task = MtTask::new(tiny_cfg());
+        let e1 = task.evaluate();
+        let e2 = task.evaluate();
+        assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+        // MtGen emits no PAD targets: count = eval_batches · B · S
+        assert_eq!(e1.count, 2 * 3 * 4);
+    }
+}

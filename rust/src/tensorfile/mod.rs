@@ -60,6 +60,27 @@ impl Tensor {
         Tensor::from_f32(name, &[], &[value])
     }
 
+    /// A UTF-8 text payload as a 1-d i32 tensor of byte values — how
+    /// checkpoints carry structured metadata (the task subsystem's
+    /// `meta/task_cfg` JSON blob) without widening the dtype set.
+    pub fn from_text(name: &str, text: &str) -> Self {
+        let vals: Vec<i32> = text.bytes().map(i32::from).collect();
+        Tensor::from_i32(name, &[vals.len()], &vals)
+    }
+
+    /// Decode a tensor written by [`Self::from_text`].
+    pub fn as_text(&self) -> Result<String> {
+        let vals = self.as_i32()?;
+        let mut bytes = Vec::with_capacity(vals.len());
+        for v in vals {
+            let b = u8::try_from(v).map_err(|_| {
+                anyhow::anyhow!("{}: value {v} is not a byte — not a text tensor", self.name)
+            })?;
+            bytes.push(b);
+        }
+        String::from_utf8(bytes).with_context(|| format!("{}: text tensor utf8", self.name))
+    }
+
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
@@ -197,6 +218,18 @@ mod tests {
         let back = read_tensors(&p).unwrap();
         assert_eq!(back[0].shape, Vec::<usize>::new());
         assert_eq!(back[0].as_f32().unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn text_tensor_round_trip() {
+        let t = Tensor::from_text("meta/task_cfg", r#"{"task":"pos","vocab":96}"#);
+        assert_eq!(t.dtype, DType::I32);
+        assert_eq!(t.as_text().unwrap(), r#"{"task":"pos","vocab":96}"#);
+        // non-byte values must be rejected, not silently truncated
+        let bad = Tensor::from_i32("x", &[2], &[65, 300]);
+        assert!(bad.as_text().is_err());
+        let neg = Tensor::from_i32("x", &[1], &[-1]);
+        assert!(neg.as_text().is_err());
     }
 
     #[test]

@@ -91,6 +91,27 @@ impl StackGrads {
     }
 }
 
+/// Cotangent of a recurrent state — `dh`/`dc` flat `[B*H]`, the
+/// gradient flowing across a window (or model) boundary into the state
+/// that *entered* it. Produced by [`QLstmCell::backward_batch_carry`]
+/// for the window's initial state; consumed by the same function as
+/// the incoming future-cotangent of the window's final state. This is
+/// the seq2seq state bridge: the decoder's initial-state cotangents
+/// are the encoder's final-state cotangents (`tasks::mt`).
+#[derive(Clone, Debug)]
+pub struct StateCot {
+    /// hidden-state cotangent, flat `[B*H]` (FP16 grid — `Whᵀ·dz`)
+    pub dh: Vec<f32>,
+    /// cell-state cotangent, flat `[B*H]` (FP16-rounded carry)
+    pub dc: Vec<f32>,
+}
+
+impl StateCot {
+    pub fn zeros(batch: usize, hidden: usize) -> Self {
+        StateCot { dh: vec![0.0; batch * hidden], dc: vec![0.0; batch * hidden] }
+    }
+}
+
 impl QLstmCell {
     /// BPTT over a recorded window for `tape.batch` streams.
     ///
@@ -100,13 +121,34 @@ impl QLstmCell {
     /// return value is `dx_seq` — per-step input cotangents (flat
     /// `[B*D]`, FP8 grid), i.e. the `dh_seq` of the layer below.
     /// Gradients are truncated at the window boundary (`dh`, `dc`
-    /// start at zero; the `t = 0` carry-out is dropped).
+    /// start at zero; the `t = 0` carry-out is dropped). For the
+    /// carry-aware variant see [`Self::backward_batch_carry`].
     pub fn backward_batch(
         &self,
         tape: &CellTape,
         dh_seq: &[Vec<f32>],
         grads: &mut CellGrads,
     ) -> Vec<Vec<f32>> {
+        self.backward_batch_carry(tape, dh_seq, None, grads).0
+    }
+
+    /// [`Self::backward_batch`] with explicit state-cotangent carry.
+    ///
+    /// `carry_in` (when present) is the cotangent of the *final*
+    /// `(h, c)` this window produced, arriving from whatever consumed
+    /// that state downstream — e.g. the decoder's initial-state
+    /// cotangent flowing back into the seq2seq encoder. It seeds the
+    /// recurrent accumulators exactly where truncation would have
+    /// zeroed them, so `carry_in = None` is bit-identical to plain
+    /// truncated BPTT. The second return value is the carry-*out*: the
+    /// cotangent of the `(h, c)` that *entered* step 0.
+    pub fn backward_batch_carry(
+        &self,
+        tape: &CellTape,
+        dh_seq: &[Vec<f32>],
+        carry_in: Option<&StateCot>,
+        grads: &mut CellGrads,
+    ) -> (Vec<Vec<f32>>, StateCot) {
         let b_n = tape.batch;
         let hdim = self.hidden;
         let d = self.input_dim;
@@ -119,8 +161,14 @@ impl QLstmCell {
         // the accumulation order inside each stream is its own reversed
         // time order, exactly as in an independent backward call.
         let mut gbuf: Vec<CellGrads> = (0..b_n).map(|_| CellGrads::zeros(self)).collect();
-        let mut dh_rec = vec![0f32; b_n * hdim];
-        let mut dc = vec![0f32; b_n * hdim];
+        let (mut dh_rec, mut dc) = match carry_in {
+            Some(c) => {
+                assert_eq!(c.dh.len(), b_n * hdim, "carry dh shape");
+                assert_eq!(c.dc.len(), b_n * hdim, "carry dc shape");
+                (c.dh.clone(), c.dc.clone())
+            }
+            None => (vec![0f32; b_n * hdim], vec![0f32; b_n * hdim]),
+        };
         let mut dz = vec![0f32; b_n * 4 * hdim];
         let mut dx_seq: Vec<Vec<f32>> = (0..t_n).map(|_| vec![0f32; b_n * d]).collect();
 
@@ -158,7 +206,7 @@ impl QLstmCell {
         for g in &gbuf {
             grads.add_assign(g);
         }
-        dx_seq
+        (dx_seq, StateCot { dh: dh_rec, dc })
     }
 
     /// Single-stream BPTT (a `batch = 1` tape) — see
@@ -244,37 +292,80 @@ impl QLstmStack {
         dlogits: &[Vec<f32>],
         grads: &mut StackGrads,
     ) {
+        self.backward_batch_carry(tape, dlogits, None, grads);
+    }
+
+    /// [`Self::backward_batch`] with per-layer state-cotangent carry —
+    /// the stack-level seq2seq bridge (`tasks::mt`).
+    ///
+    /// * `dlogits` may be **empty** for a stack whose head never fed a
+    ///   loss (the seq2seq encoder): the head stage is skipped and the
+    ///   top layer's incoming cotangents start at zero, leaving only
+    ///   the carry to drive the backward pass.
+    /// * `carry_in[l]` (when present) is layer `l`'s final-state
+    ///   cotangent arriving from downstream (e.g. the decoder's
+    ///   initial-state cotangent for the encoder's layer `l`).
+    /// * Returns, per layer, the cotangent of the state that *entered*
+    ///   the window — the carry to hand further upstream.
+    ///
+    /// `carry_in = None` with non-empty `dlogits` is exactly
+    /// [`Self::backward_batch`].
+    pub fn backward_batch_carry(
+        &self,
+        tape: &StackTape,
+        dlogits: &[Vec<f32>],
+        carry_in: Option<&[StateCot]>,
+        grads: &mut StackGrads,
+    ) -> Vec<StateCot> {
         let b_n = tape.batch;
         let n_out = self.n_out();
         let h_top = self.layers.last().expect("stack has layers").fwd.hidden;
         let t_n = tape.tops.len();
-        assert_eq!(dlogits.len(), t_n);
         assert_eq!(tape.ids.len(), t_n);
-
-        // dense head: dh_top[t] = Wᵀ·dlogits[t]; dW += dlogits ⊗ top
-        let mut dh_seq: Vec<Vec<f32>> = Vec::with_capacity(t_n);
-        for t in 0..t_n {
-            let dl = &dlogits[t];
-            assert_eq!(dl.len(), b_n * n_out);
-            let mut dh = vec![0f32; b_n * h_top];
-            matmul_t_fast(&self.head.w, dl, b_n, &mut dh);
-            quantize_fp8_inplace(&mut dh);
-            for b in 0..b_n {
-                let dlb = &dl[b * n_out..(b + 1) * n_out];
-                outer_acc(dlb, &tape.tops[t][b * h_top..(b + 1) * h_top], &mut grads.head_w);
-                for (a, g) in grads.head_b.iter_mut().zip(dlb) {
-                    *a += g;
-                }
-            }
-            dh_seq.push(dh);
+        if let Some(cs) = carry_in {
+            assert_eq!(cs.len(), self.layers.len(), "one carry per layer");
         }
+
+        // dense head: dh_top[t] = Wᵀ·dlogits[t]; dW += dlogits ⊗ top.
+        // A loss-less stack (empty dlogits) starts from zero cotangents.
+        let mut dh_seq: Vec<Vec<f32>> = if dlogits.is_empty() {
+            (0..t_n).map(|_| vec![0f32; b_n * h_top]).collect()
+        } else {
+            assert_eq!(dlogits.len(), t_n);
+            let mut dh_seq = Vec::with_capacity(t_n);
+            for t in 0..t_n {
+                let dl = &dlogits[t];
+                assert_eq!(dl.len(), b_n * n_out);
+                let mut dh = vec![0f32; b_n * h_top];
+                matmul_t_fast(&self.head.w, dl, b_n, &mut dh);
+                quantize_fp8_inplace(&mut dh);
+                for b in 0..b_n {
+                    let dlb = &dl[b * n_out..(b + 1) * n_out];
+                    outer_acc(dlb, &tape.tops[t][b * h_top..(b + 1) * h_top], &mut grads.head_w);
+                    for (a, g) in grads.head_b.iter_mut().zip(dlb) {
+                        *a += g;
+                    }
+                }
+                dh_seq.push(dh);
+            }
+            dh_seq
+        };
 
         // LSTM layers, top-down: each layer's dx becomes the next
-        // lower layer's incoming dh
+        // lower layer's incoming dh; collect each layer's carry-out
+        let mut carries: Vec<StateCot> = Vec::with_capacity(self.layers.len());
         for l in (0..self.layers.len()).rev() {
             let cell = &self.layers[l].fwd;
-            dh_seq = cell.backward_batch(&tape.layers[l], &dh_seq, &mut grads.layers[l]);
+            let (dx, cot) = cell.backward_batch_carry(
+                &tape.layers[l],
+                &dh_seq,
+                carry_in.map(|cs| &cs[l]),
+                &mut grads.layers[l],
+            );
+            dh_seq = dx;
+            carries.push(cot);
         }
+        carries.reverse(); // back to layer-index order
 
         // embedding scatter: dL/demb[id] += dx0 (STE through the FP8
         // lookup rounding)
@@ -288,6 +379,7 @@ impl QLstmStack {
                 }
             }
         }
+        carries
     }
 }
 
@@ -367,6 +459,116 @@ mod tests {
             "db misaligned: cos={}",
             cosine(&grads.db, &rgrads.db)
         );
+    }
+
+    fn clone_step(s: &crate::train::tape::TapeStep) -> crate::train::tape::TapeStep {
+        crate::train::tape::TapeStep {
+            x: s.x.clone(),
+            h_prev: s.h_prev.clone(),
+            c_prev: s.c_prev.clone(),
+            z: s.z.clone(),
+            c_new: s.c_new.clone(),
+        }
+    }
+
+    /// A carried-in `dh` must be numerically interchangeable with the
+    /// same cotangent arriving through `dh_seq` at the last step (both
+    /// feed the same `dh_in + dh_rec` sum), and splitting a window in
+    /// two with the carry must be bit-identical to the unsplit
+    /// backward — the contract the seq2seq encoder/decoder bridge
+    /// rests on.
+    #[test]
+    fn carry_is_equivalent_to_unsplit_backward() {
+        let (d, hdim, b_n, t_n) = (3usize, 5usize, 2usize, 4usize);
+        let mut rng = SplitMix64::new(23);
+        let wx: Vec<f32> = (0..d * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..hdim * 4 * hdim).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * hdim).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let cell = QLstmCell::from_jax_layout(d, hdim, &wx, &wh, &b);
+
+        let mut h = vec![0f32; b_n * hdim];
+        let mut c = vec![0f32; b_n * hdim];
+        let mut scr = BatchScratch::new(hdim, b_n);
+        let mut tape = CellTape::new(b_n, d, hdim);
+        for _ in 0..t_n {
+            let x: Vec<f32> =
+                (0..b_n * d).map(|_| round_f8(rng.uniform(-1.0, 1.0))).collect();
+            cell.step_batch_traced(&x, &mut h, &mut c, b_n, &mut scr, &mut tape);
+        }
+        let dh_seq: Vec<Vec<f32>> = (0..t_n)
+            .map(|_| (0..b_n * hdim).map(|_| round_f8(rng.uniform(-0.5, 0.5))).collect())
+            .collect();
+
+        // 1) dh carried in == the same dh arriving via dh_seq (dc = 0)
+        {
+            let last = tape.steps.len() - 1;
+            let one = CellTape {
+                batch: b_n,
+                input_dim: d,
+                hidden: hdim,
+                steps: vec![clone_step(&tape.steps[last])],
+            };
+            let carry = StateCot { dh: dh_seq[last].clone(), dc: vec![0.0; b_n * hdim] };
+            let mut ga = CellGrads::zeros(&cell);
+            let (dxa, _) = cell.backward_batch_carry(
+                &one,
+                &[vec![0.0; b_n * hdim]],
+                Some(&carry),
+                &mut ga,
+            );
+            let mut gb = CellGrads::zeros(&cell);
+            let dxb = cell.backward_batch(&one, &[dh_seq[last].clone()], &mut gb);
+            assert_eq!(ga.dwx, gb.dwx);
+            assert_eq!(ga.db, gb.db);
+            assert_eq!(dxa, dxb);
+        }
+
+        // 2) split window + carry == unsplit window. The propagated
+        // cotangents (dx, dz, the carry itself) are bit-identical —
+        // they never depend on how parameter grads are folded; the
+        // parameter grads themselves differ only by f32 summation
+        // association (window-major vs split-major), so they get a
+        // tight tolerance instead of bit equality.
+        let mut g_full = CellGrads::zeros(&cell);
+        let (dx_full, cot_full) =
+            cell.backward_batch_carry(&tape, &dh_seq, None, &mut g_full);
+
+        let split = 2usize;
+        let hi = CellTape {
+            batch: b_n,
+            input_dim: d,
+            hidden: hdim,
+            steps: tape.steps[split..].iter().map(clone_step).collect(),
+        };
+        let lo = CellTape {
+            batch: b_n,
+            input_dim: d,
+            hidden: hdim,
+            steps: tape.steps[..split].iter().map(clone_step).collect(),
+        };
+        let mut g_split = CellGrads::zeros(&cell);
+        let (dx_hi, mid) =
+            cell.backward_batch_carry(&hi, &dh_seq[split..], None, &mut g_split);
+        let (dx_lo, cot_split) =
+            cell.backward_batch_carry(&lo, &dh_seq[..split], Some(&mid), &mut g_split);
+
+        let close = |a: &[f32], b: &[f32], what: &str| {
+            for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * x.abs().max(1.0),
+                    "{what}[{k}]: {x} vs {y}"
+                );
+            }
+        };
+        close(&g_full.dwx, &g_split.dwx, "dwx");
+        close(&g_full.dwh, &g_split.dwh, "dwh");
+        close(&g_full.db, &g_split.db, "db");
+        assert_eq!(cot_full.dh, cot_split.dh);
+        assert_eq!(cot_full.dc, cot_split.dc);
+        for (t, want) in dx_full.iter().enumerate() {
+            let got = if t < split { &dx_lo[t] } else { &dx_hi[t - split] };
+            assert_eq!(got, want, "dx diverged at t={t}");
+        }
     }
 
     /// Zero incoming cotangents must produce exactly zero gradients.

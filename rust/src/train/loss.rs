@@ -1,10 +1,16 @@
-//! Cross-entropy LM head: loss + loss-scaled FP8 logit cotangents.
+//! Cross-entropy heads: loss + loss-scaled FP8 logit cotangents.
 //!
 //! The loss itself is measured in f64 (it is a *metric*, never fed
 //! back into the quantized datapath); the cotangent
 //! `(softmax − onehot) / count × scale` is what enters the backward
 //! pass and is therefore FP8-quantized at the source, like every other
 //! gradient in the scheme (Table II + §IV-A loss scaling).
+//!
+//! [`cross_entropy_grad`] is the LM head (dense targets, every
+//! position scored). [`masked_cross_entropy_grad`] is the generic
+//! task-head variant (`tasks::{pos,nli,mt}`): i32 targets straight
+//! from a [`crate::data::Batch`], with an optional ignored class (PAD)
+//! whose positions contribute zero loss *and* zero cotangent.
 
 use crate::formats::round_f8;
 
@@ -42,6 +48,65 @@ pub fn cross_entropy_grad(
         }
     }
     loss
+}
+
+/// Masked softmax cross-entropy over one step's flat logits
+/// `[B*n_out]` — the task-head sibling of [`cross_entropy_grad`].
+///
+/// `targets` are raw i32 labels (one per stream); positions whose
+/// label equals `ignore` (the PAD convention of `data::nli` /
+/// `data::translation`) are masked out: zero loss, zero cotangent.
+/// Writes scaled, FP8-quantized cotangents into `dlogits` and returns
+/// `(unscaled summed loss, scored-position count)`.
+pub fn masked_cross_entropy_grad(
+    logits: &[f32],
+    targets: &[i32],
+    n_out: usize,
+    ignore: Option<i32>,
+    inv_count: f32,
+    scale: f32,
+    dlogits: &mut [f32],
+) -> (f64, usize) {
+    assert_eq!(logits.len(), targets.len() * n_out);
+    assert_eq!(dlogits.len(), logits.len());
+    let mut loss = 0f64;
+    let mut scored = 0usize;
+    for (b, &t) in targets.iter().enumerate() {
+        let dl = &mut dlogits[b * n_out..(b + 1) * n_out];
+        if ignore == Some(t) {
+            dl.fill(0.0);
+            continue;
+        }
+        assert!(t >= 0 && (t as usize) < n_out, "target {t} out of range {n_out}");
+        let y = t as usize;
+        scored += 1;
+        let lg = &logits[b * n_out..(b + 1) * n_out];
+        let mx = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for &v in lg {
+            denom += (v - mx).exp();
+        }
+        loss += (denom.ln() + mx - lg[y]) as f64;
+        for (v, out) in dl.iter_mut().enumerate() {
+            let p = (lg[v] - mx).exp() / denom;
+            let onehot = if v == y { 1.0 } else { 0.0 };
+            *out = round_f8((p - onehot) * inv_count * scale);
+        }
+    }
+    (loss, scored)
+}
+
+/// Metric-side cross-entropy of one logit row (nats, f64; no
+/// cotangent) — the evaluation harness' loss, kept next to the
+/// training heads so the two always share the same softmax convention.
+pub fn eval_ce(logits: &[f32], target: usize) -> f64 {
+    assert!(target < logits.len());
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut denom = 0f64;
+    for &v in logits {
+        denom += (v as f64 - mx).exp();
+    }
+    denom.ln() + mx - logits[target] as f64
 }
 
 #[cfg(test)]
@@ -82,5 +147,44 @@ mod tests {
         let mut dl = vec![0f32; 4];
         let loss = cross_entropy_grad(&logits, &[1], vocab, 1.0, 1.0, &mut dl);
         assert!(loss < 1e-6, "confident correct prediction: loss {loss}");
+    }
+
+    #[test]
+    fn masked_ce_matches_unmasked_on_dense_targets() {
+        let n_out = 5;
+        let logits = vec![0.3f32, -1.0, 2.0, 0.0, 0.5, 1.0, 1.0, -2.0, 0.25, 0.0];
+        let mut dl_a = vec![0f32; 10];
+        let mut dl_b = vec![0f32; 10];
+        let la = cross_entropy_grad(&logits, &[2, 4], n_out, 0.5, 64.0, &mut dl_a);
+        let (lb, n) =
+            masked_cross_entropy_grad(&logits, &[2, 4], n_out, None, 0.5, 64.0, &mut dl_b);
+        assert_eq!(n, 2);
+        assert_eq!(la.to_bits(), lb.to_bits());
+        assert_eq!(dl_a, dl_b);
+    }
+
+    #[test]
+    fn masked_positions_are_silent() {
+        let n_out = 3;
+        let logits = vec![1.0f32, 0.0, -1.0, 0.5, 0.5, 0.5];
+        let mut dl = vec![9.0f32; 6];
+        let (loss, n) =
+            masked_cross_entropy_grad(&logits, &[0, 2], n_out, Some(0), 1.0, 8.0, &mut dl);
+        assert_eq!(n, 1, "PAD lane must not be scored");
+        assert!(dl[..3].iter().all(|&g| g == 0.0), "PAD cotangent must be zero");
+        assert!(dl[3..].iter().any(|&g| g != 0.0));
+        let want = eval_ce(&logits[3..], 2);
+        assert!((loss - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eval_ce_agrees_with_training_loss() {
+        let logits = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut dl = vec![0f32; 4];
+        let train = cross_entropy_grad(&logits, &[2], 4, 1.0, 1.0, &mut dl);
+        // eval_ce accumulates in f64, the training loss in f32 — the
+        // two agree to f32 rounding, not bitwise
+        let eval = eval_ce(&logits, 2);
+        assert!((train - eval).abs() < 1e-5, "{train} vs {eval}");
     }
 }

@@ -11,13 +11,20 @@
 //!   (`QLstmCell::backward`/`backward_batch`,
 //!   `QLstmStack::backward_batch`) under the paper's quantization
 //!   discipline, on the gradient kernels in [`crate::qmath::grad`];
-//! * [`loss`] — cross-entropy LM head with loss-scaled FP8 cotangents;
+//! * [`loss`] — cross-entropy heads (dense LM targets + the masked
+//!   task-head variant) with loss-scaled FP8 cotangents;
 //! * [`optimizer`] — FP16 master copies + SGD-momentum + dynamic loss
 //!   scaling; the §III-B re-encode-to-FloatSD8 step lives in
 //!   [`crate::formats::FloatSdFormat::apply_update`];
 //! * [`trainer`] — the `floatsd-lstm train` loop over the
 //!   [`crate::data::lm`] char-LM stream, writing `.tensors`
 //!   checkpoints the serve subsystem loads directly.
+//!
+//! The multi-task layer ([`crate::tasks`]) builds on these same
+//! pieces: [`backward`] additionally exposes the carry-aware
+//! `backward_batch_carry` (the seq2seq encoder→decoder gradient
+//! bridge), and [`optimizer`] the head-width-generalized
+//! `init_with_stack_dims`.
 //!
 //! Numerics contracts (all pinned in tier-1 tests):
 //! traced forward ≡ inference forward bit-for-bit;
@@ -33,7 +40,8 @@ pub mod optimizer;
 pub mod tape;
 pub mod trainer;
 
-pub use backward::{CellGrads, StackGrads};
+pub use backward::{CellGrads, StackGrads, StateCot};
+pub use loss::{cross_entropy_grad, eval_ce, masked_cross_entropy_grad};
 pub use optimizer::{finalize_grads, LossScaler, MasterStack};
 pub use tape::{CellTape, StackTape};
 pub use trainer::{run_cli, StepOutcome, TrainConfig, TrainReport, Trainer};

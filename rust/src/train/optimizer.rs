@@ -103,12 +103,29 @@ fn momentum_delta(v: &mut [f32], g: &[f32], lr: f32, mu: f32, delta: &mut Vec<f3
 
 impl MasterStack {
     /// Deterministically initialize masters (FP16 grid) and the
-    /// matching quantized stack for a fresh training run.
+    /// matching quantized stack for a fresh LM-shaped training run
+    /// (head width = vocab). Bit-identical to
+    /// [`Self::init_with_stack_dims`] with `n_out = vocab`.
     pub fn init_with_stack(
         vocab: usize,
         dim: usize,
         hidden: usize,
         n_layers: usize,
+        seed: u64,
+    ) -> (Self, QLstmStack) {
+        Self::init_with_stack_dims(vocab, dim, hidden, n_layers, vocab, seed)
+    }
+
+    /// [`Self::init_with_stack`] generalized over the dense-head width
+    /// — the task heads (`tasks::{pos,nli,mt}`) classify into
+    /// `n_out ≠ vocab` classes (tags, NLI labels, target vocabulary,
+    /// or a vestigial 1-wide head for the loss-less seq2seq encoder).
+    pub fn init_with_stack_dims(
+        vocab: usize,
+        dim: usize,
+        hidden: usize,
+        n_layers: usize,
+        n_out: usize,
         seed: u64,
     ) -> (Self, QLstmStack) {
         use crate::lstm::cell::QLstmCell;
@@ -144,13 +161,13 @@ impl MasterStack {
         }
 
         let head_w: Vec<f32> =
-            (0..vocab * in_dim).map(|_| f16(rng.uniform(-0.3, 0.3))).collect();
-        let head_b: Vec<f32> = (0..vocab).map(|_| f16(rng.uniform(-0.1, 0.1))).collect();
+            (0..n_out * in_dim).map(|_| f16(rng.uniform(-0.3, 0.3))).collect();
+        let head_b: Vec<f32> = (0..n_out).map(|_| f16(rng.uniform(-0.1, 0.1))).collect();
         let stack = QLstmStack {
             embed: Embedding { vocab, dim, table: emb.clone() },
             layers,
             head: Dense {
-                w: QMatrix::from_f32(vocab, in_dim, &head_w),
+                w: QMatrix::from_f32(n_out, in_dim, &head_w),
                 bias: head_b.clone(),
             },
         };
@@ -165,6 +182,28 @@ impl MasterStack {
             delta: Vec::new(),
         };
         (ms, stack)
+    }
+
+    /// Rebuild a master stack from checkpointed FP16 master tensors
+    /// (all in the QMatrix `[out][in]` row-major layout), with fresh
+    /// zero momentum state — resuming from a `.tensors` checkpoint
+    /// restores the weights, not the optimizer velocity.
+    pub fn from_parts(
+        emb: Vec<f32>,
+        layers: Vec<MasterCell>,
+        head_w: Vec<f32>,
+        head_b: Vec<f32>,
+    ) -> Self {
+        MasterStack {
+            v_emb: vec![0.0; emb.len()],
+            v_head_w: vec![0.0; head_w.len()],
+            v_head_b: vec![0.0; head_b.len()],
+            emb,
+            layers,
+            head_w,
+            head_b,
+            delta: Vec::new(),
+        }
     }
 
     /// Apply one SGD-momentum step to every parameter: FloatSD8

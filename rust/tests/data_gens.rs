@@ -1,0 +1,140 @@
+//! Generator-contract tests for the synthetic task datasets
+//! (`data::{pos, nli, translation}`): determinism in the seed, batch
+//! shape conformance, and label validity (class ranges, PAD
+//! placement). These are the invariants the task heads (`tasks/`)
+//! lean on — a generator drifting out of contract would show up as
+//! training mysteriously failing, so it gets pinned here instead.
+
+use floatsd_lstm::data::nli::{NEG, PAD};
+use floatsd_lstm::data::translation::{BOS, PAD as MT_PAD};
+use floatsd_lstm::data::{make_source, Batch, BatchSource};
+
+/// (task, x_shape, y_shape, vocab, vocab_tgt, n_classes)
+type Spec = (&'static str, Vec<usize>, Vec<usize>, usize, usize, usize);
+
+fn specs() -> Vec<Spec> {
+    vec![
+        ("pos", vec![12], vec![12], 96, 0, 8),
+        ("nli", vec![2, 10], vec![], 64, 0, 3),
+        ("mt", vec![9], vec![10], 48, 48, 0),
+    ]
+}
+
+fn source(spec: &Spec, batch: usize, eval_batches: usize, seed: u64) -> Box<dyn BatchSource> {
+    make_source(spec.0, batch, &spec.1, &spec.2, spec.3, spec.4, spec.5, eval_batches, seed)
+        .expect("valid spec")
+}
+
+fn batches_equal(a: &Batch, b: &Batch) -> bool {
+    a.x == b.x && a.y == b.y && a.x_shape == b.x_shape && a.y_shape == b.y_shape
+}
+
+#[test]
+fn generators_are_deterministic_in_seed() {
+    for spec in specs() {
+        let (mut a, mut b) = (source(&spec, 6, 3, 42), source(&spec, 6, 3, 42));
+        for w in 0..6 {
+            let (ba, bb) = (a.next_train(), b.next_train());
+            assert!(batches_equal(&ba, &bb), "{}: window {w} diverged for equal seeds", spec.0);
+        }
+        for (ea, eb) in a.eval_set().iter().zip(b.eval_set()) {
+            assert!(batches_equal(ea, eb), "{}: eval sets diverged for equal seeds", spec.0);
+        }
+        // and a different seed must actually change the stream
+        let mut c = source(&spec, 6, 3, 43);
+        let (ba, bc) = (source(&spec, 6, 3, 42).next_train(), c.next_train());
+        assert_ne!(ba.x, bc.x, "{}: seed is inert", spec.0);
+    }
+}
+
+#[test]
+fn batch_shapes_conform_to_declared_shapes() {
+    for spec in specs() {
+        let batch = 5usize;
+        let mut src = source(&spec, batch, 2, 7);
+        for b in [src.next_train(), src.next_train()] {
+            let x_want: usize = b.x_shape.iter().product();
+            let y_want: usize = b.y_shape.iter().product::<usize>().max(1);
+            assert_eq!(b.x.len(), x_want, "{}: x vs x_shape {:?}", spec.0, b.x_shape);
+            assert_eq!(b.y.len(), y_want, "{}: y vs y_shape {:?}", spec.0, b.y_shape);
+            // leading dim is the batch; the rest is the per-example spec
+            assert_eq!(b.x_shape[0], batch, "{}: x batch dim", spec.0);
+            assert_eq!(&b.x_shape[1..], &spec.1[..], "{}: per-example x shape", spec.0);
+            if spec.2.is_empty() {
+                assert_eq!(b.y_shape, vec![batch], "{}: scalar labels", spec.0);
+            } else {
+                assert_eq!(b.y_shape[0], batch, "{}: y batch dim", spec.0);
+                assert_eq!(&b.y_shape[1..], &spec.2[..], "{}: per-example y shape", spec.0);
+            }
+        }
+        assert_eq!(src.eval_set().len(), 2, "{}: eval batches", spec.0);
+    }
+}
+
+#[test]
+fn pos_labels_are_valid_tags_and_words_in_vocab() {
+    let (vocab, n_tags) = (96usize, 8usize);
+    let mut src = make_source("pos", 8, &[12], &[12], vocab, 0, n_tags, 2, 3).unwrap();
+    let mut seen_tags = vec![false; n_tags];
+    for _ in 0..20 {
+        let b = src.next_train();
+        for (&w, &t) in b.x.iter().zip(&b.y) {
+            assert!((0..vocab as i32).contains(&w), "word {w} out of vocab");
+            assert!((0..n_tags as i32).contains(&t), "tag {t} out of range");
+            seen_tags[t as usize] = true;
+        }
+    }
+    assert!(seen_tags.iter().all(|&s| s), "some tag class never sampled");
+}
+
+#[test]
+fn nli_labels_in_class_range_and_pad_only_in_hypothesis() {
+    let (vocab, seq, batch) = (64usize, 10usize, 8usize);
+    let mut src = make_source("nli", batch, &[2, seq], &[], vocab, 0, 3, 2, 5).unwrap();
+    let mut seen = [false; 3];
+    for _ in 0..20 {
+        let b = src.next_train();
+        assert_eq!(b.y.len(), batch);
+        for &label in &b.y {
+            assert!((0..3).contains(&label), "label {label} out of 3-way range");
+            seen[label as usize] = true;
+        }
+        for lane in 0..batch {
+            let row = &b.x[lane * 2 * seq..(lane + 1) * 2 * seq];
+            let (premise, hyp) = row.split_at(seq);
+            // premise is pure content: no PAD, no NEG
+            for &w in premise {
+                assert!(w != PAD && w != NEG, "reserved token {w} in premise");
+                assert!((0..vocab as i32).contains(&w));
+            }
+            // hypothesis may pad its tail / splice NEG, but stays in vocab
+            for &w in hyp {
+                assert!((0..vocab as i32).contains(&w), "hyp token {w} out of vocab");
+            }
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some NLI class never sampled");
+}
+
+#[test]
+fn mt_targets_are_bos_prefixed_and_in_target_vocab() {
+    let (v_src, v_tgt, s_len, batch) = (48usize, 48usize, 9usize, 6usize);
+    let mut src =
+        make_source("mt", batch, &[s_len], &[s_len + 1], v_src, v_tgt, 0, 2, 9).unwrap();
+    for _ in 0..10 {
+        let b = src.next_train();
+        for lane in 0..batch {
+            let tgt = &b.y[lane * (s_len + 1)..(lane + 1) * (s_len + 1)];
+            assert_eq!(tgt[0], BOS, "target must open with BOS");
+            for &w in &tgt[1..] {
+                assert!((0..v_tgt as i32).contains(&w), "target token {w} out of vocab");
+                assert_ne!(w, MT_PAD, "generator never emits PAD content");
+                assert_ne!(w, BOS, "BOS only at position 0");
+            }
+            let src_row = &b.x[lane * s_len..(lane + 1) * s_len];
+            for &w in src_row {
+                assert!((2..v_src as i32).contains(&w), "source token {w} outside content ids");
+            }
+        }
+    }
+}

@@ -11,7 +11,7 @@
 //! forward/loss run in f64, so FD noise sits far below the 1e-3
 //! tolerance.
 
-use floatsd_lstm::lstm::reference::F32LstmCell;
+use floatsd_lstm::lstm::reference::{F32LstmCell, RefDense, RefGrads};
 use floatsd_lstm::rng::SplitMix64;
 
 fn rand_cell(d: usize, hidden: usize, rng: &mut SplitMix64) -> F32LstmCell {
@@ -158,6 +158,189 @@ fn bptt_input_cotangents_match_finite_differences() {
                 "dx[{t}][{k}]: analytic {a} vs fd {fd}"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// task-head gradchecks: dense head + CE on top of the LSTM (the f64
+// reference of `tasks::pos` / `tasks::nli`)
+// ---------------------------------------------------------------------
+
+fn rand_dense(in_dim: usize, n_out: usize, rng: &mut SplitMix64) -> RefDense {
+    RefDense {
+        in_dim,
+        n_out,
+        w: (0..n_out * in_dim).map(|_| rng.uniform(-0.4, 0.4)).collect(),
+        b: (0..n_out).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+    }
+}
+
+fn clone_dense(d: &RefDense) -> RefDense {
+    RefDense { in_dim: d.in_dim, n_out: d.n_out, w: d.w.clone(), b: d.b.clone() }
+}
+
+/// Loss of the combined model. `targets[t] = None` skips step `t` —
+/// dense targets model the tagging head, last-step-only the
+/// classification head.
+fn head_loss(
+    cell: &F32LstmCell,
+    dense: &RefDense,
+    xs: &[Vec<f32>],
+    targets: &[Option<usize>],
+) -> f64 {
+    let tape = cell.forward_traced(xs);
+    let mut l = 0f64;
+    for (t, y) in targets.iter().enumerate() {
+        if let Some(y) = y {
+            let logits = dense.forward(&tape.h_new[t]);
+            l += RefDense::ce(&logits, *y).0;
+        }
+    }
+    l
+}
+
+/// Analytic gradients of [`head_loss`]: CE → dense backward → BPTT.
+fn head_grads(
+    cell: &F32LstmCell,
+    dense: &RefDense,
+    xs: &[Vec<f32>],
+    targets: &[Option<usize>],
+) -> (RefGrads, Vec<f64>, Vec<f64>) {
+    let tape = cell.forward_traced(xs);
+    let mut dw = vec![0f64; dense.n_out * dense.in_dim];
+    let mut db = vec![0f64; dense.n_out];
+    let mut dh_seq = Vec::with_capacity(targets.len());
+    for (t, y) in targets.iter().enumerate() {
+        match y {
+            Some(y) => {
+                let logits = dense.forward(&tape.h_new[t]);
+                let (_, dl) = RefDense::ce(&logits, *y);
+                dh_seq.push(dense.backward(&tape.h_new[t], &dl, &mut dw, &mut db));
+            }
+            None => dh_seq.push(vec![0f64; dense.in_dim]),
+        }
+    }
+    (cell.bptt(&tape, &dh_seq), dw, db)
+}
+
+/// FD over one f32 tensor of the combined model (same actual-f32-step
+/// trick as `fd_tensor`).
+fn fd_head_tensor(
+    cell: &F32LstmCell,
+    dense: &RefDense,
+    xs: &[Vec<f32>],
+    targets: &[Option<usize>],
+    len: usize,
+    pick_cell: Option<fn(&mut F32LstmCell) -> &mut Vec<f32>>,
+    pick_dense: Option<fn(&mut RefDense) -> &mut Vec<f32>>,
+) -> Vec<f64> {
+    let eps = 1e-3f64;
+    let mut fd = Vec::with_capacity(len);
+    for k in 0..len {
+        let eval = |delta: f64| -> (f64, f64) {
+            let mut c = clone_cell(cell);
+            let mut d = clone_dense(dense);
+            let slot: &mut f32 = match (pick_cell, pick_dense) {
+                (Some(p), None) => &mut p(&mut c)[k],
+                (None, Some(p)) => &mut p(&mut d)[k],
+                _ => unreachable!("exactly one tensor selector"),
+            };
+            let w0 = *slot as f64;
+            *slot = (w0 + delta) as f32;
+            let actual = *slot as f64;
+            (actual, head_loss(&c, &d, xs, targets))
+        };
+        let (wp, lp) = eval(eps);
+        let (wm, lm) = eval(-eps);
+        fd.push((lp - lm) / (wp - wm));
+    }
+    fd
+}
+
+fn dense_w_of(d: &mut RefDense) -> &mut Vec<f32> {
+    &mut d.w
+}
+
+fn dense_b_of(d: &mut RefDense) -> &mut Vec<f32> {
+    &mut d.b
+}
+
+/// Tagging head (per-step CE over every position, `tasks::pos`
+/// structure): analytic head + BPTT gradients vs central FD, ≤1e-3,
+/// multiple seeds.
+#[test]
+fn tagging_head_matches_finite_differences() {
+    for &(seed, d, hidden, n_tags, t_len) in
+        &[(21u64, 3usize, 5usize, 4usize, 5usize), (22, 4, 7, 3, 4), (23, 3, 6, 5, 6)]
+    {
+        let mut rng = SplitMix64::new(seed);
+        let cell = rand_cell(d, hidden, &mut rng);
+        let dense = rand_dense(hidden, n_tags, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+        let targets: Vec<Option<usize>> =
+            (0..t_len).map(|_| Some(rng.next_below(n_tags as u64) as usize)).collect();
+
+        let (grads, dw, db) = head_grads(&cell, &dense, &xs, &targets);
+
+        let fd_dw = fd_head_tensor(&cell, &dense, &xs, &targets, dw.len(), None, Some(dense_w_of));
+        let e = rel_err(&dw, &fd_dw);
+        assert!(e <= 1e-3, "seed {seed}: head dw rel err {e}");
+
+        let fd_db = fd_head_tensor(&cell, &dense, &xs, &targets, db.len(), None, Some(dense_b_of));
+        let e = rel_err(&db, &fd_db);
+        assert!(e <= 1e-3, "seed {seed}: head db rel err {e}");
+
+        let fd_wx =
+            fd_head_tensor(&cell, &dense, &xs, &targets, 4 * hidden * d, Some(wx_of), None);
+        let e = rel_err(&grads.dwx, &fd_wx);
+        assert!(e <= 1e-3, "seed {seed}: dwx through the head, rel err {e}");
+
+        let fd_wh =
+            fd_head_tensor(&cell, &dense, &xs, &targets, 4 * hidden * hidden, Some(wh_of), None);
+        let e = rel_err(&grads.dwh, &fd_wh);
+        assert!(e <= 1e-3, "seed {seed}: dwh through the head, rel err {e}");
+    }
+}
+
+/// Classification head (loss only at the final step, `tasks::nli`
+/// structure): every earlier parameter gradient flows through the
+/// recurrence alone — vs central FD, ≤1e-3, multiple seeds.
+#[test]
+fn classification_head_matches_finite_differences() {
+    for &(seed, d, hidden, n_cls, t_len) in
+        &[(31u64, 3usize, 5usize, 3usize, 6usize), (32, 4, 6, 3, 5), (33, 3, 7, 4, 4)]
+    {
+        let mut rng = SplitMix64::new(seed);
+        let cell = rand_cell(d, hidden, &mut rng);
+        let dense = rand_dense(hidden, n_cls, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+        let mut targets: Vec<Option<usize>> = vec![None; t_len];
+        targets[t_len - 1] = Some(rng.next_below(n_cls as u64) as usize);
+
+        let (grads, dw, db) = head_grads(&cell, &dense, &xs, &targets);
+        // the recurrent chain must be live: step-0 input cotangents
+        let dx0: f64 = grads.dx[0].iter().map(|g| g * g).sum::<f64>().sqrt();
+        assert!(dx0 > 1e-10, "seed {seed}: no gradient reached step 0");
+
+        let fd_dw = fd_head_tensor(&cell, &dense, &xs, &targets, dw.len(), None, Some(dense_w_of));
+        let e = rel_err(&dw, &fd_dw);
+        assert!(e <= 1e-3, "seed {seed}: head dw rel err {e}");
+
+        let fd_db = fd_head_tensor(&cell, &dense, &xs, &targets, db.len(), None, Some(dense_b_of));
+        let e = rel_err(&db, &fd_db);
+        assert!(e <= 1e-3, "seed {seed}: head db rel err {e}");
+
+        let fd_wx =
+            fd_head_tensor(&cell, &dense, &xs, &targets, 4 * hidden * d, Some(wx_of), None);
+        let e = rel_err(&grads.dwx, &fd_wx);
+        assert!(e <= 1e-3, "seed {seed}: dwx through recurrence, rel err {e}");
+
+        let fd_wh =
+            fd_head_tensor(&cell, &dense, &xs, &targets, 4 * hidden * hidden, Some(wh_of), None);
+        let e = rel_err(&grads.dwh, &fd_wh);
+        assert!(e <= 1e-3, "seed {seed}: dwh through recurrence, rel err {e}");
     }
 }
 
