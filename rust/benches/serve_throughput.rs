@@ -1,10 +1,12 @@
 //! Serving throughput: batched `step_batch` tokens/s vs the unbatched
 //! per-sequence engine, across micro-batch sizes, plus the full
-//! scheduler/worker server end-to-end. Writes
+//! scheduler/worker server end-to-end and a per-task row for each of
+//! the four heads the task-generic engine serves (the mt row measures
+//! the decode loop — decoded tokens/s). Writes
 //! `results/serve_throughput.csv` (batch, tokens_per_s, speedup) and a
 //! machine-readable `BENCH_serve.json` at the repo root (tokens/s +
-//! p50/p99 per batch size, server end-to-end rows) so the bench
-//! trajectory is trackable across PRs.
+//! p50/p99 per batch size, server end-to-end rows, per-task rows) so
+//! the bench trajectory is trackable across PRs.
 //!
 //! The win mechanism: the weight-stationary `matmul_fast` streams each
 //! decoded weight row once per micro-batch instead of once per stream,
@@ -20,8 +22,9 @@ use std::time::Duration;
 use floatsd_lstm::benchlib::{bench, black_box, results_dir, BenchStats, Csv};
 use floatsd_lstm::lstm::synthetic_stack;
 use floatsd_lstm::rng::SplitMix64;
-use floatsd_lstm::serve::demo::drive_load;
-use floatsd_lstm::serve::{ServeConfig, Server};
+use floatsd_lstm::serve::demo::{drive_load, drive_task_load};
+use floatsd_lstm::serve::{DecodeParams, ServeConfig, ServeModel, Server};
+use floatsd_lstm::tasks::TaskKind;
 use floatsd_lstm::tensorfile::json::Json;
 
 /// `BENCH_serve.json` lands at the repo root (next to CHANGES.md) so
@@ -103,10 +106,10 @@ fn main() -> anyhow::Result<()> {
     // ---- end-to-end: scheduler + worker pool + session store ----------
     let shared = Arc::new(stack);
     for &(workers, max_batch) in &[(1usize, 16usize), (4, 16)] {
-        let server = Server::start(
+        let server = Server::start_lm(
             shared.clone(),
             ServeConfig { workers, max_batch, batch_window: Duration::from_micros(200) },
-        );
+        )?;
         let t0 = std::time::Instant::now();
         let streamed = drive_load(&server, &shared, 64, 64, 4);
         let wall = t0.elapsed();
@@ -128,6 +131,81 @@ fn main() -> anyhow::Result<()> {
         server.shutdown();
     }
 
+    // ---- per-task serving rows (incl. the MT decode loop) -------------
+    // miniature per-task topologies, served end-to-end through the
+    // task-generic engine; the mt row's tokens/s counts *decoded*
+    // target tokens — the decode-loop throughput
+    println!("\nper-task serving (task-generic engine):");
+    let mut json_tasks: Vec<Json> = Vec::new();
+    let task_models: Vec<(Arc<ServeModel>, usize, usize)> = vec![
+        // (model, sessions, tokens-per-session)
+        (Arc::new(ServeModel::lm(shared.clone())?), 32, 32),
+        (
+            Arc::new(ServeModel::from_parts(
+                TaskKind::Pos,
+                Arc::new(synthetic_stack(120, 32, 96, 1, 12, 7101)),
+                None,
+                None,
+            )?),
+            32,
+            32,
+        ),
+        (
+            Arc::new(ServeModel::from_parts(
+                TaskKind::Nli,
+                Arc::new(synthetic_stack(96, 32, 96, 1, 3, 7102)),
+                None,
+                None,
+            )?),
+            32,
+            32,
+        ),
+        (
+            Arc::new(ServeModel::from_parts(
+                TaskKind::Mt,
+                Arc::new(synthetic_stack(64, 32, 96, 1, 1, 7103)),
+                Some(Arc::new(synthetic_stack(64, 32, 96, 1, 64, 7104))),
+                None,
+            )?),
+            16,
+            16,
+        ),
+    ];
+    let decode = DecodeParams { max_len: 24, beam_width: 1 };
+    for (model, sessions, tokens) in task_models {
+        let server = Server::start(
+            model.clone(),
+            ServeConfig { workers: 4, max_batch: 16, batch_window: Duration::from_micros(200) },
+        )?;
+        let t0 = std::time::Instant::now();
+        let streamed = drive_task_load(&server, &model, sessions, tokens, 4, decode);
+        let wall = t0.elapsed();
+        let agg = server.stats();
+        let tps = streamed as f64 / wall.as_secs_f64();
+        let label = if model.task == TaskKind::Mt { "decode tokens/s" } else { "tokens/s" };
+        println!(
+            "  {:<4} {tps:>10.0} {label} ({} tokens in {:.2?}) | occupancy {:.2} | latency {}",
+            model.task.name(),
+            streamed,
+            wall,
+            agg.mean_occupancy,
+            agg.latency
+        );
+        let mut m = BTreeMap::new();
+        m.insert("task".to_string(), Json::Str(model.task.name().to_string()));
+        m.insert("tokens_per_s".to_string(), jnum(tps));
+        m.insert("tokens".to_string(), jnum(streamed as f64));
+        m.insert("occupancy".to_string(), jnum(agg.mean_occupancy));
+        m.insert("p50_us".to_string(), jnum(agg.latency.p50.as_secs_f64() * 1e6));
+        m.insert("p99_us".to_string(), jnum(agg.latency.p99.as_secs_f64() * 1e6));
+        if model.task == TaskKind::Mt {
+            m.insert("beam_width".to_string(), jnum(decode.beam_width as f64));
+            m.insert("decode_len".to_string(), jnum(decode.max_len as f64));
+        }
+        json_tasks.push(Json::Obj(m));
+        server.shutdown();
+    }
+
     let path = csv.finish()?;
     println!("\nwrote {}", path.display());
 
@@ -144,6 +222,7 @@ fn main() -> anyhow::Result<()> {
     root.insert("baseline_tokens_per_s".to_string(), jnum(base_tps));
     root.insert("batches".to_string(), Json::Arr(json_batches));
     root.insert("server".to_string(), Json::Arr(json_server));
+    root.insert("tasks".to_string(), Json::Arr(json_tasks));
     let json_path = bench_json_path();
     std::fs::write(&json_path, format!("{}\n", Json::Obj(root)))?;
     println!("wrote {}", json_path.display());

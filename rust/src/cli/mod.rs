@@ -56,6 +56,15 @@ impl Args {
         }
     }
 
+    /// Full-width u64 option (seeds: `usize` round trips would be
+    /// lossy on 32-bit targets and invite silent truncation).
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a u64, got {v:?}")),
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -94,6 +103,15 @@ mod tests {
         assert!(a.has_flag("quick"));
         assert_eq!(a.opt_or("artifacts", "artifacts"), "artifacts");
         assert_eq!(a.opt_usize("div", 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn opt_u64_keeps_full_width() {
+        let big = (1u64 << 53) + 1; // above f64-exact and i32 range
+        let a = parse(&format!("x --seed {big}"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), big);
+        assert_eq!(a.opt_u64("other", 7).unwrap(), 7);
+        assert!(parse("x --seed nope").opt_u64("seed", 0).is_err());
     }
 
     #[test]

@@ -22,9 +22,12 @@
 //! runs once, then the rust binary is self-contained.
 //!
 //! On top of the inference engine sits [`serve`]: a batched,
-//! multi-threaded serving core (per-client session state, dynamic
-//! micro-batching, a sharded worker pool) behind the
-//! `floatsd-lstm serve` subcommand.
+//! multi-threaded **task-generic** serving core (per-client session
+//! state, dynamic micro-batching, a sharded worker pool, per-task
+//! request kinds incl. an encoder→decoder MT decode loop) behind the
+//! `floatsd-lstm serve` subcommand — any checkpoint the trainers
+//! write serves with its task auto-detected from `meta/task_cfg`,
+//! bit-identical to the offline eval path.
 //!
 //! Next to it sits [`train`]: a pure-rust offline quantized training
 //! engine (truncated BPTT, FP8 gradients, FP16 master weights with

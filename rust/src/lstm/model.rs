@@ -267,6 +267,43 @@ impl QLstmStack {
         );
     }
 
+    /// Sequential (unbatched) forward over `ids`, continuing from —
+    /// and advancing — a carried per-stream state: [`Self::forward`]
+    /// generalized to a non-zero starting state. This is the reference
+    /// engine for serving's prefill and decode loops: the batched
+    /// paths must be bit-identical to it whatever micro-batch a token
+    /// rides in. Unidirectional stacks only.
+    pub fn forward_from(&self, ids: &[usize], state: &mut StreamState) -> Vec<Vec<f32>> {
+        assert!(
+            self.is_unidirectional(),
+            "forward_from: bidirectional layers cannot stream token-at-a-time"
+        );
+        assert_eq!(state.h.len(), self.layers.len(), "state/stack layer mismatch");
+        let n_out = self.n_out();
+        let mut scratches: Vec<CellScratch> =
+            self.layers.iter().map(|l| CellScratch::new(l.fwd.hidden)).collect();
+        let mut width = self.embed.dim;
+        for l in &self.layers {
+            width = width.max(l.fwd.hidden);
+        }
+        let mut x = vec![0f32; width];
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            self.embed.lookup_fp8(id, &mut x[..self.embed.dim]);
+            let mut in_dim = self.embed.dim;
+            for (l, layer) in self.layers.iter().enumerate() {
+                let hdim = layer.fwd.hidden;
+                layer.fwd.step(&x[..in_dim], &mut state.h[l], &mut state.c[l], &mut scratches[l]);
+                x[..hdim].copy_from_slice(&state.h[l]);
+                in_dim = hdim;
+            }
+            let mut y = vec![0f32; n_out];
+            self.head.forward(&x[..in_dim], &mut y);
+            out.push(y);
+        }
+        out
+    }
+
     /// Forward `seqs.len()` full (possibly ragged) sequences in
     /// lockstep micro-batches, returning per-sequence logit series
     /// `[T_i][n_out]` — the offline counterpart of the serving loop,
@@ -418,26 +455,40 @@ pub fn synthetic_stack(
     }
 }
 
-/// Build the LM topology (embed → N×LSTM → dense) from a `.tensors`
-/// state written by aot.py, the coordinator, or the offline trainer's
-/// checkpoints ([`crate::train::Trainer::save_checkpoint`]). Layer
-/// params are named `['params']['l1']..['lN']`; `l1` is required,
-/// further layers are loaded while present (the historical `tiny`
-/// topology is the 1-layer case).
-pub fn build_tiny_from_params(bag: &ParamBag) -> Result<QLstmStack> {
-    let (esh, emb) = bag.f32(&["['params']['emb']['emb']"])?;
+/// JAX-keystr parameter name, optionally under a sub-tree prefix
+/// (`"enc"`/`"dec"` for the seq2seq pair; `""` for single-stack
+/// models). The one spelling shared by the checkpoint writers
+/// ([`crate::tasks`]) and the loaders below.
+pub fn param_key(prefix: &str, rest: &str) -> String {
+    if prefix.is_empty() {
+        format!("['params']{rest}")
+    } else {
+        format!("['params']['{prefix}']{rest}")
+    }
+}
+
+/// Build one stack topology (embed → N×LSTM → dense) from the
+/// `.tensors` sub-tree under `prefix` — `""` for the historical
+/// single-stack layout, `"enc"`/`"dec"` for the translation head's
+/// encoder/decoder pair. Layer params are named `l1..lN`; `l1` is
+/// required, further layers are loaded while present.
+pub fn build_stack_from_params(bag: &ParamBag, prefix: &str) -> Result<QLstmStack> {
+    let (esh, emb) = bag.f32(&[param_key(prefix, "['emb']['emb']").as_str()])?;
+    if esh.len() != 2 {
+        bail!("embedding under prefix {prefix:?} must be rank 2, got {esh:?}");
+    }
     let (vocab, dim) = (esh[0], esh[1]);
     let mut layers = Vec::new();
     let mut in_dim = dim;
     for l in 1usize.. {
-        let wx_key = format!("['params']['l{l}']['wx']");
+        let wx_key = param_key(prefix, &format!("['l{l}']['wx']"));
         if l > 1 && bag.f32(&[wx_key.as_str()]).is_err() {
             break;
         }
         let (_, wx) = bag.f32(&[wx_key.as_str()])?;
-        let wh_key = format!("['params']['l{l}']['wh']");
+        let wh_key = param_key(prefix, &format!("['l{l}']['wh']"));
         let (whs, wh) = bag.f32(&[wh_key.as_str()])?;
-        let b_key = format!("['params']['l{l}']['b']");
+        let b_key = param_key(prefix, &format!("['l{l}']['b']"));
         let (_, b) = bag.f32(&[b_key.as_str()])?;
         let hidden = whs[0];
         layers.push(QLstmLayer {
@@ -446,13 +497,21 @@ pub fn build_tiny_from_params(bag: &ParamBag) -> Result<QLstmStack> {
         });
         in_dim = hidden;
     }
-    let (_, ow) = bag.f32(&["['params']['out']['w']"])?;
-    let (obs, ob) = bag.f32(&["['params']['out']['b']"])?;
+    let (_, ow) = bag.f32(&[param_key(prefix, "['out']['w']").as_str()])?;
+    let (obs, ob) = bag.f32(&[param_key(prefix, "['out']['b']").as_str()])?;
     Ok(QLstmStack {
         embed: Embedding { vocab, dim, table: emb.to_vec() },
         layers,
         head: Dense::from_jax_layout(in_dim, obs[0], &ow, &ob),
     })
+}
+
+/// Build the LM topology from a `.tensors` state written by aot.py,
+/// the coordinator, or the offline trainers' checkpoints — the
+/// unprefixed single-stack case of [`build_stack_from_params`] (the
+/// historical `tiny` topology is the 1-layer instance).
+pub fn build_tiny_from_params(bag: &ParamBag) -> Result<QLstmStack> {
+    build_stack_from_params(bag, "")
 }
 
 #[cfg(test)]
@@ -508,6 +567,30 @@ mod tests {
         let out2 = layer.forward(&xs2);
         assert_eq!(out[0][..6], out2[0][..6], "fwd causal");
         assert_ne!(out[0][6..], out2[0][6..], "bwd anticausal");
+    }
+
+    #[test]
+    fn forward_from_matches_forward_and_carries_state() {
+        let stack = synthetic_stack(24, 5, 7, 2, 11, 6);
+        let seq = [1usize, 9, 3, 20, 7, 7];
+        let want = stack.forward(&seq);
+        let mut st = stack.new_stream_state();
+        let got = stack.forward_from(&seq, &mut st);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            for (a, b) in w.iter().zip(g) {
+                assert_eq!(a.to_bits(), b.to_bits(), "forward_from diverged from forward");
+            }
+        }
+        // split calls must carry state bit-exactly across the boundary
+        let mut st2 = stack.new_stream_state();
+        let mut split = stack.forward_from(&seq[..2], &mut st2);
+        split.extend(stack.forward_from(&seq[2..], &mut st2));
+        for (w, g) in want.iter().zip(&split) {
+            for (a, b) in w.iter().zip(g) {
+                assert_eq!(a.to_bits(), b.to_bits(), "carried state diverged");
+            }
+        }
     }
 
     #[test]

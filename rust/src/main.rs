@@ -5,7 +5,9 @@
 //! floatsd-lstm formats                   # Table I + FloatSD8 grid facts
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
-//!                                        # batched inference server + load gen
+//!                    [--decode-len L --beam K]
+//!                                        # task-generic batched inference server
+//!                                        # + per-task load gen (lm|pos|nli|mt)
 //! floatsd-lstm train [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
 //! floatsd-lstm train --task {lm,pos,nli,mt} [--steps N --out ckpt.tensors ...]
@@ -20,11 +22,17 @@
 //! with `--task` the multi-task engine ([`floatsd_lstm::tasks`])
 //! trains any of the four Table-IV heads from scratch; without it the
 //! historical char-LM path ([`floatsd_lstm::train`]) runs. Both write
-//! `.tensors` checkpoints; single-stack checkpoints load directly
-//! into `serve --model`, and every task checkpoint feeds
-//! `floatsd-lstm eval`, which rebuilds the task from the checkpoint's
-//! `meta/task_cfg` and emits a deterministic JSON report covering all
-//! four tasks (untrained tasks are scored at preset init). Subcommands
+//! `.tensors` checkpoints; **every** task checkpoint loads into
+//! `serve --model`, which auto-detects the task from the checkpoint's
+//! `meta/task_cfg` and serves its request shape — streamed logits
+//! (lm), per-step tag scores (pos), submit-sequence-then-finalize
+//! classification (nli), or the encoder→decoder decode loop (mt;
+//! `--beam` > 1 for beam search). The same checkpoints feed
+//! `floatsd-lstm eval`, which rebuilds the task from the same
+//! `meta/task_cfg` parser and emits a deterministic JSON report
+//! covering all four tasks (untrained tasks are scored at preset
+//! init); served outputs are bit-identical to that offline eval path
+//! (pinned by `tests/serve_tasks.rs`). Subcommands
 //! marked `[pjrt]` need the crate built with `--features pjrt` (and
 //! real XLA bindings in place of the offline stub); everything else —
 //! the serving engine, the offline trainers, and the eval harness —

@@ -1,33 +1,44 @@
-//! `floatsd-lstm serve` — self-contained serving demo: builds (or
-//! loads) a quantized stack, starts the [`Server`], drives it with a
-//! synthetic multi-client token-streaming load, and reports
+//! `floatsd-lstm serve` — self-contained serving demo: loads a
+//! checkpoint (task auto-detected from its `meta/task_cfg`) or builds
+//! a synthetic LM stack, starts the [`Server`], drives it with a
+//! task-appropriate synthetic multi-client load, and reports
 //! throughput, batch occupancy, and latency percentiles per shard.
 //!
 //! ```text
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N] [--max-batch B]
 //!                    [--window-us U] [--sessions S] [--tokens T] [--clients C]
+//!                    [--decode-len L] [--beam K]                 (mt decode knobs)
 //!                    [--vocab V --dim D --hidden H --layers L]   (synthetic model)
 //! ```
 //!
-//! Each synthetic client owns a slice of the sessions and streams
-//! greedily: it sends one token per session, waits for that round's
-//! replies, and feeds each reply's argmax back as the session's next
-//! token — a closed feedback loop through the recurrent state, so any
-//! session-state mixup would change the token stream immediately.
+//! Per-task drivers:
+//!
+//! * **lm** — each client streams greedily: one token per session per
+//!   round, feeding each reply's argmax back as the next input — a
+//!   closed feedback loop through the recurrent state, so any
+//!   session-state mixup would change the token stream immediately;
+//! * **pos** — each session submits whole sentences and receives
+//!   per-step tag scores;
+//! * **nli** — each session submits a premise+hypothesis pair and
+//!   finalizes into a 3-way classification;
+//! * **mt** — each session uploads a source sequence into its encoder
+//!   context, then runs the decode loop (`--beam` > 1 for beam
+//!   search); the reported rate is decoded tokens per second.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::cli::Args;
-use crate::lstm::model::{build_tiny_from_params, synthetic_stack, ParamBag};
+use crate::lstm::model::synthetic_stack;
 use crate::lstm::QLstmStack;
-use crate::tensorfile::read_tensors;
+use crate::rng::SplitMix64;
+use crate::tasks::TaskKind;
 
-use super::{ServeConfig, Server, SessionId};
+use super::{DecodeParams, Payload, ServeConfig, ServeModel, Server, SessionId};
 
 /// Entry point for the `serve` subcommand.
 pub fn run(args: &Args) -> Result<()> {
@@ -39,42 +50,59 @@ pub fn run(args: &Args) -> Result<()> {
     let n_sessions = args.opt_usize("sessions", 64)?.max(1);
     let n_tokens = args.opt_usize("tokens", 256)?;
     let n_clients = args.opt_usize("clients", 4)?.max(1).min(n_sessions);
+    let decode = DecodeParams {
+        max_len: args.opt_usize("decode-len", 16)?.max(1),
+        beam_width: args.opt_usize("beam", 1)?.max(1),
+    };
 
-    let stack = Arc::new(match args.opt("model") {
-        Some(path) => {
-            let tensors = read_tensors(path).with_context(|| format!("load {path}"))?;
-            build_tiny_from_params(&ParamBag::from_tensors(tensors))
-                .with_context(|| format!("assemble model from {path}"))?
-        }
-        None => synthetic_stack(
+    let model = Arc::new(match args.opt("model") {
+        Some(path) => ServeModel::load(path)?,
+        None => ServeModel::lm(Arc::new(synthetic_stack(
             args.opt_usize("vocab", 256)?,
             args.opt_usize("dim", 64)?,
             args.opt_usize("hidden", 128)?,
             args.opt_usize("layers", 2)?.max(1),
             args.opt_usize("vocab", 256)?,
             20200711,
-        ),
+        )))?,
     });
 
-    let (sd8, fp32) = stack.weight_bytes();
+    let stack = &model.stack;
+    let (mut sd8, mut fp32) = stack.weight_bytes();
+    if let Some(dec) = &model.decoder {
+        let (d8, d32) = dec.weight_bytes();
+        sd8 += d8;
+        fp32 += d32;
+    }
     println!(
-        "model: vocab={} dim={} layers={} hidden={:?} n_out={} | weights {} B FloatSD8 ({} B as FP32)",
+        "model: task={} vocab={} dim={} layers={} hidden={:?} n_out={} | weights {} B FloatSD8 ({} B as FP32)",
+        model.task.name(),
         stack.embed.vocab,
         stack.embed.dim,
         stack.layers.len(),
         stack.hidden_dims(),
-        stack.n_out(),
+        model.n_out(),
         sd8,
         fp32
     );
     println!(
-        "serve: {} workers × max-batch {} × window {:?} | load: {} sessions × {} tokens via {} clients",
-        cfg.workers, cfg.max_batch, cfg.batch_window, n_sessions, n_tokens, n_clients
+        "serve: {} workers × max-batch {} × window {:?} | load: {} sessions × {} tokens via {} clients{}",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.batch_window,
+        n_sessions,
+        n_tokens,
+        n_clients,
+        if model.task == TaskKind::Mt {
+            format!(" | decode-len {} beam {}", decode.max_len, decode.beam_width)
+        } else {
+            String::new()
+        }
     );
 
-    let server = Server::start(stack.clone(), cfg);
+    let server = Server::start(model.clone(), cfg)?;
     let t0 = Instant::now();
-    let streamed = drive_load(&server, &stack, n_sessions, n_tokens, n_clients);
+    let streamed = drive_task_load(&server, &model, n_sessions, n_tokens, n_clients, decode);
     let wall = t0.elapsed();
 
     println!("\nper-shard:");
@@ -93,7 +121,31 @@ pub fn run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Drive `n_sessions` greedy-decoding sessions (partitioned over
+/// Drive the task-appropriate synthetic load; returns tokens streamed
+/// (for mt: decoded target tokens — the decode-loop throughput).
+pub fn drive_task_load(
+    server: &Server,
+    model: &ServeModel,
+    n_sessions: usize,
+    n_tokens: usize,
+    n_clients: usize,
+    decode: DecodeParams,
+) -> u64 {
+    match model.task {
+        TaskKind::Lm => drive_load(server, &model.stack, n_sessions, n_tokens, n_clients),
+        TaskKind::Pos => drive_pos_load(server, model, n_sessions, n_tokens, n_clients),
+        TaskKind::Nli => drive_nli_load(server, model, n_sessions, n_tokens, n_clients),
+        TaskKind::Mt => drive_mt_load(server, model, n_sessions, n_tokens, n_clients, decode),
+    }
+}
+
+/// Partition `n_sessions` across `n_clients`: client `c` owns sessions
+/// `{c, c + C, c + 2C, ...}`.
+fn client_sessions(client: usize, n_sessions: usize, n_clients: usize) -> Vec<SessionId> {
+    (client..n_sessions).step_by(n_clients.max(1)).map(|s| s as SessionId).collect()
+}
+
+/// Drive `n_sessions` greedy-decoding LM sessions (partitioned over
 /// `n_clients` threads) for `n_tokens` rounds; returns tokens streamed.
 pub fn drive_load(
     server: &Server,
@@ -107,9 +159,7 @@ pub fn drive_load(
     std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for client in 0..n_clients {
-            // client c owns sessions {c, c + C, c + 2C, ...}
-            let sessions: Vec<SessionId> =
-                (client..n_sessions).step_by(n_clients).map(|s| s as SessionId).collect();
+            let sessions = client_sessions(client, n_sessions, n_clients);
             joins.push(scope.spawn(move || {
                 let (tx, rx) = mpsc::channel();
                 let mut next: HashMap<SessionId, usize> =
@@ -123,9 +173,10 @@ pub fn drive_load(
                     for _ in 0..sessions.len() {
                         let reply = rx.recv().expect("server dropped reply channel");
                         assert!(!reply.is_rejected(), "submit-validated token rejected");
-                        // greedy feedback: the reply's argmax becomes the
-                        // session's next input token
-                        next.insert(reply.session, reply.top_token % vocab);
+                        // greedy feedback: the reply's argmax becomes
+                        // the session's next input token
+                        let top = reply.top_token().expect("step reply carries a top token");
+                        next.insert(reply.session, top % vocab);
                     }
                 }
                 for &s in &sessions {
@@ -141,22 +192,213 @@ pub fn drive_load(
     streamed
 }
 
+/// POS load: every session submits whole sentences and receives
+/// per-step tag scores; returns positions tagged.
+pub fn drive_pos_load(
+    server: &Server,
+    model: &ServeModel,
+    n_sessions: usize,
+    sent_len: usize,
+    n_clients: usize,
+) -> u64 {
+    let vocab = model.input_vocab();
+    let sent_len = sent_len.max(1);
+    let mut streamed = 0u64;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for client in 0..n_clients {
+            let sessions = client_sessions(client, n_sessions, n_clients);
+            joins.push(scope.spawn(move || {
+                let (tx, rx) = mpsc::channel();
+                for &s in &sessions {
+                    let mut rng = SplitMix64::new(0x9053_0000 ^ s);
+                    let toks: Vec<usize> =
+                        (0..sent_len).map(|_| rng.next_below(vocab as u64) as usize).collect();
+                    server.submit_sequence(s, toks, tx.clone()).expect("tokens within vocab");
+                }
+                let mut tagged = 0u64;
+                for _ in 0..sessions.len() {
+                    let reply = rx.recv().expect("server dropped reply channel");
+                    match reply.payload {
+                        Payload::Steps { logits } => tagged += logits.len() as u64,
+                        _ => panic!("pos sequence reply must carry per-step tag scores"),
+                    }
+                }
+                for &s in &sessions {
+                    server.close_session(s);
+                }
+                tagged
+            }));
+        }
+        for j in joins {
+            streamed += j.join().expect("client thread");
+        }
+    });
+    streamed
+}
+
+/// NLI load: every session submits a premise+hypothesis pair, then
+/// finalizes into a 3-way classification; returns tokens consumed.
+pub fn drive_nli_load(
+    server: &Server,
+    model: &ServeModel,
+    n_sessions: usize,
+    pair_len: usize,
+    n_clients: usize,
+) -> u64 {
+    let vocab = model.input_vocab();
+    let pair_len = pair_len.max(2);
+    let n_out = model.n_out();
+    let mut streamed = 0u64;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for client in 0..n_clients {
+            let sessions = client_sessions(client, n_sessions, n_clients);
+            joins.push(scope.spawn(move || {
+                let (tx, rx) = mpsc::channel();
+                let mut consumed = 0u64;
+                for &s in &sessions {
+                    let mut rng = SplitMix64::new(0x0911_0000 ^ s);
+                    let toks: Vec<usize> =
+                        (0..pair_len).map(|_| rng.next_below(vocab as u64) as usize).collect();
+                    server.submit_sequence(s, toks, tx.clone()).expect("tokens within vocab");
+                    let reply = rx.recv().expect("server dropped reply channel");
+                    match reply.payload {
+                        Payload::Prefilled { consumed: c, .. } => consumed += c as u64,
+                        _ => panic!("nli sequence reply must be a prefill"),
+                    }
+                    server.finalize(s, tx.clone()).expect("nli accepts finalize");
+                    let reply = rx.recv().expect("server dropped reply channel");
+                    match reply.payload {
+                        Payload::Class { logits, label } => {
+                            assert_eq!(logits.len(), n_out);
+                            assert!(label < n_out);
+                        }
+                        _ => panic!("finalize reply must be a classification"),
+                    }
+                    server.close_session(s);
+                }
+                consumed
+            }));
+        }
+        for j in joins {
+            streamed += j.join().expect("client thread");
+        }
+    });
+    streamed
+}
+
+/// MT load: every session uploads a source sequence and runs the
+/// decode loop; returns decoded target tokens (the decode throughput).
+pub fn drive_mt_load(
+    server: &Server,
+    model: &ServeModel,
+    n_sessions: usize,
+    src_len: usize,
+    n_clients: usize,
+    decode: DecodeParams,
+) -> u64 {
+    let vocab = model.input_vocab();
+    let src_len = src_len.max(1);
+    let mut streamed = 0u64;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for client in 0..n_clients {
+            let sessions = client_sessions(client, n_sessions, n_clients);
+            joins.push(scope.spawn(move || {
+                let (tx, rx) = mpsc::channel();
+                // upload every source first so decodes can co-batch
+                for &s in &sessions {
+                    let mut rng = SplitMix64::new(0x0017_0000 ^ s);
+                    let toks: Vec<usize> =
+                        (0..src_len).map(|_| rng.next_below(vocab as u64) as usize).collect();
+                    server.submit_sequence(s, toks, tx.clone()).expect("tokens within vocab");
+                }
+                for _ in 0..sessions.len() {
+                    let reply = rx.recv().expect("server dropped reply channel");
+                    assert!(
+                        matches!(reply.payload, Payload::Encoded { .. }),
+                        "mt sequence reply must be an encoder ack"
+                    );
+                }
+                for &s in &sessions {
+                    server.decode(s, decode, tx.clone()).expect("decode params in range");
+                }
+                let mut decoded = 0u64;
+                for _ in 0..sessions.len() {
+                    let reply = rx.recv().expect("server dropped reply channel");
+                    match reply.payload {
+                        Payload::Decoded { tokens, score } => {
+                            assert!(score.is_finite());
+                            decoded += tokens.len() as u64;
+                        }
+                        _ => panic!("decode reply must carry decoded tokens"),
+                    }
+                }
+                for &s in &sessions {
+                    server.close_session(s);
+                }
+                decoded
+            }));
+        }
+        for j in joins {
+            streamed += j.join().expect("client thread");
+        }
+    });
+    streamed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) }
+    }
+
     #[test]
     fn demo_load_runs_end_to_end() {
         let stack = Arc::new(synthetic_stack(32, 8, 10, 1, 32, 5));
-        let server = Server::start(
-            stack.clone(),
-            ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) },
-        );
+        let server = Server::start_lm(stack.clone(), tiny_cfg()).unwrap();
         let streamed = drive_load(&server, &stack, 6, 5, 2);
         assert_eq!(streamed, 30);
         let agg = server.stats();
         assert_eq!(agg.tokens, 30);
         assert!(agg.batches > 0 && agg.mean_occupancy >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pos_and_nli_loads_run_end_to_end() {
+        let pos_stack = Arc::new(synthetic_stack(60, 8, 10, 1, 6, 21));
+        let model =
+            Arc::new(ServeModel::from_parts(TaskKind::Pos, pos_stack, None, None).unwrap());
+        let server = Server::start(model.clone(), tiny_cfg()).unwrap();
+        let tagged = drive_pos_load(&server, &model, 4, 7, 2);
+        assert_eq!(tagged, 4 * 7, "every position of every sentence tagged");
+        server.shutdown();
+
+        let nli_stack = Arc::new(synthetic_stack(24, 8, 10, 1, 3, 22));
+        let model =
+            Arc::new(ServeModel::from_parts(TaskKind::Nli, nli_stack, None, None).unwrap());
+        let server = Server::start(model.clone(), tiny_cfg()).unwrap();
+        let consumed = drive_nli_load(&server, &model, 3, 8, 1);
+        assert_eq!(consumed, 3 * 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mt_load_decodes_end_to_end() {
+        let enc = Arc::new(synthetic_stack(20, 6, 12, 1, 1, 23));
+        let dec = Arc::new(synthetic_stack(20, 6, 12, 1, 20, 24));
+        let model =
+            Arc::new(ServeModel::from_parts(TaskKind::Mt, enc, Some(dec), None).unwrap());
+        let server = Server::start(model.clone(), tiny_cfg()).unwrap();
+        let decoded =
+            drive_mt_load(&server, &model, 3, 5, 1, DecodeParams { max_len: 6, beam_width: 2 });
+        assert_eq!(decoded, 3 * 6, "every decode emits max_len tokens");
+        let agg = server.stats();
+        assert!(agg.tokens >= decoded, "decode work counted in throughput");
         server.shutdown();
     }
 }

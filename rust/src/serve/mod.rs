@@ -1,12 +1,13 @@
-//! Batched, multi-threaded **inference serving engine** over the
-//! pure-rust FloatSD8 LSTM stack — the deployment layer the paper's
-//! low-complexity arithmetic exists to enable.
+//! Batched, multi-threaded **task-generic inference serving engine**
+//! over the pure-rust FloatSD8 LSTM stacks — the deployment layer the
+//! paper's low-complexity arithmetic exists to enable, serving every
+//! head the trainer produces (`lm`, `pos`, `nli`, `mt`).
 //!
 //! Architecture (one box per module):
 //!
 //! ```text
-//!   clients ──► Server::submit ──► shard = session_id % workers
-//!                                        │
+//!   clients ──► Server::{submit,submit_sequence,finalize,decode}
+//!                                        │ shard = session_id % workers
 //!                     ┌──────────────────┴──────────────────┐
 //!                     ▼                                     ▼
 //!              RequestQueue (scheduler)             RequestQueue ...
@@ -14,23 +15,33 @@
 //!               bounded micro-batches
 //!                     │
 //!                     ▼
-//!              worker thread: SessionStore (h,c per client)
-//!                     │   gather states → QLstmStack::step_batch
-//!                     │   (weight-stationary matmul_fast, flat
-//!                     │    scratch, zero allocation per token)
+//!              worker thread: SessionStore (state per client)
+//!                     │   group by kind → batched kernels
+//!                     │   steps | sequences | finalizes | decodes
 //!                     ▼
 //!              replies + ShardStats (tokens/s, p50/p99, occupancy)
 //! ```
 //!
+//! The model side is a [`ServeModel`] ([`model`]): any `.tensors`
+//! checkpoint loads with its task auto-detected from `meta/task_cfg`
+//! (the parser shared with `floatsd-lstm eval`), and the engine serves
+//! the task's request/response shape — streaming logits (lm),
+//! per-step tag scores (pos), submit-sequence-then-finalize 3-way
+//! classification (nli), and the encoder→decoder decode loop (mt;
+//! greedy, or beam search behind [`DecodeParams::beam_width`]).
+//!
 //! Contracts:
 //!
-//! * **Incremental sessions** — clients stream one token at a time;
-//!   the per-client `(h, c)` state lives server-side in the shard's
-//!   [`session::SessionStore`], so nothing is ever re-computed.
-//! * **Bit-exact batching** — a token's logits are bit-identical no
-//!   matter which micro-batch it rides in (pinned by
-//!   `tests/batched_equivalence.rs`); batching is purely a throughput
-//!   lever, never an accuracy one.
+//! * **Incremental sessions** — clients stream tokens (or whole
+//!   sequences); the per-client state lives server-side in the shard's
+//!   [`session::SessionStore`] (for mt that state is the encoder
+//!   context each decode bridges from), so nothing is re-computed.
+//! * **Bit-exact batching** — every reply is bit-identical no matter
+//!   which micro-batch (or per-kind group, or decode lane) produced it
+//!   (pinned by `tests/batched_equivalence.rs` and
+//!   `tests/serve_tasks.rs`); batching is purely a throughput lever,
+//!   never an accuracy one. The single-token streaming path is
+//!   unchanged from the LM-only engine.
 //! * **Per-session ordering** — the scheduler never places two
 //!   requests of one session in the same micro-batch and preserves
 //!   FIFO order across batches, so pipelined clients are safe.
@@ -39,6 +50,7 @@
 //!   hot path (the only lock is the request queue).
 
 pub mod demo;
+pub mod model;
 pub mod scheduler;
 pub mod session;
 pub mod stats;
@@ -48,9 +60,13 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::lstm::QLstmStack;
+use anyhow::bail;
 
-pub use scheduler::{Reply, Request, RequestQueue};
+use crate::lstm::QLstmStack;
+use crate::tasks::TaskKind;
+
+pub use model::{DecodeParams, ServeModel, MAX_BEAM_WIDTH, MAX_DECODE_LEN};
+pub use scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 pub use session::{SessionId, SessionStore};
 pub use stats::{ShardStats, StatsSnapshot};
 pub use worker::WorkerPool;
@@ -81,22 +97,44 @@ impl Default for ServeConfig {
 /// session store, and thread per shard.
 pub struct Server {
     pool: WorkerPool,
+    model: Arc<ServeModel>,
     workers: usize,
-    vocab: usize,
 }
 
 impl Server {
     /// Spawn the worker pool over a shared (immutable, hence freely
-    /// shareable) quantized stack. The stack must be unidirectional.
-    pub fn start(stack: Arc<QLstmStack>, cfg: ServeConfig) -> Server {
-        assert!(
-            stack.is_unidirectional(),
-            "serving requires a unidirectional stack (bidirectional layers cannot stream)"
-        );
-        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+    /// shareable) model. Fails — with an error, not a panic; a bad
+    /// checkpoint or config is a client-facing condition — when the
+    /// model breaks a serving invariant (bidirectional layers, a
+    /// head/task width mismatch, a missing mt decoder) or the config
+    /// is degenerate.
+    pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> crate::Result<Server> {
+        model.validate()?;
+        if cfg.workers < 1 || cfg.max_batch < 1 {
+            bail!(
+                "serve config: workers ({}) and max_batch ({}) must both be >= 1",
+                cfg.workers,
+                cfg.max_batch
+            );
+        }
         let workers = cfg.workers;
-        let vocab = stack.embed.vocab;
-        Server { pool: WorkerPool::spawn(stack, &cfg), workers, vocab }
+        Ok(Server { pool: WorkerPool::spawn(model.clone(), &cfg), model, workers })
+    }
+
+    /// [`Self::start`] over a raw single stack served as a language
+    /// model (synthetic stacks, legacy checkpoints without metadata).
+    pub fn start_lm(stack: Arc<QLstmStack>, cfg: ServeConfig) -> crate::Result<Server> {
+        Server::start(Arc::new(ServeModel::lm(stack)?), cfg)
+    }
+
+    /// The model being served (task, stacks, checkpoint config).
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    /// The task this server answers requests for.
+    pub fn task(&self) -> TaskKind {
+        self.model.task
     }
 
     /// Which shard (worker) owns a session.
@@ -104,10 +142,10 @@ impl Server {
         (session % self.workers as u64) as usize
     }
 
-    /// Enqueue one token of one session. The reply (logits for this
-    /// token) arrives on `reply_to`; a session is created implicitly on
-    /// first use. Requests of the same session are processed in
-    /// submission order.
+    /// Enqueue one token of one session; the reply (that step's head
+    /// output) arrives on `reply_to`. A session is created implicitly
+    /// on first use; requests of one session are processed in
+    /// submission order. For mt sessions the token feeds the encoder.
     ///
     /// Rejects out-of-vocabulary tokens up front — a bad client input
     /// must never reach (and panic) a shard worker.
@@ -117,15 +155,62 @@ impl Server {
         token: usize,
         reply_to: mpsc::Sender<Reply>,
     ) -> crate::Result<()> {
-        if token >= self.vocab {
-            anyhow::bail!("token id {token} out of range for vocab {}", self.vocab);
+        self.submit_kind(session, RequestKind::Step { token }, reply_to)
+    }
+
+    /// Enqueue a whole (sub)sequence: one request, one reply — prefill
+    /// for lm/nli (reply carries the last step's logits), per-step tag
+    /// scores for pos, source upload into the encoder context for mt.
+    pub fn submit_sequence(
+        &self,
+        session: SessionId,
+        tokens: Vec<usize>,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        self.submit_kind(session, RequestKind::Sequence { tokens }, reply_to)
+    }
+
+    /// Enqueue an nli finalize: classify the sequence submitted so far
+    /// from its final hidden state. Head-width-aware: only a task with
+    /// a sequence-level classification head accepts it.
+    pub fn finalize(
+        &self,
+        session: SessionId,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        self.submit_kind(session, RequestKind::Finalize, reply_to)
+    }
+
+    /// Enqueue an mt decode: run the encoder→decoder loop from the
+    /// session's current encoder context (left untouched, so a client
+    /// can re-decode with different parameters).
+    pub fn decode(
+        &self,
+        session: SessionId,
+        params: DecodeParams,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        self.submit_kind(session, RequestKind::Decode(params), reply_to)
+    }
+
+    /// Validate (against the one per-task rule set shared with the
+    /// workers) and enqueue.
+    fn submit_kind(
+        &self,
+        session: SessionId,
+        kind: RequestKind,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        if let Err(reason) = model::validate_request(&self.model, &kind) {
+            bail!("{reason}");
         }
         let shard = self.shard_of(session);
-        self.pool.queues[shard].push(Request::new(session, token, reply_to));
+        self.pool.queues[shard].push(Request::with_kind(session, kind, reply_to));
         Ok(())
     }
 
-    /// Drop a session's server-side state (frees the shard's map entry).
+    /// Drop a session's server-side state (frees the shard's map
+    /// entry). Closing a session that never existed is a cheap no-op.
     pub fn close_session(&self, session: SessionId) {
         let shard = self.shard_of(session);
         self.pool.queues[shard].push_close(session);
@@ -156,10 +241,11 @@ mod tests {
     #[test]
     fn server_round_trips_tokens_across_shards() {
         let stack = Arc::new(synthetic_stack(32, 8, 12, 1, 32, 11));
-        let server = Server::start(
+        let server = Server::start_lm(
             stack.clone(),
             ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) },
-        );
+        )
+        .unwrap();
         let (tx, rx) = mpsc::channel();
         let sessions: Vec<SessionId> = (0..5).collect();
         for &s in &sessions {
@@ -172,21 +258,82 @@ mod tests {
         let mut got = 0;
         while got < sessions.len() {
             let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
-            assert_eq!(reply.logits.len(), stack.n_out());
-            assert!(reply.logits.iter().all(|v| v.is_finite()));
+            let logits = reply.logits().expect("step reply carries logits");
+            assert_eq!(logits.len(), stack.n_out());
+            assert!(logits.iter().all(|v| v.is_finite()));
             got += 1;
         }
         let agg = server.stats();
         assert_eq!(agg.tokens, sessions.len() as u64);
+        assert_eq!(agg.requests, sessions.len() as u64);
         server.shutdown();
     }
 
     #[test]
-    #[should_panic(expected = "unidirectional")]
-    fn server_rejects_bidirectional_stacks() {
+    fn server_rejects_bidirectional_stacks_with_an_error() {
         let mut stack = synthetic_stack(16, 4, 6, 1, 16, 3);
         let extra = synthetic_stack(16, 6, 6, 1, 16, 4).layers.remove(0).fwd;
         stack.layers[0].bwd = Some(extra);
-        let _ = Server::start(Arc::new(stack), ServeConfig::default());
+        let err = Server::start_lm(Arc::new(stack), ServeConfig::default())
+            .err()
+            .expect("bidirectional stacks cannot stream and must be refused");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("unidirectional") && msg.contains("stream"),
+            "error should explain the streaming constraint, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn degenerate_config_is_an_error_not_a_panic() {
+        let stack = Arc::new(synthetic_stack(16, 4, 6, 1, 16, 5));
+        let cfg = ServeConfig { workers: 0, max_batch: 4, batch_window: Duration::ZERO };
+        assert!(Server::start_lm(stack.clone(), cfg).is_err());
+        let cfg = ServeConfig { workers: 2, max_batch: 0, batch_window: Duration::ZERO };
+        assert!(Server::start_lm(stack, cfg).is_err());
+    }
+
+    #[test]
+    fn close_of_never_created_session_is_a_noop_end_to_end() {
+        let stack = Arc::new(synthetic_stack(32, 8, 12, 1, 32, 11));
+        let server = Server::start_lm(
+            stack,
+            ServeConfig { workers: 1, max_batch: 4, batch_window: Duration::from_micros(50) },
+        )
+        .unwrap();
+        // close a session that never submitted anything, then stream a
+        // real one through the same shard
+        server.close_session(999);
+        let (tx, rx) = mpsc::channel();
+        server.submit(1, 3, tx.clone()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(5)).expect("live session still served");
+        assert!(!reply.is_rejected());
+        // the phantom close neither panicked the shard nor left (or
+        // created) a session entry: only the live session is counted
+        let agg = server.stats();
+        assert_eq!(agg.sessions, 1, "unknown close must not leak a session entry");
+        server.close_session(1);
+        // a second phantom close after real traffic is equally harmless
+        server.close_session(999);
+        let (tx2, rx2) = mpsc::channel();
+        server.submit(2, 5, tx2).unwrap();
+        assert!(!rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_rejected());
+        assert_eq!(server.stats().sessions, 1, "session 1 closed, session 2 live");
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_task_requests_are_validated_at_submit() {
+        let stack = Arc::new(synthetic_stack(32, 8, 12, 1, 32, 7));
+        let server = Server::start_lm(stack, ServeConfig::default()).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        assert!(server.submit_sequence(1, vec![], tx.clone()).is_err(), "empty sequence");
+        assert!(server.submit_sequence(1, vec![1, 40], tx.clone()).is_err(), "oov in sequence");
+        assert!(server.finalize(1, tx.clone()).is_err(), "lm has no classification head");
+        assert!(
+            server.decode(1, DecodeParams::default(), tx.clone()).is_err(),
+            "lm has no decoder"
+        );
+        server.shutdown();
     }
 }

@@ -1,0 +1,449 @@
+//! Task-generic serving model: the layer that turns "a `.tensors`
+//! checkpoint" into "something the engine knows how to serve".
+//!
+//! [`ServeModel`] wraps the checkpoint's `meta/task_cfg` (parsed by
+//! the same [`crate::tasks::read_task_cfg`] the eval harness uses, so
+//! serve and eval always rebuild the identical topology) and exposes
+//! the per-task request/response contract:
+//!
+//! | task | request shape                   | response shape                  |
+//! |------|---------------------------------|---------------------------------|
+//! | lm   | stream tokens / prefill         | per-step next-token logits      |
+//! | pos  | stream tokens / whole sentence  | per-step tag scores             |
+//! | nli  | stream pair, then finalize      | 3-way classification logits     |
+//! | mt   | upload source, then decode      | decoded target tokens + score   |
+//!
+//! For `mt` the model holds **two** stacks (encoder = the primary
+//! stack whose state lives in the session store, decoder = the stack
+//! the decode loop steps); their per-layer hidden sizes must match so
+//! the encoder's final state can seed the decoder — the inference side
+//! of the training subsystem's gradient state bridge.
+//!
+//! Checkpoints without task metadata (raw/synthetic LM stacks) load
+//! as plain language models with no head-width constraints.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::translation::BOS;
+use crate::lstm::model::{build_stack_from_params, ParamBag};
+use crate::lstm::{QLstmStack, StreamState};
+use crate::tasks::{read_task_cfg, TaskConfig, TaskKind};
+use crate::tensorfile::{read_tensors, Tensor};
+
+/// Hard cap on [`DecodeParams::max_len`]: a single decode request may
+/// not monopolize a shard for longer than this many decoder steps.
+pub const MAX_DECODE_LEN: usize = 1024;
+
+/// Hard cap on [`DecodeParams::beam_width`]: beams ride the batched
+/// kernels as lanes, and the decoder scratch grows to hold them.
+pub const MAX_BEAM_WIDTH: usize = 16;
+
+/// Parameters of one MT decode request.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeParams {
+    /// target tokens to emit (the synthetic translation task has no
+    /// EOS, so the loop always runs exactly this long)
+    pub max_len: usize,
+    /// 1 = greedy (batched across concurrent decodes); >1 = beam
+    /// search, beams batched as lanes of one request
+    pub beam_width: usize,
+}
+
+impl Default for DecodeParams {
+    fn default() -> Self {
+        DecodeParams { max_len: 16, beam_width: 1 }
+    }
+}
+
+/// A loaded, validated model plus the task contract it serves.
+pub struct ServeModel {
+    pub task: TaskKind,
+    /// primary stack: the whole model for lm/pos/nli, the **encoder**
+    /// for mt (its state is what the session store holds)
+    pub stack: Arc<QLstmStack>,
+    /// mt decoder stack (`None` for single-stack tasks)
+    pub decoder: Option<Arc<QLstmStack>>,
+    /// checkpoint task config (`None` for raw/synthetic LM stacks —
+    /// no head-width constraints apply then)
+    pub cfg: Option<TaskConfig>,
+}
+
+impl ServeModel {
+    /// Wrap a raw single stack as a language model — synthetic stacks,
+    /// legacy LM checkpoints without task metadata.
+    pub fn lm(stack: Arc<QLstmStack>) -> Result<ServeModel> {
+        ServeModel::from_parts(TaskKind::Lm, stack, None, None)
+    }
+
+    /// Assemble from already-built stacks (benches, tests). Validates
+    /// the same per-task topology rules as checkpoint loading.
+    pub fn from_parts(
+        task: TaskKind,
+        stack: Arc<QLstmStack>,
+        decoder: Option<Arc<QLstmStack>>,
+        cfg: Option<TaskConfig>,
+    ) -> Result<ServeModel> {
+        let m = ServeModel { task, stack, decoder, cfg };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load any `.tensors` checkpoint, auto-detecting the task from
+    /// its `meta/task_cfg` blob (absent → raw LM topology).
+    pub fn load(path: impl AsRef<Path>) -> Result<ServeModel> {
+        let path = path.as_ref();
+        let tensors =
+            read_tensors(path).with_context(|| format!("load {}", path.display()))?;
+        ServeModel::from_tensors(tensors)
+            .with_context(|| format!("assemble serving model from {}", path.display()))
+    }
+
+    /// [`Self::load`] over already-read tensors.
+    pub fn from_tensors(tensors: Vec<Tensor>) -> Result<ServeModel> {
+        let cfg = read_task_cfg(&tensors)?;
+        let bag = ParamBag::from_tensors(tensors);
+        let (task, stack, decoder) = match &cfg {
+            None => (TaskKind::Lm, build_stack_from_params(&bag, "")?, None),
+            Some(c) => match c.task {
+                TaskKind::Mt => (
+                    TaskKind::Mt,
+                    build_stack_from_params(&bag, "enc").context("mt encoder sub-tree")?,
+                    Some(build_stack_from_params(&bag, "dec").context("mt decoder sub-tree")?),
+                ),
+                kind => (kind, build_stack_from_params(&bag, "")?, None),
+            },
+        };
+        ServeModel::from_parts(task, Arc::new(stack), decoder.map(Arc::new), cfg)
+    }
+
+    /// Vocabulary the client's input tokens are validated against
+    /// (the source vocabulary for mt).
+    pub fn input_vocab(&self) -> usize {
+        self.stack.embed.vocab
+    }
+
+    /// Head width of the stack whose logits clients receive: the
+    /// primary head for lm/pos/nli, the decoder head for mt.
+    pub fn n_out(&self) -> usize {
+        match &self.decoder {
+            Some(d) => d.n_out(),
+            None => self.stack.n_out(),
+        }
+    }
+
+    /// Streamability + per-task topology rules — everything that must
+    /// hold before a worker thread may trust the model. Errors here,
+    /// not panics: a bad checkpoint is a client-facing condition.
+    pub fn validate(&self) -> Result<()> {
+        if !self.stack.is_unidirectional() {
+            bail!("serving requires a unidirectional stack (bidirectional layers cannot stream)");
+        }
+        match (self.task, &self.decoder) {
+            (TaskKind::Mt, None) => bail!("task mt needs an encoder/decoder pair"),
+            (TaskKind::Mt, Some(dec)) => {
+                if !dec.is_unidirectional() {
+                    bail!(
+                        "serving requires a unidirectional decoder stack \
+                         (bidirectional layers cannot stream)"
+                    );
+                }
+                if dec.hidden_dims() != self.stack.hidden_dims() {
+                    bail!(
+                        "mt state bridge needs matching hidden sizes: encoder {:?} vs decoder {:?}",
+                        self.stack.hidden_dims(),
+                        dec.hidden_dims()
+                    );
+                }
+            }
+            (task, Some(_)) => {
+                bail!("task {} is single-stack but a decoder was supplied", task.name())
+            }
+            (_, None) => {}
+        }
+        let Some(cfg) = &self.cfg else { return Ok(()) };
+        if cfg.task != self.task {
+            bail!("task mismatch: model {} vs config {}", self.task.name(), cfg.task.name());
+        }
+        // head-width-aware checks: the head must be exactly as wide as
+        // the task's output space, or every reply would be mis-shaped
+        let n_out = self.stack.n_out();
+        match self.task {
+            TaskKind::Lm => {
+                if n_out != cfg.vocab {
+                    bail!("lm head is {n_out}-wide but the vocabulary has {} tokens", cfg.vocab);
+                }
+            }
+            TaskKind::Pos => {
+                if n_out != cfg.n_classes {
+                    bail!("pos head is {n_out}-wide but the tag set has {} classes", cfg.n_classes);
+                }
+            }
+            TaskKind::Nli => {
+                if n_out != cfg.n_classes || cfg.n_classes != 3 {
+                    bail!(
+                        "nli head must be 3-wide (entail/contradict/neutral), \
+                         got head {n_out} / config {}",
+                        cfg.n_classes
+                    );
+                }
+            }
+            TaskKind::Mt => {
+                let dec = self.decoder.as_ref().expect("checked above");
+                if dec.embed.vocab != cfg.vocab_tgt || dec.n_out() != cfg.vocab_tgt {
+                    bail!(
+                        "mt decoder must embed and predict the {}-token target vocabulary, \
+                         got embed {} / head {}",
+                        cfg.vocab_tgt,
+                        dec.embed.vocab,
+                        dec.n_out()
+                    );
+                }
+                if self.stack.embed.vocab != cfg.vocab {
+                    bail!(
+                        "mt encoder embeds {} tokens but the source vocabulary has {}",
+                        self.stack.embed.vocab,
+                        cfg.vocab
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decoder initial state = a copy of the (encoder) stream state —
+    /// the inference side of the training state bridge. The encoder
+    /// state itself is untouched, so a session can decode repeatedly.
+    pub fn bridge_state(&self, enc_state: &StreamState) -> StreamState {
+        let dec = self.decoder.as_ref().expect("bridge_state needs a decoder");
+        let mut st = dec.new_stream_state();
+        for (l, h) in enc_state.h.iter().enumerate() {
+            st.h[l].copy_from_slice(h);
+            st.c[l].copy_from_slice(&enc_state.c[l]);
+        }
+        st
+    }
+
+    /// Offline, unbatched reference of the greedy decode loop: encoder
+    /// [`QLstmStack::forward_from`] over the source, then one
+    /// sequential decoder step per emitted token. The serving decode
+    /// loop must match this bit-for-bit whatever micro-batch its steps
+    /// ride in (pinned by `tests/serve_tasks.rs`).
+    pub fn reference_greedy_decode(
+        &self,
+        src: &[usize],
+        max_len: usize,
+    ) -> Result<(Vec<usize>, f32)> {
+        let Some(dec) = &self.decoder else {
+            bail!("greedy decode needs an encoder/decoder pair (task {})", self.task.name())
+        };
+        let mut enc_state = self.stack.new_stream_state();
+        self.stack.forward_from(src, &mut enc_state);
+        let mut state = self.bridge_state(&enc_state);
+        let mut tokens = Vec::with_capacity(max_len);
+        let mut score = 0f32;
+        let mut cur = BOS as usize;
+        for _ in 0..max_len {
+            let logits = dec.forward_from(&[cur], &mut state);
+            let lg = &logits[0];
+            let next = argmax(lg);
+            score += token_log_prob(lg, next);
+            tokens.push(next);
+            cur = next;
+        }
+        Ok((tokens, score))
+    }
+}
+
+/// Per-task request validation — the single source of truth for what
+/// a model accepts, used both by the `Server` submit methods (friendly
+/// errors before anything is queued) and by the worker threads
+/// (defense in depth: a request pushed onto a queue directly must not
+/// panic a shard). Returns the rejection reason for a bad request.
+pub(crate) fn validate_request(
+    model: &ServeModel,
+    kind: &super::scheduler::RequestKind,
+) -> Result<(), String> {
+    use super::scheduler::RequestKind;
+    let vocab = model.stack.embed.vocab;
+    match kind {
+        RequestKind::Step { token } => {
+            if *token >= vocab {
+                return Err(format!("token id {token} out of range for vocab {vocab}"));
+            }
+        }
+        RequestKind::Sequence { tokens } => {
+            if tokens.is_empty() {
+                return Err("empty sequence".to_string());
+            }
+            if let Some(&t) = tokens.iter().find(|&&t| t >= vocab) {
+                return Err(format!("token id {t} out of range for vocab {vocab}"));
+            }
+        }
+        RequestKind::Finalize => {
+            if model.task != TaskKind::Nli {
+                return Err(format!(
+                    "finalize: task {} has no sequence-level classification head",
+                    model.task.name()
+                ));
+            }
+        }
+        RequestKind::Decode(p) => {
+            if model.decoder.is_none() {
+                return Err(format!(
+                    "decode: task {} has no encoder/decoder pair",
+                    model.task.name()
+                ));
+            }
+            if p.max_len == 0 || p.max_len > MAX_DECODE_LEN {
+                return Err(format!(
+                    "decode max_len {} out of range 1..={MAX_DECODE_LEN}",
+                    p.max_len
+                ));
+            }
+            if p.beam_width == 0 || p.beam_width > MAX_BEAM_WIDTH {
+                return Err(format!(
+                    "beam width {} out of range 1..={MAX_BEAM_WIDTH}",
+                    p.beam_width
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Index of the largest value (first on ties — deterministic).
+pub(crate) fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// `(max, ln Σ exp(v - max))` of a logit row — the two shared terms of
+/// a numerically-stable log-softmax.
+pub(crate) fn log_softmax_terms(logits: &[f32]) -> (f32, f32) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in logits {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut z = 0f32;
+    for &v in logits {
+        z += (v - m).exp();
+    }
+    (m, z.ln())
+}
+
+/// `log P(tok)` under a softmax over `logits` — the score unit of the
+/// decode loop. One shared arithmetic (`logits[tok] - max - lnZ`, in
+/// this operation order) so the serving loop, the beam expansion, and
+/// the offline reference accumulate bit-identical scores.
+pub fn token_log_prob(logits: &[f32], tok: usize) -> f32 {
+    let (m, lnz) = log_softmax_terms(logits);
+    logits[tok] - m - lnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::synthetic_stack;
+
+    #[test]
+    fn raw_stack_loads_as_lm_and_rejects_bidirectional() {
+        let stack = Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3));
+        let m = ServeModel::lm(stack).unwrap();
+        assert_eq!(m.task, TaskKind::Lm);
+        assert_eq!(m.input_vocab(), 16);
+        assert_eq!(m.n_out(), 16);
+
+        let mut bidi = synthetic_stack(16, 4, 6, 1, 16, 3);
+        let extra = synthetic_stack(16, 6, 6, 1, 16, 4).layers.remove(0).fwd;
+        bidi.layers[0].bwd = Some(extra);
+        let err = ServeModel::lm(Arc::new(bidi)).err().expect("bidirectional must be refused");
+        assert!(err.to_string().contains("unidirectional"), "got: {err}");
+    }
+
+    #[test]
+    fn mt_pair_validates_hidden_bridge_and_head_width() {
+        let enc = Arc::new(synthetic_stack(20, 4, 8, 1, 1, 5));
+        let dec = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 6));
+        let m = ServeModel::from_parts(TaskKind::Mt, enc.clone(), Some(dec), None).unwrap();
+        assert_eq!(m.n_out(), 24, "mt replies carry decoder-head logits");
+
+        // mismatched hidden sizes break the state bridge
+        let dec_bad = Arc::new(synthetic_stack(24, 4, 10, 1, 24, 7));
+        let err = ServeModel::from_parts(TaskKind::Mt, enc.clone(), Some(dec_bad), None)
+            .err()
+            .expect("mismatched hidden sizes must be refused");
+        assert!(err.to_string().contains("hidden"), "got: {err}");
+
+        // single-stack task with a decoder is a wiring bug
+        let dec2 = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 8));
+        assert!(ServeModel::from_parts(TaskKind::Lm, enc, Some(dec2), None).is_err());
+        // mt without a decoder cannot decode
+        let solo = Arc::new(synthetic_stack(20, 4, 8, 1, 1, 9));
+        assert!(ServeModel::from_parts(TaskKind::Mt, solo, None, None).is_err());
+    }
+
+    #[test]
+    fn head_width_checks_use_task_cfg() {
+        let mut cfg = TaskConfig::preset(TaskKind::Pos);
+        cfg.vocab = 60;
+        cfg.n_classes = 6;
+        // head width 5 != 6 classes must be rejected
+        let stack = Arc::new(synthetic_stack(60, 8, 10, 1, 5, 2));
+        let err = ServeModel::from_parts(TaskKind::Pos, stack, None, Some(cfg.clone()))
+            .err()
+            .expect("head/class width mismatch must be refused");
+        assert!(err.to_string().contains("classes"), "got: {err}");
+        let ok = Arc::new(synthetic_stack(60, 8, 10, 1, 6, 2));
+        assert!(ServeModel::from_parts(TaskKind::Pos, ok, None, Some(cfg)).is_ok());
+    }
+
+    #[test]
+    fn validate_request_rejects_per_task() {
+        use super::super::scheduler::RequestKind;
+        let stack = Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3));
+        let lm = ServeModel::lm(stack).unwrap();
+        assert!(validate_request(&lm, &RequestKind::Step { token: 15 }).is_ok());
+        assert!(validate_request(&lm, &RequestKind::Step { token: 16 }).is_err());
+        assert!(validate_request(&lm, &RequestKind::Sequence { tokens: vec![] }).is_err());
+        assert!(validate_request(&lm, &RequestKind::Sequence { tokens: vec![1, 99] }).is_err());
+        assert!(
+            validate_request(&lm, &RequestKind::Finalize).is_err(),
+            "lm has no classification head"
+        );
+        assert!(
+            validate_request(&lm, &RequestKind::Decode(DecodeParams::default())).is_err(),
+            "lm has no decoder"
+        );
+
+        let enc = Arc::new(synthetic_stack(20, 4, 8, 1, 1, 5));
+        let dec = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 6));
+        let mt = ServeModel::from_parts(TaskKind::Mt, enc, Some(dec), None).unwrap();
+        assert!(validate_request(&mt, &RequestKind::Decode(DecodeParams::default())).is_ok());
+        let too_long = DecodeParams { max_len: MAX_DECODE_LEN + 1, beam_width: 1 };
+        assert!(validate_request(&mt, &RequestKind::Decode(too_long)).is_err());
+        let too_wide = DecodeParams { max_len: 4, beam_width: MAX_BEAM_WIDTH + 1 };
+        assert!(validate_request(&mt, &RequestKind::Decode(too_wide)).is_err());
+    }
+
+    #[test]
+    fn token_log_prob_is_a_log_probability() {
+        let lg = [0.5f32, -1.0, 2.0, 0.0];
+        let mut total = 0f64;
+        for t in 0..lg.len() {
+            total += (token_log_prob(&lg, t) as f64).exp();
+        }
+        assert!((total - 1.0).abs() < 1e-6, "probabilities sum to {total}");
+        assert_eq!(argmax(&lg), 2);
+        assert!(token_log_prob(&lg, 2) > token_log_prob(&lg, 0));
+    }
+}

@@ -1,5 +1,5 @@
 //! Dynamic micro-batching scheduler: one bounded-wait request queue
-//! per shard.
+//! per shard, now carrying **task-generic** requests.
 //!
 //! Batch formation rules (the paper-adjacent deployments — FINN-L,
 //! fixed-point RNN serving — all batch across streams to amortize
@@ -10,58 +10,148 @@
 //!   the first waiting request is never delayed by more than the
 //!   window;
 //! * at most **one request per session** per batch (a session's second
-//!   in-flight token must see the state produced by its first), and
+//!   in-flight request must see the state produced by its first), and
 //!   requests of one session keep FIFO order across batches;
 //! * session-close commands order correctly against that session's
-//!   still-queued tokens (a close never jumps ahead of them).
+//!   still-queued requests (a close never jumps ahead of them).
+//!
+//! Per-task batching happens **inside** a micro-batch: the worker
+//! groups its requests by kind — single-token [`RequestKind::Step`]s
+//! share one `step_batch`, [`RequestKind::Sequence`]s run in ragged
+//! lockstep, greedy [`RequestKind::Decode`]s share the decode loop's
+//! lanes, and beam decodes batch their own beams — so the queue itself
+//! stays kind-agnostic and the ordering invariants above are the only
+//! scheduling contract.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::model::DecodeParams;
 use super::session::SessionId;
 
-/// One token of one session, awaiting scheduling.
+/// What a request asks the engine to do — the per-task shapes of the
+/// serving API (see [`super::model::ServeModel`] for the task table).
+pub enum RequestKind {
+    /// advance the session's stream by one token and return that
+    /// step's head output (lm next-token logits, pos tag scores; for
+    /// mt sessions this feeds the encoder)
+    Step { token: usize },
+    /// submit a whole (sub)sequence at once: prefill (lm/nli),
+    /// whole-sentence tagging (pos), source upload (mt encoder)
+    Sequence { tokens: Vec<usize> },
+    /// classify the sequence submitted so far from its final hidden
+    /// state (nli's submit-sequence-then-finalize protocol)
+    Finalize,
+    /// run the encoder→decoder decode loop from the session's current
+    /// encoder state (mt); does not disturb that state
+    Decode(DecodeParams),
+}
+
+impl RequestKind {
+    /// Recurrent-state steps this request costs the engine — the unit
+    /// of the throughput counters (a `Finalize` reads cached logits
+    /// and costs none; a beam decode steps every beam lane once per
+    /// emitted token).
+    pub fn work(&self) -> u64 {
+        match self {
+            RequestKind::Step { .. } => 1,
+            RequestKind::Sequence { tokens } => tokens.len() as u64,
+            RequestKind::Finalize => 0,
+            RequestKind::Decode(p) => (p.max_len * p.beam_width.max(1)) as u64,
+        }
+    }
+}
+
+/// One request of one session, awaiting scheduling.
 pub struct Request {
     pub session: SessionId,
-    pub token: usize,
+    pub kind: RequestKind,
     /// when the request entered the queue (service-latency clock)
     pub enqueued: Instant,
     pub reply_to: mpsc::Sender<Reply>,
 }
 
 impl Request {
+    /// Single-token step — the streaming hot path's constructor.
     pub fn new(session: SessionId, token: usize, reply_to: mpsc::Sender<Reply>) -> Request {
-        Request { session, token, enqueued: Instant::now(), reply_to }
+        Request::with_kind(session, RequestKind::Step { token }, reply_to)
+    }
+
+    pub fn with_kind(
+        session: SessionId,
+        kind: RequestKind,
+        reply_to: mpsc::Sender<Reply>,
+    ) -> Request {
+        Request { session, kind, enqueued: Instant::now(), reply_to }
     }
 }
 
-/// The server's answer for one token.
+/// The per-task payload of a [`Reply`]. Every numeric field is
+/// bit-identical to the unbatched sequential engine
+/// ([`crate::lstm::QLstmStack::forward_from`]) on the same inputs —
+/// batching is a throughput lever, never an accuracy one.
+pub enum Payload {
+    /// one streamed step's full head output; `top` is its argmax (the
+    /// greedy next token / most likely tag), precomputed so
+    /// load-generating clients don't rescan the vector
+    Step { logits: Vec<f32>, top: usize },
+    /// sequence accepted; the **last** step's head output (lm prefill:
+    /// the next-token distribution after the whole prefix)
+    Prefilled { consumed: usize, logits: Vec<f32>, top: usize },
+    /// per-step head outputs for the whole submitted sequence — pos
+    /// replies tag scores for every position (posteriors are a softmax
+    /// away; raw logits keep the bit-exactness contract checkable)
+    Steps { logits: Vec<Vec<f32>> },
+    /// source consumed into the session's encoder state (mt)
+    Encoded { consumed: usize },
+    /// sequence-level classification from the final hidden state (nli
+    /// finalize): 3-way logits + their argmax label
+    Class { logits: Vec<f32>, label: usize },
+    /// decode-loop result (mt): emitted target tokens and the total
+    /// log-probability of that hypothesis
+    Decoded { tokens: Vec<usize>, score: f32 },
+    /// rejected without touching any model state
+    Rejected { reason: String },
+}
+
+/// The server's answer to one request.
 pub struct Reply {
     pub session: SessionId,
-    /// full logits for this step (bit-identical to the unbatched
-    /// path). **Empty** means the request was rejected without being
-    /// processed (out-of-vocabulary token that bypassed
-    /// `Server::submit`'s validation).
-    pub logits: Vec<f32>,
-    /// argmax of `logits` — the greedy next token, precomputed so
-    /// load-generating clients don't rescan the vector
-    pub top_token: usize,
+    pub payload: Payload,
     /// enqueue → reply-ready service latency
     pub latency: Duration,
 }
 
 impl Reply {
-    /// True when the request was rejected without being processed (see
-    /// [`Reply::logits`]); `top_token` is meaningless in that case.
+    /// True when the request was rejected without being processed.
     pub fn is_rejected(&self) -> bool {
-        self.logits.is_empty()
+        matches!(self.payload, Payload::Rejected { .. })
+    }
+
+    /// The single logit row of a `Step`/`Prefilled`/`Class` reply.
+    pub fn logits(&self) -> Option<&[f32]> {
+        match &self.payload {
+            Payload::Step { logits, .. }
+            | Payload::Prefilled { logits, .. }
+            | Payload::Class { logits, .. } => Some(logits),
+            _ => None,
+        }
+    }
+
+    /// Argmax of [`Self::logits`] (greedy token / tag / class label).
+    pub fn top_token(&self) -> Option<usize> {
+        match &self.payload {
+            Payload::Step { top, .. } | Payload::Prefilled { top, .. } => Some(*top),
+            Payload::Class { label, .. } => Some(*label),
+            _ => None,
+        }
     }
 }
 
 enum Item {
-    Step(Request),
+    Req(Request),
     Close(SessionId),
 }
 
@@ -91,16 +181,17 @@ impl RequestQueue {
         }
     }
 
-    /// Enqueue a token request (dropped silently after shutdown).
+    /// Enqueue a request (dropped silently after shutdown).
     pub fn push(&self, r: Request) {
         let mut g = self.inner.lock().unwrap();
         if !g.shutdown {
-            g.q.push_back(Item::Step(r));
+            g.q.push_back(Item::Req(r));
             self.cv.notify_one();
         }
     }
 
-    /// Enqueue a session close (ordered against that session's tokens).
+    /// Enqueue a session close (ordered against that session's
+    /// still-queued requests).
     pub fn push_close(&self, session: SessionId) {
         let mut g = self.inner.lock().unwrap();
         if !g.shutdown {
@@ -147,15 +238,16 @@ impl RequestQueue {
         }
 
         let deadline = Instant::now() + window;
-        // items blocked this call (dup-session steps, closes behind
-        // their session's tokens) — drained to here and pushed back to
-        // the queue front afterwards, preserving FIFO. O(1) per item:
-        // no mid-queue removal, so batch formation stays linear in the
-        // items examined even with a deep backlog. Empty in the common
-        // case, so no allocation on the happy path. The scan budget
-        // caps how far past blocked items we look for co-batchable
-        // sessions, so one session pipelining thousands of tokens
-        // can't make every batch shuffle its whole backlog.
+        // items blocked this call (dup-session requests, closes behind
+        // their session's requests) — drained to here and pushed back
+        // to the queue front afterwards, preserving FIFO. O(1) per
+        // item: no mid-queue removal, so batch formation stays linear
+        // in the items examined even with a deep backlog. Empty in the
+        // common case, so no allocation on the happy path. The scan
+        // budget caps how far past blocked items we look for
+        // co-batchable sessions, so one session pipelining thousands
+        // of requests can't make every batch shuffle its whole
+        // backlog.
         let scan_budget = max_batch.saturating_mul(8);
         let mut deferred: VecDeque<Item> = VecDeque::new();
         loop {
@@ -163,20 +255,20 @@ impl RequestQueue {
             while batch.len() < max_batch && deferred.len() < scan_budget {
                 let Some(item) = g.q.pop_front() else { break };
                 match item {
-                    Item::Step(r) => {
+                    Item::Req(r) => {
                         // one request per session per batch
                         if batch.iter().any(|b| b.session == r.session) {
-                            deferred.push_back(Item::Step(r));
+                            deferred.push_back(Item::Req(r));
                         } else {
                             batch.push(r);
                         }
                     }
                     Item::Close(s) => {
                         // a close may not overtake queued/batched
-                        // tokens of its session
+                        // requests of its session
                         let blocked = batch.iter().any(|b| b.session == s)
                             || deferred.iter().any(
-                                |it| matches!(it, Item::Step(r) if r.session == s),
+                                |it| matches!(it, Item::Req(r) if r.session == s),
                             );
                         if blocked {
                             deferred.push_back(Item::Close(s));
@@ -219,6 +311,13 @@ mod tests {
         Request::new(session, token, tx.clone())
     }
 
+    fn token_of(r: &Request) -> usize {
+        match r.kind {
+            RequestKind::Step { token } => token,
+            _ => panic!("expected a step request"),
+        }
+    }
+
     #[test]
     fn batch_respects_max_and_session_dedupe() {
         let q = RequestQueue::new();
@@ -229,11 +328,30 @@ mod tests {
         }
         let (mut batch, mut closes) = (Vec::new(), Vec::new());
         assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
-        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, r.token)).collect();
+        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, token_of(r))).collect();
         assert_eq!(got, vec![(1, 10), (2, 20), (3, 30)], "dup session deferred, FIFO kept");
         assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
-        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, r.token)).collect();
+        let got: Vec<(u64, usize)> = batch.iter().map(|r| (r.session, token_of(r))).collect();
         assert_eq!(got, vec![(1, 11)], "deferred token arrives next, in order");
+    }
+
+    #[test]
+    fn mixed_kinds_share_a_batch_but_not_a_session() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(Request::with_kind(7, RequestKind::Sequence { tokens: vec![1, 2, 3] }, tx.clone()));
+        q.push(Request::with_kind(7, RequestKind::Finalize, tx.clone()));
+        q.push(Request::with_kind(8, RequestKind::Decode(DecodeParams::default()), tx.clone()));
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        // the finalize of session 7 must wait for its sequence; the
+        // decode of session 8 co-batches freely
+        assert_eq!(batch.len(), 2);
+        assert!(matches!(batch[0].kind, RequestKind::Sequence { .. }));
+        assert!(matches!(batch[1].kind, RequestKind::Decode(_)));
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 1);
+        assert!(matches!(batch[0].kind, RequestKind::Finalize), "finalize kept FIFO order");
     }
 
     #[test]
@@ -282,5 +400,15 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].session, 1);
         assert!(!q.next_batch(8, Duration::from_secs(5), &mut batch, &mut closes));
+    }
+
+    #[test]
+    fn work_accounting_per_kind() {
+        assert_eq!(RequestKind::Step { token: 3 }.work(), 1);
+        assert_eq!(RequestKind::Sequence { tokens: vec![1, 2, 3] }.work(), 3);
+        assert_eq!(RequestKind::Finalize.work(), 0);
+        // a beam decode steps beam_width lanes per emitted token
+        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 2 }).work(), 18);
+        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 1 }).work(), 9);
     }
 }

@@ -1,6 +1,15 @@
 //! Per-shard session store: the server-side home of each client's
-//! recurrent `(h, c)` state, so clients stream tokens incrementally
-//! instead of resending (and the server recomputing) whole prefixes.
+//! recurrent state, so clients stream tokens incrementally instead of
+//! resending (and the server recomputing) whole prefixes.
+//!
+//! What the state *means* is per task: for lm/pos/nli it is the model
+//! stack's `(h, c)` pair per layer; for mt it is the **encoder
+//! context** — the encoder state accumulated from `Step`/`Sequence`
+//! submissions, which each `Decode` request bridges (by copy) into a
+//! fresh decoder state. For nli (only — other tasks never read it,
+//! so their hot path skips the copy) `last_logits` caches the most
+//! recent head output so `Finalize` can classify without
+//! recomputation.
 //!
 //! A store is owned by exactly one worker thread — no interior
 //! locking; cross-shard isolation comes from the `session_id % workers`
@@ -16,7 +25,12 @@ pub type SessionId = u64;
 
 /// One client's server-side state.
 pub struct Session {
+    /// primary-stack recurrent state (encoder state for mt)
     pub state: StreamState,
+    /// the most recent head output of the primary stack — what
+    /// `Finalize` classifies. Populated only for tasks whose protocol
+    /// reads it back (nli); empty until the first processed token
+    pub last_logits: Vec<f32>,
     /// tokens processed for this session (monotonic)
     pub tokens: u64,
 }
@@ -34,16 +48,22 @@ impl SessionStore {
 
     /// Fetch a session, creating zeroed state on first use.
     pub fn open(&mut self, id: SessionId, stack: &QLstmStack) -> &mut Session {
-        self.sessions
-            .entry(id)
-            .or_insert_with(|| Session { state: stack.new_stream_state(), tokens: 0 })
+        self.sessions.entry(id).or_insert_with(|| Session {
+            state: stack.new_stream_state(),
+            last_logits: Vec::new(),
+            tokens: 0,
+        })
     }
 
+    /// Fetch an existing session without creating one (`Finalize` must
+    /// not conjure state for a session that never streamed).
     pub fn get_mut(&mut self, id: SessionId) -> Option<&mut Session> {
         self.sessions.get_mut(&id)
     }
 
-    /// Drop a session's state. Returns whether it existed.
+    /// Drop a session's state. Returns whether it existed — closing a
+    /// never-created session is a cheap no-op and never inserts a map
+    /// entry.
     pub fn close(&mut self, id: SessionId) -> bool {
         self.sessions.remove(&id).is_some()
     }
@@ -69,6 +89,7 @@ mod tests {
         {
             let s = store.open(42, &stack);
             assert_eq!(s.tokens, 0);
+            assert!(s.last_logits.is_empty(), "no head output before the first token");
             assert_eq!(s.state.h.len(), 2, "one (h,c) pair per layer");
             assert_eq!(s.state.h[0].len(), 6);
             s.tokens = 7;
@@ -78,5 +99,18 @@ mod tests {
         assert!(store.close(42));
         assert!(!store.close(42));
         assert!(store.is_empty());
+    }
+
+    #[test]
+    fn close_of_never_created_session_is_a_noop_and_leaks_nothing() {
+        let stack = synthetic_stack(16, 4, 6, 1, 16, 2);
+        let mut store = SessionStore::new();
+        store.open(1, &stack);
+        // closing a session that never existed must not panic and must
+        // not insert a map entry as a side effect
+        assert!(!store.close(999));
+        assert_eq!(store.len(), 1, "unknown close neither removed nor created entries");
+        assert!(store.get_mut(999).is_none(), "get_mut must not create either");
+        assert_eq!(store.len(), 1);
     }
 }

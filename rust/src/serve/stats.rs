@@ -1,7 +1,14 @@
-//! Per-shard serving statistics: token/batch counters on atomics (read
-//! by any thread without stopping the worker) and raw service-latency
-//! samples summarized through [`benchlib::Percentiles`] — the same
-//! reporting machinery the paper benches use.
+//! Per-shard serving statistics: request/token counters and a live
+//! session gauge on atomics (read by any thread without stopping the
+//! worker) and raw service-latency samples summarized through
+//! [`benchlib::Percentiles`] — the same reporting machinery the paper
+//! benches use.
+//!
+//! With task-generic requests, *requests* and *work* diverge: a
+//! `Sequence` is one request but many recurrent steps, a `Decode` is
+//! one request but `max_len` decoder steps. `tokens` counts the work
+//! (the throughput number), `requests` counts scheduling units (the
+//! occupancy number).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -41,15 +48,22 @@ impl LatencyRing {
 #[derive(Default)]
 pub struct ShardStats {
     tokens: AtomicU64,
+    requests: AtomicU64,
     batches: AtomicU64,
+    sessions: AtomicU64,
     latencies: Mutex<LatencyRing>,
 }
 
 /// Point-in-time summary of one shard (or of all shards, merged).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StatsSnapshot {
+    /// recurrent-state steps processed (streamed + prefilled + decoded)
     pub tokens: u64,
+    /// requests answered (the scheduling unit)
+    pub requests: u64,
     pub batches: u64,
+    /// live sessions currently holding server-side state
+    pub sessions: u64,
     /// mean requests per scheduled micro-batch — how full batches ran
     pub mean_occupancy: f64,
     /// enqueue → reply-ready service latency
@@ -61,9 +75,11 @@ impl ShardStats {
         ShardStats::default()
     }
 
-    /// Record one scheduled micro-batch and its per-request latencies.
-    pub fn record_batch(&self, batch: usize, lats: &[Duration]) {
-        self.tokens.fetch_add(batch as u64, Ordering::Relaxed);
+    /// Record one scheduled micro-batch: its request count, the
+    /// recurrent-step work it carried, and per-request latencies.
+    pub fn record_batch(&self, requests: usize, work_tokens: u64, lats: &[Duration]) {
+        self.tokens.fetch_add(work_tokens, Ordering::Relaxed);
+        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         let mut ring = self.latencies.lock().unwrap();
         for &l in lats {
@@ -71,14 +87,23 @@ impl ShardStats {
         }
     }
 
+    /// Publish the shard's live session count (worker-side, after each
+    /// batch's opens/closes are applied).
+    pub fn set_sessions(&self, n: usize) {
+        self.sessions.store(n as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let mut samples = self.latencies.lock().unwrap().buf.clone();
         let tokens = self.tokens.load(Ordering::Relaxed);
+        let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         StatsSnapshot {
             tokens,
+            requests,
             batches,
-            mean_occupancy: if batches == 0 { 0.0 } else { tokens as f64 / batches as f64 },
+            sessions: self.sessions.load(Ordering::Relaxed),
+            mean_occupancy: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
             latency: Percentiles::of(&mut samples),
         }
     }
@@ -90,16 +115,22 @@ impl ShardStats {
 pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
     let mut samples: Vec<Duration> = Vec::new();
     let mut tokens = 0u64;
+    let mut requests = 0u64;
     let mut batches = 0u64;
+    let mut sessions = 0u64;
     for s in shards {
         tokens += s.tokens.load(Ordering::Relaxed);
+        requests += s.requests.load(Ordering::Relaxed);
         batches += s.batches.load(Ordering::Relaxed);
+        sessions += s.sessions.load(Ordering::Relaxed);
         samples.extend_from_slice(&s.latencies.lock().unwrap().buf);
     }
     StatsSnapshot {
         tokens,
+        requests,
         batches,
-        mean_occupancy: if batches == 0 { 0.0 } else { tokens as f64 / batches as f64 },
+        sessions,
+        mean_occupancy: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
         latency: Percentiles::of(&mut samples),
     }
 }
@@ -108,8 +139,9 @@ impl std::fmt::Display for StatsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} tokens in {} batches (occupancy {:.2}); latency {}",
-            self.tokens, self.batches, self.mean_occupancy, self.latency
+            "{} tokens / {} requests in {} batches (occupancy {:.2}, {} live sessions); latency {}",
+            self.tokens, self.requests, self.batches, self.mean_occupancy, self.sessions,
+            self.latency
         )
     }
 }
@@ -122,18 +154,34 @@ mod tests {
     fn occupancy_and_merge() {
         let a = Arc::new(ShardStats::new());
         let b = Arc::new(ShardStats::new());
-        a.record_batch(4, &[Duration::from_micros(10); 4]);
-        a.record_batch(2, &[Duration::from_micros(30); 2]);
-        b.record_batch(6, &[Duration::from_micros(20); 6]);
+        a.record_batch(4, 4, &[Duration::from_micros(10); 4]);
+        a.record_batch(2, 2, &[Duration::from_micros(30); 2]);
+        b.record_batch(6, 6, &[Duration::from_micros(20); 6]);
+        a.set_sessions(3);
+        b.set_sessions(2);
         let sa = a.snapshot();
         assert_eq!(sa.tokens, 6);
+        assert_eq!(sa.requests, 6);
         assert_eq!(sa.batches, 2);
+        assert_eq!(sa.sessions, 3);
         assert!((sa.mean_occupancy - 3.0).abs() < 1e-9);
         let m = merged(&[a, b]);
         assert_eq!(m.tokens, 12);
         assert_eq!(m.batches, 3);
+        assert_eq!(m.sessions, 5);
         assert_eq!(m.latency.n, 12);
         assert_eq!(m.latency.max, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn work_and_requests_diverge_for_heavy_requests() {
+        // one decode request carrying 32 decoder steps
+        let s = ShardStats::new();
+        s.record_batch(1, 32, &[Duration::from_micros(500)]);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.tokens, 32, "throughput counts the decoded tokens");
+        assert!((snap.mean_occupancy - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,19 +1,42 @@
 //! The worker pool: one thread per shard, each owning its session
-//! store, its flat [`StackScratch`], and its request queue. The hot
-//! loop allocates only the per-reply logit vectors; states move
-//! between sessions and batch slots by `memcpy` (O(H) per layer,
-//! against the O(H²) step itself).
+//! store, its flat [`StackScratch`]es (one for the primary stack, one
+//! for the mt decoder), and its request queue. A micro-batch is
+//! processed in per-kind groups, every group on the same batched
+//! kernels:
+//!
+//! * **steps** — all single-token requests share one `step_batch`;
+//! * **sequences** — prefills/whole sentences run in ragged lockstep
+//!   (the idle lanes drop out as their sequences end);
+//! * **finalizes** — answered from the session's cached head output,
+//!   no model work;
+//! * **decodes** — greedy decodes share the decode loop's lanes, each
+//!   lane feeding its own argmax back; beam decodes batch their beams
+//!   as lanes of one request.
+//!
+//! Grouping is a scheduling choice, not a numeric one: `step_batch` is
+//! bit-identical for every batch composition, so replies never depend
+//! on which group (or which micro-batch) a token rode in.
 
+use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::lstm::QLstmStack;
+use crate::data::translation::BOS;
+use crate::lstm::{QLstmStack, StackScratch, StreamState};
+use crate::tasks::TaskKind;
 
-use super::scheduler::{Reply, Request, RequestQueue};
+use super::model::{
+    argmax, log_softmax_terms, token_log_prob, validate_request, DecodeParams, ServeModel,
+    MAX_BEAM_WIDTH,
+};
+use super::scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 use super::session::{SessionId, SessionStore};
 use super::stats::ShardStats;
 use super::ServeConfig;
+
+/// A reply ready to send, paired with its client's channel.
+type Outgoing = (mpsc::Sender<Reply>, Reply);
 
 /// Handles to the running shards.
 pub struct WorkerPool {
@@ -23,8 +46,8 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `cfg.workers` shard threads over a shared stack.
-    pub fn spawn(stack: Arc<QLstmStack>, cfg: &ServeConfig) -> WorkerPool {
+    /// Spawn `cfg.workers` shard threads over a shared model.
+    pub fn spawn(model: Arc<ServeModel>, cfg: &ServeConfig) -> WorkerPool {
         let mut queues = Vec::with_capacity(cfg.workers);
         let mut stats = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -33,13 +56,13 @@ impl WorkerPool {
             let stat = Arc::new(ShardStats::new());
             queues.push(queue.clone());
             stats.push(stat.clone());
-            let stack = stack.clone();
+            let model = model.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("serve-shard-{shard}"))
-                    .spawn(move || run_worker(&stack, &queue, &stat, max_batch, window))
+                    .spawn(move || run_worker(&model, &queue, &stat, max_batch, window))
                     .expect("spawn shard thread"),
             );
         }
@@ -57,103 +80,449 @@ impl WorkerPool {
     }
 }
 
-fn argmax(v: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in v.iter().enumerate() {
-        if x > v[best] {
-            best = i;
-        }
-    }
-    best
-}
-
 fn run_worker(
-    stack: &QLstmStack,
+    model: &ServeModel,
     queue: &RequestQueue,
     stats: &ShardStats,
     max_batch: usize,
     window: Duration,
 ) {
     let mut store = SessionStore::new();
-    let mut scratch = stack.scratch(max_batch);
-    let n_out = stack.n_out();
+    let mut scratch = model.stack.scratch(max_batch);
+    // sized for the bigger of the micro-batch lanes and a full beam —
+    // a beam decode batches its beams as lanes of this scratch, and
+    // `load_state` slices into it before `step_batch` could grow it
+    let mut dec_scratch =
+        model.decoder.as_ref().map(|d| d.scratch(max_batch.max(MAX_BEAM_WIDTH)));
 
     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
     let mut closes: Vec<SessionId> = Vec::new();
-    let mut ids: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut steps: Vec<Request> = Vec::with_capacity(max_batch);
+    let mut seqs: Vec<Request> = Vec::new();
+    let mut finals: Vec<Request> = Vec::new();
+    let mut decodes: Vec<Request> = Vec::new();
     let mut lats: Vec<Duration> = Vec::with_capacity(max_batch);
-    let mut replies: Vec<(Request, Reply)> = Vec::with_capacity(max_batch);
+    let mut outbox: Vec<Outgoing> = Vec::with_capacity(max_batch);
 
     while queue.next_batch(max_batch, window, &mut batch, &mut closes) {
         // closes are ordered by the scheduler to never precede queued
-        // tokens of their session, so dropping state here is safe
+        // requests of their session, so dropping state here is safe
         for s in closes.drain(..) {
             store.close(s);
         }
-        // defense in depth: Server::submit already rejects
-        // out-of-vocabulary tokens, but a request pushed onto the queue
-        // directly must not panic the shard. Answer it with an explicit
-        // empty-logits rejection (the client may hold its own Sender
-        // clone, so merely dropping the request would leave it blocked
-        // on recv forever).
-        batch.retain(|r| {
-            if r.token < stack.embed.vocab {
-                return true;
+        batch.retain(|r| match validate_request(model, &r.kind) {
+            Ok(()) => true,
+            Err(reason) => {
+                // answer with an explicit rejection — the client may
+                // hold its own Sender clone, so merely dropping the
+                // request would leave it blocked on recv forever
+                let _ = r.reply_to.send(Reply {
+                    session: r.session,
+                    payload: Payload::Rejected { reason },
+                    latency: r.enqueued.elapsed(),
+                });
+                false
             }
-            let _ = r.reply_to.send(Reply {
-                session: r.session,
-                logits: Vec::new(),
-                top_token: 0,
-                latency: r.enqueued.elapsed(),
-            });
-            false
         });
         if batch.is_empty() {
+            stats.set_sessions(store.len());
             continue;
         }
 
-        // gather: session states → flat batch slots
-        ids.clear();
-        ids.extend(batch.iter().map(|r| r.token));
-        for (slot, r) in batch.iter().enumerate() {
-            let sess = store.open(r.session, stack);
-            scratch.load_state(slot, &sess.state);
+        let n_requests = batch.len();
+        let mut work = 0u64;
+        for r in batch.drain(..) {
+            work += r.kind.work();
+            match r.kind {
+                RequestKind::Step { .. } => steps.push(r),
+                RequestKind::Sequence { .. } => seqs.push(r),
+                RequestKind::Finalize => finals.push(r),
+                RequestKind::Decode(_) => decodes.push(r),
+            }
         }
-
-        stack.step_batch(&ids, &mut scratch);
-
-        // scatter: batch slots → session states; build replies
         lats.clear();
-        replies.clear();
-        let bsz = batch.len();
-        for (slot, r) in batch.drain(..).enumerate() {
-            let sess = store.get_mut(r.session).expect("opened above");
-            scratch.store_state(slot, &mut sess.state);
-            sess.tokens += 1;
-            let logits = scratch.logits[slot * n_out..(slot + 1) * n_out].to_vec();
-            let top_token = argmax(&logits);
-            let latency = r.enqueued.elapsed();
-            lats.push(latency);
-            let reply = Reply { session: r.session, logits, top_token, latency };
-            replies.push((r, reply));
-        }
+        outbox.clear();
+
+        run_steps(model, &mut store, &mut scratch, &mut steps, &mut lats, &mut outbox);
+        run_sequences(model, &mut store, &mut scratch, &mut seqs, &mut lats, &mut outbox);
+        run_finalizes(&mut store, &mut finals, &mut lats, &mut outbox);
+        run_decodes(model, &mut store, dec_scratch.as_mut(), &mut decodes, &mut lats, &mut outbox);
+
         // record before sending so an observer that saw all replies
         // also sees the matching counters
-        stats.record_batch(bsz, &lats);
-        for (r, reply) in replies.drain(..) {
-            let _ = r.reply_to.send(reply);
+        stats.record_batch(n_requests, work, &lats);
+        stats.set_sessions(store.len());
+        for (to, reply) in outbox.drain(..) {
+            let _ = to.send(reply);
         }
     }
+}
+
+/// All single-token requests of the batch share one `step_batch`.
+fn run_steps(
+    model: &ServeModel,
+    store: &mut SessionStore,
+    scratch: &mut StackScratch,
+    steps: &mut Vec<Request>,
+    lats: &mut Vec<Duration>,
+    outbox: &mut Vec<Outgoing>,
+) {
+    if steps.is_empty() {
+        return;
+    }
+    let stack: &QLstmStack = &model.stack;
+    // only nli's Finalize ever reads the cache — keep the streaming
+    // hot path free of the per-token O(n_out) copy for other tasks
+    let cache_last = model.task == TaskKind::Nli;
+    let n_out = stack.n_out();
+    let ids: Vec<usize> = steps
+        .iter()
+        .map(|r| match &r.kind {
+            RequestKind::Step { token } => *token,
+            _ => unreachable!("steps group holds only Step requests"),
+        })
+        .collect();
+    // gather: session states → flat batch slots
+    for (slot, r) in steps.iter().enumerate() {
+        let sess = store.open(r.session, stack);
+        scratch.load_state(slot, &sess.state);
+    }
+    stack.step_batch(&ids, scratch);
+    // scatter: batch slots → session states; build replies
+    for (slot, r) in steps.drain(..).enumerate() {
+        let sess = store.get_mut(r.session).expect("opened above");
+        scratch.store_state(slot, &mut sess.state);
+        sess.tokens += 1;
+        let logits = scratch.logits[slot * n_out..(slot + 1) * n_out].to_vec();
+        if cache_last {
+            sess.last_logits.clone_from(&logits);
+        }
+        let top = argmax(&logits);
+        let latency = r.enqueued.elapsed();
+        lats.push(latency);
+        outbox.push((
+            r.reply_to,
+            Reply { session: r.session, payload: Payload::Step { logits, top }, latency },
+        ));
+    }
+}
+
+/// Whole-sequence requests run in ragged lockstep: lanes drop out as
+/// their sequences end, exactly like the offline
+/// [`QLstmStack::forward_batch`] — and therefore bit-identical to
+/// streaming the same tokens one `Step` at a time.
+fn run_sequences(
+    model: &ServeModel,
+    store: &mut SessionStore,
+    scratch: &mut StackScratch,
+    seqs: &mut Vec<Request>,
+    lats: &mut Vec<Duration>,
+    outbox: &mut Vec<Outgoing>,
+) {
+    if seqs.is_empty() {
+        return;
+    }
+    let stack: &QLstmStack = &model.stack;
+    let n_out = stack.n_out();
+    let n = seqs.len();
+    // pos replies need every step's tag scores; other tasks only the last
+    let collect_steps = model.task == TaskKind::Pos;
+    // only nli's Finalize ever reads the session's cached head output
+    let cache_last = model.task == TaskKind::Nli;
+    // local copies of the session states, written back after lockstep
+    let mut states: Vec<StreamState> = Vec::with_capacity(n);
+    for r in seqs.iter() {
+        states.push(store.open(r.session, stack).state.clone());
+    }
+    let mut per_step: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let mut last: Vec<Vec<f32>> = vec![Vec::new(); n];
+    {
+        let toks: Vec<&[usize]> = seqs
+            .iter()
+            .map(|r| match &r.kind {
+                RequestKind::Sequence { tokens } => tokens.as_slice(),
+                _ => unreachable!("sequence group holds only Sequence requests"),
+            })
+            .collect();
+        let t_max = toks.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut ids: Vec<usize> = Vec::with_capacity(n);
+        let mut active: Vec<usize> = Vec::with_capacity(n);
+        for t in 0..t_max {
+            ids.clear();
+            active.clear();
+            for (i, s) in toks.iter().enumerate() {
+                if t < s.len() {
+                    active.push(i);
+                    ids.push(s[t]);
+                }
+            }
+            for (slot, &i) in active.iter().enumerate() {
+                scratch.load_state(slot, &states[i]);
+            }
+            stack.step_batch(&ids, scratch);
+            for (slot, &i) in active.iter().enumerate() {
+                scratch.store_state(slot, &mut states[i]);
+                let lg = scratch.logits[slot * n_out..(slot + 1) * n_out].to_vec();
+                if collect_steps {
+                    per_step[i].push(lg.clone());
+                }
+                last[i] = lg;
+            }
+        }
+    }
+    for (i, r) in seqs.drain(..).enumerate() {
+        let consumed = match &r.kind {
+            RequestKind::Sequence { tokens } => tokens.len(),
+            _ => unreachable!("sequence group holds only Sequence requests"),
+        };
+        let sess = store.get_mut(r.session).expect("opened above");
+        sess.state = std::mem::take(&mut states[i]);
+        sess.tokens += consumed as u64;
+        if cache_last {
+            sess.last_logits.clone_from(&last[i]);
+        }
+        let payload = match model.task {
+            TaskKind::Pos => Payload::Steps { logits: std::mem::take(&mut per_step[i]) },
+            TaskKind::Mt => Payload::Encoded { consumed },
+            _ => {
+                let logits = std::mem::take(&mut last[i]);
+                let top = argmax(&logits);
+                Payload::Prefilled { consumed, logits, top }
+            }
+        };
+        let latency = r.enqueued.elapsed();
+        lats.push(latency);
+        outbox.push((r.reply_to, Reply { session: r.session, payload, latency }));
+    }
+}
+
+/// Finalize answers from the session's cached head output — no model
+/// work, and no session is created for a stream that never existed.
+fn run_finalizes(
+    store: &mut SessionStore,
+    finals: &mut Vec<Request>,
+    lats: &mut Vec<Duration>,
+    outbox: &mut Vec<Outgoing>,
+) {
+    for r in finals.drain(..) {
+        let payload = match store.get_mut(r.session) {
+            Some(sess) if !sess.last_logits.is_empty() => {
+                let logits = sess.last_logits.clone();
+                let label = argmax(&logits);
+                Payload::Class { logits, label }
+            }
+            _ => Payload::Rejected { reason: "finalize before any submitted token".to_string() },
+        };
+        let latency = r.enqueued.elapsed();
+        lats.push(latency);
+        outbox.push((r.reply_to, Reply { session: r.session, payload, latency }));
+    }
+}
+
+/// The mt decode loop. Each request's encoder context is bridged (by
+/// copy — the session state is untouched, so clients can re-decode)
+/// into a decoder state; greedy requests then share lanes of one
+/// lockstep loop while beam requests batch their own beams.
+fn run_decodes(
+    model: &ServeModel,
+    store: &mut SessionStore,
+    dec_scratch: Option<&mut StackScratch>,
+    decodes: &mut Vec<Request>,
+    lats: &mut Vec<Duration>,
+    outbox: &mut Vec<Outgoing>,
+) {
+    if decodes.is_empty() {
+        return;
+    }
+    let (Some(dec), Some(scratch)) = (model.decoder.as_deref(), dec_scratch) else {
+        unreachable!("decode requests are validated against the decoder")
+    };
+    let mut params: Vec<DecodeParams> = Vec::with_capacity(decodes.len());
+    for r in decodes.iter() {
+        match &r.kind {
+            RequestKind::Decode(p) => params.push(*p),
+            _ => unreachable!("decode group holds only Decode requests"),
+        }
+    }
+    let mut results: Vec<Option<(Vec<usize>, f32)>> =
+        (0..decodes.len()).map(|_| None).collect();
+
+    // greedy decodes (beam_width == 1) share the loop's lanes
+    let greedy_idx: Vec<usize> =
+        (0..params.len()).filter(|&i| params[i].beam_width <= 1).collect();
+    if !greedy_idx.is_empty() {
+        let mut states: Vec<StreamState> = greedy_idx
+            .iter()
+            .map(|&i| model.bridge_state(&store.open(decodes[i].session, &model.stack).state))
+            .collect();
+        let max_lens: Vec<usize> = greedy_idx.iter().map(|&i| params[i].max_len).collect();
+        let out = greedy_decode_batch(dec, scratch, &mut states, &max_lens);
+        for (&i, res) in greedy_idx.iter().zip(out) {
+            results[i] = Some(res);
+        }
+    }
+    // beam decodes: each request's beams become the lanes
+    for (i, p) in params.iter().enumerate() {
+        if p.beam_width > 1 {
+            let init =
+                model.bridge_state(&store.open(decodes[i].session, &model.stack).state);
+            results[i] = Some(beam_decode(dec, scratch, init, *p));
+        }
+    }
+    for (i, r) in decodes.drain(..).enumerate() {
+        let (tokens, score) = results[i].take().expect("decoded above");
+        let latency = r.enqueued.elapsed();
+        lats.push(latency);
+        outbox.push((
+            r.reply_to,
+            Reply { session: r.session, payload: Payload::Decoded { tokens, score }, latency },
+        ));
+    }
+}
+
+/// Lockstep greedy decode over `states.len()` lanes: every lane feeds
+/// its own argmax back, and lanes drop out as they reach their
+/// `max_len`. Bit-identical to the single-lane
+/// [`ServeModel::reference_greedy_decode`] — lane composition is a
+/// throughput choice, never a numeric one.
+fn greedy_decode_batch(
+    dec: &QLstmStack,
+    scratch: &mut StackScratch,
+    states: &mut [StreamState],
+    max_lens: &[usize],
+) -> Vec<(Vec<usize>, f32)> {
+    let n = states.len();
+    let dn = dec.n_out();
+    let mut toks: Vec<Vec<usize>> = max_lens.iter().map(|&m| Vec::with_capacity(m)).collect();
+    let mut scores = vec![0f32; n];
+    let mut cur: Vec<usize> = vec![BOS as usize; n];
+    let t_max = max_lens.iter().copied().max().unwrap_or(0);
+    let mut ids: Vec<usize> = Vec::with_capacity(n);
+    let mut active: Vec<usize> = Vec::with_capacity(n);
+    for t in 0..t_max {
+        ids.clear();
+        active.clear();
+        for i in 0..n {
+            if t < max_lens[i] {
+                active.push(i);
+                ids.push(cur[i]);
+            }
+        }
+        if ids.is_empty() {
+            break;
+        }
+        for (slot, &i) in active.iter().enumerate() {
+            scratch.load_state(slot, &states[i]);
+        }
+        dec.step_batch(&ids, scratch);
+        for (slot, &i) in active.iter().enumerate() {
+            scratch.store_state(slot, &mut states[i]);
+            let lg = &scratch.logits[slot * dn..(slot + 1) * dn];
+            let next = argmax(lg);
+            scores[i] += token_log_prob(lg, next);
+            toks[i].push(next);
+            cur[i] = next;
+        }
+    }
+    toks.into_iter().zip(scores).collect()
+}
+
+/// One live hypothesis of a beam search.
+struct Beam {
+    toks: Vec<usize>,
+    score: f32,
+    state: StreamState,
+}
+
+/// Deterministic beam search for one request, beams batched as lanes.
+/// Ties break by (score desc, beam index asc, token asc), so
+/// `beam_width = 1` reproduces the greedy argmax path exactly — same
+/// tokens, and (via the shared [`token_log_prob`] arithmetic) the same
+/// score bits.
+fn beam_decode(
+    dec: &QLstmStack,
+    scratch: &mut StackScratch,
+    init: StreamState,
+    p: DecodeParams,
+) -> (Vec<usize>, f32) {
+    let dn = dec.n_out();
+    let k = p.beam_width.max(1);
+    let mut beams = vec![Beam { toks: Vec::new(), score: 0.0, state: init }];
+    for _ in 0..p.max_len {
+        let ids: Vec<usize> =
+            beams.iter().map(|b| b.toks.last().copied().unwrap_or(BOS as usize)).collect();
+        for (slot, b) in beams.iter().enumerate() {
+            scratch.load_state(slot, &b.state);
+        }
+        dec.step_batch(&ids, scratch);
+        // post-step states, one per live beam (parents may fan out)
+        let stepped: Vec<StreamState> = (0..beams.len())
+            .map(|slot| {
+                let mut st = dec.new_stream_state();
+                scratch.store_state(slot, &mut st);
+                st
+            })
+            .collect();
+        let mut cand: Vec<(f32, usize, usize)> = Vec::with_capacity(beams.len() * dn);
+        for (slot, b) in beams.iter().enumerate() {
+            let lg = &scratch.logits[slot * dn..(slot + 1) * dn];
+            let (m, lnz) = log_softmax_terms(lg);
+            for tok in 0..dn {
+                // identical arithmetic to token_log_prob (same op order)
+                cand.push((b.score + (lg[tok] - m - lnz), slot, tok));
+            }
+        }
+        cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        cand.truncate(k);
+        let next: Vec<Beam> = cand
+            .into_iter()
+            .map(|(score, slot, tok)| {
+                let mut toks = beams[slot].toks.clone();
+                toks.push(tok);
+                Beam { toks, score, state: stepped[slot].clone() }
+            })
+            .collect();
+        beams = next;
+    }
+    let best = beams.into_iter().next().expect("at least one beam");
+    (best.toks, best.score)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lstm::synthetic_stack;
 
     #[test]
-    fn argmax_takes_first_maximum() {
-        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[-5.0]), 0);
-        assert_eq!(argmax(&[0.0, 0.0]), 0);
+    fn beam_width_one_matches_greedy_bitwise() {
+        let enc = Arc::new(synthetic_stack(20, 4, 8, 1, 1, 11));
+        let dec_stack = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 12));
+        let mt =
+            ServeModel::from_parts(TaskKind::Mt, enc, Some(dec_stack.clone()), None).unwrap();
+        let src = [3usize, 7, 1, 15, 2];
+        let max_len = 9;
+        let (want_toks, want_score) = mt.reference_greedy_decode(&src, max_len).unwrap();
+
+        // beam k=1 through the batched machinery
+        let mut enc_state = mt.stack.new_stream_state();
+        mt.stack.forward_from(&src, &mut enc_state);
+        let init = mt.bridge_state(&enc_state);
+        let mut scratch = dec_stack.scratch(4);
+        let (toks, score) = beam_decode(
+            &dec_stack,
+            &mut scratch,
+            init,
+            DecodeParams { max_len, beam_width: 1 },
+        );
+        assert_eq!(toks, want_toks, "k=1 beam must walk the greedy path");
+        assert_eq!(score.to_bits(), want_score.to_bits(), "scores share the same arithmetic");
+
+        // greedy batch with one lane agrees too
+        let mut enc_state2 = mt.stack.new_stream_state();
+        mt.stack.forward_from(&src, &mut enc_state2);
+        let mut states = vec![mt.bridge_state(&enc_state2)];
+        let out = greedy_decode_batch(&dec_stack, &mut scratch, &mut states, &[max_len]);
+        assert_eq!(out[0].0, want_toks);
+        assert_eq!(out[0].1.to_bits(), want_score.to_bits());
     }
 }

@@ -41,20 +41,16 @@ use crate::tensorfile::read_tensors;
 use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
 
 /// Evaluate one checkpoint: rebuild the task from its `meta/task_cfg`
-/// and run the held-out eval set.
+/// (via the parser shared with `serve`) and run the held-out eval set.
 pub fn evaluate_checkpoint(path: &Path) -> Result<(TaskConfig, TaskEval)> {
     let tensors = read_tensors(path)?;
-    let meta_text = {
-        let meta = tensors.iter().find(|t| t.name == "meta/task_cfg").with_context(|| {
-            format!(
-                "{}: no meta/task_cfg tensor — not a task checkpoint \
-                 (write one with `floatsd-lstm train --task ...`)",
-                path.display()
-            )
-        })?;
-        meta.as_text()?
-    };
-    let cfg = TaskConfig::from_meta_json(&meta_text)?;
+    let cfg = super::read_task_cfg(&tensors)?.with_context(|| {
+        format!(
+            "{}: no meta/task_cfg tensor — not a task checkpoint \
+             (write one with `floatsd-lstm train --task ...`)",
+            path.display()
+        )
+    })?;
     let bag = ParamBag::from_tensors(tensors);
     let head = load_task(cfg.clone(), &bag)?;
     Ok((cfg, head.evaluate()))

@@ -51,7 +51,7 @@ impl LmTask {
 
     fn with_core(cfg: TaskConfig, core: SingleStack) -> Self {
         // same data-seed convention as the char-LM trainer
-        let gen = LmGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.seed ^ 0xDA7A);
+        let gen = LmGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.data_seed());
         LmTask { cfg, core, gen, steps_done: 0 }
     }
 }

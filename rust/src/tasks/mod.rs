@@ -185,6 +185,14 @@ impl TaskConfig {
         Json::Obj(m).to_string()
     }
 
+    /// Seed of the task's data generators — every head derives its
+    /// train/eval streams from this one value, so anything rebuilding
+    /// a head's held-out set (the eval harness, the serve parity
+    /// tests) must use it too.
+    pub fn data_seed(&self) -> u64 {
+        self.seed ^ 0xDA7A
+    }
+
     /// Inverse of [`Self::to_meta_json`] (training knobs come from the
     /// task preset).
     pub fn from_meta_json(text: &str) -> Result<TaskConfig> {
@@ -260,6 +268,18 @@ pub fn build_task(cfg: &TaskConfig) -> Result<Box<dyn TaskHead>> {
         TaskKind::Nli => Box::new(nli::NliTask::new(cfg.clone())),
         TaskKind::Mt => Box::new(mt::MtTask::new(cfg.clone())),
     })
+}
+
+/// Extract and parse the `meta/task_cfg` blob from a checkpoint's
+/// tensors, if present — the single parser shared by `floatsd-lstm
+/// eval` and `floatsd-lstm serve`, so both rebuild identical task
+/// topologies from the same file. `Ok(None)` means the file carries no
+/// task metadata (a raw LM checkpoint).
+pub fn read_task_cfg(tensors: &[Tensor]) -> Result<Option<TaskConfig>> {
+    let Some(meta) = tensors.iter().find(|t| t.name == "meta/task_cfg") else {
+        return Ok(None);
+    };
+    Ok(Some(TaskConfig::from_meta_json(&meta.as_text()?)?))
 }
 
 /// Rebuild a head from checkpointed parameters.
@@ -421,17 +441,7 @@ pub(crate) fn argmax(xs: &[f32]) -> usize {
 // checkpoint naming shared by every head
 // ---------------------------------------------------------------------
 
-/// JAX-keystr parameter name, optionally under a sub-tree prefix
-/// (`"enc"`/`"dec"` for the seq2seq pair; `""` for single-stack heads,
-/// which keeps their checkpoints loadable by
-/// [`crate::lstm::model::build_tiny_from_params`] and thus by `serve`).
-pub(crate) fn param_key(prefix: &str, rest: &str) -> String {
-    if prefix.is_empty() {
-        format!("['params']{rest}")
-    } else {
-        format!("['params']['{prefix}']{rest}")
-    }
-}
+pub(crate) use crate::lstm::model::param_key;
 
 /// Serialize one stack's FP16 masters under `prefix` in the JAX layout
 /// (the exact convention of
@@ -660,7 +670,7 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
         steps: args.opt_usize("steps", preset.steps)?.max(1),
         lr: parse_f32("lr", preset.lr)?,
         momentum: parse_f32("momentum", preset.momentum)?,
-        seed: args.opt_usize("seed", preset.seed as usize)? as u64,
+        seed: args.opt_u64("seed", preset.seed)?,
         loss_scale: parse_f32("loss-scale", preset.loss_scale)?,
         clip_norm: match args.opt("clip") {
             None => None,

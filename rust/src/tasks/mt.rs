@@ -78,7 +78,7 @@ impl MtTask {
             cfg.vocab,
             cfg.vocab_tgt,
             cfg.eval_batches,
-            cfg.seed ^ 0xDA7A,
+            cfg.data_seed(),
         );
         MtTask { cfg, enc, dec, gen, steps_done: 0 }
     }

@@ -52,7 +52,7 @@ impl NliTask {
     }
 
     fn with_core(cfg: TaskConfig, core: SingleStack) -> Self {
-        let gen = NliGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.seed ^ 0xDA7A);
+        let gen = NliGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.data_seed());
         NliTask { cfg, core, gen, steps_done: 0 }
     }
 }

@@ -54,7 +54,7 @@ impl PosTask {
             cfg.vocab,
             cfg.n_classes,
             cfg.eval_batches,
-            cfg.seed ^ 0xDA7A,
+            cfg.data_seed(),
         );
         PosTask { cfg, core, gen, steps_done: 0 }
     }

@@ -238,10 +238,11 @@ fn property_random_topologies_batch_equals_sequential() {
 fn server_replies_bit_identical_to_sequential_forward() {
     let vocab = 48;
     let stack = Arc::new(synthetic_stack(vocab, 6, 10, 2, vocab, 2026));
-    let server = Server::start(
+    let server = Server::start_lm(
         stack.clone(),
         ServeConfig { workers: 3, max_batch: 4, batch_window: Duration::from_micros(100) },
-    );
+    )
+    .unwrap();
 
     let seqs = ragged_seqs(7, vocab, 0xBEEF);
     // pipeline: submit every token of every session up front — the
@@ -262,13 +263,74 @@ fn server_replies_bit_identical_to_sequential_forward() {
                 .recv_timeout(Duration::from_secs(10))
                 .unwrap_or_else(|e| panic!("session {s} token {t}: no reply ({e})"));
             assert_eq!(reply.session, s as u64);
-            assert_bits_eq(&reply.logits, want, &format!("server logits (s={s} t={t})"));
+            let logits = reply.logits().expect("step reply carries logits");
+            assert_bits_eq(logits, want, &format!("server logits (s={s} t={t})"));
         }
     }
 
     let agg = server.stats();
     let total: usize = seqs.iter().map(|s| s.len()).sum();
     assert_eq!(agg.tokens, total as u64, "every submitted token served exactly once");
+    server.shutdown();
+}
+
+/// Per-session FIFO under contention: one hot session pipelines a long
+/// token stream up front while noisy sessions keep every micro-batch
+/// full, on a single shard with a tiny `max_batch` — so the scheduler
+/// constantly defers the hot session's surplus tokens (and exercises
+/// the scan-budget path). Every hot-session reply must arrive in
+/// submission order with logits bit-identical to the unbatched replay
+/// of that exact sequence.
+#[test]
+fn scheduler_keeps_per_session_fifo_under_contention() {
+    let vocab = 32;
+    let stack = Arc::new(synthetic_stack(vocab, 5, 9, 2, vocab, 404));
+    let server = Server::start_lm(
+        stack.clone(),
+        // one worker: every session contends for the same queue
+        ServeConfig { workers: 1, max_batch: 3, batch_window: Duration::from_micros(50) },
+    )
+    .unwrap();
+
+    let mut rng = SplitMix64::new(0xF1F0);
+    let hot: Vec<usize> = (0..120).map(|_| rng.next_below(vocab as u64) as usize).collect();
+    let noisy: Vec<Vec<usize>> =
+        (0..5).map(|_| (0..40).map(|_| rng.next_below(vocab as u64) as usize).collect()).collect();
+
+    // hot session 0 pipelines everything up front...
+    let (hot_tx, hot_rx) = mpsc::channel();
+    for &tok in &hot {
+        server.submit(0, tok, hot_tx.clone()).unwrap();
+    }
+    // ...then the noisy sessions pile on behind it
+    let (noise_tx, noise_rx) = mpsc::channel();
+    for (i, seq) in noisy.iter().enumerate() {
+        for &tok in seq {
+            server.submit(1 + i as u64, tok, noise_tx.clone()).unwrap();
+        }
+    }
+
+    let expected = stack.forward(&hot);
+    for (t, want) in expected.iter().enumerate() {
+        let reply = hot_rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("hot session token {t}: no reply ({e})"));
+        assert_eq!(reply.session, 0);
+        let logits = reply.logits().expect("step reply carries logits");
+        // any reordering (or state mixup with a noisy session) breaks
+        // the recurrent state and flips bits from this token onward
+        assert_bits_eq(logits, want, &format!("hot-session logits under contention (t={t})"));
+    }
+    // the noisy sessions were all served too, in their own order
+    let mut noise_replies = 0usize;
+    let noise_total: usize = noisy.iter().map(|s| s.len()).sum();
+    while noise_replies < noise_total {
+        let reply = noise_rx.recv_timeout(Duration::from_secs(10)).expect("noisy reply");
+        assert!(!reply.is_rejected());
+        noise_replies += 1;
+    }
+    let agg = server.stats();
+    assert_eq!(agg.tokens, (hot.len() + noise_total) as u64);
     server.shutdown();
 }
 

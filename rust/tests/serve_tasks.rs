@@ -1,0 +1,374 @@
+//! Checkpoint → serve parity, pinned bit-for-bit for all four task
+//! heads: a checkpoint written by `floatsd-lstm train --task {...}`
+//! must load into the serving engine (task auto-detected from
+//! `meta/task_cfg`) and produce outputs **bit-identical** to the
+//! offline `floatsd-lstm eval` path on the same inputs — the serving
+//! engine's accuracy contract. Covers:
+//!
+//! * lm  — streamed per-token logits replay the eval CE (and thus the
+//!         reported perplexity) exactly;
+//! * pos — whole-sentence `Sequence` requests return per-step tag
+//!         scores that replay eval loss and tag accuracy exactly;
+//! * nli — submit-sequence-then-finalize classification replays eval
+//!         loss and accuracy exactly;
+//! * mt  — the greedy decode loop (batched across sessions) matches
+//!         the offline single-lane reference token-for-token and
+//!         score-bit-for-score-bit; beam_width=1 reproduces greedy;
+//!         wider beams are deterministic.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use floatsd_lstm::data::lm::LmGen;
+use floatsd_lstm::data::nli::NliGen;
+use floatsd_lstm::data::pos::PosGen;
+use floatsd_lstm::data::translation::MtGen;
+use floatsd_lstm::data::BatchSource;
+use floatsd_lstm::serve::{DecodeParams, Payload, Reply, ServeConfig, ServeModel, Server};
+use floatsd_lstm::tasks::eval::evaluate_checkpoint;
+use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
+use floatsd_lstm::train::eval_ce;
+
+const RECV: Duration = Duration::from_secs(30);
+
+fn serve_cfg(workers: usize) -> ServeConfig {
+    ServeConfig { workers, max_batch: 4, batch_window: Duration::from_micros(100) }
+}
+
+/// First-max argmax — the same tie-break the eval harness uses.
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Train a tiny head offline for a few steps and checkpoint it — the
+/// same path the CI smoke job drives through the CLI.
+fn train_ckpt(mut cfg: TaskConfig, name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fsd_serve_tasks");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    cfg.checkpoint = Some(path.clone());
+    cfg.log_every = 0;
+    let mut trainer = TaskTrainer::new(cfg).expect("task config valid");
+    trainer.train().expect("tiny training run");
+    path
+}
+
+#[test]
+fn lm_checkpoint_streams_bit_identical_to_eval() {
+    let mut cfg = TaskConfig::preset(TaskKind::Lm);
+    cfg.vocab = 32;
+    cfg.dim = 8;
+    cfg.hidden = 10;
+    cfg.batch = 4;
+    cfg.seq = 8;
+    cfg.eval_batches = 2;
+    cfg.steps = 6;
+    cfg.seed = 5;
+    let ckpt = train_ckpt(cfg, "lm_parity.tensors");
+    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+
+    let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects lm"));
+    assert_eq!(model.task, TaskKind::Lm);
+    let server = Server::start(model, serve_cfg(2)).unwrap();
+
+    // the eval lanes are contiguous held-out streams whose state
+    // carries across eval batches — exactly an incremental session
+    let gen = LmGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.data_seed());
+    let eval = gen.eval_set();
+    let mut rxs: Vec<mpsc::Receiver<Reply>> = Vec::new();
+    for b in 0..cfg.batch {
+        let (tx, rx) = mpsc::channel();
+        for batch in eval {
+            for t in 0..cfg.seq {
+                let tok = batch.x[b * cfg.seq + t] as usize;
+                server.submit(b as u64, tok, tx.clone()).unwrap();
+            }
+        }
+        rxs.push(rx);
+    }
+    // served[b][global_t] = that step's logits
+    let mut served: Vec<Vec<Vec<f32>>> = Vec::new();
+    for rx in &rxs {
+        let mut lane = Vec::with_capacity(eval.len() * cfg.seq);
+        for _ in 0..eval.len() * cfg.seq {
+            // per-session FIFO: replies arrive in submission order
+            let reply = rx.recv_timeout(RECV).expect("lm reply");
+            lane.push(reply.logits().expect("step reply carries logits").to_vec());
+        }
+        served.push(lane);
+    }
+    server.shutdown();
+
+    // replay the offline eval accumulation over the served logits
+    let mut loss_sum = 0f64;
+    let mut count = 0usize;
+    for (k, batch) in eval.iter().enumerate() {
+        for t in 0..cfg.seq {
+            for b in 0..cfg.batch {
+                let y = batch.y[b * cfg.seq + t] as usize;
+                loss_sum += eval_ce(&served[b][k * cfg.seq + t], y);
+                count += 1;
+            }
+        }
+    }
+    assert_eq!(count, want.count);
+    let loss = loss_sum / count.max(1) as f64;
+    assert_eq!(loss.to_bits(), want.loss.to_bits(), "served lm loss != eval loss");
+    assert_eq!(loss.exp().to_bits(), want.metric.to_bits(), "served ppl != eval ppl");
+}
+
+#[test]
+fn pos_checkpoint_serves_bit_identical_to_eval() {
+    let mut cfg = TaskConfig::preset(TaskKind::Pos);
+    cfg.vocab = 60;
+    cfg.n_classes = 6;
+    cfg.dim = 8;
+    cfg.hidden = 10;
+    cfg.batch = 4;
+    cfg.seq = 8;
+    cfg.eval_batches = 2;
+    cfg.steps = 6;
+    cfg.seed = 9;
+    let ckpt = train_ckpt(cfg, "pos_parity.tensors");
+    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+
+    let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects pos"));
+    assert_eq!(model.task, TaskKind::Pos);
+    assert_eq!(model.n_out(), cfg.n_classes, "tag head width");
+    let server = Server::start(model, serve_cfg(2)).unwrap();
+
+    let gen = PosGen::new(
+        cfg.batch,
+        cfg.seq,
+        cfg.vocab,
+        cfg.n_classes,
+        cfg.eval_batches,
+        cfg.data_seed(),
+    );
+    let eval = gen.eval_set();
+    // one session per (eval batch, lane); whole sentences pipelined so
+    // sequence requests co-batch across sessions
+    let mut pend: Vec<(usize, usize, mpsc::Receiver<Reply>)> = Vec::new();
+    for (k, batch) in eval.iter().enumerate() {
+        for b in 0..cfg.batch {
+            let toks: Vec<usize> =
+                batch.x[b * cfg.seq..(b + 1) * cfg.seq].iter().map(|&t| t as usize).collect();
+            let (tx, rx) = mpsc::channel();
+            let sid = (k * cfg.batch + b) as u64;
+            server.submit_sequence(sid, toks, tx).unwrap();
+            pend.push((k, b, rx));
+        }
+    }
+    // served[k][b][t] = tag scores at position t
+    type LaneSteps = Vec<Vec<f32>>;
+    let mut served: Vec<Vec<LaneSteps>> = vec![vec![Vec::new(); cfg.batch]; eval.len()];
+    for (k, b, rx) in pend {
+        let reply = rx.recv_timeout(RECV).expect("pos reply");
+        match reply.payload {
+            Payload::Steps { logits } => {
+                assert_eq!(logits.len(), cfg.seq, "one tag-score row per position");
+                served[k][b] = logits;
+            }
+            _ => panic!("pos sequence reply must carry per-step tag scores"),
+        }
+    }
+    server.shutdown();
+
+    let mut loss_sum = 0f64;
+    let mut correct = 0usize;
+    let mut count = 0usize;
+    for (k, batch) in eval.iter().enumerate() {
+        for t in 0..cfg.seq {
+            for b in 0..cfg.batch {
+                let y = batch.y[b * cfg.seq + t] as usize;
+                let lg = &served[k][b][t];
+                loss_sum += eval_ce(lg, y);
+                correct += usize::from(argmax(lg) == y);
+                count += 1;
+            }
+        }
+    }
+    assert_eq!(count, want.count);
+    let loss = loss_sum / count.max(1) as f64;
+    let metric = correct as f64 / count.max(1) as f64;
+    assert_eq!(loss.to_bits(), want.loss.to_bits(), "served pos loss != eval loss");
+    assert_eq!(metric.to_bits(), want.metric.to_bits(), "served tag accuracy != eval");
+}
+
+#[test]
+fn nli_checkpoint_classifies_bit_identical_to_eval() {
+    let mut cfg = TaskConfig::preset(TaskKind::Nli);
+    cfg.vocab = 24;
+    cfg.dim = 8;
+    cfg.hidden = 10;
+    cfg.batch = 6;
+    cfg.seq = 5;
+    cfg.eval_batches = 2;
+    cfg.steps = 6;
+    cfg.seed = 11;
+    let ckpt = train_ckpt(cfg, "nli_parity.tensors");
+    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+
+    let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects nli"));
+    assert_eq!(model.task, TaskKind::Nli);
+    assert_eq!(model.n_out(), 3, "3-way classification head");
+    let server = Server::start(model, serve_cfg(2)).unwrap();
+
+    let t_total = 2 * cfg.seq;
+    let gen = NliGen::new(cfg.batch, cfg.seq, cfg.vocab, cfg.eval_batches, cfg.data_seed());
+    let eval = gen.eval_set();
+    // submit-sequence-then-finalize, pipelined on each session (FIFO
+    // guarantees the finalize sees the sequence's final state)
+    let mut pend: Vec<(usize, usize, mpsc::Receiver<Reply>)> = Vec::new();
+    for (k, batch) in eval.iter().enumerate() {
+        for b in 0..cfg.batch {
+            let toks: Vec<usize> =
+                batch.x[b * t_total..(b + 1) * t_total].iter().map(|&t| t as usize).collect();
+            let (tx, rx) = mpsc::channel();
+            let sid = (k * cfg.batch + b) as u64;
+            server.submit_sequence(sid, toks, tx.clone()).unwrap();
+            server.finalize(sid, tx).unwrap();
+            pend.push((k, b, rx));
+        }
+    }
+    // served[k][b] = the classification logits
+    let mut served: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); cfg.batch]; eval.len()];
+    for (k, b, rx) in pend {
+        let first = rx.recv_timeout(RECV).expect("nli prefill reply");
+        assert!(
+            matches!(first.payload, Payload::Prefilled { .. }),
+            "sequence reply precedes the finalize reply"
+        );
+        let reply = rx.recv_timeout(RECV).expect("nli class reply");
+        match reply.payload {
+            Payload::Class { logits, label } => {
+                assert_eq!(label, argmax(&logits));
+                served[k][b] = logits;
+            }
+            _ => panic!("finalize reply must be a classification"),
+        }
+    }
+    server.shutdown();
+
+    let mut loss_sum = 0f64;
+    let mut correct = 0usize;
+    let mut count = 0usize;
+    for (k, batch) in eval.iter().enumerate() {
+        for (b, &label) in batch.y.iter().enumerate() {
+            let y = label as usize;
+            let lg = &served[k][b];
+            loss_sum += eval_ce(lg, y);
+            correct += usize::from(argmax(lg) == y);
+            count += 1;
+        }
+    }
+    assert_eq!(count, want.count);
+    let loss = loss_sum / count.max(1) as f64;
+    let metric = correct as f64 / count.max(1) as f64;
+    assert_eq!(loss.to_bits(), want.loss.to_bits(), "served nli loss != eval loss");
+    assert_eq!(metric.to_bits(), want.metric.to_bits(), "served accuracy != eval");
+}
+
+#[test]
+fn mt_checkpoint_greedy_decode_matches_offline_reference() {
+    let mut cfg = TaskConfig::preset(TaskKind::Mt);
+    cfg.vocab = 16;
+    cfg.vocab_tgt = 16;
+    cfg.dim = 6;
+    cfg.hidden = 8;
+    cfg.batch = 3;
+    cfg.seq = 4;
+    cfg.eval_batches = 2;
+    cfg.steps = 6;
+    cfg.seed = 13;
+    let ckpt = train_ckpt(cfg, "mt_parity.tensors");
+    let (cfg, _want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+
+    let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects mt"));
+    assert_eq!(model.task, TaskKind::Mt);
+    assert!(model.decoder.is_some(), "two-stack pair loaded");
+    assert_eq!(model.n_out(), cfg.vocab_tgt, "replies carry decoder-head logits");
+    // one shard so the concurrent decodes must share decode-loop lanes
+    let server = Server::start(model.clone(), serve_cfg(1)).unwrap();
+
+    let gen = MtGen::new(
+        cfg.batch,
+        cfg.seq,
+        cfg.seq + 1,
+        cfg.vocab,
+        cfg.vocab_tgt,
+        cfg.eval_batches,
+        cfg.data_seed(),
+    );
+    let eval = gen.eval_set();
+    let mut srcs: Vec<Vec<usize>> = Vec::new();
+    for batch in eval {
+        for b in 0..cfg.batch {
+            srcs.push(
+                batch.x[b * cfg.seq..(b + 1) * cfg.seq].iter().map(|&t| t as usize).collect(),
+            );
+        }
+    }
+    let max_len = cfg.seq + 1;
+
+    // pipeline per session: encode, then greedy, beam-1, and two
+    // beam-3 decodes (the encoder context is read-only for decodes,
+    // so all four run from the same state)
+    let mut rxs: Vec<mpsc::Receiver<Reply>> = Vec::new();
+    for (i, src) in srcs.iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        let sid = i as u64;
+        server.submit_sequence(sid, src.clone(), tx.clone()).unwrap();
+        server.decode(sid, DecodeParams { max_len, beam_width: 1 }, tx.clone()).unwrap();
+        server.decode(sid, DecodeParams { max_len, beam_width: 1 }, tx.clone()).unwrap();
+        server.decode(sid, DecodeParams { max_len, beam_width: 3 }, tx.clone()).unwrap();
+        server.decode(sid, DecodeParams { max_len, beam_width: 3 }, tx).unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.iter().enumerate() {
+        let src = &srcs[i];
+        let enc = rx.recv_timeout(RECV).expect("encode ack");
+        match enc.payload {
+            Payload::Encoded { consumed } => assert_eq!(consumed, src.len()),
+            _ => panic!("mt sequence reply must be an encoder ack"),
+        }
+        let take_decoded = |rx: &mpsc::Receiver<Reply>| -> (Vec<usize>, f32) {
+            match rx.recv_timeout(RECV).expect("decode reply").payload {
+                Payload::Decoded { tokens, score } => (tokens, score),
+                _ => panic!("decode reply must carry decoded tokens"),
+            }
+        };
+        let (greedy_toks, greedy_score) = take_decoded(rx);
+        let (greedy2_toks, greedy2_score) = take_decoded(rx);
+        let (beam_toks, beam_score) = take_decoded(rx);
+        let (beam2_toks, beam2_score) = take_decoded(rx);
+
+        // greedy through the server == offline single-lane reference,
+        // token-for-token and score-bit-for-score-bit — whatever lanes
+        // it shared with the other sessions' decodes
+        let (want_toks, want_score) =
+            model.reference_greedy_decode(src, max_len).expect("reference decode");
+        assert_eq!(greedy_toks, want_toks, "served greedy decode diverged (src {i})");
+        assert_eq!(
+            greedy_score.to_bits(),
+            want_score.to_bits(),
+            "greedy score bits diverged (src {i})"
+        );
+        // decodes are repeatable: the encoder context is not consumed
+        assert_eq!(greedy2_toks, want_toks);
+        assert_eq!(greedy2_score.to_bits(), want_score.to_bits());
+        // beam search is deterministic, and emits max_len tokens
+        assert_eq!(beam_toks.len(), max_len);
+        assert_eq!(beam_toks, beam2_toks, "beam decode must be deterministic (src {i})");
+        assert_eq!(beam_score.to_bits(), beam2_score.to_bits());
+    }
+    server.shutdown();
+}
