@@ -171,7 +171,7 @@ fn main() -> anyhow::Result<()> {
             16,
         ),
     ];
-    let decode = DecodeParams { max_len: 24, beam_width: 1 };
+    let decode = DecodeParams { max_len: 24, beam_width: 1, len_norm: 0.0 };
     for (model, sessions, tokens) in task_models {
         let server = Server::start(
             model.clone(),

@@ -1,0 +1,133 @@
+//! Training throughput: wall-clock of the lane-sharded offline
+//! trainer across thread counts, at the `paper` preset (10k-vocab LM,
+//! 2×256 hidden) by default. Emits a machine-readable
+//! `BENCH_train.json` at the repo root (tokens/s, step p50/p99, a
+//! thread-scaling curve, and a per-row `identical` flag proving the
+//! measured runs were bit-identical to the single-thread run) so the
+//! training-side bench trajectory is trackable across PRs, like
+//! `BENCH_serve.json` on the serving side.
+//!
+//! The win mechanism: a truncated-BPTT window is embarrassingly
+//! parallel across batch lanes (per-stream bit-identical kernels,
+//! per-lane state/tapes/gradients), so the fixed lane shards scale
+//! across `std::thread` workers until the fixed-order gradient merge
+//! and the single-threaded optimizer update dominate.
+//!
+//! Run: `cargo bench --bench train_throughput`
+//! Quick (CI) configuration: `FSD_BENCH_QUICK=1 cargo bench --bench
+//! train_throughput` — default preset, fewer steps, threads {1, 2}.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use floatsd_lstm::benchlib::Percentiles;
+use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
+use floatsd_lstm::train::PresetTier;
+use floatsd_lstm::tensorfile::json::Json;
+
+/// `BENCH_train.json` lands at the repo root (next to CHANGES.md) so
+/// successive PRs overwrite one tracked file, regardless of the cwd
+/// cargo was invoked from.
+fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_train.json")
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FSD_BENCH_QUICK").is_ok();
+    let (tier, steps, thread_counts): (PresetTier, usize, &[usize]) = if quick {
+        (PresetTier::Default, 3, &[1, 2])
+    } else {
+        (PresetTier::Paper, 5, &[1, 2, 4, 8])
+    };
+    let warmup = 1usize;
+
+    let mut base_cfg = TaskConfig::preset_tier(TaskKind::Lm, tier);
+    base_cfg.steps = steps;
+    base_cfg.log_every = 0;
+    base_cfg.eval_batches = 1;
+    base_cfg.checkpoint = None;
+    let tokens_per_step = base_cfg.batch * base_cfg.seq;
+    println!(
+        "train throughput [{} preset]: vocab={} dim={} hidden={}x{} | batch={} seq={} \
+         ({} tokens/step, {} measured steps + {} warmup per row)\n",
+        tier.name(),
+        base_cfg.vocab,
+        base_cfg.dim,
+        base_cfg.hidden,
+        base_cfg.layers,
+        base_cfg.batch,
+        base_cfg.seq,
+        tokens_per_step,
+        steps,
+        warmup
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_tps = 0f64;
+    let mut base_losses: Vec<u64> = Vec::new();
+    for &threads in thread_counts {
+        let mut cfg = base_cfg.clone();
+        cfg.threads = threads;
+        let mut trainer = TaskTrainer::new(cfg)?;
+        for _ in 0..warmup {
+            trainer.step();
+        }
+        let mut samples: Vec<Duration> = Vec::with_capacity(steps);
+        let mut losses: Vec<u64> = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let s = Instant::now();
+            let out = trainer.step();
+            samples.push(s.elapsed());
+            losses.push(out.loss.to_bits());
+        }
+        let wall = t0.elapsed();
+        let tps = (steps * tokens_per_step) as f64 / wall.as_secs_f64();
+        if threads == thread_counts[0] {
+            base_tps = tps;
+            base_losses = losses.clone();
+        }
+        // the determinism contract, re-checked on the measured runs:
+        // every thread count walked the identical loss trajectory
+        let identical = losses == base_losses;
+        let speedup = if base_tps > 0.0 { tps / base_tps } else { 1.0 };
+        let p = Percentiles::of(&mut samples);
+        println!(
+            "threads {threads}: {tps:>9.1} tokens/s ({speedup:.2}x) | step p50 {:.3?} \
+             p99 {:.3?} | identical-to-base: {identical}",
+            p.p50, p.p99
+        );
+        let mut m = BTreeMap::new();
+        m.insert("threads".to_string(), jnum(threads as f64));
+        m.insert("tokens_per_s".to_string(), jnum(tps));
+        m.insert("speedup".to_string(), jnum(speedup));
+        m.insert("p50_ms".to_string(), jnum(p.p50.as_secs_f64() * 1e3));
+        m.insert("p99_ms".to_string(), jnum(p.p99.as_secs_f64() * 1e3));
+        m.insert("identical".to_string(), Json::Bool(identical));
+        rows.push(Json::Obj(m));
+    }
+
+    let mut model = BTreeMap::new();
+    model.insert("task".to_string(), Json::Str("lm".to_string()));
+    model.insert("vocab".to_string(), jnum(base_cfg.vocab as f64));
+    model.insert("dim".to_string(), jnum(base_cfg.dim as f64));
+    model.insert("hidden".to_string(), jnum(base_cfg.hidden as f64));
+    model.insert("layers".to_string(), jnum(base_cfg.layers as f64));
+    model.insert("batch".to_string(), jnum(base_cfg.batch as f64));
+    model.insert("seq".to_string(), jnum(base_cfg.seq as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("train_throughput".to_string()));
+    root.insert("preset".to_string(), Json::Str(tier.name().to_string()));
+    root.insert("model".to_string(), Json::Obj(model));
+    root.insert("tokens_per_step".to_string(), jnum(tokens_per_step as f64));
+    root.insert("steps_per_row".to_string(), jnum(steps as f64));
+    root.insert("rows".to_string(), Json::Arr(rows));
+    let json_path = bench_json_path();
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(root)))?;
+    println!("\nwrote {}", json_path.display());
+    Ok(())
+}

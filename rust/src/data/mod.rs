@@ -64,8 +64,11 @@ pub fn check_task_args(
             }
         }
         "mt" => {
-            if vocab <= 2 || vocab_tgt <= 2 {
-                bail!("mt: vocab {vocab}/vocab_tgt {vocab_tgt} too small (2 ids are reserved)");
+            if vocab <= 3 || vocab_tgt <= 3 {
+                bail!(
+                    "mt: vocab {vocab}/vocab_tgt {vocab_tgt} too small \
+                     (3 ids are reserved: PAD, BOS, EOS)"
+                );
             }
         }
         "lm" | "tiny" => {
@@ -85,7 +88,7 @@ pub fn check_task_args(
 /// dimension), matching the manifest convention: `pos`/`lm` take a
 /// rank-1 `[seq]` for both, `nli` a rank-2 `[2, seq]` premise/
 /// hypothesis pair with a scalar (empty-shape) label, and `mt` rank-1
-/// `[src_len]` / `[src_len + 1]`. Note the per-task index asymmetry —
+/// `[src_len]` / `[src_len + 2]`. Note the per-task index asymmetry —
 /// `nli` reads its sequence length from `x_shape[1]`, everything else
 /// from `x_shape[0]` — which is why ranks are validated up front with
 /// descriptive errors instead of letting indexing (or the generators'
@@ -139,9 +142,9 @@ pub fn make_source(
         "mt" => {
             rank("x_shape", x_shape, 1)?;
             rank("y_shape", y_shape, 1)?;
-            if y_shape[0] != x_shape[0] + 1 {
+            if y_shape[0] != x_shape[0] + 2 {
                 bail!(
-                    "mt: target length {} must be source length {} + 1 (BOS prefix)",
+                    "mt: target length {} must be source length {} + 2 (BOS prefix, EOS suffix)",
                     y_shape[0],
                     x_shape[0]
                 );
@@ -168,7 +171,7 @@ mod tests {
         let specs: &[(&str, Vec<usize>, Vec<usize>, usize, usize, usize)] = &[
             ("pos", vec![24], vec![24], 600, 0, 12),
             ("nli", vec![2, 16], vec![], 800, 0, 3),
-            ("mt", vec![16], vec![17], 400, 400, 0),
+            ("mt", vec![16], vec![18], 400, 400, 0),
             ("lm", vec![32], vec![32], 2000, 0, 0),
             ("tiny", vec![8], vec![8], 64, 0, 0),
         ];
@@ -197,8 +200,8 @@ mod tests {
             ("nli", vec![16], vec![], 800, 0, 3, "rank 2"),
             ("nli", vec![3, 16], vec![], 800, 0, 3, "[2, seq]"),
             ("nli", vec![2, 16], vec![1], 800, 0, 3, "scalar"),
-            ("mt", vec![16], vec![16], 400, 400, 0, "+ 1"),
-            ("mt", vec![16], vec![17], 400, 1, 0, "too small"),
+            ("mt", vec![16], vec![17], 400, 400, 0, "+ 2"),
+            ("mt", vec![16], vec![18], 400, 1, 0, "too small"),
             ("lm", vec![], vec![], 100, 0, 0, "rank 1"),
             ("lm", vec![0], vec![0], 100, 0, 0, "zero dimension"),
             ("wat", vec![8], vec![8], 100, 0, 0, "unknown task"),

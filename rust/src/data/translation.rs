@@ -1,11 +1,14 @@
 //! Multi30K stand-in: deterministic synthetic "translation".
 //!
 //! Source sentences are Zipf-distributed token sequences; the target
-//! "language" is `BOS · map(reverse(source))` where `map` is a fixed
-//! bijective token relabeling — a deterministic transformation with
-//! the long-range dependency structure (reversal) that an
+//! "language" is `BOS · map(reverse(source)) · EOS` where `map` is a
+//! fixed bijective token relabeling — a deterministic transformation
+//! with the long-range dependency structure (reversal) that an
 //! encoder-decoder LSTM must carry through its bottleneck, like real
-//! translation re-ordering.
+//! translation re-ordering. The trailing [`EOS`] is what lets the
+//! serving decode loop retire lanes early instead of always emitting
+//! `max_len` tokens (and what the teacher-forced trainer scores as
+//! the final target position).
 
 use crate::rng::{SplitMix64, Zipf};
 
@@ -13,7 +16,10 @@ use super::{Batch, BatchSource};
 
 pub const PAD: i32 = 0;
 pub const BOS: i32 = 1;
-const RESERVED: usize = 2;
+/// End-of-sequence marker closing every target row; greedy/beam
+/// decode lanes retire when they emit it.
+pub const EOS: i32 = 2;
+const RESERVED: usize = 3;
 
 pub struct MtGen {
     batch: usize,
@@ -36,7 +42,7 @@ impl MtGen {
         eval_batches: usize,
         seed: u64,
     ) -> Self {
-        assert_eq!(tgt_len, src_len + 1, "target = BOS + mapped reverse");
+        assert_eq!(tgt_len, src_len + 2, "target = BOS + mapped reverse + EOS");
         let mut g = MtGen {
             batch,
             src_len,
@@ -72,6 +78,7 @@ impl MtGen {
             for &w in src.iter().rev() {
                 y.push(self.map_token(w));
             }
+            y.push(EOS);
             x.extend(src);
         }
         Batch {
@@ -99,22 +106,23 @@ mod tests {
     use super::*;
 
     #[test]
-    fn target_is_mapped_reverse_of_source() {
-        let mut g = MtGen::new(4, 16, 17, 400, 400, 1, 6);
+    fn target_is_mapped_reverse_of_source_with_eos() {
+        let mut g = MtGen::new(4, 16, 18, 400, 400, 1, 6);
         let b = g.next_train();
         for i in 0..4 {
             let src = &b.x[i * 16..(i + 1) * 16];
-            let tgt = &b.y[i * 17..(i + 1) * 17];
+            let tgt = &b.y[i * 18..(i + 1) * 18];
             assert_eq!(tgt[0], BOS);
             for (k, &w) in src.iter().rev().enumerate() {
                 assert_eq!(tgt[1 + k], g.map_token(w));
             }
+            assert_eq!(tgt[17], EOS, "every target row closes with EOS");
         }
     }
 
     #[test]
     fn lexicon_is_bijective() {
-        let g = MtGen::new(1, 16, 17, 400, 400, 1, 7);
+        let g = MtGen::new(1, 16, 18, 400, 400, 1, 7);
         let mut seen = std::collections::HashSet::new();
         for w in RESERVED as i32..400 {
             let m = g.map_token(w);
@@ -125,9 +133,15 @@ mod tests {
 
     #[test]
     fn ids_in_range() {
-        let mut g = MtGen::new(8, 16, 17, 400, 400, 1, 8);
+        let mut g = MtGen::new(8, 16, 18, 400, 400, 1, 8);
         let b = g.next_train();
         assert!(b.x.iter().all(|&w| (RESERVED as i32..400).contains(&w)));
         assert!(b.y.iter().all(|&w| (0..400).contains(&w)));
+        // EOS appears exactly once per target row, at the end
+        for lane in 0..8 {
+            let tgt = &b.y[lane * 18..(lane + 1) * 18];
+            assert_eq!(tgt.iter().filter(|&&w| w == EOS).count(), 1);
+            assert_eq!(tgt[17], EOS);
+        }
     }
 }

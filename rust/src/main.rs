@@ -5,12 +5,15 @@
 //! floatsd-lstm formats                   # Table I + FloatSD8 grid facts
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
-//!                    [--decode-len L --beam K]
+//!                    [--decode-len L --beam K --beam-len-norm A]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
-//! floatsd-lstm train [--steps N --hidden H --out ckpt.tensors ...]
+//! floatsd-lstm train [--preset tiny|default|paper] [--threads N]
+//!                    [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
-//! floatsd-lstm train --task {lm,pos,nli,mt} [--steps N --out ckpt.tensors ...]
+//!                                        # (lane-sharded; --threads N ≡ --threads 1 bit-for-bit)
+//! floatsd-lstm train --task {lm,pos,nli,mt} [--preset tiny|default|paper]
+//!                    [--threads N] [--steps N --out ckpt.tensors ...]
 //!                                        # multi-task offline training (tasks/)
 //! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--out report.json]
 //!                                        # held-out eval grid across all four tasks

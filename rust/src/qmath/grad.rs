@@ -25,51 +25,122 @@ use crate::formats::{round_f8, Fp16};
 use super::mac::MAC_GROUP;
 use super::vector::QMatrix;
 
-/// One column of the transposed product: `Σ_r dy[r] · W[r, c]`,
-/// f64-exact per [`MAC_GROUP`] rows, one FP16 rounding per group.
+/// One column of the transposed product: `Σ_r dy[r] · col[r]` where
+/// `col` is the contiguous column slice from the matrix's transposed
+/// decoded copy ([`QMatrix::col_decoded`]) — f64-exact per
+/// [`MAC_GROUP`] rows, one FP16 rounding per group. The transposed
+/// copy turns the old stride-`cols` column walk into a unit-stride
+/// stream; the values and the op order are unchanged, so the
+/// transposed-reuse variant is bit-identical to indexing
+/// `row_decoded(r)[c]` directly.
 #[inline]
-fn dot_col_chained(w: &QMatrix, c: usize, dy: &[f32]) -> f32 {
-    let rows = w.rows;
+fn dot_col_chained(col: &[f32], dy: &[f32]) -> f32 {
+    let rows = col.len();
+    debug_assert_eq!(dy.len(), rows);
     let mut acc = 0f32;
     let mut r = 0;
     while r + MAC_GROUP <= rows {
-        let g = dy[r] as f64 * w.row_decoded(r)[c] as f64
-            + dy[r + 1] as f64 * w.row_decoded(r + 1)[c] as f64
-            + dy[r + 2] as f64 * w.row_decoded(r + 2)[c] as f64
-            + dy[r + 3] as f64 * w.row_decoded(r + 3)[c] as f64;
+        let g = dy[r] as f64 * col[r] as f64
+            + dy[r + 1] as f64 * col[r + 1] as f64
+            + dy[r + 2] as f64 * col[r + 2] as f64
+            + dy[r + 3] as f64 * col[r + 3] as f64;
         acc = Fp16::from_f64(acc as f64 + g).to_f32();
         r += MAC_GROUP;
     }
     if r < rows {
         let mut g = 0f64;
         for rr in r..rows {
-            g += dy[rr] as f64 * w.row_decoded(rr)[c] as f64;
+            g += dy[rr] as f64 * col[rr] as f64;
         }
         acc = Fp16::from_f64(acc as f64 + g).to_f32();
     }
     acc
 }
 
+/// Four independent FP16 chains sharing one pass over a weight
+/// column — the register-tiled inner block of [`matmul_t_fast`],
+/// mirroring the forward kernel's `dot_row_chained4`. Per stream the
+/// operation sequence is exactly [`dot_col_chained`], so each lane is
+/// bit-identical to a standalone call.
+#[inline]
+fn dot_col_chained4(col: &[f32], d0: &[f32], d1: &[f32], d2: &[f32], d3: &[f32]) -> [f32; 4] {
+    let rows = col.len();
+    let mut acc = [0f32; 4];
+    let mut r = 0;
+    while r + MAC_GROUP <= rows {
+        let (w0, w1, w2, w3) =
+            (col[r] as f64, col[r + 1] as f64, col[r + 2] as f64, col[r + 3] as f64);
+        let g0 = d0[r] as f64 * w0 + d0[r + 1] as f64 * w1 + d0[r + 2] as f64 * w2
+            + d0[r + 3] as f64 * w3;
+        let g1 = d1[r] as f64 * w0 + d1[r + 1] as f64 * w1 + d1[r + 2] as f64 * w2
+            + d1[r + 3] as f64 * w3;
+        let g2 = d2[r] as f64 * w0 + d2[r + 1] as f64 * w1 + d2[r + 2] as f64 * w2
+            + d2[r + 3] as f64 * w3;
+        let g3 = d3[r] as f64 * w0 + d3[r + 1] as f64 * w1 + d3[r + 2] as f64 * w2
+            + d3[r + 3] as f64 * w3;
+        acc[0] = Fp16::from_f64(acc[0] as f64 + g0).to_f32();
+        acc[1] = Fp16::from_f64(acc[1] as f64 + g1).to_f32();
+        acc[2] = Fp16::from_f64(acc[2] as f64 + g2).to_f32();
+        acc[3] = Fp16::from_f64(acc[3] as f64 + g3).to_f32();
+        r += MAC_GROUP;
+    }
+    if r < rows {
+        let mut g = [0f64; 4];
+        for rr in r..rows {
+            let wv = col[rr] as f64;
+            g[0] += d0[rr] as f64 * wv;
+            g[1] += d1[rr] as f64 * wv;
+            g[2] += d2[rr] as f64 * wv;
+            g[3] += d3[rr] as f64 * wv;
+        }
+        for (a, gk) in acc.iter_mut().zip(g) {
+            *a = Fp16::from_f64(*a as f64 + gk).to_f32();
+        }
+    }
+    acc
+}
+
 /// Transposed fast matvec: `out[c] = Σ_r dy[r]·W[r,c]` with the
-/// forward kernel's FP16-per-group accumulation discipline.
+/// forward kernel's FP16-per-group accumulation discipline, reading
+/// the contiguous transposed copy.
 pub fn matvec_t_fast(w: &QMatrix, dy: &[f32], out: &mut [f32]) {
     assert_eq!(dy.len(), w.rows);
     assert_eq!(out.len(), w.cols);
     for c in 0..w.cols {
-        out[c] = dot_col_chained(w, c, dy);
+        out[c] = dot_col_chained(w.col_decoded(c), dy);
     }
 }
 
-/// Batched transposed matmul: `outs[b] = Wᵀ·dys[b]` for a whole batch,
-/// column-stationary (each weight column is walked once per batch).
+/// Batched transposed matmul: `outs[b] = Wᵀ·dys[b]` for a whole batch
+/// — column-stationary (each contiguous transposed column is streamed
+/// once per batch) and register-tiled four streams at a time.
 /// Bit-identical to `batch` independent [`matvec_t_fast`] calls —
-/// every `(column, stream)` pair runs the same [`dot_col_chained`].
+/// every `(column, stream)` pair runs the same [`dot_col_chained`]
+/// operation sequence (pinned by `tests::batched_transpose_matches_per_stream`).
 pub fn matmul_t_fast(w: &QMatrix, dys: &[f32], batch: usize, outs: &mut [f32]) {
-    assert_eq!(dys.len(), batch * w.rows);
-    assert_eq!(outs.len(), batch * w.cols);
-    for c in 0..w.cols {
-        for b in 0..batch {
-            outs[b * w.cols + c] = dot_col_chained(w, c, &dys[b * w.rows..(b + 1) * w.rows]);
+    let (rows, cols) = (w.rows, w.cols);
+    assert_eq!(dys.len(), batch * rows);
+    assert_eq!(outs.len(), batch * cols);
+    for c in 0..cols {
+        let col = w.col_decoded(c);
+        let mut b = 0usize;
+        while b + 4 <= batch {
+            let ys = dot_col_chained4(
+                col,
+                &dys[b * rows..(b + 1) * rows],
+                &dys[(b + 1) * rows..(b + 2) * rows],
+                &dys[(b + 2) * rows..(b + 3) * rows],
+                &dys[(b + 3) * rows..(b + 4) * rows],
+            );
+            outs[b * cols + c] = ys[0];
+            outs[(b + 1) * cols + c] = ys[1];
+            outs[(b + 2) * cols + c] = ys[2];
+            outs[(b + 3) * cols + c] = ys[3];
+            b += 4;
+        }
+        while b < batch {
+            outs[b * cols + c] = dot_col_chained(col, &dys[b * rows..(b + 1) * rows]);
+            b += 1;
         }
     }
 }
@@ -78,14 +149,37 @@ pub fn matmul_t_fast(w: &QMatrix, dys: &[f32], batch: usize, outs: &mut [f32]) {
 /// (row-major `[rows][cols]`, the QMatrix layout). Plain f32 adds —
 /// the L2 graph also accumulates weight gradients in full precision
 /// and quantizes the *final* tensor to FP8 (see `optim.process_grads`).
+///
+/// Cache-blocked four output rows at a time so each `x[c]` load feeds
+/// four FMAs; every accumulator element still receives exactly one
+/// add per call, so the blocking is bit-identical to the plain
+/// row-by-row loop (pinned by `tests::outer_acc_is_rank_one_update`).
 pub fn outer_acc(dy: &[f32], x: &[f32], acc: &mut [f32]) {
     assert_eq!(acc.len(), dy.len() * x.len());
     let cols = x.len();
-    for (r, &d) in dy.iter().enumerate() {
+    let rows = dy.len();
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let (d0, d1, d2, d3) = (dy[r], dy[r + 1], dy[r + 2], dy[r + 3]);
+        let block = &mut acc[r * cols..(r + 4) * cols];
+        let (row0, rest) = block.split_at_mut(cols);
+        let (row1, rest) = rest.split_at_mut(cols);
+        let (row2, row3) = rest.split_at_mut(cols);
+        for (c, &xv) in x.iter().enumerate() {
+            row0[c] += d0 * xv;
+            row1[c] += d1 * xv;
+            row2[c] += d2 * xv;
+            row3[c] += d3 * xv;
+        }
+        r += 4;
+    }
+    while r < rows {
+        let d = dy[r];
         let row = &mut acc[r * cols..(r + 1) * cols];
         for (a, &xv) in row.iter_mut().zip(x) {
             *a += d * xv;
         }
+        r += 1;
     }
 }
 
@@ -145,23 +239,25 @@ mod tests {
 
     #[test]
     fn batched_transpose_matches_per_stream() {
-        for &(rows, cols) in &[(6usize, 5usize), (9, 7), (4, 4)] {
+        // batch sweeps the 4-stream register-tile boundary (1..=9)
+        for &(rows, cols) in &[(6usize, 5usize), (9, 7), (4, 4), (1, 3)] {
             let (w, _) = setup(rows, cols, 5);
-            let mut rng = SplitMix64::new(11);
-            let batch = 4;
-            let dys: Vec<f32> =
-                (0..batch * rows).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();
-            let mut outs = vec![0f32; batch * cols];
-            matmul_t_fast(&w, &dys, batch, &mut outs);
-            for b in 0..batch {
-                let mut one = vec![0f32; cols];
-                matvec_t_fast(&w, &dys[b * rows..(b + 1) * rows], &mut one);
-                for c in 0..cols {
-                    assert_eq!(
-                        outs[b * cols + c].to_bits(),
-                        one[c].to_bits(),
-                        "({rows}x{cols}) stream {b} col {c}"
-                    );
+            for batch in 1usize..=9 {
+                let mut rng = SplitMix64::new(11 + batch as u64);
+                let dys: Vec<f32> =
+                    (0..batch * rows).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();
+                let mut outs = vec![0f32; batch * cols];
+                matmul_t_fast(&w, &dys, batch, &mut outs);
+                for b in 0..batch {
+                    let mut one = vec![0f32; cols];
+                    matvec_t_fast(&w, &dys[b * rows..(b + 1) * rows], &mut one);
+                    for c in 0..cols {
+                        assert_eq!(
+                            outs[b * cols + c].to_bits(),
+                            one[c].to_bits(),
+                            "({rows}x{cols}) batch {batch} stream {b} col {c}"
+                        );
+                    }
                 }
             }
         }
@@ -184,6 +280,26 @@ mod tests {
         let mut acc = vec![1.0f32; 6];
         outer_acc(&dy, &x, &mut acc);
         assert_eq!(acc, vec![3.0, 5.0, -3.0, -7.0, 2.0, 3.0]);
+
+        // row counts across the 4-row block boundary must match the
+        // plain per-row loop exactly (one add per element either way)
+        let mut rng = SplitMix64::new(77);
+        for rows in 1usize..=9 {
+            let cols = 5usize;
+            let dy: Vec<f32> = (0..rows).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let x: Vec<f32> = (0..cols).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let mut blocked: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut plain = blocked.clone();
+            outer_acc(&dy, &x, &mut blocked);
+            for (r, &d) in dy.iter().enumerate() {
+                for c in 0..cols {
+                    plain[r * cols + c] += d * x[c];
+                }
+            }
+            for (k, (a, b)) in blocked.iter().zip(&plain).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "rows {rows} elem {k}");
+            }
+        }
     }
 
     #[test]

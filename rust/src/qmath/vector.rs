@@ -25,6 +25,16 @@ pub struct QMatrix {
     pub codes: Vec<FloatSd8>,
     /// decoded f32 copy for the fast path (built once)
     decoded: Vec<f32>,
+    /// decoded **transposed** copy `[cols][rows]` — contiguous columns
+    /// for the backward kernels (`qmath::grad`), which contract
+    /// against `Wᵀ`: walking a column of `decoded` strides by `cols`
+    /// floats per element, while a `decoded_t` column is one cache-line
+    /// stream. Same values, same op order — the transposed-reuse
+    /// variant is bit-identical, it only changes the access pattern.
+    /// Built eagerly (+4 host bytes/weight even for inference-only
+    /// stacks — a deliberate simplicity trade; the paper's 1-byte
+    /// storage argument is about `codes`, see [`Self::storage_bytes`]).
+    decoded_t: Vec<f32>,
 }
 
 impl QMatrix {
@@ -32,8 +42,14 @@ impl QMatrix {
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), rows * cols);
         let codes: Vec<FloatSd8> = data.iter().map(|&v| FLOAT_SD8.encode(v)).collect();
-        let decoded = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
-        QMatrix { rows, cols, codes, decoded }
+        let decoded: Vec<f32> = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
+        let mut decoded_t = vec![0f32; decoded.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                decoded_t[c * rows + r] = decoded[r * cols + c];
+            }
+        }
+        QMatrix { rows, cols, codes, decoded, decoded_t }
     }
 
     #[inline]
@@ -44,6 +60,13 @@ impl QMatrix {
     #[inline]
     pub fn row_decoded(&self, r: usize) -> &[f32] {
         &self.decoded[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column `c` of the decoded matrix as a contiguous slice (the
+    /// transposed copy) — the backward kernels' access path.
+    #[inline]
+    pub fn col_decoded(&self, c: usize) -> &[f32] {
+        &self.decoded_t[c * self.rows..(c + 1) * self.rows]
     }
 
     /// Bytes of weight storage (8 bits/weight) — the paper's memory
@@ -65,7 +88,11 @@ impl QMatrix {
             let (m, code) = FLOAT_SD8.apply_update(masters[k], deltas[k]);
             masters[k] = m;
             self.codes[k] = code;
-            self.decoded[k] = FLOAT_SD8.decode(code);
+            let v = FLOAT_SD8.decode(code);
+            self.decoded[k] = v;
+            // keep the transposed fast-path copy in lockstep
+            let (r, c) = (k / self.cols, k % self.cols);
+            self.decoded_t[c * self.rows + r] = v;
         }
     }
 }
@@ -118,25 +145,101 @@ pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Four independent FP16 chains sharing one pass over the decoded
+/// weight row — the register-tiled inner block of [`matmul_fast`].
+/// Each stream's accumulation is the *exact* operation sequence of
+/// [`dot_row_chained`] (same f64 products, same left-to-right group
+/// sums, same one-FP16-round-per-group chain), so every lane of the
+/// result is bit-identical to a standalone per-stream call; the tiling
+/// only reuses each weight element four times from registers instead
+/// of re-streaming the row per stream.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dot_row_chained4(
+    row: &[f32],
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    bias: f32,
+) -> [f32; 4] {
+    let cols = row.len();
+    let mut acc = [bias; 4];
+    let mut c = 0;
+    while c + MAC_GROUP <= cols {
+        let (w0, w1, w2, w3) =
+            (row[c] as f64, row[c + 1] as f64, row[c + 2] as f64, row[c + 3] as f64);
+        let g0 = x0[c] as f64 * w0 + x0[c + 1] as f64 * w1 + x0[c + 2] as f64 * w2
+            + x0[c + 3] as f64 * w3;
+        let g1 = x1[c] as f64 * w0 + x1[c + 1] as f64 * w1 + x1[c + 2] as f64 * w2
+            + x1[c + 3] as f64 * w3;
+        let g2 = x2[c] as f64 * w0 + x2[c + 1] as f64 * w1 + x2[c + 2] as f64 * w2
+            + x2[c + 3] as f64 * w3;
+        let g3 = x3[c] as f64 * w0 + x3[c + 1] as f64 * w1 + x3[c + 2] as f64 * w2
+            + x3[c + 3] as f64 * w3;
+        acc[0] = Fp16::from_f64(acc[0] as f64 + g0).to_f32();
+        acc[1] = Fp16::from_f64(acc[1] as f64 + g1).to_f32();
+        acc[2] = Fp16::from_f64(acc[2] as f64 + g2).to_f32();
+        acc[3] = Fp16::from_f64(acc[3] as f64 + g3).to_f32();
+        c += MAC_GROUP;
+    }
+    if c < cols {
+        let mut g = [0f64; 4];
+        for cc in c..cols {
+            let wv = row[cc] as f64;
+            g[0] += x0[cc] as f64 * wv;
+            g[1] += x1[cc] as f64 * wv;
+            g[2] += x2[cc] as f64 * wv;
+            g[3] += x3[cc] as f64 * wv;
+        }
+        for (a, gk) in acc.iter_mut().zip(g) {
+            *a = Fp16::from_f64(*a as f64 + gk).to_f32();
+        }
+    }
+    acc
+}
+
 /// Batched fast matvec: `ys[b] = W · xs[b] + bias` for a whole batch.
 ///
-/// **Weight-stationary** loop order (the serving engine's amortization
-/// argument, mirroring the PE's §V-A batch loop): the row loop is
-/// outermost, so each decoded FloatSD8 row is streamed from memory
-/// once per *batch* instead of once per *stream*. For weight matrices
-/// larger than cache this is where batched serving wins its
-/// throughput. Each `(row, stream)` pair runs the identical
-/// [`dot_row_chained`] kernel, so results are bit-identical to
-/// `batch` independent [`matvec_fast`] calls.
+/// **Weight-stationary, register-tiled** loop order (the serving
+/// engine's amortization argument, mirroring the PE's §V-A batch
+/// loop): the row loop is outermost, so each decoded FloatSD8 row is
+/// streamed from memory once per *batch* instead of once per
+/// *stream*; inside a row, streams are processed four at a time
+/// ([`dot_row_chained4`]) so each weight element loaded is reused
+/// across four independent accumulation chains. For weight matrices
+/// larger than cache this is where batched serving (and the sharded
+/// trainer's forward) wins its throughput. Each `(row, stream)` pair
+/// runs the identical [`dot_row_chained`] operation sequence, so
+/// results are bit-identical to `batch` independent [`matvec_fast`]
+/// calls (pinned by `tests::matmul_fast_matches_per_row`).
 pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), batch * w.rows);
-    for r in 0..w.rows {
+    let (rows, cols) = (w.rows, w.cols);
+    for r in 0..rows {
         let row = w.row_decoded(r);
         let b_r = bias[r];
-        for b in 0..batch {
-            out[b * w.rows + r] = dot_row_chained(row, &xs[b * w.cols..(b + 1) * w.cols], b_r);
+        let mut b = 0usize;
+        while b + 4 <= batch {
+            let ys = dot_row_chained4(
+                row,
+                &xs[b * cols..(b + 1) * cols],
+                &xs[(b + 1) * cols..(b + 2) * cols],
+                &xs[(b + 2) * cols..(b + 3) * cols],
+                &xs[(b + 3) * cols..(b + 4) * cols],
+                b_r,
+            );
+            out[b * rows + r] = ys[0];
+            out[(b + 1) * rows + r] = ys[1];
+            out[(b + 2) * rows + r] = ys[2];
+            out[(b + 3) * rows + r] = ys[3];
+            b += 4;
+        }
+        while b < batch {
+            out[b * rows + r] = dot_row_chained(row, &xs[b * cols..(b + 1) * cols], b_r);
+            b += 1;
         }
     }
 }
@@ -189,24 +292,56 @@ mod tests {
 
     #[test]
     fn matmul_fast_matches_per_row() {
-        // includes cols not a multiple of MAC_GROUP (12, 7, 5) and a
-        // degenerate 1x1 — the weight-stationary loop reorder must stay
-        // bit-identical to per-stream matvec_fast in every tail case.
+        // includes cols not a multiple of MAC_GROUP (12, 7, 5), a
+        // degenerate 1x1, and every batch size across the 4-stream
+        // register-tile boundary (1..=9) — the weight-stationary tiled
+        // loop must stay bit-identical to per-stream matvec_fast in
+        // every tail case.
         for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1)] {
             let (w, _, bias) = setup(rows, cols, (rows * 1000 + cols) as u64);
-            let mut rng = SplitMix64::new(3);
-            let batch = 5;
-            let xs: Vec<f32> = (0..batch * cols)
-                .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
-                .collect();
-            let mut out = vec![0f32; batch * rows];
-            matmul_fast(&w, &xs, batch, &bias, &mut out);
-            for b in 0..batch {
-                let mut y = vec![0f32; rows];
-                matvec_fast(&w, &xs[b * cols..(b + 1) * cols], &bias, &mut y);
-                for (a, e) in out[b * rows..(b + 1) * rows].iter().zip(&y) {
-                    assert_eq!(a.to_bits(), e.to_bits(), "({rows}x{cols}) stream {b}");
+            for batch in 1usize..=9 {
+                let mut rng = SplitMix64::new(3 + batch as u64);
+                let xs: Vec<f32> = (0..batch * cols)
+                    .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
+                    .collect();
+                let mut out = vec![0f32; batch * rows];
+                matmul_fast(&w, &xs, batch, &bias, &mut out);
+                for b in 0..batch {
+                    let mut y = vec![0f32; rows];
+                    matvec_fast(&w, &xs[b * cols..(b + 1) * cols], &bias, &mut y);
+                    for (a, e) in out[b * rows..(b + 1) * rows].iter().zip(&y) {
+                        assert_eq!(
+                            a.to_bits(),
+                            e.to_bits(),
+                            "({rows}x{cols}) batch {batch} stream {b}"
+                        );
+                    }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_copy_tracks_updates() {
+        let mut rng = SplitMix64::new(31);
+        let mut masters: Vec<f32> = (0..5 * 3)
+            .map(|_| crate::formats::round_f16(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let mut w = QMatrix::from_f32(5, 3, &masters);
+        for r in 0..5 {
+            for c in 0..3 {
+                assert_eq!(w.col_decoded(c)[r], w.row_decoded(r)[c], "transpose out of sync");
+            }
+        }
+        let deltas: Vec<f32> = (0..15).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        w.apply_master_update(&mut masters, &deltas);
+        for r in 0..5 {
+            for c in 0..3 {
+                assert_eq!(
+                    w.col_decoded(c)[r],
+                    w.row_decoded(r)[c],
+                    "transpose out of sync after update"
+                );
             }
         }
     }

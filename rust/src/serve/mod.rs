@@ -65,7 +65,7 @@ use anyhow::bail;
 use crate::lstm::QLstmStack;
 use crate::tasks::TaskKind;
 
-pub use model::{DecodeParams, ServeModel, MAX_BEAM_WIDTH, MAX_DECODE_LEN};
+pub use model::{DecodeParams, ServeModel, MAX_BEAM_WIDTH, MAX_DECODE_LEN, MAX_LEN_NORM};
 pub use scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 pub use session::{SessionId, SessionStore};
 pub use stats::{ShardStats, StatsSnapshot};

@@ -27,7 +27,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::translation::BOS;
+use crate::data::translation::{BOS, EOS};
 use crate::lstm::model::{build_stack_from_params, ParamBag};
 use crate::lstm::{QLstmStack, StreamState};
 use crate::tasks::{read_task_cfg, TaskConfig, TaskKind};
@@ -41,20 +41,42 @@ pub const MAX_DECODE_LEN: usize = 1024;
 /// kernels as lanes, and the decoder scratch grows to hold them.
 pub const MAX_BEAM_WIDTH: usize = 16;
 
+/// Upper bound on [`DecodeParams::len_norm`]: α beyond this rewards
+/// length so aggressively the normalized score stops ranking anything.
+pub const MAX_LEN_NORM: f32 = 4.0;
+
 /// Parameters of one MT decode request.
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeParams {
-    /// target tokens to emit (the synthetic translation task has no
-    /// EOS, so the loop always runs exactly this long)
+    /// decode-step budget; lanes retire early when they emit
+    /// [`EOS`](crate::data::translation::EOS) (EOS included in the
+    /// reply), so this is a *maximum*, not an exact length
     pub max_len: usize,
     /// 1 = greedy (batched across concurrent decodes); >1 = beam
     /// search, beams batched as lanes of one request
     pub beam_width: usize,
+    /// length-normalization exponent α for beam scores: hypotheses
+    /// rank (and the reply scores) by `score / len^α`. `0.0` (the
+    /// default) disables it — raw summed log-probs, bit-identical to
+    /// the unnormalized engine. CLI: `--beam-len-norm <alpha>`.
+    pub len_norm: f32,
 }
 
 impl Default for DecodeParams {
     fn default() -> Self {
-        DecodeParams { max_len: 16, beam_width: 1 }
+        DecodeParams { max_len: 16, beam_width: 1, len_norm: 0.0 }
+    }
+}
+
+/// `score / len^α` — the beam ranking unit when length normalization
+/// is on. `α = 0` returns `score` unchanged (the exact same bits), so
+/// the default-off path is untouched arithmetic, not just an
+/// approximate no-op.
+pub(crate) fn length_normalized(score: f32, len: usize, alpha: f32) -> f32 {
+    if alpha == 0.0 {
+        score
+    } else {
+        score / (len.max(1) as f32).powf(alpha)
     }
 }
 
@@ -228,9 +250,10 @@ impl ServeModel {
 
     /// Offline, unbatched reference of the greedy decode loop: encoder
     /// [`QLstmStack::forward_from`] over the source, then one
-    /// sequential decoder step per emitted token. The serving decode
-    /// loop must match this bit-for-bit whatever micro-batch its steps
-    /// ride in (pinned by `tests/serve_tasks.rs`).
+    /// sequential decoder step per emitted token, stopping early when
+    /// the lane emits EOS (EOS included in the output). The serving
+    /// decode loop must match this bit-for-bit whatever micro-batch
+    /// its steps ride in (pinned by `tests/serve_tasks.rs`).
     pub fn reference_greedy_decode(
         &self,
         src: &[usize],
@@ -251,6 +274,9 @@ impl ServeModel {
             let next = argmax(lg);
             score += token_log_prob(lg, next);
             tokens.push(next);
+            if next == EOS as usize {
+                break;
+            }
             cur = next;
         }
         Ok((tokens, score))
@@ -307,6 +333,14 @@ pub(crate) fn validate_request(
                 return Err(format!(
                     "beam width {} out of range 1..={MAX_BEAM_WIDTH}",
                     p.beam_width
+                ));
+            }
+            // NaN fails the range check too — a NaN α would poison
+            // every score comparison in the beam
+            if !(0.0..=MAX_LEN_NORM).contains(&p.len_norm) {
+                return Err(format!(
+                    "beam length-norm alpha {} out of range 0..={MAX_LEN_NORM}",
+                    p.len_norm
                 ));
             }
         }
@@ -429,10 +463,30 @@ mod tests {
         let dec = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 6));
         let mt = ServeModel::from_parts(TaskKind::Mt, enc, Some(dec), None).unwrap();
         assert!(validate_request(&mt, &RequestKind::Decode(DecodeParams::default())).is_ok());
-        let too_long = DecodeParams { max_len: MAX_DECODE_LEN + 1, beam_width: 1 };
+        let too_long = DecodeParams { max_len: MAX_DECODE_LEN + 1, beam_width: 1, len_norm: 0.0 };
         assert!(validate_request(&mt, &RequestKind::Decode(too_long)).is_err());
-        let too_wide = DecodeParams { max_len: 4, beam_width: MAX_BEAM_WIDTH + 1 };
+        let too_wide =
+            DecodeParams { max_len: 4, beam_width: MAX_BEAM_WIDTH + 1, len_norm: 0.0 };
         assert!(validate_request(&mt, &RequestKind::Decode(too_wide)).is_err());
+        for bad_alpha in [-0.5f32, MAX_LEN_NORM + 0.5, f32::NAN] {
+            let p = DecodeParams { max_len: 4, beam_width: 2, len_norm: bad_alpha };
+            assert!(
+                validate_request(&mt, &RequestKind::Decode(p)).is_err(),
+                "alpha {bad_alpha} must be rejected"
+            );
+        }
+        let ok = DecodeParams { max_len: 4, beam_width: 2, len_norm: 0.7 };
+        assert!(validate_request(&mt, &RequestKind::Decode(ok)).is_ok());
+    }
+
+    #[test]
+    fn length_normalization_is_exact_noop_at_alpha_zero() {
+        let s = -3.372_817_f32;
+        assert_eq!(length_normalized(s, 7, 0.0).to_bits(), s.to_bits());
+        // α = 1 divides by the length
+        assert!((length_normalized(-8.0, 4, 1.0) - -2.0).abs() < 1e-6);
+        // longer hypotheses are penalized less per token under α > 0
+        assert!(length_normalized(-8.0, 8, 1.0) > length_normalized(-8.0, 4, 1.0));
     }
 
     #[test]

@@ -408,7 +408,7 @@ mod tests {
         assert_eq!(RequestKind::Sequence { tokens: vec![1, 2, 3] }.work(), 3);
         assert_eq!(RequestKind::Finalize.work(), 0);
         // a beam decode steps beam_width lanes per emitted token
-        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 2 }).work(), 18);
-        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 1 }).work(), 9);
+        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 2, len_norm: 0.0 }).work(), 18);
+        assert_eq!(RequestKind::Decode(DecodeParams { max_len: 9, beam_width: 1, len_norm: 0.0 }).work(), 9);
     }
 }

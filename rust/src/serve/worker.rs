@@ -22,13 +22,13 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::data::translation::BOS;
+use crate::data::translation::{BOS, EOS};
 use crate::lstm::{QLstmStack, StackScratch, StreamState};
 use crate::tasks::TaskKind;
 
 use super::model::{
-    argmax, log_softmax_terms, token_log_prob, validate_request, DecodeParams, ServeModel,
-    MAX_BEAM_WIDTH,
+    argmax, length_normalized, log_softmax_terms, token_log_prob, validate_request, DecodeParams,
+    ServeModel, MAX_BEAM_WIDTH,
 };
 use super::scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 use super::session::{SessionId, SessionStore};
@@ -382,9 +382,10 @@ fn run_decodes(
 
 /// Lockstep greedy decode over `states.len()` lanes: every lane feeds
 /// its own argmax back, and lanes drop out as they reach their
-/// `max_len`. Bit-identical to the single-lane
-/// [`ServeModel::reference_greedy_decode`] — lane composition is a
-/// throughput choice, never a numeric one.
+/// `max_len` — or **retire early at EOS** (EOS included in the lane's
+/// output, exactly like the offline reference). Bit-identical to the
+/// single-lane [`ServeModel::reference_greedy_decode`] — lane
+/// composition is a throughput choice, never a numeric one.
 fn greedy_decode_batch(
     dec: &QLstmStack,
     scratch: &mut StackScratch,
@@ -393,9 +394,11 @@ fn greedy_decode_batch(
 ) -> Vec<(Vec<usize>, f32)> {
     let n = states.len();
     let dn = dec.n_out();
+    let eos = EOS as usize;
     let mut toks: Vec<Vec<usize>> = max_lens.iter().map(|&m| Vec::with_capacity(m)).collect();
     let mut scores = vec![0f32; n];
     let mut cur: Vec<usize> = vec![BOS as usize; n];
+    let mut done = vec![false; n];
     let t_max = max_lens.iter().copied().max().unwrap_or(0);
     let mut ids: Vec<usize> = Vec::with_capacity(n);
     let mut active: Vec<usize> = Vec::with_capacity(n);
@@ -403,7 +406,7 @@ fn greedy_decode_batch(
         ids.clear();
         active.clear();
         for i in 0..n {
-            if t < max_lens[i] {
+            if t < max_lens[i] && !done[i] {
                 active.push(i);
                 ids.push(cur[i]);
             }
@@ -421,6 +424,9 @@ fn greedy_decode_batch(
             let next = argmax(lg);
             scores[i] += token_log_prob(lg, next);
             toks[i].push(next);
+            if next == eos {
+                done[i] = true;
+            }
             cur[i] = next;
         }
     }
@@ -434,11 +440,23 @@ struct Beam {
     state: StreamState,
 }
 
-/// Deterministic beam search for one request, beams batched as lanes.
-/// Ties break by (score desc, beam index asc, token asc), so
-/// `beam_width = 1` reproduces the greedy argmax path exactly — same
-/// tokens, and (via the shared [`token_log_prob`] arithmetic) the same
-/// score bits.
+/// Deterministic beam search for one request, live beams batched as
+/// lanes. Per round, candidate ties break by (raw score desc, beam
+/// index asc, token asc); a selected candidate whose token is EOS
+/// **finishes** (retires from the lanes, EOS included in its tokens)
+/// while the rest stay live — the loop ends when every selected
+/// hypothesis has finished or `max_len` rounds have run.
+///
+/// The winner is the best hypothesis (finished or still live) under
+/// the length-normalized score `score / len^α`
+/// ([`length_normalized`]; α = [`DecodeParams::len_norm`], default 0
+/// = raw scores, exact same bits as the unnormalized engine). Ties
+/// keep the earliest hypothesis in (finished-order, then live-order),
+/// so results are deterministic for every α.
+///
+/// `beam_width = 1` with α = 0 reproduces the greedy argmax path
+/// exactly — same tokens incl. the EOS early stop, and (via the
+/// shared [`token_log_prob`] arithmetic) the same score bits.
 fn beam_decode(
     dec: &QLstmStack,
     scratch: &mut StackScratch,
@@ -447,8 +465,17 @@ fn beam_decode(
 ) -> (Vec<usize>, f32) {
     let dn = dec.n_out();
     let k = p.beam_width.max(1);
+    let eos = EOS as usize;
+    let alpha = p.len_norm;
     let mut beams = vec![Beam { toks: Vec::new(), score: 0.0, state: init }];
+    // best finished hypothesis so far under the (normalized) final
+    // criterion; candidates arrive in deterministic priority order and
+    // only a strictly better score replaces, so earliest wins ties
+    let mut finished: Option<(f32, Beam)> = None;
     for _ in 0..p.max_len {
+        if beams.is_empty() {
+            break; // every surviving hypothesis has emitted EOS
+        }
         let ids: Vec<usize> =
             beams.iter().map(|b| b.toks.last().copied().unwrap_or(BOS as usize)).collect();
         for (slot, b) in beams.iter().enumerate() {
@@ -474,18 +501,42 @@ fn beam_decode(
         }
         cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
         cand.truncate(k);
-        let next: Vec<Beam> = cand
-            .into_iter()
-            .map(|(score, slot, tok)| {
-                let mut toks = beams[slot].toks.clone();
-                toks.push(tok);
-                Beam { toks, score, state: stepped[slot].clone() }
-            })
-            .collect();
+        let mut next: Vec<Beam> = Vec::with_capacity(k);
+        for (score, slot, tok) in cand {
+            let mut toks = beams[slot].toks.clone();
+            toks.push(tok);
+            let hyp = Beam { toks, score, state: stepped[slot].clone() };
+            if tok == eos {
+                let norm = length_normalized(hyp.score, hyp.toks.len(), alpha);
+                let better = match &finished {
+                    None => true,
+                    Some((best, _)) => norm > *best,
+                };
+                if better {
+                    finished = Some((norm, hyp));
+                }
+            } else {
+                next.push(hyp);
+            }
+        }
         beams = next;
     }
-    let best = beams.into_iter().next().expect("at least one beam");
-    (best.toks, best.score)
+    // final selection: finished hypotheses compete with whatever is
+    // still live at max_len; strictly-better-only keeps the earliest
+    // (finished before live) on exact ties
+    let mut best: Option<(f32, Beam)> = finished;
+    for b in beams {
+        let norm = length_normalized(b.score, b.toks.len(), alpha);
+        let better = match &best {
+            None => true,
+            Some((s, _)) => norm > *s,
+        };
+        if better {
+            best = Some((norm, b));
+        }
+    }
+    let (norm_score, b) = best.expect("at least one hypothesis");
+    (b.toks, norm_score)
 }
 
 #[cfg(test)]
@@ -512,7 +563,7 @@ mod tests {
             &dec_stack,
             &mut scratch,
             init,
-            DecodeParams { max_len, beam_width: 1 },
+            DecodeParams { max_len, beam_width: 1, len_norm: 0.0 },
         );
         assert_eq!(toks, want_toks, "k=1 beam must walk the greedy path");
         assert_eq!(score.to_bits(), want_score.to_bits(), "scores share the same arithmetic");
@@ -524,5 +575,66 @@ mod tests {
         let out = greedy_decode_batch(&dec_stack, &mut scratch, &mut states, &[max_len]);
         assert_eq!(out[0].0, want_toks);
         assert_eq!(out[0].1.to_bits(), want_score.to_bits());
+    }
+
+    /// EOS contract: a lane that stops short of `max_len` must have
+    /// stopped *because* it emitted EOS, EOS appears at most once and
+    /// only as the final token, and the beam engine obeys the same
+    /// rule for every length-normalization α (deterministically).
+    #[test]
+    fn decode_lanes_retire_at_eos_and_len_norm_is_deterministic() {
+        let enc = Arc::new(synthetic_stack(20, 4, 8, 1, 1, 21));
+        let dec_stack = Arc::new(synthetic_stack(24, 4, 8, 1, 24, 22));
+        let mt =
+            ServeModel::from_parts(TaskKind::Mt, enc, Some(dec_stack.clone()), None).unwrap();
+        let mut scratch = dec_stack.scratch(8);
+        let max_len = 12usize;
+        let eos = EOS as usize;
+
+        let check_toks = |toks: &[usize], what: &str| {
+            assert!(toks.len() <= max_len, "{what}: ran past max_len");
+            let eos_count = toks.iter().filter(|&&t| t == eos).count();
+            assert!(eos_count <= 1, "{what}: EOS emitted more than once");
+            if toks.len() < max_len {
+                assert_eq!(toks.last(), Some(&eos), "{what}: early stop without EOS");
+            }
+            if eos_count == 1 {
+                assert_eq!(toks.last(), Some(&eos), "{what}: EOS not final");
+            }
+        };
+
+        // several greedy lanes of different sources share the loop
+        let srcs = [vec![3usize, 7, 1], vec![15usize, 2, 9], vec![4usize, 4, 4]];
+        let mut states: Vec<StreamState> = srcs
+            .iter()
+            .map(|src| {
+                let mut st = mt.stack.new_stream_state();
+                mt.stack.forward_from(src, &mut st);
+                mt.bridge_state(&st)
+            })
+            .collect();
+        let out =
+            greedy_decode_batch(&dec_stack, &mut scratch, &mut states, &[max_len; 3]);
+        for (i, (toks, _)) in out.iter().enumerate() {
+            check_toks(toks, &format!("greedy lane {i}"));
+            // and each lane matches its single-lane reference
+            let (want, _) = mt.reference_greedy_decode(&srcs[i], max_len).unwrap();
+            assert_eq!(*toks, want, "greedy lane {i} diverged from reference");
+        }
+
+        // beams: deterministic for α off and α on
+        for alpha in [0.0f32, 0.8] {
+            let p = DecodeParams { max_len, beam_width: 3, len_norm: alpha };
+            let run = |scratch: &mut StackScratch| {
+                let mut st = mt.stack.new_stream_state();
+                mt.stack.forward_from(&srcs[0], &mut st);
+                beam_decode(&dec_stack, scratch, mt.bridge_state(&st), p)
+            };
+            let (t1, s1) = run(&mut scratch);
+            let (t2, s2) = run(&mut scratch);
+            assert_eq!(t1, t2, "beam decode must be deterministic at alpha {alpha}");
+            assert_eq!(s1.to_bits(), s2.to_bits());
+            check_toks(&t1, &format!("beam alpha {alpha}"));
+        }
     }
 }

@@ -15,7 +15,7 @@ use crate::data::lm::LmGen;
 use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, masked_cross_entropy_grad, StackTape};
+use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards, StackTape};
 
 use super::{
     load_stack, stack_tensors, to_step_labels, to_steps, SingleStack, TaskConfig, TaskEval,
@@ -67,32 +67,46 @@ impl TaskHead for LmTask {
 
     fn compute_window(&mut self, scale: f32) -> f64 {
         let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        let threads = self.cfg.threads;
         let batch = self.gen.next_train();
         let ids = to_steps(&batch.x, b_n, seq);
         let targets = to_step_labels(&batch.y, b_n, seq);
-        // state carries across windows: no reset
-        let (tape, logits) = self.core.forward_traced(&ids);
 
         let inv = 1.0 / (b_n * seq) as f32;
-        let mut loss_sum = 0f64;
-        let mut scored = 0usize;
-        let mut dlogits = Vec::with_capacity(seq);
-        for t in 0..seq {
-            let mut dl = vec![0f32; b_n * vocab];
-            let (l, n) = masked_cross_entropy_grad(
-                &logits[t],
-                &targets[t],
-                vocab,
-                None,
-                inv,
-                scale,
-                &mut dl,
-            );
-            loss_sum += l;
-            scored += n;
-            dlogits.push(dl);
-        }
-        self.core.backward(&tape, &dlogits);
+        let core = &mut self.core;
+        let stack = &core.stack;
+        let ids_ref = &ids;
+        let targets_ref = &targets;
+        run_shards(&mut core.shards, threads, |_, shard| {
+            shard.begin_window();
+            // state carries across windows: no reset — the lanes are
+            // contiguous streams and the shard owns them permanently
+            let ids_s = lane_slice_ids(ids_ref, shard.lo, shard.hi);
+            let (tape, logits) = shard.forward_traced(stack, &ids_s);
+            let lanes = shard.lanes();
+            let mut loss_sum = 0f64;
+            let mut scored = 0usize;
+            let mut dlogits = Vec::with_capacity(seq);
+            for t in 0..seq {
+                let mut dl = vec![0f32; lanes * vocab];
+                let (l, n) = masked_cross_entropy_grad(
+                    &logits[t],
+                    &targets_ref[t][shard.lo..shard.hi],
+                    vocab,
+                    None,
+                    inv,
+                    scale,
+                    &mut dl,
+                );
+                loss_sum += l;
+                scored += n;
+                dlogits.push(dl);
+            }
+            shard.loss = loss_sum;
+            shard.scored = scored;
+            shard.backward(stack, &tape, &dlogits);
+        });
+        let (loss_sum, scored) = core.collect_window();
         self.steps_done += 1;
         loss_sum / scored.max(1) as f64
     }
@@ -164,10 +178,13 @@ mod tests {
     fn evaluation_does_not_disturb_training_state() {
         let mut task = LmTask::new(tiny_cfg());
         task.compute_window(1024.0);
-        let hs_before = task.core.hs.clone();
+        let hs_before: Vec<Vec<Vec<f32>>> =
+            task.core.shards.iter().map(|s| s.hs.clone()).collect();
         let e1 = task.evaluate();
         let e2 = task.evaluate();
-        assert_eq!(task.core.hs, hs_before, "evaluate touched carried state");
+        let hs_after: Vec<Vec<Vec<f32>>> =
+            task.core.shards.iter().map(|s| s.hs.clone()).collect();
+        assert_eq!(hs_after, hs_before, "evaluate touched carried state");
         assert_eq!(e1.loss.to_bits(), e2.loss.to_bits(), "eval must be deterministic");
         assert!(e1.count > 0);
         assert!((e1.metric - e1.loss.exp()).abs() < 1e-12);

@@ -38,14 +38,15 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
-use crate::lstm::cell::{BatchScratch, QLstmCell};
+use crate::lstm::cell::QLstmCell;
 use crate::lstm::model::{Dense, Embedding, ParamBag, QLstmLayer};
 use crate::lstm::QLstmStack;
 use crate::tensorfile::json::Json;
 use crate::tensorfile::Tensor;
 use crate::train::optimizer::MasterCell;
 use crate::train::{
-    finalize_grads, LossScaler, MasterStack, StackGrads, StackTape, StateCot, StepOutcome,
+    check_threads, finalize_grads, merge_shards, LaneShard, LossScaler, MasterStack, PresetTier,
+    StackGrads, StackTape, StepOutcome,
 };
 
 /// The four offline task heads (paper Table IV).
@@ -111,6 +112,11 @@ pub struct TaskConfig {
     pub clip_norm: Option<f32>,
     pub log_every: usize,
     pub eval_batches: usize,
+    /// worker threads the lane shards are distributed over
+    /// (numerics-neutral — `--threads N` ≡ `--threads 1` bit-for-bit,
+    /// see [`crate::train::parallel`]); training-only, never
+    /// checkpointed
+    pub threads: usize,
     pub checkpoint: Option<PathBuf>,
 }
 
@@ -137,6 +143,7 @@ impl TaskConfig {
             clip_norm: None,
             log_every: 25,
             eval_batches: 4,
+            threads: 1,
             checkpoint: None,
         };
         match task {
@@ -157,6 +164,78 @@ impl TaskConfig {
                 cfg.vocab_tgt = 48;
                 cfg.hidden = 32;
                 cfg.seq = 8;
+            }
+        }
+        cfg
+    }
+
+    /// The `--preset {tiny,default,paper}` size tiers. `default` is
+    /// exactly [`Self::preset`] (the grid the eval harness scores
+    /// untrained tasks at — keep it stable); `tiny` is the CI smoke
+    /// scale; `paper` is the source paper's scale class (10k-class LM,
+    /// 2-layer 256-hidden stacks, with the other heads scaled to
+    /// match).
+    pub fn preset_tier(task: TaskKind, tier: PresetTier) -> TaskConfig {
+        let mut cfg = TaskConfig::preset(task);
+        match tier {
+            PresetTier::Default => {}
+            PresetTier::Tiny => {
+                cfg.dim = 8;
+                cfg.hidden = 12;
+                cfg.layers = 1;
+                cfg.batch = 4;
+                cfg.seq = 8;
+                cfg.steps = 80;
+                cfg.eval_batches = 2;
+                cfg.log_every = 0;
+                match task {
+                    TaskKind::Lm => cfg.vocab = 32,
+                    TaskKind::Pos => {
+                        cfg.vocab = 60;
+                        cfg.n_classes = 6;
+                    }
+                    TaskKind::Nli => {
+                        cfg.vocab = 24;
+                        cfg.batch = 8;
+                        cfg.seq = 6;
+                    }
+                    TaskKind::Mt => {
+                        cfg.vocab = 16;
+                        cfg.vocab_tgt = 16;
+                        cfg.seq = 4;
+                    }
+                }
+            }
+            PresetTier::Paper => {
+                cfg.dim = 128;
+                cfg.hidden = 256;
+                cfg.layers = 2;
+                cfg.batch = 16;
+                cfg.steps = 500;
+                cfg.lr = 0.1;
+                cfg.log_every = 10;
+                cfg.eval_batches = 2;
+                match task {
+                    TaskKind::Lm => {
+                        cfg.vocab = 10_000;
+                        cfg.seq = 32;
+                    }
+                    TaskKind::Pos => {
+                        cfg.vocab = 5_000;
+                        cfg.n_classes = 45;
+                        cfg.seq = 24;
+                    }
+                    TaskKind::Nli => {
+                        cfg.vocab = 2_000;
+                        cfg.batch = 32;
+                        cfg.seq = 16;
+                    }
+                    TaskKind::Mt => {
+                        cfg.vocab = 2_000;
+                        cfg.vocab_tgt = 2_000;
+                        cfg.seq = 16;
+                    }
+                }
             }
         }
         cfg
@@ -310,6 +389,8 @@ fn validate(cfg: &TaskConfig) -> Result<()> {
     if cfg.task == TaskKind::Nli && cfg.n_classes != 3 {
         bail!("nli: labels are 3-way (entail/contradict/neutral), got {}", cfg.n_classes);
     }
+    check_threads(cfg.threads)
+        .with_context(|| format!("{}: invalid --threads {}", cfg.task.name(), cfg.threads))?;
     crate::data::check_task_args(cfg.task.name(), cfg.vocab, cfg.vocab_tgt, cfg.n_classes)
 }
 
@@ -317,18 +398,23 @@ fn validate(cfg: &TaskConfig) -> Result<()> {
 // shared single-stack machinery
 // ---------------------------------------------------------------------
 
-/// One quantized stack + its FP16 masters + gradient/state buffers —
-/// the building block every head is made of (`mt` uses two: encoder
-/// and decoder).
+/// One quantized stack + its FP16 masters + the lane-sharded
+/// gradient/state buffers — the building block every head is made of
+/// (`mt` uses two: encoder and decoder).
+///
+/// Training state lives **per lane shard** ([`LaneShard`]): each
+/// shard owns its lanes' carried recurrent state, trace scratches,
+/// and gradient buffers, so a window's shards can run on the parallel
+/// engine ([`crate::train::run_shards`]) with no shared mutable
+/// state; [`Self::collect_window`] then tree-merges the shard
+/// gradients into [`Self::grads`] in the fixed canonical order.
 pub(crate) struct SingleStack {
     pub stack: QLstmStack,
     pub masters: MasterStack,
+    /// merged (tree-reduced) gradients of the last collected window
     pub grads: StackGrads,
-    /// per-layer flat recurrent state carried between windows (LM) or
-    /// reset per window (pos/nli/mt)
-    pub hs: Vec<Vec<f32>>,
-    pub cs: Vec<Vec<f32>>,
-    scratches: Vec<BatchScratch>,
+    /// the fixed lane partition's shards (a function of `batch` only)
+    pub shards: Vec<LaneShard>,
     pub batch: usize,
 }
 
@@ -348,31 +434,17 @@ impl SingleStack {
     }
 
     pub fn from_parts(stack: QLstmStack, masters: MasterStack, batch: usize) -> Self {
-        let (hs, cs) = stack.zero_flat_state(batch);
-        let scratches = stack.trace_scratches(batch);
+        let shards = LaneShard::build(&stack, batch);
         let grads = StackGrads::zeros(&stack);
-        SingleStack { stack, masters, grads, hs, cs, scratches, batch }
+        SingleStack { stack, masters, grads, shards, batch }
     }
 
-    /// Zero the carried recurrent state (per-window reset for tasks
-    /// whose batches are independent examples).
+    /// Zero every shard's carried recurrent state (per-window reset
+    /// for tasks whose batches are independent examples).
     pub fn reset_state(&mut self) {
-        for v in self.hs.iter_mut().chain(self.cs.iter_mut()) {
-            v.fill(0.0);
+        for s in &mut self.shards {
+            s.reset_state();
         }
-    }
-
-    /// Traced forward over `ids[t][b]`, advancing the carried state.
-    pub fn forward_traced(&mut self, ids: &[Vec<usize>]) -> (StackTape, Vec<Vec<f32>>) {
-        let mut tape = StackTape::new(&self.stack, self.batch);
-        let logits = self.stack.forward_batch_traced(
-            ids,
-            &mut self.hs,
-            &mut self.cs,
-            &mut self.scratches,
-            &mut tape,
-        );
-        (tape, logits)
     }
 
     /// Forward from fresh zero state with throwaway buffers — the
@@ -384,25 +456,16 @@ impl SingleStack {
         self.stack.forward_batch_traced(ids, &mut hs, &mut cs, &mut scr, &mut tape)
     }
 
-    /// BPTT into freshly zeroed gradient buffers.
-    pub fn backward(&mut self, tape: &StackTape, dlogits: &[Vec<f32>]) {
-        self.backward_carry(tape, dlogits, None);
+    /// Merge the shards' window results (fixed-order tree reduction,
+    /// see [`merge_shards`]) into [`Self::grads`]; returns the summed
+    /// `(loss, scored)` over all lanes.
+    pub fn collect_window(&mut self) -> (f64, usize) {
+        let SingleStack { shards, grads, .. } = self;
+        let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
+        merge_shards(&mut refs, grads)
     }
 
-    /// BPTT with the seq2seq state bridge; returns the per-layer
-    /// initial-state cotangents (see
-    /// [`QLstmStack::backward_batch_carry`]).
-    pub fn backward_carry(
-        &mut self,
-        tape: &StackTape,
-        dlogits: &[Vec<f32>],
-        carry: Option<&[StateCot]>,
-    ) -> Vec<StateCot> {
-        self.grads = StackGrads::zeros(&self.stack);
-        self.stack.backward_batch_carry(tape, dlogits, carry, &mut self.grads)
-    }
-
-    /// Finalize + apply the buffered gradients (single-stack heads).
+    /// Finalize + apply the merged gradients (single-stack heads).
     pub fn apply(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
         if !finalize_grads(&mut self.grads, scale, clip) {
             return false;
@@ -650,24 +713,28 @@ impl TaskTrainer {
 /// `floatsd-lstm train --task {lm,pos,nli,mt}` — see `main.rs` docs.
 pub fn run_train_cli(args: &Args) -> Result<()> {
     let task = TaskKind::parse(args.opt("task").unwrap_or("lm"))?;
-    let preset = TaskConfig::preset(task);
+    let tier = PresetTier::parse(args.opt("preset").unwrap_or("default"))?;
+    let preset = TaskConfig::preset_tier(task, tier);
     let parse_f32 = |key: &str, default: f32| -> Result<f32> {
         match args.opt(key) {
             None => Ok(default),
             Some(v) => Ok(v.parse::<f32>()?),
         }
     };
+    // explicit flags override the preset tier; shape validation (and
+    // its descriptive errors) happens in `build_task`, not via silent
+    // clamping here
     let cfg = TaskConfig {
         task,
         vocab: args.opt_usize("vocab", preset.vocab)?,
         vocab_tgt: args.opt_usize("vocab-tgt", preset.vocab_tgt)?,
         n_classes: args.opt_usize("classes", preset.n_classes)?,
-        dim: args.opt_usize("dim", preset.dim)?.max(1),
-        hidden: args.opt_usize("hidden", preset.hidden)?.max(1),
-        layers: args.opt_usize("layers", preset.layers)?.max(1),
-        batch: args.opt_usize("batch", preset.batch)?.max(1),
-        seq: args.opt_usize("seq", preset.seq)?.max(2),
-        steps: args.opt_usize("steps", preset.steps)?.max(1),
+        dim: args.opt_usize("dim", preset.dim)?,
+        hidden: args.opt_usize("hidden", preset.hidden)?,
+        layers: args.opt_usize("layers", preset.layers)?,
+        batch: args.opt_usize("batch", preset.batch)?,
+        seq: args.opt_usize("seq", preset.seq)?,
+        steps: args.opt_usize("steps", preset.steps)?,
         lr: parse_f32("lr", preset.lr)?,
         momentum: parse_f32("momentum", preset.momentum)?,
         seed: args.opt_u64("seed", preset.seed)?,
@@ -677,14 +744,16 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
             Some(v) => Some(v.parse::<f32>()?),
         },
         log_every: args.opt_usize("log-every", preset.log_every)?,
-        eval_batches: args.opt_usize("eval-batches", preset.eval_batches)?.max(1),
+        eval_batches: args.opt_usize("eval-batches", preset.eval_batches)?,
+        threads: args.opt_usize("threads", preset.threads)?,
         checkpoint: Some(PathBuf::from(
             args.opt_or("out", &format!("{}.tensors", task.name())),
         )),
     };
     println!(
-        "offline FloatSD8 multi-task training: task={} vocab={}{} dim={} hidden={} layers={} \
-         | batch={} seq={} steps={} lr={} momentum={} loss-scale={}",
+        "offline FloatSD8 multi-task training [{} preset]: task={} vocab={}{} dim={} hidden={} \
+         layers={} | batch={} seq={} steps={} threads={} lr={} momentum={} loss-scale={}",
+        tier.name(),
         task.name(),
         cfg.vocab,
         if task == TaskKind::Mt { format!("->{}", cfg.vocab_tgt) } else { String::new() },
@@ -694,6 +763,7 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
         cfg.batch,
         cfg.seq,
         cfg.steps,
+        cfg.threads,
         cfg.lr,
         cfg.momentum,
         cfg.loss_scale
@@ -755,6 +825,30 @@ mod tests {
         let mut cfg = TaskConfig::preset(TaskKind::Lm);
         cfg.seq = 1;
         assert!(build_task(&cfg).is_err());
+        let mut cfg = TaskConfig::preset(TaskKind::Lm);
+        cfg.threads = 0;
+        let err = build_task(&cfg).err().expect("0 threads must be refused").to_string();
+        assert!(err.contains("threads"), "got: {err}");
+    }
+
+    #[test]
+    fn preset_tiers_cover_every_task_and_validate() {
+        for kind in TaskKind::ALL {
+            let tiny = TaskConfig::preset_tier(kind, PresetTier::Tiny);
+            let default = TaskConfig::preset_tier(kind, PresetTier::Default);
+            let paper = TaskConfig::preset_tier(kind, PresetTier::Paper);
+            assert!(tiny.hidden < default.hidden && default.hidden < paper.hidden);
+            assert_eq!(paper.hidden, 256, "{}: paper tier is 256-wide", kind.name());
+            assert_eq!(paper.layers, 2, "{}: paper tier is 2-layer", kind.name());
+            for cfg in [tiny, default, paper] {
+                validate(&cfg).expect("preset tiers must validate");
+            }
+        }
+        assert_eq!(
+            TaskConfig::preset_tier(TaskKind::Lm, PresetTier::Paper).vocab,
+            10_000,
+            "paper lm is the 10k-class LM"
+        );
     }
 
     #[test]

@@ -6,7 +6,13 @@
 //! * **encoder** — source embedding → LSTM layers; its dense head is a
 //!   vestigial 1-wide layer that never feeds a loss (`dlogits = []`);
 //! * **decoder** — target embedding → LSTM layers → vocab_tgt head,
-//!   teacher-forced on `y[:, t]` to predict `y[:, t + 1]`.
+//!   teacher-forced on `y[:, t]` to predict `y[:, t + 1]` over the
+//!   `BOS · mapped-reverse · EOS` target row (the last scored position
+//!   is the EOS the serving decode loop retires on).
+//!
+//! Windows run on the lane-sharded parallel engine: encoder/decoder
+//! shard pairs share a lane span, so the state bridge (forward copy +
+//! backward [`crate::train::StateCot`] carry) never crosses a shard.
 //!
 //! The decoder's initial `(h, c)` per layer is the encoder's final
 //! state; in the backward pass the decoder's initial-state cotangents
@@ -25,7 +31,10 @@ use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::qmath::grad::grads_overflow;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, finalize_grads, masked_cross_entropy_grad, StackTape};
+use crate::train::{
+    eval_ce, finalize_grads, lane_slice_ids, masked_cross_entropy_grad, run_shards, LaneShard,
+    StackTape,
+};
 
 use super::{
     load_stack, stack_tensors, to_steps, SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind,
@@ -74,7 +83,7 @@ impl MtTask {
         let gen = MtGen::new(
             cfg.batch,
             cfg.seq,
-            cfg.seq + 1,
+            cfg.seq + 2,
             cfg.vocab,
             cfg.vocab_tgt,
             cfg.eval_batches,
@@ -83,7 +92,15 @@ impl MtTask {
         MtTask { cfg, enc, dec, gen, steps_done: 0 }
     }
 
-    /// Teacher-forcing split of the flat target matrix `y [B][S+1]`:
+    /// Teacher-forced decoder steps per example: the target row is
+    /// `BOS · mapped-reverse · EOS` (length `seq + 2`), so the decoder
+    /// consumes `seq + 1` inputs (`y[:, :-1]`) to predict `seq + 1`
+    /// targets (`y[:, 1:]`) — the last scored position is EOS itself.
+    fn dec_steps(s_len: usize) -> usize {
+        s_len + 1
+    }
+
+    /// Teacher-forcing split of the flat target matrix `y [B][S+2]`:
     /// decoder inputs `y[:, t]` and targets `y[:, t + 1]`, both in the
     /// per-step column layout.
     fn teacher_forcing(
@@ -91,12 +108,13 @@ impl MtTask {
         batch: usize,
         s_len: usize,
     ) -> (Vec<Vec<usize>>, Vec<Vec<i32>>) {
-        let t_len = s_len + 1;
+        let t_len = s_len + 2;
+        let steps = Self::dec_steps(s_len);
         assert_eq!(y.len(), batch * t_len);
-        let inputs = (0..s_len)
+        let inputs = (0..steps)
             .map(|t| (0..batch).map(|b| y[b * t_len + t] as usize).collect())
             .collect();
-        let targets = (0..s_len)
+        let targets = (0..steps)
             .map(|t| (0..batch).map(|b| y[b * t_len + t + 1]).collect())
             .collect();
         (inputs, targets)
@@ -114,41 +132,67 @@ impl TaskHead for MtTask {
 
     fn compute_window(&mut self, scale: f32) -> f64 {
         let (b_n, s_len, v_tgt) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab_tgt);
+        let threads = self.cfg.threads;
+        let t_steps = Self::dec_steps(s_len);
         let batch = self.gen.next_train();
         let src_ids = to_steps(&batch.x, b_n, s_len);
         let (dec_ids, targets) = Self::teacher_forcing(&batch.y, b_n, s_len);
 
-        self.enc.reset_state();
-        let (tape_e, _enc_logits) = self.enc.forward_traced(&src_ids);
-        // state bridge: decoder starts from the encoder's final state
-        self.dec.hs.clone_from(&self.enc.hs);
-        self.dec.cs.clone_from(&self.enc.cs);
-        let (tape_d, logits) = self.dec.forward_traced(&dec_ids);
+        let inv = 1.0 / (b_n * t_steps) as f32;
+        let enc_stack = &self.enc.stack;
+        let dec_stack = &self.dec.stack;
+        let src_ref = &src_ids;
+        let dec_ref = &dec_ids;
+        let targets_ref = &targets;
+        // encoder and decoder shard the same lane spans by
+        // construction (one fixed partition of `batch`), so pairing by
+        // index keeps each lane's state bridge entirely shard-local
+        let mut pairs: Vec<(&mut LaneShard, &mut LaneShard)> =
+            self.enc.shards.iter_mut().zip(self.dec.shards.iter_mut()).collect();
+        run_shards(&mut pairs, threads, |_, (enc, dec)| {
+            enc.begin_window();
+            dec.begin_window();
+            enc.reset_state();
+            let src_s = lane_slice_ids(src_ref, enc.lo, enc.hi);
+            let (tape_e, _enc_logits) = enc.forward_traced(enc_stack, &src_s);
+            // state bridge: decoder starts from the encoder's final state
+            dec.hs.clone_from(&enc.hs);
+            dec.cs.clone_from(&enc.cs);
+            let dec_s = lane_slice_ids(dec_ref, dec.lo, dec.hi);
+            let (tape_d, logits) = dec.forward_traced(dec_stack, &dec_s);
 
-        let inv = 1.0 / (b_n * s_len) as f32;
-        let mut loss_sum = 0f64;
-        let mut scored = 0usize;
-        let mut dlogits = Vec::with_capacity(s_len);
-        for t in 0..s_len {
-            let mut dl = vec![0f32; b_n * v_tgt];
-            let (l, n) = masked_cross_entropy_grad(
-                &logits[t],
-                &targets[t],
-                v_tgt,
-                Some(PAD),
-                inv,
-                scale,
-                &mut dl,
-            );
-            loss_sum += l;
-            scored += n;
-            dlogits.push(dl);
-        }
+            let lanes = dec.lanes();
+            let mut loss_sum = 0f64;
+            let mut scored = 0usize;
+            let mut dlogits = Vec::with_capacity(t_steps);
+            for t in 0..t_steps {
+                let mut dl = vec![0f32; lanes * v_tgt];
+                let (l, n) = masked_cross_entropy_grad(
+                    &logits[t],
+                    &targets_ref[t][dec.lo..dec.hi],
+                    v_tgt,
+                    Some(PAD),
+                    inv,
+                    scale,
+                    &mut dl,
+                );
+                loss_sum += l;
+                scored += n;
+                dlogits.push(dl);
+            }
+            // the window loss lives on the decoder shard (the encoder
+            // never feeds a loss)
+            dec.loss = loss_sum;
+            dec.scored = scored;
 
-        // decoder backward hands back its initial-state cotangents;
-        // they re-enter the encoder at its last step
-        let cots = self.dec.backward_carry(&tape_d, &dlogits, None);
-        self.enc.backward_carry(&tape_e, &[], Some(&cots));
+            // decoder backward hands back its initial-state cotangents;
+            // they re-enter the encoder at its last step
+            let cots = dec.backward_carry(dec_stack, &tape_d, &dlogits, None);
+            enc.backward_carry(enc_stack, &tape_e, &[], Some(&cots));
+        });
+        drop(pairs);
+        let (loss_sum, scored) = self.dec.collect_window();
+        let _ = self.enc.collect_window();
         self.steps_done += 1;
         loss_sum / scored.max(1) as f64
     }
@@ -171,7 +215,8 @@ impl TaskHead for MtTask {
 
     fn evaluate(&self) -> TaskEval {
         let (b_n, s_len, v_tgt) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab_tgt);
-        let t_len = s_len + 1;
+        let t_steps = Self::dec_steps(s_len);
+        let t_len = s_len + 2;
         let mut loss_sum = 0f64;
         let mut count = 0usize;
         for batch in self.gen.eval_set() {
@@ -190,6 +235,7 @@ impl TaskHead for MtTask {
             let logits = self.dec.stack.forward_batch_traced(
                 &dec_ids, &mut ehs, &mut ecs, &mut dscr, &mut dtape,
             );
+            debug_assert_eq!(logits.len(), t_steps);
             for (t, row) in logits.iter().enumerate() {
                 for b in 0..b_n {
                     let y = batch.y[b * t_len + t + 1];
@@ -260,7 +306,8 @@ mod tests {
         let e1 = task.evaluate();
         let e2 = task.evaluate();
         assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
-        // MtGen emits no PAD targets: count = eval_batches · B · S
-        assert_eq!(e1.count, 2 * 3 * 4);
+        // MtGen emits no PAD targets: count = eval_batches · B · (S+1)
+        // (the +1 scores the EOS position the decoder must predict)
+        assert_eq!(e1.count, 2 * 3 * (4 + 1));
     }
 }

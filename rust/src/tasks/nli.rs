@@ -17,7 +17,7 @@ use crate::data::nli::NliGen;
 use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, masked_cross_entropy_grad};
+use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards};
 
 use super::{
     argmax, load_stack, stack_tensors, to_steps, SingleStack, TaskConfig, TaskEval, TaskHead,
@@ -69,26 +69,40 @@ impl TaskHead for NliTask {
     fn compute_window(&mut self, scale: f32) -> f64 {
         let (b_n, n_cls) = (self.cfg.batch, self.cfg.n_classes);
         let t_total = 2 * self.cfg.seq;
+        let threads = self.cfg.threads;
         let batch = self.gen.next_train();
         // x is flat [B, 2, seq] — lane-major with 2·seq tokens per
         // lane, exactly the column transpose below
         let ids = to_steps(&batch.x, b_n, t_total);
-        self.core.reset_state();
-        let (tape, logits) = self.core.forward_traced(&ids);
 
         let inv = 1.0 / b_n as f32;
-        let mut dlogits: Vec<Vec<f32>> =
-            (0..t_total).map(|_| vec![0f32; b_n * n_cls]).collect();
-        let (loss_sum, scored) = masked_cross_entropy_grad(
-            &logits[t_total - 1],
-            &batch.y,
-            n_cls,
-            None,
-            inv,
-            scale,
-            &mut dlogits[t_total - 1],
-        );
-        self.core.backward(&tape, &dlogits);
+        let core = &mut self.core;
+        let stack = &core.stack;
+        let ids_ref = &ids;
+        let labels_ref = &batch.y;
+        run_shards(&mut core.shards, threads, |_, shard| {
+            shard.begin_window();
+            shard.reset_state(); // every batch is a fresh set of pairs
+            let ids_s = lane_slice_ids(ids_ref, shard.lo, shard.hi);
+            let (tape, logits) = shard.forward_traced(stack, &ids_s);
+            let lanes = shard.lanes();
+            // loss attaches only to the last step's logits
+            let mut dlogits: Vec<Vec<f32>> =
+                (0..t_total).map(|_| vec![0f32; lanes * n_cls]).collect();
+            let (loss_sum, scored) = masked_cross_entropy_grad(
+                &logits[t_total - 1],
+                &labels_ref[shard.lo..shard.hi],
+                n_cls,
+                None,
+                inv,
+                scale,
+                &mut dlogits[t_total - 1],
+            );
+            shard.loss = loss_sum;
+            shard.scored = scored;
+            shard.backward(stack, &tape, &dlogits);
+        });
+        let (loss_sum, scored) = core.collect_window();
         self.steps_done += 1;
         loss_sum / scored.max(1) as f64
     }

@@ -13,7 +13,7 @@ use crate::data::pos::PosGen;
 use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, masked_cross_entropy_grad};
+use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards};
 
 use super::{
     argmax, load_stack, stack_tensors, to_step_labels, to_steps, SingleStack, TaskConfig,
@@ -71,32 +71,45 @@ impl TaskHead for PosTask {
 
     fn compute_window(&mut self, scale: f32) -> f64 {
         let (b_n, seq, n_tags) = (self.cfg.batch, self.cfg.seq, self.cfg.n_classes);
+        let threads = self.cfg.threads;
         let batch = self.gen.next_train();
         let ids = to_steps(&batch.x, b_n, seq);
         let targets = to_step_labels(&batch.y, b_n, seq);
-        self.core.reset_state();
-        let (tape, logits) = self.core.forward_traced(&ids);
 
         let inv = 1.0 / (b_n * seq) as f32;
-        let mut loss_sum = 0f64;
-        let mut scored = 0usize;
-        let mut dlogits = Vec::with_capacity(seq);
-        for t in 0..seq {
-            let mut dl = vec![0f32; b_n * n_tags];
-            let (l, n) = masked_cross_entropy_grad(
-                &logits[t],
-                &targets[t],
-                n_tags,
-                None,
-                inv,
-                scale,
-                &mut dl,
-            );
-            loss_sum += l;
-            scored += n;
-            dlogits.push(dl);
-        }
-        self.core.backward(&tape, &dlogits);
+        let core = &mut self.core;
+        let stack = &core.stack;
+        let ids_ref = &ids;
+        let targets_ref = &targets;
+        run_shards(&mut core.shards, threads, |_, shard| {
+            shard.begin_window();
+            shard.reset_state(); // every batch is a fresh set of sentences
+            let ids_s = lane_slice_ids(ids_ref, shard.lo, shard.hi);
+            let (tape, logits) = shard.forward_traced(stack, &ids_s);
+            let lanes = shard.lanes();
+            let mut loss_sum = 0f64;
+            let mut scored = 0usize;
+            let mut dlogits = Vec::with_capacity(seq);
+            for t in 0..seq {
+                let mut dl = vec![0f32; lanes * n_tags];
+                let (l, n) = masked_cross_entropy_grad(
+                    &logits[t],
+                    &targets_ref[t][shard.lo..shard.hi],
+                    n_tags,
+                    None,
+                    inv,
+                    scale,
+                    &mut dl,
+                );
+                loss_sum += l;
+                scored += n;
+                dlogits.push(dl);
+            }
+            shard.loss = loss_sum;
+            shard.scored = scored;
+            shard.backward(stack, &tape, &dlogits);
+        });
+        let (loss_sum, scored) = core.collect_window();
         self.steps_done += 1;
         loss_sum / scored.max(1) as f64
     }

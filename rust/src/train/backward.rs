@@ -56,6 +56,13 @@ impl CellGrads {
             *a += b;
         }
     }
+
+    /// Zero in place (buffer reuse across windows — no reallocation).
+    pub fn reset(&mut self) {
+        self.dwx.fill(0.0);
+        self.dwh.fill(0.0);
+        self.db.fill(0.0);
+    }
 }
 
 /// Parameter gradients of a whole stack.
@@ -75,6 +82,37 @@ impl StackGrads {
             layers: stack.layers.iter().map(|l| CellGrads::zeros(&l.fwd)).collect(),
             head_w: vec![0.0; stack.head.w.rows * stack.head.w.cols],
             head_b: vec![0.0; stack.head.w.rows],
+        }
+    }
+
+    /// Zero every tensor in place — a window's shard buffers are
+    /// reused, never reallocated (see `train::parallel`).
+    pub fn reset(&mut self) {
+        self.emb.fill(0.0);
+        for l in &mut self.layers {
+            l.reset();
+        }
+        self.head_w.fill(0.0);
+        self.head_b.fill(0.0);
+    }
+
+    /// Elementwise accumulate another stack's gradients — the shard
+    /// merge step of the fixed-order tree reduction
+    /// ([`crate::train::merge_shards`]).
+    pub fn add_assign(&mut self, other: &StackGrads) {
+        debug_assert_eq!(self.emb.len(), other.emb.len());
+        debug_assert_eq!(self.layers.len(), other.layers.len());
+        for (a, b) in self.emb.iter_mut().zip(&other.emb) {
+            *a += b;
+        }
+        for (l, o) in self.layers.iter_mut().zip(&other.layers) {
+            l.add_assign(o);
+        }
+        for (a, b) in self.head_w.iter_mut().zip(&other.head_w) {
+            *a += b;
+        }
+        for (a, b) in self.head_b.iter_mut().zip(&other.head_b) {
+            *a += b;
         }
     }
 

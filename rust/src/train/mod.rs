@@ -18,7 +18,12 @@
 //!   [`crate::formats::FloatSdFormat::apply_update`];
 //! * [`trainer`] — the `floatsd-lstm train` loop over the
 //!   [`crate::data::lm`] char-LM stream, writing `.tensors`
-//!   checkpoints the serve subsystem loads directly.
+//!   checkpoints the serve subsystem loads directly;
+//! * [`parallel`] — the lane-sharded data-parallel window engine
+//!   (`std::thread` shards + a fixed-order tree reduction) that makes
+//!   `--threads N` bit-identical to `--threads 1`; both [`trainer`]
+//!   and the generic [`crate::tasks::TaskTrainer`] run their windows
+//!   on it.
 //!
 //! The multi-task layer ([`crate::tasks`]) builds on these same
 //! pieces: [`backward`] additionally exposes the carry-aware
@@ -37,11 +42,16 @@
 pub mod backward;
 pub mod loss;
 pub mod optimizer;
+pub mod parallel;
 pub mod tape;
 pub mod trainer;
 
 pub use backward::{CellGrads, StackGrads, StateCot};
 pub use loss::{cross_entropy_grad, eval_ce, masked_cross_entropy_grad};
 pub use optimizer::{finalize_grads, LossScaler, MasterStack};
+pub use parallel::{
+    check_threads, lane_slice_ids, lane_spans, merge_shards, run_shards, LaneShard,
+    LANE_SHARDS_MAX,
+};
 pub use tape::{CellTape, StackTape};
-pub use trainer::{run_cli, StepOutcome, TrainConfig, TrainReport, Trainer};
+pub use trainer::{run_cli, PresetTier, StepOutcome, TrainConfig, TrainReport, Trainer};

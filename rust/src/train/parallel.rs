@@ -1,0 +1,305 @@
+//! Lane-sharded data-parallel window execution — the training-side
+//! sibling of the `serve` worker pool (`std::thread` shards; rayon is
+//! deliberately out).
+//!
+//! ## The determinism contract
+//!
+//! A truncated-BPTT window over `B` batch lanes is embarrassingly
+//! parallel until the gradient reduction: every lane's forward state,
+//! tape, and per-lane parameter gradient are independent, and every
+//! kernel on the path is per-stream bit-identical whatever batch it
+//! rides in (pinned by `tests/batched_equivalence.rs`). The only place
+//! thread count could leak into the numbers is the **order** f32/f64
+//! partial sums are folded. So that order is fixed structurally:
+//!
+//! * the lane partition ([`lane_spans`]) is a pure function of the
+//!   *batch size alone* — never of `--threads`;
+//! * each shard computes its span's gradients/loss into its own
+//!   buffers ([`LaneShard`]), on whichever OS thread happens to run it;
+//! * [`merge_shards`] folds the per-shard results in a **fixed
+//!   pairwise tree over the shard index** ((0,1)(2,3) → ((01)(23)) →
+//!   …), single-threaded, after every shard has finished.
+//!
+//! `--threads N` therefore only changes *which* OS thread executes a
+//! shard, never what any shard computes nor how results combine:
+//! `--threads N` is bit-identical to `--threads 1` by construction
+//! (pinned end-to-end — checkpoints and per-step loss traces — by
+//! `tests/train_parallel.rs`).
+//!
+//! Threads beyond the shard count idle; shards beyond the thread count
+//! queue onto the same threads in fixed chunks. [`LANE_SHARDS_MAX`]
+//! caps per-window gradient-buffer memory (one [`StackGrads`] per
+//! shard) and is the parallelism ceiling.
+
+use anyhow::bail;
+
+use crate::lstm::cell::BatchScratch;
+use crate::lstm::QLstmStack;
+
+use super::backward::{StackGrads, StateCot};
+use super::tape::StackTape;
+
+/// Upper bound on lane shards per stack (== the parallel-speedup
+/// ceiling, and the per-window gradient-buffer multiplier).
+pub const LANE_SHARDS_MAX: usize = 8;
+
+/// The fixed lane partition: contiguous `[lo, hi)` spans covering
+/// `0..batch`, `min(batch, LANE_SHARDS_MAX)` of them, the first
+/// `batch % n` spans one lane longer. A pure function of `batch` —
+/// **never** of the thread count — which is what makes the reduction
+/// order thread-count-invariant.
+pub fn lane_spans(batch: usize) -> Vec<(usize, usize)> {
+    assert!(batch >= 1, "lane partition needs at least one lane");
+    let n = batch.min(LANE_SHARDS_MAX);
+    let base = batch / n;
+    let rem = batch % n;
+    let mut spans = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        spans.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, batch);
+    spans
+}
+
+/// `--threads` validation shared by every trainer config: an error,
+/// not a panic (mirroring `data::make_source`'s style).
+pub fn check_threads(threads: usize) -> crate::Result<()> {
+    if threads == 0 {
+        bail!("--threads 0: the trainer needs at least one worker thread");
+    }
+    if threads > 256 {
+        bail!("--threads {threads} out of range 1..=256");
+    }
+    Ok(())
+}
+
+/// One lane shard's private slice of the training state: the carried
+/// recurrent state, trace scratches, gradient buffers, and window
+/// loss for lanes `[lo, hi)`. All buffers are lane-local, so shards
+/// never share mutable state — a shard's window is a pure function of
+/// (weights, its lanes' tokens, its carried state).
+pub struct LaneShard {
+    /// first lane (inclusive)
+    pub lo: usize,
+    /// last lane (exclusive)
+    pub hi: usize,
+    /// per-layer carried recurrent state, flat `[(hi-lo)*H]`
+    pub hs: Vec<Vec<f32>>,
+    pub cs: Vec<Vec<f32>>,
+    scratches: Vec<BatchScratch>,
+    /// this shard's parameter gradients for the current window
+    pub grads: StackGrads,
+    /// summed (unscaled, f64) window loss over this shard's lanes
+    pub loss: f64,
+    /// scored positions behind `loss`
+    pub scored: usize,
+}
+
+impl LaneShard {
+    pub fn new(stack: &QLstmStack, lo: usize, hi: usize) -> Self {
+        assert!(hi > lo, "empty lane span");
+        let lanes = hi - lo;
+        let (hs, cs) = stack.zero_flat_state(lanes);
+        LaneShard {
+            lo,
+            hi,
+            hs,
+            cs,
+            scratches: stack.trace_scratches(lanes),
+            grads: StackGrads::zeros(stack),
+            loss: 0.0,
+            scored: 0,
+        }
+    }
+
+    /// The full shard set for a stack: one [`LaneShard`] per
+    /// [`lane_spans`] entry.
+    pub fn build(stack: &QLstmStack, batch: usize) -> Vec<LaneShard> {
+        lane_spans(batch).into_iter().map(|(lo, hi)| LaneShard::new(stack, lo, hi)).collect()
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Zero the carried recurrent state (per-window reset for tasks
+    /// whose batches are independent examples).
+    pub fn reset_state(&mut self) {
+        for v in self.hs.iter_mut().chain(self.cs.iter_mut()) {
+            v.fill(0.0);
+        }
+    }
+
+    /// Zero the gradient/loss accumulators for a new window (the
+    /// buffers are reused across windows — no per-step allocation).
+    pub fn begin_window(&mut self) {
+        self.grads.reset();
+        self.loss = 0.0;
+        self.scored = 0;
+    }
+
+    /// Traced forward over this shard's lanes (`ids[t]` already
+    /// lane-sliced to `hi - lo` entries), advancing the carried state.
+    pub fn forward_traced(
+        &mut self,
+        stack: &QLstmStack,
+        ids: &[Vec<usize>],
+    ) -> (StackTape, Vec<Vec<f32>>) {
+        let mut tape = StackTape::new(stack, self.lanes());
+        let logits = stack.forward_batch_traced(
+            ids,
+            &mut self.hs,
+            &mut self.cs,
+            &mut self.scratches,
+            &mut tape,
+        );
+        (tape, logits)
+    }
+
+    /// BPTT into this shard's gradient buffers (call
+    /// [`Self::begin_window`] first).
+    pub fn backward(&mut self, stack: &QLstmStack, tape: &StackTape, dlogits: &[Vec<f32>]) {
+        stack.backward_batch(tape, dlogits, &mut self.grads);
+    }
+
+    /// [`Self::backward`] with the seq2seq state-cotangent bridge —
+    /// see [`QLstmStack::backward_batch_carry`].
+    pub fn backward_carry(
+        &mut self,
+        stack: &QLstmStack,
+        tape: &StackTape,
+        dlogits: &[Vec<f32>],
+        carry: Option<&[StateCot]>,
+    ) -> Vec<StateCot> {
+        stack.backward_batch_carry(tape, dlogits, carry, &mut self.grads)
+    }
+}
+
+/// Column-slice of per-step ids: `out[t] = ids[t][lo..hi]` — the
+/// forward inputs must be shard-owned `Vec`s (the traced forward
+/// consumes `&[Vec<usize>]`); labels, by contrast, are sliced inline
+/// at the loss call sites (`&targets[t][lo..hi]`), no copy needed.
+pub fn lane_slice_ids(ids: &[Vec<usize>], lo: usize, hi: usize) -> Vec<Vec<usize>> {
+    ids.iter().map(|row| row[lo..hi].to_vec()).collect()
+}
+
+/// Run `f(shard_index, item)` for every item, distributing items over
+/// at most `threads` scoped OS threads in fixed contiguous chunks
+/// (item `i` runs on thread `i / ceil(n / threads)`).
+///
+/// `f` must be a pure function of the item (plus shared immutable
+/// captures) — it runs identically wherever it is scheduled, which is
+/// the "what a shard computes never depends on threads" half of the
+/// determinism contract. `threads <= 1` runs inline with no spawn at
+/// all, so single-threaded training pays zero threading overhead.
+pub fn run_shards<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads.min(n));
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (chunk_idx, chunk) in items.chunks_mut(per).enumerate() {
+            let base = chunk_idx * per;
+            scope.spawn(move || {
+                for (j, item) in chunk.iter_mut().enumerate() {
+                    f(base + j, item);
+                }
+            });
+        }
+    });
+}
+
+/// The fixed-order reduction: fold per-shard gradients in a pairwise
+/// binary tree over the shard index — stride-1 pairs (0,1)(2,3)…,
+/// then stride-2, … — mutating the left operand of each pair; the
+/// fully merged gradients end in shard 0's buffer and are swapped
+/// into `out`. Losses/scored counts fold in plain shard-index order.
+///
+/// Runs single-threaded *after* every shard completed, and the tree
+/// shape depends only on the shard count (a pure function of the
+/// batch size), so the merged bits are identical for every
+/// `--threads` value.
+pub fn merge_shards(shards: &mut [&mut LaneShard], out: &mut StackGrads) -> (f64, usize) {
+    let n = shards.len();
+    assert!(n >= 1, "merge needs at least one shard");
+    let mut loss = 0f64;
+    let mut scored = 0usize;
+    for s in shards.iter() {
+        loss += s.loss;
+        scored += s.scored;
+    }
+    let mut stride = 1usize;
+    while stride < n {
+        let mut i = 0usize;
+        while i + stride < n {
+            let (left, right) = shards.split_at_mut(i + stride);
+            left[i].grads.add_assign(&right[0].grads);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    std::mem::swap(out, &mut shards[0].grads);
+    (loss, scored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn lane_spans_cover_contiguously_and_ignore_threads() {
+        for batch in [1usize, 2, 3, 6, 7, 8, 11, 16, 33] {
+            let spans = lane_spans(batch);
+            assert_eq!(spans.len(), batch.min(LANE_SHARDS_MAX), "batch {batch}");
+            assert_eq!(spans[0].0, 0);
+            assert_eq!(spans.last().unwrap().1, batch);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap in partition for batch {batch}");
+                // balanced: sizes differ by at most one, larger first
+                assert!(w[0].1 - w[0].0 >= w[1].1 - w[1].0);
+            }
+        }
+        // non-divisible example pinned exactly
+        assert_eq!(lane_spans(6), vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6)]);
+        assert_eq!(
+            lane_spans(11),
+            vec![(0, 2), (2, 4), (4, 6), (6, 7), (7, 8), (8, 9), (9, 10), (10, 11)]
+        );
+    }
+
+    #[test]
+    fn run_shards_visits_every_item_exactly_once_with_its_own_index() {
+        for threads in [1usize, 2, 3, 7, 12] {
+            let mut items: Vec<(usize, usize)> = (0..7).map(|i| (i, 0)).collect();
+            let visits = AtomicUsize::new(0);
+            run_shards(&mut items, threads, |idx, item| {
+                assert_eq!(idx, item.0, "index/item mismatch at threads={threads}");
+                item.1 += 1;
+                visits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(visits.load(Ordering::SeqCst), 7);
+            assert!(items.iter().all(|&(_, v)| v == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn check_threads_rejects_degenerate_counts() {
+        assert!(check_threads(0).is_err());
+        assert!(check_threads(1).is_ok());
+        assert!(check_threads(256).is_ok());
+        assert!(check_threads(257).is_err());
+    }
+}

@@ -4,14 +4,22 @@
 //! `lm` lanes are contiguous streams, so each training batch is one
 //! truncation window of the same B parallel streams).
 //!
-//! Behind `floatsd-lstm train`: trains a tiny char-LM from scratch,
+//! Since the lane-sharded refactor the window itself runs on the
+//! [`super::parallel`] engine: the batch lanes are split into fixed
+//! shards (a function of the batch size alone), each shard's traced
+//! forward + BPTT runs on whichever of the `cfg.threads` scoped
+//! threads picks it up, and a fixed-order tree reduction merges the
+//! shard gradients — so `--threads N` is **bit-identical** to
+//! `--threads 1` (pinned by `tests/train_parallel.rs`).
+//!
+//! Behind `floatsd-lstm train`: trains a char-LM from scratch,
 //! entirely in pure rust, and writes a `.tensors` checkpoint that
 //! `floatsd-lstm serve --model <ckpt>` loads directly — the
 //! train→checkpoint→serve loop in one binary.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cli::Args;
 use crate::data::lm::LmGen;
@@ -22,8 +30,37 @@ use crate::tensorfile::{write_tensors, Tensor};
 use super::backward::StackGrads;
 use super::loss::cross_entropy_grad;
 use super::optimizer::{finalize_grads, LossScaler, MasterStack};
-use super::tape::StackTape;
-use crate::lstm::cell::BatchScratch;
+use super::parallel::{check_threads, lane_slice_ids, merge_shards, run_shards, LaneShard};
+
+/// The three size tiers every trainer CLI accepts via `--preset`:
+/// `tiny` (CI smoke scale), `default` (the historical miniature), and
+/// `paper` (the source paper's scale class — 10k-vocab LM, 2×256
+/// hidden stacks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PresetTier {
+    Tiny,
+    Default,
+    Paper,
+}
+
+impl PresetTier {
+    pub fn parse(s: &str) -> Result<PresetTier> {
+        Ok(match s {
+            "tiny" => PresetTier::Tiny,
+            "default" => PresetTier::Default,
+            "paper" => PresetTier::Paper,
+            other => bail!("unknown preset {other:?} (expected tiny|default|paper)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PresetTier::Tiny => "tiny",
+            PresetTier::Default => "default",
+            PresetTier::Paper => "paper",
+        }
+    }
+}
 
 /// Configuration of one offline training run.
 #[derive(Clone, Debug)]
@@ -42,12 +79,22 @@ pub struct TrainConfig {
     pub loss_scale: f32,
     pub clip_norm: Option<f32>,
     pub log_every: usize,
+    /// worker threads the lane shards are distributed over
+    /// (numerics-neutral — see `train::parallel`)
+    pub threads: usize,
     pub checkpoint: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig {
+        TrainConfig::preset(PresetTier::Default)
+    }
+}
+
+impl TrainConfig {
+    /// The char-LM trainer's size tiers (`--preset`).
+    pub fn preset(tier: PresetTier) -> TrainConfig {
+        let mut cfg = TrainConfig {
             vocab: 64,
             dim: 16,
             hidden: 24,
@@ -61,8 +108,55 @@ impl Default for TrainConfig {
             loss_scale: 1024.0,
             clip_norm: None,
             log_every: 25,
+            threads: 1,
             checkpoint: None,
+        };
+        match tier {
+            PresetTier::Default => {}
+            PresetTier::Tiny => {
+                cfg.vocab = 32;
+                cfg.dim = 8;
+                cfg.hidden = 12;
+                cfg.batch = 4;
+                cfg.seq = 8;
+                cfg.steps = 60;
+                cfg.log_every = 0;
+            }
+            PresetTier::Paper => {
+                cfg.vocab = 10_000;
+                cfg.dim = 128;
+                cfg.hidden = 256;
+                cfg.layers = 2;
+                cfg.batch = 16;
+                cfg.seq = 32;
+                cfg.steps = 200;
+                cfg.lr = 0.1;
+                cfg.log_every = 10;
+            }
         }
+        cfg
+    }
+
+    /// Turn every would-be constructor panic into a descriptive error
+    /// (the `data::make_source` validation style): shape floors,
+    /// window length, lane/thread consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab < 2 {
+            bail!("train: vocab {} too small (need >= 2)", self.vocab);
+        }
+        if self.dim == 0 || self.hidden == 0 || self.layers == 0 {
+            bail!("train: dim/hidden/layers must all be >= 1");
+        }
+        if self.batch == 0 {
+            bail!("train: batch must be >= 1 — it is the lane count the shards split");
+        }
+        if self.seq < 2 {
+            bail!("train: seq {} too short (need >= 2)", self.seq);
+        }
+        if self.steps == 0 {
+            bail!("train: steps must be >= 1");
+        }
+        check_threads(self.threads)
     }
 }
 
@@ -92,16 +186,17 @@ pub struct Trainer {
     pub stack: QLstmStack,
     pub masters: MasterStack,
     pub scaler: LossScaler,
+    /// merged (tree-reduced) gradients of the last window
+    pub grads: StackGrads,
     data: LmGen,
-    hs: Vec<Vec<f32>>,
-    cs: Vec<Vec<f32>>,
-    scratches: Vec<BatchScratch>,
+    shards: Vec<LaneShard>,
     pub steps_done: usize,
     pub steps_applied: usize,
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig) -> Self {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
         let (masters, stack) = MasterStack::init_with_stack(
             cfg.vocab,
             cfg.dim,
@@ -110,27 +205,30 @@ impl Trainer {
             cfg.seed,
         );
         let data = LmGen::char_lm(cfg.batch, cfg.seq, cfg.vocab, cfg.seed ^ 0xDA7A);
-        let (hs, cs) = stack.zero_flat_state(cfg.batch);
-        let scratches = stack.trace_scratches(cfg.batch);
+        let shards = LaneShard::build(&stack, cfg.batch);
+        let grads = StackGrads::zeros(&stack);
         let scaler = LossScaler::new(cfg.loss_scale);
-        Trainer {
+        Ok(Trainer {
             cfg,
             stack,
             masters,
             scaler,
+            grads,
             data,
-            hs,
-            cs,
-            scratches,
+            shards,
             steps_done: 0,
             steps_applied: 0,
-        }
+        })
     }
 
-    /// One truncated-BPTT window: forward (traced), loss, backward,
-    /// grad post-processing, update (or skip on overflow).
+    /// One truncated-BPTT window: every lane shard runs its traced
+    /// forward + loss + BPTT (in parallel over `cfg.threads`), the
+    /// fixed-order tree reduction merges the shard gradients, then the
+    /// single FP16-master/FloatSD8 update applies (or the loss scaler
+    /// skips on overflow).
     pub fn step(&mut self) -> StepOutcome {
         let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        let threads = self.cfg.threads;
         let batch = self.data.next_train();
         let mut ids = vec![vec![0usize; b_n]; seq];
         let mut targets = vec![vec![0usize; b_n]; seq];
@@ -141,32 +239,43 @@ impl Trainer {
             }
         }
 
-        let mut tape = StackTape::new(&self.stack, b_n);
-        let logits = self.stack.forward_batch_traced(
-            &ids,
-            &mut self.hs,
-            &mut self.cs,
-            &mut self.scratches,
-            &mut tape,
-        );
-
         let scale = self.scaler.scale;
         let inv_count = 1.0 / (b_n * seq) as f32;
-        let mut loss_sum = 0f64;
-        let mut dlogits = Vec::with_capacity(seq);
-        for t in 0..seq {
-            let mut dl = vec![0f32; b_n * vocab];
-            loss_sum +=
-                cross_entropy_grad(&logits[t], &targets[t], vocab, inv_count, scale, &mut dl);
-            dlogits.push(dl);
-        }
+        let stack = &self.stack;
+        let ids_ref = &ids;
+        let targets_ref = &targets;
+        run_shards(&mut self.shards, threads, |_, shard| {
+            shard.begin_window();
+            let ids_s = lane_slice_ids(ids_ref, shard.lo, shard.hi);
+            let (tape, logits) = shard.forward_traced(stack, &ids_s);
+            let lanes = shard.lanes();
+            let mut loss = 0f64;
+            let mut dlogits = Vec::with_capacity(seq);
+            for t in 0..seq {
+                let mut dl = vec![0f32; lanes * vocab];
+                loss += cross_entropy_grad(
+                    &logits[t],
+                    &targets_ref[t][shard.lo..shard.hi],
+                    vocab,
+                    inv_count,
+                    scale,
+                    &mut dl,
+                );
+                dlogits.push(dl);
+            }
+            shard.loss = loss;
+            shard.scored = lanes * seq;
+            shard.backward(stack, &tape, &dlogits);
+        });
+        let (loss_sum, _scored) = {
+            let Trainer { shards, grads, .. } = self;
+            let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
+            merge_shards(&mut refs, grads)
+        };
 
-        let mut grads = StackGrads::zeros(&self.stack);
-        self.stack.backward_batch(&tape, &dlogits, &mut grads);
-
-        let applied = finalize_grads(&mut grads, scale, self.cfg.clip_norm);
+        let applied = finalize_grads(&mut self.grads, scale, self.cfg.clip_norm);
         if applied {
-            self.masters.apply(&mut self.stack, &grads, self.cfg.lr, self.cfg.momentum);
+            self.masters.apply(&mut self.stack, &self.grads, self.cfg.lr, self.cfg.momentum);
             self.scaler.on_good_step();
             self.steps_applied += 1;
         } else {
@@ -270,6 +379,8 @@ impl Trainer {
 
 /// `floatsd-lstm train` (offline path) — see `main.rs` docs.
 pub fn run_cli(args: &Args) -> Result<()> {
+    let tier = PresetTier::parse(args.opt("preset").unwrap_or("default"))?;
+    let preset = TrainConfig::preset(tier);
     let parse_f32 = |key: &str, default: f32| -> Result<f32> {
         match args.opt(key) {
             None => Ok(default),
@@ -277,27 +388,29 @@ pub fn run_cli(args: &Args) -> Result<()> {
         }
     };
     let cfg = TrainConfig {
-        vocab: args.opt_usize("vocab", 64)?.max(2),
-        dim: args.opt_usize("dim", 16)?.max(1),
-        hidden: args.opt_usize("hidden", 24)?.max(1),
-        layers: args.opt_usize("layers", 1)?.max(1),
-        batch: args.opt_usize("batch", 8)?.max(1),
-        seq: args.opt_usize("seq", 16)?.max(2),
-        steps: args.opt_usize("steps", 400)?.max(1),
-        lr: parse_f32("lr", 0.3)?,
-        momentum: parse_f32("momentum", 0.9)?,
-        seed: args.opt_usize("seed", 42)? as u64,
-        loss_scale: parse_f32("loss-scale", 1024.0)?,
+        vocab: args.opt_usize("vocab", preset.vocab)?,
+        dim: args.opt_usize("dim", preset.dim)?,
+        hidden: args.opt_usize("hidden", preset.hidden)?,
+        layers: args.opt_usize("layers", preset.layers)?,
+        batch: args.opt_usize("batch", preset.batch)?,
+        seq: args.opt_usize("seq", preset.seq)?,
+        steps: args.opt_usize("steps", preset.steps)?,
+        lr: parse_f32("lr", preset.lr)?,
+        momentum: parse_f32("momentum", preset.momentum)?,
+        seed: args.opt_u64("seed", preset.seed)?,
+        loss_scale: parse_f32("loss-scale", preset.loss_scale)?,
         clip_norm: match args.opt("clip") {
             None => None,
             Some(v) => Some(v.parse::<f32>()?),
         },
-        log_every: args.opt_usize("log-every", 25)?,
+        log_every: args.opt_usize("log-every", preset.log_every)?,
+        threads: args.opt_usize("threads", preset.threads)?,
         checkpoint: Some(PathBuf::from(args.opt_or("out", "char_lm.tensors"))),
     };
     println!(
-        "offline FloatSD8 training: vocab={} dim={} hidden={} layers={} | batch={} seq={} \
-         steps={} lr={} momentum={} loss-scale={}",
+        "offline FloatSD8 training [{} preset]: vocab={} dim={} hidden={} layers={} | batch={} \
+         seq={} steps={} threads={} lr={} momentum={} loss-scale={}",
+        tier.name(),
         cfg.vocab,
         cfg.dim,
         cfg.hidden,
@@ -305,11 +418,12 @@ pub fn run_cli(args: &Args) -> Result<()> {
         cfg.batch,
         cfg.seq,
         cfg.steps,
+        cfg.threads,
         cfg.lr,
         cfg.momentum,
         cfg.loss_scale
     );
-    let mut trainer = Trainer::new(cfg);
+    let mut trainer = Trainer::new(cfg)?;
     let report = trainer.train()?;
     let head: f64 = report.losses.iter().take(10).sum::<f64>()
         / report.losses.len().min(10).max(1) as f64;
@@ -343,13 +457,14 @@ mod tests {
             loss_scale: 1024.0,
             clip_norm: None,
             log_every: 0,
+            threads: 1,
             checkpoint: None,
         }
     }
 
     #[test]
     fn steps_run_and_loss_is_sane() {
-        let mut t = Trainer::new(tiny_cfg());
+        let mut t = Trainer::new(tiny_cfg()).unwrap();
         let out = t.step();
         assert!(out.loss.is_finite());
         // first-window loss must sit near ln(vocab) at random init
@@ -360,7 +475,7 @@ mod tests {
 
     #[test]
     fn weights_stay_on_their_grids_after_updates() {
-        let mut t = Trainer::new(tiny_cfg());
+        let mut t = Trainer::new(tiny_cfg()).unwrap();
         for _ in 0..3 {
             t.step();
         }
@@ -375,6 +490,37 @@ mod tests {
         }
         for &e in &t.stack.embed.table {
             assert_eq!(e, crate::formats::round_f16(e));
+        }
+    }
+
+    #[test]
+    fn degenerate_configs_error_instead_of_panicking() {
+        let mut cfg = tiny_cfg();
+        cfg.threads = 0;
+        let err = Trainer::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("--threads"), "got: {err}");
+        let mut cfg = tiny_cfg();
+        cfg.seq = 1;
+        assert!(Trainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.batch = 0;
+        assert!(Trainer::new(cfg).is_err());
+        assert!(PresetTier::parse("papr").is_err());
+        assert_eq!(PresetTier::parse("paper").unwrap(), PresetTier::Paper);
+    }
+
+    #[test]
+    fn preset_tiers_scale_monotonically() {
+        let tiny = TrainConfig::preset(PresetTier::Tiny);
+        let default = TrainConfig::preset(PresetTier::Default);
+        let paper = TrainConfig::preset(PresetTier::Paper);
+        assert!(tiny.vocab < default.vocab && default.vocab < paper.vocab);
+        assert!(tiny.hidden < default.hidden && default.hidden < paper.hidden);
+        assert_eq!(paper.vocab, 10_000, "paper tier: 10k-class LM");
+        assert_eq!(paper.hidden, 256, "paper tier: 256-wide stacks");
+        assert_eq!(paper.layers, 2, "paper tier: 2-layer stacks");
+        for cfg in [tiny, default, paper] {
+            cfg.validate().expect("presets must validate");
         }
     }
 }

@@ -6,7 +6,7 @@
 //! training mysteriously failing, so it gets pinned here instead.
 
 use floatsd_lstm::data::nli::{NEG, PAD};
-use floatsd_lstm::data::translation::{BOS, PAD as MT_PAD};
+use floatsd_lstm::data::translation::{BOS, EOS, PAD as MT_PAD};
 use floatsd_lstm::data::{make_source, Batch, BatchSource};
 
 /// (task, x_shape, y_shape, vocab, vocab_tgt, n_classes)
@@ -16,7 +16,7 @@ fn specs() -> Vec<Spec> {
     vec![
         ("pos", vec![12], vec![12], 96, 0, 8),
         ("nli", vec![2, 10], vec![], 64, 0, 3),
-        ("mt", vec![9], vec![10], 48, 48, 0),
+        ("mt", vec![9], vec![11], 48, 48, 0),
     ]
 }
 
@@ -117,24 +117,31 @@ fn nli_labels_in_class_range_and_pad_only_in_hypothesis() {
 }
 
 #[test]
-fn mt_targets_are_bos_prefixed_and_in_target_vocab() {
+fn mt_targets_are_bos_prefixed_eos_terminated_and_in_target_vocab() {
     let (v_src, v_tgt, s_len, batch) = (48usize, 48usize, 9usize, 6usize);
-    let mut src =
-        make_source("mt", batch, &[s_len], &[s_len + 1], v_src, v_tgt, 0, 2, 9).unwrap();
+    let t_len = s_len + 2;
+    let mut src = make_source("mt", batch, &[s_len], &[t_len], v_src, v_tgt, 0, 2, 9).unwrap();
     for _ in 0..10 {
         let b = src.next_train();
         for lane in 0..batch {
-            let tgt = &b.y[lane * (s_len + 1)..(lane + 1) * (s_len + 1)];
+            let tgt = &b.y[lane * t_len..(lane + 1) * t_len];
             assert_eq!(tgt[0], BOS, "target must open with BOS");
-            for &w in &tgt[1..] {
+            assert_eq!(tgt[t_len - 1], EOS, "target must close with EOS");
+            for &w in &tgt[1..t_len - 1] {
                 assert!((0..v_tgt as i32).contains(&w), "target token {w} out of vocab");
                 assert_ne!(w, MT_PAD, "generator never emits PAD content");
                 assert_ne!(w, BOS, "BOS only at position 0");
+                assert_ne!(w, EOS, "EOS only at the final position");
             }
             let src_row = &b.x[lane * s_len..(lane + 1) * s_len];
             for &w in src_row {
-                assert!((2..v_src as i32).contains(&w), "source token {w} outside content ids");
+                assert!((3..v_src as i32).contains(&w), "source token {w} outside content ids");
             }
         }
     }
+    // old +1-shaped targets must be refused with the new contract
+    let err = make_source("mt", batch, &[s_len], &[s_len + 1], v_src, v_tgt, 0, 1, 9)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("+ 2"), "got: {err}");
 }

@@ -302,7 +302,7 @@ fn mt_checkpoint_greedy_decode_matches_offline_reference() {
     let gen = MtGen::new(
         cfg.batch,
         cfg.seq,
-        cfg.seq + 1,
+        cfg.seq + 2,
         cfg.vocab,
         cfg.vocab_tgt,
         cfg.eval_batches,
@@ -317,7 +317,7 @@ fn mt_checkpoint_greedy_decode_matches_offline_reference() {
             );
         }
     }
-    let max_len = cfg.seq + 1;
+    let max_len = cfg.seq + 2;
 
     // pipeline per session: encode, then greedy, beam-1, and two
     // beam-3 decodes (the encoder context is read-only for decodes,
@@ -327,10 +327,12 @@ fn mt_checkpoint_greedy_decode_matches_offline_reference() {
         let (tx, rx) = mpsc::channel();
         let sid = i as u64;
         server.submit_sequence(sid, src.clone(), tx.clone()).unwrap();
-        server.decode(sid, DecodeParams { max_len, beam_width: 1 }, tx.clone()).unwrap();
-        server.decode(sid, DecodeParams { max_len, beam_width: 1 }, tx.clone()).unwrap();
-        server.decode(sid, DecodeParams { max_len, beam_width: 3 }, tx.clone()).unwrap();
-        server.decode(sid, DecodeParams { max_len, beam_width: 3 }, tx).unwrap();
+        let greedy = DecodeParams { max_len, beam_width: 1, len_norm: 0.0 };
+        let beam = DecodeParams { max_len, beam_width: 3, len_norm: 0.0 };
+        server.decode(sid, greedy, tx.clone()).unwrap();
+        server.decode(sid, greedy, tx.clone()).unwrap();
+        server.decode(sid, beam, tx.clone()).unwrap();
+        server.decode(sid, beam, tx).unwrap();
         rxs.push(rx);
     }
     for (i, rx) in rxs.iter().enumerate() {
@@ -365,8 +367,17 @@ fn mt_checkpoint_greedy_decode_matches_offline_reference() {
         // decodes are repeatable: the encoder context is not consumed
         assert_eq!(greedy2_toks, want_toks);
         assert_eq!(greedy2_score.to_bits(), want_score.to_bits());
-        // beam search is deterministic, and emits max_len tokens
-        assert_eq!(beam_toks.len(), max_len);
+        // beam search is deterministic; lanes retire at EOS so length
+        // is bounded by (not pinned to) max_len, and an early stop
+        // must be an EOS stop
+        assert!(!beam_toks.is_empty() && beam_toks.len() <= max_len);
+        if beam_toks.len() < max_len {
+            assert_eq!(
+                beam_toks.last(),
+                Some(&(floatsd_lstm::data::translation::EOS as usize)),
+                "beam stopped early without EOS (src {i})"
+            );
+        }
         assert_eq!(beam_toks, beam2_toks, "beam decode must be deterministic (src {i})");
         assert_eq!(beam_score.to_bits(), beam2_score.to_bits());
     }

@@ -22,13 +22,14 @@ fn smoke_cfg() -> TrainConfig {
         loss_scale: 1024.0,
         clip_norm: None,
         log_every: 0,
+        threads: 1,
         checkpoint: None,
     }
 }
 
 #[test]
 fn char_lm_loss_drops_and_checkpoint_serves_bit_identically() {
-    let mut trainer = Trainer::new(smoke_cfg());
+    let mut trainer = Trainer::new(smoke_cfg()).expect("valid config");
     let report = trainer.train().expect("training");
     for (s, &l) in report.losses.iter().enumerate() {
         assert!(l.is_finite(), "loss went non-finite at step {s}");
@@ -70,8 +71,8 @@ fn char_lm_loss_drops_and_checkpoint_serves_bit_identically() {
 fn training_is_deterministic_under_a_fixed_seed() {
     let mut cfg = smoke_cfg();
     cfg.steps = 25;
-    let mut a = Trainer::new(cfg.clone());
-    let mut b = Trainer::new(cfg);
+    let mut a = Trainer::new(cfg.clone()).expect("valid config");
+    let mut b = Trainer::new(cfg).expect("valid config");
     let ra = a.train().expect("run a");
     let rb = b.train().expect("run b");
     assert_eq!(ra.losses.len(), rb.losses.len());
@@ -89,7 +90,7 @@ fn dynamic_loss_scaling_recovers_from_an_oversized_scale() {
     // the scaler must skip + halve until updates apply again — and the
     // model (only touched by applied steps) must stay finite throughout
     cfg.loss_scale = 1e12;
-    let mut trainer = Trainer::new(cfg);
+    let mut trainer = Trainer::new(cfg).expect("valid config");
     let report = trainer.train().expect("training");
     assert!(report.steps_skipped > 0, "oversized scale must trigger skips");
     assert!(report.final_scale < 1e12, "scale must back off");

@@ -1,0 +1,127 @@
+//! Shard-determinism pins for the lane-sharded parallel training
+//! engine: `--threads N` must be **bit-identical** to `--threads 1` —
+//! byte-identical checkpoints and bit-identical per-step loss traces
+//! — for all four task heads and the char-LM trainer, including
+//! thread counts that don't divide the lane count and thread counts
+//! exceeding the shard count.
+//!
+//! Why this holds (and what would break it): the lane partition is a
+//! pure function of the batch size, every kernel is per-stream
+//! bit-identical, and the shard reduction is a fixed-order tree run
+//! after all shards complete — see `rust/src/train/parallel.rs` docs.
+//! Any accidental shared mutable state between shards, or any
+//! thread-count-dependent fold order, shows up here as a one-bit
+//! checkpoint diff.
+
+use std::path::PathBuf;
+
+use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
+use floatsd_lstm::train::{lane_spans, PresetTier, TrainConfig, Trainer, LANE_SHARDS_MAX};
+
+/// A miniature of each task with a deliberately awkward lane count:
+/// batch 6 → six 1-lane shards, so `--threads 4` gets uneven chunks
+/// and `--threads 7` has more threads than shards.
+fn tiny_task_cfg(kind: TaskKind) -> TaskConfig {
+    let mut cfg = TaskConfig::preset_tier(kind, PresetTier::Tiny);
+    cfg.batch = 6;
+    cfg.steps = 5;
+    cfg.eval_batches = 2;
+    cfg.log_every = 0;
+    cfg.seed = 33;
+    cfg
+}
+
+/// Train `steps` windows at a given thread count; return the per-step
+/// loss bits and the checkpoint file bytes.
+fn run_task(kind: TaskKind, threads: usize) -> (Vec<u64>, Vec<u8>) {
+    let dir = std::env::temp_dir().join("fsd_train_parallel");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path: PathBuf = dir.join(format!("{}_{}t.tensors", kind.name(), threads));
+    let mut cfg = tiny_task_cfg(kind);
+    cfg.threads = threads;
+    cfg.checkpoint = Some(path.clone());
+    let mut trainer = TaskTrainer::new(cfg).expect("valid task config");
+    let report = trainer.train().expect("tiny training run");
+    let bits: Vec<u64> = report.losses.iter().map(|l| l.to_bits()).collect();
+    let bytes = std::fs::read(&path).expect("checkpoint written");
+    (bits, bytes)
+}
+
+#[test]
+fn all_four_tasks_are_bit_identical_across_thread_counts() {
+    for kind in TaskKind::ALL {
+        let (base_bits, base_bytes) = run_task(kind, 1);
+        assert!(!base_bits.is_empty());
+        for threads in [2usize, 4, 7] {
+            let (bits, bytes) = run_task(kind, threads);
+            assert_eq!(
+                bits,
+                base_bits,
+                "{}: per-step loss trace diverged at --threads {threads}",
+                kind.name()
+            );
+            assert_eq!(
+                bytes,
+                base_bytes,
+                "{}: checkpoint bytes diverged at --threads {threads}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn char_lm_trainer_is_bit_identical_across_thread_counts() {
+    let run = |threads: usize| -> Vec<u64> {
+        let mut cfg = TrainConfig::preset(PresetTier::Tiny);
+        cfg.batch = 5; // five 1-lane shards: 2/4/7 threads all chunk unevenly
+        cfg.steps = 8;
+        cfg.seed = 9;
+        cfg.log_every = 0;
+        cfg.threads = threads;
+        let mut t = Trainer::new(cfg).expect("valid config");
+        t.train().expect("run").losses.iter().map(|l| l.to_bits()).collect()
+    };
+    let base = run(1);
+    for threads in [2usize, 4, 7] {
+        assert_eq!(run(threads), base, "char-LM loss trace diverged at --threads {threads}");
+    }
+}
+
+/// The partition itself is a pure function of the batch size — if it
+/// ever consults the thread count, the bit-identity contract is gone.
+#[test]
+fn lane_partition_depends_on_batch_only() {
+    assert_eq!(lane_spans(1), vec![(0, 1)]);
+    for batch in [2usize, 5, 6, 8, 11, 19] {
+        let spans = lane_spans(batch);
+        assert_eq!(spans.len(), batch.min(LANE_SHARDS_MAX), "batch {batch}");
+        assert_eq!(spans.first().unwrap().0, 0);
+        assert_eq!(spans.last().unwrap().1, batch);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "batch {batch}: spans must tile contiguously");
+        }
+    }
+}
+
+/// Config ergonomics: degenerate `--threads` / shape values come back
+/// as descriptive errors, not panics, from both trainer fronts.
+#[test]
+fn degenerate_training_configs_error_descriptively() {
+    let mut cfg = tiny_task_cfg(TaskKind::Lm);
+    cfg.threads = 0;
+    let err = TaskTrainer::new(cfg).unwrap_err().to_string();
+    assert!(err.contains("threads"), "got: {err}");
+
+    let mut cfg = tiny_task_cfg(TaskKind::Mt);
+    cfg.threads = 300;
+    assert!(TaskTrainer::new(cfg).is_err(), "absurd thread counts must be refused");
+
+    let mut cfg = TrainConfig::preset(PresetTier::Tiny);
+    cfg.batch = 0;
+    let err = Trainer::new(cfg).unwrap_err().to_string();
+    assert!(err.contains("batch"), "got: {err}");
+
+    assert!(PresetTier::parse("big").is_err());
+    assert_eq!(PresetTier::parse("tiny").unwrap(), PresetTier::Tiny);
+}
