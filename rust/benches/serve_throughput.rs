@@ -127,6 +127,9 @@ fn main() -> anyhow::Result<()> {
         m.insert("occupancy".to_string(), jnum(agg.mean_occupancy));
         m.insert("p50_us".to_string(), jnum(agg.latency.p50.as_secs_f64() * 1e6));
         m.insert("p99_us".to_string(), jnum(agg.latency.p99.as_secs_f64() * 1e6));
+        // deterministic serve counters (per-kind requests/work,
+        // occupancy histogram) + wall-clock confined to `timing`
+        m.insert("telemetry".to_string(), agg.telemetry_json());
         json_server.push(Json::Obj(m));
         server.shutdown();
     }
@@ -202,6 +205,7 @@ fn main() -> anyhow::Result<()> {
             m.insert("beam_width".to_string(), jnum(decode.beam_width as f64));
             m.insert("decode_len".to_string(), jnum(decode.max_len as f64));
         }
+        m.insert("telemetry".to_string(), agg.telemetry_json());
         json_tasks.push(Json::Obj(m));
         server.shutdown();
     }

@@ -108,6 +108,9 @@ fn main() -> anyhow::Result<()> {
         m.insert("p50_ms".to_string(), jnum(p.p50.as_secs_f64() * 1e3));
         m.insert("p99_ms".to_string(), jnum(p.p99.as_secs_f64() * 1e3));
         m.insert("identical".to_string(), Json::Bool(identical));
+        // numerics-health snapshot: loss-scale state + per-matrix
+        // FloatSD8 code saturation at the end of the measured run
+        m.insert("telemetry".to_string(), trainer.numerics_snapshot());
         rows.push(Json::Obj(m));
     }
 

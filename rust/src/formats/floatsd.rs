@@ -272,6 +272,21 @@ impl FloatSdFormat {
         }
         (m, self.encode(m))
     }
+
+    /// Raw (biased) exponent field of a code — the top 3 bits, 0..=7;
+    /// the bin index of telemetry's re-encode exponent histograms.
+    #[inline]
+    pub fn code_exponent(&self, code: FloatSd8) -> u8 {
+        code.0 >> 5
+    }
+
+    /// Whether a code decodes to the format's extreme magnitude
+    /// (±[`Self::max_value`]) — the saturation bin of the re-encode
+    /// histograms: weights parked here can no longer grow.
+    #[inline]
+    pub fn is_max_magnitude(&self, code: FloatSd8) -> bool {
+        self.decode(code).abs() == self.max_value()
+    }
 }
 
 /// The process-wide FloatSD8 format instance.

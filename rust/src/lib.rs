@@ -42,6 +42,12 @@
 //! harness behind `floatsd-lstm eval` that turns any checkpoint into
 //! a deterministic JSON report across all four workloads.
 //!
+//! Cutting across all of these is [`telemetry`]: a deterministic
+//! numerics-health observability layer (counters, histograms, span
+//! timers; FP8/FloatSD8 saturation scans) feeding the `--trace` JSONL
+//! stream and the `floatsd-lstm report` summarizer — enabling it
+//! never changes a single computed bit.
+//!
 //! The PJRT-dependent layers ([`runtime`], [`coordinator`], the
 //! `--artifact` train path and the suite CLI) are gated behind the
 //! default-off `pjrt` cargo feature so the crate builds and tests
@@ -67,6 +73,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod tasks;
+pub mod telemetry;
 pub mod tensorfile;
 pub mod testing;
 pub mod train;

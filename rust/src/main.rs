@@ -8,15 +8,18 @@
 //!                    [--decode-len L --beam K --beam-len-norm A]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
-//! floatsd-lstm train [--preset tiny|default|paper] [--threads N]
+//! floatsd-lstm train [--preset tiny|default|paper] [--threads N] [--trace t.jsonl]
 //!                    [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
 //!                                        # (lane-sharded; --threads N ≡ --threads 1 bit-for-bit)
 //! floatsd-lstm train --task {lm,pos,nli,mt} [--preset tiny|default|paper]
 //!                    [--threads N] [--steps N --out ckpt.tensors ...]
 //!                                        # multi-task offline training (tasks/)
-//! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--out report.json]
+//! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--threads N] [--out report.json]
 //!                                        # held-out eval grid across all four tasks
+//!                                        # (span-sharded; byte-identical for any N)
+//! floatsd-lstm report trace.jsonl        # summarize a --trace numerics-health stream
+//!                                        # (loss-scale events, FP8/FloatSD8 saturation)
 //! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```
@@ -67,10 +70,12 @@ fn main() -> Result<()> {
         }
         Some("train") => train(&args),
         Some("eval") => floatsd_lstm::tasks::eval::run_cli(&args),
+        Some("report") => floatsd_lstm::telemetry::report::run_cli(&args),
         Some("suite") => suite(&args),
         _ => {
             eprintln!(
-                "usage: floatsd-lstm <info|formats|hardware|serve|train|eval|suite> [options]\n\
+                "usage: floatsd-lstm <info|formats|hardware|serve|train|eval|report|suite> \
+                 [options]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())

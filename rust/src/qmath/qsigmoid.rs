@@ -23,11 +23,11 @@ pub fn sigmoid_sd8(x: f32) -> f32 {
     // keep the last-ulp behaviour identical: s = 1/(1+e^{-|x|}).
     let s = 1.0f32 / (1.0 + (-x.abs()).exp());
     let q_neg = FLOAT_SD8.quantize(1.0 - s);
-    if x <= 0.0 {
-        q_neg
-    } else {
-        1.0 - q_neg
-    }
+    let y = if x <= 0.0 { q_neg } else { 1.0 - q_neg };
+    // clip-rate telemetry on the *result* — write-only counters, so
+    // the value path is untouched (one relaxed load when disabled)
+    crate::telemetry::note_sigmoid(y);
+    y
 }
 
 /// Fig. 4's strawman: single-region quantization over the whole range.
@@ -42,7 +42,9 @@ pub fn sigmoid_sd8_one_region(x: f32) -> f32 {
 /// paper keeps tanh outputs on the activation grid, Table II).
 #[inline]
 pub fn tanh_fp8(x: f32) -> f32 {
-    round_f8(x.tanh())
+    let y = round_f8(x.tanh());
+    crate::telemetry::note_tanh(y);
+    y
 }
 
 /// The hardware LUT: thresholds on x mapping directly to quantized

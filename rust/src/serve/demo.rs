@@ -118,6 +118,12 @@ pub fn run(args: &Args) -> Result<()> {
     }
     let agg = server.stats();
     println!("aggregate: {agg}");
+    println!("per-kind:");
+    for (name, k) in super::KIND_NAMES.iter().zip(agg.per_kind.iter()) {
+        if k.requests > 0 {
+            println!("  {name:<8} {:>8} requests  {:>10} work units", k.requests, k.work);
+        }
+    }
     println!(
         "\nthroughput: {:.0} tokens/s ({} tokens in {:.2?})",
         streamed as f64 / wall.as_secs_f64(),

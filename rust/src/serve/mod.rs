@@ -68,7 +68,7 @@ use crate::tasks::TaskKind;
 pub use model::{DecodeParams, ServeModel, MAX_BEAM_WIDTH, MAX_DECODE_LEN, MAX_LEN_NORM};
 pub use scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 pub use session::{SessionId, SessionStore};
-pub use stats::{ShardStats, StatsSnapshot};
+pub use stats::{kind_index, KindSnapshot, ShardStats, StatsSnapshot, KIND_NAMES};
 pub use worker::WorkerPool;
 
 /// Serving engine configuration.

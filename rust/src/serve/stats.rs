@@ -1,20 +1,26 @@
-//! Per-shard serving statistics: request/token counters and a live
-//! session gauge on atomics (read by any thread without stopping the
-//! worker) and raw service-latency samples summarized through
-//! [`benchlib::Percentiles`] — the same reporting machinery the paper
-//! benches use.
+//! Per-shard serving statistics, hosted on the [`crate::telemetry`]
+//! primitives: request/token [`Counter`]s and a live session
+//! [`Gauge`] (read by any thread without stopping the worker), a
+//! fixed-bucket batch-occupancy [`Histogram`], per-request-kind
+//! counters, and raw service-latency samples in a bounded
+//! [`SampleWindow`] summarized through [`benchlib::Percentiles`] —
+//! the same reporting machinery the paper benches use.
 //!
 //! With task-generic requests, *requests* and *work* diverge: a
 //! `Sequence` is one request but many recurrent steps, a `Decode` is
 //! one request but `max_len` decoder steps. `tokens` counts the work
 //! (the throughput number), `requests` counts scheduling units (the
-//! occupancy number).
+//! occupancy number). The per-kind split shows which request shapes
+//! carry the load.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::benchlib::Percentiles;
+use crate::telemetry::{Counter, Gauge, Histogram, SampleWindow};
+use crate::tensorfile::json::Json;
+
+use super::scheduler::RequestKind;
 
 /// Cap on retained latency samples per shard: percentiles describe a
 /// sliding window of the most recent samples instead of the full
@@ -26,32 +32,46 @@ use crate::benchlib::Percentiles;
 /// visible tail latency to in-flight batches.
 pub const LATENCY_WINDOW: usize = 16_384;
 
-/// Bounded ring of the most recent latency samples.
-#[derive(Default)]
-struct LatencyRing {
-    buf: Vec<Duration>,
-    next: usize,
-}
+/// Request kinds in the fixed reporting order ([`RequestKind`] variant
+/// order) — index with [`kind_index`].
+pub const KIND_NAMES: [&str; 4] = ["step", "sequence", "finalize", "decode"];
 
-impl LatencyRing {
-    fn push(&mut self, d: Duration) {
-        if self.buf.len() < LATENCY_WINDOW {
-            self.buf.push(d);
-        } else {
-            self.buf[self.next] = d;
-            self.next = (self.next + 1) % LATENCY_WINDOW;
-        }
+/// Upper-inclusive batch-occupancy bucket bounds (requests per
+/// scheduled micro-batch); one overflow bucket follows, so the
+/// histogram has `OCCUPANCY_BOUNDS.len() + 1` counts.
+pub const OCCUPANCY_BOUNDS: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Index of a request kind in [`KIND_NAMES`]-ordered arrays.
+pub fn kind_index(kind: &RequestKind) -> usize {
+    match kind {
+        RequestKind::Step { .. } => 0,
+        RequestKind::Sequence { .. } => 1,
+        RequestKind::Finalize => 2,
+        RequestKind::Decode(_) => 3,
     }
 }
 
 /// Live counters for one shard (one worker thread writes, anyone reads).
-#[derive(Default)]
 pub struct ShardStats {
-    tokens: AtomicU64,
-    requests: AtomicU64,
-    batches: AtomicU64,
-    sessions: AtomicU64,
-    latencies: Mutex<LatencyRing>,
+    tokens: Counter,
+    requests: Counter,
+    batches: Counter,
+    sessions: Gauge,
+    /// requests answered per kind, [`KIND_NAMES`] order
+    kind_requests: [Counter; 4],
+    /// recurrent-step work per kind, [`KIND_NAMES`] order
+    kind_work: [Counter; 4],
+    /// requests-per-micro-batch distribution
+    occupancy: Histogram,
+    latencies: Mutex<SampleWindow>,
+}
+
+/// Per-request-kind slice of a snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KindSnapshot {
+    pub requests: u64,
+    /// recurrent-step work those requests carried
+    pub work: u64,
 }
 
 /// Point-in-time summary of one shard (or of all shards, merged).
@@ -66,46 +86,86 @@ pub struct StatsSnapshot {
     pub sessions: u64,
     /// mean requests per scheduled micro-batch — how full batches ran
     pub mean_occupancy: f64,
+    /// per-kind requests/work, [`KIND_NAMES`] order
+    pub per_kind: [KindSnapshot; 4],
+    /// occupancy histogram counts ([`OCCUPANCY_BOUNDS`] + overflow)
+    pub occupancy_hist: [u64; 8],
     /// enqueue → reply-ready service latency
     pub latency: Percentiles,
 }
 
 impl ShardStats {
     pub fn new() -> ShardStats {
-        ShardStats::default()
+        ShardStats {
+            tokens: Counter::new(),
+            requests: Counter::new(),
+            batches: Counter::new(),
+            sessions: Gauge::new(),
+            kind_requests: [Counter::new(), Counter::new(), Counter::new(), Counter::new()],
+            kind_work: [Counter::new(), Counter::new(), Counter::new(), Counter::new()],
+            occupancy: Histogram::new(&OCCUPANCY_BOUNDS),
+            latencies: Mutex::new(SampleWindow::new(LATENCY_WINDOW)),
+        }
     }
 
     /// Record one scheduled micro-batch: its request count, the
     /// recurrent-step work it carried, and per-request latencies.
     pub fn record_batch(&self, requests: usize, work_tokens: u64, lats: &[Duration]) {
-        self.tokens.fetch_add(work_tokens, Ordering::Relaxed);
-        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        let mut ring = self.latencies.lock().unwrap();
+        self.tokens.add(work_tokens);
+        self.requests.add(requests as u64);
+        self.batches.add(1);
+        self.occupancy.record(requests as u64);
+        let mut window = self.latencies.lock().unwrap();
         for &l in lats {
-            ring.push(l);
+            window.push(l);
+        }
+    }
+
+    /// Record the batch's per-kind split ([`KIND_NAMES`] order):
+    /// requests answered and the work they carried.
+    pub fn record_kinds(&self, requests: &[u64; 4], work: &[u64; 4]) {
+        for k in 0..4 {
+            self.kind_requests[k].add(requests[k]);
+            self.kind_work[k].add(work[k]);
         }
     }
 
     /// Publish the shard's live session count (worker-side, after each
     /// batch's opens/closes are applied).
     pub fn set_sessions(&self, n: usize) {
-        self.sessions.store(n as u64, Ordering::Relaxed);
+        self.sessions.set(n as u64);
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
-        let mut samples = self.latencies.lock().unwrap().buf.clone();
-        let tokens = self.tokens.load(Ordering::Relaxed);
-        let requests = self.requests.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
+        let mut samples = self.latencies.lock().unwrap().samples().to_vec();
+        let tokens = self.tokens.get();
+        let requests = self.requests.get();
+        let batches = self.batches.get();
+        let mut per_kind = [KindSnapshot::default(); 4];
+        for k in 0..4 {
+            per_kind[k] = KindSnapshot {
+                requests: self.kind_requests[k].get(),
+                work: self.kind_work[k].get(),
+            };
+        }
+        let occupancy_hist: [u64; 8] =
+            self.occupancy.counts().try_into().expect("7 bounds + overflow");
         StatsSnapshot {
             tokens,
             requests,
             batches,
-            sessions: self.sessions.load(Ordering::Relaxed),
+            sessions: self.sessions.get(),
             mean_occupancy: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
+            per_kind,
+            occupancy_hist,
             latency: Percentiles::of(&mut samples),
         }
+    }
+}
+
+impl Default for ShardStats {
+    fn default() -> Self {
+        ShardStats::new()
     }
 }
 
@@ -114,24 +174,60 @@ impl ShardStats {
 /// statistically wrong).
 pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
     let mut samples: Vec<Duration> = Vec::new();
-    let mut tokens = 0u64;
-    let mut requests = 0u64;
-    let mut batches = 0u64;
-    let mut sessions = 0u64;
+    let mut out = StatsSnapshot::default();
     for s in shards {
-        tokens += s.tokens.load(Ordering::Relaxed);
-        requests += s.requests.load(Ordering::Relaxed);
-        batches += s.batches.load(Ordering::Relaxed);
-        sessions += s.sessions.load(Ordering::Relaxed);
-        samples.extend_from_slice(&s.latencies.lock().unwrap().buf);
+        let snap = s.snapshot();
+        out.tokens += snap.tokens;
+        out.requests += snap.requests;
+        out.batches += snap.batches;
+        out.sessions += snap.sessions;
+        for k in 0..4 {
+            out.per_kind[k].requests += snap.per_kind[k].requests;
+            out.per_kind[k].work += snap.per_kind[k].work;
+        }
+        for (acc, c) in out.occupancy_hist.iter_mut().zip(snap.occupancy_hist) {
+            *acc += c;
+        }
+        samples.extend_from_slice(s.latencies.lock().unwrap().samples());
     }
-    StatsSnapshot {
-        tokens,
-        requests,
-        batches,
-        sessions,
-        mean_occupancy: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
-        latency: Percentiles::of(&mut samples),
+    out.mean_occupancy =
+        if out.batches == 0 { 0.0 } else { out.requests as f64 / out.batches as f64 };
+    out.latency = Percentiles::of(&mut samples);
+    out
+}
+
+impl StatsSnapshot {
+    /// Telemetry block for `BENCH_serve.json` rows: counters, the
+    /// per-kind split, and the occupancy histogram are deterministic
+    /// for a fixed request schedule; wall-clock stays confined to the
+    /// marked `timing` sub-object.
+    pub fn telemetry_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = |v: u64| Json::Num(v as f64);
+        let mut kinds = BTreeMap::new();
+        for (k, name) in KIND_NAMES.iter().enumerate() {
+            let mut m = BTreeMap::new();
+            m.insert("requests".to_string(), num(self.per_kind[k].requests));
+            m.insert("work".to_string(), num(self.per_kind[k].work));
+            kinds.insert(name.to_string(), Json::Obj(m));
+        }
+        let mut timing = BTreeMap::new();
+        timing.insert("p50_us".to_string(), Json::Num(self.latency.p50.as_micros() as f64));
+        timing.insert("p99_us".to_string(), Json::Num(self.latency.p99.as_micros() as f64));
+        timing.insert("max_us".to_string(), Json::Num(self.latency.max.as_micros() as f64));
+        let mut m = BTreeMap::new();
+        m.insert("tokens".to_string(), num(self.tokens));
+        m.insert("requests".to_string(), num(self.requests));
+        m.insert("batches".to_string(), num(self.batches));
+        m.insert("sessions".to_string(), num(self.sessions));
+        m.insert("mean_occupancy".to_string(), Json::Num(self.mean_occupancy));
+        m.insert("per_kind".to_string(), Json::Obj(kinds));
+        m.insert(
+            "occupancy_hist".to_string(),
+            Json::Arr(self.occupancy_hist.iter().map(|&c| num(c)).collect()),
+        );
+        m.insert("timing".to_string(), Json::Obj(timing));
+        Json::Obj(m)
     }
 }
 
@@ -171,6 +267,8 @@ mod tests {
         assert_eq!(m.sessions, 5);
         assert_eq!(m.latency.n, 12);
         assert_eq!(m.latency.max, Duration::from_micros(30));
+        // occupancy: batches of 4, 2, 6 → buckets (≤4), (≤2), (≤8)
+        assert_eq!(m.occupancy_hist, [0, 1, 1, 1, 0, 0, 0, 0]);
     }
 
     #[test]
@@ -178,22 +276,44 @@ mod tests {
         // one decode request carrying 32 decoder steps
         let s = ShardStats::new();
         s.record_batch(1, 32, &[Duration::from_micros(500)]);
+        s.record_kinds(&[0, 0, 0, 1], &[0, 0, 0, 32]);
         let snap = s.snapshot();
         assert_eq!(snap.requests, 1);
         assert_eq!(snap.tokens, 32, "throughput counts the decoded tokens");
         assert!((snap.mean_occupancy - 1.0).abs() < 1e-9);
+        assert_eq!(snap.per_kind[3], KindSnapshot { requests: 1, work: 32 });
+        assert_eq!(snap.per_kind[0], KindSnapshot::default());
     }
 
     #[test]
     fn latency_window_is_bounded() {
-        let mut ring = LatencyRing::default();
+        let s = ShardStats::new();
         for i in 0..(LATENCY_WINDOW + 10) {
-            ring.push(Duration::from_nanos(i as u64));
+            s.record_batch(1, 1, &[Duration::from_nanos(i as u64)]);
         }
-        assert_eq!(ring.buf.len(), LATENCY_WINDOW, "window never exceeds the cap");
+        let win = s.latencies.lock().unwrap();
+        assert_eq!(win.len(), LATENCY_WINDOW, "window never exceeds the cap");
         // the 10 oldest samples were overwritten in place
-        assert_eq!(ring.buf[0], Duration::from_nanos(LATENCY_WINDOW as u64));
-        assert_eq!(ring.buf[9], Duration::from_nanos(LATENCY_WINDOW as u64 + 9));
-        assert_eq!(ring.buf[10], Duration::from_nanos(10));
+        assert_eq!(win.samples()[0], Duration::from_nanos(LATENCY_WINDOW as u64));
+        assert_eq!(win.samples()[9], Duration::from_nanos(LATENCY_WINDOW as u64 + 9));
+        assert_eq!(win.samples()[10], Duration::from_nanos(10));
+    }
+
+    #[test]
+    fn telemetry_json_is_deterministic_and_marks_timing() {
+        let s = ShardStats::new();
+        s.record_batch(2, 5, &[Duration::from_micros(10), Duration::from_micros(20)]);
+        s.record_kinds(&[1, 1, 0, 0], &[1, 4, 0, 0]);
+        let j1 = s.snapshot().telemetry_json();
+        let j2 = s.snapshot().telemetry_json();
+        assert_eq!(j1.to_string(), j2.to_string(), "same state → same bytes");
+        assert!(j1.get("timing").is_some(), "wall-clock lives under timing");
+        let kinds = j1.get("per_kind").expect("per_kind block");
+        assert_eq!(
+            kinds.get("sequence").and_then(|k| k.get("work")).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let hist = j1.get("occupancy_hist").and_then(Json::as_arr).expect("hist");
+        assert_eq!(hist.len(), OCCUPANCY_BOUNDS.len() + 1);
     }
 }

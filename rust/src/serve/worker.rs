@@ -32,7 +32,7 @@ use super::model::{
 };
 use super::scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 use super::session::{SessionId, SessionStore};
-use super::stats::ShardStats;
+use super::stats::{kind_index, ShardStats};
 use super::ServeConfig;
 
 /// A reply ready to send, paired with its client's channel.
@@ -131,8 +131,14 @@ fn run_worker(
 
         let n_requests = batch.len();
         let mut work = 0u64;
+        let mut kind_reqs = [0u64; 4];
+        let mut kind_work = [0u64; 4];
         for r in batch.drain(..) {
-            work += r.kind.work();
+            let w = r.kind.work();
+            let k = kind_index(&r.kind);
+            work += w;
+            kind_reqs[k] += 1;
+            kind_work[k] += w;
             match r.kind {
                 RequestKind::Step { .. } => steps.push(r),
                 RequestKind::Sequence { .. } => seqs.push(r),
@@ -151,6 +157,7 @@ fn run_worker(
         // record before sending so an observer that saw all replies
         // also sees the matching counters
         stats.record_batch(n_requests, work, &lats);
+        stats.record_kinds(&kind_reqs, &kind_work);
         stats.set_sessions(store.len());
         for (to, reply) in outbox.drain(..) {
             let _ = to.send(reply);

@@ -23,7 +23,8 @@
 //!              "loss": 2.31, "metric": 10.1, "metric_name": "ppl",
 //!              "count": 1024,
 //!              "config": { "vocab": 64, "hidden": 24, ... } },
-//!     "pos": { ... }, "nli": { ... }, "mt": { ... }
+//!     "pos": { ..., "confusion": [[gold0_pred0, ...], ...] },
+//!     "nli": { ... }, "mt": { ... }
 //!   }
 //! }
 //! ```
@@ -41,16 +42,19 @@ use crate::tensorfile::read_tensors;
 use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
 
 /// Evaluate one checkpoint: rebuild the task from its `meta/task_cfg`
-/// (via the parser shared with `serve`) and run the held-out eval set.
-pub fn evaluate_checkpoint(path: &Path) -> Result<(TaskConfig, TaskEval)> {
+/// (via the parser shared with `serve`) and run the held-out eval set
+/// sharded over `threads` workers (byte-identical for any count —
+/// the heads fold the fixed lane spans in canonical order).
+pub fn evaluate_checkpoint(path: &Path, threads: usize) -> Result<(TaskConfig, TaskEval)> {
     let tensors = read_tensors(path)?;
-    let cfg = super::read_task_cfg(&tensors)?.with_context(|| {
+    let mut cfg = super::read_task_cfg(&tensors)?.with_context(|| {
         format!(
             "{}: no meta/task_cfg tensor — not a task checkpoint \
              (write one with `floatsd-lstm train --task ...`)",
             path.display()
         )
     })?;
+    cfg.threads = threads;
     let bag = ParamBag::from_tensors(tensors);
     let head = load_task(cfg.clone(), &bag)?;
     Ok((cfg, head.evaluate()))
@@ -75,6 +79,11 @@ fn entry(cfg: &TaskConfig, eval: &TaskEval, source: &str) -> Json {
     m.insert("metric".to_string(), Json::Num(eval.metric));
     m.insert("metric_name".to_string(), Json::Str(eval.metric_name.to_string()));
     m.insert("count".to_string(), num(eval.count));
+    if let Some(cm) = &eval.confusion {
+        // gold-ordered rows × pred-ordered columns; fixed class order
+        // keeps the rendering byte-deterministic
+        m.insert("confusion".to_string(), cm.to_json());
+    }
     m.insert("config".to_string(), Json::Obj(cfg_m));
     Json::Obj(m)
 }
@@ -82,10 +91,10 @@ fn entry(cfg: &TaskConfig, eval: &TaskEval, source: &str) -> Json {
 /// Build the full four-task grid. Checkpoints cover their own task;
 /// the rest are evaluated at preset init. Pure (no output): this is
 /// the embeddable API — `run_cli` owns the human-readable rendering.
-pub fn build_report(models: &[PathBuf]) -> Result<Json> {
+pub fn build_report(models: &[PathBuf], threads: usize) -> Result<Json> {
     let mut tasks: BTreeMap<String, Json> = BTreeMap::new();
     for path in models {
-        let (cfg, eval) = evaluate_checkpoint(path)
+        let (cfg, eval) = evaluate_checkpoint(path, threads)
             .with_context(|| format!("evaluate {}", path.display()))?;
         let name = cfg.task.name().to_string();
         if tasks.contains_key(&name) {
@@ -97,7 +106,8 @@ pub fn build_report(models: &[PathBuf]) -> Result<Json> {
         if tasks.contains_key(kind.name()) {
             continue;
         }
-        let cfg = TaskConfig::preset(kind);
+        let mut cfg = TaskConfig::preset(kind);
+        cfg.threads = threads;
         let head = build_task(&cfg)?;
         let eval = head.evaluate();
         tasks.insert(kind.name().to_string(), entry(&cfg, &eval, "init"));
@@ -119,7 +129,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
         models.extend(list.split(',').filter(|s| !s.is_empty()).map(PathBuf::from));
     }
     models.extend(args.positionals.iter().map(PathBuf::from));
-    let report = build_report(&models)?;
+    let threads = args.opt_usize("threads", 1)?;
+    let report = build_report(&models, threads)?;
 
     eprintln!("Table-IV grid (held-out eval):");
     if let Some(tasks) = report.get("tasks").and_then(Json::as_obj) {

@@ -18,9 +18,10 @@ use crate::tensorfile::{write_tensors, Tensor};
 use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards, StackTape};
 
 use super::{
-    load_stack, stack_tensors, to_step_labels, to_steps, SingleStack, TaskConfig, TaskEval,
-    TaskHead, TaskKind,
+    eval_spans, fold_spans, load_stack, stack_tensors, to_step_labels, to_steps, SingleStack,
+    TaskConfig, TaskEval, TaskHead, TaskKind,
 };
+use crate::qmath::vector::QMatrix;
 
 pub struct LmTask {
     cfg: TaskConfig,
@@ -117,28 +118,48 @@ impl TaskHead for LmTask {
 
     fn evaluate(&self) -> TaskEval {
         let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
-        // the eval lanes are contiguous held-out streams: carry state
-        // across the fixed eval batches, starting from zero (local
-        // buffers — training state is untouched)
-        let (mut hs, mut cs) = self.core.stack.zero_flat_state(b_n);
-        let mut scr = self.core.stack.trace_scratches(b_n);
-        let mut loss_sum = 0f64;
-        let mut count = 0usize;
-        for batch in self.gen.eval_set() {
-            let ids = to_steps(&batch.x, b_n, seq);
-            let mut tape = StackTape::new(&self.core.stack, b_n);
-            let logits =
-                self.core.stack.forward_batch_traced(&ids, &mut hs, &mut cs, &mut scr, &mut tape);
-            for (t, row) in logits.iter().enumerate() {
-                for b in 0..b_n {
-                    let y = batch.y[b * seq + t] as usize;
-                    loss_sum += eval_ce(&row[b * vocab..(b + 1) * vocab], y);
-                    count += 1;
+        // the eval lanes are contiguous held-out streams: each span
+        // carries its lanes' state across the fixed eval batches,
+        // starting from zero (local buffers — training state is
+        // untouched). Lanes are independent, so per-position CE values
+        // are bit-identical to a full-width pass; only the span-ordered
+        // f64 fold defines the sum, and that order is fixed.
+        let stack = &self.core.stack;
+        let batches: Vec<(Vec<Vec<usize>>, &[i32])> = self
+            .gen
+            .eval_set()
+            .iter()
+            .map(|b| (to_steps(&b.x, b_n, seq), b.y.as_slice()))
+            .collect();
+        let mut spans = eval_spans(b_n, 0);
+        run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let lanes = sp.hi - sp.lo;
+            let (mut hs, mut cs) = stack.zero_flat_state(lanes);
+            let mut scr = stack.trace_scratches(lanes);
+            for (ids, ys) in &batches {
+                let ids_s = lane_slice_ids(ids, sp.lo, sp.hi);
+                let mut tape = StackTape::new(stack, lanes);
+                let logits =
+                    stack.forward_batch_traced(&ids_s, &mut hs, &mut cs, &mut scr, &mut tape);
+                for (t, row) in logits.iter().enumerate() {
+                    for b in 0..lanes {
+                        let y = ys[(sp.lo + b) * seq + t] as usize;
+                        sp.loss += eval_ce(&row[b * vocab..(b + 1) * vocab], y);
+                        sp.count += 1;
+                    }
                 }
             }
-        }
+        });
+        let (loss_sum, _, count, _) = fold_spans(&spans, 0);
         let loss = loss_sum / count.max(1) as f64;
-        TaskEval { task: "lm", loss, metric_name: "ppl", metric: loss.exp(), count }
+        TaskEval {
+            task: "lm",
+            loss,
+            metric_name: "ppl",
+            metric: loss.exp(),
+            count,
+            confusion: None,
+        }
     }
 
     fn save_checkpoint(&self, path: &Path) -> Result<()> {
@@ -146,6 +167,14 @@ impl TaskHead for LmTask {
         tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
         tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
         write_tensors(path, &tensors)
+    }
+
+    fn grad_tensors(&self) -> Vec<(String, &[f32])> {
+        self.core.grads.named_slices("")
+    }
+
+    fn weight_matrices(&self) -> Vec<(String, &QMatrix)> {
+        crate::telemetry::stack_qmatrices(&self.core.stack, "")
     }
 }
 

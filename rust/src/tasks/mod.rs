@@ -41,12 +41,14 @@ use crate::cli::Args;
 use crate::lstm::cell::QLstmCell;
 use crate::lstm::model::{Dense, Embedding, ParamBag, QLstmLayer};
 use crate::lstm::QLstmStack;
+use crate::qmath::vector::QMatrix;
+use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
 use crate::tensorfile::json::Json;
 use crate::tensorfile::Tensor;
 use crate::train::optimizer::MasterCell;
 use crate::train::{
-    check_threads, finalize_grads, merge_shards, LaneShard, LossScaler, MasterStack, PresetTier,
-    StackGrads, StackTape, StepOutcome,
+    check_threads, finalize_grads, lane_spans, merge_shards, LaneShard, LossScaler, MasterStack,
+    PresetTier, ScaleEvent, StackGrads, StackTape, StepOutcome,
 };
 
 /// The four offline task heads (paper Table IV).
@@ -118,6 +120,10 @@ pub struct TaskConfig {
     /// checkpointed
     pub threads: usize,
     pub checkpoint: Option<PathBuf>,
+    /// `--trace`: write a `floatsd-trace-v1` JSONL numerics-health
+    /// stream here (numerics-neutral — see [`crate::telemetry`]);
+    /// training-only, never checkpointed
+    pub trace: Option<PathBuf>,
 }
 
 impl TaskConfig {
@@ -145,6 +151,7 @@ impl TaskConfig {
             eval_batches: 4,
             threads: 1,
             checkpoint: None,
+            trace: None,
         };
         match task {
             TaskKind::Lm => {}
@@ -302,6 +309,52 @@ impl TaskConfig {
     }
 }
 
+/// Per-class confusion counts of one held-out evaluation — kept by
+/// the classification heads (pos/nli). Row-major
+/// `counts[gold * n_classes + predicted]`; the fixed class order makes
+/// the JSON rendering byte-deterministic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfusionMatrix {
+    pub n_classes: usize,
+    /// row-major counts: `counts[gold * n_classes + pred]`
+    pub counts: Vec<u64>,
+}
+
+impl ConfusionMatrix {
+    pub fn new(n_classes: usize) -> Self {
+        ConfusionMatrix { n_classes, counts: vec![0; n_classes * n_classes] }
+    }
+
+    pub fn record(&mut self, gold: usize, pred: usize) {
+        self.counts[gold * self.n_classes + pred] += 1;
+    }
+
+    /// Total scored examples (sum over all cells).
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Diagonal sum — correct predictions.
+    pub fn correct(&self) -> u64 {
+        (0..self.n_classes).map(|c| self.counts[c * self.n_classes + c]).sum()
+    }
+
+    /// Gold-ordered rows, each a pred-ordered count array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            (0..self.n_classes)
+                .map(|g| {
+                    Json::Arr(
+                        (0..self.n_classes)
+                            .map(|p| Json::Num(self.counts[g * self.n_classes + p] as f64))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
 /// One row of the Table-IV-style evaluation grid.
 #[derive(Clone, Debug)]
 pub struct TaskEval {
@@ -313,6 +366,9 @@ pub struct TaskEval {
     pub metric: f64,
     /// scored positions (PAD-masked targets excluded)
     pub count: usize,
+    /// per-class confusion counts (pos/nli only; `None` for lm/mt
+    /// whose per-token "classes" are the whole vocabulary)
+    pub confusion: Option<ConfusionMatrix>,
 }
 
 /// The per-task contract on top of the shared quantized machinery.
@@ -331,11 +387,20 @@ pub trait TaskHead {
     /// Finalize + apply the buffered gradients; `false` = overflow.
     fn apply_update(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool;
     /// Deterministic held-out evaluation. Must not disturb training
-    /// state (the LM head's carried lanes keep streaming).
+    /// state (the LM head's carried lanes keep streaming). Sharded
+    /// over `cfg.threads` on the fixed lane partition — byte-identical
+    /// results for any worker count (see [`crate::train::parallel`]).
     fn evaluate(&self) -> TaskEval;
     /// Write a `.tensors` checkpoint carrying `meta/task_cfg` so
     /// `floatsd-lstm eval` can rebuild the task from the file alone.
     fn save_checkpoint(&self, path: &Path) -> Result<()>;
+    /// Named merged gradient tensors of the last
+    /// [`Self::compute_window`], still loss-scaled — the telemetry
+    /// scan surface ([`crate::telemetry::grad_saturation`]).
+    fn grad_tensors(&self) -> Vec<(String, &[f32])>;
+    /// Named live FloatSD8 weight matrices — the re-encode saturation
+    /// scan surface ([`crate::telemetry::code_stats`]).
+    fn weight_matrices(&self) -> Vec<(String, &QMatrix)>;
 }
 
 /// Build a fresh (deterministically initialized) head for a config.
@@ -501,6 +566,60 @@ pub(crate) fn argmax(xs: &[f32]) -> usize {
 }
 
 // ---------------------------------------------------------------------
+// lane-sharded evaluation
+// ---------------------------------------------------------------------
+
+/// One lane span of a sharded evaluation pass: the half-open lane
+/// range plus its locally accumulated results. Spans come from the
+/// same fixed lane partition training uses ([`lane_spans`]), and the
+/// heads fold finished spans in ascending-span order — so
+/// `--threads N` evaluation is byte-identical to single-threaded.
+pub(crate) struct EvalSpan {
+    pub lo: usize,
+    pub hi: usize,
+    pub loss: f64,
+    pub correct: usize,
+    pub count: usize,
+    /// row-major gold × predicted counts (empty when the task keeps
+    /// no confusion matrix)
+    pub confusion: Vec<u64>,
+}
+
+/// Fresh accumulator spans for a `batch`-lane evaluation;
+/// `n_classes = 0` for heads without a confusion matrix.
+pub(crate) fn eval_spans(batch: usize, n_classes: usize) -> Vec<EvalSpan> {
+    lane_spans(batch)
+        .into_iter()
+        .map(|(lo, hi)| EvalSpan {
+            lo,
+            hi,
+            loss: 0.0,
+            correct: 0,
+            count: 0,
+            confusion: vec![0; n_classes * n_classes],
+        })
+        .collect()
+}
+
+/// Fold finished spans in their fixed order into one [`TaskEval`]-
+/// shaped tuple: `(loss_sum, correct, count, confusion)`.
+pub(crate) fn fold_spans(spans: &[EvalSpan], n_classes: usize) -> (f64, usize, usize, Vec<u64>) {
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    let mut count = 0usize;
+    let mut confusion = vec![0u64; n_classes * n_classes];
+    for sp in spans {
+        loss += sp.loss;
+        correct += sp.correct;
+        count += sp.count;
+        for (acc, &c) in confusion.iter_mut().zip(&sp.confusion) {
+            *acc += c;
+        }
+    }
+    (loss, correct, count, confusion)
+}
+
+// ---------------------------------------------------------------------
 // checkpoint naming shared by every head
 // ---------------------------------------------------------------------
 
@@ -642,32 +761,149 @@ pub struct TaskTrainer {
     pub scaler: LossScaler,
     pub steps_done: usize,
     pub steps_applied: usize,
+    /// open `--trace` sink, if any (never touches the value path)
+    trace: Option<TraceSink>,
+    /// activation-clip counter baselines at sink creation
+    act_base: (ActSnapshot, ActSnapshot),
 }
 
 impl TaskTrainer {
     pub fn new(cfg: TaskConfig) -> Result<Self> {
         let scaler = LossScaler::new(cfg.loss_scale);
+        let mut trace = match &cfg.trace {
+            Some(path) => Some(TraceSink::create(path)?),
+            None => None,
+        };
+        let act_base = (telemetry::SIGMOID.snapshot(), telemetry::TANH.snapshot());
         let head = build_task(&cfg)?;
-        Ok(TaskTrainer { head, scaler, steps_done: 0, steps_applied: 0 })
+        if let Some(sink) = trace.as_mut() {
+            // the checkpoint meta blob already carries the topology +
+            // seed; add the training-only knobs the trace reader wants
+            let Json::Obj(mut config) = Json::parse(&cfg.to_meta_json())? else {
+                bail!("task_cfg meta must be a JSON object");
+            };
+            config.insert("steps".to_string(), Json::Num(cfg.steps as f64));
+            config.insert("threads".to_string(), Json::Num(cfg.threads as f64));
+            config.insert("loss_scale".to_string(), Json::Num(f64::from(cfg.loss_scale)));
+            let mut fields = BTreeMap::new();
+            fields.insert("config".to_string(), Json::Obj(config));
+            sink.emit("run_start", 0, fields);
+        }
+        Ok(TaskTrainer { head, scaler, steps_done: 0, steps_applied: 0, trace, act_base })
     }
 
     /// One window: compute gradients, apply (or skip on overflow).
     pub fn step(&mut self) -> StepOutcome {
+        // wall-clock is telemetry-only: it lands in the trace's marked
+        // `timing` field and never influences any computed value
+        let timer = self.trace.as_ref().map(|_| SpanTimer::start());
         let (lr, momentum, clip) = {
             let c = self.head.config();
             (c.lr, c.momentum, c.clip_norm)
         };
         let scale = self.scaler.scale;
         let loss = self.head.compute_window(scale);
+        // telemetry: the merged gradients are still loss-scaled here —
+        // scan before apply_update finalizes them in place
+        let grads_ev =
+            self.trace.is_some().then(|| trace::grads_json(&self.head.grad_tensors()));
         let applied = self.head.apply_update(scale, lr, momentum, clip);
-        if applied {
-            self.scaler.on_good_step();
+        let scale_ev = if applied {
             self.steps_applied += 1;
+            self.scaler.on_good_step()
         } else {
-            self.scaler.on_overflow();
-        }
+            Some(self.scaler.on_overflow())
+        };
         self.steps_done += 1;
+        if self.trace.is_some() {
+            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer);
+        }
         StepOutcome { loss, applied, scale }
+    }
+
+    /// Emit this step's trace events (`loss_scale` on scaler action,
+    /// `step` always, `reencode` after an applied update). Only called
+    /// with an open sink.
+    fn emit_step_events(
+        &mut self,
+        loss: f64,
+        applied: bool,
+        scale: f32,
+        scale_ev: Option<ScaleEvent>,
+        grads_ev: Option<Json>,
+        timer: Option<SpanTimer>,
+    ) {
+        let step = self.steps_done as u64;
+        let skipped = self.scaler.skipped;
+        let acts = trace::acts_json(
+            telemetry::SIGMOID.snapshot().since(self.act_base.0),
+            telemetry::TANH.snapshot().since(self.act_base.1),
+        );
+        let reencode = applied.then(|| trace::codes_json(&self.head.weight_matrices()));
+        let Some(sink) = self.trace.as_mut() else { return };
+        if let Some(ev) = scale_ev {
+            let (cause, from, to) = match ev {
+                ScaleEvent::Backoff { from, to } => ("backoff", from, to),
+                ScaleEvent::Growth { from, to } => ("growth", from, to),
+            };
+            sink.emit("loss_scale", step, trace::scale_fields(cause, from, to, skipped));
+        }
+        let mut fields = BTreeMap::new();
+        fields.insert("loss".to_string(), trace::fnum(loss));
+        fields.insert("scale".to_string(), Json::Num(f64::from(scale)));
+        fields.insert("applied".to_string(), Json::Bool(applied));
+        fields.insert("skipped_total".to_string(), Json::Num(skipped as f64));
+        if let Some(g) = grads_ev {
+            fields.insert("grads".to_string(), g);
+        }
+        fields.insert("acts".to_string(), acts);
+        if let Some(t) = &timer {
+            fields.insert("timing".to_string(), trace::timing_json(t.elapsed_ms()));
+        }
+        sink.emit("step", step, fields);
+        if let Some(weights) = reencode {
+            let mut fields = BTreeMap::new();
+            fields.insert("weights".to_string(), weights);
+            sink.emit("reencode", step, fields);
+        }
+    }
+
+    /// Emit the `run_end` event and flush/close the trace sink,
+    /// surfacing any deferred IO error. No-op without a sink.
+    fn finish_trace(&mut self) -> Result<()> {
+        if self.trace.is_none() {
+            return Ok(());
+        }
+        let acts = trace::acts_json(
+            telemetry::SIGMOID.snapshot().since(self.act_base.0),
+            telemetry::TANH.snapshot().since(self.act_base.1),
+        );
+        let weights = trace::codes_json(&self.head.weight_matrices());
+        let mut fields = BTreeMap::new();
+        fields.insert("steps".to_string(), Json::Num(self.steps_done as f64));
+        fields.insert("applied".to_string(), Json::Num(self.steps_applied as f64));
+        fields.insert("skipped".to_string(), Json::Num(self.scaler.skipped as f64));
+        fields.insert("final_scale".to_string(), Json::Num(f64::from(self.scaler.scale)));
+        fields.insert("weights".to_string(), weights);
+        fields.insert("acts".to_string(), acts);
+        let sink = self.trace.as_mut().expect("checked above");
+        sink.emit("run_end", self.steps_done as u64, fields);
+        sink.finish()
+    }
+
+    /// Point-in-time numerics-health block for bench rows: loss-scale
+    /// totals + per-matrix FloatSD8 code stats. Deterministic — no
+    /// wall-clock fields.
+    pub fn numerics_snapshot(&self) -> Json {
+        let mut scale = BTreeMap::new();
+        scale.insert("final".to_string(), Json::Num(f64::from(self.scaler.scale)));
+        scale.insert("applied".to_string(), Json::Num(self.steps_applied as f64));
+        scale.insert("skipped".to_string(), Json::Num(self.scaler.skipped as f64));
+        scale.insert("steps".to_string(), Json::Num(self.steps_done as f64));
+        let mut m = BTreeMap::new();
+        m.insert("loss_scale".to_string(), Json::Obj(scale));
+        m.insert("weights".to_string(), trace::codes_json(&self.head.weight_matrices()));
+        Json::Obj(m)
     }
 
     /// Run the configured number of steps, bracketed by held-out
@@ -686,15 +922,17 @@ impl TaskTrainer {
                 let window = &losses[losses.len().saturating_sub(log_every)..];
                 let mean: f64 = window.iter().sum::<f64>() / window.len() as f64;
                 println!(
-                    "step {:>5}  loss {:.4}  scale {:>7.0}{}",
+                    "step {:>5}  loss {:.4}  scale {:>7.0}  skipped {:>4}{}",
                     s + 1,
                     mean,
                     out.scale,
+                    self.scaler.skipped,
                     if out.applied { "" } else { "  (skipped)" }
                 );
             }
         }
         let eval_final = self.head.evaluate();
+        self.finish_trace()?;
         if let Some(path) = checkpoint {
             self.head.save_checkpoint(&path)?;
             println!("checkpoint: {}", path.display());
@@ -749,6 +987,7 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
         checkpoint: Some(PathBuf::from(
             args.opt_or("out", &format!("{}.tensors", task.name())),
         )),
+        trace: args.opt("trace").map(PathBuf::from),
     };
     println!(
         "offline FloatSD8 multi-task training [{} preset]: task={} vocab={}{} dim={} hidden={} \

@@ -37,8 +37,10 @@ use crate::train::{
 };
 
 use super::{
-    load_stack, stack_tensors, to_steps, SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind,
+    eval_spans, fold_spans, load_stack, stack_tensors, to_steps, SingleStack, TaskConfig,
+    TaskEval, TaskHead, TaskKind,
 };
+use crate::qmath::vector::QMatrix;
 
 pub struct MtTask {
     cfg: TaskConfig,
@@ -217,38 +219,60 @@ impl TaskHead for MtTask {
         let (b_n, s_len, v_tgt) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab_tgt);
         let t_steps = Self::dec_steps(s_len);
         let t_len = s_len + 2;
-        let mut loss_sum = 0f64;
-        let mut count = 0usize;
-        for batch in self.gen.eval_set() {
-            let src_ids = to_steps(&batch.x, b_n, s_len);
-            let (dec_ids, _) = Self::teacher_forcing(&batch.y, b_n, s_len);
-            // run the bridge on throwaway state: encoder final state
-            // (left in ehs/ecs) becomes the decoder's initial state
-            let (mut ehs, mut ecs) = self.enc.stack.zero_flat_state(b_n);
-            let mut escr = self.enc.stack.trace_scratches(b_n);
-            let mut etape = StackTape::new(&self.enc.stack, b_n);
-            self.enc.stack.forward_batch_traced(
-                &src_ids, &mut ehs, &mut ecs, &mut escr, &mut etape,
-            );
-            let mut dscr = self.dec.stack.trace_scratches(b_n);
-            let mut dtape = StackTape::new(&self.dec.stack, b_n);
-            let logits = self.dec.stack.forward_batch_traced(
-                &dec_ids, &mut ehs, &mut ecs, &mut dscr, &mut dtape,
-            );
-            debug_assert_eq!(logits.len(), t_steps);
-            for (t, row) in logits.iter().enumerate() {
-                for b in 0..b_n {
-                    let y = batch.y[b * t_len + t + 1];
-                    if y == PAD {
-                        continue;
+        // span-sharded over the fixed lane partition: the
+        // encoder→decoder state bridge is per-lane, so it never
+        // crosses a span, and the span-ordered fold makes any
+        // `--threads N` byte-identical
+        let enc_stack = &self.enc.stack;
+        let dec_stack = &self.dec.stack;
+        let batches: Vec<(Vec<Vec<usize>>, Vec<Vec<usize>>, &[i32])> = self
+            .gen
+            .eval_set()
+            .iter()
+            .map(|b| {
+                let (dec_ids, _) = Self::teacher_forcing(&b.y, b_n, s_len);
+                (to_steps(&b.x, b_n, s_len), dec_ids, b.y.as_slice())
+            })
+            .collect();
+        let mut spans = eval_spans(b_n, 0);
+        run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let lanes = sp.hi - sp.lo;
+            for (src_ids, dec_ids, ys) in &batches {
+                let src_s = lane_slice_ids(src_ids, sp.lo, sp.hi);
+                let dec_s = lane_slice_ids(dec_ids, sp.lo, sp.hi);
+                // run the bridge on throwaway state: encoder final
+                // state (left in hs/cs) becomes the decoder's initial
+                let (mut hs, mut cs) = enc_stack.zero_flat_state(lanes);
+                let mut escr = enc_stack.trace_scratches(lanes);
+                let mut etape = StackTape::new(enc_stack, lanes);
+                enc_stack.forward_batch_traced(&src_s, &mut hs, &mut cs, &mut escr, &mut etape);
+                let mut dscr = dec_stack.trace_scratches(lanes);
+                let mut dtape = StackTape::new(dec_stack, lanes);
+                let logits =
+                    dec_stack.forward_batch_traced(&dec_s, &mut hs, &mut cs, &mut dscr, &mut dtape);
+                debug_assert_eq!(logits.len(), t_steps);
+                for (t, row) in logits.iter().enumerate() {
+                    for b in 0..lanes {
+                        let y = ys[(sp.lo + b) * t_len + t + 1];
+                        if y == PAD {
+                            continue;
+                        }
+                        sp.loss += eval_ce(&row[b * v_tgt..(b + 1) * v_tgt], y as usize);
+                        sp.count += 1;
                     }
-                    loss_sum += eval_ce(&row[b * v_tgt..(b + 1) * v_tgt], y as usize);
-                    count += 1;
                 }
             }
-        }
+        });
+        let (loss_sum, _, count, _) = fold_spans(&spans, 0);
         let loss = loss_sum / count.max(1) as f64;
-        TaskEval { task: "mt", loss, metric_name: "ppl", metric: loss.exp(), count }
+        TaskEval {
+            task: "mt",
+            loss,
+            metric_name: "ppl",
+            metric: loss.exp(),
+            count,
+            confusion: None,
+        }
     }
 
     fn save_checkpoint(&self, path: &Path) -> Result<()> {
@@ -257,6 +281,18 @@ impl TaskHead for MtTask {
         tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
         tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
         write_tensors(path, &tensors)
+    }
+
+    fn grad_tensors(&self) -> Vec<(String, &[f32])> {
+        let mut v = self.enc.grads.named_slices("enc");
+        v.extend(self.dec.grads.named_slices("dec"));
+        v
+    }
+
+    fn weight_matrices(&self) -> Vec<(String, &QMatrix)> {
+        let mut v = crate::telemetry::stack_qmatrices(&self.enc.stack, "enc");
+        v.extend(crate::telemetry::stack_qmatrices(&self.dec.stack, "dec"));
+        v
     }
 }
 

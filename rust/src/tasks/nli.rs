@@ -17,12 +17,13 @@ use crate::data::nli::NliGen;
 use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards};
+use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards, StackTape};
 
 use super::{
-    argmax, load_stack, stack_tensors, to_steps, SingleStack, TaskConfig, TaskEval, TaskHead,
-    TaskKind,
+    argmax, eval_spans, fold_spans, load_stack, stack_tensors, to_steps, ConfusionMatrix,
+    SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind,
 };
+use crate::qmath::vector::QMatrix;
 
 pub struct NliTask {
     cfg: TaskConfig,
@@ -114,27 +115,45 @@ impl TaskHead for NliTask {
     fn evaluate(&self) -> TaskEval {
         let (b_n, n_cls) = (self.cfg.batch, self.cfg.n_classes);
         let t_total = 2 * self.cfg.seq;
-        let mut loss_sum = 0f64;
-        let mut correct = 0usize;
-        let mut count = 0usize;
-        for batch in self.gen.eval_set() {
-            let ids = to_steps(&batch.x, b_n, t_total);
-            let logits = self.core.forward_fresh(&ids);
-            let last = &logits[t_total - 1];
-            for (b, &label) in batch.y.iter().enumerate() {
-                let y = label as usize;
-                let lg = &last[b * n_cls..(b + 1) * n_cls];
-                loss_sum += eval_ce(lg, y);
-                correct += usize::from(argmax(lg) == y);
-                count += 1;
+        // span-sharded over the fixed lane partition (see the pos
+        // head): only the final step's logits score, one per pair
+        let stack = &self.core.stack;
+        let batches: Vec<(Vec<Vec<usize>>, &[i32])> = self
+            .gen
+            .eval_set()
+            .iter()
+            .map(|b| (to_steps(&b.x, b_n, t_total), b.y.as_slice()))
+            .collect();
+        let mut spans = eval_spans(b_n, n_cls);
+        run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let lanes = sp.hi - sp.lo;
+            for (ids, ys) in &batches {
+                let ids_s = lane_slice_ids(ids, sp.lo, sp.hi);
+                let (mut hs, mut cs) = stack.zero_flat_state(lanes);
+                let mut scr = stack.trace_scratches(lanes);
+                let mut tape = StackTape::new(stack, lanes);
+                let logits =
+                    stack.forward_batch_traced(&ids_s, &mut hs, &mut cs, &mut scr, &mut tape);
+                let last = &logits[t_total - 1];
+                for (b, &label) in ys[sp.lo..sp.hi].iter().enumerate() {
+                    let y = label as usize;
+                    let lg = &last[b * n_cls..(b + 1) * n_cls];
+                    sp.loss += eval_ce(lg, y);
+                    let pred = argmax(lg);
+                    sp.correct += usize::from(pred == y);
+                    sp.count += 1;
+                    sp.confusion[y * n_cls + pred] += 1;
+                }
             }
-        }
+        });
+        let (loss_sum, correct, count, counts) = fold_spans(&spans, n_cls);
         TaskEval {
             task: "nli",
             loss: loss_sum / count.max(1) as f64,
             metric_name: "cls_acc",
             metric: correct as f64 / count.max(1) as f64,
             count,
+            confusion: Some(ConfusionMatrix { n_classes: n_cls, counts }),
         }
     }
 
@@ -143,6 +162,14 @@ impl TaskHead for NliTask {
         tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
         tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
         write_tensors(path, &tensors)
+    }
+
+    fn grad_tensors(&self) -> Vec<(String, &[f32])> {
+        self.core.grads.named_slices("")
+    }
+
+    fn weight_matrices(&self) -> Vec<(String, &QMatrix)> {
+        crate::telemetry::stack_qmatrices(&self.core.stack, "")
     }
 }
 

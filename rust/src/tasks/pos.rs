@@ -13,12 +13,13 @@ use crate::data::pos::PosGen;
 use crate::data::BatchSource;
 use crate::lstm::model::ParamBag;
 use crate::tensorfile::{write_tensors, Tensor};
-use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards};
+use crate::train::{eval_ce, lane_slice_ids, masked_cross_entropy_grad, run_shards, StackTape};
 
 use super::{
-    argmax, load_stack, stack_tensors, to_step_labels, to_steps, SingleStack, TaskConfig,
-    TaskEval, TaskHead, TaskKind,
+    argmax, eval_spans, fold_spans, load_stack, stack_tensors, to_step_labels, to_steps,
+    ConfusionMatrix, SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind,
 };
+use crate::qmath::vector::QMatrix;
 
 pub struct PosTask {
     cfg: TaskConfig,
@@ -120,28 +121,49 @@ impl TaskHead for PosTask {
 
     fn evaluate(&self) -> TaskEval {
         let (b_n, seq, n_tags) = (self.cfg.batch, self.cfg.seq, self.cfg.n_classes);
-        let mut loss_sum = 0f64;
-        let mut correct = 0usize;
-        let mut count = 0usize;
-        for batch in self.gen.eval_set() {
-            let ids = to_steps(&batch.x, b_n, seq);
-            let logits = self.core.forward_fresh(&ids);
-            for (t, row) in logits.iter().enumerate() {
-                for b in 0..b_n {
-                    let y = batch.y[b * seq + t] as usize;
-                    let lg = &row[b * n_tags..(b + 1) * n_tags];
-                    loss_sum += eval_ce(lg, y);
-                    correct += usize::from(argmax(lg) == y);
-                    count += 1;
+        // span-sharded over the fixed lane partition: lanes are
+        // independent sentences, so per-position values are
+        // bit-identical to a full-width pass, and the span-ordered
+        // fold makes any `--threads N` byte-identical
+        let stack = &self.core.stack;
+        let batches: Vec<(Vec<Vec<usize>>, &[i32])> = self
+            .gen
+            .eval_set()
+            .iter()
+            .map(|b| (to_steps(&b.x, b_n, seq), b.y.as_slice()))
+            .collect();
+        let mut spans = eval_spans(b_n, n_tags);
+        run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let lanes = sp.hi - sp.lo;
+            for (ids, ys) in &batches {
+                // fresh zero state per batch: independent sentences
+                let ids_s = lane_slice_ids(ids, sp.lo, sp.hi);
+                let (mut hs, mut cs) = stack.zero_flat_state(lanes);
+                let mut scr = stack.trace_scratches(lanes);
+                let mut tape = StackTape::new(stack, lanes);
+                let logits =
+                    stack.forward_batch_traced(&ids_s, &mut hs, &mut cs, &mut scr, &mut tape);
+                for (t, row) in logits.iter().enumerate() {
+                    for b in 0..lanes {
+                        let y = ys[(sp.lo + b) * seq + t] as usize;
+                        let lg = &row[b * n_tags..(b + 1) * n_tags];
+                        sp.loss += eval_ce(lg, y);
+                        let pred = argmax(lg);
+                        sp.correct += usize::from(pred == y);
+                        sp.count += 1;
+                        sp.confusion[y * n_tags + pred] += 1;
+                    }
                 }
             }
-        }
+        });
+        let (loss_sum, correct, count, counts) = fold_spans(&spans, n_tags);
         TaskEval {
             task: "pos",
             loss: loss_sum / count.max(1) as f64,
             metric_name: "tag_acc",
             metric: correct as f64 / count.max(1) as f64,
             count,
+            confusion: Some(ConfusionMatrix { n_classes: n_tags, counts }),
         }
     }
 
@@ -150,6 +172,14 @@ impl TaskHead for PosTask {
         tensors.push(Tensor::from_text("meta/task_cfg", &self.cfg.to_meta_json()));
         tensors.push(Tensor::scalar_f32("meta/steps", self.steps_done as f32));
         write_tensors(path, &tensors)
+    }
+
+    fn grad_tensors(&self) -> Vec<(String, &[f32])> {
+        self.core.grads.named_slices("")
+    }
+
+    fn weight_matrices(&self) -> Vec<(String, &QMatrix)> {
+        crate::telemetry::stack_qmatrices(&self.core.stack, "")
     }
 }
 

@@ -1,0 +1,454 @@
+//! Deterministic numerics-health telemetry — counters, gauges,
+//! fixed-bucket histograms, sample windows, and span timers shared by
+//! the training, serving, and evaluation subsystems, plus the
+//! numerics scans (FP8 gradient saturation, FloatSD8 re-encode
+//! saturation, qsigmoid/tanh clip rates) that feed the `--trace`
+//! JSONL stream ([`trace`]) and the `floatsd-lstm report` summarizer
+//! ([`report`]).
+//!
+//! ## The determinism contract
+//!
+//! Enabling telemetry must never perturb computation: `--threads N`
+//! bit-identity and checkpoint bytes are pinned telemetry-on vs
+//! telemetry-off (`tests/telemetry.rs`). That holds by construction,
+//! in three tiers:
+//!
+//! * **per-shard data** (gradients, losses, latencies) is only read at
+//!   step/batch boundaries, after the parallel engine's join barrier,
+//!   and folded in the fixed shard order — the same contract as
+//!   [`crate::train::parallel::merge_shards`];
+//! * **hot-path counters** ([`Counter`], [`Gauge`], [`Histogram`],
+//!   and the [`SIGMOID`]/[`TANH`] activation-clip statics) are plain
+//!   `u64` atomics. Integer adds commute, so the totals observed at a
+//!   join barrier are scheduling-independent; and the counters are
+//!   write-only from the compute path — no kernel ever reads one — so
+//!   they cannot feed back into the numbers;
+//! * **boundary scans** ([`grad_saturation`], [`code_stats`]) run
+//!   single-threaded on already-merged buffers, read-only.
+//!
+//! ## The disabled-path contract
+//!
+//! With no [`TraceSink`] open, the activation hooks
+//! ([`note_sigmoid`]/[`note_tanh`]) are one relaxed load + branch and
+//! the metric primitives never allocate (pinned by
+//! `tests/telemetry_alloc.rs`). The serve-side metrics
+//! ([`crate::serve::ShardStats`] rehosts on these types) stay always
+//! on: they are integer atomics off the per-token hot path.
+
+pub mod report;
+pub mod trace;
+
+pub use trace::{TraceSink, TRACE_SCHEMA};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::formats::fp8::F8_MAX;
+use crate::formats::{round_f8, FLOAT_SD8};
+use crate::lstm::QLstmStack;
+use crate::qmath::vector::QMatrix;
+
+// ---------------------------------------------------------------------
+// global enable gate
+// ---------------------------------------------------------------------
+
+/// Live [`TraceSink`] count — the process-wide telemetry gate.
+static ACTIVE_SINKS: AtomicUsize = AtomicUsize::new(0);
+
+pub(crate) fn sink_opened() {
+    ACTIVE_SINKS.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn sink_closed() {
+    ACTIVE_SINKS.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Whether any trace sink is open — the hot-path instrumentation gate:
+/// one relaxed load, so a disabled build of the same binary pays a
+/// load + predictable branch per hook and nothing else.
+#[inline]
+pub fn hot_enabled() -> bool {
+    ACTIVE_SINKS.load(Ordering::Relaxed) > 0
+}
+
+// ---------------------------------------------------------------------
+// metric primitives
+// ---------------------------------------------------------------------
+
+/// A monotone event counter (relaxed `u64` atomic — adds commute, so
+/// totals read at a join barrier are scheduling-independent).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins level (live session count, current loss scale …).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket histogram: `bounds` are strictly ascending
+/// upper-inclusive bucket edges, plus one implicit overflow bucket, so
+/// `record(v)` lands in the first bucket with `bound >= v`. Bucket
+/// layout is fixed at construction — recording never allocates.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[u64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Bucket counts (`bounds.len() + 1` entries, overflow last).
+    pub fn counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// A bounded ring of duration samples for percentile estimation —
+/// fixed capacity allocated up front, oldest sample overwritten in
+/// place once full (the serve latency window rehosts on this).
+#[derive(Debug)]
+pub struct SampleWindow {
+    buf: Vec<Duration>,
+    next: usize,
+}
+
+impl SampleWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "sample window needs capacity");
+        SampleWindow { buf: Vec::with_capacity(cap), next: 0 }
+    }
+
+    pub fn push(&mut self, d: Duration) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(d);
+        } else {
+            self.buf[self.next] = d;
+            self.next = (self.next + 1) % self.buf.len();
+        }
+    }
+
+    /// The retained samples, in ring (not arrival) order.
+    pub fn samples(&self) -> &[Duration] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// A wall-clock span timer. Span durations are *timing-only* data:
+/// they may appear in the trace's clearly marked `"timing"` fields and
+/// nowhere else (the determinism tests strip them before comparing).
+#[derive(Debug)]
+pub struct SpanTimer(Instant);
+
+impl SpanTimer {
+    pub fn start() -> Self {
+        SpanTimer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+// ---------------------------------------------------------------------
+// activation-clip hot counters
+// ---------------------------------------------------------------------
+
+/// Clip statistics of one quantized activation function.
+#[derive(Debug)]
+pub struct ActCounters {
+    pub evals: Counter,
+    /// outputs pinned at the lower rail (0 for sigmoid, −1 for tanh)
+    pub clip_lo: Counter,
+    /// outputs pinned at the upper rail (1)
+    pub clip_hi: Counter,
+}
+
+impl ActCounters {
+    const fn init() -> Self {
+        ActCounters { evals: Counter::new(), clip_lo: Counter::new(), clip_hi: Counter::new() }
+    }
+
+    pub fn snapshot(&self) -> ActSnapshot {
+        ActSnapshot {
+            evals: self.evals.get(),
+            clip_lo: self.clip_lo.get(),
+            clip_hi: self.clip_hi.get(),
+        }
+    }
+}
+
+/// Process-wide [`crate::qmath::sigmoid_sd8`] clip statistics.
+pub static SIGMOID: ActCounters = ActCounters::init();
+/// Process-wide [`crate::qmath::tanh_fp8`] clip statistics.
+pub static TANH: ActCounters = ActCounters::init();
+
+/// A point-in-time copy of an [`ActCounters`] (the statics are
+/// process-cumulative; trainers diff against a baseline taken at sink
+/// creation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ActSnapshot {
+    pub evals: u64,
+    pub clip_lo: u64,
+    pub clip_hi: u64,
+}
+
+impl ActSnapshot {
+    /// Counts accumulated since `base` (saturating, in case another
+    /// in-process run shares the statics).
+    pub fn since(self, base: ActSnapshot) -> ActSnapshot {
+        ActSnapshot {
+            evals: self.evals.saturating_sub(base.evals),
+            clip_lo: self.clip_lo.saturating_sub(base.clip_lo),
+            clip_hi: self.clip_hi.saturating_sub(base.clip_hi),
+        }
+    }
+}
+
+/// Record one quantized-sigmoid output. Gated on [`hot_enabled`]; the
+/// counters are write-only from compute, so this can never perturb the
+/// numbers.
+#[inline]
+pub fn note_sigmoid(y: f32) {
+    if !hot_enabled() {
+        return;
+    }
+    SIGMOID.evals.add(1);
+    if y == 0.0 {
+        SIGMOID.clip_lo.add(1);
+    } else if y == 1.0 {
+        SIGMOID.clip_hi.add(1);
+    }
+}
+
+/// Record one quantized-tanh output (rails at ±1).
+#[inline]
+pub fn note_tanh(y: f32) {
+    if !hot_enabled() {
+        return;
+    }
+    TANH.evals.add(1);
+    if y == -1.0 {
+        TANH.clip_lo.add(1);
+    } else if y == 1.0 {
+        TANH.clip_hi.add(1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// numerics boundary scans
+// ---------------------------------------------------------------------
+
+/// FP8 saturation profile of one (still loss-scaled) gradient tensor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradSat {
+    pub total: u64,
+    /// positions that round to FP8 zero (underflow, incl. exact zeros)
+    pub zeros: u64,
+    /// finite positions in the top FP8 binade (`|g| >= F8_MAX / 2`)
+    pub top_binade: u64,
+    /// non-finite positions — `> 0` means this window overflowed
+    pub non_finite: u64,
+    /// largest finite magnitude seen
+    pub max_abs: f32,
+}
+
+/// Scan a merged gradient slice **before** `finalize_grads` quantizes
+/// it in place — read-only, single-threaded, post-merge, so the scan
+/// is deterministic and cannot perturb the update.
+pub fn grad_saturation(gs: &[f32]) -> GradSat {
+    let mut s = GradSat { total: gs.len() as u64, ..GradSat::default() };
+    let top = F8_MAX * 0.5;
+    for &g in gs {
+        if !g.is_finite() {
+            s.non_finite += 1;
+            continue;
+        }
+        let a = g.abs();
+        if round_f8(g) == 0.0 {
+            s.zeros += 1;
+        } else if a >= top {
+            s.top_binade += 1;
+        }
+        if a > s.max_abs {
+            s.max_abs = a;
+        }
+    }
+    s
+}
+
+/// Number of FloatSD8 exponent-field values (3 bits).
+pub const SD8_EXP_LEVELS: usize = 8;
+
+/// FloatSD8 code-population profile of one weight matrix after
+/// re-encode: exponent-field histogram + codes at the format's extreme
+/// magnitude (±4.5 — the saturation bin).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CodeStats {
+    pub total: u64,
+    pub at_max: u64,
+    pub exp_hist: [u64; SD8_EXP_LEVELS],
+}
+
+/// Scan one quantized weight matrix (read-only; run after
+/// `MasterStack::apply` re-encoded the step's weights).
+pub fn code_stats(m: &QMatrix) -> CodeStats {
+    let mut s = CodeStats { total: m.codes.len() as u64, ..CodeStats::default() };
+    for &c in &m.codes {
+        s.exp_hist[FLOAT_SD8.code_exponent(c) as usize] += 1;
+        if FLOAT_SD8.is_max_magnitude(c) {
+            s.at_max += 1;
+        }
+    }
+    s
+}
+
+/// The FloatSD8 weight matrices of a stack, named like the gradient
+/// slices ("l1.wx", "l1.wh", …, "head.w"); `prefix` (e.g. the mt
+/// encoder's "enc") is dot-joined in front when non-empty. Biases and
+/// the embedding are FP16-direct, not FloatSD8, so they have no codes
+/// to scan.
+pub fn stack_qmatrices<'a>(stack: &'a QLstmStack, prefix: &str) -> Vec<(String, &'a QMatrix)> {
+    let name = |s: String| if prefix.is_empty() { s } else { format!("{prefix}.{s}") };
+    let mut out = Vec::with_capacity(2 * stack.layers.len() + 1);
+    for (l, layer) in stack.layers.iter().enumerate() {
+        out.push((name(format!("l{}.wx", l + 1)), &layer.fwd.wx));
+        out.push((name(format!("l{}.wh", l + 1)), &layer.fwd.wh));
+    }
+    out.push((name("head.w".to_string()), &stack.head.w));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_upper_inclusive_with_overflow() {
+        let h = Histogram::new(&[1, 2, 4, 8]);
+        for v in [0u64, 1, 2, 3, 4, 5, 8, 9, 1000] {
+            h.record(v);
+        }
+        // buckets: <=1, <=2, <=4, <=8, overflow
+        assert_eq!(h.counts(), vec![2, 1, 2, 2, 2]);
+        assert_eq!(h.total(), 9);
+        assert_eq!(h.bounds(), &[1, 2, 4, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        let _ = Histogram::new(&[4, 2]);
+    }
+
+    #[test]
+    fn sample_window_overwrites_oldest_in_place() {
+        // mirrors the serve latency ring's pinned semantics: capacity
+        // samples fill in order, then overwrites start at slot 0
+        let cap = 64usize;
+        let mut w = SampleWindow::new(cap);
+        for i in 0..cap + 10 {
+            w.push(Duration::from_nanos(i as u64));
+        }
+        assert_eq!(w.len(), cap);
+        assert_eq!(w.samples()[0], Duration::from_nanos(cap as u64));
+        assert_eq!(w.samples()[9], Duration::from_nanos(cap as u64 + 9));
+        assert_eq!(w.samples()[10], Duration::from_nanos(10));
+    }
+
+    #[test]
+    fn grad_saturation_classifies_zero_top_and_nonfinite() {
+        let top = F8_MAX * 0.5;
+        let gs =
+            [0.0f32, 1e-9, 1.0, -top, F8_MAX, f32::INFINITY, f32::NAN, -f32::INFINITY, 2.0];
+        let s = grad_saturation(&gs);
+        assert_eq!(s.total, 9);
+        assert_eq!(s.zeros, 2, "exact zero + sub-FP8 underflow");
+        assert_eq!(s.top_binade, 2, "-F8_MAX/2 and F8_MAX");
+        assert_eq!(s.non_finite, 3);
+        assert_eq!(s.max_abs, F8_MAX);
+    }
+
+    #[test]
+    fn code_stats_bins_every_code_once() {
+        let vals = [0.0f32, 4.5, -4.5, 1.0, 0.25, -0.03125];
+        let m = QMatrix::from_f32(2, 3, &vals);
+        let s = code_stats(&m);
+        assert_eq!(s.total, 6);
+        assert_eq!(s.at_max, 2, "±4.5 are the saturated codes");
+        assert_eq!(s.exp_hist.iter().sum::<u64>(), 6, "every code lands in one exponent bin");
+    }
+
+    #[test]
+    fn act_snapshots_diff_against_a_baseline() {
+        let base = ActSnapshot { evals: 10, clip_lo: 2, clip_hi: 1 };
+        let now = ActSnapshot { evals: 15, clip_lo: 2, clip_hi: 3 };
+        assert_eq!(now.since(base), ActSnapshot { evals: 5, clip_lo: 0, clip_hi: 2 });
+    }
+}

@@ -1,0 +1,249 @@
+//! `floatsd-lstm report <trace.jsonl>` — render a `floatsd-trace-v1`
+//! stream ([`super::trace`]) into a human-readable numerics-health
+//! summary: loss-scale event history, per-tensor FP8 gradient
+//! saturation rates, per-matrix FloatSD8 re-encode saturation, and
+//! activation clip rates.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::tensorfile::json::Json;
+
+use super::trace::TRACE_SCHEMA;
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("trace"))
+        .context("usage: floatsd-lstm report <trace.jsonl>")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
+    print!("{}", summarize(&text).with_context(|| format!("summarize trace {path}"))?);
+    Ok(())
+}
+
+#[derive(Default)]
+struct GradAgg {
+    steps: u64,
+    total: u64,
+    zeros: u64,
+    top: u64,
+    non_finite: u64,
+    max_abs: f64,
+}
+
+/// Aggregate a trace into the report text (separated from [`run_cli`]
+/// so tests can pin it without touching stdout).
+pub fn summarize(text: &str) -> Result<String> {
+    let mut events = 0u64;
+    let mut config: Option<Json> = None;
+    let mut steps = 0u64;
+    let mut applied = 0u64;
+    let mut first_loss: Option<f64> = None;
+    let mut last_loss: Option<f64> = None;
+    let mut backoffs = 0u64;
+    let mut growths = 0u64;
+    let mut scale_min = f64::INFINITY;
+    let mut scale_max = f64::NEG_INFINITY;
+    let mut final_scale: Option<f64> = None;
+    let mut skipped: Option<f64> = None;
+    let mut grads: BTreeMap<String, GradAgg> = BTreeMap::new();
+    let mut weights: Option<Json> = None;
+    let mut acts: Option<Json> = None;
+
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("trace line {}", ln + 1))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some(TRACE_SCHEMA) => {}
+            other => bail!("trace line {}: schema {other:?}, expected {TRACE_SCHEMA:?}", ln + 1),
+        }
+        events += 1;
+        let ev = j
+            .get("ev")
+            .and_then(Json::as_str)
+            .with_context(|| format!("trace line {}: missing ev", ln + 1))?;
+        let num = |key: &str| j.get(key).and_then(Json::as_f64);
+        match ev {
+            "run_start" => config = j.get("config").cloned(),
+            "step" => {
+                steps += 1;
+                if j.get("applied").and_then(Json::as_bool) == Some(true) {
+                    applied += 1;
+                }
+                if let Some(l) = num("loss") {
+                    first_loss.get_or_insert(l);
+                    last_loss = Some(l);
+                }
+                if let Some(s) = num("scale") {
+                    scale_min = scale_min.min(s);
+                    scale_max = scale_max.max(s);
+                    final_scale = Some(s);
+                }
+                if let Some(g) = j.get("grads").and_then(Json::as_obj) {
+                    for (name, t) in g {
+                        let a = grads.entry(name.clone()).or_default();
+                        let field =
+                            |k: &str| t.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                        a.steps += 1;
+                        a.total += field("total");
+                        a.zeros += field("fp8_zero");
+                        a.top += field("fp8_top_binade");
+                        a.non_finite += field("non_finite");
+                        if let Some(m) = t.get("max_abs").and_then(Json::as_f64) {
+                            a.max_abs = a.max_abs.max(m);
+                        }
+                    }
+                }
+                if let Some(a) = j.get("acts") {
+                    acts = Some(a.clone());
+                }
+            }
+            "loss_scale" => {
+                match j.get("cause").and_then(Json::as_str) {
+                    Some("backoff") => backoffs += 1,
+                    Some("growth") => growths += 1,
+                    _ => {}
+                }
+                if let Some(to) = num("to") {
+                    scale_min = scale_min.min(to);
+                    scale_max = scale_max.max(to);
+                    final_scale = Some(to);
+                }
+            }
+            "reencode" | "run_end" => {
+                if let Some(w) = j.get("weights") {
+                    weights = Some(w.clone());
+                }
+                if let Some(a) = j.get("acts") {
+                    acts = Some(a.clone());
+                }
+                if ev == "run_end" {
+                    if let Some(s) = num("final_scale") {
+                        final_scale = Some(s);
+                    }
+                    skipped = num("skipped");
+                }
+            }
+            _ => {}
+        }
+    }
+    if events == 0 {
+        bail!("empty trace");
+    }
+
+    let pct = |n: u64, d: u64| if d == 0 { 0.0 } else { 100.0 * n as f64 / d as f64 };
+    let mut out = String::new();
+    let _ = writeln!(out, "trace: {TRACE_SCHEMA}, {events} events");
+    if let Some(cfg) = &config {
+        let _ = writeln!(out, "config: {cfg}");
+    }
+    let skipped = skipped.unwrap_or((steps - applied) as f64);
+    let _ = write!(out, "steps: {steps} ({applied} applied, {skipped} skipped)");
+    if let (Some(a), Some(b)) = (first_loss, last_loss) {
+        let _ = write!(out, " | loss {a:.4} -> {b:.4}");
+    }
+    out.push('\n');
+    let _ = write!(out, "loss scale: {backoffs} backoffs, {growths} growths");
+    if let Some(s) = final_scale {
+        let _ = write!(out, " | final {s} (min {scale_min}, max {scale_max})");
+    }
+    out.push('\n');
+    if !grads.is_empty() {
+        let _ = writeln!(out, "fp8 gradient saturation (over {steps} steps):");
+        for (name, a) in &grads {
+            let _ = writeln!(
+                out,
+                "  {name:<12} zero {:6.2}%  top-binade {:6.2}%  non-finite {:6.2}%  max|g| {:.4}",
+                pct(a.zeros, a.total),
+                pct(a.top, a.total),
+                pct(a.non_finite, a.total),
+                a.max_abs
+            );
+        }
+    }
+    if let Some(Json::Obj(ws)) = &weights {
+        let _ = writeln!(out, "floatsd8 weight saturation (final re-encode):");
+        for (name, t) in ws {
+            let total = t.get("total").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let at_max = t.get("at_max").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let hist: Vec<String> = t
+                .get("exp_hist")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(|v| v.to_string()).collect())
+                .unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "  {name:<12} at-max {:6.2}%  exp-hist [{}]",
+                pct(at_max, total),
+                hist.join(",")
+            );
+        }
+    }
+    if let Some(a) = &acts {
+        let one = |key: &str| -> Option<String> {
+            let s = a.get(key)?;
+            let f = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let (evals, lo, hi) = (f("evals"), f("clip_lo"), f("clip_hi"));
+            Some(format!(
+                "{key} {evals} evals (lo {:.2}%, hi {:.2}%)",
+                pct(lo, evals),
+                pct(hi, evals)
+            ))
+        };
+        let parts: Vec<String> =
+            ["sigmoid", "tanh"].iter().filter_map(|k| one(k)).collect();
+        if !parts.is_empty() {
+            let _ = writeln!(out, "activation clips: {}", parts.join("; "));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(s: &str) -> String {
+        format!("{{\"schema\":\"{TRACE_SCHEMA}\",{s}}}\n")
+    }
+
+    #[test]
+    fn summarize_covers_every_section() {
+        let mut t = String::new();
+        t.push_str(&line(r#""ev":"run_start","step":0,"config":{"task":"lm","seed":"7"}"#));
+        let grads = r#""grads":{"emb":{"total":10,"fp8_zero":4,"fp8_top_binade":1,"non_finite":2,"max_abs":99.5}}"#;
+        let acts = r#""acts":{"sigmoid":{"evals":100,"clip_lo":5,"clip_hi":1},"tanh":{"evals":50,"clip_lo":0,"clip_hi":2}}"#;
+        t.push_str(&line(&format!(
+            r#""ev":"step","step":1,"loss":2.5,"scale":1024,"applied":false,{grads},{acts}"#
+        )));
+        t.push_str(&line(
+            r#""ev":"loss_scale","step":1,"cause":"backoff","from":1024,"to":512,"skipped_total":1"#,
+        ));
+        let weights = r#""weights":{"l1.wx":{"total":64,"at_max":3,"exp_hist":[0,1,2,3,4,5,6,43]}}"#;
+        t.push_str(&line(&format!(
+            r#""ev":"run_end","step":1,"final_scale":512,"applied":0,"skipped":1,{weights}"#
+        )));
+        let s = summarize(&t).unwrap();
+        assert!(s.contains("steps: 1 (0 applied, 1 skipped)"), "{s}");
+        assert!(s.contains("loss 2.5000 -> 2.5000"), "{s}");
+        assert!(s.contains("1 backoffs, 0 growths"), "{s}");
+        assert!(s.contains("emb"), "{s}");
+        assert!(s.contains("l1.wx"), "{s}");
+        assert!(s.contains("at-max"), "{s}");
+        assert!(s.contains("sigmoid 100 evals"), "{s}");
+        assert!(s.contains("\"task\":\"lm\""), "{s}");
+    }
+
+    #[test]
+    fn summarize_rejects_foreign_schemas() {
+        assert!(summarize("{\"schema\":\"other-v9\",\"ev\":\"step\"}\n").is_err());
+        assert!(summarize("").is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! The `--trace <path>` JSONL event stream (schema
+//! `floatsd-trace-v1`): one compact JSON object per line, appended at
+//! step boundaries by the trainers.
+//!
+//! ## Schema
+//!
+//! Every line carries `"schema"`, `"ev"` (the event kind), and
+//! `"step"` (the **logical** step clock — 0 for run-scoped events).
+//! Event kinds:
+//!
+//! * `run_start` — `"config"`: the run's deterministic configuration
+//!   (seeds as decimal strings, see `TaskConfig::to_meta_json`);
+//! * `step` — per-window numerics health: `"loss"`, `"scale"`,
+//!   `"applied"`, `"skipped_total"`, `"grads"` (per-tensor FP8
+//!   saturation, scanned pre-`finalize_grads`), `"acts"` (cumulative
+//!   sigmoid/tanh clip counts since `run_start`);
+//! * `loss_scale` — a [`LossScaler`](crate::train::LossScaler)
+//!   adjustment: `"cause"` (`backoff`|`growth`), `"from"`, `"to"`,
+//!   `"skipped_total"`;
+//! * `reencode` — `"weights"`: per-matrix FloatSD8 code stats after an
+//!   applied update (exponent histogram + saturated-code count);
+//! * `run_end` — run totals plus final `"weights"` and `"acts"` (so a
+//!   run whose every step overflowed still reports saturation).
+//!
+//! ## Determinism
+//!
+//! All fields are deterministic functions of (config, seed) **except**
+//! wall-clock data, which is confined to fields named `"timing"`.
+//! Strip those and a fixed-seed rerun is byte-identical (pinned by
+//! `tests/telemetry.rs` and the `trace-smoke` CI job).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::qmath::vector::QMatrix;
+use crate::tensorfile::json::Json;
+
+use super::{code_stats, grad_saturation, ActSnapshot};
+
+/// Schema tag carried by every trace line.
+pub const TRACE_SCHEMA: &str = "floatsd-trace-v1";
+
+/// An append-only JSONL trace writer. Creating one opens the
+/// process-wide telemetry gate ([`super::hot_enabled`]); dropping it
+/// closes the gate and flushes.
+///
+/// Writes are best-effort: mid-run IO errors are deferred (training
+/// never aborts mid-step over a full disk) and surfaced by
+/// [`Self::finish`].
+pub struct TraceSink {
+    out: BufWriter<File>,
+    path: PathBuf,
+    deferred: Option<std::io::Error>,
+}
+
+impl TraceSink {
+    pub fn create(path: &Path) -> Result<TraceSink> {
+        let file = File::create(path)
+            .with_context(|| format!("create trace file {}", path.display()))?;
+        super::sink_opened();
+        Ok(TraceSink { out: BufWriter::new(file), path: path.to_path_buf(), deferred: None })
+    }
+
+    /// Append one event line; `fields` gains the common
+    /// `schema`/`ev`/`step` keys (serialized in BTreeMap key order, so
+    /// lines are byte-deterministic).
+    pub fn emit(&mut self, ev: &str, step: u64, mut fields: BTreeMap<String, Json>) {
+        fields.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+        fields.insert("ev".to_string(), Json::Str(ev.to_string()));
+        fields.insert("step".to_string(), Json::Num(step as f64));
+        if self.deferred.is_none() {
+            if let Err(e) = writeln!(self.out, "{}", Json::Obj(fields)) {
+                self.deferred = Some(e);
+            }
+        }
+    }
+
+    /// Flush and surface any deferred write error.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(e) = self.deferred.take() {
+            return Err(e).with_context(|| format!("write trace {}", self.path.display()));
+        }
+        self.out.flush().with_context(|| format!("flush trace {}", self.path.display()))
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+        super::sink_closed();
+    }
+}
+
+/// `f64` → JSON with non-finite values mapped to `null` (the writer
+/// has no representation for inf/NaN; a skipped step's loss can be
+/// non-finite).
+pub fn fnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Per-tensor FP8 gradient-saturation block (the `step` event's
+/// `"grads"` field): scans each named slice with
+/// [`grad_saturation`](super::grad_saturation).
+pub fn grads_json(tensors: &[(String, &[f32])]) -> Json {
+    let mut m = BTreeMap::new();
+    for (name, gs) in tensors {
+        let s = grad_saturation(gs);
+        let mut t = BTreeMap::new();
+        t.insert("total".to_string(), Json::Num(s.total as f64));
+        t.insert("fp8_zero".to_string(), Json::Num(s.zeros as f64));
+        t.insert("fp8_top_binade".to_string(), Json::Num(s.top_binade as f64));
+        t.insert("non_finite".to_string(), Json::Num(s.non_finite as f64));
+        t.insert("max_abs".to_string(), fnum(f64::from(s.max_abs)));
+        m.insert(name.clone(), Json::Obj(t));
+    }
+    Json::Obj(m)
+}
+
+/// Per-matrix FloatSD8 code-stats block (the `reencode`/`run_end`
+/// events' `"weights"` field).
+pub fn codes_json(mats: &[(String, &QMatrix)]) -> Json {
+    let mut m = BTreeMap::new();
+    for (name, mat) in mats {
+        let s = code_stats(mat);
+        let mut t = BTreeMap::new();
+        t.insert("total".to_string(), Json::Num(s.total as f64));
+        t.insert("at_max".to_string(), Json::Num(s.at_max as f64));
+        t.insert(
+            "exp_hist".to_string(),
+            Json::Arr(s.exp_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        m.insert(name.clone(), Json::Obj(t));
+    }
+    Json::Obj(m)
+}
+
+/// Cumulative activation-clip block (the `"acts"` field) — counts
+/// since the run's baseline snapshots.
+pub fn acts_json(sigmoid: ActSnapshot, tanh: ActSnapshot) -> Json {
+    let one = |s: ActSnapshot| {
+        let mut m = BTreeMap::new();
+        m.insert("evals".to_string(), Json::Num(s.evals as f64));
+        m.insert("clip_lo".to_string(), Json::Num(s.clip_lo as f64));
+        m.insert("clip_hi".to_string(), Json::Num(s.clip_hi as f64));
+        Json::Obj(m)
+    };
+    let mut m = BTreeMap::new();
+    m.insert("sigmoid".to_string(), one(sigmoid));
+    m.insert("tanh".to_string(), one(tanh));
+    Json::Obj(m)
+}
+
+/// `loss_scale` event payload.
+pub fn scale_fields(cause: &str, from: f32, to: f32, skipped_total: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("cause".to_string(), Json::Str(cause.to_string()));
+    m.insert("from".to_string(), Json::Num(f64::from(from)));
+    m.insert("to".to_string(), Json::Num(f64::from(to)));
+    m.insert("skipped_total".to_string(), Json::Num(skipped_total as f64));
+    m
+}
+
+/// Wall-clock payload — the only place non-deterministic data may
+/// appear; consumers strip `"timing"` before byte-comparing traces.
+pub fn timing_json(step_ms: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("step_ms".to_string(), fnum(step_ms));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_lines_are_parseable_and_tagged() {
+        let dir = std::env::temp_dir().join("fsd_telemetry_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.jsonl");
+        {
+            let mut sink = TraceSink::create(&path).unwrap();
+            assert!(super::super::hot_enabled(), "open sink must enable the gate");
+            let mut fields = BTreeMap::new();
+            fields.insert("loss".to_string(), fnum(1.25));
+            fields.insert("timing".to_string(), timing_json(0.5));
+            sink.emit("step", 3, fields);
+            sink.emit("run_end", 3, BTreeMap::new());
+            sink.finish().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(TRACE_SCHEMA));
+        assert_eq!(j.get("ev").unwrap().as_str(), Some("step"));
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn non_finite_values_serialize_as_null() {
+        assert_eq!(fnum(f64::NAN), Json::Null);
+        assert_eq!(fnum(f64::INFINITY), Json::Null);
+        assert_eq!(fnum(2.0), Json::Num(2.0));
+    }
+
+    #[test]
+    fn grads_json_names_every_tensor() {
+        let a = [0.0f32, 1.0];
+        let b = [f32::INFINITY];
+        let j = grads_json(&[("emb".to_string(), &a[..]), ("head.w".to_string(), &b[..])]);
+        assert_eq!(j.get("emb").unwrap().get("total").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("head.w").unwrap().get("non_finite").unwrap().as_usize(), Some(1));
+    }
+}

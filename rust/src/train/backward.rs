@@ -127,6 +127,24 @@ impl StackGrads {
         }
         out
     }
+
+    /// The same tensors read-only, named for telemetry's per-tensor
+    /// FP8 saturation scans ("emb", "l1.wx", …, "head.b"); `prefix`
+    /// (e.g. the mt encoder's "enc") is dot-joined in front when
+    /// non-empty. Names match `telemetry::stack_qmatrices` so gradient
+    /// and re-encode stats line up per tensor in the trace.
+    pub fn named_slices(&self, prefix: &str) -> Vec<(String, &[f32])> {
+        let name = |s: String| if prefix.is_empty() { s } else { format!("{prefix}.{s}") };
+        let mut out: Vec<(String, &[f32])> = vec![(name("emb".to_string()), &self.emb[..])];
+        for (l, g) in self.layers.iter().enumerate() {
+            out.push((name(format!("l{}.wx", l + 1)), &g.dwx[..]));
+            out.push((name(format!("l{}.wh", l + 1)), &g.dwh[..]));
+            out.push((name(format!("l{}.b", l + 1)), &g.db[..]));
+        }
+        out.push((name("head.w".to_string()), &self.head_w[..]));
+        out.push((name("head.b".to_string()), &self.head_b[..]));
+        out
+    }
 }
 
 /// Cotangent of a recurrent state — `dh`/`dc` flat `[B*H]`, the

@@ -48,7 +48,7 @@ pub mod trainer;
 
 pub use backward::{CellGrads, StackGrads, StateCot};
 pub use loss::{cross_entropy_grad, eval_ce, masked_cross_entropy_grad};
-pub use optimizer::{finalize_grads, LossScaler, MasterStack};
+pub use optimizer::{finalize_grads, LossScaler, MasterStack, ScaleEvent};
 pub use parallel::{
     check_threads, lane_slice_ids, lane_spans, merge_shards, run_shards, LaneShard,
     LANE_SHARDS_MAX,

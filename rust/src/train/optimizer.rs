@@ -14,6 +14,16 @@ use crate::rng::SplitMix64;
 
 use super::backward::StackGrads;
 
+/// One loss-scale adjustment, returned so the trainers can surface it
+/// (training logs + `--trace` `loss_scale` events).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleEvent {
+    /// the scaled gradients overflowed FP8: scale halved, step skipped
+    Backoff { from: f32, to: f32 },
+    /// a full growth interval of clean steps: scale doubled
+    Growth { from: f32, to: f32 },
+}
+
 /// Dynamic loss scaler: halve on overflow (skip the step), double
 /// after `growth_interval` consecutive good steps.
 #[derive(Clone, Debug)]
@@ -40,19 +50,25 @@ impl LossScaler {
     }
 
     /// The gradients overflowed: skip this step and back off.
-    pub fn on_overflow(&mut self) {
+    pub fn on_overflow(&mut self) -> ScaleEvent {
+        let from = self.scale;
         self.scale = (self.scale * 0.5).max(self.min_scale);
         self.good = 0;
         self.skipped += 1;
+        ScaleEvent::Backoff { from, to: self.scale }
     }
 
     /// A step was applied cleanly; grow the scale periodically.
-    pub fn on_good_step(&mut self) {
+    /// `Some` when this step crossed the growth interval.
+    pub fn on_good_step(&mut self) -> Option<ScaleEvent> {
         self.good += 1;
         if self.good >= self.growth_interval {
+            let from = self.scale;
             self.scale = (self.scale * 2.0).min(self.max_scale);
             self.good = 0;
+            return Some(ScaleEvent::Growth { from, to: self.scale });
         }
+        None
     }
 }
 
@@ -287,13 +303,15 @@ mod tests {
     #[test]
     fn loss_scaler_halves_and_grows() {
         let mut s = LossScaler::new(1024.0);
-        s.on_overflow();
+        let ev = s.on_overflow();
+        assert_eq!(ev, ScaleEvent::Backoff { from: 1024.0, to: 512.0 });
         assert_eq!(s.scale, 512.0);
         assert_eq!(s.skipped, 1);
         s.growth_interval = 2;
-        s.on_good_step();
+        assert_eq!(s.on_good_step(), None);
         assert_eq!(s.scale, 512.0);
-        s.on_good_step();
+        let ev = s.on_good_step();
+        assert_eq!(ev, Some(ScaleEvent::Growth { from: 512.0, to: 1024.0 }));
         assert_eq!(s.scale, 1024.0, "doubles after the growth interval");
         for _ in 0..100 {
             s.on_overflow();

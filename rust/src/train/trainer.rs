@@ -17,6 +17,7 @@
 //! `floatsd-lstm serve --model <ckpt>` loads directly — the
 //! train→checkpoint→serve loop in one binary.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
@@ -25,11 +26,13 @@ use crate::cli::Args;
 use crate::data::lm::LmGen;
 use crate::data::BatchSource;
 use crate::lstm::QLstmStack;
+use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
+use crate::tensorfile::json::Json;
 use crate::tensorfile::{write_tensors, Tensor};
 
 use super::backward::StackGrads;
 use super::loss::cross_entropy_grad;
-use super::optimizer::{finalize_grads, LossScaler, MasterStack};
+use super::optimizer::{finalize_grads, LossScaler, MasterStack, ScaleEvent};
 use super::parallel::{check_threads, lane_slice_ids, merge_shards, run_shards, LaneShard};
 
 /// The three size tiers every trainer CLI accepts via `--preset`:
@@ -83,6 +86,9 @@ pub struct TrainConfig {
     /// (numerics-neutral — see `train::parallel`)
     pub threads: usize,
     pub checkpoint: Option<PathBuf>,
+    /// `--trace`: write a `floatsd-trace-v1` JSONL numerics-health
+    /// stream here (numerics-neutral — see `crate::telemetry`)
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -110,6 +116,7 @@ impl TrainConfig {
             log_every: 25,
             threads: 1,
             checkpoint: None,
+            trace: None,
         };
         match tier {
             PresetTier::Default => {}
@@ -192,6 +199,11 @@ pub struct Trainer {
     shards: Vec<LaneShard>,
     pub steps_done: usize,
     pub steps_applied: usize,
+    /// open `--trace` sink, if any (never touches the value path)
+    trace: Option<TraceSink>,
+    /// activation-clip counter baselines at sink creation, so per-run
+    /// deltas stay meaningful when other runs share the process
+    act_base: (ActSnapshot, ActSnapshot),
 }
 
 impl Trainer {
@@ -208,6 +220,16 @@ impl Trainer {
         let shards = LaneShard::build(&stack, cfg.batch);
         let grads = StackGrads::zeros(&stack);
         let scaler = LossScaler::new(cfg.loss_scale);
+        let mut trace = match &cfg.trace {
+            Some(path) => Some(TraceSink::create(path)?),
+            None => None,
+        };
+        let act_base = (telemetry::SIGMOID.snapshot(), telemetry::TANH.snapshot());
+        if let Some(sink) = trace.as_mut() {
+            let mut fields = BTreeMap::new();
+            fields.insert("config".to_string(), config_json(&cfg));
+            sink.emit("run_start", 0, fields);
+        }
         Ok(Trainer {
             cfg,
             stack,
@@ -218,6 +240,8 @@ impl Trainer {
             shards,
             steps_done: 0,
             steps_applied: 0,
+            trace,
+            act_base,
         })
     }
 
@@ -227,6 +251,9 @@ impl Trainer {
     /// single FP16-master/FloatSD8 update applies (or the loss scaler
     /// skips on overflow).
     pub fn step(&mut self) -> StepOutcome {
+        // wall-clock is telemetry-only: it lands in the trace's marked
+        // `timing` field and never influences any computed value
+        let timer = self.trace.as_ref().map(|_| SpanTimer::start());
         let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
         let threads = self.cfg.threads;
         let batch = self.data.next_train();
@@ -273,16 +300,117 @@ impl Trainer {
             merge_shards(&mut refs, grads)
         };
 
+        // telemetry: scan the merged, still-scaled gradients *before*
+        // finalize_grads quantizes them in place (read-only scan, only
+        // when a sink is open)
+        let grads_ev = self
+            .trace
+            .is_some()
+            .then(|| trace::grads_json(&self.grads.named_slices("")));
+
         let applied = finalize_grads(&mut self.grads, scale, self.cfg.clip_norm);
-        if applied {
+        let scale_ev = if applied {
             self.masters.apply(&mut self.stack, &self.grads, self.cfg.lr, self.cfg.momentum);
-            self.scaler.on_good_step();
             self.steps_applied += 1;
+            self.scaler.on_good_step()
         } else {
-            self.scaler.on_overflow();
-        }
+            Some(self.scaler.on_overflow())
+        };
         self.steps_done += 1;
-        StepOutcome { loss: loss_sum / (b_n * seq) as f64, applied, scale }
+        let loss = loss_sum / (b_n * seq) as f64;
+        if self.trace.is_some() {
+            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer);
+        }
+        StepOutcome { loss, applied, scale }
+    }
+
+    /// Emit this step's trace events (`loss_scale` on scaler action,
+    /// `step` always, `reencode` after an applied update). Only called
+    /// with an open sink.
+    fn emit_step_events(
+        &mut self,
+        loss: f64,
+        applied: bool,
+        scale: f32,
+        scale_ev: Option<ScaleEvent>,
+        grads_ev: Option<Json>,
+        timer: Option<SpanTimer>,
+    ) {
+        let step = self.steps_done as u64;
+        let skipped = self.scaler.skipped;
+        let acts = trace::acts_json(
+            telemetry::SIGMOID.snapshot().since(self.act_base.0),
+            telemetry::TANH.snapshot().since(self.act_base.1),
+        );
+        let reencode = applied
+            .then(|| trace::codes_json(&telemetry::stack_qmatrices(&self.stack, "")));
+        let Some(sink) = self.trace.as_mut() else { return };
+        if let Some(ev) = scale_ev {
+            let (cause, from, to) = match ev {
+                ScaleEvent::Backoff { from, to } => ("backoff", from, to),
+                ScaleEvent::Growth { from, to } => ("growth", from, to),
+            };
+            sink.emit("loss_scale", step, trace::scale_fields(cause, from, to, skipped));
+        }
+        let mut fields = BTreeMap::new();
+        fields.insert("loss".to_string(), trace::fnum(loss));
+        fields.insert("scale".to_string(), Json::Num(f64::from(scale)));
+        fields.insert("applied".to_string(), Json::Bool(applied));
+        fields.insert("skipped_total".to_string(), Json::Num(skipped as f64));
+        if let Some(g) = grads_ev {
+            fields.insert("grads".to_string(), g);
+        }
+        fields.insert("acts".to_string(), acts);
+        if let Some(t) = &timer {
+            fields.insert("timing".to_string(), trace::timing_json(t.elapsed_ms()));
+        }
+        sink.emit("step", step, fields);
+        if let Some(weights) = reencode {
+            let mut fields = BTreeMap::new();
+            fields.insert("weights".to_string(), weights);
+            sink.emit("reencode", step, fields);
+        }
+    }
+
+    /// Emit the `run_end` event and flush/close the trace sink,
+    /// surfacing any deferred IO error. No-op without a sink.
+    fn finish_trace(&mut self) -> Result<()> {
+        if self.trace.is_none() {
+            return Ok(());
+        }
+        let acts = trace::acts_json(
+            telemetry::SIGMOID.snapshot().since(self.act_base.0),
+            telemetry::TANH.snapshot().since(self.act_base.1),
+        );
+        let weights = trace::codes_json(&telemetry::stack_qmatrices(&self.stack, ""));
+        let mut fields = BTreeMap::new();
+        fields.insert("steps".to_string(), Json::Num(self.steps_done as f64));
+        fields.insert("applied".to_string(), Json::Num(self.steps_applied as f64));
+        fields.insert("skipped".to_string(), Json::Num(self.scaler.skipped as f64));
+        fields.insert("final_scale".to_string(), Json::Num(f64::from(self.scaler.scale)));
+        fields.insert("weights".to_string(), weights);
+        fields.insert("acts".to_string(), acts);
+        let sink = self.trace.as_mut().expect("checked above");
+        sink.emit("run_end", self.steps_done as u64, fields);
+        sink.finish()
+    }
+
+    /// Point-in-time numerics-health block for bench rows
+    /// (`BENCH_train.json`): loss-scale totals + per-matrix FloatSD8
+    /// code stats. Deterministic — no wall-clock fields.
+    pub fn numerics_snapshot(&self) -> Json {
+        let mut scale = BTreeMap::new();
+        scale.insert("final".to_string(), Json::Num(f64::from(self.scaler.scale)));
+        scale.insert("applied".to_string(), Json::Num(self.steps_applied as f64));
+        scale.insert("skipped".to_string(), Json::Num(self.scaler.skipped as f64));
+        scale.insert("steps".to_string(), Json::Num(self.steps_done as f64));
+        let mut m = BTreeMap::new();
+        m.insert("loss_scale".to_string(), Json::Obj(scale));
+        m.insert(
+            "weights".to_string(),
+            trace::codes_json(&telemetry::stack_qmatrices(&self.stack, "")),
+        );
+        Json::Obj(m)
     }
 
     /// Run the configured number of steps; logs every
@@ -297,14 +425,16 @@ impl Trainer {
                 let window = &losses[losses.len().saturating_sub(self.cfg.log_every)..];
                 let mean: f64 = window.iter().sum::<f64>() / window.len() as f64;
                 println!(
-                    "step {:>5}  loss {:.4}  scale {:>7.0}{}",
+                    "step {:>5}  loss {:.4}  scale {:>7.0}  skipped {:>4}{}",
                     s + 1,
                     mean,
                     out.scale,
+                    self.scaler.skipped,
                     if out.applied { "" } else { "  (skipped)" }
                 );
             }
         }
+        self.finish_trace()?;
         if let Some(path) = self.cfg.checkpoint.clone() {
             self.save_checkpoint(&path)?;
             println!("checkpoint: {}", path.display());
@@ -377,6 +507,25 @@ impl Trainer {
     }
 }
 
+/// The char-LM trainer's `run_start` config block (deterministic:
+/// fixed keys, seed rendered as a decimal string to dodge f64
+/// rounding of large u64 seeds).
+fn config_json(cfg: &TrainConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str("char_lm".to_string()));
+    m.insert("vocab".to_string(), Json::Num(cfg.vocab as f64));
+    m.insert("dim".to_string(), Json::Num(cfg.dim as f64));
+    m.insert("hidden".to_string(), Json::Num(cfg.hidden as f64));
+    m.insert("layers".to_string(), Json::Num(cfg.layers as f64));
+    m.insert("batch".to_string(), Json::Num(cfg.batch as f64));
+    m.insert("seq".to_string(), Json::Num(cfg.seq as f64));
+    m.insert("steps".to_string(), Json::Num(cfg.steps as f64));
+    m.insert("threads".to_string(), Json::Num(cfg.threads as f64));
+    m.insert("seed".to_string(), Json::Str(cfg.seed.to_string()));
+    m.insert("loss_scale".to_string(), Json::Num(f64::from(cfg.loss_scale)));
+    Json::Obj(m)
+}
+
 /// `floatsd-lstm train` (offline path) — see `main.rs` docs.
 pub fn run_cli(args: &Args) -> Result<()> {
     let tier = PresetTier::parse(args.opt("preset").unwrap_or("default"))?;
@@ -406,6 +555,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         log_every: args.opt_usize("log-every", preset.log_every)?,
         threads: args.opt_usize("threads", preset.threads)?,
         checkpoint: Some(PathBuf::from(args.opt_or("out", "char_lm.tensors"))),
+        trace: args.opt("trace").map(PathBuf::from),
     };
     println!(
         "offline FloatSD8 training [{} preset]: vocab={} dim={} hidden={} layers={} | batch={} \
@@ -459,6 +609,7 @@ mod tests {
             log_every: 0,
             threads: 1,
             checkpoint: None,
+            trace: None,
         }
     }
 

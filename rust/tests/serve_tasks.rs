@@ -29,7 +29,7 @@ use floatsd_lstm::data::BatchSource;
 use floatsd_lstm::serve::{DecodeParams, Payload, Reply, ServeConfig, ServeModel, Server};
 use floatsd_lstm::tasks::eval::evaluate_checkpoint;
 use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
-use floatsd_lstm::train::eval_ce;
+use floatsd_lstm::train::{eval_ce, lane_spans};
 
 const RECV: Duration = Duration::from_secs(30);
 
@@ -73,7 +73,7 @@ fn lm_checkpoint_streams_bit_identical_to_eval() {
     cfg.steps = 6;
     cfg.seed = 5;
     let ckpt = train_ckpt(cfg, "lm_parity.tensors");
-    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+    let (cfg, want) = evaluate_checkpoint(&ckpt, 1).expect("offline eval");
 
     let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects lm"));
     assert_eq!(model.task, TaskKind::Lm);
@@ -107,17 +107,23 @@ fn lm_checkpoint_streams_bit_identical_to_eval() {
     }
     server.shutdown();
 
-    // replay the offline eval accumulation over the served logits
+    // replay the offline eval accumulation over the served logits —
+    // span by span in the fixed lane partition, each span summed
+    // separately and folded in order, exactly the sharded eval's fold
     let mut loss_sum = 0f64;
     let mut count = 0usize;
-    for (k, batch) in eval.iter().enumerate() {
-        for t in 0..cfg.seq {
-            for b in 0..cfg.batch {
-                let y = batch.y[b * cfg.seq + t] as usize;
-                loss_sum += eval_ce(&served[b][k * cfg.seq + t], y);
-                count += 1;
+    for (lo, hi) in lane_spans(cfg.batch) {
+        let mut sp_loss = 0f64;
+        for (k, batch) in eval.iter().enumerate() {
+            for t in 0..cfg.seq {
+                for b in lo..hi {
+                    let y = batch.y[b * cfg.seq + t] as usize;
+                    sp_loss += eval_ce(&served[b][k * cfg.seq + t], y);
+                    count += 1;
+                }
             }
         }
+        loss_sum += sp_loss;
     }
     assert_eq!(count, want.count);
     let loss = loss_sum / count.max(1) as f64;
@@ -138,7 +144,7 @@ fn pos_checkpoint_serves_bit_identical_to_eval() {
     cfg.steps = 6;
     cfg.seed = 9;
     let ckpt = train_ckpt(cfg, "pos_parity.tensors");
-    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+    let (cfg, want) = evaluate_checkpoint(&ckpt, 1).expect("offline eval");
 
     let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects pos"));
     assert_eq!(model.task, TaskKind::Pos);
@@ -182,19 +188,24 @@ fn pos_checkpoint_serves_bit_identical_to_eval() {
     }
     server.shutdown();
 
+    // span-ordered fold, matching the sharded offline eval
     let mut loss_sum = 0f64;
     let mut correct = 0usize;
     let mut count = 0usize;
-    for (k, batch) in eval.iter().enumerate() {
-        for t in 0..cfg.seq {
-            for b in 0..cfg.batch {
-                let y = batch.y[b * cfg.seq + t] as usize;
-                let lg = &served[k][b][t];
-                loss_sum += eval_ce(lg, y);
-                correct += usize::from(argmax(lg) == y);
-                count += 1;
+    for (lo, hi) in lane_spans(cfg.batch) {
+        let mut sp_loss = 0f64;
+        for (k, batch) in eval.iter().enumerate() {
+            for t in 0..cfg.seq {
+                for b in lo..hi {
+                    let y = batch.y[b * cfg.seq + t] as usize;
+                    let lg = &served[k][b][t];
+                    sp_loss += eval_ce(lg, y);
+                    correct += usize::from(argmax(lg) == y);
+                    count += 1;
+                }
             }
         }
+        loss_sum += sp_loss;
     }
     assert_eq!(count, want.count);
     let loss = loss_sum / count.max(1) as f64;
@@ -215,7 +226,7 @@ fn nli_checkpoint_classifies_bit_identical_to_eval() {
     cfg.steps = 6;
     cfg.seed = 11;
     let ckpt = train_ckpt(cfg, "nli_parity.tensors");
-    let (cfg, want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+    let (cfg, want) = evaluate_checkpoint(&ckpt, 1).expect("offline eval");
 
     let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects nli"));
     assert_eq!(model.task, TaskKind::Nli);
@@ -258,17 +269,22 @@ fn nli_checkpoint_classifies_bit_identical_to_eval() {
     }
     server.shutdown();
 
+    // span-ordered fold, matching the sharded offline eval
     let mut loss_sum = 0f64;
     let mut correct = 0usize;
     let mut count = 0usize;
-    for (k, batch) in eval.iter().enumerate() {
-        for (b, &label) in batch.y.iter().enumerate() {
-            let y = label as usize;
-            let lg = &served[k][b];
-            loss_sum += eval_ce(lg, y);
-            correct += usize::from(argmax(lg) == y);
-            count += 1;
+    for (lo, hi) in lane_spans(cfg.batch) {
+        let mut sp_loss = 0f64;
+        for (k, batch) in eval.iter().enumerate() {
+            for (b, &label) in batch.y[lo..hi].iter().enumerate() {
+                let y = label as usize;
+                let lg = &served[k][lo + b];
+                sp_loss += eval_ce(lg, y);
+                correct += usize::from(argmax(lg) == y);
+                count += 1;
+            }
         }
+        loss_sum += sp_loss;
     }
     assert_eq!(count, want.count);
     let loss = loss_sum / count.max(1) as f64;
@@ -290,7 +306,7 @@ fn mt_checkpoint_greedy_decode_matches_offline_reference() {
     cfg.steps = 6;
     cfg.seed = 13;
     let ckpt = train_ckpt(cfg, "mt_parity.tensors");
-    let (cfg, _want) = evaluate_checkpoint(&ckpt).expect("offline eval");
+    let (cfg, _want) = evaluate_checkpoint(&ckpt, 1).expect("offline eval");
 
     let model = Arc::new(ServeModel::load(&ckpt).expect("serve auto-detects mt"));
     assert_eq!(model.task, TaskKind::Mt);

@@ -146,7 +146,7 @@ fn checkpoint_round_trip_evaluates_bit_identically() {
     let mut trainer = TaskTrainer::new(cfg).unwrap();
     let report = trainer.train().unwrap();
 
-    let (cfg2, eval2) = evaluate_checkpoint(&ckpt).expect("reload checkpoint");
+    let (cfg2, eval2) = evaluate_checkpoint(&ckpt, 1).expect("reload checkpoint");
     assert_eq!(cfg2.task, TaskKind::Pos);
     assert_eq!(cfg2.vocab, 96);
     assert_eq!(cfg2.hidden, 16);
@@ -179,7 +179,7 @@ fn mt_checkpoint_round_trip_evaluates_bit_identically() {
     cfg.checkpoint = Some(ckpt.clone());
     let mut trainer = TaskTrainer::new(cfg).unwrap();
     let report = trainer.train().unwrap();
-    let (cfg2, eval2) = evaluate_checkpoint(&ckpt).expect("reload mt checkpoint");
+    let (cfg2, eval2) = evaluate_checkpoint(&ckpt, 1).expect("reload mt checkpoint");
     assert_eq!(cfg2.task, TaskKind::Mt);
     assert_eq!(
         eval2.loss.to_bits(),
@@ -199,8 +199,8 @@ fn eval_report_covers_all_four_tasks_and_is_byte_deterministic() {
     TaskTrainer::new(cfg).unwrap().train().unwrap();
 
     let models = vec![ckpt];
-    let r1 = build_report(&models).expect("report").to_string();
-    let r2 = build_report(&models).expect("report again").to_string();
+    let r1 = build_report(&models, 1).expect("report").to_string();
+    let r2 = build_report(&models, 1).expect("report again").to_string();
     assert_eq!(r1, r2, "eval report must be byte-deterministic");
 
     assert!(r1.contains("\"schema\":\"floatsd-eval-v1\""), "schema tag missing");

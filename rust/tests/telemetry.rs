@@ -1,0 +1,243 @@
+//! The telemetry determinism contract, pinned end to end: enabling
+//! `--trace` must never perturb computation. Checkpoint bytes and
+//! per-step loss traces are byte-identical telemetry-on vs
+//! telemetry-off for all four task heads at `--threads 1` and
+//! `--threads 4`; served logits are bit-identical with the telemetry
+//! gate open; a fixed-seed `--trace` JSONL stream is byte-identical
+//! across runs once the clearly marked `"timing"` fields are
+//! stripped; and the span-sharded eval report is byte-identical for
+//! any `--threads N` while carrying per-class confusion matrices.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use floatsd_lstm::serve::{ServeConfig, ServeModel, Server};
+use floatsd_lstm::tasks::eval::{build_report, evaluate_checkpoint};
+use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
+use floatsd_lstm::telemetry::{TraceSink, TRACE_SCHEMA};
+use floatsd_lstm::tensorfile::json::Json;
+use floatsd_lstm::train::PresetTier;
+
+const RECV: Duration = Duration::from_secs(30);
+
+fn test_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("fsd_telemetry_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A miniature of each task with an awkward lane count (batch 6 → six
+/// 1-lane shards, so `--threads 4` chunks unevenly).
+fn tiny_task_cfg(kind: TaskKind) -> TaskConfig {
+    let mut cfg = TaskConfig::preset_tier(kind, PresetTier::Tiny);
+    cfg.batch = 6;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.log_every = 0;
+    cfg.seed = 77;
+    cfg
+}
+
+/// Train a tiny run, optionally traced; return per-step loss bits and
+/// the checkpoint bytes.
+fn run_task(kind: TaskKind, threads: usize, traced: bool) -> (Vec<u64>, Vec<u8>) {
+    let dir = test_dir();
+    let tag = format!("{}_{}t_{}", kind.name(), threads, if traced { "on" } else { "off" });
+    let ckpt = dir.join(format!("{tag}.tensors"));
+    let mut cfg = tiny_task_cfg(kind);
+    cfg.threads = threads;
+    cfg.checkpoint = Some(ckpt.clone());
+    let trace = dir.join(format!("{tag}.jsonl"));
+    if traced {
+        cfg.trace = Some(trace.clone());
+    }
+    let mut trainer = TaskTrainer::new(cfg).expect("valid task config");
+    let report = trainer.train().expect("tiny training run");
+    if traced {
+        let text = std::fs::read_to_string(&trace).expect("trace written");
+        assert!(!text.is_empty(), "{tag}: trace stream must not be empty");
+        let first = Json::parse(text.lines().next().unwrap()).expect("trace line parses");
+        assert_eq!(first.get("schema").and_then(Json::as_str), Some(TRACE_SCHEMA));
+        assert_eq!(first.get("ev").and_then(Json::as_str), Some("run_start"));
+    }
+    let bits: Vec<u64> = report.losses.iter().map(|l| l.to_bits()).collect();
+    let bytes = std::fs::read(&ckpt).expect("checkpoint written");
+    (bits, bytes)
+}
+
+#[test]
+fn tracing_never_perturbs_training_for_any_task_or_thread_count() {
+    for kind in TaskKind::ALL {
+        for threads in [1usize, 4] {
+            let (bits_off, bytes_off) = run_task(kind, threads, false);
+            let (bits_on, bytes_on) = run_task(kind, threads, true);
+            assert_eq!(
+                bits_on,
+                bits_off,
+                "{}: loss trace diverged with --trace at --threads {threads}",
+                kind.name()
+            );
+            assert_eq!(
+                bytes_on,
+                bytes_off,
+                "{}: checkpoint bytes diverged with --trace at --threads {threads}",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Stream a fixed token sequence through a served LM checkpoint and
+/// return every reply's logits bits, in per-session FIFO order.
+fn serve_logit_bits(ckpt: &Path) -> Vec<u32> {
+    let model = Arc::new(ServeModel::load(ckpt).expect("serve auto-detects lm"));
+    let vocab = model.stack.embed.vocab;
+    let server = Server::start(
+        model,
+        ServeConfig { workers: 2, max_batch: 4, batch_window: Duration::from_micros(50) },
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for s in 0..4u64 {
+        let (tx, rx) = mpsc::channel();
+        for t in 0..8usize {
+            server.submit(s, (s as usize * 7 + t * 3) % vocab, tx.clone()).unwrap();
+        }
+        rxs.push(rx);
+    }
+    let mut bits = Vec::new();
+    for rx in &rxs {
+        for _ in 0..8 {
+            let reply = rx.recv_timeout(RECV).expect("lm reply");
+            let lg = reply.logits().expect("step reply carries logits");
+            bits.extend(lg.iter().map(|v| v.to_bits()));
+        }
+    }
+    server.shutdown();
+    bits
+}
+
+#[test]
+fn served_logits_are_bit_identical_with_telemetry_enabled() {
+    let dir = test_dir();
+    let ckpt = dir.join("serve_parity.tensors");
+    let mut cfg = tiny_task_cfg(TaskKind::Lm);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+
+    let base = serve_logit_bits(&ckpt);
+    assert!(!base.is_empty());
+    // open a sink: flips the process-wide hot-path gate, so the
+    // activation hooks count during this serve run
+    let trace = dir.join("serve_parity.jsonl");
+    let mut sink = TraceSink::create(&trace).unwrap();
+    let gated = serve_logit_bits(&ckpt);
+    sink.finish().unwrap();
+    drop(sink);
+    assert_eq!(gated, base, "served logits changed with the telemetry gate open");
+}
+
+/// Parse a JSONL trace, drop the wall-clock-only `"timing"` fields,
+/// and return the re-serialized deterministic lines.
+fn deterministic_lines(path: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).expect("read trace");
+    text.lines()
+        .map(|line| {
+            let mut j = Json::parse(line).expect("trace line parses");
+            if let Json::Obj(m) = &mut j {
+                m.remove("timing");
+            }
+            j.to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn cli_trace_stream_is_byte_deterministic_across_runs() {
+    let dir = test_dir();
+    let run = |n: usize| -> PathBuf {
+        let trace = dir.join(format!("cli_trace_{n}.jsonl"));
+        let out = dir.join(format!("cli_trace_{n}.tensors"));
+        // an absurd initial loss scale forces overflow skips, so the
+        // stream is guaranteed to carry loss_scale backoff events
+        let status = Command::new(env!("CARGO_BIN_EXE_floatsd-lstm"))
+            .args([
+                "train",
+                "--preset",
+                "tiny",
+                "--steps",
+                "8",
+                "--seed",
+                "5",
+                "--log-every",
+                "0",
+                "--loss-scale",
+                "1000000000",
+            ])
+            .arg("--out")
+            .arg(&out)
+            .arg("--trace")
+            .arg(&trace)
+            .status()
+            .expect("spawn floatsd-lstm train");
+        assert!(status.success(), "traced training run failed");
+        trace
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let l1 = deterministic_lines(&t1);
+    let l2 = deterministic_lines(&t2);
+    assert_eq!(l1, l2, "fixed-seed trace streams diverged beyond timing fields");
+
+    let evs: Vec<String> = l1
+        .iter()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            j.get("ev").and_then(Json::as_str).unwrap_or("?").to_string()
+        })
+        .collect();
+    assert_eq!(evs.first().map(String::as_str), Some("run_start"));
+    assert_eq!(evs.last().map(String::as_str), Some("run_end"));
+    assert!(evs.iter().any(|e| e == "step"), "no step events: {evs:?}");
+    assert!(evs.iter().any(|e| e == "loss_scale"), "no loss_scale events: {evs:?}");
+
+    // the report summarizer digests the same stream
+    let out = Command::new(env!("CARGO_BIN_EXE_floatsd-lstm"))
+        .arg("report")
+        .arg(&t1)
+        .output()
+        .expect("spawn floatsd-lstm report");
+    assert!(out.status.success(), "report failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("loss scale:"), "report missing loss-scale section: {text}");
+    assert!(text.contains("backoffs"), "report missing backoff count: {text}");
+    assert!(
+        text.contains("floatsd8 weight saturation"),
+        "report missing re-encode section: {text}"
+    );
+}
+
+#[test]
+fn eval_report_is_byte_identical_across_thread_counts() {
+    let dir = test_dir();
+    let ckpt = dir.join("eval_threads.tensors");
+    let mut cfg = tiny_task_cfg(TaskKind::Pos);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+
+    let (_c1, e1) = evaluate_checkpoint(&ckpt, 1).expect("eval at 1 thread");
+    let (_c4, e4) = evaluate_checkpoint(&ckpt, 4).expect("eval at 4 threads");
+    assert_eq!(e1.loss.to_bits(), e4.loss.to_bits(), "sharded eval loss diverged");
+    assert_eq!(e1.metric.to_bits(), e4.metric.to_bits(), "sharded eval metric diverged");
+    let cm = e1.confusion.as_ref().expect("pos eval carries a confusion matrix");
+    assert_eq!(cm.total(), e1.count as u64, "confusion cells must sum to the scored count");
+    assert_eq!(e1.confusion, e4.confusion, "confusion matrices diverged across threads");
+
+    let models = vec![ckpt];
+    let r1 = build_report(&models, 1).expect("report at 1 thread").to_string();
+    let r4 = build_report(&models, 4).expect("report at 4 threads").to_string();
+    assert_eq!(r1, r4, "eval report bytes diverged across --threads");
+    assert!(r1.contains("\"confusion\":"), "report missing confusion matrices");
+}

@@ -1,0 +1,82 @@
+//! Disabled-path overhead guard: with no [`TraceSink`] open, the
+//! telemetry hot paths — the activation hooks and the metric
+//! primitives — must not allocate. This test binary installs a
+//! counting global allocator and holds exactly one test, so no
+//! concurrent harness thread can pollute the count.
+//!
+//! [`TraceSink`]: floatsd_lstm::telemetry::TraceSink
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use floatsd_lstm::formats::round_sd8;
+use floatsd_lstm::telemetry::{
+    hot_enabled, note_sigmoid, note_tanh, Counter, Gauge, Histogram, SampleWindow,
+};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_telemetry_hot_paths_do_not_allocate() {
+    assert!(!hot_enabled(), "no sink is open in this process");
+
+    // construct everything (and warm the lazily-built FloatSD8 tables)
+    // before the measured window — only recording must be free
+    let counter = Counter::new();
+    let gauge = Gauge::new();
+    let hist = Histogram::new(&[1, 2, 4, 8, 16]);
+    let mut window = SampleWindow::new(64);
+    for i in 0..80u64 {
+        window.push(Duration::from_nanos(i));
+    }
+    black_box(round_sd8(0.123));
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        note_sigmoid(black_box(0.5));
+        note_sigmoid(black_box(1.0));
+        note_tanh(black_box(-1.0));
+        counter.add(1);
+        gauge.set(i);
+        hist.record(i % 23);
+        window.push(Duration::from_nanos(i));
+    }
+    black_box(counter.get());
+    black_box(gauge.get());
+    black_box(hist.total());
+    black_box(window.len());
+    let after = ALLOCS.load(Ordering::Relaxed);
+
+    assert_eq!(
+        after - before,
+        0,
+        "telemetry hot paths allocated {} times with the sink closed",
+        after - before
+    );
+    assert_eq!(counter.get(), 10_000);
+    assert_eq!(hist.total(), 10_000);
+    assert_eq!(window.len(), 64, "the sample ring must stay at capacity");
+}
