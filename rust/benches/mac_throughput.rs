@@ -1,15 +1,46 @@
 //! Software-MAC throughput: architectural MAC (`mac_exact`), the
-//! bit-level pipeline model, the serial-round ablation, and a plain
-//! f32 FMA baseline. This is the L3 hot-path microbench behind the
-//! §Perf iteration log.
+//! bit-level pipeline model, the serial-round ablation, a plain f32
+//! FMA baseline — plus the matvec/matmul kernel tiers (`decoded` vs
+//! `shiftadd`), whose rows land in `BENCH_train.json` under
+//! `kernel_rows` so the decoded-vs-shiftadd trajectory is trackable
+//! across PRs. This is the L3 hot-path microbench behind the §Perf
+//! iteration log.
+//!
+//! Run: `cargo bench --bench mac_throughput`
+//! Quick (CI) configuration: `FSD_BENCH_QUICK=1` shrinks the kernel
+//! matrices so the parity rows still get produced in seconds.
 
-use floatsd_lstm::benchlib::{bench, black_box};
-use floatsd_lstm::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
+use std::collections::BTreeMap;
+
+use floatsd_lstm::benchlib::{bench, black_box, BenchStats};
+use floatsd_lstm::formats::{round_f16, round_f8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
 use floatsd_lstm::hardware::mac_sim::MacPipeline;
 use floatsd_lstm::qmath::mac::{mac_exact, mac_serial};
+use floatsd_lstm::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::rng::SplitMix64;
+use floatsd_lstm::tensorfile::json::Json;
 
-fn main() {
+/// `BENCH_train.json` lands at the repo root (next to CHANGES.md);
+/// the kernel rows merge into it instead of clobbering the training
+/// rows `train_throughput` writes.
+fn bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_train.json")
+}
+
+/// One kernel-tier row: op + tier + measured rate, with the
+/// bit-identical cross-check result recorded alongside the numbers.
+fn kernel_row(op: &str, tier: KernelTier, s: &BenchStats, macs: usize, identical: bool) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    m.insert("tier".to_string(), Json::Str(tier.name().to_string()));
+    m.insert("ns_per_call".to_string(), Json::Num(s.ns_per_iter()));
+    m.insert("m_macs_per_s".to_string(), Json::Num(s.throughput(macs) / 1e6));
+    m.insert("identical".to_string(), Json::Bool(identical));
+    Json::Obj(m)
+}
+
+fn main() -> anyhow::Result<()> {
     let mut rng = SplitMix64::new(1);
     let n = 4096;
     let xs: Vec<Fp8> = (0..n).map(|_| Fp8::from_f32(rng.uniform(-4.0, 4.0))).collect();
@@ -53,4 +84,63 @@ fn main() {
         black_box(acc);
     });
     println!("{s}  -> {:.1} M mul-adds/s", s.throughput(n) / 1e6);
+
+    // ----- kernel tiers: decoded f32 vs integer shift-add ------------
+    let quick = std::env::var("FSD_BENCH_QUICK").is_ok();
+    let (rows_n, cols, batch) = if quick { (64, 64, 4) } else { (512, 256, 8) };
+    println!("\nkernel tiers ({rows_n}x{cols} weights, batch {batch}):");
+
+    let src: Vec<f32> = (0..rows_n * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let mut w = QMatrix::from_f32(rows_n, cols, &src);
+    let x: Vec<f32> = (0..cols).map(|_| round_f8(rng.uniform(-4.0, 4.0))).collect();
+    let xb: Vec<f32> = (0..batch * cols).map(|_| round_f8(rng.uniform(-4.0, 4.0))).collect();
+    let bias: Vec<f32> = (0..rows_n).map(|_| round_f16(rng.uniform(-0.5, 0.5))).collect();
+    let mut out = vec![0f32; rows_n];
+    let mut out_b = vec![0f32; batch * rows_n];
+
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut reference: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+    for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+        w.set_kernel_tier(tier);
+        let s = bench(&format!("matvec [{}]", tier.name()), || {
+            matvec_fast(&w, &x, &bias, &mut out);
+            black_box(&out);
+        });
+        println!("{s}  -> {:.1} M MACs/s", s.throughput(rows_n * cols) / 1e6);
+        let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+        let identical =
+            reference.entry("matvec".to_string()).or_insert_with(|| bits.clone()) == &bits;
+        kernel_rows.push(kernel_row("matvec", tier, &s, rows_n * cols, identical));
+        assert!(identical, "{}: matvec diverged from decoded", tier.name());
+
+        let s = bench(&format!("matmul x{batch} [{}]", tier.name()), || {
+            matmul_fast(&w, &xb, batch, &bias, &mut out_b);
+            black_box(&out_b);
+        });
+        println!("{s}  -> {:.1} M MACs/s", s.throughput(batch * rows_n * cols) / 1e6);
+        let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
+        let identical =
+            reference.entry("matmul".to_string()).or_insert_with(|| bits.clone()) == &bits;
+        kernel_rows.push(kernel_row("matmul", tier, &s, batch * rows_n * cols, identical));
+        assert!(identical, "{}: matmul diverged from decoded", tier.name());
+    }
+
+    // merge into BENCH_train.json without clobbering the training rows
+    let json_path = bench_json_path();
+    let mut root = match std::fs::read_to_string(&json_path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    let mut shape = BTreeMap::new();
+    shape.insert("rows".to_string(), Json::Num(rows_n as f64));
+    shape.insert("cols".to_string(), Json::Num(cols as f64));
+    shape.insert("batch".to_string(), Json::Num(batch as f64));
+    shape.insert("rows_list".to_string(), Json::Arr(kernel_rows));
+    root.insert("kernel_rows".to_string(), Json::Obj(shape));
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(root)))?;
+    println!("\nwrote kernel rows into {}", json_path.display());
+    Ok(())
 }

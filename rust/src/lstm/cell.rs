@@ -116,6 +116,14 @@ impl QLstmCell {
         }
     }
 
+    /// Select the forward-kernel tier for both fused weight matrices
+    /// (`decoded` multiply vs integer `shiftadd`; bit-identical — see
+    /// [`crate::qmath::shiftadd`]).
+    pub fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
+        self.wx.set_kernel_tier(tier);
+        self.wh.set_kernel_tier(tier);
+    }
+
     /// One time step. `x` must already be on the FP8 grid (the caller
     /// quantizes embeddings / inter-layer activations); `h`/`c` are the
     /// recurrent state (h on FP8, c on FP16 — maintained by this fn).

@@ -58,6 +58,11 @@ impl Dense {
     pub fn forward(&self, x: &[f32], out: &mut [f32]) {
         matvec_fast(&self.w, x, &self.bias, out);
     }
+
+    /// Select the forward-kernel tier for the weight matrix.
+    pub fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
+        self.w.set_kernel_tier(tier);
+    }
 }
 
 /// One (optionally bidirectional) quantized LSTM layer.
@@ -165,6 +170,19 @@ impl QLstmStack {
     /// Output (logit) dimension of the dense head.
     pub fn n_out(&self) -> usize {
         self.head.w.rows
+    }
+
+    /// Select the forward-kernel tier for every weight matrix in the
+    /// stack (all LSTM cells, both directions, plus the dense head).
+    /// Tiers are a runtime choice — they never enter checkpoints.
+    pub fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
+        for layer in &mut self.layers {
+            layer.fwd.set_kernel_tier(tier);
+            if let Some(bwd) = &mut layer.bwd {
+                bwd.set_kernel_tier(tier);
+            }
+        }
+        self.head.set_kernel_tier(tier);
     }
 
     /// True when every layer is forward-only — the precondition for

@@ -6,16 +6,20 @@
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
 //!                    [--decode-len L --beam K --beam-len-norm A]
+//!                    [--kernel-tier decoded|shiftadd]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
 //! floatsd-lstm train [--preset tiny|default|paper] [--threads N] [--trace t.jsonl]
+//!                    [--trace-every N] [--kernel-tier decoded|shiftadd]
 //!                    [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
 //!                                        # (lane-sharded; --threads N ≡ --threads 1 bit-for-bit)
 //! floatsd-lstm train --task {lm,pos,nli,mt} [--preset tiny|default|paper]
-//!                    [--threads N] [--steps N --out ckpt.tensors ...]
+//!                    [--threads N] [--trace-every N] [--kernel-tier decoded|shiftadd]
+//!                    [--steps N --out ckpt.tensors ...]
 //!                                        # multi-task offline training (tasks/)
 //! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--threads N] [--out report.json]
+//!                   [--kernel-tier decoded|shiftadd]
 //!                                        # held-out eval grid across all four tasks
 //!                                        # (span-sharded; byte-identical for any N)
 //! floatsd-lstm report trace.jsonl        # summarize a --trace numerics-health stream
@@ -38,7 +42,10 @@
 //! `meta/task_cfg` parser and emits a deterministic JSON report
 //! covering all four tasks (untrained tasks are scored at preset
 //! init); served outputs are bit-identical to that offline eval path
-//! (pinned by `tests/serve_tasks.rs`). Subcommands
+//! (pinned by `tests/serve_tasks.rs`). `--kernel-tier shiftadd` routes
+//! every forward matvec/matmul through the integer shift-add tier
+//! ([`floatsd_lstm::qmath::shiftadd`]) — bit-identical outputs, pinned
+//! by `tests/shiftadd_equivalence.rs`. Subcommands
 //! marked `[pjrt]` need the crate built with `--features pjrt` (and
 //! real XLA bindings in place of the offline stub); everything else —
 //! the serving engine, the offline trainers, and the eval harness —

@@ -8,6 +8,10 @@
 //!   products aligned and added in a carry-save tree, rounded once);
 //! * [`vector`] — matvec/matmul built from the MAC (the rust inference
 //!   engine hot path), with a bit-identical fast path;
+//! * [`shiftadd`] — the integer shift-add kernel tier: FloatSD8 digit
+//!   pairs shifted into the hardware MAC's fixed-point frame, no
+//!   multiplier on the weight side (`--kernel-tier shiftadd`), pinned
+//!   bit-identical to the decoded path;
 //! * [`grad`] — the backward-pass siblings (transposed contractions,
 //!   rank-1 gradient accumulation, FP8 gradient quantization) used by
 //!   the offline training engine in [`crate::train`].
@@ -19,8 +23,10 @@
 pub mod grad;
 pub mod mac;
 pub mod qsigmoid;
+pub mod shiftadd;
 pub mod vector;
 
 pub use grad::{matmul_t_fast, matvec_t_fast, outer_acc, quantize_fp8_inplace};
 pub use mac::{mac_exact, mac_serial, MacMode};
 pub use qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8, SigmoidLut};
+pub use shiftadd::{KernelTier, WeightDigits};

@@ -1,0 +1,394 @@
+//! Integer **shift-add** kernel tier — the paper's hardware thesis
+//! (§IV, Table VII) brought onto the software hot path.
+//!
+//! A FloatSD8 weight is at most two signed power-of-two digits
+//! ([`FloatSdFormat::partial_products`](crate::formats::FloatSdFormat::partial_products)),
+//! so multiplying by it never needs a multiplier: `w·x` is
+//! `Σ sign_i · (x << e_i)`. The decoded-f32 kernels in
+//! [`vector`](super::vector) ignore this and multiply; this module
+//! implements the same dot products by **shifting integer partial sums
+//! in the fixed-point frame of the hardware MAC**
+//! ([`hardware::mac_sim`](crate::hardware::mac_sim), `FRAC_BITS` = 28)
+//! — in the style of int8 fixed-point inference engines (int dots →
+//! one rescale/round at the group boundary).
+//!
+//! ## Equivalence contract (pinned by `tests/shiftadd_equivalence.rs`)
+//!
+//! The decoded reference rounds once per [`MAC_GROUP`]-element group:
+//! `acc ← fp16(acc + Σ_group w·x)`, with the group sum exact in f64.
+//! For operands inside the fixed-point frame — `|x| ≤ 2^20` with no
+//! significand bit below `2^-19`, accumulator within `2^20`/`2^-28` —
+//! every product `w·x` is an exact multiple of `2^-28`, group sums
+//! stay under 53 bits, and both paths compute the *same exact value*;
+//! [`round_fixed_to_f16`] is RNE like `Fp16::from_f64`, so the rounded
+//! results are **bit-identical**. Every grid the engine produces (FP8
+//! activations, FP16 accumulators, FloatSD8 σ outputs) lives inside
+//! that frame. Operands outside it (f32 denormals below `2^-19`,
+//! magnitudes above `2^20`, ±inf/NaN, `-0.0`) make their *group* fall
+//! back to the decoded path's literal f64 operation sequence — so
+//! [`matvec_sa`] ≡ `matvec_fast` bit-for-bit on **all** inputs, not
+//! just well-behaved ones.
+//!
+//! The whole-row single-rounding variant [`dot_row_sa_wide`] trades
+//! that identity for fewer roundings; its divergence from the chained
+//! reference is *characterized* (ULP/max-abs bound) rather than
+//! pinned, the way `qsigmoid` documents its error envelope.
+//!
+//! Tier selection is a per-matrix runtime switch
+//! ([`KernelTier`] on [`QMatrix`]) exposed as `--kernel-tier
+//! {decoded,shiftadd}` on the train/serve/eval CLIs; backward kernels
+//! always run decoded (gradients are FP8/f32, not FloatSD8).
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Result};
+
+use crate::formats::floatsd::SD8_EXP_BIAS;
+use crate::formats::{FloatSd8, Fp16, FLOAT_SD8};
+use crate::hardware::mac_sim::round_fixed_to_f16;
+
+use super::mac::MAC_GROUP;
+use super::vector::QMatrix;
+
+/// Fixed-point frame of the accumulation: partial sums are integers in
+/// units of `2^-FRAC_BITS` — the same frame as the hardware MAC
+/// simulator (equality pinned by a test in
+/// `tests/shiftadd_equivalence.rs`).
+pub const FRAC_BITS: i32 = 28;
+
+/// Smallest partial-product exponent a FloatSD8 digit can contribute:
+/// exponent field 0 (`e = −bias`) with the second group's odd digit
+/// (`g1 = ±1`, weight `2^-2`).
+pub const W_EXP_MIN: i32 = -SD8_EXP_BIAS - 2;
+/// Largest digit exponent: exponent field 7 with `g0 = ±4`.
+pub const W_EXP_MAX: i32 = (7 - SD8_EXP_BIAS) + 2;
+
+/// Smallest activation significand exponent the frame can hold: the
+/// lowest-exponent digit (`2^-9`) times a `2^-19` activation bit still
+/// lands on the `2^-28` fixed-point LSB.
+const X_EXP_MIN: i32 = -FRAC_BITS - W_EXP_MIN;
+/// Accumulator bits reach the frame LSB directly.
+const ACC_EXP_MIN: i32 = -FRAC_BITS;
+/// Magnitude cap keeping a 4-term group + accumulator within 53 exact
+/// bits (`4 · 4.5 · 2^20 + 2^20 < 2^25`, times `2^28` < `2^53`). FP8
+/// (max 114688 < 2^17) and FP16 (max 65504 < 2^16) grids sit far
+/// inside it.
+const MAG_MAX: f32 = (1u32 << 20) as f32;
+
+/// Which dot-product engine a [`QMatrix`]'s forward kernels run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// decode-to-f32 + multiply (the bit-exactness reference; default)
+    #[default]
+    Decoded,
+    /// integer shift-add in the fixed-point MAC frame
+    ShiftAdd,
+}
+
+impl KernelTier {
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        Ok(match s {
+            "decoded" => KernelTier::Decoded,
+            "shiftadd" | "shift-add" => KernelTier::ShiftAdd,
+            other => bail!("unknown kernel tier {other:?} (expected decoded|shiftadd)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Decoded => "decoded",
+            KernelTier::ShiftAdd => "shiftadd",
+        }
+    }
+}
+
+/// One weight's ≤2 signed power-of-two digits, extracted from its
+/// FloatSD8 code once at encode/update time (the digit-planar layout
+/// cached on [`QMatrix`]). `s0 == 0` ⇒ the weight is zero; `s1 == 0` ⇒
+/// a single-digit weight. When both digits are present `e0 > e1` (the
+/// MSG digit leads).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WeightDigits {
+    pub s0: i8,
+    pub e0: i8,
+    pub s1: i8,
+    pub e1: i8,
+}
+
+impl WeightDigits {
+    /// Extract the digit pair of a (not necessarily canonical) code —
+    /// same clamping as `FLOAT_SD8.decode`.
+    pub fn of(code: FloatSd8) -> WeightDigits {
+        let pp = FLOAT_SD8.partial_products(code);
+        let mut d = WeightDigits::default();
+        let mut it = pp.iter();
+        if let Some((s, e)) = it.next() {
+            debug_assert!((W_EXP_MIN..=W_EXP_MAX).contains(&e), "digit exp {e} out of range");
+            d.s0 = s;
+            d.e0 = e as i8;
+        }
+        if let Some((s, e)) = it.next() {
+            debug_assert!((W_EXP_MIN..=W_EXP_MAX).contains(&e), "digit exp {e} out of range");
+            d.s1 = s;
+            d.e1 = e as i8;
+        }
+        d
+    }
+
+    /// Number of non-zero digits (0..=2).
+    pub fn count(self) -> usize {
+        (self.s0 != 0) as usize + (self.s1 != 0) as usize
+    }
+
+    /// Reconstruct the weight value — must equal `FLOAT_SD8.decode`
+    /// bit-for-bit for every code (pinned by the property tests).
+    pub fn value(self) -> f32 {
+        let v = self.s0 as f64 * 2f64.powi(self.e0 as i32)
+            + self.s1 as f64 * 2f64.powi(self.e1 as i32);
+        v as f32
+    }
+}
+
+/// An activation decomposed for the shift-add frame: `value =
+/// sig · 2^exp` with `sig` odd (trailing zeros stripped). `fast` means
+/// the value is exactly representable in the i64 fixed-point frame;
+/// groups containing a non-`fast` operand run the decoded fallback.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XTerm {
+    pub sig: i64,
+    pub exp: i32,
+    pub fast: bool,
+}
+
+#[inline]
+fn split(x: f32, min_exp: i32) -> XTerm {
+    let bits = x.to_bits();
+    if bits == 0 {
+        // +0.0 — contributes nothing on the fast path
+        return XTerm { sig: 0, exp: 0, fast: true };
+    }
+    // -0.0 is excluded from the fast path: the decoded reference's f64
+    // sums propagate the sign of zero, which the integer frame cannot
+    if !x.is_finite() || bits == 0x8000_0000 || x.abs() > MAG_MAX {
+        return XTerm { sig: 0, exp: 0, fast: false };
+    }
+    let sign: i64 = if bits >> 31 == 1 { -1 } else { 1 };
+    let e = ((bits >> 23) & 0xff) as i32;
+    let m = (bits & 0x007f_ffff) as i64;
+    let (mut sig, mut exp) = if e == 0 { (m, -149) } else { (m | 0x0080_0000, e - 150) };
+    let tz = sig.trailing_zeros() as i32;
+    sig >>= tz;
+    exp += tz;
+    XTerm { sig: sign * sig, exp, fast: exp >= min_exp }
+}
+
+/// Decompose an activation for the shift-add kernels.
+#[inline]
+pub fn decompose_x(x: f32) -> XTerm {
+    split(x, X_EXP_MIN)
+}
+
+#[inline]
+fn decompose_acc(a: f32) -> XTerm {
+    split(a, ACC_EXP_MIN)
+}
+
+/// One MAC group: shift-add the ≤2 digits of each weight against the
+/// pre-decomposed activations, then round the fixed-point sum to the
+/// FP16 grid — or, if any operand is outside the frame, run the
+/// decoded reference's literal f64 sequence for this group.
+#[inline]
+fn group_sa(acc: f32, dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm]) -> f32 {
+    let a = decompose_acc(acc);
+    let mut fast = a.fast;
+    for t in xt {
+        fast &= t.fast;
+    }
+    if fast {
+        let mut sum: i64 = a.sig << (a.exp + FRAC_BITS);
+        for (d, t) in dig.iter().zip(xt) {
+            if t.sig != 0 {
+                if d.s0 != 0 {
+                    sum += (d.s0 as i64 * t.sig) << (d.e0 as i32 + t.exp + FRAC_BITS);
+                }
+                if d.s1 != 0 {
+                    sum += (d.s1 as i64 * t.sig) << (d.e1 as i32 + t.exp + FRAC_BITS);
+                }
+            }
+        }
+        round_fixed_to_f16(sum, FRAC_BITS as u32).to_f32()
+    } else {
+        // bit-identical by identity: these are exactly the reference
+        // group's operations (f64 products, left-to-right sum, one
+        // FP16 rounding) — see `vector::dot_row_chained`
+        let mut g = 0f64;
+        for (w, v) in row.iter().zip(x) {
+            g += *v as f64 * *w as f64;
+        }
+        Fp16::from_f64(acc as f64 + g).to_f32()
+    }
+}
+
+/// Shift-add mirror of `vector::dot_row_chained`: same grouping, same
+/// tail handling, one FP16 rounding per group — bit-identical to the
+/// decoded reference for all inputs.
+pub fn dot_row_sa(dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm], bias: f32) -> f32 {
+    let cols = row.len();
+    debug_assert_eq!(dig.len(), cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(xt.len(), cols);
+    let mut acc = bias;
+    let mut c = 0;
+    while c + MAC_GROUP <= cols {
+        let hi = c + MAC_GROUP;
+        acc = group_sa(acc, &dig[c..hi], &row[c..hi], &x[c..hi], &xt[c..hi]);
+        c = hi;
+    }
+    if c < cols {
+        acc = group_sa(acc, &dig[c..], &row[c..], &x[c..], &xt[c..]);
+    }
+    acc
+}
+
+/// Whole-row shift-add accumulation with a **single** final FP16
+/// rounding — the "what if the hardware kept the wide accumulator"
+/// variant. Not bit-identical to the chained reference (it skips the
+/// per-group roundings); its error envelope is characterized by
+/// `tests/shiftadd_equivalence.rs`. Returns `None` when any operand
+/// falls outside the fixed-point frame or the i128 running sum leaves
+/// the i64 frame.
+pub fn dot_row_sa_wide(dig: &[WeightDigits], xt: &[XTerm], bias: f32) -> Option<f32> {
+    let a = decompose_acc(bias);
+    if !a.fast || xt.iter().any(|t| !t.fast) {
+        return None;
+    }
+    let mut sum: i128 = (a.sig as i128) << (a.exp + FRAC_BITS);
+    for (d, t) in dig.iter().zip(xt) {
+        if t.sig != 0 {
+            if d.s0 != 0 {
+                sum += (d.s0 as i128 * t.sig as i128) << (d.e0 as i32 + t.exp + FRAC_BITS);
+            }
+            if d.s1 != 0 {
+                sum += (d.s1 as i128 * t.sig as i128) << (d.e1 as i32 + t.exp + FRAC_BITS);
+            }
+        }
+    }
+    let sum = i64::try_from(sum).ok()?;
+    Some(round_fixed_to_f16(sum, FRAC_BITS as u32).to_f32())
+}
+
+thread_local! {
+    /// Per-thread activation-decomposition scratch — decomposing each
+    /// `x[c]` once per matvec instead of once per (row, col) pair, with
+    /// no steady-state allocation (the lane-sharded trainer runs one
+    /// matvec stream per thread).
+    static X_SCRATCH: RefCell<Vec<XTerm>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Shift-add matvec: `out[r] = chain(bias[r] + Σ_c x[c]·W[r,c])` —
+/// bit-identical to `vector::matvec_fast` on the decoded tier.
+pub fn matvec_sa(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), w.cols);
+    assert_eq!(bias.len(), w.rows);
+    assert_eq!(out.len(), w.rows);
+    X_SCRATCH.with(|s| {
+        let mut xt = s.borrow_mut();
+        xt.clear();
+        xt.extend(x.iter().map(|&v| decompose_x(v)));
+        for r in 0..w.rows {
+            out[r] = dot_row_sa(w.row_digits(r), w.row_decoded(r), x, &xt, bias[r]);
+        }
+    });
+}
+
+/// Shift-add batched matvec: `ys[b] = W · xs[b] + bias`. Each
+/// `(row, stream)` pair runs the identical [`dot_row_sa`] sequence, so
+/// results are bit-identical to `batch` [`matvec_sa`] calls — and thus
+/// to the decoded `matmul_fast`, whose tiling contract is the same.
+/// Stream-stationary loop order: one decomposition pass per stream,
+/// amortized over every row.
+pub fn matmul_sa(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), batch * w.cols);
+    assert_eq!(bias.len(), w.rows);
+    assert_eq!(out.len(), batch * w.rows);
+    let (rows, cols) = (w.rows, w.cols);
+    X_SCRATCH.with(|s| {
+        let mut xt = s.borrow_mut();
+        for b in 0..batch {
+            let xb = &xs[b * cols..(b + 1) * cols];
+            xt.clear();
+            xt.extend(xb.iter().map(|&v| decompose_x(v)));
+            for r in 0..rows {
+                out[b * rows + r] = dot_row_sa(w.row_digits(r), w.row_decoded(r), xb, &xt, bias[r]);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parses_and_names_round_trip() {
+        for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+            assert_eq!(KernelTier::parse(tier.name()).unwrap(), tier);
+        }
+        assert_eq!(KernelTier::parse("shift-add").unwrap(), KernelTier::ShiftAdd);
+        assert!(KernelTier::parse("fp32").is_err());
+        assert_eq!(KernelTier::default(), KernelTier::Decoded);
+    }
+
+    #[test]
+    fn digits_reconstruct_every_code() {
+        for bits in 0..=u8::MAX {
+            let code = FloatSd8(bits);
+            let d = WeightDigits::of(code);
+            let want = FLOAT_SD8.decode(code);
+            assert_eq!(d.value().to_bits(), want.to_bits(), "code {bits:#04x}");
+            assert!(d.count() <= 2);
+            if d.count() == 2 {
+                assert!(d.e0 > d.e1, "MSG digit must lead: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decompose_reconstructs_and_flags_frame_exits() {
+        for v in [0.0f32, 1.0, -3.5, 114688.0, 2f32.powi(-16), 65504.0, -2f32.powi(-19)] {
+            let t = decompose_x(v);
+            assert!(t.fast, "{v} should be in-frame");
+            assert_eq!(t.sig as f64 * 2f64.powi(t.exp), v as f64, "{v}");
+            if t.sig != 0 {
+                assert_eq!(t.sig & 1, 1, "significand must be odd for {v}");
+            }
+        }
+        for v in [f32::NAN, f32::INFINITY, -0.0f32, 2f32.powi(-20), 3e7f32] {
+            assert!(!decompose_x(v).fast, "{v} must take the fallback");
+        }
+        // the accumulator frame admits two more octaves (FP16 subnormals)
+        assert!(decompose_acc(2f32.powi(-24)).fast);
+        assert!(!decompose_acc(2f32.powi(-29)).fast);
+    }
+
+    #[test]
+    fn frame_matches_hardware_mac_sim() {
+        assert_eq!(FRAC_BITS, crate::hardware::mac_sim::FRAC_BITS);
+    }
+
+    #[test]
+    fn digit_exponent_window_is_tight() {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for bits in 0..=u8::MAX {
+            let d = WeightDigits::of(FloatSd8(bits));
+            for (s, e) in [(d.s0, d.e0 as i32), (d.s1, d.e1 as i32)] {
+                if s != 0 {
+                    lo = lo.min(e);
+                    hi = hi.max(e);
+                }
+            }
+        }
+        assert_eq!((lo, hi), (W_EXP_MIN, W_EXP_MAX));
+    }
+}

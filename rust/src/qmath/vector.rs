@@ -15,6 +15,7 @@
 use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
 
 use super::mac::{dot_fsd8_fp8, MacMode, MAC_GROUP};
+use super::shiftadd::{self, KernelTier, WeightDigits};
 
 /// A weight matrix stored in encoded FloatSD8 form, row-major
 /// `[out][in]` (each output neuron's weights are contiguous — the
@@ -35,6 +36,13 @@ pub struct QMatrix {
     /// stacks — a deliberate simplicity trade; the paper's 1-byte
     /// storage argument is about `codes`, see [`Self::storage_bytes`]).
     decoded_t: Vec<f32>,
+    /// digit-planar layout for the shift-add tier: each code's ≤2
+    /// signed power-of-two digits, extracted once at encode/update
+    /// time (row-major, parallel to `codes`)
+    digits: Vec<WeightDigits>,
+    /// which forward-kernel engine [`matvec_fast`]/[`matmul_fast`]
+    /// dispatch to for this matrix (runtime-only, never checkpointed)
+    tier: KernelTier,
 }
 
 impl QMatrix {
@@ -42,14 +50,45 @@ impl QMatrix {
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), rows * cols);
         let codes: Vec<FloatSd8> = data.iter().map(|&v| FLOAT_SD8.encode(v)).collect();
+        Self::from_codes(rows, cols, codes)
+    }
+
+    /// Build from raw FloatSD8 codes (non-canonical codes decode with
+    /// the same rank clamping as `FLOAT_SD8.decode`). All cached
+    /// layouts — decoded, transposed, digit-planar — are derived here,
+    /// the single construction path.
+    pub fn from_codes(rows: usize, cols: usize, codes: Vec<FloatSd8>) -> Self {
+        assert_eq!(codes.len(), rows * cols);
         let decoded: Vec<f32> = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
+        let digits: Vec<WeightDigits> = codes.iter().map(|&c| WeightDigits::of(c)).collect();
         let mut decoded_t = vec![0f32; decoded.len()];
         for r in 0..rows {
             for c in 0..cols {
                 decoded_t[c * rows + r] = decoded[r * cols + c];
             }
         }
-        QMatrix { rows, cols, codes, decoded, decoded_t }
+        QMatrix { rows, cols, codes, decoded, decoded_t, digits, tier: KernelTier::default() }
+    }
+
+    /// Select the forward-kernel tier for this matrix.
+    pub fn set_kernel_tier(&mut self, tier: KernelTier) {
+        self.tier = tier;
+    }
+
+    /// The forward-kernel tier this matrix dispatches to.
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// The cached digit-planar layout (row-major, parallel to `codes`).
+    #[inline]
+    pub fn digits(&self) -> &[WeightDigits] {
+        &self.digits
+    }
+
+    #[inline]
+    pub fn row_digits(&self, r: usize) -> &[WeightDigits] {
+        &self.digits[r * self.cols..(r + 1) * self.cols]
     }
 
     #[inline]
@@ -90,7 +129,8 @@ impl QMatrix {
             self.codes[k] = code;
             let v = FLOAT_SD8.decode(code);
             self.decoded[k] = v;
-            // keep the transposed fast-path copy in lockstep
+            // keep the transposed and digit-planar copies in lockstep
+            self.digits[k] = WeightDigits::of(code);
             let (r, c) = (k / self.cols, k % self.cols);
             self.decoded_t[c * self.rows + r] = v;
         }
@@ -136,7 +176,14 @@ fn dot_row_chained(row: &[f32], x: &[f32], bias: f32) -> f32 {
 /// Optimized path, numerically identical to
 /// `matvec_mac(.., MacMode::Exact)`:
 /// decoded weights, f64 exact group sums, one f16 round per group.
+///
+/// Dispatches on the matrix's [`KernelTier`]: the `shiftadd` tier runs
+/// [`shiftadd::matvec_sa`], pinned bit-identical to this path by
+/// `tests/shiftadd_equivalence.rs`.
 pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
+    if w.tier == KernelTier::ShiftAdd {
+        return shiftadd::matvec_sa(w, x, bias, out);
+    }
     assert_eq!(x.len(), w.cols);
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), w.rows);
@@ -214,6 +261,9 @@ fn dot_row_chained4(
 /// results are bit-identical to `batch` independent [`matvec_fast`]
 /// calls (pinned by `tests::matmul_fast_matches_per_row`).
 pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+    if w.tier == KernelTier::ShiftAdd {
+        return shiftadd::matmul_sa(w, xs, batch, bias, out);
+    }
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), batch * w.rows);

@@ -62,7 +62,7 @@ pub fn run(args: &Args) -> Result<()> {
         },
     };
 
-    let model = Arc::new(match args.opt("model") {
+    let mut model = match args.opt("model") {
         Some(path) => ServeModel::load(path)?,
         None => ServeModel::lm(Arc::new(synthetic_stack(
             args.opt_usize("vocab", 256)?,
@@ -72,7 +72,13 @@ pub fn run(args: &Args) -> Result<()> {
             args.opt_usize("vocab", 256)?,
             20200711,
         )))?,
-    });
+    };
+    // kernel tier is a load-time choice: set it while this thread
+    // still exclusively owns the stacks, before workers share them
+    model.set_kernel_tier(crate::qmath::KernelTier::parse(
+        args.opt_or("kernel-tier", "decoded"),
+    )?)?;
+    let model = Arc::new(model);
 
     let stack = &model.stack;
     let (mut sd8, mut fp32) = stack.weight_bytes();

@@ -141,6 +141,25 @@ impl ServeModel {
         ServeModel::from_parts(task, Arc::new(stack), decoder.map(Arc::new), cfg)
     }
 
+    /// Select the forward-kernel tier (`--kernel-tier`) on every stack
+    /// the model holds. Tiers are a runtime choice applied at load
+    /// time, before worker threads clone the `Arc`s — once the model
+    /// is shared the stacks are frozen, so this errors on an aliased
+    /// stack instead of silently serving mixed tiers.
+    pub fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) -> Result<()> {
+        let Some(stack) = Arc::get_mut(&mut self.stack) else {
+            bail!("kernel tier must be selected before the model is shared across workers");
+        };
+        stack.set_kernel_tier(tier);
+        if let Some(dec) = &mut self.decoder {
+            let Some(dec) = Arc::get_mut(dec) else {
+                bail!("kernel tier must be selected before the model is shared across workers");
+            };
+            dec.set_kernel_tier(tier);
+        }
+        Ok(())
+    }
+
     /// Vocabulary the client's input tokens are validated against
     /// (the source vocabulary for mt).
     pub fn input_vocab(&self) -> usize {

@@ -39,6 +39,8 @@ use crate::lstm::model::ParamBag;
 use crate::tensorfile::json::Json;
 use crate::tensorfile::read_tensors;
 
+use crate::qmath::KernelTier;
+
 use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
 
 /// Evaluate one checkpoint: rebuild the task from its `meta/task_cfg`
@@ -46,6 +48,18 @@ use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
 /// sharded over `threads` workers (byte-identical for any count —
 /// the heads fold the fixed lane spans in canonical order).
 pub fn evaluate_checkpoint(path: &Path, threads: usize) -> Result<(TaskConfig, TaskEval)> {
+    evaluate_checkpoint_tier(path, threads, KernelTier::Decoded)
+}
+
+/// [`evaluate_checkpoint`] with an explicit forward-kernel tier
+/// (`--kernel-tier`). Like `threads`, the tier is a runtime knob
+/// applied after the checkpoint's `meta/task_cfg` is parsed — it is
+/// never stored in (or read from) the checkpoint itself.
+pub fn evaluate_checkpoint_tier(
+    path: &Path,
+    threads: usize,
+    tier: KernelTier,
+) -> Result<(TaskConfig, TaskEval)> {
     let tensors = read_tensors(path)?;
     let mut cfg = super::read_task_cfg(&tensors)?.with_context(|| {
         format!(
@@ -55,6 +69,7 @@ pub fn evaluate_checkpoint(path: &Path, threads: usize) -> Result<(TaskConfig, T
         )
     })?;
     cfg.threads = threads;
+    cfg.kernel_tier = tier;
     let bag = ParamBag::from_tensors(tensors);
     let head = load_task(cfg.clone(), &bag)?;
     Ok((cfg, head.evaluate()))
@@ -92,9 +107,17 @@ fn entry(cfg: &TaskConfig, eval: &TaskEval, source: &str) -> Json {
 /// the rest are evaluated at preset init. Pure (no output): this is
 /// the embeddable API — `run_cli` owns the human-readable rendering.
 pub fn build_report(models: &[PathBuf], threads: usize) -> Result<Json> {
+    build_report_tier(models, threads, KernelTier::Decoded)
+}
+
+/// [`build_report`] with an explicit forward-kernel tier. The report
+/// text itself never mentions the tier: a `shiftadd` report must be
+/// byte-identical to a `decoded` one (pinned by
+/// `tests/shiftadd_equivalence.rs`).
+pub fn build_report_tier(models: &[PathBuf], threads: usize, tier: KernelTier) -> Result<Json> {
     let mut tasks: BTreeMap<String, Json> = BTreeMap::new();
     for path in models {
-        let (cfg, eval) = evaluate_checkpoint(path, threads)
+        let (cfg, eval) = evaluate_checkpoint_tier(path, threads, tier)
             .with_context(|| format!("evaluate {}", path.display()))?;
         let name = cfg.task.name().to_string();
         if tasks.contains_key(&name) {
@@ -108,6 +131,7 @@ pub fn build_report(models: &[PathBuf], threads: usize) -> Result<Json> {
         }
         let mut cfg = TaskConfig::preset(kind);
         cfg.threads = threads;
+        cfg.kernel_tier = tier;
         let head = build_task(&cfg)?;
         let eval = head.evaluate();
         tasks.insert(kind.name().to_string(), entry(&cfg, &eval, "init"));
@@ -130,7 +154,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
     }
     models.extend(args.positionals.iter().map(PathBuf::from));
     let threads = args.opt_usize("threads", 1)?;
-    let report = build_report(&models, threads)?;
+    let tier = KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?;
+    let report = build_report_tier(&models, threads, tier)?;
 
     eprintln!("Table-IV grid (held-out eval):");
     if let Some(tasks) = report.get("tasks").and_then(Json::as_obj) {

@@ -176,6 +176,10 @@ impl TaskHead for LmTask {
     fn weight_matrices(&self) -> Vec<(String, &QMatrix)> {
         crate::telemetry::stack_qmatrices(&self.core.stack, "")
     }
+
+    fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
+        self.core.stack.set_kernel_tier(tier);
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,7 @@ use crate::lstm::cell::QLstmCell;
 use crate::lstm::model::{Dense, Embedding, ParamBag, QLstmLayer};
 use crate::lstm::QLstmStack;
 use crate::qmath::vector::QMatrix;
+use crate::qmath::KernelTier;
 use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
 use crate::tensorfile::json::Json;
 use crate::tensorfile::Tensor;
@@ -124,6 +125,14 @@ pub struct TaskConfig {
     /// stream here (numerics-neutral — see [`crate::telemetry`]);
     /// training-only, never checkpointed
     pub trace: Option<PathBuf>,
+    /// `--trace-every N`: emit `step`/`reencode` trace events (and pay
+    /// the gradient scan) only every N-th step; `run_start`/`run_end`/
+    /// `loss_scale` always emit, so a sampled trace is a strict
+    /// subsequence of the N=1 trace; training-only, never checkpointed
+    pub trace_every: usize,
+    /// `--kernel-tier`: forward matvec/matmul tier (runtime-only —
+    /// never checkpointed; see [`crate::qmath::shiftadd`])
+    pub kernel_tier: KernelTier,
 }
 
 impl TaskConfig {
@@ -152,6 +161,8 @@ impl TaskConfig {
             threads: 1,
             checkpoint: None,
             trace: None,
+            trace_every: 1,
+            kernel_tier: KernelTier::Decoded,
         };
         match task {
             TaskKind::Lm => {}
@@ -401,17 +412,23 @@ pub trait TaskHead {
     /// Named live FloatSD8 weight matrices — the re-encode saturation
     /// scan surface ([`crate::telemetry::code_stats`]).
     fn weight_matrices(&self) -> Vec<(String, &QMatrix)>;
+    /// Select the forward-kernel tier on every stack the head owns
+    /// (runtime-only; applied by [`build_task`]/[`load_task`] from
+    /// `cfg.kernel_tier`, so heads never persist it).
+    fn set_kernel_tier(&mut self, tier: KernelTier);
 }
 
 /// Build a fresh (deterministically initialized) head for a config.
 pub fn build_task(cfg: &TaskConfig) -> Result<Box<dyn TaskHead>> {
     validate(cfg)?;
-    Ok(match cfg.task {
+    let mut head: Box<dyn TaskHead> = match cfg.task {
         TaskKind::Lm => Box::new(lm::LmTask::new(cfg.clone())),
         TaskKind::Pos => Box::new(pos::PosTask::new(cfg.clone())),
         TaskKind::Nli => Box::new(nli::NliTask::new(cfg.clone())),
         TaskKind::Mt => Box::new(mt::MtTask::new(cfg.clone())),
-    })
+    };
+    head.set_kernel_tier(cfg.kernel_tier);
+    Ok(head)
 }
 
 /// Extract and parse the `meta/task_cfg` blob from a checkpoint's
@@ -429,12 +446,15 @@ pub fn read_task_cfg(tensors: &[Tensor]) -> Result<Option<TaskConfig>> {
 /// Rebuild a head from checkpointed parameters.
 pub fn load_task(cfg: TaskConfig, bag: &ParamBag) -> Result<Box<dyn TaskHead>> {
     validate(&cfg)?;
-    Ok(match cfg.task {
+    let tier = cfg.kernel_tier;
+    let mut head: Box<dyn TaskHead> = match cfg.task {
         TaskKind::Lm => Box::new(lm::LmTask::from_bag(cfg, bag)?),
         TaskKind::Pos => Box::new(pos::PosTask::from_bag(cfg, bag)?),
         TaskKind::Nli => Box::new(nli::NliTask::from_bag(cfg, bag)?),
         TaskKind::Mt => Box::new(mt::MtTask::from_bag(cfg, bag)?),
-    })
+    };
+    head.set_kernel_tier(tier);
+    Ok(head)
 }
 
 /// Turn the generators' assert-style preconditions into errors before
@@ -450,6 +470,9 @@ fn validate(cfg: &TaskConfig) -> Result<()> {
     }
     if cfg.eval_batches == 0 {
         bail!("{}: need >= 1 eval batch (the held-out set)", cfg.task.name());
+    }
+    if cfg.trace_every == 0 {
+        bail!("{}: --trace-every must be >= 1 (N samples every N-th step)", cfg.task.name());
     }
     if cfg.task == TaskKind::Nli && cfg.n_classes != 3 {
         bail!("nli: labels are 3-way (entail/contradict/neutral), got {}", cfg.n_classes);
@@ -795,8 +818,12 @@ impl TaskTrainer {
     /// One window: compute gradients, apply (or skip on overflow).
     pub fn step(&mut self) -> StepOutcome {
         // wall-clock is telemetry-only: it lands in the trace's marked
-        // `timing` field and never influences any computed value
-        let timer = self.trace.as_ref().map(|_| SpanTimer::start());
+        // `timing` field and never influences any computed value;
+        // `--trace-every N` samples the per-step events (and skips the
+        // gradient scan) on all but every N-th step
+        let trace_every = self.head.config().trace_every;
+        let sampled = self.trace.is_some() && (self.steps_done + 1) % trace_every == 0;
+        let timer = sampled.then(SpanTimer::start);
         let (lr, momentum, clip) = {
             let c = self.head.config();
             (c.lr, c.momentum, c.clip_norm)
@@ -805,8 +832,7 @@ impl TaskTrainer {
         let loss = self.head.compute_window(scale);
         // telemetry: the merged gradients are still loss-scaled here —
         // scan before apply_update finalizes them in place
-        let grads_ev =
-            self.trace.is_some().then(|| trace::grads_json(&self.head.grad_tensors()));
+        let grads_ev = sampled.then(|| trace::grads_json(&self.head.grad_tensors()));
         let applied = self.head.apply_update(scale, lr, momentum, clip);
         let scale_ev = if applied {
             self.steps_applied += 1;
@@ -816,14 +842,16 @@ impl TaskTrainer {
         };
         self.steps_done += 1;
         if self.trace.is_some() {
-            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer);
+            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer, sampled);
         }
         StepOutcome { loss, applied, scale }
     }
 
-    /// Emit this step's trace events (`loss_scale` on scaler action,
-    /// `step` always, `reencode` after an applied update). Only called
-    /// with an open sink.
+    /// Emit this step's trace events: `loss_scale` on scaler action
+    /// (always — scaler actions are too rare and too important to
+    /// sample away), `step`/`reencode` only on steps sampled by
+    /// `--trace-every`. Only called with an open sink.
+    #[allow(clippy::too_many_arguments)]
     fn emit_step_events(
         &mut self,
         loss: f64,
@@ -832,14 +860,18 @@ impl TaskTrainer {
         scale_ev: Option<ScaleEvent>,
         grads_ev: Option<Json>,
         timer: Option<SpanTimer>,
+        sampled: bool,
     ) {
         let step = self.steps_done as u64;
         let skipped = self.scaler.skipped;
-        let acts = trace::acts_json(
-            telemetry::SIGMOID.snapshot().since(self.act_base.0),
-            telemetry::TANH.snapshot().since(self.act_base.1),
-        );
-        let reencode = applied.then(|| trace::codes_json(&self.head.weight_matrices()));
+        let acts = sampled.then(|| {
+            trace::acts_json(
+                telemetry::SIGMOID.snapshot().since(self.act_base.0),
+                telemetry::TANH.snapshot().since(self.act_base.1),
+            )
+        });
+        let reencode =
+            (sampled && applied).then(|| trace::codes_json(&self.head.weight_matrices()));
         let Some(sink) = self.trace.as_mut() else { return };
         if let Some(ev) = scale_ev {
             let (cause, from, to) = match ev {
@@ -848,6 +880,7 @@ impl TaskTrainer {
             };
             sink.emit("loss_scale", step, trace::scale_fields(cause, from, to, skipped));
         }
+        let Some(acts) = acts else { return };
         let mut fields = BTreeMap::new();
         fields.insert("loss".to_string(), trace::fnum(loss));
         fields.insert("scale".to_string(), Json::Num(f64::from(scale)));
@@ -988,6 +1021,8 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
             args.opt_or("out", &format!("{}.tensors", task.name())),
         )),
         trace: args.opt("trace").map(PathBuf::from),
+        trace_every: args.opt_usize("trace-every", 1)?,
+        kernel_tier: KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?,
     };
     println!(
         "offline FloatSD8 multi-task training [{} preset]: task={} vocab={}{} dim={} hidden={} \

@@ -294,6 +294,11 @@ impl TaskHead for MtTask {
         v.extend(crate::telemetry::stack_qmatrices(&self.dec.stack, "dec"));
         v
     }
+
+    fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
+        self.enc.stack.set_kernel_tier(tier);
+        self.dec.stack.set_kernel_tier(tier);
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ use crate::cli::Args;
 use crate::data::lm::LmGen;
 use crate::data::BatchSource;
 use crate::lstm::QLstmStack;
+use crate::qmath::KernelTier;
 use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
 use crate::tensorfile::json::Json;
 use crate::tensorfile::{write_tensors, Tensor};
@@ -89,6 +90,14 @@ pub struct TrainConfig {
     /// `--trace`: write a `floatsd-trace-v1` JSONL numerics-health
     /// stream here (numerics-neutral — see `crate::telemetry`)
     pub trace: Option<PathBuf>,
+    /// `--trace-every N`: emit `step`/`reencode` trace events (and pay
+    /// the gradient scan) only every N-th step; `run_start`/`run_end`/
+    /// `loss_scale` always emit, so a sampled trace is a strict
+    /// subsequence of the N=1 trace (numerics-neutral)
+    pub trace_every: usize,
+    /// `--kernel-tier`: forward matvec/matmul tier (runtime-only —
+    /// never written into checkpoints; see `qmath::shiftadd`)
+    pub kernel_tier: KernelTier,
 }
 
 impl Default for TrainConfig {
@@ -117,6 +126,8 @@ impl TrainConfig {
             threads: 1,
             checkpoint: None,
             trace: None,
+            trace_every: 1,
+            kernel_tier: KernelTier::Decoded,
         };
         match tier {
             PresetTier::Default => {}
@@ -162,6 +173,9 @@ impl TrainConfig {
         }
         if self.steps == 0 {
             bail!("train: steps must be >= 1");
+        }
+        if self.trace_every == 0 {
+            bail!("train: --trace-every must be >= 1 (N samples every N-th step)");
         }
         check_threads(self.threads)
     }
@@ -209,13 +223,14 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
         cfg.validate()?;
-        let (masters, stack) = MasterStack::init_with_stack(
+        let (masters, mut stack) = MasterStack::init_with_stack(
             cfg.vocab,
             cfg.dim,
             cfg.hidden,
             cfg.layers,
             cfg.seed,
         );
+        stack.set_kernel_tier(cfg.kernel_tier);
         let data = LmGen::char_lm(cfg.batch, cfg.seq, cfg.vocab, cfg.seed ^ 0xDA7A);
         let shards = LaneShard::build(&stack, cfg.batch);
         let grads = StackGrads::zeros(&stack);
@@ -252,8 +267,11 @@ impl Trainer {
     /// skips on overflow).
     pub fn step(&mut self) -> StepOutcome {
         // wall-clock is telemetry-only: it lands in the trace's marked
-        // `timing` field and never influences any computed value
-        let timer = self.trace.as_ref().map(|_| SpanTimer::start());
+        // `timing` field and never influences any computed value;
+        // `--trace-every N` samples the per-step events (and skips the
+        // gradient scan) on all but every N-th step
+        let sampled = self.trace.is_some() && (self.steps_done + 1) % self.cfg.trace_every == 0;
+        let timer = sampled.then(SpanTimer::start);
         let (b_n, seq, vocab) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
         let threads = self.cfg.threads;
         let batch = self.data.next_train();
@@ -303,10 +321,7 @@ impl Trainer {
         // telemetry: scan the merged, still-scaled gradients *before*
         // finalize_grads quantizes them in place (read-only scan, only
         // when a sink is open)
-        let grads_ev = self
-            .trace
-            .is_some()
-            .then(|| trace::grads_json(&self.grads.named_slices("")));
+        let grads_ev = sampled.then(|| trace::grads_json(&self.grads.named_slices("")));
 
         let applied = finalize_grads(&mut self.grads, scale, self.cfg.clip_norm);
         let scale_ev = if applied {
@@ -319,14 +334,16 @@ impl Trainer {
         self.steps_done += 1;
         let loss = loss_sum / (b_n * seq) as f64;
         if self.trace.is_some() {
-            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer);
+            self.emit_step_events(loss, applied, scale, scale_ev, grads_ev, timer, sampled);
         }
         StepOutcome { loss, applied, scale }
     }
 
-    /// Emit this step's trace events (`loss_scale` on scaler action,
-    /// `step` always, `reencode` after an applied update). Only called
-    /// with an open sink.
+    /// Emit this step's trace events: `loss_scale` on scaler action
+    /// (always — scaler actions are too rare and too important to
+    /// sample away), `step`/`reencode` only on steps sampled by
+    /// `--trace-every`. Only called with an open sink.
+    #[allow(clippy::too_many_arguments)]
     fn emit_step_events(
         &mut self,
         loss: f64,
@@ -335,14 +352,17 @@ impl Trainer {
         scale_ev: Option<ScaleEvent>,
         grads_ev: Option<Json>,
         timer: Option<SpanTimer>,
+        sampled: bool,
     ) {
         let step = self.steps_done as u64;
         let skipped = self.scaler.skipped;
-        let acts = trace::acts_json(
-            telemetry::SIGMOID.snapshot().since(self.act_base.0),
-            telemetry::TANH.snapshot().since(self.act_base.1),
-        );
-        let reencode = applied
+        let acts = sampled.then(|| {
+            trace::acts_json(
+                telemetry::SIGMOID.snapshot().since(self.act_base.0),
+                telemetry::TANH.snapshot().since(self.act_base.1),
+            )
+        });
+        let reencode = (sampled && applied)
             .then(|| trace::codes_json(&telemetry::stack_qmatrices(&self.stack, "")));
         let Some(sink) = self.trace.as_mut() else { return };
         if let Some(ev) = scale_ev {
@@ -352,6 +372,7 @@ impl Trainer {
             };
             sink.emit("loss_scale", step, trace::scale_fields(cause, from, to, skipped));
         }
+        let Some(acts) = acts else { return };
         let mut fields = BTreeMap::new();
         fields.insert("loss".to_string(), trace::fnum(loss));
         fields.insert("scale".to_string(), Json::Num(f64::from(scale)));
@@ -556,6 +577,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
         threads: args.opt_usize("threads", preset.threads)?,
         checkpoint: Some(PathBuf::from(args.opt_or("out", "char_lm.tensors"))),
         trace: args.opt("trace").map(PathBuf::from),
+        trace_every: args.opt_usize("trace-every", 1)?,
+        kernel_tier: KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?,
     };
     println!(
         "offline FloatSD8 training [{} preset]: vocab={} dim={} hidden={} layers={} | batch={} \
@@ -610,6 +633,8 @@ mod tests {
             threads: 1,
             checkpoint: None,
             trace: None,
+            trace_every: 1,
+            kernel_tier: KernelTier::Decoded,
         }
     }
 
@@ -655,6 +680,9 @@ mod tests {
         assert!(Trainer::new(cfg).is_err());
         let mut cfg = tiny_cfg();
         cfg.batch = 0;
+        assert!(Trainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.trace_every = 0;
         assert!(Trainer::new(cfg).is_err());
         assert!(PresetTier::parse("papr").is_err());
         assert_eq!(PresetTier::parse("paper").unwrap(), PresetTier::Paper);

@@ -4,6 +4,9 @@
 use floatsd_lstm::formats::{round_f16, round_f8, round_sd8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
 use floatsd_lstm::qmath::mac::{mac_exact, MAC_GROUP};
 use floatsd_lstm::qmath::qsigmoid::sigmoid_sd8;
+use floatsd_lstm::qmath::shiftadd::WeightDigits;
+use floatsd_lstm::qmath::vector::{matvec_fast, QMatrix};
+use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::testing::{property, Gen};
 
 #[test]
@@ -172,6 +175,73 @@ fn master_update_code_round_trips_through_groups() {
             .from_groups(exp, g0, g1)
             .expect("canonical groups must be legal SD groups");
         assert_eq!(back, code, "groups ({g0},{g1}) exp {exp} did not round-trip");
+    });
+}
+
+// ---------------------------------------------------------------------
+// shift-add tier: digit-planar layout invariants (qmath::shiftadd)
+// ---------------------------------------------------------------------
+
+#[test]
+fn digit_extraction_reconstructs_encode_exactly() {
+    // exhaustive anchor: every code (canonical or not) survives
+    // code -> digit-extract -> reconstruct bit-for-bit
+    for bits in 0..=u8::MAX {
+        let code = FloatSd8(bits);
+        let d = WeightDigits::of(code);
+        assert_eq!(d.value().to_bits(), FLOAT_SD8.decode(code).to_bits(), "code {bits:#04x}");
+    }
+    // and the property form over the encoder's actual output
+    property("encode -> digits -> value", 3000, |g: &mut Gen| {
+        let x = g.f32_range(-6.0, 6.0);
+        let code = FLOAT_SD8.encode(x);
+        let d = WeightDigits::of(code);
+        assert_eq!(d.value().to_bits(), FLOAT_SD8.decode(code).to_bits(), "x={x}");
+        assert!(d.count() <= 2, "more than two digits for x={x}");
+        if d.count() == 2 {
+            assert!(d.e0 > d.e1, "MSG digit must lead for x={x}: {d:?}");
+        }
+    });
+}
+
+#[test]
+fn master_updates_keep_digit_planes_in_sync() {
+    property("update sync", 300, |g: &mut Gen| {
+        let (rows, cols) = (1 + g.usize_below(5), 1 + g.usize_below(9));
+        let mut masters: Vec<f32> =
+            (0..rows * cols).map(|_| round_f16(g.f32_range(-1.5, 1.5))).collect();
+        let mut w = QMatrix::from_f32(rows, cols, &masters);
+        // a randomized sequence of optimizer steps, including the
+        // occasional large kick that forces exponent-field changes
+        for _ in 0..(1 + g.usize_below(4)) {
+            let deltas: Vec<f32> = (0..rows * cols)
+                .map(|_| {
+                    let base = g.f32_range(-0.2, 0.2);
+                    if g.usize_below(8) == 0 {
+                        base * 16.0
+                    } else {
+                        base
+                    }
+                })
+                .collect();
+            w.apply_master_update(&mut masters, &deltas);
+        }
+        // the cached digit planes must equal a fresh extraction ...
+        for (k, (&code, &dig)) in w.codes.iter().zip(w.digits()).enumerate() {
+            assert_eq!(dig, WeightDigits::of(code), "digit plane stale at {k}");
+        }
+        // ... and the shift-add kernel must still match decoded
+        let x: Vec<f32> = (0..cols).map(|_| round_f8(g.f32_range(-4.0, 4.0))).collect();
+        let bias: Vec<f32> = (0..rows).map(|_| round_f16(g.f32_range(-0.5, 0.5))).collect();
+        let mut dec = vec![0f32; rows];
+        let mut sa = vec![0f32; rows];
+        w.set_kernel_tier(KernelTier::Decoded);
+        matvec_fast(&w, &x, &bias, &mut dec);
+        w.set_kernel_tier(KernelTier::ShiftAdd);
+        matvec_fast(&w, &x, &bias, &mut sa);
+        for r in 0..rows {
+            assert_eq!(sa[r].to_bits(), dec[r].to_bits(), "post-update divergence, row {r}");
+        }
     });
 }
 

@@ -1,0 +1,385 @@
+//! The shift-add kernel tier's equivalence contract, pinned end to
+//! end (`qmath::shiftadd` docs):
+//!
+//! * kernel level — `--kernel-tier shiftadd` matvec/matmul are
+//!   **bit-identical** to the decoded-f32 reference over all 256
+//!   FloatSD8 codes and every activation class (FP8-grid, off-grid,
+//!   f32 denormals, huge magnitudes, ±0, ±inf, NaN);
+//! * hardware level — the shift-add group agrees bit-for-bit with the
+//!   five-stage MAC pipeline simulator, and its digit expansion
+//!   value-matches the pipeline's stage-1 partial products;
+//! * system level — fixed-seed train/serve/eval runs under the
+//!   shiftadd tier reproduce the decoded tier exactly for all four
+//!   task heads (loss bits, checkpoint bytes, report bytes, decode
+//!   tokens/scores);
+//! * the whole-row single-rounding variant `dot_row_sa_wide` is *not*
+//!   pinned — its divergence from the chained reference is
+//!   characterized by an explicit error bound instead.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use floatsd_lstm::formats::{round_f16, round_f8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
+use floatsd_lstm::hardware::mac_sim::MacPipeline;
+use floatsd_lstm::lstm::synthetic_stack;
+use floatsd_lstm::qmath::mac::MAC_GROUP;
+use floatsd_lstm::qmath::shiftadd::{decompose_x, dot_row_sa_wide, WeightDigits};
+use floatsd_lstm::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::KernelTier;
+use floatsd_lstm::rng::SplitMix64;
+use floatsd_lstm::serve::ServeModel;
+use floatsd_lstm::tasks::eval::build_report_tier;
+use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
+use floatsd_lstm::train::PresetTier;
+
+fn test_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("fsd_shiftadd_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 16x16 matrix holding **every** FloatSD8 code exactly once —
+/// including the non-canonical rank-31 codes, which must clamp the
+/// same way on both tiers.
+fn all_codes_matrix() -> QMatrix {
+    let codes: Vec<FloatSd8> = (0..=u8::MAX).map(FloatSd8).collect();
+    QMatrix::from_codes(16, 16, codes)
+}
+
+/// Run one matvec on both tiers and require bit-identical outputs.
+fn assert_matvec_parity(w: &mut QMatrix, x: &[f32], bias: &[f32], what: &str) {
+    let mut dec = vec![0f32; w.rows];
+    let mut sa = vec![0f32; w.rows];
+    w.set_kernel_tier(KernelTier::Decoded);
+    matvec_fast(w, x, bias, &mut dec);
+    w.set_kernel_tier(KernelTier::ShiftAdd);
+    matvec_fast(w, x, bias, &mut sa);
+    for r in 0..w.rows {
+        assert_eq!(
+            sa[r].to_bits(),
+            dec[r].to_bits(),
+            "{what}: row {r} diverged (decoded {} vs shiftadd {})",
+            dec[r],
+            sa[r]
+        );
+    }
+}
+
+#[test]
+fn all_256_codes_match_decoded_for_every_activation_class() {
+    let mut w = all_codes_matrix();
+    let mut rng = SplitMix64::new(0xC0DE);
+    let cols = w.cols;
+
+    // the adversarial operand classes the fallback rule must catch:
+    // f32 denormals (below the frame LSB), the denormal boundary,
+    // magnitudes past the frame cap, non-finite values, signed zero
+    let specials: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,        // 2^-126
+        1e-41,                    // f32 denormal
+        -(2f32.powi(-149)),       // smallest denormal
+        2f32.powi(-19),           // last in-frame activation octave
+        -(2f32.powi(-20)),        // first out-of-frame octave
+        65504.0,                  // FP16 max
+        114688.0,                 // FP8 max
+        2f32.powi(20),            // frame magnitude cap
+        2f32.powi(21),            // just past the cap
+        3e7,
+        -1e30,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+    ];
+
+    // pure-class sweeps: each special value broadcast across a vector
+    for (i, &v) in specials.iter().enumerate() {
+        let x = vec![v; cols];
+        let bias: Vec<f32> = (0..w.rows).map(|_| round_f16(rng.uniform(-0.5, 0.5))).collect();
+        assert_matvec_parity(&mut w, &x, &bias, &format!("special #{i} ({v})"));
+    }
+
+    // mixed sweeps: specials scattered among grid/off-grid randoms, so
+    // fast and fallback groups interleave within one row
+    for trial in 0..64 {
+        let x: Vec<f32> = (0..cols)
+            .map(|c| match (trial + c) % 4 {
+                0 => specials[rng.uniform(0.0, specials.len() as f32) as usize % specials.len()],
+                1 => round_f8(rng.uniform(-4.0, 4.0)),
+                2 => rng.uniform(-1.0, 1.0), // off-grid f32
+                _ => rng.uniform(-1.0, 1.0) * 2f32.powi(trial as i32 % 45 - 22),
+            })
+            .collect();
+        let bias: Vec<f32> = (0..w.rows).map(|_| round_f16(rng.uniform(-2.0, 2.0))).collect();
+        assert_matvec_parity(&mut w, &x, &bias, &format!("mixed trial {trial}"));
+    }
+}
+
+#[test]
+fn awkward_shapes_and_batches_match_decoded() {
+    let mut rng = SplitMix64::new(77);
+    // cols off the MAC_GROUP boundary, a degenerate 1x1, and every
+    // batch size across the decoded path's 4-stream register tile
+    for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1), (5, 33)] {
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut w = QMatrix::from_f32(rows, cols, &data);
+        let bias: Vec<f32> = (0..rows).map(|_| round_f16(rng.uniform(-0.5, 0.5))).collect();
+        for batch in 1usize..=9 {
+            let xs: Vec<f32> = (0..batch * cols)
+                .map(|_| rng.uniform(-1.0, 1.0) * 2f32.powi(rng.uniform(0.0, 30.0) as i32 - 15))
+                .collect();
+            let mut dec = vec![0f32; batch * rows];
+            let mut sa = vec![0f32; batch * rows];
+            w.set_kernel_tier(KernelTier::Decoded);
+            matmul_fast(&w, &xs, batch, &bias, &mut dec);
+            w.set_kernel_tier(KernelTier::ShiftAdd);
+            matmul_fast(&w, &xs, batch, &bias, &mut sa);
+            let dec_bits: Vec<u32> = dec.iter().map(|v| v.to_bits()).collect();
+            let sa_bits: Vec<u32> = sa.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sa_bits, dec_bits, "({rows}x{cols}) batch {batch} diverged");
+        }
+    }
+}
+
+/// The chained decoded reference for one row — re-derived here (not
+/// imported) so the test states the contract independently.
+fn chained_reference(row: &[f32], x: &[f32], bias: f32) -> f32 {
+    let mut acc = bias;
+    for chunk in 0..row.len().div_ceil(MAC_GROUP) {
+        let lo = chunk * MAC_GROUP;
+        let hi = (lo + MAC_GROUP).min(row.len());
+        let mut g = 0f64;
+        for c in lo..hi {
+            g += x[c] as f64 * row[c] as f64;
+        }
+        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+    }
+    acc
+}
+
+#[test]
+fn wide_variant_is_single_rounding_with_characterized_divergence() {
+    let mut rng = SplitMix64::new(11);
+    let mut saw_divergence = false;
+    for trial in 0..2000 {
+        let cols = 1 + (trial % 40);
+        let codes: Vec<FloatSd8> =
+            (0..cols).map(|_| FLOAT_SD8.encode(rng.uniform(-4.5, 4.5))).collect();
+        let dig: Vec<WeightDigits> = codes.iter().map(|&c| WeightDigits::of(c)).collect();
+        let row: Vec<f32> = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
+        let x: Vec<f32> = (0..cols).map(|_| round_f8(rng.uniform(-4.0, 4.0))).collect();
+        let xt: Vec<_> = x.iter().map(|&v| decompose_x(v)).collect();
+        let bias = round_f16(rng.uniform(-1.0, 1.0));
+
+        // exact value: every product is an exact multiple of 2^-28 and
+        // the magnitudes here keep the f64 sum well under 53 bits
+        let exact: f64 =
+            bias as f64 + row.iter().zip(&x).map(|(&w, &v)| w as f64 * v as f64).sum::<f64>();
+
+        // (a) the wide variant IS "round the exact value once"
+        let wide = dot_row_sa_wide(&dig, &xt, bias).expect("in-frame operands");
+        assert_eq!(
+            wide.to_bits(),
+            Fp16::from_f64(exact).to_f32().to_bits(),
+            "trial {trial}: wide != RNE(exact sum)"
+        );
+
+        // (b) divergence from the chained reference is bounded by the
+        // per-group roundings the wide variant skips: each of the
+        // n_groups+1 roundings moves the running value by at most half
+        // an FP16 ULP (2^-11 relative, 2^-25 absolute floor)
+        let chained = chained_reference(&row, &x, bias);
+        let groups = cols.div_ceil(MAC_GROUP) as f64;
+        let mut run = bias as f64;
+        let mut mag = run.abs();
+        for chunk in 0..cols.div_ceil(MAC_GROUP) {
+            let lo = chunk * MAC_GROUP;
+            let hi = (lo + MAC_GROUP).min(cols);
+            for c in lo..hi {
+                run += x[c] as f64 * row[c] as f64;
+            }
+            mag = mag.max(run.abs());
+        }
+        let bound = 2.0 * (groups + 1.0) * (mag * 2f64.powi(-11) + 2f64.powi(-24));
+        let diff = (wide as f64 - chained as f64).abs();
+        assert!(
+            diff <= bound,
+            "trial {trial}: |wide - chained| = {diff} exceeds bound {bound} (mag {mag})"
+        );
+        saw_divergence |= diff != 0.0;
+    }
+    // the envelope is genuinely non-zero: the wide variant is a
+    // different rounding schedule, not a disguised identity
+    assert!(saw_divergence, "wide variant never diverged from the chained reference");
+
+    // out-of-frame operands refuse rather than silently degrade
+    let dig = [WeightDigits::of(FLOAT_SD8.encode(1.0))];
+    for bad in [f32::NAN, f32::INFINITY, 1e-41, 2f32.powi(21)] {
+        assert!(
+            dot_row_sa_wide(&dig, &[decompose_x(bad)], 0.0).is_none(),
+            "x = {bad} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn shiftadd_group_matches_hardware_mac_pipeline() {
+    let mut rng = SplitMix64::new(21);
+    for trial in 0..20_000 {
+        let n = 1 + (trial % MAC_GROUP);
+        let xs8: Vec<Fp8> =
+            (0..n).map(|_| Fp8::from_f32(rng.uniform(-200.0, 200.0))).collect();
+        let ws: Vec<FloatSd8> =
+            (0..n).map(|_| FLOAT_SD8.encode(rng.uniform(-4.5, 4.5))).collect();
+        let acc = Fp16::from_f32(rng.uniform(-32.0, 32.0));
+
+        // one ≤4-column row is exactly one MAC group, so the shiftadd
+        // matvec result must equal the pipeline's combinational output
+        let mut w = QMatrix::from_codes(1, n, ws.clone());
+        w.set_kernel_tier(KernelTier::ShiftAdd);
+        let x: Vec<f32> = xs8.iter().map(|v| v.to_f32()).collect();
+        let mut out = [0f32];
+        matvec_fast(&w, &x, &[acc.to_f32()], &mut out);
+        let hw = MacPipeline::compute(acc, &xs8, &ws);
+        assert_eq!(
+            out[0].to_bits(),
+            hw.to_f32().to_bits(),
+            "trial {trial}: shiftadd group {} != pipeline {}",
+            out[0],
+            hw.to_f32()
+        );
+    }
+}
+
+#[test]
+fn digit_expansion_value_matches_pipeline_partial_products() {
+    // for every code and a spread of FP8 activations, the shift-add
+    // digit expansion (digit × activation) must produce the same
+    // partial-product values stage 1 of the pipeline generates
+    let mut rng = SplitMix64::new(31);
+    let xs: Vec<Fp8> = (0..24)
+        .map(|i| {
+            if i < 4 {
+                Fp8::from_f32([0.0, 1.0, -2.5, 96.0][i])
+            } else {
+                Fp8::from_f32(rng.uniform(-300.0, 300.0))
+            }
+        })
+        .collect();
+    for bits in 0..=u8::MAX {
+        let code = FloatSd8(bits);
+        let d = WeightDigits::of(code);
+        for &x in &xs {
+            let s1 = MacPipeline::stage1(Fp16::ZERO, &[x], &[code]);
+            let mut hw: Vec<f64> =
+                s1.pps.iter().map(|p| p.sig as f64 * 2f64.powi(p.exp)).collect();
+            let mut sa: Vec<f64> = [(d.s0, d.e0), (d.s1, d.e1)]
+                .iter()
+                .filter(|(s, _)| *s != 0)
+                .map(|&(s, e)| s as f64 * 2f64.powi(e as i32) * x.to_f32() as f64)
+                .collect();
+            hw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sa.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(hw.len(), sa.len(), "code {bits:#04x} x {}", x.to_f32());
+            for (a, b) in hw.iter().zip(&sa) {
+                assert_eq!(a, b, "code {bits:#04x} x {}: pp {hw:?} vs digits {sa:?}", x.to_f32());
+            }
+        }
+    }
+}
+
+/// A miniature fixed-seed run of each task (the telemetry suite's
+/// scale) with a selectable kernel tier.
+fn tiny_cfg(kind: TaskKind, tier: KernelTier) -> TaskConfig {
+    let mut cfg = TaskConfig::preset_tier(kind, PresetTier::Tiny);
+    cfg.batch = 6;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.log_every = 0;
+    cfg.seed = 99;
+    cfg.kernel_tier = tier;
+    cfg
+}
+
+#[test]
+fn training_under_shiftadd_reproduces_decoded_for_all_tasks() {
+    let dir = test_dir();
+    for kind in TaskKind::ALL {
+        let mut runs = Vec::new();
+        for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+            let ckpt = dir.join(format!("train_{}_{}.tensors", kind.name(), tier.name()));
+            let mut cfg = tiny_cfg(kind, tier);
+            cfg.checkpoint = Some(ckpt.clone());
+            let report = TaskTrainer::new(cfg).unwrap().train().unwrap();
+            let bits: Vec<u64> = report.losses.iter().map(|l| l.to_bits()).collect();
+            runs.push((bits, std::fs::read(&ckpt).unwrap()));
+        }
+        assert_eq!(runs[1].0, runs[0].0, "{}: loss trace diverged under shiftadd", kind.name());
+        assert_eq!(
+            runs[1].1,
+            runs[0].1,
+            "{}: checkpoint bytes diverged under shiftadd",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn eval_report_bytes_are_tier_invariant() {
+    let dir = test_dir();
+    let ckpt = dir.join("eval_tier.tensors");
+    let mut cfg = tiny_cfg(TaskKind::Pos, KernelTier::Decoded);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+
+    let models = vec![ckpt];
+    let dec = build_report_tier(&models, 1, KernelTier::Decoded).unwrap().to_string();
+    let sa = build_report_tier(&models, 1, KernelTier::ShiftAdd).unwrap().to_string();
+    assert_eq!(sa, dec, "eval report bytes diverged across kernel tiers");
+    assert!(!dec.contains("shiftadd"), "tier must never leak into the report");
+}
+
+#[test]
+fn served_model_decodes_identically_under_shiftadd() {
+    let dir = test_dir();
+    let ckpt = dir.join("serve_tier_mt.tensors");
+    let mut cfg = tiny_cfg(TaskKind::Mt, KernelTier::Decoded);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+
+    let src: Vec<usize> = vec![3, 1, 7, 2];
+    let mut results = Vec::new();
+    for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+        let mut model = ServeModel::load(&ckpt).expect("mt checkpoint loads");
+        model.set_kernel_tier(tier).expect("exclusive at load time");
+        let (tokens, score) = model.reference_greedy_decode(&src, 8).unwrap();
+        results.push((tokens, score.to_bits()));
+    }
+    assert_eq!(results[1].0, results[0].0, "decoded tokens diverged under shiftadd");
+    assert_eq!(results[1].1, results[0].1, "decode score bits diverged under shiftadd");
+}
+
+#[test]
+fn streamed_logits_are_tier_invariant_and_tier_set_is_load_time_only() {
+    // single-stack (lm) parity through the streaming forward
+    let mut bits = Vec::new();
+    for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+        let mut model =
+            ServeModel::lm(Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3))).unwrap();
+        model.set_kernel_tier(tier).unwrap();
+        let mut state = model.stack.new_stream_state();
+        let logits = model.stack.forward_from(&[1, 5, 9, 13, 2], &mut state);
+        bits.push(
+            logits.iter().flat_map(|row| row.iter().map(|v| v.to_bits())).collect::<Vec<u32>>(),
+        );
+    }
+    assert_eq!(bits[1], bits[0], "streamed lm logits diverged under shiftadd");
+
+    // once the stacks are shared (a worker cloned the Arc), switching
+    // tiers must refuse instead of racing the hot path
+    let mut model = ServeModel::lm(Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3))).unwrap();
+    let _alias = model.stack.clone();
+    let err = model.set_kernel_tier(KernelTier::ShiftAdd).expect_err("aliased stack");
+    assert!(err.to_string().contains("before the model is shared"), "got: {err}");
+}

@@ -219,6 +219,85 @@ fn cli_trace_stream_is_byte_deterministic_across_runs() {
     );
 }
 
+/// Every element of `sub` appears in `full`, in order (two-pointer
+/// scan). Strictness — `sub` being genuinely smaller — is asserted
+/// separately so a failure names which property broke.
+fn is_subsequence(sub: &[String], full: &[String]) -> bool {
+    let mut it = full.iter();
+    sub.iter().all(|line| it.any(|f| f == line))
+}
+
+#[test]
+fn trace_every_samples_a_strict_subsequence_of_the_full_stream() {
+    let dir = test_dir();
+    let run = |label: &str, extra: &[&str], every: usize| -> (PathBuf, PathBuf) {
+        let trace = dir.join(format!("every_{label}_{every}.jsonl"));
+        let out = dir.join(format!("every_{label}_{every}.tensors"));
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_floatsd-lstm"));
+        cmd.args(["train", "--preset", "tiny", "--log-every", "0", "--seed", "5"]);
+        cmd.args(extra);
+        cmd.args(["--trace-every", &every.to_string()]);
+        cmd.arg("--out").arg(&out).arg("--trace").arg(&trace);
+        let status = cmd.status().expect("spawn floatsd-lstm train");
+        assert!(status.success(), "traced run failed ({label}, --trace-every {every})");
+        (trace, out)
+    };
+    // both offline trainers honor --trace-every: the char-LM path (with
+    // an absurd loss scale so backoff events are in the stream) and the
+    // multi-task path
+    let char_extra: &[&str] = &["--steps", "8", "--loss-scale", "1000000000"];
+    let task_extra: &[&str] = &["--task", "pos", "--steps", "6"];
+    for (label, extra, steps) in [("char", char_extra, 8usize), ("task", task_extra, 6)] {
+        let (t_full, o_full) = run(label, extra, 1);
+        let (t_smp, o_smp) = run(label, extra, 3);
+        let full = deterministic_lines(&t_full);
+        let sampled = deterministic_lines(&t_smp);
+
+        // sampling drops lines, never rewrites them: the sampled stream
+        // is a strict subsequence of the N=1 stream
+        assert!(
+            sampled.len() < full.len(),
+            "{label}: --trace-every 3 stream is not smaller ({} vs {})",
+            sampled.len(),
+            full.len()
+        );
+        assert!(
+            is_subsequence(&sampled, &full),
+            "{label}: sampled stream is not a subsequence of the full stream"
+        );
+
+        let evs = |lines: &[String]| -> Vec<String> {
+            lines
+                .iter()
+                .map(|l| {
+                    let j = Json::parse(l).unwrap();
+                    j.get("ev").and_then(Json::as_str).unwrap_or("?").to_string()
+                })
+                .collect()
+        };
+        let evs_full = evs(&full);
+        let evs_smp = evs(&sampled);
+        // run bracketing always survives sampling
+        assert_eq!(evs_smp.first().map(String::as_str), Some("run_start"));
+        assert_eq!(evs_smp.last().map(String::as_str), Some("run_end"));
+        // exactly every 3rd step keeps its step event
+        let count = |evs: &[String], which: &str| evs.iter().filter(|e| *e == which).count();
+        assert_eq!(count(&evs_full, "step"), steps, "{label}: N=1 must trace every step");
+        assert_eq!(count(&evs_smp, "step"), steps / 3, "{label}: sampled step count");
+        // loss-scale events are never sampled away
+        assert_eq!(
+            count(&evs_smp, "loss_scale"),
+            count(&evs_full, "loss_scale"),
+            "{label}: loss_scale events must always emit"
+        );
+
+        // sampling is numerics-neutral: same checkpoint bytes
+        let full_bytes = std::fs::read(&o_full).unwrap();
+        let smp_bytes = std::fs::read(&o_smp).unwrap();
+        assert_eq!(smp_bytes, full_bytes, "{label}: --trace-every changed the checkpoint");
+    }
+}
+
 #[test]
 fn eval_report_is_byte_identical_across_thread_counts() {
     let dir = test_dir();

@@ -4,6 +4,7 @@
 //! dynamic loss scaling, and its checkpoints serve bit-identically.
 
 use floatsd_lstm::lstm::model::{build_tiny_from_params, ParamBag};
+use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::tensorfile::read_tensors;
 use floatsd_lstm::train::{TrainConfig, Trainer};
 
@@ -24,6 +25,9 @@ fn smoke_cfg() -> TrainConfig {
         log_every: 0,
         threads: 1,
         checkpoint: None,
+        trace: None,
+        trace_every: 1,
+        kernel_tier: KernelTier::Decoded,
     }
 }
 
