@@ -5,8 +5,10 @@
 //! the decode loop — decoded tokens/s). Writes
 //! `results/serve_throughput.csv` (batch, tokens_per_s, speedup) and a
 //! machine-readable `BENCH_serve.json` at the repo root (tokens/s +
-//! p50/p99 per batch size, server end-to-end rows, per-task rows) so
-//! the bench trajectory is trackable across PRs.
+//! p50/p99 per batch size, server end-to-end rows — one per
+//! `(workers, max_batch, kernel tier)` with a `kernel_profile` block
+//! of per-shape-class decoded-vs-shiftadd wall time — and per-task
+//! rows) so the bench trajectory is trackable across PRs.
 //!
 //! The win mechanism: the weight-stationary `matmul_fast` streams each
 //! decoded weight row once per micro-batch instead of once per stream,
@@ -21,10 +23,13 @@ use std::time::Duration;
 
 use floatsd_lstm::benchlib::{bench, black_box, results_dir, BenchStats, Csv};
 use floatsd_lstm::lstm::synthetic_stack;
+use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::demo::{drive_load, drive_task_load};
 use floatsd_lstm::serve::{DecodeParams, ServeConfig, ServeModel, Server};
 use floatsd_lstm::tasks::TaskKind;
+use floatsd_lstm::telemetry::serve_trace::kernel_profile_json;
+use floatsd_lstm::telemetry::ServeTraceSink;
 use floatsd_lstm::tensorfile::json::Json;
 
 /// `BENCH_serve.json` lands at the repo root (next to CHANGES.md) so
@@ -104,25 +109,46 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- end-to-end: scheduler + worker pool + session store ----------
+    // each row serves through a traced server: the per-row sink holds
+    // the telemetry gate open, so the gated kernel wrappers attribute
+    // decoded-vs-shiftadd wall time per matvec/matmul shape class
     let shared = Arc::new(stack);
-    for &(workers, max_batch) in &[(1usize, 16usize), (4, 16)] {
-        let server = Server::start_lm(
-            shared.clone(),
+    let server_rows = [
+        (1usize, 16usize, KernelTier::Decoded),
+        (4, 16, KernelTier::Decoded),
+        (4, 16, KernelTier::ShiftAdd),
+    ];
+    for &(workers, max_batch, tier) in &server_rows {
+        // a fresh same-seed stack per row — the tier is a runtime knob
+        // on the stack, and same-seed rebuilds are bit-identical
+        let mut st = synthetic_stack(vocab, dim, hidden, layers, vocab, 20200711);
+        st.set_kernel_tier(tier);
+        let st = Arc::new(st);
+        let trace_path =
+            results_dir().join(format!("serve_trace_{workers}w_{}.jsonl", tier.name()));
+        let sink = Arc::new(ServeTraceSink::create(&trace_path)?);
+        let server = Server::start_traced(
+            Arc::new(ServeModel::lm(st.clone())?),
             ServeConfig { workers, max_batch, batch_window: Duration::from_micros(200) },
+            Some(sink.clone()),
         )?;
         let t0 = std::time::Instant::now();
-        let streamed = drive_load(&server, &shared, 64, 64, 4);
+        let streamed = drive_load(&server, &st, 64, 64, 4);
         let wall = t0.elapsed();
         let agg = server.stats();
         let e2e_tps = streamed as f64 / wall.as_secs_f64();
         println!(
-            "server end-to-end ({workers} workers, max-batch {max_batch}): \
+            "server end-to-end ({workers} workers, max-batch {max_batch}, {}): \
              {:.0} tokens/s | occupancy {:.2} | latency {}",
-            e2e_tps, agg.mean_occupancy, agg.latency
+            tier.name(),
+            e2e_tps,
+            agg.mean_occupancy,
+            agg.latency
         );
         let mut m = BTreeMap::new();
         m.insert("workers".to_string(), jnum(workers as f64));
         m.insert("max_batch".to_string(), jnum(max_batch as f64));
+        m.insert("tier".to_string(), Json::Str(tier.name().to_string()));
         m.insert("tokens_per_s".to_string(), jnum(e2e_tps));
         m.insert("occupancy".to_string(), jnum(agg.mean_occupancy));
         m.insert("p50_us".to_string(), jnum(agg.latency.p50.as_secs_f64() * 1e6));
@@ -130,8 +156,12 @@ fn main() -> anyhow::Result<()> {
         // deterministic serve counters (per-kind requests/work,
         // occupancy histogram) + wall-clock confined to `timing`
         m.insert("telemetry".to_string(), agg.telemetry_json());
-        json_server.push(Json::Obj(m));
+        // shutdown first so batches drained on the way out profile too
         server.shutdown();
+        sink.finish()?;
+        m.insert("kernel_profile".to_string(), kernel_profile_json(&sink.kernel_profile()));
+        json_server.push(Json::Obj(m));
+        println!("  trace: {}", trace_path.display());
     }
 
     // ---- per-task serving rows (incl. the MT decode loop) -------------

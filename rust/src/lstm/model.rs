@@ -185,6 +185,15 @@ impl QLstmStack {
         self.head.set_kernel_tier(tier);
     }
 
+    /// The stack's active forward-kernel tier ([`set_kernel_tier`]
+    /// sets every matrix uniformly; the head is the representative) —
+    /// the observability label serve stats and traces report.
+    ///
+    /// [`set_kernel_tier`]: Self::set_kernel_tier
+    pub fn kernel_tier(&self) -> crate::qmath::KernelTier {
+        self.head.w.kernel_tier()
+    }
+
     /// True when every layer is forward-only — the precondition for
     /// incremental (token-at-a-time) streaming and thus for serving.
     pub fn is_unidirectional(&self) -> bool {

@@ -6,9 +6,11 @@
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
 //!                    [--decode-len L --beam K --beam-len-norm A]
-//!                    [--kernel-tier decoded|shiftadd]
+//!                    [--kernel-tier decoded|shiftadd] [--trace serve.jsonl]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
+//!                                        # --trace: request-lifecycle JSONL stream
+//!                                        # (queue/batch/kernel spans, tier profile)
 //! floatsd-lstm train [--preset tiny|default|paper] [--threads N] [--trace t.jsonl]
 //!                    [--trace-every N] [--kernel-tier decoded|shiftadd]
 //!                    [--steps N --hidden H --out ckpt.tensors ...]
@@ -19,11 +21,16 @@
 //!                    [--steps N --out ckpt.tensors ...]
 //!                                        # multi-task offline training (tasks/)
 //! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--threads N] [--out report.json]
-//!                   [--kernel-tier decoded|shiftadd]
+//!                   [--kernel-tier decoded|shiftadd] [--trace eval.jsonl]
 //!                                        # held-out eval grid across all four tasks
-//!                                        # (span-sharded; byte-identical for any N)
-//! floatsd-lstm report trace.jsonl        # summarize a --trace numerics-health stream
-//!                                        # (loss-scale events, FP8/FloatSD8 saturation)
+//!                                        # (span-sharded; byte-identical for any N;
+//!                                        # --trace adds per-shard eval_span timings)
+//! floatsd-lstm report trace.jsonl        # summarize a --trace stream (train or serve
+//!                                        # schema, auto-detected): loss-scale events,
+//!                                        # saturation, request spans, kernel profile
+//! floatsd-lstm report --diff a.jsonl b.jsonl
+//!                                        # compare two traces; flags loss-scale drift,
+//!                                        # saturation deltas, p50/p99 span regressions
 //! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```

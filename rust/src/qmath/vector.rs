@@ -180,7 +180,31 @@ fn dot_row_chained(row: &[f32], x: &[f32], bias: f32) -> f32 {
 /// Dispatches on the matrix's [`KernelTier`]: the `shiftadd` tier runs
 /// [`shiftadd::matvec_sa`], pinned bit-identical to this path by
 /// `tests/shiftadd_equivalence.rs`.
+/// With a telemetry sink open ([`crate::telemetry::hot_enabled`]) the
+/// call is wall-clock timed into the kernel-tier profile
+/// ([`crate::telemetry::note_kernel`]); disabled, the hook costs one
+/// relaxed load + branch (pinned allocation-free by
+/// `tests/telemetry_alloc.rs`). The profile is write-only — timing can
+/// never perturb an output bit.
 pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
+    if crate::telemetry::hot_enabled() {
+        let t0 = std::time::Instant::now();
+        matvec_fast_impl(w, x, bias, out);
+        crate::telemetry::note_kernel(
+            crate::telemetry::KernelOp::Matvec,
+            w.tier,
+            w.rows,
+            w.cols,
+            1,
+            t0.elapsed(),
+        );
+        return;
+    }
+    matvec_fast_impl(w, x, bias, out);
+}
+
+#[inline]
+fn matvec_fast_impl(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
     if w.tier == KernelTier::ShiftAdd {
         return shiftadd::matvec_sa(w, x, bias, out);
     }
@@ -260,7 +284,27 @@ fn dot_row_chained4(
 /// runs the identical [`dot_row_chained`] operation sequence, so
 /// results are bit-identical to `batch` independent [`matvec_fast`]
 /// calls (pinned by `tests::matmul_fast_matches_per_row`).
+/// Timed into the kernel-tier profile exactly like [`matvec_fast`]
+/// (shape class includes `batch`, so occupancy tiers profile apart).
 pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+    if crate::telemetry::hot_enabled() {
+        let t0 = std::time::Instant::now();
+        matmul_fast_impl(w, xs, batch, bias, out);
+        crate::telemetry::note_kernel(
+            crate::telemetry::KernelOp::Matmul,
+            w.tier,
+            w.rows,
+            w.cols,
+            batch,
+            t0.elapsed(),
+        );
+        return;
+    }
+    matmul_fast_impl(w, xs, batch, bias, out);
+}
+
+#[inline]
+fn matmul_fast_impl(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
     if w.tier == KernelTier::ShiftAdd {
         return shiftadd::matmul_sa(w, xs, batch, bias, out);
     }

@@ -7,6 +7,7 @@
 //! ```text
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N] [--max-batch B]
 //!                    [--window-us U] [--sessions S] [--tokens T] [--clients C]
+//!                    [--trace serve_trace.jsonl]   (request-lifecycle JSONL trace)
 //!                    [--decode-len L] [--beam K] [--beam-len-norm A]  (mt decode knobs)
 //!                    [--vocab V --dim D --hidden H --layers L]   (synthetic model)
 //! ```
@@ -113,7 +114,16 @@ pub fn run(args: &Args) -> Result<()> {
         }
     );
 
-    let server = Server::start(model.clone(), cfg)?;
+    // open the trace sink before the server so the `serve_start`
+    // config line leads the stream; sharing it through an Arc keeps
+    // the same sink alive across every shard
+    let trace = match args.opt("trace") {
+        Some(path) => Some(Arc::new(crate::telemetry::ServeTraceSink::create(
+            std::path::Path::new(path),
+        )?)),
+        None => None,
+    };
+    let server = Server::start_traced(model.clone(), cfg, trace.clone())?;
     let t0 = Instant::now();
     let streamed = drive_task_load(&server, &model, n_sessions, n_tokens, n_clients, decode);
     let wall = t0.elapsed();
@@ -137,6 +147,13 @@ pub fn run(args: &Args) -> Result<()> {
         wall
     );
     server.shutdown();
+    if let Some(tr) = &trace {
+        // surface deferred IO errors after the serve_end summary landed
+        tr.finish()?;
+        if let Some(path) = args.opt("trace") {
+            println!("trace: wrote request-lifecycle stream to {path}");
+        }
+    }
     Ok(())
 }
 

@@ -56,6 +56,7 @@ pub mod session;
 pub mod stats;
 pub mod worker;
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
@@ -64,6 +65,9 @@ use anyhow::bail;
 
 use crate::lstm::QLstmStack;
 use crate::tasks::TaskKind;
+use crate::telemetry::serve_trace::{kernel_profile_json, unum};
+use crate::telemetry::ServeTraceSink;
+use crate::tensorfile::json::Json;
 
 pub use model::{DecodeParams, ServeModel, MAX_BEAM_WIDTH, MAX_DECODE_LEN, MAX_LEN_NORM};
 pub use scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
@@ -99,6 +103,8 @@ pub struct Server {
     pool: WorkerPool,
     model: Arc<ServeModel>,
     workers: usize,
+    /// request-lifecycle trace shared with every shard (`--trace`)
+    trace: Option<Arc<ServeTraceSink>>,
 }
 
 impl Server {
@@ -109,6 +115,21 @@ impl Server {
     /// head/task width mismatch, a missing mt decoder) or the config
     /// is degenerate.
     pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> crate::Result<Server> {
+        Server::start_traced(model, cfg, None)
+    }
+
+    /// [`Self::start`] with an optional request-lifecycle trace sink
+    /// ([`crate::telemetry::serve_trace`]): every shard shares the
+    /// sink, a `serve_start` config line is emitted here, and
+    /// [`Self::shutdown`] closes the stream with a `serve_end`
+    /// summary (run totals + the kernel-tier profile). Tracing never
+    /// perturbs a served logit, decode token, or stats counter
+    /// (pinned by `tests/serve_trace.rs`).
+    pub fn start_traced(
+        model: Arc<ServeModel>,
+        cfg: ServeConfig,
+        trace: Option<Arc<ServeTraceSink>>,
+    ) -> crate::Result<Server> {
         model.validate()?;
         if cfg.workers < 1 || cfg.max_batch < 1 {
             bail!(
@@ -118,7 +139,26 @@ impl Server {
             );
         }
         let workers = cfg.workers;
-        Ok(Server { pool: WorkerPool::spawn(model.clone(), &cfg), model, workers })
+        if let Some(tr) = &trace {
+            let mut f = BTreeMap::new();
+            f.insert("task".to_string(), Json::Str(model.task.name().to_string()));
+            f.insert("workers".to_string(), unum(workers as u64));
+            f.insert("max_batch".to_string(), unum(cfg.max_batch as u64));
+            f.insert("window_us".to_string(), unum(cfg.batch_window.as_micros() as u64));
+            f.insert(
+                "kernel_tier".to_string(),
+                Json::Str(model.stack.kernel_tier().name().to_string()),
+            );
+            f.insert("vocab".to_string(), unum(model.input_vocab() as u64));
+            f.insert("n_out".to_string(), unum(model.n_out() as u64));
+            tr.emit("serve_start", f);
+        }
+        Ok(Server {
+            pool: WorkerPool::spawn(model.clone(), &cfg, trace.clone()),
+            model,
+            workers,
+            trace,
+        })
     }
 
     /// [`Self::start`] over a raw single stack served as a language
@@ -202,6 +242,17 @@ impl Server {
         reply_to: mpsc::Sender<Reply>,
     ) -> crate::Result<()> {
         if let Err(reason) = model::validate_request(&self.model, &kind) {
+            if let Some(tr) = &self.trace {
+                let mut f = BTreeMap::new();
+                f.insert("shard".to_string(), unum(self.shard_of(session) as u64));
+                f.insert("session".to_string(), unum(session));
+                f.insert(
+                    "kind".to_string(),
+                    Json::Str(KIND_NAMES[kind_index(&kind)].to_string()),
+                );
+                f.insert("reason".to_string(), Json::Str(reason.clone()));
+                tr.emit("reject", f);
+            }
             bail!("{reason}");
         }
         let shard = self.shard_of(session);
@@ -228,8 +279,34 @@ impl Server {
     }
 
     /// Stop accepting work, drain the queues, and join the workers.
+    /// With a trace sink attached, the stream closes with a
+    /// `serve_end` summary: run totals plus the per-tier kernel
+    /// profile accumulated since the sink opened the gate.
     pub fn shutdown(self) {
-        self.pool.shutdown();
+        let Server { pool, trace, .. } = self;
+        // keep handles to the shard stats across the join — the
+        // summary must include batches drained during shutdown
+        let stat_handles = pool.stats.clone();
+        pool.shutdown();
+        if let Some(tr) = &trace {
+            let snap = stats::merged(&stat_handles);
+            let mut f = BTreeMap::new();
+            f.insert("tokens".to_string(), unum(snap.tokens));
+            f.insert("requests".to_string(), unum(snap.requests));
+            f.insert("batches".to_string(), unum(snap.batches));
+            f.insert("sessions".to_string(), unum(snap.sessions));
+            f.insert("queue_high_water".to_string(), unum(snap.queue_high_water));
+            f.insert(
+                "kernel_tier".to_string(),
+                Json::Str(snap.kernel_tier.name().to_string()),
+            );
+            f.insert("kernel_profile".to_string(), kernel_profile_json(&tr.kernel_profile()));
+            let mut t = BTreeMap::new();
+            t.insert("p50_us".to_string(), Json::Num(snap.latency.p50.as_micros() as f64));
+            t.insert("p99_us".to_string(), Json::Num(snap.latency.p99.as_micros() as f64));
+            f.insert("timing".to_string(), Json::Obj(t));
+            tr.emit("serve_end", f);
+        }
     }
 }
 

@@ -158,6 +158,10 @@ enum Item {
 struct Inner {
     q: VecDeque<Item>,
     shutdown: bool,
+    /// deepest the queue has ever been — the backpressure telemetry
+    /// gauge ([`RequestQueue::high_water`]); tracked inside the push
+    /// critical section, so it costs one compare on a lock already held
+    high_water: usize,
 }
 
 /// MPSC micro-batching queue (many client handles push, the owning
@@ -176,7 +180,7 @@ impl Default for RequestQueue {
 impl RequestQueue {
     pub fn new() -> RequestQueue {
         RequestQueue {
-            inner: Mutex::new(Inner { q: VecDeque::new(), shutdown: false }),
+            inner: Mutex::new(Inner { q: VecDeque::new(), shutdown: false, high_water: 0 }),
             cv: Condvar::new(),
         }
     }
@@ -186,6 +190,7 @@ impl RequestQueue {
         let mut g = self.inner.lock().unwrap();
         if !g.shutdown {
             g.q.push_back(Item::Req(r));
+            g.high_water = g.high_water.max(g.q.len());
             self.cv.notify_one();
         }
     }
@@ -196,8 +201,21 @@ impl RequestQueue {
         let mut g = self.inner.lock().unwrap();
         if !g.shutdown {
             g.q.push_back(Item::Close(session));
+            g.high_water = g.high_water.max(g.q.len());
             self.cv.notify_one();
         }
+    }
+
+    /// Items currently queued (requests + closes) — the batch-boundary
+    /// queue-depth gauge the serve trace samples.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Deepest the queue has ever been — the scheduler backpressure
+    /// high-water mark reported by serve stats and traces.
+    pub fn high_water(&self) -> usize {
+        self.inner.lock().unwrap().high_water
     }
 
     /// Stop accepting new work and wake the worker; already-queued
@@ -400,6 +418,24 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].session, 1);
         assert!(!q.next_batch(8, Duration::from_secs(5), &mut batch, &mut closes));
+    }
+
+    #[test]
+    fn depth_and_high_water_track_the_backlog() {
+        let q = RequestQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!((q.depth(), q.high_water()), (0, 0));
+        for s in 0..3u64 {
+            q.push(mk(s, 0, &tx));
+        }
+        q.push_close(9); // unrelated close counts toward depth too
+        assert_eq!((q.depth(), q.high_water()), (4, 4));
+        let (mut batch, mut closes) = (Vec::new(), Vec::new());
+        assert!(q.next_batch(8, Duration::from_millis(1), &mut batch, &mut closes));
+        assert_eq!(batch.len(), 3);
+        assert_eq!(closes, vec![9]);
+        assert_eq!(q.depth(), 0, "batch formation drains the queue");
+        assert_eq!(q.high_water(), 4, "the high-water mark survives the drain");
     }
 
     #[test]

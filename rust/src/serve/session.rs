@@ -68,6 +68,13 @@ impl SessionStore {
         self.sessions.remove(&id).is_some()
     }
 
+    /// Whether a session already has state — the serve trace asks this
+    /// *before* processing a request to emit `session_open` exactly
+    /// once per lifecycle (read-only: never creates an entry).
+    pub fn contains(&self, id: SessionId) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
     pub fn len(&self) -> usize {
         self.sessions.len()
     }
@@ -111,6 +118,8 @@ mod tests {
         assert!(!store.close(999));
         assert_eq!(store.len(), 1, "unknown close neither removed nor created entries");
         assert!(store.get_mut(999).is_none(), "get_mut must not create either");
+        assert_eq!(store.len(), 1);
+        assert!(store.contains(1) && !store.contains(999), "contains is a pure probe");
         assert_eq!(store.len(), 1);
     }
 }

@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::benchlib::Percentiles;
+use crate::qmath::KernelTier;
 use crate::telemetry::{Counter, Gauge, Histogram, SampleWindow};
 use crate::tensorfile::json::Json;
 
@@ -64,6 +65,12 @@ pub struct ShardStats {
     /// requests-per-micro-batch distribution
     occupancy: Histogram,
     latencies: Mutex<SampleWindow>,
+    /// active forward-kernel tier (0 = decoded, 1 = shiftadd) — set
+    /// once by the worker at spawn so bench rows are self-describing
+    kernel_tier: Gauge,
+    /// scheduler queue high-water mark, republished at batch
+    /// boundaries from [`super::scheduler::RequestQueue::high_water`]
+    queue_high_water: Gauge,
 }
 
 /// Per-request-kind slice of a snapshot.
@@ -90,6 +97,11 @@ pub struct StatsSnapshot {
     pub per_kind: [KindSnapshot; 4],
     /// occupancy histogram counts ([`OCCUPANCY_BOUNDS`] + overflow)
     pub occupancy_hist: [u64; 8],
+    /// active forward-kernel tier the shard's worker served with
+    pub kernel_tier: KernelTier,
+    /// deepest the shard's scheduler queue has been (merged: the max
+    /// across shards — the backpressure headline)
+    pub queue_high_water: u64,
     /// enqueue → reply-ready service latency
     pub latency: Percentiles,
 }
@@ -105,7 +117,23 @@ impl ShardStats {
             kind_work: [Counter::new(), Counter::new(), Counter::new(), Counter::new()],
             occupancy: Histogram::new(&OCCUPANCY_BOUNDS),
             latencies: Mutex::new(SampleWindow::new(LATENCY_WINDOW)),
+            kernel_tier: Gauge::new(),
+            queue_high_water: Gauge::new(),
         }
+    }
+
+    /// Publish the tier the worker serves with (once, at spawn).
+    pub fn set_kernel_tier(&self, tier: KernelTier) {
+        self.kernel_tier.set(match tier {
+            KernelTier::Decoded => 0,
+            KernelTier::ShiftAdd => 1,
+        });
+    }
+
+    /// Republish the scheduler queue's high-water mark (worker-side,
+    /// at batch boundaries — monotone, so last-write-wins is exact).
+    pub fn set_queue_high_water(&self, n: usize) {
+        self.queue_high_water.set(n as u64);
     }
 
     /// Record one scheduled micro-batch: its request count, the
@@ -158,6 +186,12 @@ impl ShardStats {
             mean_occupancy: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
             per_kind,
             occupancy_hist,
+            kernel_tier: if self.kernel_tier.get() == 0 {
+                KernelTier::Decoded
+            } else {
+                KernelTier::ShiftAdd
+            },
+            queue_high_water: self.queue_high_water.get(),
             latency: Percentiles::of(&mut samples),
         }
     }
@@ -175,7 +209,7 @@ impl Default for ShardStats {
 pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
     let mut samples: Vec<Duration> = Vec::new();
     let mut out = StatsSnapshot::default();
-    for s in shards {
+    for (i, s) in shards.iter().enumerate() {
         let snap = s.snapshot();
         out.tokens += snap.tokens;
         out.requests += snap.requests;
@@ -188,6 +222,12 @@ pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
         for (acc, c) in out.occupancy_hist.iter_mut().zip(snap.occupancy_hist) {
             *acc += c;
         }
+        if i == 0 {
+            // every worker serves the same shared model, so the tier
+            // is uniform across shards
+            out.kernel_tier = snap.kernel_tier;
+        }
+        out.queue_high_water = out.queue_high_water.max(snap.queue_high_water);
         samples.extend_from_slice(s.latencies.lock().unwrap().samples());
     }
     out.mean_occupancy =
@@ -220,6 +260,8 @@ impl StatsSnapshot {
         m.insert("requests".to_string(), num(self.requests));
         m.insert("batches".to_string(), num(self.batches));
         m.insert("sessions".to_string(), num(self.sessions));
+        m.insert("kernel_tier".to_string(), Json::Str(self.kernel_tier.name().to_string()));
+        m.insert("queue_high_water".to_string(), num(self.queue_high_water));
         m.insert("mean_occupancy".to_string(), Json::Num(self.mean_occupancy));
         m.insert("per_kind".to_string(), Json::Obj(kinds));
         m.insert(
@@ -261,10 +303,16 @@ mod tests {
         assert_eq!(sa.batches, 2);
         assert_eq!(sa.sessions, 3);
         assert!((sa.mean_occupancy - 3.0).abs() < 1e-9);
+        a.set_queue_high_water(5);
+        b.set_queue_high_water(9);
+        a.set_kernel_tier(KernelTier::ShiftAdd);
+        b.set_kernel_tier(KernelTier::ShiftAdd);
         let m = merged(&[a, b]);
         assert_eq!(m.tokens, 12);
         assert_eq!(m.batches, 3);
         assert_eq!(m.sessions, 5);
+        assert_eq!(m.queue_high_water, 9, "merged high water is the max across shards");
+        assert_eq!(m.kernel_tier, KernelTier::ShiftAdd);
         assert_eq!(m.latency.n, 12);
         assert_eq!(m.latency.max, Duration::from_micros(30));
         // occupancy: batches of 4, 2, 6 → buckets (≤4), (≤2), (≤8)
@@ -304,10 +352,18 @@ mod tests {
         let s = ShardStats::new();
         s.record_batch(2, 5, &[Duration::from_micros(10), Duration::from_micros(20)]);
         s.record_kinds(&[1, 1, 0, 0], &[1, 4, 0, 0]);
+        s.set_kernel_tier(KernelTier::ShiftAdd);
+        s.set_queue_high_water(7);
         let j1 = s.snapshot().telemetry_json();
         let j2 = s.snapshot().telemetry_json();
         assert_eq!(j1.to_string(), j2.to_string(), "same state → same bytes");
         assert!(j1.get("timing").is_some(), "wall-clock lives under timing");
+        assert_eq!(
+            j1.get("kernel_tier").and_then(Json::as_str),
+            Some("shiftadd"),
+            "bench rows are self-describing about the tier"
+        );
+        assert_eq!(j1.get("queue_high_water").and_then(Json::as_f64), Some(7.0));
         let kinds = j1.get("per_kind").expect("per_kind block");
         assert_eq!(
             kinds.get("sequence").and_then(|k| k.get("work")).and_then(Json::as_f64),

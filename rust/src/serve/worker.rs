@@ -17,14 +17,18 @@
 //! bit-identical for every batch composition, so replies never depend
 //! on which group (or which micro-batch) a token rode in.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::data::translation::{BOS, EOS};
 use crate::lstm::{QLstmStack, StackScratch, StreamState};
 use crate::tasks::TaskKind;
+use crate::telemetry::serve_trace::unum;
+use crate::telemetry::ServeTraceSink;
+use crate::tensorfile::json::Json;
 
 use super::model::{
     argmax, length_normalized, log_softmax_terms, token_log_prob, validate_request, DecodeParams,
@@ -32,7 +36,7 @@ use super::model::{
 };
 use super::scheduler::{Payload, Reply, Request, RequestKind, RequestQueue};
 use super::session::{SessionId, SessionStore};
-use super::stats::{kind_index, ShardStats};
+use super::stats::{kind_index, ShardStats, KIND_NAMES};
 use super::ServeConfig;
 
 /// A reply ready to send, paired with its client's channel.
@@ -46,8 +50,15 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `cfg.workers` shard threads over a shared model.
-    pub fn spawn(model: Arc<ServeModel>, cfg: &ServeConfig) -> WorkerPool {
+    /// Spawn `cfg.workers` shard threads over a shared model. With a
+    /// serve-trace sink, every shard shares it and emits its
+    /// lifecycle/batch/request events at batch boundaries (the sink
+    /// serializes whole lines internally).
+    pub fn spawn(
+        model: Arc<ServeModel>,
+        cfg: &ServeConfig,
+        trace: Option<Arc<ServeTraceSink>>,
+    ) -> WorkerPool {
         let mut queues = Vec::with_capacity(cfg.workers);
         let mut stats = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -59,10 +70,13 @@ impl WorkerPool {
             let model = model.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
+            let trace = trace.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("serve-shard-{shard}"))
-                    .spawn(move || run_worker(&model, &queue, &stat, max_batch, window))
+                    .spawn(move || {
+                        run_worker(&model, &queue, &stat, max_batch, window, shard, trace)
+                    })
                     .expect("spawn shard thread"),
             );
         }
@@ -80,12 +94,31 @@ impl WorkerPool {
     }
 }
 
+/// Seed field map for a per-shard trace event.
+fn shard_fields(shard: usize) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("shard".to_string(), unum(shard as u64));
+    m
+}
+
+/// One request's trace metadata, captured at batch formation and
+/// emitted (aligned with the per-kind `lats` order) after processing.
+struct ReqMeta {
+    session: SessionId,
+    kind: usize,
+    work: u64,
+    queue_wait: Duration,
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_worker(
     model: &ServeModel,
     queue: &RequestQueue,
     stats: &ShardStats,
     max_batch: usize,
     window: Duration,
+    shard: usize,
+    trace: Option<Arc<ServeTraceSink>>,
 ) {
     let mut store = SessionStore::new();
     let mut scratch = model.stack.scratch(max_batch);
@@ -94,6 +127,7 @@ fn run_worker(
     // `load_state` slices into it before `step_batch` could grow it
     let mut dec_scratch =
         model.decoder.as_ref().map(|d| d.scratch(max_batch.max(MAX_BEAM_WIDTH)));
+    stats.set_kernel_tier(model.stack.kernel_tier());
 
     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
     let mut closes: Vec<SessionId> = Vec::new();
@@ -103,16 +137,39 @@ fn run_worker(
     let mut decodes: Vec<Request> = Vec::new();
     let mut lats: Vec<Duration> = Vec::with_capacity(max_batch);
     let mut outbox: Vec<Outgoing> = Vec::with_capacity(max_batch);
+    let mut meta: Vec<ReqMeta> = Vec::with_capacity(max_batch);
+    // per-shard micro-batch ordinal (the trace's `batch` key)
+    let mut batch_no: u64 = 0;
 
     while queue.next_batch(max_batch, window, &mut batch, &mut closes) {
+        // batch-formation instant: splits every request's lifecycle
+        // into queue-wait (enqueue → here) and service (here → reply)
+        let formed = Instant::now();
         // closes are ordered by the scheduler to never precede queued
         // requests of their session, so dropping state here is safe
+        let n_closes = closes.len();
         for s in closes.drain(..) {
-            store.close(s);
+            let existed = store.close(s);
+            if let Some(tr) = &trace {
+                let mut f = shard_fields(shard);
+                f.insert("session".to_string(), unum(s));
+                f.insert("existed".to_string(), Json::Bool(existed));
+                tr.emit("session_close", f);
+            }
         }
         batch.retain(|r| match validate_request(model, &r.kind) {
             Ok(()) => true,
             Err(reason) => {
+                if let Some(tr) = &trace {
+                    let mut f = shard_fields(shard);
+                    f.insert("session".to_string(), unum(r.session));
+                    f.insert(
+                        "kind".to_string(),
+                        Json::Str(KIND_NAMES[kind_index(&r.kind)].to_string()),
+                    );
+                    f.insert("reason".to_string(), Json::Str(reason.clone()));
+                    tr.emit("reject", f);
+                }
                 // answer with an explicit rejection — the client may
                 // hold its own Sender clone, so merely dropping the
                 // request would leave it blocked on recv forever
@@ -126,19 +183,42 @@ fn run_worker(
         });
         if batch.is_empty() {
             stats.set_sessions(store.len());
+            stats.set_queue_high_water(queue.high_water());
             continue;
+        }
+
+        if let Some(tr) = &trace {
+            // a processed Step/Sequence/Decode creates session state on
+            // first use (Finalize never does) — emitted before the
+            // groups run, while `contains` still answers "not yet"
+            for r in batch.iter() {
+                if kind_index(&r.kind) != 2 && !store.contains(r.session) {
+                    let mut f = shard_fields(shard);
+                    f.insert("session".to_string(), unum(r.session));
+                    tr.emit("session_open", f);
+                }
+            }
         }
 
         let n_requests = batch.len();
         let mut work = 0u64;
         let mut kind_reqs = [0u64; 4];
         let mut kind_work = [0u64; 4];
+        meta.clear();
         for r in batch.drain(..) {
             let w = r.kind.work();
             let k = kind_index(&r.kind);
             work += w;
             kind_reqs[k] += 1;
             kind_work[k] += w;
+            if trace.is_some() {
+                meta.push(ReqMeta {
+                    session: r.session,
+                    kind: k,
+                    work: w,
+                    queue_wait: formed.saturating_duration_since(r.enqueued),
+                });
+            }
             match r.kind {
                 RequestKind::Step { .. } => steps.push(r),
                 RequestKind::Sequence { .. } => seqs.push(r),
@@ -153,12 +233,54 @@ fn run_worker(
         run_sequences(model, &mut store, &mut scratch, &mut seqs, &mut lats, &mut outbox);
         run_finalizes(&mut store, &mut finals, &mut lats, &mut outbox);
         run_decodes(model, &mut store, dec_scratch.as_mut(), &mut decodes, &mut lats, &mut outbox);
+        let batch_span = formed.elapsed();
 
         // record before sending so an observer that saw all replies
         // also sees the matching counters
         stats.record_batch(n_requests, work, &lats);
         stats.record_kinds(&kind_reqs, &kind_work);
         stats.set_sessions(store.len());
+        stats.set_queue_high_water(queue.high_water());
+        if let Some(tr) = &trace {
+            // groups ran in kind order (steps, seqs, finals, decodes),
+            // each preserving batch order, so a stable sort by kind
+            // aligns `meta` index-wise with `lats`
+            meta.sort_by_key(|m| m.kind);
+            for (m, lat) in meta.iter().zip(lats.iter()) {
+                let mut f = shard_fields(shard);
+                f.insert("batch".to_string(), unum(batch_no));
+                f.insert("session".to_string(), unum(m.session));
+                f.insert("kind".to_string(), Json::Str(KIND_NAMES[m.kind].to_string()));
+                f.insert("work".to_string(), unum(m.work));
+                f.insert("occupancy".to_string(), unum(n_requests as u64));
+                let mut t = BTreeMap::new();
+                t.insert(
+                    "queue_wait_us".to_string(),
+                    Json::Num(m.queue_wait.as_secs_f64() * 1e6),
+                );
+                t.insert("service_us".to_string(), Json::Num(lat.as_secs_f64() * 1e6));
+                f.insert("timing".to_string(), Json::Obj(t));
+                tr.emit("request", f);
+            }
+            let mut f = shard_fields(shard);
+            f.insert("batch".to_string(), unum(batch_no));
+            f.insert("requests".to_string(), unum(n_requests as u64));
+            f.insert("work".to_string(), unum(work));
+            f.insert("closes".to_string(), unum(n_closes as u64));
+            let mut kinds = BTreeMap::new();
+            for (k, name) in KIND_NAMES.iter().enumerate() {
+                kinds.insert(name.to_string(), unum(kind_reqs[k]));
+            }
+            f.insert("kinds".to_string(), Json::Obj(kinds));
+            f.insert("queue_depth".to_string(), unum(queue.depth() as u64));
+            f.insert("queue_high_water".to_string(), unum(queue.high_water() as u64));
+            f.insert("sessions".to_string(), unum(store.len() as u64));
+            let mut t = BTreeMap::new();
+            t.insert("batch_ms".to_string(), Json::Num(batch_span.as_secs_f64() * 1e3));
+            f.insert("timing".to_string(), Json::Obj(t));
+            tr.emit("batch", f);
+        }
+        batch_no += 1;
         for (to, reply) in outbox.drain(..) {
             let _ = to.send(reply);
         }

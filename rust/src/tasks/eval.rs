@@ -115,6 +115,38 @@ pub fn build_report(models: &[PathBuf], threads: usize) -> Result<Json> {
 /// byte-identical to a `decoded` one (pinned by
 /// `tests/shiftadd_equivalence.rs`).
 pub fn build_report_tier(models: &[PathBuf], threads: usize, tier: KernelTier) -> Result<Json> {
+    build_report_traced(models, threads, tier, None)
+}
+
+/// [`build_report_tier`] with an optional trace sink: each task's
+/// per-shard eval span timings ([`TaskEval::spans`]) are emitted as
+/// `eval_span` events on the `floatsd-trace-v1` stream (wall clock
+/// under `"timing"`; the train summarizer ignores unknown event
+/// kinds). The report JSON itself is byte-identical with or without a
+/// sink (pinned by `tests/serve_trace.rs`).
+pub fn build_report_traced(
+    models: &[PathBuf],
+    threads: usize,
+    tier: KernelTier,
+    mut trace: Option<&mut crate::telemetry::TraceSink>,
+) -> Result<Json> {
+    let mut emit_spans = |sink: &mut Option<&mut crate::telemetry::TraceSink>,
+                          task: &str,
+                          eval: &TaskEval| {
+        if let Some(sink) = sink.as_deref_mut() {
+            for sp in &eval.spans {
+                let mut f = BTreeMap::new();
+                f.insert("task".to_string(), Json::Str(task.to_string()));
+                f.insert("lo".to_string(), Json::Num(sp.lo as f64));
+                f.insert("hi".to_string(), Json::Num(sp.hi as f64));
+                f.insert("count".to_string(), Json::Num(sp.count as f64));
+                let mut t = BTreeMap::new();
+                t.insert("ms".to_string(), crate::telemetry::trace::fnum(sp.ms));
+                f.insert("timing".to_string(), Json::Obj(t));
+                sink.emit("eval_span", 0, f);
+            }
+        }
+    };
     let mut tasks: BTreeMap<String, Json> = BTreeMap::new();
     for path in models {
         let (cfg, eval) = evaluate_checkpoint_tier(path, threads, tier)
@@ -123,6 +155,7 @@ pub fn build_report_tier(models: &[PathBuf], threads: usize, tier: KernelTier) -
         if tasks.contains_key(&name) {
             bail!("duplicate checkpoint for task {name}: {}", path.display());
         }
+        emit_spans(&mut trace, &name, &eval);
         tasks.insert(name, entry(&cfg, &eval, &format!("checkpoint:{}", path.display())));
     }
     for kind in TaskKind::ALL {
@@ -134,6 +167,7 @@ pub fn build_report_tier(models: &[PathBuf], threads: usize, tier: KernelTier) -
         cfg.kernel_tier = tier;
         let head = build_task(&cfg)?;
         let eval = head.evaluate();
+        emit_spans(&mut trace, kind.name(), &eval);
         tasks.insert(kind.name().to_string(), entry(&cfg, &eval, "init"));
     }
     let mut root = BTreeMap::new();
@@ -155,7 +189,14 @@ pub fn run_cli(args: &Args) -> Result<()> {
     models.extend(args.positionals.iter().map(PathBuf::from));
     let threads = args.opt_usize("threads", 1)?;
     let tier = KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?;
-    let report = build_report_tier(&models, threads, tier)?;
+    let mut sink = match args.opt("trace") {
+        Some(path) => Some(crate::telemetry::TraceSink::create(Path::new(path))?),
+        None => None,
+    };
+    let report = build_report_traced(&models, threads, tier, sink.as_mut())?;
+    if let Some(sink) = &mut sink {
+        sink.finish()?;
+    }
 
     eprintln!("Table-IV grid (held-out eval):");
     if let Some(tasks) = report.get("tasks").and_then(Json::as_obj) {

@@ -133,6 +133,7 @@ impl TaskHead for LmTask {
             .collect();
         let mut spans = eval_spans(b_n, 0);
         run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let timer = crate::telemetry::SpanTimer::start();
             let lanes = sp.hi - sp.lo;
             let (mut hs, mut cs) = stack.zero_flat_state(lanes);
             let mut scr = stack.trace_scratches(lanes);
@@ -149,6 +150,7 @@ impl TaskHead for LmTask {
                     }
                 }
             }
+            sp.ms = timer.elapsed_ms();
         });
         let (loss_sum, _, count, _) = fold_spans(&spans, 0);
         let loss = loss_sum / count.max(1) as f64;
@@ -159,6 +161,7 @@ impl TaskHead for LmTask {
             metric: loss.exp(),
             count,
             confusion: None,
+            spans: super::span_timings(&spans),
         }
     }
 

@@ -380,6 +380,24 @@ pub struct TaskEval {
     /// per-class confusion counts (pos/nli only; `None` for lm/mt
     /// whose per-token "classes" are the whole vocabulary)
     pub confusion: Option<ConfusionMatrix>,
+    /// per-shard span timings of the sharded eval pass, ascending-span
+    /// order. **Timing data**: never folded into loss/metric/count and
+    /// never rendered into the eval report JSON (which stays
+    /// byte-identical trace-on vs trace-off) — `eval --trace` emits
+    /// them as `eval_span` events with the wall clock under `"timing"`.
+    pub spans: Vec<SpanTiming>,
+}
+
+/// Wall-clock timing of one eval lane span (`[lo, hi)`), recorded by a
+/// [`SpanTimer`] inside the shard worker.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanTiming {
+    pub lo: usize,
+    pub hi: usize,
+    /// scored positions this span contributed
+    pub count: usize,
+    /// wall-clock span duration — timing-only data
+    pub ms: f64,
 }
 
 /// The per-task contract on top of the shared quantized machinery.
@@ -606,6 +624,9 @@ pub(crate) struct EvalSpan {
     /// row-major gold × predicted counts (empty when the task keeps
     /// no confusion matrix)
     pub confusion: Vec<u64>,
+    /// wall clock the shard spent on this span (timing-only; surfaces
+    /// as [`SpanTiming::ms`], never in the deterministic fold)
+    pub ms: f64,
 }
 
 /// Fresh accumulator spans for a `batch`-lane evaluation;
@@ -620,7 +641,17 @@ pub(crate) fn eval_spans(batch: usize, n_classes: usize) -> Vec<EvalSpan> {
             correct: 0,
             count: 0,
             confusion: vec![0; n_classes * n_classes],
+            ms: 0.0,
         })
+        .collect()
+}
+
+/// Extract the per-span wall-clock timings ([`TaskEval::spans`]) in
+/// the same ascending-span order the fold uses.
+pub(crate) fn span_timings(spans: &[EvalSpan]) -> Vec<SpanTiming> {
+    spans
+        .iter()
+        .map(|sp| SpanTiming { lo: sp.lo, hi: sp.hi, count: sp.count, ms: sp.ms })
         .collect()
 }
 

@@ -236,6 +236,7 @@ impl TaskHead for MtTask {
             .collect();
         let mut spans = eval_spans(b_n, 0);
         run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let timer = crate::telemetry::SpanTimer::start();
             let lanes = sp.hi - sp.lo;
             for (src_ids, dec_ids, ys) in &batches {
                 let src_s = lane_slice_ids(src_ids, sp.lo, sp.hi);
@@ -262,6 +263,7 @@ impl TaskHead for MtTask {
                     }
                 }
             }
+            sp.ms = timer.elapsed_ms();
         });
         let (loss_sum, _, count, _) = fold_spans(&spans, 0);
         let loss = loss_sum / count.max(1) as f64;
@@ -272,6 +274,7 @@ impl TaskHead for MtTask {
             metric: loss.exp(),
             count,
             confusion: None,
+            spans: super::span_timings(&spans),
         }
     }
 

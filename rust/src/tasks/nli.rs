@@ -126,6 +126,7 @@ impl TaskHead for NliTask {
             .collect();
         let mut spans = eval_spans(b_n, n_cls);
         run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let timer = crate::telemetry::SpanTimer::start();
             let lanes = sp.hi - sp.lo;
             for (ids, ys) in &batches {
                 let ids_s = lane_slice_ids(ids, sp.lo, sp.hi);
@@ -145,6 +146,7 @@ impl TaskHead for NliTask {
                     sp.confusion[y * n_cls + pred] += 1;
                 }
             }
+            sp.ms = timer.elapsed_ms();
         });
         let (loss_sum, correct, count, counts) = fold_spans(&spans, n_cls);
         TaskEval {
@@ -154,6 +156,7 @@ impl TaskHead for NliTask {
             metric: correct as f64 / count.max(1) as f64,
             count,
             confusion: Some(ConfusionMatrix { n_classes: n_cls, counts }),
+            spans: super::span_timings(&spans),
         }
     }
 

@@ -134,6 +134,7 @@ impl TaskHead for PosTask {
             .collect();
         let mut spans = eval_spans(b_n, n_tags);
         run_shards(&mut spans, self.cfg.threads, |_, sp| {
+            let timer = crate::telemetry::SpanTimer::start();
             let lanes = sp.hi - sp.lo;
             for (ids, ys) in &batches {
                 // fresh zero state per batch: independent sentences
@@ -155,6 +156,7 @@ impl TaskHead for PosTask {
                     }
                 }
             }
+            sp.ms = timer.elapsed_ms();
         });
         let (loss_sum, correct, count, counts) = fold_spans(&spans, n_tags);
         TaskEval {
@@ -164,6 +166,7 @@ impl TaskHead for PosTask {
             metric: correct as f64 / count.max(1) as f64,
             count,
             confusion: Some(ConfusionMatrix { n_classes: n_tags, counts }),
+            spans: super::span_timings(&spans),
         }
     }
 

@@ -36,8 +36,10 @@
 //! on: they are integer atomics off the per-token hot path.
 
 pub mod report;
+pub mod serve_trace;
 pub mod trace;
 
+pub use serve_trace::{ServeTraceSink, SERVE_TRACE_SCHEMA};
 pub use trace::{TraceSink, TRACE_SCHEMA};
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -47,6 +49,7 @@ use crate::formats::fp8::F8_MAX;
 use crate::formats::{round_f8, FLOAT_SD8};
 use crate::lstm::QLstmStack;
 use crate::qmath::vector::QMatrix;
+use crate::qmath::KernelTier;
 
 // ---------------------------------------------------------------------
 // global enable gate
@@ -302,6 +305,196 @@ pub fn note_tanh(y: f32) {
 }
 
 // ---------------------------------------------------------------------
+// kernel-tier profiling spans
+// ---------------------------------------------------------------------
+
+/// Which forward kernel a profiling span measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelOp {
+    Matvec,
+    Matmul,
+}
+
+impl KernelOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelOp::Matvec => "matvec",
+            KernelOp::Matmul => "matmul",
+        }
+    }
+}
+
+/// Shape-class slots in the kernel-profile table. A served model has a
+/// handful of distinct `(op, tier, rows, cols, batch)` classes (one per
+/// weight matrix × batch width actually formed), so 64 is generous;
+/// spills land in [`KERNEL_OVERFLOW`] rather than being dropped.
+const KP_SLOTS: usize = 64;
+/// Bits per packed dimension (rows/cols/batch clamp to `2^20 - 1`).
+const KP_DIM_BITS: u64 = 20;
+const KP_DIM_MAX: u64 = (1 << KP_DIM_BITS) - 1;
+
+struct KpSlot {
+    key: AtomicU64,
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // array-repeat seed for the static table
+const KP_EMPTY: KpSlot =
+    KpSlot { key: AtomicU64::new(0), calls: AtomicU64::new(0), nanos: AtomicU64::new(0) };
+
+/// Fixed-capacity lock-free open-addressing table of kernel shape
+/// classes: slots claim a packed key with one CAS and accumulate
+/// write-only relaxed counters afterwards, so the hot path never locks,
+/// never allocates, and can never feed back into the numerics.
+static KERNEL_TABLE: [KpSlot; KP_SLOTS] = [KP_EMPTY; KP_SLOTS];
+/// Spans whose shape class found no free slot — counted so a saturated
+/// table reads as an audited spill, not a silently lossy profile.
+static KERNEL_OVERFLOW: KpSlot = KP_EMPTY;
+
+/// Pack `(op, tier, rows, cols, batch)` into a nonzero slot key. The
+/// top bit is always set so an occupied slot can never collide with
+/// the empty-key sentinel 0.
+fn kp_key(op: KernelOp, tier: KernelTier, rows: usize, cols: usize, batch: usize) -> u64 {
+    let op_b = match op {
+        KernelOp::Matvec => 0u64,
+        KernelOp::Matmul => 1,
+    };
+    let tier_b = match tier {
+        KernelTier::Decoded => 0u64,
+        KernelTier::ShiftAdd => 1,
+    };
+    let clamp = |d: usize| (d as u64).min(KP_DIM_MAX);
+    (1 << 63)
+        | (op_b << 62)
+        | (tier_b << 61)
+        | (clamp(rows) << (2 * KP_DIM_BITS))
+        | (clamp(cols) << KP_DIM_BITS)
+        | clamp(batch)
+}
+
+/// Record one forward-kernel wall-clock span, labeled by
+/// [`KernelTier`] and shape class. Callers gate on [`hot_enabled`]
+/// first (the disabled path is one relaxed load + branch, the same
+/// contract as [`note_sigmoid`]); with the gate open this is a probe
+/// over preallocated atomic slots — write-only from compute, so the
+/// profile can never perturb a computed bit.
+pub fn note_kernel(
+    op: KernelOp,
+    tier: KernelTier,
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    d: Duration,
+) {
+    let key = kp_key(op, tier, rows, cols, batch);
+    let nanos = d.as_nanos().min(u64::MAX as u128) as u64;
+    let mut idx = (key % KP_SLOTS as u64) as usize;
+    for _ in 0..KP_SLOTS {
+        let slot = &KERNEL_TABLE[idx];
+        let k = slot.key.load(Ordering::Relaxed);
+        let owned = k == key
+            || (k == 0
+                && match slot.key.compare_exchange(0, key, Ordering::Relaxed, Ordering::Relaxed)
+                {
+                    Ok(_) => true,
+                    Err(cur) => cur == key, // lost the race to the same class
+                });
+        if owned {
+            slot.calls.fetch_add(1, Ordering::Relaxed);
+            slot.nanos.fetch_add(nanos, Ordering::Relaxed);
+            return;
+        }
+        idx = (idx + 1) % KP_SLOTS;
+    }
+    KERNEL_OVERFLOW.calls.fetch_add(1, Ordering::Relaxed);
+    KERNEL_OVERFLOW.nanos.fetch_add(nanos, Ordering::Relaxed);
+}
+
+/// One shape-class row of the cumulative kernel profile. `calls` and
+/// the shape labels are deterministic for a fixed request schedule;
+/// `nanos` is wall clock and must only ever surface inside `"timing"`
+/// fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelProfileRow {
+    pub op: &'static str,
+    pub tier: &'static str,
+    pub rows: u64,
+    pub cols: u64,
+    pub batch: u64,
+    pub calls: u64,
+    pub nanos: u64,
+}
+
+impl KernelProfileRow {
+    /// Shape-class identity (everything but the accumulators).
+    fn class(&self) -> (&'static str, &'static str, u64, u64, u64) {
+        (self.op, self.tier, self.rows, self.cols, self.batch)
+    }
+}
+
+/// Snapshot the process-cumulative kernel profile, sorted by packed
+/// key — a deterministic order even though concurrent workers claim
+/// slots in a nondeterministic order.
+pub fn kernel_profile() -> Vec<KernelProfileRow> {
+    let mut keyed: Vec<(u64, u64, u64)> = Vec::new();
+    for slot in &KERNEL_TABLE {
+        let k = slot.key.load(Ordering::Relaxed);
+        if k == 0 {
+            continue;
+        }
+        let calls = slot.calls.load(Ordering::Relaxed);
+        if calls == 0 {
+            continue;
+        }
+        keyed.push((k, calls, slot.nanos.load(Ordering::Relaxed)));
+    }
+    keyed.sort_unstable_by_key(|&(k, ..)| k);
+    let mut out: Vec<KernelProfileRow> = keyed
+        .into_iter()
+        .map(|(k, calls, nanos)| KernelProfileRow {
+            op: if (k >> 62) & 1 == 0 { "matvec" } else { "matmul" },
+            tier: if (k >> 61) & 1 == 0 { "decoded" } else { "shiftadd" },
+            rows: (k >> (2 * KP_DIM_BITS)) & KP_DIM_MAX,
+            cols: (k >> KP_DIM_BITS) & KP_DIM_MAX,
+            batch: k & KP_DIM_MAX,
+            calls,
+            nanos,
+        })
+        .collect();
+    let spilled = KERNEL_OVERFLOW.calls.load(Ordering::Relaxed);
+    if spilled > 0 {
+        out.push(KernelProfileRow {
+            op: "overflow",
+            tier: "any",
+            rows: 0,
+            cols: 0,
+            batch: 0,
+            calls: spilled,
+            nanos: KERNEL_OVERFLOW.nanos.load(Ordering::Relaxed),
+        });
+    }
+    out
+}
+
+/// The profile accumulated since `base` (an earlier [`kernel_profile`]
+/// snapshot — the statics are process-cumulative, like the activation
+/// counters): matching shape classes are diffed, new classes pass
+/// through, classes with no new calls drop out.
+pub fn kernel_profile_since(base: &[KernelProfileRow]) -> Vec<KernelProfileRow> {
+    kernel_profile()
+        .into_iter()
+        .filter_map(|mut r| {
+            if let Some(b) = base.iter().find(|b| b.class() == r.class()) {
+                r.calls = r.calls.saturating_sub(b.calls);
+                r.nanos = r.nanos.saturating_sub(b.nanos);
+            }
+            (r.calls > 0).then_some(r)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
 // numerics boundary scans
 // ---------------------------------------------------------------------
 
@@ -443,6 +636,33 @@ mod tests {
         assert_eq!(s.total, 6);
         assert_eq!(s.at_max, 2, "±4.5 are the saturated codes");
         assert_eq!(s.exp_hist.iter().sum::<u64>(), 6, "every code lands in one exponent bin");
+    }
+
+    #[test]
+    fn kernel_profile_accumulates_and_diffs_by_shape_class() {
+        // unusual shape so concurrently running lib tests (which may
+        // hold the gate open) can never land in the same class
+        let (r, c) = (1111usize, 222usize);
+        let base = kernel_profile();
+        note_kernel(KernelOp::Matvec, KernelTier::Decoded, r, c, 1, Duration::from_nanos(100));
+        note_kernel(KernelOp::Matvec, KernelTier::Decoded, r, c, 1, Duration::from_nanos(50));
+        note_kernel(KernelOp::Matmul, KernelTier::ShiftAdd, r, c, 8, Duration::from_nanos(10));
+        let since = kernel_profile_since(&base);
+        let mv = since
+            .iter()
+            .find(|x| x.op == "matvec" && x.rows == r as u64 && x.batch == 1)
+            .expect("matvec class recorded");
+        assert_eq!((mv.tier, mv.cols, mv.calls, mv.nanos), ("decoded", c as u64, 2, 150));
+        let mm = since
+            .iter()
+            .find(|x| x.op == "matmul" && x.rows == r as u64 && x.batch == 8)
+            .expect("matmul class recorded");
+        assert_eq!((mm.tier, mm.calls, mm.nanos), ("shiftadd", 1, 10));
+        // a second diff against the advanced profile drops both classes
+        let now = kernel_profile();
+        assert!(kernel_profile_since(&now)
+            .iter()
+            .all(|x| x.rows != r as u64));
     }
 
     #[test]

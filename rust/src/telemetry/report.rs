@@ -1,8 +1,20 @@
-//! `floatsd-lstm report <trace.jsonl>` — render a `floatsd-trace-v1`
-//! stream ([`super::trace`]) into a human-readable numerics-health
-//! summary: loss-scale event history, per-tensor FP8 gradient
-//! saturation rates, per-matrix FloatSD8 re-encode saturation, and
-//! activation clip rates.
+//! `floatsd-lstm report <trace.jsonl>` — render a trace stream into a
+//! human-readable summary. Both trace schemas are understood, detected
+//! from the stream itself:
+//!
+//! * `floatsd-trace-v1` ([`super::trace`]): numerics health — loss-
+//!   scale event history, per-tensor FP8 gradient saturation rates,
+//!   per-matrix FloatSD8 re-encode saturation, activation clip rates;
+//! * `floatsd-serve-trace-v1` ([`super::serve_trace`]): request
+//!   lifecycle — per-kind request/work counts, batch occupancy, queue
+//!   depth and high-water, session lifecycle, queue-wait/service span
+//!   percentiles, and the per-tier kernel profile.
+//!
+//! `floatsd-lstm report --diff <a.jsonl> <b.jsonl>` compares two
+//! traces of the same schema side by side and flags regressions:
+//! loss-scale event-count drift, gradient-saturation deltas above
+//! [`SAT_DELTA_PP`] percentage points, and p50/p99 span regressions
+//! above [`SPAN_REGRESSION_PCT`] percent.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -12,19 +24,83 @@ use anyhow::{bail, Context, Result};
 use crate::cli::Args;
 use crate::tensorfile::json::Json;
 
+use super::serve_trace::SERVE_TRACE_SCHEMA;
 use super::trace::TRACE_SCHEMA;
 
+/// `--diff` flags gradient/weight saturation-rate deltas above this
+/// many percentage points.
+pub const SAT_DELTA_PP: f64 = 5.0;
+
+/// `--diff` flags p50/p99 span (service-latency) regressions above
+/// this percentage.
+pub const SPAN_REGRESSION_PCT: f64 = 20.0;
+
 pub fn run_cli(args: &Args) -> Result<()> {
+    if let Some(a) = args.opt("diff") {
+        let b = args
+            .positionals
+            .first()
+            .map(String::as_str)
+            .context("usage: floatsd-lstm report --diff <a.jsonl> <b.jsonl>")?;
+        let ta = std::fs::read_to_string(a).with_context(|| format!("read trace {a}"))?;
+        let tb = std::fs::read_to_string(b).with_context(|| format!("read trace {b}"))?;
+        print!("{}", diff(&ta, &tb).with_context(|| format!("diff traces {a} vs {b}"))?);
+        return Ok(());
+    }
     let path = args
         .positionals
         .first()
         .map(String::as_str)
         .or_else(|| args.opt("trace"))
-        .context("usage: floatsd-lstm report <trace.jsonl>")?;
+        .context("usage: floatsd-lstm report <trace.jsonl> | report --diff <a> <b>")?;
     let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
     print!("{}", summarize(&text).with_context(|| format!("summarize trace {path}"))?);
     Ok(())
 }
+
+/// Which trace schema a stream carries, from its first non-empty line.
+fn detect_schema(text: &str) -> Result<&'static str> {
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).context("trace line 1")?;
+        return match j.get("schema").and_then(Json::as_str) {
+            Some(s) if s == TRACE_SCHEMA => Ok(TRACE_SCHEMA),
+            Some(s) if s == SERVE_TRACE_SCHEMA => Ok(SERVE_TRACE_SCHEMA),
+            other => bail!(
+                "trace line 1: schema {other:?}, expected {TRACE_SCHEMA:?} or {SERVE_TRACE_SCHEMA:?}"
+            ),
+        };
+    }
+    bail!("empty trace")
+}
+
+/// Aggregate a trace into the report text (separated from [`run_cli`]
+/// so tests can pin it without touching stdout). Dispatches on the
+/// schema detected in the stream.
+pub fn summarize(text: &str) -> Result<String> {
+    match detect_schema(text)? {
+        SERVE_TRACE_SCHEMA => Ok(render_serve(&parse_serve(text)?)),
+        _ => Ok(render_train(&parse_train(text)?)),
+    }
+}
+
+/// Side-by-side comparison of two traces of the same schema, flagging
+/// loss-scale drift, saturation deltas, and span regressions.
+pub fn diff(a: &str, b: &str) -> Result<String> {
+    let (sa, sb) = (detect_schema(a)?, detect_schema(b)?);
+    if sa != sb {
+        bail!("cannot diff traces of different schemas ({sa} vs {sb})");
+    }
+    if sa == SERVE_TRACE_SCHEMA {
+        Ok(diff_serve(&parse_serve(a)?, &parse_serve(b)?))
+    } else {
+        Ok(diff_train(&parse_train(a)?, &parse_train(b)?))
+    }
+}
+
+// ---------------------------------------------------------------- train
 
 #[derive(Default)]
 struct GradAgg {
@@ -36,25 +112,42 @@ struct GradAgg {
     max_abs: f64,
 }
 
-/// Aggregate a trace into the report text (separated from [`run_cli`]
-/// so tests can pin it without touching stdout).
-pub fn summarize(text: &str) -> Result<String> {
-    let mut events = 0u64;
-    let mut config: Option<Json> = None;
-    let mut steps = 0u64;
-    let mut applied = 0u64;
-    let mut first_loss: Option<f64> = None;
-    let mut last_loss: Option<f64> = None;
-    let mut backoffs = 0u64;
-    let mut growths = 0u64;
-    let mut scale_min = f64::INFINITY;
-    let mut scale_max = f64::NEG_INFINITY;
-    let mut final_scale: Option<f64> = None;
-    let mut skipped: Option<f64> = None;
-    let mut grads: BTreeMap<String, GradAgg> = BTreeMap::new();
-    let mut weights: Option<Json> = None;
-    let mut acts: Option<Json> = None;
+struct TrainAgg {
+    events: u64,
+    config: Option<Json>,
+    steps: u64,
+    applied: u64,
+    first_loss: Option<f64>,
+    last_loss: Option<f64>,
+    backoffs: u64,
+    growths: u64,
+    scale_min: f64,
+    scale_max: f64,
+    final_scale: Option<f64>,
+    skipped: Option<f64>,
+    grads: BTreeMap<String, GradAgg>,
+    weights: Option<Json>,
+    acts: Option<Json>,
+}
 
+fn parse_train(text: &str) -> Result<TrainAgg> {
+    let mut a = TrainAgg {
+        events: 0,
+        config: None,
+        steps: 0,
+        applied: 0,
+        first_loss: None,
+        last_loss: None,
+        backoffs: 0,
+        growths: 0,
+        scale_min: f64::INFINITY,
+        scale_max: f64::NEG_INFINITY,
+        final_scale: None,
+        skipped: None,
+        grads: BTreeMap::new(),
+        weights: None,
+        acts: None,
+    };
     for (ln, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -64,111 +157,121 @@ pub fn summarize(text: &str) -> Result<String> {
             Some(TRACE_SCHEMA) => {}
             other => bail!("trace line {}: schema {other:?}, expected {TRACE_SCHEMA:?}", ln + 1),
         }
-        events += 1;
+        a.events += 1;
         let ev = j
             .get("ev")
             .and_then(Json::as_str)
             .with_context(|| format!("trace line {}: missing ev", ln + 1))?;
         let num = |key: &str| j.get(key).and_then(Json::as_f64);
         match ev {
-            "run_start" => config = j.get("config").cloned(),
+            "run_start" => a.config = j.get("config").cloned(),
             "step" => {
-                steps += 1;
+                a.steps += 1;
                 if j.get("applied").and_then(Json::as_bool) == Some(true) {
-                    applied += 1;
+                    a.applied += 1;
                 }
                 if let Some(l) = num("loss") {
-                    first_loss.get_or_insert(l);
-                    last_loss = Some(l);
+                    a.first_loss.get_or_insert(l);
+                    a.last_loss = Some(l);
                 }
                 if let Some(s) = num("scale") {
-                    scale_min = scale_min.min(s);
-                    scale_max = scale_max.max(s);
-                    final_scale = Some(s);
+                    a.scale_min = a.scale_min.min(s);
+                    a.scale_max = a.scale_max.max(s);
+                    a.final_scale = Some(s);
                 }
                 if let Some(g) = j.get("grads").and_then(Json::as_obj) {
                     for (name, t) in g {
-                        let a = grads.entry(name.clone()).or_default();
+                        let agg = a.grads.entry(name.clone()).or_default();
                         let field =
                             |k: &str| t.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
-                        a.steps += 1;
-                        a.total += field("total");
-                        a.zeros += field("fp8_zero");
-                        a.top += field("fp8_top_binade");
-                        a.non_finite += field("non_finite");
+                        agg.steps += 1;
+                        agg.total += field("total");
+                        agg.zeros += field("fp8_zero");
+                        agg.top += field("fp8_top_binade");
+                        agg.non_finite += field("non_finite");
                         if let Some(m) = t.get("max_abs").and_then(Json::as_f64) {
-                            a.max_abs = a.max_abs.max(m);
+                            agg.max_abs = agg.max_abs.max(m);
                         }
                     }
                 }
-                if let Some(a) = j.get("acts") {
-                    acts = Some(a.clone());
+                if let Some(ac) = j.get("acts") {
+                    a.acts = Some(ac.clone());
                 }
             }
             "loss_scale" => {
                 match j.get("cause").and_then(Json::as_str) {
-                    Some("backoff") => backoffs += 1,
-                    Some("growth") => growths += 1,
+                    Some("backoff") => a.backoffs += 1,
+                    Some("growth") => a.growths += 1,
                     _ => {}
                 }
                 if let Some(to) = num("to") {
-                    scale_min = scale_min.min(to);
-                    scale_max = scale_max.max(to);
-                    final_scale = Some(to);
+                    a.scale_min = a.scale_min.min(to);
+                    a.scale_max = a.scale_max.max(to);
+                    a.final_scale = Some(to);
                 }
             }
             "reencode" | "run_end" => {
                 if let Some(w) = j.get("weights") {
-                    weights = Some(w.clone());
+                    a.weights = Some(w.clone());
                 }
-                if let Some(a) = j.get("acts") {
-                    acts = Some(a.clone());
+                if let Some(ac) = j.get("acts") {
+                    a.acts = Some(ac.clone());
                 }
                 if ev == "run_end" {
                     if let Some(s) = num("final_scale") {
-                        final_scale = Some(s);
+                        a.final_scale = Some(s);
                     }
-                    skipped = num("skipped");
+                    a.skipped = num("skipped");
                 }
             }
             _ => {}
         }
     }
-    if events == 0 {
+    if a.events == 0 {
         bail!("empty trace");
     }
+    Ok(a)
+}
 
-    let pct = |n: u64, d: u64| if d == 0 { 0.0 } else { 100.0 * n as f64 / d as f64 };
+fn pct(n: u64, d: u64) -> f64 {
+    if d == 0 {
+        0.0
+    } else {
+        100.0 * n as f64 / d as f64
+    }
+}
+
+fn render_train(a: &TrainAgg) -> String {
     let mut out = String::new();
-    let _ = writeln!(out, "trace: {TRACE_SCHEMA}, {events} events");
-    if let Some(cfg) = &config {
+    let _ = writeln!(out, "trace: {TRACE_SCHEMA}, {} events", a.events);
+    if let Some(cfg) = &a.config {
         let _ = writeln!(out, "config: {cfg}");
     }
-    let skipped = skipped.unwrap_or((steps - applied) as f64);
-    let _ = write!(out, "steps: {steps} ({applied} applied, {skipped} skipped)");
-    if let (Some(a), Some(b)) = (first_loss, last_loss) {
-        let _ = write!(out, " | loss {a:.4} -> {b:.4}");
+    let skipped = a.skipped.unwrap_or((a.steps - a.applied) as f64);
+    let _ = write!(out, "steps: {} ({} applied, {skipped} skipped)", a.steps, a.applied);
+    if let (Some(first), Some(last)) = (a.first_loss, a.last_loss) {
+        let _ = write!(out, " | loss {first:.4} -> {last:.4}");
     }
     out.push('\n');
-    let _ = write!(out, "loss scale: {backoffs} backoffs, {growths} growths");
-    if let Some(s) = final_scale {
-        let _ = write!(out, " | final {s} (min {scale_min}, max {scale_max})");
+    let _ = write!(out, "loss scale: {} backoffs, {} growths", a.backoffs, a.growths);
+    if let Some(s) = a.final_scale {
+        let _ = write!(out, " | final {s} (min {}, max {})", a.scale_min, a.scale_max);
     }
     out.push('\n');
-    if !grads.is_empty() {
-        let _ = writeln!(out, "fp8 gradient saturation (over {steps} steps):");
-        for (name, a) in &grads {
+    if !a.grads.is_empty() {
+        let _ = writeln!(out, "fp8 gradient saturation (over {} steps):", a.steps);
+        for (name, g) in &a.grads {
             let _ = writeln!(
                 out,
                 "  {name:<12} zero {:6.2}%  top-binade {:6.2}%  non-finite {:6.2}%  max|g| {:.4}",
-                pct(a.zeros, a.total),
-                pct(a.top, a.total),
-                pct(a.non_finite, a.total),
-                a.max_abs
+                pct(g.zeros, g.total),
+                pct(g.top, g.total),
+                pct(g.non_finite, g.total),
+                g.max_abs
             );
         }
     }
-    if let Some(Json::Obj(ws)) = &weights {
+    if let Some(Json::Obj(ws)) = &a.weights {
         let _ = writeln!(out, "floatsd8 weight saturation (final re-encode):");
         for (name, t) in ws {
             let total = t.get("total").and_then(Json::as_f64).unwrap_or(0.0) as u64;
@@ -176,7 +279,7 @@ pub fn summarize(text: &str) -> Result<String> {
             let hist: Vec<String> = t
                 .get("exp_hist")
                 .and_then(Json::as_arr)
-                .map(|a| a.iter().map(|v| v.to_string()).collect())
+                .map(|arr| arr.iter().map(|v| v.to_string()).collect())
                 .unwrap_or_default();
             let _ = writeln!(
                 out,
@@ -186,9 +289,9 @@ pub fn summarize(text: &str) -> Result<String> {
             );
         }
     }
-    if let Some(a) = &acts {
+    if let Some(acts) = &a.acts {
         let one = |key: &str| -> Option<String> {
-            let s = a.get(key)?;
+            let s = acts.get(key)?;
             let f = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let (evals, lo, hi) = (f("evals"), f("clip_lo"), f("clip_hi"));
             Some(format!(
@@ -197,13 +300,324 @@ pub fn summarize(text: &str) -> Result<String> {
                 pct(hi, evals)
             ))
         };
-        let parts: Vec<String> =
-            ["sigmoid", "tanh"].iter().filter_map(|k| one(k)).collect();
+        let parts: Vec<String> = ["sigmoid", "tanh"].iter().filter_map(|k| one(k)).collect();
         if !parts.is_empty() {
             let _ = writeln!(out, "activation clips: {}", parts.join("; "));
         }
     }
-    Ok(out)
+    out
+}
+
+fn diff_train(a: &TrainAgg, b: &TrainAgg) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "diff ({TRACE_SCHEMA}): a={} events, b={} events", a.events, b.events);
+    let _ = writeln!(
+        out,
+        "steps: {} -> {} (applied {} -> {})",
+        a.steps, b.steps, a.applied, b.applied
+    );
+    if let (Some(la), Some(lb)) = (a.last_loss, b.last_loss) {
+        let _ = writeln!(out, "final loss: {la:.4} -> {lb:.4} ({:+.4})", lb - la);
+    }
+    let drift = a.backoffs != b.backoffs || a.growths != b.growths;
+    let _ = writeln!(
+        out,
+        "loss-scale events: backoffs {} -> {}, growths {} -> {}{}",
+        a.backoffs,
+        b.backoffs,
+        a.growths,
+        b.growths,
+        if drift { "  [FLAG: loss-scale event-count drift]" } else { "" }
+    );
+    if !a.grads.is_empty() || !b.grads.is_empty() {
+        let _ = writeln!(out, "fp8 gradient saturation deltas (percentage points):");
+        let names: std::collections::BTreeSet<&String> =
+            a.grads.keys().chain(b.grads.keys()).collect();
+        for name in names {
+            let empty = GradAgg::default();
+            let ga = a.grads.get(name).unwrap_or(&empty);
+            let gb = b.grads.get(name).unwrap_or(&empty);
+            let dz = pct(gb.zeros, gb.total) - pct(ga.zeros, ga.total);
+            let dt = pct(gb.top, gb.total) - pct(ga.top, ga.total);
+            let flag = dz.abs() > SAT_DELTA_PP || dt.abs() > SAT_DELTA_PP;
+            let _ = writeln!(
+                out,
+                "  {name:<12} zero {dz:+6.2}pp  top-binade {dt:+6.2}pp{}",
+                if flag {
+                    format!("  [FLAG: saturation delta > {SAT_DELTA_PP}pp]")
+                } else {
+                    String::new()
+                }
+            );
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- serve
+
+struct ServeAgg {
+    events: u64,
+    start: Option<Json>,
+    end: Option<Json>,
+    ev_counts: BTreeMap<String, u64>,
+    kind_requests: BTreeMap<String, u64>,
+    kind_work: BTreeMap<String, u64>,
+    batches: u64,
+    batch_requests: u64,
+    queue_depth_max: u64,
+    queue_high_water: u64,
+    sessions_max: u64,
+    opens: u64,
+    closes: u64,
+    rejects: BTreeMap<String, u64>,
+    /// per-request spans, trace order (wall clock — marked timing data)
+    queue_wait_us: Vec<f64>,
+    service_us: Vec<f64>,
+}
+
+fn parse_serve(text: &str) -> Result<ServeAgg> {
+    let mut a = ServeAgg {
+        events: 0,
+        start: None,
+        end: None,
+        ev_counts: BTreeMap::new(),
+        kind_requests: BTreeMap::new(),
+        kind_work: BTreeMap::new(),
+        batches: 0,
+        batch_requests: 0,
+        queue_depth_max: 0,
+        queue_high_water: 0,
+        sessions_max: 0,
+        opens: 0,
+        closes: 0,
+        rejects: BTreeMap::new(),
+        queue_wait_us: Vec::new(),
+        service_us: Vec::new(),
+    };
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("trace line {}", ln + 1))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some(SERVE_TRACE_SCHEMA) => {}
+            other => bail!(
+                "trace line {}: schema {other:?}, expected {SERVE_TRACE_SCHEMA:?}",
+                ln + 1
+            ),
+        }
+        a.events += 1;
+        let ev = j
+            .get("ev")
+            .and_then(Json::as_str)
+            .with_context(|| format!("trace line {}: missing ev", ln + 1))?;
+        *a.ev_counts.entry(ev.to_string()).or_default() += 1;
+        let unum = |key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        match ev {
+            "serve_start" => a.start = Some(j.clone()),
+            "serve_end" => a.end = Some(j.clone()),
+            "session_open" => a.opens += 1,
+            "session_close" => a.closes += 1,
+            "reject" => {
+                let reason = j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("(unspecified)")
+                    .to_string();
+                *a.rejects.entry(reason).or_default() += 1;
+            }
+            "batch" => {
+                a.batches += 1;
+                a.batch_requests += unum("requests");
+                a.queue_depth_max = a.queue_depth_max.max(unum("queue_depth"));
+                a.queue_high_water = a.queue_high_water.max(unum("queue_high_water"));
+                a.sessions_max = a.sessions_max.max(unum("sessions"));
+            }
+            "request" => {
+                let kind =
+                    j.get("kind").and_then(Json::as_str).unwrap_or("(unknown)").to_string();
+                *a.kind_requests.entry(kind.clone()).or_default() += 1;
+                *a.kind_work.entry(kind).or_default() += unum("work");
+                if let Some(t) = j.get("timing") {
+                    if let Some(w) = t.get("queue_wait_us").and_then(Json::as_f64) {
+                        a.queue_wait_us.push(w);
+                    }
+                    if let Some(s) = t.get("service_us").and_then(Json::as_f64) {
+                        a.service_us.push(s);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if a.events == 0 {
+        bail!("empty trace");
+    }
+    Ok(a)
+}
+
+/// Nearest-rank percentile of an unsorted sample set (sorts a copy).
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+fn render_serve(a: &ServeAgg) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "trace: {SERVE_TRACE_SCHEMA}, {} events", a.events);
+    if let Some(s) = &a.start {
+        let field = |k: &str| {
+            s.get(k)
+                .map(|v| match v {
+                    Json::Str(st) => st.clone(),
+                    other => other.to_string(),
+                })
+                .unwrap_or_else(|| "?".to_string())
+        };
+        let _ = writeln!(
+            out,
+            "serve: task={} workers={} max_batch={} window_us={} kernel_tier={}",
+            field("task"),
+            field("workers"),
+            field("max_batch"),
+            field("window_us"),
+            field("kernel_tier")
+        );
+    }
+    let counts: Vec<String> =
+        a.ev_counts.iter().map(|(ev, n)| format!("{ev} {n}")).collect();
+    let _ = writeln!(out, "events: {}", counts.join(", "));
+    let total_rejects: u64 = a.rejects.values().sum();
+    let _ = writeln!(
+        out,
+        "sessions: {} opened, {} closed, {} rejected requests",
+        a.opens, a.closes, total_rejects
+    );
+    for (reason, n) in &a.rejects {
+        let _ = writeln!(out, "  reject x{n}: {reason}");
+    }
+    let occ = if a.batches == 0 { 0.0 } else { a.batch_requests as f64 / a.batches as f64 };
+    let _ = writeln!(
+        out,
+        "batches: {} (mean occupancy {occ:.2}) | queue depth max {} high-water {} | live sessions max {}",
+        a.batches, a.queue_depth_max, a.queue_high_water, a.sessions_max
+    );
+    if !a.kind_requests.is_empty() {
+        let _ = writeln!(out, "per-kind requests:");
+        for (kind, n) in &a.kind_requests {
+            let work = a.kind_work.get(kind).copied().unwrap_or(0);
+            let _ = writeln!(out, "  {kind:<9} {n:>8} requests  {work:>10} work units");
+        }
+    }
+    if !a.service_us.is_empty() {
+        let _ = writeln!(
+            out,
+            "spans: service p50 {:.0} us, p99 {:.0} us | queue-wait p50 {:.0} us, p99 {:.0} us",
+            percentile(&a.service_us, 0.50),
+            percentile(&a.service_us, 0.99),
+            percentile(&a.queue_wait_us, 0.50),
+            percentile(&a.queue_wait_us, 0.99)
+        );
+    }
+    if let Some(end) = &a.end {
+        let unum = |k: &str| end.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "totals: {} tokens / {} requests / {} batches (queue high-water {})",
+            unum("tokens"),
+            unum("requests"),
+            unum("batches"),
+            unum("queue_high_water")
+        );
+        if let Some(profile) = end.get("kernel_profile").and_then(Json::as_arr) {
+            if !profile.is_empty() {
+                let _ = writeln!(out, "kernel profile (per shape class):");
+                for row in profile {
+                    let s = |k: &str| row.get(k).and_then(Json::as_str).unwrap_or("?");
+                    let n = |k: &str| row.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    let t = |k: &str| {
+                        row.get("timing").and_then(|t| t.get(k)).and_then(Json::as_f64)
+                    };
+                    let _ = writeln!(
+                        out,
+                        "  {:<6} {:<9} {}x{} b{}: {} calls, {:.3} ms total, {:.1} us mean",
+                        s("op"),
+                        s("tier"),
+                        n("rows"),
+                        n("cols"),
+                        n("batch"),
+                        n("calls"),
+                        t("total_ms").unwrap_or(0.0),
+                        t("mean_us").unwrap_or(0.0)
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+fn diff_serve(a: &ServeAgg, b: &ServeAgg) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "diff ({SERVE_TRACE_SCHEMA}): a={} events, b={} events",
+        a.events, b.events
+    );
+    let end_num = |agg: &ServeAgg, k: &str| {
+        agg.end.as_ref().and_then(|e| e.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let _ = writeln!(
+        out,
+        "totals: tokens {} -> {}, requests {} -> {}, batches {} -> {}",
+        end_num(a, "tokens"),
+        end_num(b, "tokens"),
+        end_num(a, "requests"),
+        end_num(b, "requests"),
+        a.batches,
+        b.batches
+    );
+    let (ra, rb): (u64, u64) = (a.rejects.values().sum(), b.rejects.values().sum());
+    let _ = writeln!(
+        out,
+        "rejects: {ra} -> {rb} | queue high-water {} -> {} | sessions opened {} -> {}",
+        a.queue_high_water, b.queue_high_water, a.opens, b.opens
+    );
+    let names: std::collections::BTreeSet<&String> =
+        a.kind_requests.keys().chain(b.kind_requests.keys()).collect();
+    for kind in names {
+        let (na, nb) = (
+            a.kind_requests.get(kind).copied().unwrap_or(0),
+            b.kind_requests.get(kind).copied().unwrap_or(0),
+        );
+        if na != nb {
+            let _ = writeln!(out, "  {kind}: {na} -> {nb} requests  [FLAG: request-count drift]");
+        }
+    }
+    for (label, q) in [("p50", 0.50), ("p99", 0.99)] {
+        let (va, vb) = (percentile(&a.service_us, q), percentile(&b.service_us, q));
+        if va <= 0.0 && vb <= 0.0 {
+            continue;
+        }
+        let change = if va > 0.0 { 100.0 * (vb - va) / va } else { f64::INFINITY };
+        let flag = change > SPAN_REGRESSION_PCT;
+        let _ = writeln!(
+            out,
+            "service {label}: {va:.0} us -> {vb:.0} us ({change:+.1}%){}",
+            if flag {
+                format!("  [FLAG: span regression > {SPAN_REGRESSION_PCT}%]")
+            } else {
+                String::new()
+            }
+        );
+    }
+    out
 }
 
 #[cfg(test)]
@@ -212,6 +626,49 @@ mod tests {
 
     fn line(s: &str) -> String {
         format!("{{\"schema\":\"{TRACE_SCHEMA}\",{s}}}\n")
+    }
+
+    fn sline(s: &str) -> String {
+        format!("{{\"schema\":\"{SERVE_TRACE_SCHEMA}\",{s}}}\n")
+    }
+
+    fn train_trace(backoffs: u64, zero_sat: u64) -> String {
+        let mut t = String::new();
+        t.push_str(&line(r#""ev":"run_start","step":0,"config":{"task":"lm","seed":"7"}"#));
+        t.push_str(&line(&format!(
+            r#""ev":"step","step":1,"loss":2.5,"scale":1024,"applied":true,"grads":{{"emb":{{"total":100,"fp8_zero":{zero_sat},"fp8_top_binade":1,"non_finite":0,"max_abs":9.5}}}}"#
+        )));
+        for i in 0..backoffs {
+            t.push_str(&line(&format!(
+                r#""ev":"loss_scale","step":1,"cause":"backoff","from":{},"to":{}"#,
+                1024 >> i,
+                512 >> i
+            )));
+        }
+        t.push_str(&line(r#""ev":"run_end","step":1,"final_scale":512,"applied":1,"skipped":0"#));
+        t
+    }
+
+    fn serve_trace(service_us: f64) -> String {
+        let mut t = String::new();
+        t.push_str(&sline(
+            r#""ev":"serve_start","task":"lm","workers":1,"max_batch":4,"window_us":50,"kernel_tier":"decoded","vocab":32,"n_out":32"#,
+        ));
+        t.push_str(&sline(r#""ev":"session_open","shard":0,"session":1"#));
+        t.push_str(&sline(&format!(
+            r#""ev":"request","shard":0,"batch":0,"session":1,"kind":"step","work":1,"occupancy":1,"timing":{{"queue_wait_us":10,"service_us":{service_us}}}"#
+        )));
+        t.push_str(&sline(
+            r#""ev":"batch","shard":0,"batch":0,"requests":1,"work":1,"closes":0,"kinds":{"step":1},"queue_depth":2,"queue_high_water":3,"sessions":1,"timing":{"batch_ms":0.2}"#,
+        ));
+        t.push_str(&sline(
+            r#""ev":"reject","shard":0,"session":9,"kind":"step","reason":"token 99 out of vocab""#,
+        ));
+        t.push_str(&sline(r#""ev":"session_close","shard":0,"session":1,"existed":true"#));
+        t.push_str(&sline(
+            r#""ev":"serve_end","tokens":1,"requests":1,"batches":1,"sessions":0,"queue_high_water":3,"kernel_tier":"decoded","kernel_profile":[{"op":"matvec","tier":"decoded","rows":12,"cols":8,"batch":1,"calls":4,"timing":{"total_ms":0.004,"mean_us":1.0}}],"timing":{"p50_us":40,"p99_us":40}"#,
+        ));
+        t
     }
 
     #[test]
@@ -245,5 +702,42 @@ mod tests {
     fn summarize_rejects_foreign_schemas() {
         assert!(summarize("{\"schema\":\"other-v9\",\"ev\":\"step\"}\n").is_err());
         assert!(summarize("").is_err());
+    }
+
+    #[test]
+    fn summarize_auto_detects_the_serve_schema() {
+        let s = summarize(&serve_trace(40.0)).unwrap();
+        assert!(s.contains(SERVE_TRACE_SCHEMA), "{s}");
+        assert!(s.contains("task=lm") && s.contains("kernel_tier=decoded"), "{s}");
+        assert!(s.contains("1 opened, 1 closed, 1 rejected"), "{s}");
+        assert!(s.contains("token 99 out of vocab"), "{s}");
+        assert!(s.contains("queue depth max 2 high-water 3"), "{s}");
+        assert!(s.contains("step") && s.contains("1 requests"), "{s}");
+        assert!(s.contains("service p50 40 us"), "{s}");
+        assert!(s.contains("matvec") && s.contains("12x8 b1"), "{s}");
+        // a train line inside a serve stream is a hard error, not a skip
+        let mixed = serve_trace(40.0) + &line(r#""ev":"step","step":1"#);
+        assert!(summarize(&mixed).is_err(), "mixed schemas must be rejected");
+    }
+
+    #[test]
+    fn diff_flags_loss_scale_drift_and_saturation_deltas() {
+        let d = diff(&train_trace(1, 4), &train_trace(3, 40)).unwrap();
+        assert!(d.contains("backoffs 1 -> 3"), "{d}");
+        assert!(d.contains("loss-scale event-count drift"), "{d}");
+        assert!(d.contains("saturation delta > 5pp"), "{d}");
+        // identical traces raise no flags
+        let clean = diff(&train_trace(2, 4), &train_trace(2, 4)).unwrap();
+        assert!(!clean.contains("[FLAG"), "{clean}");
+    }
+
+    #[test]
+    fn diff_flags_span_regressions_above_threshold() {
+        let d = diff(&serve_trace(100.0), &serve_trace(150.0)).unwrap();
+        assert!(d.contains("span regression > 20%"), "{d}");
+        let ok = diff(&serve_trace(100.0), &serve_trace(110.0)).unwrap();
+        assert!(!ok.contains("[FLAG"), "{ok}");
+        // schema mismatch is an error, not a garbage report
+        assert!(diff(&serve_trace(100.0), &train_trace(1, 4)).is_err());
     }
 }

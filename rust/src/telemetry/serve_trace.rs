@@ -1,0 +1,218 @@
+//! The serve-side `--trace <path>` JSONL event stream (schema
+//! `floatsd-serve-trace-v1`): request-lifecycle spans, batch-boundary
+//! gauges, session-lifecycle events, and the kernel-tier profile,
+//! appended by the scheduler/worker pool while serving.
+//!
+//! ## Schema
+//!
+//! Every line carries `"schema"` and `"ev"`; per-shard events also
+//! carry `"shard"`. Event kinds:
+//!
+//! * `serve_start` — server-scoped config: `"task"`, `"workers"`,
+//!   `"max_batch"`, `"window_us"`, `"kernel_tier"`, `"vocab"`,
+//!   `"n_out"`;
+//! * `session_open` — a request created session state on its shard:
+//!   `"session"`;
+//! * `session_close` — a close drained at a batch boundary:
+//!   `"session"`, `"existed"`;
+//! * `reject` — an invalid request bounced (at submit or in-worker):
+//!   `"session"`, `"kind"`, `"reason"`;
+//! * `batch` — one formed micro-batch: `"batch"` (per-shard ordinal),
+//!   `"requests"`, `"work"`, `"kinds"` (per-kind request counts),
+//!   `"queue_depth"` (scheduler queue sampled at the batch boundary),
+//!   `"queue_high_water"`, `"sessions"` (live after processing), and
+//!   a `"timing"` block with the batch service span;
+//! * `request` — one request's lifecycle span: `"batch"`, `"session"`,
+//!   `"kind"`, `"work"`, `"occupancy"` (requests sharing its batch),
+//!   and a `"timing"` block attributing `queue_wait_us` (enqueue →
+//!   batch formation) and `service_us` (enqueue → reply ready);
+//! * `serve_end` — run totals (`"tokens"`, `"requests"`, `"batches"`,
+//!   `"queue_high_water"`) plus `"kernel_profile"`: per-tier
+//!   decoded-vs-shiftadd wall time per matvec/matmul shape class,
+//!   accumulated since the sink opened the gate (see
+//!   [`super::note_kernel`]).
+//!
+//! ## Determinism
+//!
+//! Enabling the sink never perturbs a served logit, decode token, or
+//! stats counter (pinned by `tests/serve_trace.rs`). Non-`"timing"`
+//! fields are deterministic functions of the *realized* per-shard
+//! request schedule: a sequential driver on one worker reproduces the
+//! stream byte-identically once `"timing"` fields are stripped, while
+//! concurrent load produces valid but schedule-dependent interleaving
+//! (each line is still written atomically under the sink mutex).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::tensorfile::json::Json;
+
+use super::{kernel_profile, kernel_profile_since, KernelProfileRow};
+
+/// Schema tag carried by every serve-trace line.
+pub const SERVE_TRACE_SCHEMA: &str = "floatsd-serve-trace-v1";
+
+struct Inner {
+    out: BufWriter<File>,
+    deferred: Option<std::io::Error>,
+}
+
+/// An append-only JSONL serve-trace writer, shared across worker
+/// shards behind an `Arc`. Creating one opens the process-wide
+/// telemetry gate ([`super::hot_enabled`]) — which also arms the
+/// kernel profiling hooks — and captures a kernel-profile baseline so
+/// [`Self::kernel_profile`] reports only spans from this serve run.
+/// Dropping it closes the gate and flushes.
+///
+/// Writes are best-effort: mid-run IO errors are deferred (serving
+/// never aborts a batch over a full disk) and surfaced by
+/// [`Self::finish`].
+pub struct ServeTraceSink {
+    inner: Mutex<Inner>,
+    path: PathBuf,
+    kernel_base: Vec<KernelProfileRow>,
+}
+
+impl ServeTraceSink {
+    pub fn create(path: &Path) -> Result<ServeTraceSink> {
+        let file = File::create(path)
+            .with_context(|| format!("create serve trace file {}", path.display()))?;
+        // baseline before the gate opens: spans recorded by an earlier
+        // in-process sink (or another run) are excluded from this run
+        let kernel_base = kernel_profile();
+        super::sink_opened();
+        Ok(ServeTraceSink {
+            inner: Mutex::new(Inner { out: BufWriter::new(file), deferred: None }),
+            path: path.to_path_buf(),
+            kernel_base,
+        })
+    }
+
+    /// Append one event line; `fields` gains the common
+    /// `schema`/`ev` keys (serialized in BTreeMap key order, so lines
+    /// are byte-deterministic) and is written atomically under the
+    /// sink mutex — shards never interleave partial lines.
+    pub fn emit(&self, ev: &str, mut fields: BTreeMap<String, Json>) {
+        fields.insert("schema".to_string(), Json::Str(SERVE_TRACE_SCHEMA.to_string()));
+        fields.insert("ev".to_string(), Json::Str(ev.to_string()));
+        let mut inner = self.inner.lock().unwrap();
+        if inner.deferred.is_none() {
+            if let Err(e) = writeln!(inner.out, "{}", Json::Obj(fields)) {
+                inner.deferred = Some(e);
+            }
+        }
+    }
+
+    /// Kernel-tier profile accumulated since this sink opened the gate.
+    pub fn kernel_profile(&self) -> Vec<KernelProfileRow> {
+        kernel_profile_since(&self.kernel_base)
+    }
+
+    /// Flush and surface any deferred write error.
+    pub fn finish(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.deferred.take() {
+            return Err(e).with_context(|| format!("write serve trace {}", self.path.display()));
+        }
+        inner.out.flush().with_context(|| format!("flush serve trace {}", self.path.display()))
+    }
+}
+
+impl Drop for ServeTraceSink {
+    fn drop(&mut self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.out.flush();
+        }
+        super::sink_closed();
+    }
+}
+
+/// `u64` counter → JSON (exact for every count that fits an f64
+/// mantissa — far beyond any realistic event total).
+pub fn unum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Kernel-profile block: one row per `(op, tier, rows, cols, batch)`
+/// shape class. `calls` and the shape labels are deterministic for a
+/// fixed schedule; the accumulated wall time lives under `"timing"`.
+pub fn kernel_profile_json(rows: &[KernelProfileRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("op".to_string(), Json::Str(r.op.to_string()));
+                m.insert("tier".to_string(), Json::Str(r.tier.to_string()));
+                m.insert("rows".to_string(), unum(r.rows));
+                m.insert("cols".to_string(), unum(r.cols));
+                m.insert("batch".to_string(), unum(r.batch));
+                m.insert("calls".to_string(), unum(r.calls));
+                let mut t = BTreeMap::new();
+                t.insert("total_ms".to_string(), super::trace::fnum(r.nanos as f64 / 1e6));
+                t.insert(
+                    "mean_us".to_string(),
+                    super::trace::fnum(r.nanos as f64 / 1e3 / (r.calls.max(1)) as f64),
+                );
+                m.insert("timing".to_string(), Json::Obj(t));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_trace_lines_are_tagged_and_thread_safe_to_emit() {
+        let dir = std::env::temp_dir().join("fsd_serve_trace_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.jsonl");
+        {
+            let sink = std::sync::Arc::new(ServeTraceSink::create(&path).unwrap());
+            assert!(super::super::hot_enabled(), "open sink must enable the gate");
+            let mut fields = BTreeMap::new();
+            fields.insert("shard".to_string(), unum(0));
+            fields.insert("requests".to_string(), unum(3));
+            sink.emit("batch", fields);
+            // emit takes &self — shards share the sink through the Arc
+            let s2 = sink.clone();
+            std::thread::spawn(move || s2.emit("serve_end", BTreeMap::new()))
+                .join()
+                .unwrap();
+            sink.finish().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SERVE_TRACE_SCHEMA));
+        assert_eq!(j.get("ev").unwrap().as_str(), Some("batch"));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn kernel_profile_json_confines_wall_clock_to_timing() {
+        let rows = [KernelProfileRow {
+            op: "matvec",
+            tier: "shiftadd",
+            rows: 192,
+            cols: 64,
+            batch: 4,
+            calls: 10,
+            nanos: 5_000,
+        }];
+        let j = kernel_profile_json(&rows);
+        let r = &j.as_arr().unwrap()[0];
+        assert_eq!(r.get("tier").unwrap().as_str(), Some("shiftadd"));
+        assert_eq!(r.get("calls").unwrap().as_usize(), Some(10));
+        assert_eq!(r.get("timing").unwrap().get("total_ms").unwrap().as_f64(), Some(0.005));
+        assert!(r.get("nanos").is_none(), "raw nanos never leave the timing block");
+    }
+}

@@ -1,0 +1,431 @@
+//! The serve-trace determinism contract, pinned end to end: attaching
+//! a [`ServeTraceSink`] to a server must never perturb a served
+//! logit, decode token, or stats counter — for any of the four task
+//! heads. The `floatsd-serve-trace-v1` stream itself is validated
+//! record kind by record kind, and a fixed sequential schedule on one
+//! worker reproduces the stream byte-identically once the clearly
+//! marked `"timing"` fields (and the wall-clock kernel profile) are
+//! stripped. The eval-side counterpart: `build_report` emits the same
+//! report bytes with and without a `--trace` sink attached.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use floatsd_lstm::lstm::synthetic_stack;
+use floatsd_lstm::serve::{DecodeParams, Payload, ServeConfig, ServeModel, Server};
+use floatsd_lstm::tasks::TaskKind;
+use floatsd_lstm::telemetry::{ServeTraceSink, TraceSink, SERVE_TRACE_SCHEMA, TRACE_SCHEMA};
+use floatsd_lstm::tensorfile::json::Json;
+
+const RECV: Duration = Duration::from_secs(30);
+
+fn test_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("fsd_serve_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_cfg(workers: usize) -> ServeConfig {
+    ServeConfig { workers, max_batch: 4, batch_window: Duration::from_micros(50) }
+}
+
+/// Miniature synthetic models, one per task head (the same shapes the
+/// serve demo tests use — no checkpoint needed).
+fn model_for(kind: TaskKind) -> Arc<ServeModel> {
+    let m = match kind {
+        TaskKind::Lm => ServeModel::lm(Arc::new(synthetic_stack(32, 8, 12, 1, 32, 41))),
+        TaskKind::Pos => ServeModel::from_parts(
+            TaskKind::Pos,
+            Arc::new(synthetic_stack(60, 8, 10, 1, 6, 42)),
+            None,
+            None,
+        ),
+        TaskKind::Nli => ServeModel::from_parts(
+            TaskKind::Nli,
+            Arc::new(synthetic_stack(24, 8, 10, 1, 3, 43)),
+            None,
+            None,
+        ),
+        TaskKind::Mt => ServeModel::from_parts(
+            TaskKind::Mt,
+            Arc::new(synthetic_stack(20, 6, 12, 1, 1, 44)),
+            Some(Arc::new(synthetic_stack(20, 6, 12, 1, 20, 45))),
+            None,
+        ),
+    };
+    Arc::new(m.expect("synthetic serve model"))
+}
+
+fn push_logits(bits: &mut Vec<u64>, lg: &[f32]) {
+    bits.extend(lg.iter().map(|v| v.to_bits() as u64));
+}
+
+/// Drive a fixed, fully sequential load (one request in flight at a
+/// time, every reply received before the next submit) and fold every
+/// numeric output — logits, argmaxes, decode tokens, scores — into
+/// one bit vector. Sequential driving makes the realized schedule,
+/// and therefore every non-timing trace field, deterministic.
+fn drive(model: &ServeModel, server: &Server) -> Vec<u64> {
+    let vocab = model.input_vocab();
+    let mut bits = Vec::new();
+    let (tx, rx) = mpsc::channel();
+    let recv = || rx.recv_timeout(RECV).expect("serve reply");
+    match model.task {
+        TaskKind::Lm => {
+            for s in 0..3u64 {
+                for t in 0..6usize {
+                    server.submit(s, (s as usize * 7 + t * 3) % vocab, tx.clone()).unwrap();
+                    let r = recv();
+                    push_logits(&mut bits, r.logits().expect("step logits"));
+                    bits.push(r.top_token().unwrap() as u64);
+                }
+            }
+        }
+        TaskKind::Pos => {
+            for s in 0..3u64 {
+                let toks: Vec<usize> =
+                    (0..5).map(|t| (s as usize * 11 + t * 5) % vocab).collect();
+                server.submit_sequence(s, toks, tx.clone()).unwrap();
+                match recv().payload {
+                    Payload::Steps { logits } => {
+                        for row in &logits {
+                            push_logits(&mut bits, row);
+                        }
+                    }
+                    _ => panic!("pos sequence reply must carry per-step tag scores"),
+                }
+            }
+        }
+        TaskKind::Nli => {
+            for s in 0..3u64 {
+                let toks: Vec<usize> =
+                    (0..6).map(|t| (s as usize * 5 + t * 3) % vocab).collect();
+                server.submit_sequence(s, toks, tx.clone()).unwrap();
+                let r = recv();
+                push_logits(&mut bits, r.logits().expect("prefill logits"));
+                server.finalize(s, tx.clone()).unwrap();
+                match recv().payload {
+                    Payload::Class { logits, label } => {
+                        push_logits(&mut bits, &logits);
+                        bits.push(label as u64);
+                    }
+                    _ => panic!("nli finalize reply must carry a classification"),
+                }
+            }
+        }
+        TaskKind::Mt => {
+            for s in 0..2u64 {
+                let toks: Vec<usize> =
+                    (0..4).map(|t| (s as usize * 3 + t * 5 + 1) % vocab).collect();
+                server.submit_sequence(s, toks, tx.clone()).unwrap();
+                match recv().payload {
+                    Payload::Encoded { consumed } => bits.push(consumed as u64),
+                    _ => panic!("mt sequence reply must be an encoder ack"),
+                }
+                for (beam, alpha) in [(1usize, 0.0f32), (3, 0.5)] {
+                    let p = DecodeParams { max_len: 8, beam_width: beam, len_norm: alpha };
+                    server.decode(s, p, tx.clone()).unwrap();
+                    match recv().payload {
+                        Payload::Decoded { tokens, score } => {
+                            bits.extend(tokens.iter().map(|&t| t as u64));
+                            bits.push(score.to_bits() as u64);
+                        }
+                        _ => panic!("mt decode reply must carry tokens"),
+                    }
+                }
+            }
+        }
+    }
+    bits
+}
+
+#[test]
+fn tracing_never_perturbs_served_replies_for_any_task_head() {
+    let dir = test_dir();
+    for kind in TaskKind::ALL {
+        let model = model_for(kind);
+        let server = Server::start(model.clone(), tiny_cfg(2)).unwrap();
+        let base = drive(&model, &server);
+        let off = server.stats();
+        server.shutdown();
+        assert!(!base.is_empty(), "{}: load produced no outputs", kind.name());
+
+        let trace = dir.join(format!("parity_{}.jsonl", kind.name()));
+        let sink = Arc::new(ServeTraceSink::create(&trace).unwrap());
+        let server =
+            Server::start_traced(model.clone(), tiny_cfg(2), Some(sink.clone())).unwrap();
+        let traced = drive(&model, &server);
+        let on = server.stats();
+        server.shutdown();
+        sink.finish().unwrap();
+        drop(sink);
+
+        assert_eq!(traced, base, "{}: served bits diverged with --trace", kind.name());
+        // sequential driving realizes the same schedule both times, so
+        // the stats counters must match exactly — tracing can't even
+        // shift a batch boundary here
+        let name = kind.name();
+        assert_eq!(on.tokens, off.tokens, "{name}: token counter drifted under --trace");
+        assert_eq!(on.requests, off.requests, "{name}: request counter drifted");
+        assert_eq!(on.batches, off.batches, "{name}: batch counter drifted");
+        assert_eq!(on.sessions, off.sessions, "{name}: session gauge drifted");
+        assert_eq!(on.queue_high_water, off.queue_high_water, "{name}: high-water drifted");
+
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let evs: Vec<String> = text
+            .lines()
+            .map(|l| {
+                let j = Json::parse(l).expect("trace line parses");
+                j.get("ev").and_then(Json::as_str).unwrap_or("?").to_string()
+            })
+            .collect();
+        assert_eq!(evs.first().map(String::as_str), Some("serve_start"), "{name}");
+        assert_eq!(evs.last().map(String::as_str), Some("serve_end"), "{name}");
+        assert!(evs.iter().any(|e| e == "request"), "{name}: no request spans: {evs:?}");
+    }
+}
+
+/// Assert `j` has key `k`; failure names the event kind and the line.
+fn want_key(j: &Json, ev: &str, k: &str) {
+    assert!(j.get(k).is_some(), "{ev} record missing {k:?}: {j}");
+}
+
+#[test]
+fn serve_trace_stream_covers_every_record_kind_with_valid_fields() {
+    let dir = test_dir();
+    let trace = dir.join("schema.jsonl");
+    let model = model_for(TaskKind::Lm);
+    let vocab = model.input_vocab();
+    let sink = Arc::new(ServeTraceSink::create(&trace).unwrap());
+    let server = Server::start_traced(model, tiny_cfg(1), Some(sink.clone())).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for s in 0..2u64 {
+        for t in 0..3usize {
+            server.submit(s, (s as usize + t * 5) % vocab, tx.clone()).unwrap();
+            assert!(!rx.recv_timeout(RECV).unwrap().is_rejected());
+        }
+    }
+    // an out-of-vocab token bounces at the front door — and traces
+    assert!(server.submit(0, vocab, tx.clone()).is_err());
+    // a close drains at the next batch boundary; the follow-up submit
+    // guarantees that boundary happens before shutdown
+    server.close_session(0);
+    server.submit(1, 1, tx.clone()).unwrap();
+    rx.recv_timeout(RECV).unwrap();
+    server.shutdown();
+    sink.finish().unwrap();
+    drop(sink);
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut kinds: BTreeSet<String> = BTreeSet::new();
+    let mut lines: Vec<(String, Json)> = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every serve-trace line parses as JSON");
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some(SERVE_TRACE_SCHEMA),
+            "line missing the schema tag: {line}"
+        );
+        let ev = j.get("ev").and_then(Json::as_str).expect("every line carries ev").to_string();
+        kinds.insert(ev.clone());
+        lines.push((ev, j));
+    }
+    for want in ["serve_start", "session_open", "session_close", "reject"] {
+        assert!(kinds.contains(want), "stream never emitted {want:?}: {kinds:?}");
+    }
+    for want in ["batch", "request", "serve_end"] {
+        assert!(kinds.contains(want), "stream never emitted {want:?}: {kinds:?}");
+    }
+    assert_eq!(lines.first().map(|(e, _)| e.as_str()), Some("serve_start"));
+    assert_eq!(lines.last().map(|(e, _)| e.as_str()), Some("serve_end"));
+
+    for (ev, j) in &lines {
+        match ev.as_str() {
+            "serve_start" => {
+                for k in ["task", "workers", "max_batch", "window_us", "kernel_tier"] {
+                    want_key(j, ev, k);
+                }
+                for k in ["vocab", "n_out"] {
+                    want_key(j, ev, k);
+                }
+                assert_eq!(j.get("task").and_then(Json::as_str), Some("lm"));
+                assert_eq!(j.get("workers").and_then(Json::as_usize), Some(1));
+            }
+            "session_open" => {
+                want_key(j, ev, "shard");
+                want_key(j, ev, "session");
+            }
+            "session_close" => {
+                want_key(j, ev, "shard");
+                want_key(j, ev, "session");
+                assert!(j.get("existed").and_then(Json::as_bool).is_some(), "{j}");
+            }
+            "reject" => {
+                for k in ["shard", "session", "kind", "reason"] {
+                    want_key(j, ev, k);
+                }
+                assert_eq!(j.get("kind").and_then(Json::as_str), Some("step"));
+            }
+            "batch" => {
+                for k in ["shard", "batch", "requests", "work", "closes", "kinds"] {
+                    want_key(j, ev, k);
+                }
+                for k in ["queue_depth", "queue_high_water", "sessions"] {
+                    want_key(j, ev, k);
+                }
+                let t = j.get("timing").expect("batch carries a timing block");
+                assert!(t.get("batch_ms").and_then(Json::as_f64).is_some(), "{j}");
+            }
+            "request" => {
+                for k in ["shard", "batch", "session", "kind", "work", "occupancy"] {
+                    want_key(j, ev, k);
+                }
+                let t = j.get("timing").expect("request carries a timing block");
+                assert!(t.get("queue_wait_us").and_then(Json::as_f64).is_some(), "{j}");
+                assert!(t.get("service_us").and_then(Json::as_f64).is_some(), "{j}");
+            }
+            "serve_end" => {
+                for k in ["tokens", "requests", "batches", "sessions", "queue_high_water"] {
+                    want_key(j, ev, k);
+                }
+                for k in ["kernel_tier", "kernel_profile"] {
+                    want_key(j, ev, k);
+                }
+                let t = j.get("timing").expect("serve_end carries a timing block");
+                assert!(t.get("p50_us").and_then(Json::as_f64).is_some(), "{j}");
+                assert!(t.get("p99_us").and_then(Json::as_f64).is_some(), "{j}");
+                let prof = j.get("kernel_profile").and_then(Json::as_arr).expect("profile");
+                assert!(!prof.is_empty(), "kernel profile empty after a served load");
+                for row in prof {
+                    for k in ["op", "tier", "rows", "cols", "batch", "calls"] {
+                        want_key(row, "kernel_profile row", k);
+                    }
+                    assert!(row.get("calls").and_then(Json::as_usize).unwrap_or(0) > 0, "{row}");
+                    let rt = row.get("timing").expect("profile wall time sits under timing");
+                    assert!(rt.get("total_ms").and_then(Json::as_f64).is_some(), "{row}");
+                }
+            }
+            other => panic!("unknown serve-trace event kind {other:?}"),
+        }
+    }
+}
+
+/// Recursively drop every `"timing"` block — the only fields the
+/// schema allows wall clock into — at any nesting depth (the kernel
+/// profile nests one per shape-class row).
+fn strip_timing(j: &mut Json) {
+    match j {
+        Json::Obj(m) => {
+            m.remove("timing");
+            for v in m.values_mut() {
+                strip_timing(v);
+            }
+        }
+        Json::Arr(items) => {
+            for v in items.iter_mut() {
+                strip_timing(v);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Parse a serve trace into its deterministic residue: `"timing"`
+/// stripped recursively, plus the `kernel_profile` block (its
+/// shape-class rows come from a process-wide table the other tests in
+/// this binary also feed while any sink holds the gate open, so its
+/// row set is not per-run deterministic under the parallel harness).
+fn deterministic_serve_lines(path: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).expect("read serve trace");
+    text.lines()
+        .map(|line| {
+            let mut j = Json::parse(line).expect("serve-trace line parses");
+            strip_timing(&mut j);
+            if let Json::Obj(m) = &mut j {
+                m.remove("kernel_profile");
+            }
+            j.to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn serve_trace_is_byte_deterministic_for_a_fixed_sequential_schedule() {
+    let dir = test_dir();
+    let run = |n: usize| -> PathBuf {
+        let trace = dir.join(format!("det_{n}.jsonl"));
+        let model = model_for(TaskKind::Nli);
+        let sink = Arc::new(ServeTraceSink::create(&trace).unwrap());
+        let server =
+            Server::start_traced(model.clone(), tiny_cfg(1), Some(sink.clone())).unwrap();
+        drive(&model, &server);
+        // exercise the close path, flushed through a live batch so
+        // both runs drain it at the same boundary
+        server.close_session(0);
+        let (tx, rx) = mpsc::channel();
+        server.submit_sequence(1, vec![1, 2], tx).unwrap();
+        rx.recv_timeout(RECV).unwrap();
+        server.shutdown();
+        sink.finish().unwrap();
+        trace
+    };
+    let l1 = deterministic_serve_lines(&run(1));
+    let l2 = deterministic_serve_lines(&run(2));
+    assert_eq!(l1, l2, "fixed-schedule serve traces diverged beyond timing fields");
+    // the residue still covers the full lifecycle, not a trivial stream
+    let evs: BTreeSet<String> = l1
+        .iter()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            j.get("ev").and_then(Json::as_str).unwrap_or("?").to_string()
+        })
+        .collect();
+    for want in ["serve_start", "session_open", "session_close", "batch"] {
+        assert!(evs.contains(want), "deterministic residue lost {want:?}: {evs:?}");
+    }
+    for want in ["request", "serve_end"] {
+        assert!(evs.contains(want), "deterministic residue lost {want:?}: {evs:?}");
+    }
+}
+
+#[test]
+fn eval_report_bytes_are_identical_with_and_without_a_trace_sink() {
+    use floatsd_lstm::qmath::KernelTier;
+    use floatsd_lstm::tasks::eval::{build_report_tier, build_report_traced};
+
+    let dir = test_dir();
+    let plain = build_report_tier(&[], 2, KernelTier::Decoded).unwrap().to_string();
+    let trace = dir.join("eval_spans.jsonl");
+    let mut sink = TraceSink::create(&trace).unwrap();
+    let traced = build_report_traced(&[], 2, KernelTier::Decoded, Some(&mut sink))
+        .unwrap()
+        .to_string();
+    sink.finish().unwrap();
+    drop(sink);
+    assert_eq!(traced, plain, "eval report bytes changed with a trace sink attached");
+
+    // the sink carries the per-shard span timings the report never
+    // includes: every line an eval_span on the train-trace schema,
+    // wall clock confined to its timing block, all four tasks covered
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut tasks: BTreeSet<String> = BTreeSet::new();
+    let mut n = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("eval trace line parses");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(TRACE_SCHEMA));
+        assert_eq!(j.get("ev").and_then(Json::as_str), Some("eval_span"));
+        for k in ["task", "lo", "hi", "count"] {
+            want_key(&j, "eval_span", k);
+        }
+        let t = j.get("timing").expect("span wall time sits under timing");
+        assert!(t.get("ms").and_then(Json::as_f64).is_some(), "{j}");
+        tasks.insert(j.get("task").and_then(Json::as_str).unwrap().to_string());
+        n += 1;
+    }
+    assert!(n > 0, "eval --trace emitted no spans");
+    let all: BTreeSet<String> =
+        TaskKind::ALL.iter().map(|k| k.name().to_string()).collect();
+    assert_eq!(tasks, all, "eval spans must cover every task in the grid");
+}

@@ -12,6 +12,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use floatsd_lstm::formats::round_sd8;
+use floatsd_lstm::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::telemetry::{
     hot_enabled, note_sigmoid, note_tanh, Counter, Gauge, Histogram, SampleWindow,
 };
@@ -54,6 +56,27 @@ fn disabled_telemetry_hot_paths_do_not_allocate() {
     }
     black_box(round_sd8(0.123));
 
+    // the gated kernel-profiling wrappers: with the sink closed, the
+    // wrapper is one relaxed load + a branch around the kernel impl.
+    // Build the matrices and output buffers up front and warm both
+    // tiers before measuring (the shift-add tier builds thread-local
+    // scratch on first use).
+    let (rows, cols, batch) = (12usize, 8usize, 3usize);
+    let data: Vec<f32> = (0..rows * cols).map(|i| (i as f32 - 40.0) * 0.01).collect();
+    let mut w_dec = QMatrix::from_f32(rows, cols, &data);
+    w_dec.set_kernel_tier(KernelTier::Decoded);
+    let mut w_sa = QMatrix::from_f32(rows, cols, &data);
+    w_sa.set_kernel_tier(KernelTier::ShiftAdd);
+    let x: Vec<f32> = (0..cols).map(|i| 0.1 * i as f32).collect();
+    let xs: Vec<f32> = (0..cols * batch).map(|i| 0.05 * i as f32).collect();
+    let bias = vec![0.25f32; rows];
+    let mut out = vec![0f32; rows];
+    let mut outs = vec![0f32; rows * batch];
+    for w in [&w_dec, &w_sa] {
+        matvec_fast(w, &x, &bias, &mut out);
+        matmul_fast(w, &xs, batch, &bias, &mut outs);
+    }
+
     let before = ALLOCS.load(Ordering::Relaxed);
     for i in 0..10_000u64 {
         note_sigmoid(black_box(0.5));
@@ -64,6 +87,14 @@ fn disabled_telemetry_hot_paths_do_not_allocate() {
         hist.record(i % 23);
         window.push(Duration::from_nanos(i));
     }
+    for w in [&w_dec, &w_sa] {
+        for _ in 0..100 {
+            matvec_fast(black_box(w), &x, &bias, &mut out);
+            matmul_fast(black_box(w), &xs, batch, &bias, &mut outs);
+        }
+    }
+    black_box(&out);
+    black_box(&outs);
     black_box(counter.get());
     black_box(gauge.get());
     black_box(hist.total());
