@@ -16,7 +16,7 @@ use floatsd_lstm::benchlib::{bench, black_box, BenchStats};
 use floatsd_lstm::formats::{round_f16, round_f8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
 use floatsd_lstm::hardware::mac_sim::MacPipeline;
 use floatsd_lstm::qmath::mac::{mac_exact, mac_serial};
-use floatsd_lstm::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::vector::{matmul_fast, matmul_tiled, matvec_fast, QMatrix};
 use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::tensorfile::json::Json;
@@ -28,12 +28,23 @@ fn bench_json_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_train.json")
 }
 
-/// One kernel-tier row: op + tier + measured rate, with the
-/// bit-identical cross-check result recorded alongside the numbers.
-fn kernel_row(op: &str, tier: KernelTier, s: &BenchStats, macs: usize, identical: bool) -> Json {
+/// One kernel-tier row: op + tier + register-tile width + measured
+/// rate, with the bit-identical cross-check result recorded alongside
+/// the numbers. `tile` is `"t8"`/`"t4"`/`"t1"` — the stream count of
+/// the widest tile the run dispatches ("t1" is the pre-SoA scalar
+/// path, so old-vs-new tiling stays comparable across PRs).
+fn kernel_row(
+    op: &str,
+    tier: KernelTier,
+    tile: &str,
+    s: &BenchStats,
+    macs: usize,
+    identical: bool,
+) -> Json {
     let mut m = BTreeMap::new();
     m.insert("op".to_string(), Json::Str(op.to_string()));
     m.insert("tier".to_string(), Json::Str(tier.name().to_string()));
+    m.insert("tile".to_string(), Json::Str(tile.to_string()));
     m.insert("ns_per_call".to_string(), Json::Num(s.ns_per_iter()));
     m.insert("m_macs_per_s".to_string(), Json::Num(s.throughput(macs) / 1e6));
     m.insert("identical".to_string(), Json::Bool(identical));
@@ -87,7 +98,9 @@ fn main() -> anyhow::Result<()> {
 
     // ----- kernel tiers: decoded f32 vs integer shift-add ------------
     let quick = std::env::var("FSD_BENCH_QUICK").is_ok();
-    let (rows_n, cols, batch) = if quick { (64, 64, 4) } else { (512, 256, 8) };
+    // batch 9 in quick mode: one full 8-stream tile plus a tail lane,
+    // so CI exercises the widest tile AND the remainder dispatch
+    let (rows_n, cols, batch) = if quick { (64, 64, 9) } else { (512, 256, 8) };
     println!("\nkernel tiers ({rows_n}x{cols} weights, batch {batch}):");
 
     let src: Vec<f32> = (0..rows_n * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
@@ -110,9 +123,10 @@ fn main() -> anyhow::Result<()> {
         let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
         let identical =
             reference.entry("matvec".to_string()).or_insert_with(|| bits.clone()) == &bits;
-        kernel_rows.push(kernel_row("matvec", tier, &s, rows_n * cols, identical));
+        kernel_rows.push(kernel_row("matvec", tier, "t1", &s, rows_n * cols, identical));
         assert!(identical, "{}: matvec diverged from decoded", tier.name());
 
+        // auto dispatch: batch >= 8 rides the widest (8-stream) tile
         let s = bench(&format!("matmul x{batch} [{}]", tier.name()), || {
             matmul_fast(&w, &xb, batch, &bias, &mut out_b);
             black_box(&out_b);
@@ -121,8 +135,24 @@ fn main() -> anyhow::Result<()> {
         let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
         let identical =
             reference.entry("matmul".to_string()).or_insert_with(|| bits.clone()) == &bits;
-        kernel_rows.push(kernel_row("matmul", tier, &s, batch * rows_n * cols, identical));
+        kernel_rows.push(kernel_row("matmul", tier, "t8", &s, batch * rows_n * cols, identical));
         assert!(identical, "{}: matmul diverged from decoded", tier.name());
+
+        // forced narrower tiles: the old-vs-new tiling comparison —
+        // t4 is PR 7's widest tile, t1 the original scalar loop; all
+        // three widths must produce the same bits
+        for (max_tile, tile) in [(4usize, "t4"), (1usize, "t1")] {
+            let s = bench(&format!("matmul x{batch} [{} {tile}]", tier.name()), || {
+                matmul_tiled(&w, &xb, batch, &bias, &mut out_b, max_tile);
+                black_box(&out_b);
+            });
+            println!("{s}  -> {:.1} M MACs/s", s.throughput(batch * rows_n * cols) / 1e6);
+            let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
+            let identical = reference["matmul"] == bits;
+            kernel_rows
+                .push(kernel_row("matmul", tier, tile, &s, batch * rows_n * cols, identical));
+            assert!(identical, "{}: matmul {tile} diverged from decoded t8", tier.name());
+        }
     }
 
     // merge into BENCH_train.json without clobbering the training rows

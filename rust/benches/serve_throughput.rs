@@ -117,6 +117,10 @@ fn main() -> anyhow::Result<()> {
         (1usize, 16usize, KernelTier::Decoded),
         (4, 16, KernelTier::Decoded),
         (4, 16, KernelTier::ShiftAdd),
+        // max-batch 8 caps micro-batches at exactly one 8-stream tile:
+        // the wide-tile hot path with no scalar tail, profiled on the
+        // shift-add tier
+        (4, 8, KernelTier::ShiftAdd),
     ];
     for &(workers, max_batch, tier) in &server_rows {
         // a fresh same-seed stack per row — the tier is a runtime knob
@@ -124,8 +128,8 @@ fn main() -> anyhow::Result<()> {
         let mut st = synthetic_stack(vocab, dim, hidden, layers, vocab, 20200711);
         st.set_kernel_tier(tier);
         let st = Arc::new(st);
-        let trace_path =
-            results_dir().join(format!("serve_trace_{workers}w_{}.jsonl", tier.name()));
+        let trace_path = results_dir()
+            .join(format!("serve_trace_{workers}w_b{max_batch}_{}.jsonl", tier.name()));
         let sink = Arc::new(ServeTraceSink::create(&trace_path)?);
         let server = Server::start_traced(
             Arc::new(ServeModel::lm(st.clone())?),

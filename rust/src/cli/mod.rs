@@ -65,6 +65,16 @@ impl Args {
         }
     }
 
+    /// Float option (thresholds, rates). Parse errors name the flag;
+    /// range/finiteness checks stay with the caller, which knows the
+    /// domain.
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number, got {v:?}")),
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -112,6 +122,14 @@ mod tests {
         assert_eq!(a.opt_u64("seed", 0).unwrap(), big);
         assert_eq!(a.opt_u64("other", 7).unwrap(), 7);
         assert!(parse("x --seed nope").opt_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn opt_f64_parses_and_defaults() {
+        let a = parse("report --sat-delta-pp 2.5");
+        assert_eq!(a.opt_f64("sat-delta-pp", 5.0).unwrap(), 2.5);
+        assert_eq!(a.opt_f64("span-regression-pct", 20.0).unwrap(), 20.0);
+        assert!(parse("report --sat-delta-pp nope").opt_f64("sat-delta-pp", 5.0).is_err());
     }
 
     #[test]

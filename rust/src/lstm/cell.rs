@@ -14,7 +14,7 @@
 
 use crate::formats::{round_f16, round_f8};
 use crate::qmath::qsigmoid::{sigmoid_sd8, tanh_fp8};
-use crate::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use crate::qmath::vector::{matmul_fast_with, matvec_fast, MatmulScratch, QMatrix};
 
 /// Gate packing order within the fused weight matrices (must match
 /// `python/compile/lstm.py`: f, i, o, g).
@@ -60,6 +60,11 @@ pub struct BatchScratch {
     pub(crate) zx: Vec<f32>,
     pub(crate) zh: Vec<f32>,
     pub(crate) zero_bias: Vec<f32>,
+    /// matmul-kernel scratch (the shift-add tier's batch-wide
+    /// activation decomposition) threaded through every step so the
+    /// buffer is reused across time steps instead of bouncing on a
+    /// thread-local
+    pub(crate) mm: MatmulScratch,
 }
 
 impl BatchScratch {
@@ -69,6 +74,7 @@ impl BatchScratch {
             zx: vec![0.0; max_batch.max(1) * 4 * hidden],
             zh: vec![0.0; max_batch.max(1) * 4 * hidden],
             zero_bias: vec![0.0; 4 * hidden],
+            mm: MatmulScratch::new(),
         }
     }
 
@@ -166,10 +172,10 @@ impl QLstmCell {
         assert_eq!(hs.len(), batch * hdim);
         assert_eq!(cs.len(), batch * hdim);
         scratch.ensure(batch);
-        let BatchScratch { zx, zh, zero_bias, .. } = scratch;
+        let BatchScratch { zx, zh, zero_bias, mm, .. } = scratch;
 
-        matmul_fast(&self.wx, xs, batch, &self.bias, &mut zx[..batch * 4 * hdim]);
-        matmul_fast(&self.wh, hs, batch, zero_bias, &mut zh[..batch * 4 * hdim]);
+        matmul_fast_with(&self.wx, xs, batch, &self.bias, &mut zx[..batch * 4 * hdim], mm);
+        matmul_fast_with(&self.wh, hs, batch, zero_bias, &mut zh[..batch * 4 * hdim], mm);
 
         for b in 0..batch {
             self.gates_inplace(

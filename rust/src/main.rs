@@ -7,10 +7,14 @@
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
 //!                    [--decode-len L --beam K --beam-len-norm A]
 //!                    [--kernel-tier decoded|shiftadd] [--trace serve.jsonl]
+//!                    [--trace-every N]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
 //!                                        # --trace: request-lifecycle JSONL stream
 //!                                        # (queue/batch/kernel spans, tier profile)
+//!                                        # --trace-every: keep every N-th batch's
+//!                                        # batch/request lines (lifecycle + summary
+//!                                        # always traced)
 //! floatsd-lstm train [--preset tiny|default|paper] [--threads N] [--trace t.jsonl]
 //!                    [--trace-every N] [--kernel-tier decoded|shiftadd]
 //!                    [--steps N --hidden H --out ckpt.tensors ...]
@@ -29,8 +33,11 @@
 //!                                        # schema, auto-detected): loss-scale events,
 //!                                        # saturation, request spans, kernel profile
 //! floatsd-lstm report --diff a.jsonl b.jsonl
+//!                     [--sat-delta-pp P] [--span-regression-pct P]
 //!                                        # compare two traces; flags loss-scale drift,
-//!                                        # saturation deltas, p50/p99 span regressions
+//!                                        # saturation deltas (default > 5pp), p50/p99
+//!                                        # span regressions (default > 20%); both
+//!                                        # thresholds tunable, finite and >= 0
 //! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```

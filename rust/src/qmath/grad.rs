@@ -12,92 +12,32 @@
 //!
 //! The transposed contraction uses the identical accumulation
 //! discipline as the forward kernel: exact f64 sums over
-//! [`MAC_GROUP`]-sized groups (here groups of *rows*, i.e. output
-//! units), one FP16 rounding per group — so the paper's "FP16
-//! additions suffice for every accumulation" claim covers the backward
-//! pass too. [`dot_col_chained`] is the single per-column kernel both
-//! the per-vector and the batched path drive, which makes
-//! [`matmul_t_fast`] bit-identical to per-stream [`matvec_t_fast`]
-//! calls by construction (same argument as the forward pair).
+//! [`MAC_GROUP`](super::mac::MAC_GROUP)-sized groups (here groups of
+//! *rows*, i.e. output units), one FP16 rounding per group — so the
+//! paper's "FP16 additions suffice for every accumulation" claim
+//! covers the backward pass too. The per-lane operation sequence is
+//! literally the forward kernel's `chain_span_t` run over a contiguous
+//! transposed column (bias 0), which makes [`matmul_t_fast`]
+//! bit-identical to per-stream [`matvec_t_fast`] calls by construction
+//! — at every tile width, with the same blocked batch-major write-out
+//! as the forward kernels.
 
-use crate::formats::{round_f8, Fp16};
+use crate::formats::round_f8;
 
-use super::mac::MAC_GROUP;
-use super::vector::QMatrix;
+use super::vector::{chain_span_t, QMatrix, MAX_TILE, ROW_BLOCK};
 
 /// One column of the transposed product: `Σ_r dy[r] · col[r]` where
 /// `col` is the contiguous column slice from the matrix's transposed
 /// decoded copy ([`QMatrix::col_decoded`]) — f64-exact per
-/// [`MAC_GROUP`] rows, one FP16 rounding per group. The transposed
+/// `MAC_GROUP` rows, one FP16 rounding per group. The transposed
 /// copy turns the old stride-`cols` column walk into a unit-stride
 /// stream; the values and the op order are unchanged, so the
 /// transposed-reuse variant is bit-identical to indexing
 /// `row_decoded(r)[c]` directly.
 #[inline]
 fn dot_col_chained(col: &[f32], dy: &[f32]) -> f32 {
-    let rows = col.len();
-    debug_assert_eq!(dy.len(), rows);
-    let mut acc = 0f32;
-    let mut r = 0;
-    while r + MAC_GROUP <= rows {
-        let g = dy[r] as f64 * col[r] as f64
-            + dy[r + 1] as f64 * col[r + 1] as f64
-            + dy[r + 2] as f64 * col[r + 2] as f64
-            + dy[r + 3] as f64 * col[r + 3] as f64;
-        acc = Fp16::from_f64(acc as f64 + g).to_f32();
-        r += MAC_GROUP;
-    }
-    if r < rows {
-        let mut g = 0f64;
-        for rr in r..rows {
-            g += dy[rr] as f64 * col[rr] as f64;
-        }
-        acc = Fp16::from_f64(acc as f64 + g).to_f32();
-    }
-    acc
-}
-
-/// Four independent FP16 chains sharing one pass over a weight
-/// column — the register-tiled inner block of [`matmul_t_fast`],
-/// mirroring the forward kernel's `dot_row_chained4`. Per stream the
-/// operation sequence is exactly [`dot_col_chained`], so each lane is
-/// bit-identical to a standalone call.
-#[inline]
-fn dot_col_chained4(col: &[f32], d0: &[f32], d1: &[f32], d2: &[f32], d3: &[f32]) -> [f32; 4] {
-    let rows = col.len();
-    let mut acc = [0f32; 4];
-    let mut r = 0;
-    while r + MAC_GROUP <= rows {
-        let (w0, w1, w2, w3) =
-            (col[r] as f64, col[r + 1] as f64, col[r + 2] as f64, col[r + 3] as f64);
-        let g0 = d0[r] as f64 * w0 + d0[r + 1] as f64 * w1 + d0[r + 2] as f64 * w2
-            + d0[r + 3] as f64 * w3;
-        let g1 = d1[r] as f64 * w0 + d1[r + 1] as f64 * w1 + d1[r + 2] as f64 * w2
-            + d1[r + 3] as f64 * w3;
-        let g2 = d2[r] as f64 * w0 + d2[r + 1] as f64 * w1 + d2[r + 2] as f64 * w2
-            + d2[r + 3] as f64 * w3;
-        let g3 = d3[r] as f64 * w0 + d3[r + 1] as f64 * w1 + d3[r + 2] as f64 * w2
-            + d3[r + 3] as f64 * w3;
-        acc[0] = Fp16::from_f64(acc[0] as f64 + g0).to_f32();
-        acc[1] = Fp16::from_f64(acc[1] as f64 + g1).to_f32();
-        acc[2] = Fp16::from_f64(acc[2] as f64 + g2).to_f32();
-        acc[3] = Fp16::from_f64(acc[3] as f64 + g3).to_f32();
-        r += MAC_GROUP;
-    }
-    if r < rows {
-        let mut g = [0f64; 4];
-        for rr in r..rows {
-            let wv = col[rr] as f64;
-            g[0] += d0[rr] as f64 * wv;
-            g[1] += d1[rr] as f64 * wv;
-            g[2] += d2[rr] as f64 * wv;
-            g[3] += d3[rr] as f64 * wv;
-        }
-        for (a, gk) in acc.iter_mut().zip(g) {
-            *a = Fp16::from_f64(*a as f64 + gk).to_f32();
-        }
-    }
-    acc
+    debug_assert_eq!(dy.len(), col.len());
+    chain_span_t::<1>(col, &[dy], [0f32])[0]
 }
 
 /// Transposed fast matvec: `out[c] = Σ_r dy[r]·W[r,c]` with the
@@ -113,7 +53,9 @@ pub fn matvec_t_fast(w: &QMatrix, dy: &[f32], out: &mut [f32]) {
 
 /// Batched transposed matmul: `outs[b] = Wᵀ·dys[b]` for a whole batch
 /// — column-stationary (each contiguous transposed column is streamed
-/// once per batch) and register-tiled four streams at a time.
+/// once per tile) with the forward kernels' shape-aware register
+/// tiling (batch ≥ 8 → tile-8, ≥ 4 → tile-4, else scalar) and blocked
+/// batch-major write-out instead of the old stride-`cols` scatter.
 /// Bit-identical to `batch` independent [`matvec_t_fast`] calls —
 /// every `(column, stream)` pair runs the same [`dot_col_chained`]
 /// operation sequence (pinned by `tests::batched_transpose_matches_per_stream`).
@@ -121,27 +63,48 @@ pub fn matmul_t_fast(w: &QMatrix, dys: &[f32], batch: usize, outs: &mut [f32]) {
     let (rows, cols) = (w.rows, w.cols);
     assert_eq!(dys.len(), batch * rows);
     assert_eq!(outs.len(), batch * cols);
-    for c in 0..cols {
-        let col = w.col_decoded(c);
-        let mut b = 0usize;
-        while b + 4 <= batch {
-            let ys = dot_col_chained4(
-                col,
-                &dys[b * rows..(b + 1) * rows],
-                &dys[(b + 1) * rows..(b + 2) * rows],
-                &dys[(b + 2) * rows..(b + 3) * rows],
-                &dys[(b + 3) * rows..(b + 4) * rows],
-            );
-            outs[b * cols + c] = ys[0];
-            outs[(b + 1) * cols + c] = ys[1];
-            outs[(b + 2) * cols + c] = ys[2];
-            outs[(b + 3) * cols + c] = ys[3];
-            b += 4;
+    let mut b = 0usize;
+    while b + 8 <= batch {
+        matmul_t_tile::<8>(w, dys, outs, b);
+        b += 8;
+    }
+    while b + 4 <= batch {
+        matmul_t_tile::<4>(w, dys, outs, b);
+        b += 4;
+    }
+    while b < batch {
+        matmul_t_tile::<1>(w, dys, outs, b);
+        b += 1;
+    }
+}
+
+/// One `T`-stream tile of [`matmul_t_fast`]: the output columns are
+/// walked in `ROW_BLOCK`-sized blocks whose results accumulate in
+/// contiguous stack scratch, then land in `outs` as batch-major runs.
+/// No reduction-dimension blocking — each transposed column is one
+/// unit-stride stream the per-lane chain consumes whole, so the
+/// per-lane sequence is exactly [`dot_col_chained`].
+fn matmul_t_tile<const T: usize>(w: &QMatrix, dys: &[f32], outs: &mut [f32], b0: usize) {
+    let (rows, cols) = (w.rows, w.cols);
+    let mut dr: [&[f32]; T] = [&[]; T];
+    for t in 0..T {
+        dr[t] = &dys[(b0 + t) * rows..(b0 + t + 1) * rows];
+    }
+    let mut acc_blk = [0f32; MAX_TILE * ROW_BLOCK];
+    let mut c0 = 0usize;
+    while c0 < cols {
+        let cb = ROW_BLOCK.min(cols - c0);
+        for ci in 0..cb {
+            let acc = chain_span_t::<T>(w.col_decoded(c0 + ci), &dr, [0f32; T]);
+            for t in 0..T {
+                acc_blk[t * cb + ci] = acc[t];
+            }
         }
-        while b < batch {
-            outs[b * cols + c] = dot_col_chained(col, &dys[b * rows..(b + 1) * rows]);
-            b += 1;
+        for t in 0..T {
+            outs[(b0 + t) * cols + c0..(b0 + t) * cols + c0 + cb]
+                .copy_from_slice(&acc_blk[t * cb..t * cb + cb]);
         }
+        c0 += cb;
     }
 }
 
@@ -239,10 +202,12 @@ mod tests {
 
     #[test]
     fn batched_transpose_matches_per_stream() {
-        // batch sweeps the 4-stream register-tile boundary (1..=9)
-        for &(rows, cols) in &[(6usize, 5usize), (9, 7), (4, 4), (1, 3)] {
+        // batch sweeps both register-tile widths and every remainder
+        // (1..=17 crosses 8-, 4- and scalar-tile dispatch); (5, 34)
+        // crosses the 32-column output-block boundary.
+        for &(rows, cols) in &[(6usize, 5usize), (9, 7), (4, 4), (1, 3), (5, 34)] {
             let (w, _) = setup(rows, cols, 5);
-            for batch in 1usize..=9 {
+            for batch in 1usize..=17 {
                 let mut rng = SplitMix64::new(11 + batch as u64);
                 let dys: Vec<f32> =
                     (0..batch * rows).map(|_| round_f8(rng.uniform(-2.0, 2.0))).collect();

@@ -29,4 +29,4 @@ pub mod vector;
 pub use grad::{matmul_t_fast, matvec_t_fast, outer_acc, quantize_fp8_inplace};
 pub use mac::{mac_exact, mac_serial, MacMode};
 pub use qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8, SigmoidLut};
-pub use shiftadd::{KernelTier, WeightDigits};
+pub use shiftadd::{DigitPlanes, KernelTier, WeightDigits};

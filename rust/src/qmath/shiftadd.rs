@@ -12,6 +12,17 @@
 //! — in the style of int8 fixed-point inference engines (int dots →
 //! one rescale/round at the group boundary).
 //!
+//! ## Memory layout
+//!
+//! Digit pairs live in [`DigitPlanes`]: a structure-of-arrays layout
+//! with four parallel `i8` planes (`s0/e0/s1/e1`) and a padded row
+//! stride, so the inner loop streams each plane at unit stride instead
+//! of hopping over an array-of-structs — the layout a vectorizer can
+//! actually chew on. The batched kernel is weight-stationary and
+//! register-tiled up to eight activation streams wide (see
+//! [`matmul_sa`]), with row/column blocking shared with the decoded
+//! tier (`vector::{ROW_BLOCK, COL_BLOCK}`).
+//!
 //! ## Equivalence contract (pinned by `tests/shiftadd_equivalence.rs`)
 //!
 //! The decoded reference rounds once per [`MAC_GROUP`]-element group:
@@ -48,7 +59,7 @@ use crate::formats::{FloatSd8, Fp16, FLOAT_SD8};
 use crate::hardware::mac_sim::round_fixed_to_f16;
 
 use super::mac::MAC_GROUP;
-use super::vector::QMatrix;
+use super::vector::{QMatrix, COL_BLOCK, MAX_TILE, ROW_BLOCK};
 
 /// Fixed-point frame of the accumulation: partial sums are integers in
 /// units of `2^-FRAC_BITS` — the same frame as the hardware MAC
@@ -103,10 +114,12 @@ impl KernelTier {
 }
 
 /// One weight's ≤2 signed power-of-two digits, extracted from its
-/// FloatSD8 code once at encode/update time (the digit-planar layout
-/// cached on [`QMatrix`]). `s0 == 0` ⇒ the weight is zero; `s1 == 0` ⇒
-/// a single-digit weight. When both digits are present `e0 > e1` (the
-/// MSG digit leads).
+/// FloatSD8 code once at encode/update time. `s0 == 0` ⇒ the weight is
+/// zero; `s1 == 0` ⇒ a single-digit weight. When both digits are
+/// present `e0 > e1` (the MSG digit leads). The per-matrix storage is
+/// [`DigitPlanes`] (structure-of-arrays); this struct is the
+/// per-weight view used at encode/update boundaries and by the wide
+/// variant.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WeightDigits {
     pub s0: i8,
@@ -146,6 +159,86 @@ impl WeightDigits {
         let v = self.s0 as f64 * 2f64.powi(self.e0 as i32)
             + self.s1 as f64 * 2f64.powi(self.e1 as i32);
         v as f32
+    }
+}
+
+/// Structure-of-arrays digit storage for a whole matrix: four parallel
+/// `i8` planes (`s0/e0/s1/e1`), each row padded to a
+/// [`Self::ROW_ALIGN`]-multiple stride so plane rows start on
+/// alignment-friendly boundaries and the shift-add inner loop streams
+/// every plane at unit stride. Padding digits stay zero (`s == 0` ⇒ no
+/// contribution) and [`Self::row`] hands kernels exactly `cols`
+/// elements, so the tail is never read — the padded layout is
+/// observationally identical to a dense one.
+pub struct DigitPlanes {
+    rows: usize,
+    cols: usize,
+    /// `cols` rounded up to a multiple of [`Self::ROW_ALIGN`]
+    stride: usize,
+    s0: Vec<i8>,
+    e0: Vec<i8>,
+    s1: Vec<i8>,
+    e1: Vec<i8>,
+}
+
+impl DigitPlanes {
+    /// Plane rows start every 16 bytes — 16 `i8` lanes, one SSE
+    /// register / half a cache line.
+    pub const ROW_ALIGN: usize = 16;
+
+    /// All-zero planes (every weight reads back as the zero digit
+    /// pair) — callers fill via [`Self::set`].
+    pub fn new(rows: usize, cols: usize) -> DigitPlanes {
+        let stride = cols.div_ceil(Self::ROW_ALIGN) * Self::ROW_ALIGN;
+        let n = rows * stride;
+        DigitPlanes {
+            rows,
+            cols,
+            stride,
+            s0: vec![0; n],
+            e0: vec![0; n],
+            s1: vec![0; n],
+            e1: vec![0; n],
+        }
+    }
+
+    /// The padded row stride in plane elements.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Scatter one weight's digit pair across the four planes.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, d: WeightDigits) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let k = r * self.stride + c;
+        self.s0[k] = d.s0;
+        self.e0[k] = d.e0;
+        self.s1[k] = d.s1;
+        self.e1[k] = d.e1;
+    }
+
+    /// Gather one weight's digit pair back (update-sync checks, tests).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> WeightDigits {
+        debug_assert!(r < self.rows && c < self.cols);
+        let k = r * self.stride + c;
+        WeightDigits { s0: self.s0[k], e0: self.e0[k], s1: self.s1[k], e1: self.e1[k] }
+    }
+
+    /// Row `r` of all four planes, each exactly `cols` long — the
+    /// kernel-facing view (padding excluded).
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[i8], &[i8], &[i8], &[i8]) {
+        let lo = r * self.stride;
+        let hi = lo + self.cols;
+        (&self.s0[lo..hi], &self.e0[lo..hi], &self.s1[lo..hi], &self.e1[lo..hi])
+    }
+
+    /// The full backing planes, padding included — property tests
+    /// assert the padding tail stays zero across update sequences.
+    pub fn raw_planes(&self) -> (&[i8], &[i8], &[i8], &[i8]) {
+        (&self.s0, &self.e0, &self.s1, &self.e1)
     }
 }
 
@@ -193,12 +286,23 @@ fn decompose_acc(a: f32) -> XTerm {
     split(a, ACC_EXP_MIN)
 }
 
-/// One MAC group: shift-add the ≤2 digits of each weight against the
+/// One MAC group over the digit planes: shift-add the ≤2 digits of
+/// each weight (read from the four parallel `i8` slices) against the
 /// pre-decomposed activations, then round the fixed-point sum to the
 /// FP16 grid — or, if any operand is outside the frame, run the
 /// decoded reference's literal f64 sequence for this group.
 #[inline]
-fn group_sa(acc: f32, dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm]) -> f32 {
+#[allow(clippy::too_many_arguments)]
+fn group_sa(
+    acc: f32,
+    s0: &[i8],
+    e0: &[i8],
+    s1: &[i8],
+    e1: &[i8],
+    row: &[f32],
+    x: &[f32],
+    xt: &[XTerm],
+) -> f32 {
     let a = decompose_acc(acc);
     let mut fast = a.fast;
     for t in xt {
@@ -206,13 +310,13 @@ fn group_sa(acc: f32, dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm]
     }
     if fast {
         let mut sum: i64 = a.sig << (a.exp + FRAC_BITS);
-        for (d, t) in dig.iter().zip(xt) {
+        for (i, t) in xt.iter().enumerate() {
             if t.sig != 0 {
-                if d.s0 != 0 {
-                    sum += (d.s0 as i64 * t.sig) << (d.e0 as i32 + t.exp + FRAC_BITS);
+                if s0[i] != 0 {
+                    sum += (s0[i] as i64 * t.sig) << (e0[i] as i32 + t.exp + FRAC_BITS);
                 }
-                if d.s1 != 0 {
-                    sum += (d.s1 as i64 * t.sig) << (d.e1 as i32 + t.exp + FRAC_BITS);
+                if s1[i] != 0 {
+                    sum += (s1[i] as i64 * t.sig) << (e1[i] as i32 + t.exp + FRAC_BITS);
                 }
             }
         }
@@ -229,25 +333,77 @@ fn group_sa(acc: f32, dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm]
     }
 }
 
-/// Shift-add mirror of `vector::dot_row_chained`: same grouping, same
-/// tail handling, one FP16 rounding per group — bit-identical to the
-/// decoded reference for all inputs.
-pub fn dot_row_sa(dig: &[WeightDigits], row: &[f32], x: &[f32], xt: &[XTerm], bias: f32) -> f32 {
-    let cols = row.len();
-    debug_assert_eq!(dig.len(), cols);
-    debug_assert_eq!(x.len(), cols);
-    debug_assert_eq!(xt.len(), cols);
-    let mut acc = bias;
+/// Advance `T` independent shift-add chains over one group-aligned
+/// span of a weight row. Each lane runs the exact [`group_sa`]
+/// sequence of a standalone [`dot_row_sa`] — the tiling only reuses
+/// the plane/row loads across lanes — so every lane is bit-identical
+/// to a per-stream call by construction. Span starts must be
+/// [`MAC_GROUP`]-aligned within the row (the callers block columns in
+/// `COL_BLOCK`-multiples) so group boundaries match full-row grouping;
+/// only the final span may carry the sub-group tail.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn sa_span_t<const T: usize>(
+    s0: &[i8],
+    e0: &[i8],
+    s1: &[i8],
+    e1: &[i8],
+    row: &[f32],
+    xs: &[&[f32]; T],
+    xts: &[&[XTerm]; T],
+    mut acc: [f32; T],
+) -> [f32; T] {
+    let n = row.len();
     let mut c = 0;
-    while c + MAC_GROUP <= cols {
+    while c + MAC_GROUP <= n {
         let hi = c + MAC_GROUP;
-        acc = group_sa(acc, &dig[c..hi], &row[c..hi], &x[c..hi], &xt[c..hi]);
+        for t in 0..T {
+            acc[t] = group_sa(
+                acc[t],
+                &s0[c..hi],
+                &e0[c..hi],
+                &s1[c..hi],
+                &e1[c..hi],
+                &row[c..hi],
+                &xs[t][c..hi],
+                &xts[t][c..hi],
+            );
+        }
         c = hi;
     }
-    if c < cols {
-        acc = group_sa(acc, &dig[c..], &row[c..], &x[c..], &xt[c..]);
+    if c < n {
+        for t in 0..T {
+            acc[t] = group_sa(
+                acc[t],
+                &s0[c..],
+                &e0[c..],
+                &s1[c..],
+                &e1[c..],
+                &row[c..],
+                &xs[t][c..],
+                &xts[t][c..],
+            );
+        }
     }
     acc
+}
+
+/// Shift-add mirror of `vector::dot_row_chained`: same grouping, same
+/// tail handling, one FP16 rounding per group — bit-identical to the
+/// decoded reference for all inputs. `planes` is one row of the four
+/// digit planes ([`DigitPlanes::row`]).
+pub fn dot_row_sa(
+    planes: (&[i8], &[i8], &[i8], &[i8]),
+    row: &[f32],
+    x: &[f32],
+    xt: &[XTerm],
+    bias: f32,
+) -> f32 {
+    let (s0, e0, s1, e1) = planes;
+    debug_assert_eq!(s0.len(), row.len());
+    debug_assert_eq!(x.len(), row.len());
+    debug_assert_eq!(xt.len(), row.len());
+    sa_span_t::<1>(s0, e0, s1, e1, row, &[x], &[xt], [bias])[0]
 }
 
 /// Whole-row shift-add accumulation with a **single** final FP16
@@ -296,33 +452,117 @@ pub fn matvec_sa(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
         xt.clear();
         xt.extend(x.iter().map(|&v| decompose_x(v)));
         for r in 0..w.rows {
-            out[r] = dot_row_sa(w.row_digits(r), w.row_decoded(r), x, &xt, bias[r]);
+            out[r] = dot_row_sa(w.digit_row(r), w.row_decoded(r), x, &xt, bias[r]);
         }
     });
 }
 
-/// Shift-add batched matvec: `ys[b] = W · xs[b] + bias`. Each
-/// `(row, stream)` pair runs the identical [`dot_row_sa`] sequence, so
-/// results are bit-identical to `batch` [`matvec_sa`] calls — and thus
-/// to the decoded `matmul_fast`, whose tiling contract is the same.
-/// Stream-stationary loop order: one decomposition pass per stream,
-/// amortized over every row.
-pub fn matmul_sa(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+/// Shift-add batched matvec: `ys[b] = W · xs[b] + bias`.
+/// **Weight-stationary, register-tiled, blocked** — the same loop
+/// structure as the decoded `matmul_fast`: every stream's activations
+/// are decomposed once up front into `xt_buf`, then streams are tiled
+/// `max_tile`-at-a-time (8 → 4 → scalar remainder) and each tile walks
+/// `ROW_BLOCK × COL_BLOCK` blocks of the digit planes, accumulating a
+/// row-block's outputs in contiguous scratch and writing `out` in
+/// batch-major runs (no stride-`rows` scatter). Each `(row, stream)`
+/// pair runs the identical [`dot_row_sa`] sequence, so results are
+/// bit-identical to `batch` [`matvec_sa`] calls — and thus to the
+/// decoded `matmul_fast`, whose tiling contract is the same.
+pub fn matmul_sa(
+    w: &QMatrix,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    xt_buf: &mut Vec<XTerm>,
+    max_tile: usize,
+) {
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), batch * w.rows);
-    let (rows, cols) = (w.rows, w.cols);
-    X_SCRATCH.with(|s| {
-        let mut xt = s.borrow_mut();
-        for b in 0..batch {
-            let xb = &xs[b * cols..(b + 1) * cols];
-            xt.clear();
-            xt.extend(xb.iter().map(|&v| decompose_x(v)));
-            for r in 0..rows {
-                out[b * rows + r] = dot_row_sa(w.row_digits(r), w.row_decoded(r), xb, &xt, bias[r]);
-            }
+    xt_buf.clear();
+    xt_buf.extend(xs.iter().map(|&v| decompose_x(v)));
+    let xt = &xt_buf[..];
+    let mut b = 0usize;
+    if max_tile >= 8 {
+        while b + 8 <= batch {
+            matmul_sa_tile::<8>(w, xs, xt, bias, out, b);
+            b += 8;
         }
-    });
+    }
+    if max_tile >= 4 {
+        while b + 4 <= batch {
+            matmul_sa_tile::<4>(w, xs, xt, bias, out, b);
+            b += 4;
+        }
+    }
+    while b < batch {
+        matmul_sa_tile::<1>(w, xs, xt, bias, out, b);
+        b += 1;
+    }
+}
+
+/// One `T`-stream tile of [`matmul_sa`]: row/column-blocked over the
+/// digit planes with a contiguous per-row-block accumulator, written
+/// out batch-major. Column blocks are `COL_BLOCK`-aligned (a
+/// [`MAC_GROUP`] multiple), so every [`sa_span_t`] span sees the same
+/// group boundaries as a full-row pass, and carrying the f32
+/// accumulator between spans reproduces [`dot_row_sa`]'s chain exactly.
+fn matmul_sa_tile<const T: usize>(
+    w: &QMatrix,
+    xs: &[f32],
+    xt: &[XTerm],
+    bias: &[f32],
+    out: &mut [f32],
+    b0: usize,
+) {
+    let (rows, cols) = (w.rows, w.cols);
+    let mut acc_blk = [0f32; MAX_TILE * ROW_BLOCK];
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        for t in 0..T {
+            acc_blk[t * rb..t * rb + rb].copy_from_slice(&bias[r0..r0 + rb]);
+        }
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let cb = COL_BLOCK.min(cols - c0);
+            let mut xr: [&[f32]; T] = [&[]; T];
+            let mut xtr: [&[XTerm]; T] = [&[]; T];
+            for t in 0..T {
+                let lo = (b0 + t) * cols + c0;
+                xr[t] = &xs[lo..lo + cb];
+                xtr[t] = &xt[lo..lo + cb];
+            }
+            for ri in 0..rb {
+                let r = r0 + ri;
+                let (s0, e0, s1, e1) = w.digit_row(r);
+                let mut acc = [0f32; T];
+                for t in 0..T {
+                    acc[t] = acc_blk[t * rb + ri];
+                }
+                let acc = sa_span_t::<T>(
+                    &s0[c0..c0 + cb],
+                    &e0[c0..c0 + cb],
+                    &s1[c0..c0 + cb],
+                    &e1[c0..c0 + cb],
+                    &w.row_decoded(r)[c0..c0 + cb],
+                    &xr,
+                    &xtr,
+                    acc,
+                );
+                for t in 0..T {
+                    acc_blk[t * rb + ri] = acc[t];
+                }
+            }
+            c0 += cb;
+        }
+        for t in 0..T {
+            out[(b0 + t) * rows + r0..(b0 + t) * rows + r0 + rb]
+                .copy_from_slice(&acc_blk[t * rb..t * rb + rb]);
+        }
+        r0 += rb;
+    }
 }
 
 #[cfg(test)]
@@ -351,6 +591,31 @@ mod tests {
                 assert!(d.e0 > d.e1, "MSG digit must lead: {d:?}");
             }
         }
+    }
+
+    #[test]
+    fn digit_planes_round_trip_with_padded_stride() {
+        let mut p = DigitPlanes::new(3, 7);
+        assert_eq!(p.stride(), 16, "7 cols round up to one 16-lane row");
+        for bits in [0x01u8, 0x80, 0xff] {
+            let d = WeightDigits::of(FloatSd8(bits));
+            p.set(2, 6, d);
+            assert_eq!(p.get(2, 6), d);
+        }
+        // row views are exactly cols long and SoA-consistent with get()
+        let (s0, e0, s1, e1) = p.row(2);
+        assert_eq!(s0.len(), 7);
+        let d = p.get(2, 6);
+        assert_eq!((s0[6], e0[6], s1[6], e1[6]), (d.s0, d.e0, d.s1, d.e1));
+        // untouched cells and the padding tail stay the zero digit pair
+        assert_eq!(p.get(0, 0), WeightDigits::default());
+        let (rs0, ..) = p.raw_planes();
+        assert_eq!(rs0.len(), 3 * 16);
+        for r in 0..3 {
+            assert!(rs0[r * 16 + 7..(r + 1) * 16].iter().all(|&v| v == 0));
+        }
+        // an aligned width gets no padding
+        assert_eq!(DigitPlanes::new(2, 32).stride(), 32);
     }
 
     #[test]

@@ -11,11 +11,49 @@
 //!
 //! `tests::fast_equals_mac` pins the two together; the engine and the
 //! benches use the fast path.
+//!
+//! ## Batched kernel layout
+//!
+//! [`matmul_fast`] is weight-stationary, register-tiled, and blocked:
+//! streams are processed up to [`MAX_TILE`] at a time (shape-aware
+//! dispatch 8 → 4 → scalar), the weight matrix is walked in
+//! [`ROW_BLOCK`]`×`[`COL_BLOCK`] blocks so the active weight block
+//! plus all tile activations stay cache-resident at paper-preset
+//! shapes, and each row-block's outputs accumulate in contiguous
+//! scratch written out in batch-major runs (no stride-`rows`
+//! scatter). Every transform is bit-identity-preserving: each
+//! `(row, stream)` lane runs the exact [`dot_row_chained`] operation
+//! sequence ([`chain_span_t`]), and column blocks are
+//! `MAC_GROUP`-aligned so carrying the f32 accumulator between blocks
+//! reproduces the full-row rounding chain unchanged. The shift-add
+//! tier mirrors the same structure over [`DigitPlanes`]
+//! (`shiftadd::matmul_sa`).
+
+use std::cell::RefCell;
 
 use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
 
 use super::mac::{dot_fsd8_fp8, MacMode, MAC_GROUP};
-use super::shiftadd::{self, KernelTier, WeightDigits};
+use super::shiftadd::{self, DigitPlanes, KernelTier, WeightDigits, XTerm};
+
+/// Widest stream tile of the batched kernels (8 independent FP16
+/// accumulation chains sharing each weight load).
+pub(crate) const MAX_TILE: usize = 8;
+
+/// Row-block height of the blocked batched kernels: one block's
+/// accumulators (`MAX_TILE × ROW_BLOCK` f32 = 1 KiB) live on the
+/// stack.
+pub(crate) const ROW_BLOCK: usize = 32;
+
+/// Column-block width — a [`MAC_GROUP`] multiple, so block boundaries
+/// coincide with rounding-group boundaries and blocking never changes
+/// the chain. Sized so a `ROW_BLOCK × COL_BLOCK` decoded weight block
+/// (32 KiB) plus 8 activation spans (8 KiB decoded, +32 KiB of
+/// decomposed `XTerm`s on the shift-add tier) stays cache-resident at
+/// the paper preset's 10k×256 matrices.
+pub(crate) const COL_BLOCK: usize = 256;
+
+const _: () = assert!(COL_BLOCK % MAC_GROUP == 0, "blocks must align to rounding groups");
 
 /// A weight matrix stored in encoded FloatSD8 form, row-major
 /// `[out][in]` (each output neuron's weights are contiguous — the
@@ -36,10 +74,11 @@ pub struct QMatrix {
     /// stacks — a deliberate simplicity trade; the paper's 1-byte
     /// storage argument is about `codes`, see [`Self::storage_bytes`]).
     decoded_t: Vec<f32>,
-    /// digit-planar layout for the shift-add tier: each code's ≤2
-    /// signed power-of-two digits, extracted once at encode/update
-    /// time (row-major, parallel to `codes`)
-    digits: Vec<WeightDigits>,
+    /// structure-of-arrays digit planes for the shift-add tier: each
+    /// code's ≤2 signed power-of-two digits scattered across four
+    /// parallel `i8` planes at encode/update time (padded row stride —
+    /// see [`DigitPlanes`])
+    digits: DigitPlanes,
     /// which forward-kernel engine [`matvec_fast`]/[`matmul_fast`]
     /// dispatch to for this matrix (runtime-only, never checkpointed)
     tier: KernelTier,
@@ -60,10 +99,11 @@ impl QMatrix {
     pub fn from_codes(rows: usize, cols: usize, codes: Vec<FloatSd8>) -> Self {
         assert_eq!(codes.len(), rows * cols);
         let decoded: Vec<f32> = codes.iter().map(|&c| FLOAT_SD8.decode(c)).collect();
-        let digits: Vec<WeightDigits> = codes.iter().map(|&c| WeightDigits::of(c)).collect();
+        let mut digits = DigitPlanes::new(rows, cols);
         let mut decoded_t = vec![0f32; decoded.len()];
         for r in 0..rows {
             for c in 0..cols {
+                digits.set(r, c, WeightDigits::of(codes[r * cols + c]));
                 decoded_t[c * rows + r] = decoded[r * cols + c];
             }
         }
@@ -80,15 +120,17 @@ impl QMatrix {
         self.tier
     }
 
-    /// The cached digit-planar layout (row-major, parallel to `codes`).
+    /// The cached structure-of-arrays digit planes.
     #[inline]
-    pub fn digits(&self) -> &[WeightDigits] {
+    pub fn digits(&self) -> &DigitPlanes {
         &self.digits
     }
 
+    /// Row `r` of the four digit planes (`s0/e0/s1/e1`), each `cols`
+    /// long — the shift-add kernels' unit-stride view.
     #[inline]
-    pub fn row_digits(&self, r: usize) -> &[WeightDigits] {
-        &self.digits[r * self.cols..(r + 1) * self.cols]
+    pub fn digit_row(&self, r: usize) -> (&[i8], &[i8], &[i8], &[i8]) {
+        self.digits.row(r)
     }
 
     #[inline]
@@ -129,9 +171,9 @@ impl QMatrix {
             self.codes[k] = code;
             let v = FLOAT_SD8.decode(code);
             self.decoded[k] = v;
-            // keep the transposed and digit-planar copies in lockstep
-            self.digits[k] = WeightDigits::of(code);
+            // keep the transposed and digit-plane copies in lockstep
             let (r, c) = (k / self.cols, k % self.cols);
+            self.digits.set(r, c, WeightDigits::of(code));
             self.decoded_t[c * self.rows + r] = v;
         }
     }
@@ -152,23 +194,53 @@ pub fn matvec_mac(w: &QMatrix, x: &[Fp8], bias: &[Fp16], mode: MacMode) -> Vec<F
 /// batched path *bit-identical* to the per-vector path by construction.
 #[inline]
 fn dot_row_chained(row: &[f32], x: &[f32], bias: f32) -> f32 {
-    let cols = row.len();
-    let mut acc = bias; // callers keep bias on the f16 grid
+    chain_span_t::<1>(row, &[x], [bias])[0]
+}
+
+/// Advance `T` independent FP16 accumulation chains over one
+/// group-aligned span of a decoded weight row — the register-tiled
+/// core of the batched kernels, generalizing the old fixed 4-stream
+/// tile. Per group the weight elements are loaded (and widened to f64)
+/// once and reused across all `T` lanes; each lane's operations are
+/// the *exact* [`dot_row_chained`] sequence (same f64 products, same
+/// left-to-right group sums, same one-FP16-round-per-group chain), so
+/// every lane is bit-identical to a standalone per-stream call.
+///
+/// Spans must start on a [`MAC_GROUP`] boundary of the full row (the
+/// blocked callers use `COL_BLOCK`-multiples) so group boundaries
+/// match full-row grouping; carrying the returned f32 accumulators
+/// into the next span's `acc` is exactly the full-row chain, since the
+/// chain state between groups *is* one f32 per lane.
+#[inline]
+pub(crate) fn chain_span_t<const T: usize>(
+    row: &[f32],
+    xs: &[&[f32]; T],
+    mut acc: [f32; T],
+) -> [f32; T] {
+    let n = row.len();
     let mut c = 0;
-    while c + MAC_GROUP <= cols {
-        let g = x[c] as f64 * row[c] as f64
-            + x[c + 1] as f64 * row[c + 1] as f64
-            + x[c + 2] as f64 * row[c + 2] as f64
-            + x[c + 3] as f64 * row[c + 3] as f64;
-        acc = Fp16::from_f64(acc as f64 + g).to_f32();
+    while c + MAC_GROUP <= n {
+        let (w0, w1, w2, w3) =
+            (row[c] as f64, row[c + 1] as f64, row[c + 2] as f64, row[c + 3] as f64);
+        for t in 0..T {
+            let x = xs[t];
+            let g = x[c] as f64 * w0
+                + x[c + 1] as f64 * w1
+                + x[c + 2] as f64 * w2
+                + x[c + 3] as f64 * w3;
+            acc[t] = Fp16::from_f64(acc[t] as f64 + g).to_f32();
+        }
         c += MAC_GROUP;
     }
-    if c < cols {
-        let mut g = 0f64;
-        for cc in c..cols {
-            g += x[cc] as f64 * row[cc] as f64;
+    if c < n {
+        for t in 0..T {
+            let x = xs[t];
+            let mut g = 0f64;
+            for cc in c..n {
+                g += x[cc] as f64 * row[cc] as f64;
+            }
+            acc[t] = Fp16::from_f64(acc[t] as f64 + g).to_f32();
         }
-        acc = Fp16::from_f64(acc as f64 + g).to_f32();
     }
     acc
 }
@@ -216,80 +288,64 @@ fn matvec_fast_impl(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Four independent FP16 chains sharing one pass over the decoded
-/// weight row — the register-tiled inner block of [`matmul_fast`].
-/// Each stream's accumulation is the *exact* operation sequence of
-/// [`dot_row_chained`] (same f64 products, same left-to-right group
-/// sums, same one-FP16-round-per-group chain), so every lane of the
-/// result is bit-identical to a standalone per-stream call; the tiling
-/// only reuses each weight element four times from registers instead
-/// of re-streaming the row per stream.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn dot_row_chained4(
-    row: &[f32],
-    x0: &[f32],
-    x1: &[f32],
-    x2: &[f32],
-    x3: &[f32],
-    bias: f32,
-) -> [f32; 4] {
-    let cols = row.len();
-    let mut acc = [bias; 4];
-    let mut c = 0;
-    while c + MAC_GROUP <= cols {
-        let (w0, w1, w2, w3) =
-            (row[c] as f64, row[c + 1] as f64, row[c + 2] as f64, row[c + 3] as f64);
-        let g0 = x0[c] as f64 * w0 + x0[c + 1] as f64 * w1 + x0[c + 2] as f64 * w2
-            + x0[c + 3] as f64 * w3;
-        let g1 = x1[c] as f64 * w0 + x1[c + 1] as f64 * w1 + x1[c + 2] as f64 * w2
-            + x1[c + 3] as f64 * w3;
-        let g2 = x2[c] as f64 * w0 + x2[c + 1] as f64 * w1 + x2[c + 2] as f64 * w2
-            + x2[c + 3] as f64 * w3;
-        let g3 = x3[c] as f64 * w0 + x3[c + 1] as f64 * w1 + x3[c + 2] as f64 * w2
-            + x3[c + 3] as f64 * w3;
-        acc[0] = Fp16::from_f64(acc[0] as f64 + g0).to_f32();
-        acc[1] = Fp16::from_f64(acc[1] as f64 + g1).to_f32();
-        acc[2] = Fp16::from_f64(acc[2] as f64 + g2).to_f32();
-        acc[3] = Fp16::from_f64(acc[3] as f64 + g3).to_f32();
-        c += MAC_GROUP;
+/// Reusable scratch for [`matmul_fast_with`]: the shift-add tier's
+/// batch-wide activation-decomposition buffer. Steady batched callers
+/// (the LSTM cell's `BatchScratch`) hold one so repeated matmuls never
+/// touch the allocator after warm-up; [`matmul_fast`] falls back to a
+/// thread-local instance.
+#[derive(Default)]
+pub struct MatmulScratch {
+    pub(crate) xt: Vec<XTerm>,
+}
+
+impl MatmulScratch {
+    pub fn new() -> MatmulScratch {
+        MatmulScratch::default()
     }
-    if c < cols {
-        let mut g = [0f64; 4];
-        for cc in c..cols {
-            let wv = row[cc] as f64;
-            g[0] += x0[cc] as f64 * wv;
-            g[1] += x1[cc] as f64 * wv;
-            g[2] += x2[cc] as f64 * wv;
-            g[3] += x3[cc] as f64 * wv;
-        }
-        for (a, gk) in acc.iter_mut().zip(g) {
-            *a = Fp16::from_f64(*a as f64 + gk).to_f32();
-        }
-    }
-    acc
+}
+
+thread_local! {
+    /// Fallback scratch for [`matmul_fast`] callers that don't thread
+    /// their own [`MatmulScratch`] (tape replay, benches, tests).
+    static MM_SCRATCH: RefCell<MatmulScratch> =
+        const { RefCell::new(MatmulScratch { xt: Vec::new() }) };
 }
 
 /// Batched fast matvec: `ys[b] = W · xs[b] + bias` for a whole batch.
 ///
-/// **Weight-stationary, register-tiled** loop order (the serving
-/// engine's amortization argument, mirroring the PE's §V-A batch
-/// loop): the row loop is outermost, so each decoded FloatSD8 row is
-/// streamed from memory once per *batch* instead of once per
-/// *stream*; inside a row, streams are processed four at a time
-/// ([`dot_row_chained4`]) so each weight element loaded is reused
-/// across four independent accumulation chains. For weight matrices
-/// larger than cache this is where batched serving (and the sharded
-/// trainer's forward) wins its throughput. Each `(row, stream)` pair
-/// runs the identical [`dot_row_chained`] operation sequence, so
-/// results are bit-identical to `batch` independent [`matvec_fast`]
-/// calls (pinned by `tests::matmul_fast_matches_per_row`).
+/// **Weight-stationary, register-tiled, blocked** loop order (the
+/// serving engine's amortization argument, mirroring the PE's §V-A
+/// batch loop): streams dispatch shape-aware up to [`MAX_TILE`] at a
+/// time (batch ≥ 8 → tile-8, ≥ 4 → tile-4, else scalar), and inside a
+/// tile the weight matrix is walked in `ROW_BLOCK × COL_BLOCK` blocks
+/// with each decoded row span streamed from memory once per tile and
+/// reused across all lanes from registers. A row-block's outputs
+/// accumulate in contiguous stack scratch and are written to `out` in
+/// batch-major runs — the old per-element stride-`rows` scatter is
+/// gone. Each `(row, stream)` pair still runs the identical
+/// [`dot_row_chained`] operation sequence, so results are
+/// bit-identical to `batch` independent [`matvec_fast`] calls (pinned
+/// by `tests::matmul_fast_matches_per_row` across tile widths).
 /// Timed into the kernel-tier profile exactly like [`matvec_fast`]
 /// (shape class includes `batch`, so occupancy tiers profile apart).
 pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+    MM_SCRATCH.with(|s| matmul_fast_with(w, xs, batch, bias, out, &mut s.borrow_mut()));
+}
+
+/// [`matmul_fast`] with a caller-held [`MatmulScratch`] — the batched
+/// hot loops (LSTM cell steps) thread one through so the shift-add
+/// tier's decomposition buffer is reused across every time step.
+pub fn matmul_fast_with(
+    w: &QMatrix,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    scratch: &mut MatmulScratch,
+) {
     if crate::telemetry::hot_enabled() {
         let t0 = std::time::Instant::now();
-        matmul_fast_impl(w, xs, batch, bias, out);
+        matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE);
         crate::telemetry::note_kernel(
             crate::telemetry::KernelOp::Matmul,
             w.tier,
@@ -300,41 +356,104 @@ pub fn matmul_fast(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mu
         );
         return;
     }
-    matmul_fast_impl(w, xs, batch, bias, out);
+    matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE);
 }
 
-#[inline]
-fn matmul_fast_impl(w: &QMatrix, xs: &[f32], batch: usize, bias: &[f32], out: &mut [f32]) {
+/// Test/bench hook: [`matmul_fast`] with the stream tile capped at
+/// `max_tile` ∈ {1, 4, 8} on either tier. `matmul_fast` is
+/// `max_tile = 8`; the parity suites sweep all widths against
+/// per-stream references, and the kernel bench emits per-width rows.
+/// Untimed (never on the profiled hot path).
+pub fn matmul_tiled(
+    w: &QMatrix,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    max_tile: usize,
+) {
+    assert!(matches!(max_tile, 1 | 4 | 8), "max_tile must be 1, 4, or 8 (got {max_tile})");
+    MM_SCRATCH.with(|s| matmul_impl(w, xs, batch, bias, out, &mut s.borrow_mut(), max_tile));
+}
+
+fn matmul_impl(
+    w: &QMatrix,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    scratch: &mut MatmulScratch,
+    max_tile: usize,
+) {
     if w.tier == KernelTier::ShiftAdd {
-        return shiftadd::matmul_sa(w, xs, batch, bias, out);
+        return shiftadd::matmul_sa(w, xs, batch, bias, out, &mut scratch.xt, max_tile);
     }
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
     assert_eq!(out.len(), batch * w.rows);
-    let (rows, cols) = (w.rows, w.cols);
-    for r in 0..rows {
-        let row = w.row_decoded(r);
-        let b_r = bias[r];
-        let mut b = 0usize;
+    let mut b = 0usize;
+    if max_tile >= 8 {
+        while b + 8 <= batch {
+            matmul_tile_block::<8>(w, xs, bias, out, b);
+            b += 8;
+        }
+    }
+    if max_tile >= 4 {
         while b + 4 <= batch {
-            let ys = dot_row_chained4(
-                row,
-                &xs[b * cols..(b + 1) * cols],
-                &xs[(b + 1) * cols..(b + 2) * cols],
-                &xs[(b + 2) * cols..(b + 3) * cols],
-                &xs[(b + 3) * cols..(b + 4) * cols],
-                b_r,
-            );
-            out[b * rows + r] = ys[0];
-            out[(b + 1) * rows + r] = ys[1];
-            out[(b + 2) * rows + r] = ys[2];
-            out[(b + 3) * rows + r] = ys[3];
+            matmul_tile_block::<4>(w, xs, bias, out, b);
             b += 4;
         }
-        while b < batch {
-            out[b * rows + r] = dot_row_chained(row, &xs[b * cols..(b + 1) * cols], b_r);
-            b += 1;
+    }
+    while b < batch {
+        matmul_tile_block::<1>(w, xs, bias, out, b);
+        b += 1;
+    }
+}
+
+/// One `T`-stream tile of the decoded batched kernel: row/column
+/// blocked with a contiguous per-row-block accumulator, written out
+/// batch-major. Bit-identity argument as in [`chain_span_t`].
+fn matmul_tile_block<const T: usize>(
+    w: &QMatrix,
+    xs: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    b0: usize,
+) {
+    let (rows, cols) = (w.rows, w.cols);
+    let mut acc_blk = [0f32; MAX_TILE * ROW_BLOCK];
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        for t in 0..T {
+            acc_blk[t * rb..t * rb + rb].copy_from_slice(&bias[r0..r0 + rb]);
         }
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let cb = COL_BLOCK.min(cols - c0);
+            let mut xr: [&[f32]; T] = [&[]; T];
+            for t in 0..T {
+                let lo = (b0 + t) * cols + c0;
+                xr[t] = &xs[lo..lo + cb];
+            }
+            for ri in 0..rb {
+                let row = &w.row_decoded(r0 + ri)[c0..c0 + cb];
+                let mut acc = [0f32; T];
+                for t in 0..T {
+                    acc[t] = acc_blk[t * rb + ri];
+                }
+                let acc = chain_span_t::<T>(row, &xr, acc);
+                for t in 0..T {
+                    acc_blk[t * rb + ri] = acc[t];
+                }
+            }
+            c0 += cb;
+        }
+        for t in 0..T {
+            out[(b0 + t) * rows + r0..(b0 + t) * rows + r0 + rb]
+                .copy_from_slice(&acc_blk[t * rb..t * rb + rb]);
+        }
+        r0 += rb;
     }
 }
 
@@ -386,14 +505,18 @@ mod tests {
 
     #[test]
     fn matmul_fast_matches_per_row() {
-        // includes cols not a multiple of MAC_GROUP (12, 7, 5), a
-        // degenerate 1x1, and every batch size across the 4-stream
-        // register-tile boundary (1..=9) — the weight-stationary tiled
-        // loop must stay bit-identical to per-stream matvec_fast in
-        // every tail case.
-        for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1)] {
+        // shapes cross every blocking boundary: cols not a multiple of
+        // MAC_GROUP (12, 7, 5, 17, 31), a degenerate 1x1, rows beyond
+        // one ROW_BLOCK would be too slow here but 9/33-col shapes hit
+        // padded digit-plane strides; batches sweep both register-tile
+        // widths and every remainder (1..=17 crosses 8-, 4- and
+        // scalar-tile dispatch). The blocked weight-stationary loop
+        // must stay bit-identical to per-stream matvec_fast in every
+        // tail case, at every forced tile width.
+        for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1), (4, 16), (2, 17), (5, 31)]
+        {
             let (w, _, bias) = setup(rows, cols, (rows * 1000 + cols) as u64);
-            for batch in 1usize..=9 {
+            for batch in 1usize..=17 {
                 let mut rng = SplitMix64::new(3 + batch as u64);
                 let xs: Vec<f32> = (0..batch * cols)
                     .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
@@ -411,6 +534,43 @@ mod tests {
                         );
                     }
                 }
+                // every capped tile width reproduces the full kernel
+                for max_tile in [1usize, 4, 8] {
+                    let mut tiled = vec![0f32; batch * rows];
+                    matmul_tiled(&w, &xs, batch, &bias, &mut tiled, max_tile);
+                    for (k, (a, e)) in tiled.iter().zip(&out).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            e.to_bits(),
+                            "({rows}x{cols}) batch {batch} tile {max_tile} elem {k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_crosses_row_and_col_block_boundaries() {
+        // rows > ROW_BLOCK and cols > COL_BLOCK force multi-block
+        // accumulation with the f32 chain carried between column
+        // blocks; the per-stream reference never blocks, so equality
+        // pins the carry as a numeric no-op.
+        let rows = ROW_BLOCK + 5;
+        let cols = COL_BLOCK + 9;
+        let (w, _, bias) = setup(rows, cols, 4242);
+        let batch = 9usize; // tile-8 plus a scalar tail
+        let mut rng = SplitMix64::new(17);
+        let xs: Vec<f32> = (0..batch * cols)
+            .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
+            .collect();
+        let mut out = vec![0f32; batch * rows];
+        matmul_fast(&w, &xs, batch, &bias, &mut out);
+        for b in 0..batch {
+            let mut y = vec![0f32; rows];
+            matvec_fast(&w, &xs[b * cols..(b + 1) * cols], &bias, &mut y);
+            for (r, (a, e)) in out[b * rows..(b + 1) * rows].iter().zip(&y).enumerate() {
+                assert_eq!(a.to_bits(), e.to_bits(), "stream {b} row {r}");
             }
         }
     }

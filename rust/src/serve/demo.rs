@@ -8,6 +8,8 @@
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N] [--max-batch B]
 //!                    [--window-us U] [--sessions S] [--tokens T] [--clients C]
 //!                    [--trace serve_trace.jsonl]   (request-lifecycle JSONL trace)
+//!                    [--trace-every N]   (keep every N-th micro-batch's batch/request
+//!                                         lines; lifecycle + summary always traced)
 //!                    [--decode-len L] [--beam K] [--beam-len-norm A]  (mt decode knobs)
 //!                    [--vocab V --dim D --hidden H --layers L]   (synthetic model)
 //! ```
@@ -118,9 +120,19 @@ pub fn run(args: &Args) -> Result<()> {
     // config line leads the stream; sharing it through an Arc keeps
     // the same sink alive across every shard
     let trace = match args.opt("trace") {
-        Some(path) => Some(Arc::new(crate::telemetry::ServeTraceSink::create(
-            std::path::Path::new(path),
-        )?)),
+        Some(path) => {
+            // batch-level sampling period: every N-th micro-batch per
+            // shard keeps its batch/request lines (lifecycle events and
+            // the serve_end summary always emit)
+            let every = args.opt_u64("trace-every", 1)?;
+            if every == 0 {
+                anyhow::bail!("serve: --trace-every must be >= 1 (N keeps every N-th batch)");
+            }
+            Some(Arc::new(crate::telemetry::ServeTraceSink::create_every(
+                std::path::Path::new(path),
+                every,
+            )?))
+        }
         None => None,
     };
     let server = Server::start_traced(model.clone(), cfg, trace.clone())?;

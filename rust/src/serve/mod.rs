@@ -151,6 +151,7 @@ impl Server {
             );
             f.insert("vocab".to_string(), unum(model.input_vocab() as u64));
             f.insert("n_out".to_string(), unum(model.n_out() as u64));
+            f.insert("trace_every".to_string(), unum(tr.every()));
             tr.emit("serve_start", f);
         }
         Ok(Server {

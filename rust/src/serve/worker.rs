@@ -241,7 +241,10 @@ fn run_worker(
         stats.record_kinds(&kind_reqs, &kind_work);
         stats.set_sessions(store.len());
         stats.set_queue_high_water(queue.high_water());
-        if let Some(tr) = &trace {
+        // batch-level lines honor the sink's `--trace-every` sampling;
+        // lifecycle events above always emit, so the sampled stream
+        // keeps its session bookkeeping intact
+        if let Some(tr) = trace.as_ref().filter(|tr| tr.samples(batch_no)) {
             // groups ran in kind order (steps, seqs, finals, decodes),
             // each preserving batch order, so a stable sort by kind
             // aligns `meta` index-wise with `lats`

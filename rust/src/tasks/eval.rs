@@ -24,7 +24,9 @@
 //!              "count": 1024,
 //!              "config": { "vocab": 64, "hidden": 24, ... } },
 //!     "pos": { ..., "confusion": [[gold0_pred0, ...], ...] },
-//!     "nli": { ... }, "mt": { ... }
+//!     "nli": { ... },
+//!     "mt":  { ..., "length_buckets": [
+//!                {"label": "1-8", "loss": 12.3, "count": 30}, ...] }
 //!   }
 //! }
 //! ```
@@ -98,6 +100,25 @@ fn entry(cfg: &TaskConfig, eval: &TaskEval, source: &str) -> Json {
         // gold-ordered rows × pred-ordered columns; fixed class order
         // keeps the rendering byte-deterministic
         m.insert("confusion".to_string(), cm.to_json());
+    }
+    if let Some(buckets) = &eval.length_buckets {
+        // all buckets in their fixed label order (zero-count included)
+        // so the array shape is stable across runs and checkpoints
+        m.insert(
+            "length_buckets".to_string(),
+            Json::Arr(
+                buckets
+                    .iter()
+                    .map(|b| {
+                        let mut o = BTreeMap::new();
+                        o.insert("label".to_string(), Json::Str(b.label.to_string()));
+                        o.insert("loss".to_string(), Json::Num(b.loss));
+                        o.insert("count".to_string(), Json::Num(b.count as f64));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
     }
     m.insert("config".to_string(), Json::Obj(cfg_m));
     Json::Obj(m)

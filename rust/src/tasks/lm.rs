@@ -162,6 +162,7 @@ impl TaskHead for LmTask {
             count,
             confusion: None,
             spans: super::span_timings(&spans),
+            length_buckets: None,
         }
     }
 

@@ -386,6 +386,37 @@ pub struct TaskEval {
     /// byte-identical trace-on vs trace-off) — `eval --trace` emits
     /// them as `eval_span` events with the wall clock under `"timing"`.
     pub spans: Vec<SpanTiming>,
+    /// length-bucketed cross-entropy (mt only; `None` elsewhere):
+    /// every scored target position of a lane lands in the bucket of
+    /// that lane's total scored length, so the report separates short-
+    /// from long-sequence quality. Always all four buckets in fixed
+    /// order (zero-count buckets included) — byte-deterministic.
+    pub length_buckets: Option<Vec<LengthBucket>>,
+}
+
+/// One target-length bucket of an mt evaluation: mean CE is
+/// `loss / count` (guard the empty bucket).
+#[derive(Clone, Copy, Debug)]
+pub struct LengthBucket {
+    /// inclusive scored-length range, e.g. `"9-16"` or `"33+"`
+    pub label: &'static str,
+    /// summed eval CE (nats) over the bucket's scored positions
+    pub loss: f64,
+    /// scored positions in the bucket
+    pub count: u64,
+}
+
+/// Fixed bucket labels, index-aligned with [`length_bucket_index`].
+pub const LENGTH_BUCKET_LABELS: [&str; 4] = ["1-8", "9-16", "17-32", "33+"];
+
+/// Bucket index for a lane whose scored target length is `len`.
+pub fn length_bucket_index(len: usize) -> usize {
+    match len {
+        0..=8 => 0,
+        9..=16 => 1,
+        17..=32 => 2,
+        _ => 3,
+    }
 }
 
 /// Wall-clock timing of one eval lane span (`[lo, hi)`), recorded by a
@@ -627,6 +658,11 @@ pub(crate) struct EvalSpan {
     /// wall clock the shard spent on this span (timing-only; surfaces
     /// as [`SpanTiming::ms`], never in the deterministic fold)
     pub ms: f64,
+    /// per-length-bucket `(loss_sum, count)` accumulators (mt only;
+    /// left empty by heads without buckets — [`fold_spans`] never
+    /// touches them, the owning head folds them itself in the same
+    /// ascending-span order)
+    pub buckets: Vec<(f64, u64)>,
 }
 
 /// Fresh accumulator spans for a `batch`-lane evaluation;
@@ -642,6 +678,7 @@ pub(crate) fn eval_spans(batch: usize, n_classes: usize) -> Vec<EvalSpan> {
             count: 0,
             confusion: vec![0; n_classes * n_classes],
             ms: 0.0,
+            buckets: Vec::new(),
         })
         .collect()
 }

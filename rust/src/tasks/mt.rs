@@ -37,8 +37,8 @@ use crate::train::{
 };
 
 use super::{
-    eval_spans, fold_spans, load_stack, stack_tensors, to_steps, SingleStack, TaskConfig,
-    TaskEval, TaskHead, TaskKind,
+    eval_spans, fold_spans, length_bucket_index, load_stack, stack_tensors, to_steps,
+    LengthBucket, SingleStack, TaskConfig, TaskEval, TaskHead, TaskKind, LENGTH_BUCKET_LABELS,
 };
 use crate::qmath::vector::QMatrix;
 
@@ -238,6 +238,7 @@ impl TaskHead for MtTask {
         run_shards(&mut spans, self.cfg.threads, |_, sp| {
             let timer = crate::telemetry::SpanTimer::start();
             let lanes = sp.hi - sp.lo;
+            sp.buckets = vec![(0.0, 0); LENGTH_BUCKET_LABELS.len()];
             for (src_ids, dec_ids, ys) in &batches {
                 let src_s = lane_slice_ids(src_ids, sp.lo, sp.hi);
                 let dec_s = lane_slice_ids(dec_ids, sp.lo, sp.hi);
@@ -252,14 +253,31 @@ impl TaskHead for MtTask {
                 let logits =
                     dec_stack.forward_batch_traced(&dec_s, &mut hs, &mut cs, &mut dscr, &mut dtape);
                 debug_assert_eq!(logits.len(), t_steps);
+                // per-lane side accumulators for the length buckets;
+                // `sp.loss` keeps its exact t-major accumulation order
+                // (the held-out CE stays byte-identical with buckets on)
+                let mut lane_loss = vec![0f64; lanes];
+                let mut lane_count = vec![0usize; lanes];
                 for (t, row) in logits.iter().enumerate() {
                     for b in 0..lanes {
                         let y = ys[(sp.lo + b) * t_len + t + 1];
                         if y == PAD {
                             continue;
                         }
-                        sp.loss += eval_ce(&row[b * v_tgt..(b + 1) * v_tgt], y as usize);
+                        let ce = eval_ce(&row[b * v_tgt..(b + 1) * v_tgt], y as usize);
+                        sp.loss += ce;
                         sp.count += 1;
+                        lane_loss[b] += ce;
+                        lane_count[b] += 1;
+                    }
+                }
+                // bucket each lane of this batch by its scored target
+                // length (PAD-masked positions excluded)
+                for (&l, &c) in lane_loss.iter().zip(&lane_count) {
+                    if c > 0 {
+                        let i = length_bucket_index(c);
+                        sp.buckets[i].0 += l;
+                        sp.buckets[i].1 += c as u64;
                     }
                 }
             }
@@ -267,6 +285,20 @@ impl TaskHead for MtTask {
         });
         let (loss_sum, _, count, _) = fold_spans(&spans, 0);
         let loss = loss_sum / count.max(1) as f64;
+        // fold the buckets in the same ascending-span order as
+        // `fold_spans` — `--threads N` stays byte-identical
+        let mut folded = [(0f64, 0u64); LENGTH_BUCKET_LABELS.len()];
+        for sp in &spans {
+            for (acc, &(l, c)) in folded.iter_mut().zip(&sp.buckets) {
+                acc.0 += l;
+                acc.1 += c;
+            }
+        }
+        let length_buckets = LENGTH_BUCKET_LABELS
+            .iter()
+            .zip(folded)
+            .map(|(&label, (l, c))| LengthBucket { label, loss: l, count: c })
+            .collect();
         TaskEval {
             task: "mt",
             loss,
@@ -275,6 +307,7 @@ impl TaskHead for MtTask {
             count,
             confusion: None,
             spans: super::span_timings(&spans),
+            length_buckets: Some(length_buckets),
         }
     }
 
@@ -353,5 +386,50 @@ mod tests {
         // MtGen emits no PAD targets: count = eval_batches · B · (S+1)
         // (the +1 scores the EOS position the decoder must predict)
         assert_eq!(e1.count, 2 * 3 * (4 + 1));
+    }
+
+    #[test]
+    fn length_buckets_partition_every_scored_position() {
+        let task = MtTask::new(tiny_cfg());
+        let e1 = task.evaluate();
+        let b1 = e1.length_buckets.as_ref().expect("mt reports length buckets");
+        assert_eq!(
+            b1.iter().map(|b| b.label).collect::<Vec<_>>(),
+            vec!["1-8", "9-16", "17-32", "33+"],
+            "all buckets present in fixed order, zero-count included"
+        );
+        // every lane scores S+1 = 5 positions per eval batch, so the
+        // whole count lands in the first bucket
+        assert_eq!(b1[0].count as usize, e1.count);
+        assert!(b1[1..].iter().all(|b| b.count == 0 && b.loss == 0.0));
+        // bucket losses re-sum the span losses lane-wise: same numbers,
+        // different association — equal up to rounding, and together
+        // they must account for the full held-out CE
+        let total: f64 = b1.iter().map(|b| b.loss).sum();
+        let loss_sum = e1.loss * e1.count as f64;
+        assert!(
+            (total - loss_sum).abs() <= 1e-9 * loss_sum.abs().max(1.0),
+            "bucket losses {total} should account for the fold {loss_sum}"
+        );
+        // byte-deterministic across repeated evaluations
+        let e2 = task.evaluate();
+        let b2 = e2.length_buckets.as_ref().unwrap();
+        for (x, y) in b1.iter().zip(b2.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.count, y.count);
+        }
+    }
+
+    #[test]
+    fn bucket_index_boundaries() {
+        use super::super::length_bucket_index as idx;
+        assert_eq!(idx(1), 0);
+        assert_eq!(idx(8), 0);
+        assert_eq!(idx(9), 1);
+        assert_eq!(idx(16), 1);
+        assert_eq!(idx(17), 2);
+        assert_eq!(idx(32), 2);
+        assert_eq!(idx(33), 3);
+        assert_eq!(idx(1000), 3);
     }
 }

@@ -157,6 +157,7 @@ impl TaskHead for NliTask {
             count,
             confusion: Some(ConfusionMatrix { n_classes: n_cls, counts }),
             spans: super::span_timings(&spans),
+            length_buckets: None,
         }
     }
 

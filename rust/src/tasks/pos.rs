@@ -167,6 +167,7 @@ impl TaskHead for PosTask {
             count,
             confusion: Some(ConfusionMatrix { n_classes: n_tags, counts }),
             spans: super::span_timings(&spans),
+            length_buckets: None,
         }
     }
 

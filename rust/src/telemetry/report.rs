@@ -14,7 +14,9 @@
 //! traces of the same schema side by side and flags regressions:
 //! loss-scale event-count drift, gradient-saturation deltas above
 //! [`SAT_DELTA_PP`] percentage points, and p50/p99 span regressions
-//! above [`SPAN_REGRESSION_PCT`] percent.
+//! above [`SPAN_REGRESSION_PCT`] percent. Both thresholds are tunable
+//! per invocation — `--sat-delta-pp X` and `--span-regression-pct Y`
+//! override the defaults (values must be finite and non-negative).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -28,12 +30,52 @@ use super::serve_trace::SERVE_TRACE_SCHEMA;
 use super::trace::TRACE_SCHEMA;
 
 /// `--diff` flags gradient/weight saturation-rate deltas above this
-/// many percentage points.
+/// many percentage points (default for `--sat-delta-pp`).
 pub const SAT_DELTA_PP: f64 = 5.0;
 
 /// `--diff` flags p50/p99 span (service-latency) regressions above
-/// this percentage.
+/// this percentage (default for `--span-regression-pct`).
 pub const SPAN_REGRESSION_PCT: f64 = 20.0;
+
+/// The `--diff` flagging thresholds; [`Default`] carries the
+/// compile-time values, the CLI flags override per invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct DiffThresholds {
+    /// saturation-rate delta flag, percentage points (`--sat-delta-pp`)
+    pub sat_delta_pp: f64,
+    /// span-regression flag, percent (`--span-regression-pct`)
+    pub span_regression_pct: f64,
+}
+
+impl Default for DiffThresholds {
+    fn default() -> Self {
+        DiffThresholds { sat_delta_pp: SAT_DELTA_PP, span_regression_pct: SPAN_REGRESSION_PCT }
+    }
+}
+
+impl DiffThresholds {
+    /// Parse from CLI flags, rejecting values a threshold can't mean:
+    /// NaN/inf would silently disable (or always fire) a flag, and a
+    /// negative bound can never be crossed sensibly.
+    pub fn from_args(args: &Args) -> Result<DiffThresholds> {
+        let th = DiffThresholds {
+            sat_delta_pp: args.opt_f64("sat-delta-pp", SAT_DELTA_PP)?,
+            span_regression_pct: args.opt_f64("span-regression-pct", SPAN_REGRESSION_PCT)?,
+        };
+        for (flag, v) in [
+            ("sat-delta-pp", th.sat_delta_pp),
+            ("span-regression-pct", th.span_regression_pct),
+        ] {
+            if !v.is_finite() {
+                bail!("--{flag} must be a finite number, got {v}");
+            }
+            if v < 0.0 {
+                bail!("--{flag} must be >= 0 (a negative threshold would flag every delta), got {v}");
+            }
+        }
+        Ok(th)
+    }
+}
 
 pub fn run_cli(args: &Args) -> Result<()> {
     if let Some(a) = args.opt("diff") {
@@ -42,9 +84,13 @@ pub fn run_cli(args: &Args) -> Result<()> {
             .first()
             .map(String::as_str)
             .context("usage: floatsd-lstm report --diff <a.jsonl> <b.jsonl>")?;
+        let th = DiffThresholds::from_args(args)?;
         let ta = std::fs::read_to_string(a).with_context(|| format!("read trace {a}"))?;
         let tb = std::fs::read_to_string(b).with_context(|| format!("read trace {b}"))?;
-        print!("{}", diff(&ta, &tb).with_context(|| format!("diff traces {a} vs {b}"))?);
+        print!(
+            "{}",
+            diff_with(&ta, &tb, th).with_context(|| format!("diff traces {a} vs {b}"))?
+        );
         return Ok(());
     }
     let path = args
@@ -87,16 +133,22 @@ pub fn summarize(text: &str) -> Result<String> {
 }
 
 /// Side-by-side comparison of two traces of the same schema, flagging
-/// loss-scale drift, saturation deltas, and span regressions.
+/// loss-scale drift, saturation deltas, and span regressions at the
+/// default thresholds.
 pub fn diff(a: &str, b: &str) -> Result<String> {
+    diff_with(a, b, DiffThresholds::default())
+}
+
+/// [`diff`] with caller-chosen flagging thresholds.
+pub fn diff_with(a: &str, b: &str, th: DiffThresholds) -> Result<String> {
     let (sa, sb) = (detect_schema(a)?, detect_schema(b)?);
     if sa != sb {
         bail!("cannot diff traces of different schemas ({sa} vs {sb})");
     }
     if sa == SERVE_TRACE_SCHEMA {
-        Ok(diff_serve(&parse_serve(a)?, &parse_serve(b)?))
+        Ok(diff_serve(&parse_serve(a)?, &parse_serve(b)?, th))
     } else {
-        Ok(diff_train(&parse_train(a)?, &parse_train(b)?))
+        Ok(diff_train(&parse_train(a)?, &parse_train(b)?, th))
     }
 }
 
@@ -308,7 +360,7 @@ fn render_train(a: &TrainAgg) -> String {
     out
 }
 
-fn diff_train(a: &TrainAgg, b: &TrainAgg) -> String {
+fn diff_train(a: &TrainAgg, b: &TrainAgg, th: DiffThresholds) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "diff ({TRACE_SCHEMA}): a={} events, b={} events", a.events, b.events);
     let _ = writeln!(
@@ -339,12 +391,12 @@ fn diff_train(a: &TrainAgg, b: &TrainAgg) -> String {
             let gb = b.grads.get(name).unwrap_or(&empty);
             let dz = pct(gb.zeros, gb.total) - pct(ga.zeros, ga.total);
             let dt = pct(gb.top, gb.total) - pct(ga.top, ga.total);
-            let flag = dz.abs() > SAT_DELTA_PP || dt.abs() > SAT_DELTA_PP;
+            let flag = dz.abs() > th.sat_delta_pp || dt.abs() > th.sat_delta_pp;
             let _ = writeln!(
                 out,
                 "  {name:<12} zero {dz:+6.2}pp  top-binade {dt:+6.2}pp{}",
                 if flag {
-                    format!("  [FLAG: saturation delta > {SAT_DELTA_PP}pp]")
+                    format!("  [FLAG: saturation delta > {}pp]", th.sat_delta_pp)
                 } else {
                     String::new()
                 }
@@ -563,7 +615,7 @@ fn render_serve(a: &ServeAgg) -> String {
     out
 }
 
-fn diff_serve(a: &ServeAgg, b: &ServeAgg) -> String {
+fn diff_serve(a: &ServeAgg, b: &ServeAgg, th: DiffThresholds) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
@@ -606,12 +658,12 @@ fn diff_serve(a: &ServeAgg, b: &ServeAgg) -> String {
             continue;
         }
         let change = if va > 0.0 { 100.0 * (vb - va) / va } else { f64::INFINITY };
-        let flag = change > SPAN_REGRESSION_PCT;
+        let flag = change > th.span_regression_pct;
         let _ = writeln!(
             out,
             "service {label}: {va:.0} us -> {vb:.0} us ({change:+.1}%){}",
             if flag {
-                format!("  [FLAG: span regression > {SPAN_REGRESSION_PCT}%]")
+                format!("  [FLAG: span regression > {}%]", th.span_regression_pct)
             } else {
                 String::new()
             }
@@ -739,5 +791,47 @@ mod tests {
         assert!(!ok.contains("[FLAG"), "{ok}");
         // schema mismatch is an error, not a garbage report
         assert!(diff(&serve_trace(100.0), &train_trace(1, 4)).is_err());
+    }
+
+    #[test]
+    fn diff_thresholds_are_tunable_per_invocation() {
+        // a +10% span change: silent at the default 20%, flagged at 5%
+        let th = DiffThresholds { span_regression_pct: 5.0, ..DiffThresholds::default() };
+        let d = diff_with(&serve_trace(100.0), &serve_trace(110.0), th).unwrap();
+        assert!(d.contains("span regression > 5%"), "{d}");
+        // a 36pp saturation delta: flagged at 5pp, silent at 40pp —
+        // and the flag text names the active threshold
+        let th = DiffThresholds { sat_delta_pp: 40.0, ..DiffThresholds::default() };
+        let clean = diff_with(&train_trace(1, 4), &train_trace(1, 40), th).unwrap();
+        assert!(!clean.contains("saturation delta"), "{clean}");
+        let flagged = diff(&train_trace(1, 4), &train_trace(1, 40)).unwrap();
+        assert!(flagged.contains("saturation delta > 5pp"), "{flagged}");
+    }
+
+    #[test]
+    fn threshold_flags_reject_non_finite_and_negative_values() {
+        let parse = |s: &str| {
+            Args::parse(
+                std::iter::once("bin".to_string()).chain(s.split_whitespace().map(String::from)),
+            )
+        };
+        let ok = DiffThresholds::from_args(&parse("report --sat-delta-pp 2.5")).unwrap();
+        assert_eq!(ok.sat_delta_pp, 2.5);
+        assert_eq!(ok.span_regression_pct, SPAN_REGRESSION_PCT);
+        for bad in [
+            "report --sat-delta-pp NaN",
+            "report --sat-delta-pp inf",
+            "report --sat-delta-pp -1",
+            "report --span-regression-pct -0.5",
+            "report --span-regression-pct nope",
+        ] {
+            let err = DiffThresholds::from_args(&parse(bad))
+                .expect_err(&format!("{bad:?} must be rejected"))
+                .to_string();
+            assert!(
+                err.contains("sat-delta-pp") || err.contains("span-regression-pct"),
+                "error for {bad:?} should name the flag: {err}"
+            );
+        }
     }
 }

@@ -32,6 +32,17 @@
 //!   accumulated since the sink opened the gate (see
 //!   [`super::note_kernel`]).
 //!
+//! ## Sampling (`--trace-every N`)
+//!
+//! A sink built with [`ServeTraceSink::create_every`] keeps only every
+//! N-th micro-batch's `batch`/`request` lines per shard (the N-th,
+//! 2N-th, ... by the shard's batch ordinal — [`ServeTraceSink::samples`]).
+//! Lifecycle events (`serve_start`, `session_open`, `session_close`,
+//! `reject`) and the `serve_end` summary are never sampled away, so a
+//! sampled stream is a strict subsequence of the full stream with its
+//! session bookkeeping intact. Sampling is a trace-volume choice, not
+//! a numeric one: the served bits are identical at every N.
+//!
 //! ## Determinism
 //!
 //! Enabling the sink never perturbs a served logit, decode token, or
@@ -76,10 +87,19 @@ pub struct ServeTraceSink {
     inner: Mutex<Inner>,
     path: PathBuf,
     kernel_base: Vec<KernelProfileRow>,
+    every: u64,
 }
 
 impl ServeTraceSink {
     pub fn create(path: &Path) -> Result<ServeTraceSink> {
+        Self::create_every(path, 1)
+    }
+
+    /// Like [`Self::create`], but batch-level events are kept only for
+    /// every `every`-th micro-batch per shard (see [`Self::samples`]).
+    /// `every` must be >= 1 — callers validate before construction.
+    pub fn create_every(path: &Path, every: u64) -> Result<ServeTraceSink> {
+        debug_assert!(every >= 1, "trace-every is validated at the CLI boundary");
         let file = File::create(path)
             .with_context(|| format!("create serve trace file {}", path.display()))?;
         // baseline before the gate opens: spans recorded by an earlier
@@ -90,7 +110,21 @@ impl ServeTraceSink {
             inner: Mutex::new(Inner { out: BufWriter::new(file), deferred: None }),
             path: path.to_path_buf(),
             kernel_base,
+            every: every.max(1),
         })
+    }
+
+    /// The sampling period (1 = every micro-batch is traced).
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// Whether the shard-local micro-batch with 0-based ordinal
+    /// `batch_no` should emit its `batch`/`request` lines: the N-th,
+    /// 2N-th, ... batches sample (so `every = 1` keeps everything and
+    /// the very first batch is kept only when `every == 1`).
+    pub fn samples(&self, batch_no: u64) -> bool {
+        (batch_no + 1) % self.every == 0
     }
 
     /// Append one event line; `fields` gains the common

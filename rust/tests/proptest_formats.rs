@@ -226,9 +226,38 @@ fn master_updates_keep_digit_planes_in_sync() {
                 .collect();
             w.apply_master_update(&mut masters, &deltas);
         }
-        // the cached digit planes must equal a fresh extraction ...
-        for (k, (&code, &dig)) in w.codes.iter().zip(w.digits()).enumerate() {
-            assert_eq!(dig, WeightDigits::of(code), "digit plane stale at {k}");
+        // the cached SoA digit planes must equal a fresh extraction ...
+        for r in 0..rows {
+            for c in 0..cols {
+                let code = w.codes[r * cols + c];
+                assert_eq!(
+                    w.digits().get(r, c),
+                    WeightDigits::of(code),
+                    "digit plane stale at ({r},{c})"
+                );
+            }
+        }
+        // ... the per-row plane views agree with the element view ...
+        for r in 0..rows {
+            let (s0, e0, s1, e1) = w.digit_row(r);
+            assert_eq!(s0.len(), cols, "row view must exclude the padding tail");
+            for c in 0..cols {
+                let d = w.digits().get(r, c);
+                assert_eq!((s0[c], e0[c], s1[c], e1[c]), (d.s0, d.e0, d.s1, d.e1), "({r},{c})");
+            }
+        }
+        // ... the padded stride stays 16-aligned with an all-zero tail
+        // (s == 0 means the padding can never contribute to a kernel)
+        let stride = w.digits().stride();
+        assert_eq!(stride % 16, 0, "stride {stride} not 16-aligned");
+        assert!(stride >= cols);
+        let (ps0, _, ps1, _) = w.digits().raw_planes();
+        assert_eq!(ps0.len(), rows * stride);
+        for r in 0..rows {
+            for k in r * stride + cols..(r + 1) * stride {
+                assert_eq!(ps0[k], 0, "s0 padding dirty at row {r}");
+                assert_eq!(ps1[k], 0, "s1 padding dirty at row {r}");
+            }
         }
         // ... and the shift-add kernel must still match decoded
         let x: Vec<f32> = (0..cols).map(|_| round_f8(g.f32_range(-4.0, 4.0))).collect();

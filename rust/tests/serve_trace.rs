@@ -390,6 +390,95 @@ fn serve_trace_is_byte_deterministic_for_a_fixed_sequential_schedule() {
     }
 }
 
+/// Order-preserving two-pointer subsequence check.
+fn is_subsequence(sub: &[String], full: &[String]) -> bool {
+    let mut it = full.iter();
+    sub.iter().all(|line| it.any(|f| f == line))
+}
+
+#[test]
+fn trace_every_samples_batch_lines_without_perturbing_served_bits() {
+    let dir = test_dir();
+    let model = model_for(TaskKind::Lm);
+    // sequential driving on one worker realizes the same schedule (and
+    // the same per-shard batch ordinals) in both runs
+    let run = |every: u64, name: &str| -> (Vec<u64>, PathBuf) {
+        let trace = dir.join(format!("sampled_{name}.jsonl"));
+        let sink = Arc::new(ServeTraceSink::create_every(&trace, every).unwrap());
+        let server =
+            Server::start_traced(model.clone(), tiny_cfg(1), Some(sink.clone())).unwrap();
+        let bits = drive(&model, &server);
+        // exercise the (never-sampled) close path through a live batch
+        server.close_session(0);
+        let (tx, rx) = mpsc::channel();
+        server.submit(1, 1, tx).unwrap();
+        rx.recv_timeout(RECV).unwrap();
+        server.shutdown();
+        sink.finish().unwrap();
+        (bits, trace)
+    };
+    let (bits_full, full_path) = run(1, "full");
+    let (bits_sampled, sampled_path) = run(3, "every3");
+    assert_eq!(bits_sampled, bits_full, "--trace-every perturbed served bits");
+
+    // serve_start records the period (and is the only line that may
+    // differ between the runs — drop it from the residue compare)
+    let first_ev = |p: &Path| -> Json {
+        let text = std::fs::read_to_string(p).unwrap();
+        Json::parse(text.lines().next().expect("non-empty trace")).unwrap()
+    };
+    assert_eq!(first_ev(&full_path).get("trace_every").and_then(Json::as_usize), Some(1));
+    assert_eq!(first_ev(&sampled_path).get("trace_every").and_then(Json::as_usize), Some(3));
+
+    let residue = |p: &Path| -> Vec<String> {
+        deterministic_serve_lines(p)
+            .into_iter()
+            .map(|l| {
+                let mut j = Json::parse(&l).unwrap();
+                if let Json::Obj(m) = &mut j {
+                    m.remove("trace_every");
+                }
+                j.to_string()
+            })
+            .collect()
+    };
+    let full = residue(&full_path);
+    let sampled = residue(&sampled_path);
+    assert!(
+        is_subsequence(&sampled, &full),
+        "sampled stream must be a strict subsequence of the full stream"
+    );
+
+    let count = |lines: &[String], ev: &str| {
+        lines
+            .iter()
+            .filter(|l| Json::parse(l).unwrap().get("ev").and_then(Json::as_str) == Some(ev))
+            .count()
+    };
+    // lifecycle events and the summary are never sampled away
+    for want in ["serve_start", "session_open", "session_close", "serve_end"] {
+        assert_eq!(count(&sampled, want), count(&full, want), "sampling touched {want:?}");
+        assert!(count(&sampled, want) > 0, "stream never emitted {want:?}");
+    }
+    // batch-level lines are thinned...
+    let full_batches = count(&full, "batch");
+    let sampled_batches = count(&sampled, "batch");
+    assert!(full_batches >= 3, "load too small to exercise sampling: {full_batches} batches");
+    assert!(
+        sampled_batches < full_batches && sampled_batches > 0,
+        "every=3 kept {sampled_batches} of {full_batches} batch lines"
+    );
+    assert!(count(&sampled, "request") < count(&full, "request"), "request lines not thinned");
+    // ...and the kept ones are exactly the N-th, 2N-th, ... per shard
+    for l in &sampled {
+        let j = Json::parse(l).unwrap();
+        if j.get("ev").and_then(Json::as_str) == Some("batch") {
+            let b = j.get("batch").and_then(Json::as_usize).unwrap() as u64;
+            assert_eq!((b + 1) % 3, 0, "batch ordinal {b} should have been sampled away");
+        }
+    }
+}
+
 #[test]
 fn eval_report_bytes_are_identical_with_and_without_a_trace_sink() {
     use floatsd_lstm::qmath::KernelTier;

@@ -24,7 +24,7 @@ use floatsd_lstm::hardware::mac_sim::MacPipeline;
 use floatsd_lstm::lstm::synthetic_stack;
 use floatsd_lstm::qmath::mac::MAC_GROUP;
 use floatsd_lstm::qmath::shiftadd::{decompose_x, dot_row_sa_wide, WeightDigits};
-use floatsd_lstm::qmath::vector::{matmul_fast, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::vector::{matmul_fast, matmul_tiled, matvec_fast, QMatrix};
 use floatsd_lstm::qmath::KernelTier;
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::ServeModel;
@@ -119,13 +119,27 @@ fn all_256_codes_match_decoded_for_every_activation_class() {
 #[test]
 fn awkward_shapes_and_batches_match_decoded() {
     let mut rng = SplitMix64::new(77);
-    // cols off the MAC_GROUP boundary, a degenerate 1x1, and every
-    // batch size across the decoded path's 4-stream register tile
-    for &(rows, cols) in &[(6usize, 12usize), (3, 7), (9, 5), (1, 1), (5, 33)] {
+    // cols off the MAC_GROUP boundary, a degenerate 1x1, widths that
+    // land just below / on / above the digit planes' 16-lane padded
+    // stride (15/16/17, 31, 48), and every batch size across both
+    // register-tile widths (1..=17 crosses 8-, 4- and scalar-tile
+    // dispatch) — all swept at every forced tile cap on both tiers.
+    for &(rows, cols) in &[
+        (6usize, 12usize),
+        (3, 7),
+        (9, 5),
+        (1, 1),
+        (5, 33),
+        (4, 15),
+        (4, 16),
+        (4, 17),
+        (3, 31),
+        (2, 48),
+    ] {
         let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut w = QMatrix::from_f32(rows, cols, &data);
         let bias: Vec<f32> = (0..rows).map(|_| round_f16(rng.uniform(-0.5, 0.5))).collect();
-        for batch in 1usize..=9 {
+        for batch in 1usize..=17 {
             let xs: Vec<f32> = (0..batch * cols)
                 .map(|_| rng.uniform(-1.0, 1.0) * 2f32.powi(rng.uniform(0.0, 30.0) as i32 - 15))
                 .collect();
@@ -138,6 +152,23 @@ fn awkward_shapes_and_batches_match_decoded() {
             let dec_bits: Vec<u32> = dec.iter().map(|v| v.to_bits()).collect();
             let sa_bits: Vec<u32> = sa.iter().map(|v| v.to_bits()).collect();
             assert_eq!(sa_bits, dec_bits, "({rows}x{cols}) batch {batch} diverged");
+            // capped tile widths reproduce the full kernel on both tiers
+            for max_tile in [1usize, 4, 8] {
+                for (tier, want) in
+                    [(KernelTier::Decoded, &dec_bits), (KernelTier::ShiftAdd, &sa_bits)]
+                {
+                    w.set_kernel_tier(tier);
+                    let mut tiled = vec![0f32; batch * rows];
+                    matmul_tiled(&w, &xs, batch, &bias, &mut tiled, max_tile);
+                    let tiled_bits: Vec<u32> = tiled.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        &tiled_bits,
+                        want,
+                        "({rows}x{cols}) batch {batch} tile {max_tile} {} diverged",
+                        tier.name()
+                    );
+                }
+            }
         }
     }
 }

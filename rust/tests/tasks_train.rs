@@ -212,4 +212,12 @@ fn eval_report_covers_all_four_tasks_and_is_byte_deterministic() {
     }
     assert!(r1.contains("checkpoint:"), "trained pos entry must cite its checkpoint");
     assert!(r1.contains("\"source\":\"init\""), "untrained tasks must be marked init");
+    // the mt entry carries the length-bucketed CE block with every
+    // bucket present in fixed order (zero-count buckets included)
+    assert!(r1.contains("\"length_buckets\""), "mt entry missing length_buckets: {r1}");
+    for label in ["\"1-8\"", "\"9-16\"", "\"17-32\"", "\"33+\""] {
+        assert!(r1.contains(label), "length bucket {label} missing from report");
+    }
+    // exactly one task (mt) reports buckets
+    assert_eq!(r1.matches("\"length_buckets\"").count(), 1);
 }
