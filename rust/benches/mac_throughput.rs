@@ -1,10 +1,11 @@
 //! Software-MAC throughput: architectural MAC (`mac_exact`), the
 //! bit-level pipeline model, the serial-round ablation, a plain f32
 //! FMA baseline — plus the matvec/matmul kernel tiers (`decoded` vs
-//! `shiftadd`), whose rows land in `BENCH_train.json` under
-//! `kernel_rows` so the decoded-vs-shiftadd trajectory is trackable
-//! across PRs. This is the L3 hot-path microbench behind the §Perf
-//! iteration log.
+//! `shiftadd`) swept across every host-available SIMD path (`scalar`,
+//! `sse2`, `avx2`), whose rows land in `BENCH_train.json` under
+//! `kernel_rows` so the decoded-vs-shiftadd and per-ISA trajectories
+//! are trackable across PRs. This is the L3 hot-path microbench behind
+//! the §Perf iteration log.
 //!
 //! Run: `cargo bench --bench mac_throughput`
 //! Quick (CI) configuration: `FSD_BENCH_QUICK=1` shrinks the kernel
@@ -16,8 +17,8 @@ use floatsd_lstm::benchlib::{bench, black_box, BenchStats};
 use floatsd_lstm::formats::{round_f16, round_f8, FloatSd8, Fp16, Fp8, FLOAT_SD8};
 use floatsd_lstm::hardware::mac_sim::MacPipeline;
 use floatsd_lstm::qmath::mac::{mac_exact, mac_serial};
-use floatsd_lstm::qmath::vector::{matmul_fast, matmul_tiled, matvec_fast, QMatrix};
-use floatsd_lstm::qmath::KernelTier;
+use floatsd_lstm::qmath::vector::{matmul_isa, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::{IsaPath, KernelTier};
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::tensorfile::json::Json;
 
@@ -28,14 +29,18 @@ fn bench_json_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_train.json")
 }
 
-/// One kernel-tier row: op + tier + register-tile width + measured
-/// rate, with the bit-identical cross-check result recorded alongside
-/// the numbers. `tile` is `"t8"`/`"t4"`/`"t1"` — the stream count of
-/// the widest tile the run dispatches ("t1" is the pre-SoA scalar
-/// path, so old-vs-new tiling stays comparable across PRs).
+/// One kernel-tier row: op + tier + forced ISA + register-tile width
+/// + measured rate, with the bit-identical cross-check result recorded
+/// alongside the numbers. `tile` is `"t8"`/`"t4"`/`"t1"` — the stream
+/// count of the widest tile the run dispatches ("t1" is the pre-SoA
+/// scalar path, so old-vs-new tiling stays comparable across PRs).
+/// `isa` is the forced SIMD path; every (tier, isa, tile) combination
+/// is pinned against the decoded/scalar reference bits.
+#[allow(clippy::too_many_arguments)]
 fn kernel_row(
     op: &str,
     tier: KernelTier,
+    isa: IsaPath,
     tile: &str,
     s: &BenchStats,
     macs: usize,
@@ -44,6 +49,7 @@ fn kernel_row(
     let mut m = BTreeMap::new();
     m.insert("op".to_string(), Json::Str(op.to_string()));
     m.insert("tier".to_string(), Json::Str(tier.name().to_string()));
+    m.insert("isa".to_string(), Json::Str(isa.name().to_string()));
     m.insert("tile".to_string(), Json::Str(tile.to_string()));
     m.insert("ns_per_call".to_string(), Json::Num(s.ns_per_iter()));
     m.insert("m_macs_per_s".to_string(), Json::Num(s.throughput(macs) / 1e6));
@@ -113,45 +119,62 @@ fn main() -> anyhow::Result<()> {
 
     let mut kernel_rows: Vec<Json> = Vec::new();
     let mut reference: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+    let isas: Vec<IsaPath> = [IsaPath::Scalar, IsaPath::Sse2, IsaPath::Avx2]
+        .into_iter()
+        .filter(|i| i.available())
+        .collect();
     for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
         w.set_kernel_tier(tier);
-        let s = bench(&format!("matvec [{}]", tier.name()), || {
-            matvec_fast(&w, &x, &bias, &mut out);
-            black_box(&out);
-        });
-        println!("{s}  -> {:.1} M MACs/s", s.throughput(rows_n * cols) / 1e6);
-        let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
-        let identical =
-            reference.entry("matvec".to_string()).or_insert_with(|| bits.clone()) == &bits;
-        kernel_rows.push(kernel_row("matvec", tier, "t1", &s, rows_n * cols, identical));
-        assert!(identical, "{}: matvec diverged from decoded", tier.name());
-
-        // auto dispatch: batch >= 8 rides the widest (8-stream) tile
-        let s = bench(&format!("matmul x{batch} [{}]", tier.name()), || {
-            matmul_fast(&w, &xb, batch, &bias, &mut out_b);
-            black_box(&out_b);
-        });
-        println!("{s}  -> {:.1} M MACs/s", s.throughput(batch * rows_n * cols) / 1e6);
-        let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
-        let identical =
-            reference.entry("matmul".to_string()).or_insert_with(|| bits.clone()) == &bits;
-        kernel_rows.push(kernel_row("matmul", tier, "t8", &s, batch * rows_n * cols, identical));
-        assert!(identical, "{}: matmul diverged from decoded", tier.name());
-
-        // forced narrower tiles: the old-vs-new tiling comparison —
-        // t4 is PR 7's widest tile, t1 the original scalar loop; all
-        // three widths must produce the same bits
-        for (max_tile, tile) in [(4usize, "t4"), (1usize, "t1")] {
-            let s = bench(&format!("matmul x{batch} [{} {tile}]", tier.name()), || {
-                matmul_tiled(&w, &xb, batch, &bias, &mut out_b, max_tile);
-                black_box(&out_b);
+        for &isa in &isas {
+            w.set_kernel_isa(isa);
+            // matvec is the batch-1 path: scalar on every ISA (no lane
+            // to fill), so the per-ISA rows pin that forcing an ISA
+            // never perturbs it
+            let s = bench(&format!("matvec [{} {}]", tier.name(), isa.name()), || {
+                matvec_fast(&w, &x, &bias, &mut out);
+                black_box(&out);
             });
-            println!("{s}  -> {:.1} M MACs/s", s.throughput(batch * rows_n * cols) / 1e6);
-            let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
-            let identical = reference["matmul"] == bits;
-            kernel_rows
-                .push(kernel_row("matmul", tier, tile, &s, batch * rows_n * cols, identical));
-            assert!(identical, "{}: matmul {tile} diverged from decoded t8", tier.name());
+            println!("{s}  -> {:.1} M MACs/s", s.throughput(rows_n * cols) / 1e6);
+            let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            let identical =
+                reference.entry("matvec".to_string()).or_insert_with(|| bits.clone()) == &bits;
+            kernel_rows.push(kernel_row("matvec", tier, isa, "t1", &s, rows_n * cols, identical));
+            assert!(
+                identical,
+                "{} {}: matvec diverged from decoded scalar",
+                tier.name(),
+                isa.name()
+            );
+
+            // forced tiles: t8 is the widest (AVX2 rides quads, SSE2
+            // pairs), t4 is PR 7's widest, t1 the original scalar loop;
+            // every (tier, isa, tile) must produce the same bits
+            for (max_tile, tile) in [(8usize, "t8"), (4usize, "t4"), (1usize, "t1")] {
+                let label = format!("matmul x{batch} [{} {} {tile}]", tier.name(), isa.name());
+                let s = bench(&label, || {
+                    matmul_isa(&w, &xb, batch, &bias, &mut out_b, max_tile, isa);
+                    black_box(&out_b);
+                });
+                println!("{s}  -> {:.1} M MACs/s", s.throughput(batch * rows_n * cols) / 1e6);
+                let bits: Vec<u32> = out_b.iter().map(|v| v.to_bits()).collect();
+                let identical =
+                    reference.entry("matmul".to_string()).or_insert_with(|| bits.clone()) == &bits;
+                kernel_rows.push(kernel_row(
+                    "matmul",
+                    tier,
+                    isa,
+                    tile,
+                    &s,
+                    batch * rows_n * cols,
+                    identical,
+                ));
+                assert!(
+                    identical,
+                    "{} {}: matmul {tile} diverged from decoded scalar t8",
+                    tier.name(),
+                    isa.name()
+                );
+            }
         }
     }
 

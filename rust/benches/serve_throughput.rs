@@ -6,9 +6,12 @@
 //! `results/serve_throughput.csv` (batch, tokens_per_s, speedup) and a
 //! machine-readable `BENCH_serve.json` at the repo root (tokens/s +
 //! p50/p99 per batch size, server end-to-end rows — one per
-//! `(workers, max_batch, kernel tier)` with a `kernel_profile` block
-//! of per-shape-class decoded-vs-shiftadd wall time — and per-task
-//! rows) so the bench trajectory is trackable across PRs.
+//! `(workers, max_batch, kernel tier, kernel isa)` with a
+//! `kernel_profile` block of per-shape-class decoded-vs-shiftadd wall
+//! time split by dispatched ISA — and per-task rows) so the bench
+//! trajectory is trackable across PRs. When the host's widest ISA is
+//! plain `scalar` the SIMD rows are skipped (they would duplicate the
+//! scalar rows bit for bit).
 //!
 //! The win mechanism: the weight-stationary `matmul_fast` streams each
 //! decoded weight row once per micro-batch instead of once per stream,
@@ -23,7 +26,7 @@ use std::time::Duration;
 
 use floatsd_lstm::benchlib::{bench, black_box, results_dir, BenchStats, Csv};
 use floatsd_lstm::lstm::synthetic_stack;
-use floatsd_lstm::qmath::KernelTier;
+use floatsd_lstm::qmath::{IsaPath, KernelTier};
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::demo::{drive_load, drive_task_load};
 use floatsd_lstm::serve::{DecodeParams, ServeConfig, ServeModel, Server};
@@ -113,23 +116,35 @@ fn main() -> anyhow::Result<()> {
     // the telemetry gate open, so the gated kernel wrappers attribute
     // decoded-vs-shiftadd wall time per matvec/matmul shape class
     let shared = Arc::new(stack);
-    let server_rows = [
-        (1usize, 16usize, KernelTier::Decoded),
-        (4, 16, KernelTier::Decoded),
-        (4, 16, KernelTier::ShiftAdd),
+    let isa_auto = IsaPath::detect();
+    let mut server_rows = vec![
+        (1usize, 16usize, KernelTier::Decoded, IsaPath::Scalar),
+        (4, 16, KernelTier::Decoded, IsaPath::Scalar),
+        (4, 16, KernelTier::ShiftAdd, IsaPath::Scalar),
         // max-batch 8 caps micro-batches at exactly one 8-stream tile:
         // the wide-tile hot path with no scalar tail, profiled on the
         // shift-add tier
-        (4, 8, KernelTier::ShiftAdd),
+        (4, 8, KernelTier::ShiftAdd, IsaPath::Scalar),
     ];
-    for &(workers, max_batch, tier) in &server_rows {
-        // a fresh same-seed stack per row — the tier is a runtime knob
-        // on the stack, and same-seed rebuilds are bit-identical
+    if isa_auto != IsaPath::Scalar {
+        // per-ISA rows: the same served workload through the widest
+        // host SIMD path — bit-identical tokens, different wall time
+        server_rows.push((4, 16, KernelTier::Decoded, isa_auto));
+        server_rows.push((4, 16, KernelTier::ShiftAdd, isa_auto));
+        server_rows.push((4, 8, KernelTier::ShiftAdd, isa_auto));
+    }
+    for &(workers, max_batch, tier, isa) in &server_rows {
+        // a fresh same-seed stack per row — tier and ISA are runtime
+        // knobs on the stack, and same-seed rebuilds are bit-identical
         let mut st = synthetic_stack(vocab, dim, hidden, layers, vocab, 20200711);
         st.set_kernel_tier(tier);
+        st.set_kernel_isa(isa);
         let st = Arc::new(st);
-        let trace_path = results_dir()
-            .join(format!("serve_trace_{workers}w_b{max_batch}_{}.jsonl", tier.name()));
+        let trace_path = results_dir().join(format!(
+            "serve_trace_{workers}w_b{max_batch}_{}_{}.jsonl",
+            tier.name(),
+            isa.name()
+        ));
         let sink = Arc::new(ServeTraceSink::create(&trace_path)?);
         let server = Server::start_traced(
             Arc::new(ServeModel::lm(st.clone())?),
@@ -142,9 +157,10 @@ fn main() -> anyhow::Result<()> {
         let agg = server.stats();
         let e2e_tps = streamed as f64 / wall.as_secs_f64();
         println!(
-            "server end-to-end ({workers} workers, max-batch {max_batch}, {}): \
+            "server end-to-end ({workers} workers, max-batch {max_batch}, {} {}): \
              {:.0} tokens/s | occupancy {:.2} | latency {}",
             tier.name(),
+            isa.name(),
             e2e_tps,
             agg.mean_occupancy,
             agg.latency
@@ -153,6 +169,7 @@ fn main() -> anyhow::Result<()> {
         m.insert("workers".to_string(), jnum(workers as f64));
         m.insert("max_batch".to_string(), jnum(max_batch as f64));
         m.insert("tier".to_string(), Json::Str(tier.name().to_string()));
+        m.insert("isa".to_string(), Json::Str(isa.name().to_string()));
         m.insert("tokens_per_s".to_string(), jnum(e2e_tps));
         m.insert("occupancy".to_string(), jnum(agg.mean_occupancy));
         m.insert("p50_us".to_string(), jnum(agg.latency.p50.as_secs_f64() * 1e6));

@@ -130,6 +130,13 @@ impl QLstmCell {
         self.wh.set_kernel_tier(tier);
     }
 
+    /// Select the SIMD execution path for both fused weight matrices
+    /// (bit-identical across every path — see [`crate::qmath::simd`]).
+    pub fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        self.wx.set_kernel_isa(isa);
+        self.wh.set_kernel_isa(isa);
+    }
+
     /// One time step. `x` must already be on the FP8 grid (the caller
     /// quantizes embeddings / inter-layer activations); `h`/`c` are the
     /// recurrent state (h on FP8, c on FP16 — maintained by this fn).

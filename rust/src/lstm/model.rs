@@ -63,6 +63,11 @@ impl Dense {
     pub fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
         self.w.set_kernel_tier(tier);
     }
+
+    /// Select the SIMD execution path for the weight matrix.
+    pub fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        self.w.set_kernel_isa(isa);
+    }
 }
 
 /// One (optionally bidirectional) quantized LSTM layer.
@@ -192,6 +197,29 @@ impl QLstmStack {
     /// [`set_kernel_tier`]: Self::set_kernel_tier
     pub fn kernel_tier(&self) -> crate::qmath::KernelTier {
         self.head.w.kernel_tier()
+    }
+
+    /// Select the SIMD execution path for every weight matrix in the
+    /// stack (all LSTM cells, both directions, plus the dense head).
+    /// Like tiers, the ISA is a runtime choice — it never enters
+    /// checkpoints, and every path is bit-identical
+    /// ([`crate::qmath::simd`]).
+    pub fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        for layer in &mut self.layers {
+            layer.fwd.set_kernel_isa(isa);
+            if let Some(bwd) = &mut layer.bwd {
+                bwd.set_kernel_isa(isa);
+            }
+        }
+        self.head.set_kernel_isa(isa);
+    }
+
+    /// The stack's active SIMD execution path ([`set_kernel_isa`] sets
+    /// every matrix uniformly; the head is the representative).
+    ///
+    /// [`set_kernel_isa`]: Self::set_kernel_isa
+    pub fn kernel_isa(&self) -> crate::qmath::IsaPath {
+        self.head.w.kernel_isa()
     }
 
     /// True when every layer is forward-only — the precondition for

@@ -6,8 +6,8 @@
 //! floatsd-lstm hardware                  # Table VII cost breakdown
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N --max-batch B]
 //!                    [--decode-len L --beam K --beam-len-norm A]
-//!                    [--kernel-tier decoded|shiftadd] [--trace serve.jsonl]
-//!                    [--trace-every N]
+//!                    [--kernel-tier decoded|shiftadd] [--kernel-isa scalar|sse2|avx2|auto]
+//!                    [--trace serve.jsonl] [--trace-every N]
 //!                                        # task-generic batched inference server
 //!                                        # + per-task load gen (lm|pos|nli|mt)
 //!                                        # --trace: request-lifecycle JSONL stream
@@ -17,27 +17,33 @@
 //!                                        # always traced)
 //! floatsd-lstm train [--preset tiny|default|paper] [--threads N] [--trace t.jsonl]
 //!                    [--trace-every N] [--kernel-tier decoded|shiftadd]
+//!                    [--kernel-isa scalar|sse2|avx2|auto]
 //!                    [--steps N --hidden H --out ckpt.tensors ...]
 //!                                        # offline pure-rust quantized training
 //!                                        # (lane-sharded; --threads N ≡ --threads 1 bit-for-bit)
 //! floatsd-lstm train --task {lm,pos,nli,mt} [--preset tiny|default|paper]
 //!                    [--threads N] [--trace-every N] [--kernel-tier decoded|shiftadd]
-//!                    [--steps N --out ckpt.tensors ...]
+//!                    [--kernel-isa scalar|sse2|avx2|auto] [--steps N --out ckpt.tensors ...]
 //!                                        # multi-task offline training (tasks/)
 //! floatsd-lstm eval [--model a.tensors[,b.tensors...]] [--threads N] [--out report.json]
-//!                   [--kernel-tier decoded|shiftadd] [--trace eval.jsonl]
+//!                   [--kernel-tier decoded|shiftadd] [--kernel-isa scalar|sse2|avx2|auto]
+//!                   [--trace eval.jsonl]
 //!                                        # held-out eval grid across all four tasks
 //!                                        # (span-sharded; byte-identical for any N;
 //!                                        # --trace adds per-shard eval_span timings)
-//! floatsd-lstm report trace.jsonl        # summarize a --trace stream (train or serve
-//!                                        # schema, auto-detected): loss-scale events,
+//! floatsd-lstm report trace.jsonl        # summarize a --trace stream or eval report
+//!                                        # (schema auto-detected): loss-scale events,
 //!                                        # saturation, request spans, kernel profile
 //! floatsd-lstm report --diff a.jsonl b.jsonl
 //!                     [--sat-delta-pp P] [--span-regression-pct P]
-//!                                        # compare two traces; flags loss-scale drift,
-//!                                        # saturation deltas (default > 5pp), p50/p99
-//!                                        # span regressions (default > 20%); both
-//!                                        # thresholds tunable, finite and >= 0
+//!                                        # compare two traces — or two saved eval
+//!                                        # reports — of the same schema; flags
+//!                                        # loss-scale drift, saturation deltas
+//!                                        # (default > 5pp), p50/p99 span regressions
+//!                                        # (default > 20%), and per-task eval metric
+//!                                        # drift (accuracy vs --sat-delta-pp, loss/ppl
+//!                                        # vs --span-regression-pct); both thresholds
+//!                                        # tunable, finite and >= 0
 //! floatsd-lstm train --artifact lm_fsd8m16 [--div 4]  # PJRT/XLA path          [pjrt]
 //! floatsd-lstm suite --task lm [--div 4] # fp32 vs fsd8 vs fsd8m16            [pjrt]
 //! ```
@@ -59,7 +65,10 @@
 //! (pinned by `tests/serve_tasks.rs`). `--kernel-tier shiftadd` routes
 //! every forward matvec/matmul through the integer shift-add tier
 //! ([`floatsd_lstm::qmath::shiftadd`]) — bit-identical outputs, pinned
-//! by `tests/shiftadd_equivalence.rs`. Subcommands
+//! by `tests/shiftadd_equivalence.rs`. `--kernel-isa` forces the SIMD
+//! execution path ([`floatsd_lstm::qmath::simd`]) for either tier —
+//! `auto` (default) picks the widest ISA the host supports; every path
+//! is bit-identical to `scalar`, also pinned by the same suite. Subcommands
 //! marked `[pjrt]` need the crate built with `--features pjrt` (and
 //! real XLA bindings in place of the offline stub); everything else —
 //! the serving engine, the offline trainers, and the eval harness —

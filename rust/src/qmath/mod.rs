@@ -12,6 +12,10 @@
 //!   pairs shifted into the hardware MAC's fixed-point frame, no
 //!   multiplier on the weight side (`--kernel-tier shiftadd`), pinned
 //!   bit-identical to the decoded path;
+//! * [`simd`] — runtime-dispatched `core::arch::x86_64` execution of
+//!   both tiers' span kernels (`--kernel-isa {scalar,sse2,avx2}`,
+//!   AVX2 auto-detected), each SIMD lane carrying one stream's private
+//!   accumulator chain — pinned bit-identical across every path;
 //! * [`grad`] — the backward-pass siblings (transposed contractions,
 //!   rank-1 gradient accumulation, FP8 gradient quantization) used by
 //!   the offline training engine in [`crate::train`].
@@ -24,9 +28,11 @@ pub mod grad;
 pub mod mac;
 pub mod qsigmoid;
 pub mod shiftadd;
+pub mod simd;
 pub mod vector;
 
 pub use grad::{matmul_t_fast, matvec_t_fast, outer_acc, quantize_fp8_inplace};
 pub use mac::{mac_exact, mac_serial, MacMode};
 pub use qsigmoid::{sigmoid_sd8, sigmoid_sd8_one_region, tanh_fp8, SigmoidLut};
 pub use shiftadd::{DigitPlanes, KernelTier, WeightDigits};
+pub use simd::IsaPath;

@@ -282,7 +282,7 @@ pub fn decompose_x(x: f32) -> XTerm {
 }
 
 #[inline]
-fn decompose_acc(a: f32) -> XTerm {
+pub(crate) fn decompose_acc(a: f32) -> XTerm {
     split(a, ACC_EXP_MIN)
 }
 
@@ -293,7 +293,7 @@ fn decompose_acc(a: f32) -> XTerm {
 /// decoded reference's literal f64 sequence for this group.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn group_sa(
+pub(crate) fn group_sa(
     acc: f32,
     s0: &[i8],
     e0: &[i8],
@@ -343,7 +343,7 @@ fn group_sa(
 /// only the final span may carry the sub-group tail.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn sa_span_t<const T: usize>(
+pub(crate) fn sa_span_t<const T: usize>(
     s0: &[i8],
     e0: &[i8],
     s1: &[i8],
@@ -468,6 +468,10 @@ pub fn matvec_sa(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
 /// pair runs the identical [`dot_row_sa`] sequence, so results are
 /// bit-identical to `batch` [`matvec_sa`] calls — and thus to the
 /// decoded `matmul_fast`, whose tiling contract is the same.
+///
+/// `isa` selects the span execution path
+/// ([`IsaPath`](super::simd::IsaPath)) — every path is bit-identical;
+/// the blocked callers pass the matrix's configured path.
 pub fn matmul_sa(
     w: &QMatrix,
     xs: &[f32],
@@ -476,6 +480,7 @@ pub fn matmul_sa(
     out: &mut [f32],
     xt_buf: &mut Vec<XTerm>,
     max_tile: usize,
+    isa: super::simd::IsaPath,
 ) {
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
@@ -486,18 +491,18 @@ pub fn matmul_sa(
     let mut b = 0usize;
     if max_tile >= 8 {
         while b + 8 <= batch {
-            matmul_sa_tile::<8>(w, xs, xt, bias, out, b);
+            matmul_sa_tile::<8>(w, xs, xt, bias, out, b, isa);
             b += 8;
         }
     }
     if max_tile >= 4 {
         while b + 4 <= batch {
-            matmul_sa_tile::<4>(w, xs, xt, bias, out, b);
+            matmul_sa_tile::<4>(w, xs, xt, bias, out, b, isa);
             b += 4;
         }
     }
     while b < batch {
-        matmul_sa_tile::<1>(w, xs, xt, bias, out, b);
+        matmul_sa_tile::<1>(w, xs, xt, bias, out, b, isa);
         b += 1;
     }
 }
@@ -515,6 +520,7 @@ fn matmul_sa_tile<const T: usize>(
     bias: &[f32],
     out: &mut [f32],
     b0: usize,
+    isa: super::simd::IsaPath,
 ) {
     let (rows, cols) = (w.rows, w.cols);
     let mut acc_blk = [0f32; MAX_TILE * ROW_BLOCK];
@@ -541,15 +547,13 @@ fn matmul_sa_tile<const T: usize>(
                 for t in 0..T {
                     acc[t] = acc_blk[t * rb + ri];
                 }
-                let acc = sa_span_t::<T>(
-                    &s0[c0..c0 + cb],
-                    &e0[c0..c0 + cb],
-                    &s1[c0..c0 + cb],
-                    &e1[c0..c0 + cb],
+                let acc = super::simd::sa_span_isa::<T>(
+                    (&s0[c0..c0 + cb], &e0[c0..c0 + cb], &s1[c0..c0 + cb], &e1[c0..c0 + cb]),
                     &w.row_decoded(r)[c0..c0 + cb],
                     &xr,
                     &xtr,
                     acc,
+                    isa,
                 );
                 for t in 0..T {
                     acc_blk[t * rb + ri] = acc[t];

@@ -1,0 +1,662 @@
+//! Runtime-dispatched SIMD execution of the forward-kernel spans —
+//! the layer that turns PR 9's structure-of-arrays / register-tile
+//! layout work into explicit `core::arch::x86_64` vector code, **bit
+//! identical** to the scalar tiles on every input.
+//!
+//! ## Lane = stream: the bit-identity argument
+//!
+//! Both tiled kernels ([`vector::chain_span_t`](super::vector) and
+//! [`shiftadd::sa_span_t`](super::shiftadd)) already advance `T`
+//! *independent* per-stream accumulator chains in lockstep; the only
+//! sharing across streams is the weight load. This module vectorizes
+//! **across those streams**: each SIMD lane carries exactly one
+//! stream's private accumulator chain and executes the *same operation
+//! sequence* the scalar span runs for that stream —
+//!
+//! * decoded tier: the per-group f64 products and the left-to-right
+//!   group sum run as element-wise `mulpd`/`addpd` (IEEE
+//!   correctly-rounded, so each lane's f64 results equal the scalar
+//!   ops bit-for-bit; **no FMA is ever emitted** — fusing would change
+//!   the rounding); the one-per-group `Fp16::from_f64` rounding stays
+//!   scalar per lane, on the extracted lane value;
+//! * shift-add tier: the i64 fixed-point frame rides `psllq`/`paddq`.
+//!   The scalar op `(s·sig) << (e_w + e_x + F)` splits into a per-lane
+//!   pre-shift `sig << (e_x + F - 9)` (exact: `e_x ≥ −19` keeps the
+//!   count ≥ 0, and the value stays under 2⁴⁰) and a **uniform-count**
+//!   vector shift by `e_w + 9` (`e_w ≥ −9` keeps that count ≥ 0) —
+//!   two left shifts compose exactly, digit signs are ±1 so the digit
+//!   "multiply" is a vector add or subtract, and integer adds are
+//!   order-exact, so each lane's i64 sum equals the scalar sum
+//!   bit-for-bit. [`round_fixed_to_f16`] stays scalar per lane.
+//!
+//! Groups with any out-of-frame operand, sub-group tails, and the
+//! `T = 1` spans run the scalar reference code unchanged.
+//!
+//! ## Dispatch
+//!
+//! [`IsaPath`] is the three-level dispatch: `Scalar` (portable
+//! reference, the only path off x86_64), `Sse2` (the x86_64 baseline —
+//! two f64 / two i64 lanes), `Avx2` (runtime-detected via
+//! `is_x86_feature_detected!` — four lanes). [`IsaPath::detect`]
+//! picks the widest supported path once per process (cached);
+//! `--kernel-isa {scalar,sse2,avx2}` on train/serve/eval forces one,
+//! erroring descriptively on unknown or host-unsupported values. The
+//! selected path is a per-matrix field beside [`KernelTier`]
+//! (`QMatrix::set_kernel_isa`), recorded in the kernel profiler rows,
+//! the `serve_start`/`serve_end` trace lines, and the `BENCH_*.json`
+//! kernel rows. Parity across paths is pinned by
+//! `tests/shiftadd_equivalence.rs` and the unit sweeps here and in
+//! `vector.rs`.
+
+use anyhow::{bail, Result};
+
+use super::shiftadd::{sa_span_t, XTerm};
+use super::vector::chain_span_t;
+
+#[cfg(target_arch = "x86_64")]
+use super::mac::MAC_GROUP;
+#[cfg(target_arch = "x86_64")]
+use super::shiftadd::{decompose_acc, group_sa, FRAC_BITS};
+#[cfg(target_arch = "x86_64")]
+use crate::formats::Fp16;
+#[cfg(target_arch = "x86_64")]
+use crate::hardware::mac_sim::round_fixed_to_f16;
+
+/// Which instruction-set path the forward-kernel spans execute on.
+/// A per-matrix runtime switch beside [`KernelTier`](super::KernelTier)
+/// — never checkpointed, bit-identical across every path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IsaPath {
+    /// portable scalar reference (the only path off x86_64)
+    Scalar,
+    /// x86_64 baseline vectors: 2 × f64 / 2 × i64 lanes
+    Sse2,
+    /// runtime-detected 256-bit vectors: 4 × f64 / 4 × i64 lanes
+    Avx2,
+}
+
+impl Default for IsaPath {
+    /// The widest host-supported path — [`IsaPath::detect`].
+    fn default() -> Self {
+        IsaPath::detect()
+    }
+}
+
+impl IsaPath {
+    /// Parse a `--kernel-isa` value. `auto` selects [`Self::detect`];
+    /// explicit paths the host cannot execute are refused here (at CLI
+    /// time), not deep in a kernel.
+    pub fn parse(s: &str) -> Result<IsaPath> {
+        let isa = match s {
+            "auto" => return Ok(IsaPath::detect()),
+            "scalar" => IsaPath::Scalar,
+            "sse2" => IsaPath::Sse2,
+            "avx2" => IsaPath::Avx2,
+            other => bail!("unknown kernel isa {other:?} (expected scalar|sse2|avx2|auto)"),
+        };
+        if !isa.available() {
+            bail!(
+                "kernel isa {:?} is not supported by this host cpu \
+                 (available: {})",
+                s,
+                IsaPath::detect().name()
+            );
+        }
+        Ok(isa)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaPath::Scalar => "scalar",
+            IsaPath::Sse2 => "sse2",
+            IsaPath::Avx2 => "avx2",
+        }
+    }
+
+    /// Stable small-int encoding for telemetry gauges and profile keys
+    /// (0 = scalar, 1 = sse2, 2 = avx2).
+    pub fn index(self) -> u8 {
+        match self {
+            IsaPath::Scalar => 0,
+            IsaPath::Sse2 => 1,
+            IsaPath::Avx2 => 2,
+        }
+    }
+
+    /// Inverse of [`Self::index`] (telemetry decode).
+    pub fn from_index(i: u8) -> IsaPath {
+        match i {
+            1 => IsaPath::Sse2,
+            2 => IsaPath::Avx2,
+            _ => IsaPath::Scalar,
+        }
+    }
+
+    /// Can this host execute the path?
+    pub fn available(self) -> bool {
+        match self {
+            IsaPath::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            IsaPath::Sse2 => true, // x86_64 baseline
+            #[cfg(target_arch = "x86_64")]
+            IsaPath::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// The widest host-supported path, detected once per process and
+    /// cached — the startup default every `QMatrix` inherits.
+    pub fn detect() -> IsaPath {
+        use std::sync::OnceLock;
+        static DETECTED: OnceLock<IsaPath> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if IsaPath::Avx2.available() {
+                IsaPath::Avx2
+            } else if IsaPath::Sse2.available() {
+                IsaPath::Sse2
+            } else {
+                IsaPath::Scalar
+            }
+        })
+    }
+}
+
+/// ISA-dispatched [`chain_span_t`]: advance `T` decoded-tier FP16
+/// accumulation chains over one group-aligned span. Falls back to the
+/// scalar span when the path has no lane grouping for `T` (`T = 1`,
+/// or any `T` off x86_64) — the scalar span *is* the per-lane op
+/// sequence, so every arm returns identical bits.
+#[inline]
+pub(crate) fn chain_span_isa<const T: usize>(
+    row: &[f32],
+    xs: &[&[f32]; T],
+    acc: [f32; T],
+    isa: IsaPath,
+) -> [f32; T] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if T % 4 == 0 && isa == IsaPath::Avx2 {
+            // SAFETY: avx2 presence was checked by IsaPath::available
+            // before this path could be selected.
+            return unsafe { chain_span_avx2::<T>(row, xs, acc) };
+        }
+        if T % 2 == 0 && matches!(isa, IsaPath::Sse2 | IsaPath::Avx2) {
+            // SAFETY: sse2 is part of the x86_64 baseline.
+            return unsafe { chain_span_sse2::<T>(row, xs, acc) };
+        }
+    }
+    let _ = isa;
+    chain_span_t::<T>(row, xs, acc)
+}
+
+/// ISA-dispatched [`sa_span_t`]: advance `T` shift-add chains over one
+/// group-aligned span of the digit planes. Same fallback rule as
+/// [`chain_span_isa`].
+#[inline]
+pub(crate) fn sa_span_isa<const T: usize>(
+    planes: (&[i8], &[i8], &[i8], &[i8]),
+    row: &[f32],
+    xs: &[&[f32]; T],
+    xts: &[&[XTerm]; T],
+    acc: [f32; T],
+    isa: IsaPath,
+) -> [f32; T] {
+    let (s0, e0, s1, e1) = planes;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if T % 4 == 0 && isa == IsaPath::Avx2 {
+            // SAFETY: avx2 presence was checked by IsaPath::available.
+            return unsafe { sa_span_avx2::<T>(s0, e0, s1, e1, row, xs, xts, acc) };
+        }
+        if T % 2 == 0 && matches!(isa, IsaPath::Sse2 | IsaPath::Avx2) {
+            // SAFETY: sse2 is part of the x86_64 baseline.
+            return unsafe { sa_span_sse2::<T>(s0, e0, s1, e1, row, xs, xts, acc) };
+        }
+    }
+    let _ = isa;
+    sa_span_t::<T>(s0, e0, s1, e1, row, xs, xts, acc)
+}
+
+/// Shift-add pre-shift bias: the per-lane pre-shift count is
+/// `e_x + FRAC_BITS − SA_PRESHIFT` and the uniform vector count is
+/// `e_w + SA_PRESHIFT`. 9 is the unique split keeping both counts
+/// non-negative for every in-frame operand (`e_x ≥ −19`, `e_w ≥ −9`).
+#[cfg(target_arch = "x86_64")]
+const SA_PRESHIFT: i32 = 9;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// Decoded-tier span, 2 f64 lanes per vector.
+    ///
+    /// # Safety
+    /// Requires SSE2 (always present on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn chain_span_sse2<const T: usize>(
+        row: &[f32],
+        xs: &[&[f32]; T],
+        mut acc: [f32; T],
+    ) -> [f32; T] {
+        debug_assert_eq!(T % 2, 0);
+        let n = row.len();
+        let mut c = 0;
+        while c + MAC_GROUP <= n {
+            let w0 = _mm_set1_pd(row[c] as f64);
+            let w1 = _mm_set1_pd(row[c + 1] as f64);
+            let w2 = _mm_set1_pd(row[c + 2] as f64);
+            let w3 = _mm_set1_pd(row[c + 3] as f64);
+            let mut t = 0;
+            while t + 2 <= T {
+                let (xa, xb) = (xs[t], xs[t + 1]);
+                let x0 = _mm_set_pd(xb[c] as f64, xa[c] as f64);
+                let x1 = _mm_set_pd(xb[c + 1] as f64, xa[c + 1] as f64);
+                let x2 = _mm_set_pd(xb[c + 2] as f64, xa[c + 2] as f64);
+                let x3 = _mm_set_pd(xb[c + 3] as f64, xa[c + 3] as f64);
+                // per lane: (((x0·w0) + x1·w1) + x2·w2) + x3·w3 — the
+                // scalar span's exact left-to-right f64 tree, no FMA
+                let g = _mm_add_pd(
+                    _mm_add_pd(
+                        _mm_add_pd(_mm_mul_pd(x0, w0), _mm_mul_pd(x1, w1)),
+                        _mm_mul_pd(x2, w2),
+                    ),
+                    _mm_mul_pd(x3, w3),
+                );
+                let s = _mm_add_pd(_mm_set_pd(acc[t + 1] as f64, acc[t] as f64), g);
+                // the one-per-group FP16 rounding is scalar per lane
+                acc[t] = Fp16::from_f64(_mm_cvtsd_f64(s)).to_f32();
+                acc[t + 1] = Fp16::from_f64(_mm_cvtsd_f64(_mm_unpackhi_pd(s, s))).to_f32();
+                t += 2;
+            }
+            c += MAC_GROUP;
+        }
+        chain_tail::<T>(row, xs, &mut acc, c);
+        acc
+    }
+
+    /// Decoded-tier span, 4 f64 lanes per vector.
+    ///
+    /// # Safety
+    /// Requires AVX2 (runtime-detected before dispatch).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn chain_span_avx2<const T: usize>(
+        row: &[f32],
+        xs: &[&[f32]; T],
+        mut acc: [f32; T],
+    ) -> [f32; T] {
+        debug_assert_eq!(T % 4, 0);
+        let n = row.len();
+        let mut c = 0;
+        while c + MAC_GROUP <= n {
+            let w0 = _mm256_set1_pd(row[c] as f64);
+            let w1 = _mm256_set1_pd(row[c + 1] as f64);
+            let w2 = _mm256_set1_pd(row[c + 2] as f64);
+            let w3 = _mm256_set1_pd(row[c + 3] as f64);
+            let mut t = 0;
+            while t + 4 <= T {
+                let (xa, xb, xc, xd) = (xs[t], xs[t + 1], xs[t + 2], xs[t + 3]);
+                let x0 =
+                    _mm256_set_pd(xd[c] as f64, xc[c] as f64, xb[c] as f64, xa[c] as f64);
+                let x1 = _mm256_set_pd(
+                    xd[c + 1] as f64,
+                    xc[c + 1] as f64,
+                    xb[c + 1] as f64,
+                    xa[c + 1] as f64,
+                );
+                let x2 = _mm256_set_pd(
+                    xd[c + 2] as f64,
+                    xc[c + 2] as f64,
+                    xb[c + 2] as f64,
+                    xa[c + 2] as f64,
+                );
+                let x3 = _mm256_set_pd(
+                    xd[c + 3] as f64,
+                    xc[c + 3] as f64,
+                    xb[c + 3] as f64,
+                    xa[c + 3] as f64,
+                );
+                let g = _mm256_add_pd(
+                    _mm256_add_pd(
+                        _mm256_add_pd(_mm256_mul_pd(x0, w0), _mm256_mul_pd(x1, w1)),
+                        _mm256_mul_pd(x2, w2),
+                    ),
+                    _mm256_mul_pd(x3, w3),
+                );
+                let a = _mm256_set_pd(
+                    acc[t + 3] as f64,
+                    acc[t + 2] as f64,
+                    acc[t + 1] as f64,
+                    acc[t] as f64,
+                );
+                let s = _mm256_add_pd(a, g);
+                let lo = _mm256_castpd256_pd128(s);
+                let hi = _mm256_extractf128_pd(s, 1);
+                acc[t] = Fp16::from_f64(_mm_cvtsd_f64(lo)).to_f32();
+                acc[t + 1] = Fp16::from_f64(_mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo))).to_f32();
+                acc[t + 2] = Fp16::from_f64(_mm_cvtsd_f64(hi)).to_f32();
+                acc[t + 3] = Fp16::from_f64(_mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi))).to_f32();
+                t += 4;
+            }
+            c += MAC_GROUP;
+        }
+        chain_tail::<T>(row, xs, &mut acc, c);
+        acc
+    }
+
+    /// The sub-group tail, verbatim from the scalar span.
+    #[inline]
+    fn chain_tail<const T: usize>(row: &[f32], xs: &[&[f32]; T], acc: &mut [f32; T], c: usize) {
+        let n = row.len();
+        if c < n {
+            for t in 0..T {
+                let x = xs[t];
+                let mut g = 0f64;
+                for cc in c..n {
+                    g += x[cc] as f64 * row[cc] as f64;
+                }
+                acc[t] = Fp16::from_f64(acc[t] as f64 + g).to_f32();
+            }
+        }
+    }
+
+    /// `sig << (e_x + FRAC_BITS − SA_PRESHIFT)` — the per-lane
+    /// pre-shift. Exact for every in-frame operand: the count is
+    /// ≥ 0 (`e_x ≥ −19`) and the shifted value stays below 2⁴⁰.
+    #[inline]
+    fn preshift(t: XTerm) -> i64 {
+        t.sig << (t.exp + FRAC_BITS - SA_PRESHIFT)
+    }
+
+    /// Is every lane's group entirely inside the fixed-point frame?
+    #[inline]
+    fn group_all_fast<const T: usize>(accs: &[XTerm; T], xts: &[&[XTerm]; T], c: usize, hi: usize) -> bool {
+        for t in 0..T {
+            if !accs[t].fast {
+                return false;
+            }
+            for x in &xts[t][c..hi] {
+                if !x.fast {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Shift-add span, 2 i64 lanes per vector.
+    ///
+    /// # Safety
+    /// Requires SSE2 (always present on x86_64).
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn sa_span_sse2<const T: usize>(
+        s0: &[i8],
+        e0: &[i8],
+        s1: &[i8],
+        e1: &[i8],
+        row: &[f32],
+        xs: &[&[f32]; T],
+        xts: &[&[XTerm]; T],
+        mut acc: [f32; T],
+    ) -> [f32; T] {
+        debug_assert_eq!(T % 2, 0);
+        let n = row.len();
+        let mut c = 0;
+        while c + MAC_GROUP <= n {
+            let hi = c + MAC_GROUP;
+            let accs: [XTerm; T] = std::array::from_fn(|t| decompose_acc(acc[t]));
+            if group_all_fast::<T>(&accs, xts, c, hi) {
+                let mut t = 0;
+                while t + 2 <= T {
+                    let mut sum = _mm_set_epi64x(
+                        accs[t + 1].sig << (accs[t + 1].exp + FRAC_BITS),
+                        accs[t].sig << (accs[t].exp + FRAC_BITS),
+                    );
+                    for i in c..hi {
+                        if s0[i] == 0 && s1[i] == 0 {
+                            continue;
+                        }
+                        // zero activations pre-shift to 0 — adding a
+                        // zero contribution matches the scalar skip
+                        let xsh =
+                            _mm_set_epi64x(preshift(xts[t + 1][i]), preshift(xts[t][i]));
+                        if s0[i] != 0 {
+                            let cnt = _mm_cvtsi32_si128(e0[i] as i32 + SA_PRESHIFT);
+                            let v = _mm_sll_epi64(xsh, cnt);
+                            sum = if s0[i] > 0 {
+                                _mm_add_epi64(sum, v)
+                            } else {
+                                _mm_sub_epi64(sum, v)
+                            };
+                        }
+                        if s1[i] != 0 {
+                            let cnt = _mm_cvtsi32_si128(e1[i] as i32 + SA_PRESHIFT);
+                            let v = _mm_sll_epi64(xsh, cnt);
+                            sum = if s1[i] > 0 {
+                                _mm_add_epi64(sum, v)
+                            } else {
+                                _mm_sub_epi64(sum, v)
+                            };
+                        }
+                    }
+                    let lo = _mm_cvtsi128_si64(sum);
+                    let hi64 = _mm_cvtsi128_si64(_mm_unpackhi_epi64(sum, sum));
+                    acc[t] = round_fixed_to_f16(lo, FRAC_BITS as u32).to_f32();
+                    acc[t + 1] = round_fixed_to_f16(hi64, FRAC_BITS as u32).to_f32();
+                    t += 2;
+                }
+            } else {
+                // any out-of-frame lane sends the whole group through
+                // the scalar per-lane reference (group_sa dispatches
+                // fast/fallback per lane exactly like sa_span_t)
+                for t in 0..T {
+                    acc[t] = group_sa(
+                        acc[t],
+                        &s0[c..hi],
+                        &e0[c..hi],
+                        &s1[c..hi],
+                        &e1[c..hi],
+                        &row[c..hi],
+                        &xs[t][c..hi],
+                        &xts[t][c..hi],
+                    );
+                }
+            }
+            c = hi;
+        }
+        if c < n {
+            for t in 0..T {
+                acc[t] = group_sa(
+                    acc[t],
+                    &s0[c..],
+                    &e0[c..],
+                    &s1[c..],
+                    &e1[c..],
+                    &row[c..],
+                    &xs[t][c..],
+                    &xts[t][c..],
+                );
+            }
+        }
+        acc
+    }
+
+    /// Shift-add span, 4 i64 lanes per vector.
+    ///
+    /// # Safety
+    /// Requires AVX2 (runtime-detected before dispatch).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn sa_span_avx2<const T: usize>(
+        s0: &[i8],
+        e0: &[i8],
+        s1: &[i8],
+        e1: &[i8],
+        row: &[f32],
+        xs: &[&[f32]; T],
+        xts: &[&[XTerm]; T],
+        mut acc: [f32; T],
+    ) -> [f32; T] {
+        debug_assert_eq!(T % 4, 0);
+        let n = row.len();
+        let mut c = 0;
+        while c + MAC_GROUP <= n {
+            let hi = c + MAC_GROUP;
+            let accs: [XTerm; T] = std::array::from_fn(|t| decompose_acc(acc[t]));
+            if group_all_fast::<T>(&accs, xts, c, hi) {
+                let mut t = 0;
+                while t + 4 <= T {
+                    let mut sum = _mm256_set_epi64x(
+                        accs[t + 3].sig << (accs[t + 3].exp + FRAC_BITS),
+                        accs[t + 2].sig << (accs[t + 2].exp + FRAC_BITS),
+                        accs[t + 1].sig << (accs[t + 1].exp + FRAC_BITS),
+                        accs[t].sig << (accs[t].exp + FRAC_BITS),
+                    );
+                    for i in c..hi {
+                        if s0[i] == 0 && s1[i] == 0 {
+                            continue;
+                        }
+                        let xsh = _mm256_set_epi64x(
+                            preshift(xts[t + 3][i]),
+                            preshift(xts[t + 2][i]),
+                            preshift(xts[t + 1][i]),
+                            preshift(xts[t][i]),
+                        );
+                        if s0[i] != 0 {
+                            let cnt = _mm_cvtsi32_si128(e0[i] as i32 + SA_PRESHIFT);
+                            let v = _mm256_sll_epi64(xsh, cnt);
+                            sum = if s0[i] > 0 {
+                                _mm256_add_epi64(sum, v)
+                            } else {
+                                _mm256_sub_epi64(sum, v)
+                            };
+                        }
+                        if s1[i] != 0 {
+                            let cnt = _mm_cvtsi32_si128(e1[i] as i32 + SA_PRESHIFT);
+                            let v = _mm256_sll_epi64(xsh, cnt);
+                            sum = if s1[i] > 0 {
+                                _mm256_add_epi64(sum, v)
+                            } else {
+                                _mm256_sub_epi64(sum, v)
+                            };
+                        }
+                    }
+                    let lo = _mm256_castsi256_si128(sum);
+                    let up = _mm256_extracti128_si256(sum, 1);
+                    let l0 = _mm_cvtsi128_si64(lo);
+                    let l1 = _mm_cvtsi128_si64(_mm_unpackhi_epi64(lo, lo));
+                    let l2 = _mm_cvtsi128_si64(up);
+                    let l3 = _mm_cvtsi128_si64(_mm_unpackhi_epi64(up, up));
+                    acc[t] = round_fixed_to_f16(l0, FRAC_BITS as u32).to_f32();
+                    acc[t + 1] = round_fixed_to_f16(l1, FRAC_BITS as u32).to_f32();
+                    acc[t + 2] = round_fixed_to_f16(l2, FRAC_BITS as u32).to_f32();
+                    acc[t + 3] = round_fixed_to_f16(l3, FRAC_BITS as u32).to_f32();
+                    t += 4;
+                }
+            } else {
+                for t in 0..T {
+                    acc[t] = group_sa(
+                        acc[t],
+                        &s0[c..hi],
+                        &e0[c..hi],
+                        &s1[c..hi],
+                        &e1[c..hi],
+                        &row[c..hi],
+                        &xs[t][c..hi],
+                        &xts[t][c..hi],
+                    );
+                }
+            }
+            c = hi;
+        }
+        if c < n {
+            for t in 0..T {
+                acc[t] = group_sa(
+                    acc[t],
+                    &s0[c..],
+                    &e0[c..],
+                    &s1[c..],
+                    &e1[c..],
+                    &row[c..],
+                    &xs[t][c..],
+                    &xts[t][c..],
+                );
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use x86::{chain_span_avx2, chain_span_sse2, sa_span_avx2, sa_span_sse2};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_parses_names_and_indexes_round_trip() {
+        for isa in [IsaPath::Scalar, IsaPath::Sse2, IsaPath::Avx2] {
+            assert_eq!(IsaPath::from_index(isa.index()), isa);
+            if isa.available() {
+                assert_eq!(IsaPath::parse(isa.name()).unwrap(), isa);
+            } else {
+                let err = IsaPath::parse(isa.name()).unwrap_err().to_string();
+                assert!(err.contains("not supported"), "got: {err}");
+            }
+        }
+        let err = IsaPath::parse("neon").unwrap_err().to_string();
+        assert!(err.contains("unknown kernel isa"), "got: {err}");
+        assert!(err.contains("scalar|sse2|avx2"), "got: {err}");
+        assert_eq!(IsaPath::parse("auto").unwrap(), IsaPath::detect());
+    }
+
+    #[test]
+    fn detect_is_available_stable_and_the_default() {
+        let d = IsaPath::detect();
+        assert!(d.available());
+        assert_eq!(IsaPath::detect(), d, "detection must be cached/stable");
+        assert_eq!(IsaPath::default(), d);
+        assert!(IsaPath::Scalar.available(), "scalar is always available");
+        #[cfg(target_arch = "x86_64")]
+        assert!(IsaPath::Sse2.available(), "sse2 is the x86_64 baseline");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(d, IsaPath::Scalar);
+    }
+
+    #[test]
+    fn spans_match_scalar_bit_for_bit_on_every_available_isa() {
+        use crate::rng::SplitMix64;
+        let mut rng = SplitMix64::new(77);
+        // 11 cols: two full groups + a 3-wide tail
+        let cols = 11usize;
+        let row: Vec<f32> = (0..cols)
+            .map(|_| crate::formats::FLOAT_SD8.quantize(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let xs_data: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                (0..cols).map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0))).collect()
+            })
+            .collect();
+        let xs: [&[f32]; 8] = std::array::from_fn(|t| xs_data[t].as_slice());
+        let acc: [f32; 8] =
+            std::array::from_fn(|t| crate::formats::round_f16(0.1 * t as f32 - 0.3));
+        let want = chain_span_t::<8>(&row, &xs, acc);
+        for isa in [IsaPath::Scalar, IsaPath::Sse2, IsaPath::Avx2] {
+            if !isa.available() {
+                continue;
+            }
+            let got = chain_span_isa::<8>(&row, &xs, acc, isa);
+            for t in 0..8 {
+                assert_eq!(
+                    got[t].to_bits(),
+                    want[t].to_bits(),
+                    "{} lane {t}",
+                    isa.name()
+                );
+            }
+        }
+    }
+}

@@ -35,6 +35,7 @@ use crate::formats::{FloatSd8, Fp16, Fp8, FLOAT_SD8};
 
 use super::mac::{dot_fsd8_fp8, MacMode, MAC_GROUP};
 use super::shiftadd::{self, DigitPlanes, KernelTier, WeightDigits, XTerm};
+use super::simd::{self, IsaPath};
 
 /// Widest stream tile of the batched kernels (8 independent FP16
 /// accumulation chains sharing each weight load).
@@ -82,6 +83,10 @@ pub struct QMatrix {
     /// which forward-kernel engine [`matvec_fast`]/[`matmul_fast`]
     /// dispatch to for this matrix (runtime-only, never checkpointed)
     tier: KernelTier,
+    /// which SIMD execution path the batched span kernels run on
+    /// ([`simd`]; runtime-only, never checkpointed, bit-identical
+    /// across every path). Defaults to the widest host-supported ISA.
+    isa: IsaPath,
 }
 
 impl QMatrix {
@@ -107,7 +112,16 @@ impl QMatrix {
                 decoded_t[c * rows + r] = decoded[r * cols + c];
             }
         }
-        QMatrix { rows, cols, codes, decoded, decoded_t, digits, tier: KernelTier::default() }
+        QMatrix {
+            rows,
+            cols,
+            codes,
+            decoded,
+            decoded_t,
+            digits,
+            tier: KernelTier::default(),
+            isa: IsaPath::detect(),
+        }
     }
 
     /// Select the forward-kernel tier for this matrix.
@@ -118,6 +132,18 @@ impl QMatrix {
     /// The forward-kernel tier this matrix dispatches to.
     pub fn kernel_tier(&self) -> KernelTier {
         self.tier
+    }
+
+    /// Select the SIMD execution path for this matrix's span kernels.
+    /// Every path is bit-identical; callers validate host support via
+    /// [`IsaPath::parse`] before forcing one.
+    pub fn set_kernel_isa(&mut self, isa: IsaPath) {
+        self.isa = isa;
+    }
+
+    /// The SIMD execution path this matrix dispatches to.
+    pub fn kernel_isa(&self) -> IsaPath {
+        self.isa
     }
 
     /// The cached structure-of-arrays digit planes.
@@ -265,6 +291,7 @@ pub fn matvec_fast(w: &QMatrix, x: &[f32], bias: &[f32], out: &mut [f32]) {
         crate::telemetry::note_kernel(
             crate::telemetry::KernelOp::Matvec,
             w.tier,
+            w.isa,
             w.rows,
             w.cols,
             1,
@@ -345,10 +372,11 @@ pub fn matmul_fast_with(
 ) {
     if crate::telemetry::hot_enabled() {
         let t0 = std::time::Instant::now();
-        matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE);
+        matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE, w.isa);
         crate::telemetry::note_kernel(
             crate::telemetry::KernelOp::Matmul,
             w.tier,
+            w.isa,
             w.rows,
             w.cols,
             batch,
@@ -356,7 +384,7 @@ pub fn matmul_fast_with(
         );
         return;
     }
-    matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE);
+    matmul_impl(w, xs, batch, bias, out, scratch, MAX_TILE, w.isa);
 }
 
 /// Test/bench hook: [`matmul_fast`] with the stream tile capped at
@@ -372,10 +400,28 @@ pub fn matmul_tiled(
     out: &mut [f32],
     max_tile: usize,
 ) {
-    assert!(matches!(max_tile, 1 | 4 | 8), "max_tile must be 1, 4, or 8 (got {max_tile})");
-    MM_SCRATCH.with(|s| matmul_impl(w, xs, batch, bias, out, &mut s.borrow_mut(), max_tile));
+    matmul_isa(w, xs, batch, bias, out, max_tile, w.isa);
 }
 
+/// Test/bench hook: [`matmul_tiled`] with the SIMD execution path
+/// forced to `isa`, overriding the matrix's configured path. The
+/// forced-ISA parity sweeps and the per-ISA kernel bench rows use
+/// this; callers must only force host-supported paths
+/// ([`IsaPath::available`]). Untimed, like [`matmul_tiled`].
+pub fn matmul_isa(
+    w: &QMatrix,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    max_tile: usize,
+    isa: IsaPath,
+) {
+    assert!(matches!(max_tile, 1 | 4 | 8), "max_tile must be 1, 4, or 8 (got {max_tile})");
+    MM_SCRATCH.with(|s| matmul_impl(w, xs, batch, bias, out, &mut s.borrow_mut(), max_tile, isa));
+}
+
+#[allow(clippy::too_many_arguments)]
 fn matmul_impl(
     w: &QMatrix,
     xs: &[f32],
@@ -384,9 +430,10 @@ fn matmul_impl(
     out: &mut [f32],
     scratch: &mut MatmulScratch,
     max_tile: usize,
+    isa: IsaPath,
 ) {
     if w.tier == KernelTier::ShiftAdd {
-        return shiftadd::matmul_sa(w, xs, batch, bias, out, &mut scratch.xt, max_tile);
+        return shiftadd::matmul_sa(w, xs, batch, bias, out, &mut scratch.xt, max_tile, isa);
     }
     assert_eq!(xs.len(), batch * w.cols);
     assert_eq!(bias.len(), w.rows);
@@ -394,18 +441,18 @@ fn matmul_impl(
     let mut b = 0usize;
     if max_tile >= 8 {
         while b + 8 <= batch {
-            matmul_tile_block::<8>(w, xs, bias, out, b);
+            matmul_tile_block::<8>(w, xs, bias, out, b, isa);
             b += 8;
         }
     }
     if max_tile >= 4 {
         while b + 4 <= batch {
-            matmul_tile_block::<4>(w, xs, bias, out, b);
+            matmul_tile_block::<4>(w, xs, bias, out, b, isa);
             b += 4;
         }
     }
     while b < batch {
-        matmul_tile_block::<1>(w, xs, bias, out, b);
+        matmul_tile_block::<1>(w, xs, bias, out, b, isa);
         b += 1;
     }
 }
@@ -419,6 +466,7 @@ fn matmul_tile_block<const T: usize>(
     bias: &[f32],
     out: &mut [f32],
     b0: usize,
+    isa: IsaPath,
 ) {
     let (rows, cols) = (w.rows, w.cols);
     let mut acc_blk = [0f32; MAX_TILE * ROW_BLOCK];
@@ -442,7 +490,7 @@ fn matmul_tile_block<const T: usize>(
                 for t in 0..T {
                     acc[t] = acc_blk[t * rb + ri];
                 }
-                let acc = chain_span_t::<T>(row, &xr, acc);
+                let acc = simd::chain_span_isa::<T>(row, &xr, acc, isa);
                 for t in 0..T {
                     acc_blk[t * rb + ri] = acc[t];
                 }
@@ -544,6 +592,48 @@ mod tests {
                             e.to_bits(),
                             "({rows}x{cols}) batch {batch} tile {max_tile} elem {k}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_on_both_tiers() {
+        // the forced-ISA hook must reproduce the scalar reference bit
+        // for bit on each host-supported path, on both kernel tiers,
+        // at every forced tile width, across batches spanning every
+        // tile remainder. AVX2 coverage depends on the host; the
+        // dedicated parity suite prints a skip notice.
+        let isas: Vec<IsaPath> = [IsaPath::Scalar, IsaPath::Sse2, IsaPath::Avx2]
+            .into_iter()
+            .filter(|i| i.available())
+            .collect();
+        for &(rows, cols) in &[(6usize, 12usize), (3, 7), (5, 31)] {
+            let (mut w, _, bias) = setup(rows, cols, (rows * 77 + cols) as u64);
+            for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+                w.set_kernel_tier(tier);
+                for batch in 1usize..=17 {
+                    let mut rng = SplitMix64::new(41 + batch as u64);
+                    let xs: Vec<f32> = (0..batch * cols)
+                        .map(|_| crate::formats::round_f8(rng.uniform(-2.0, 2.0)))
+                        .collect();
+                    for max_tile in [1usize, 4, 8] {
+                        let mut reference = vec![0f32; batch * rows];
+                        matmul_isa(&w, &xs, batch, &bias, &mut reference, max_tile, IsaPath::Scalar);
+                        for &isa in &isas {
+                            let mut got = vec![0f32; batch * rows];
+                            matmul_isa(&w, &xs, batch, &bias, &mut got, max_tile, isa);
+                            for (k, (a, e)) in got.iter().zip(&reference).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    e.to_bits(),
+                                    "({rows}x{cols}) {} {} batch {batch} tile {max_tile} elem {k}",
+                                    tier.name(),
+                                    isa.name()
+                                );
+                            }
+                        }
                     }
                 }
             }

@@ -7,6 +7,7 @@
 //! ```text
 //! floatsd-lstm serve [--model ckpt.tensors] [--workers N] [--max-batch B]
 //!                    [--window-us U] [--sessions S] [--tokens T] [--clients C]
+//!                    [--kernel-tier decoded|shiftadd] [--kernel-isa scalar|sse2|avx2|auto]
 //!                    [--trace serve_trace.jsonl]   (request-lifecycle JSONL trace)
 //!                    [--trace-every N]   (keep every N-th micro-batch's batch/request
 //!                                         lines; lifecycle + summary always traced)
@@ -76,11 +77,13 @@ pub fn run(args: &Args) -> Result<()> {
             20200711,
         )))?,
     };
-    // kernel tier is a load-time choice: set it while this thread
-    // still exclusively owns the stacks, before workers share them
+    // kernel tier and SIMD path are load-time choices: set them while
+    // this thread still exclusively owns the stacks, before workers
+    // share them
     model.set_kernel_tier(crate::qmath::KernelTier::parse(
         args.opt_or("kernel-tier", "decoded"),
     )?)?;
+    model.set_kernel_isa(crate::qmath::IsaPath::parse(args.opt_or("kernel-isa", "auto"))?)?;
     let model = Arc::new(model);
 
     let stack = &model.stack;

@@ -149,6 +149,10 @@ impl Server {
                 "kernel_tier".to_string(),
                 Json::Str(model.stack.kernel_tier().name().to_string()),
             );
+            f.insert(
+                "kernel_isa".to_string(),
+                Json::Str(model.stack.kernel_isa().name().to_string()),
+            );
             f.insert("vocab".to_string(), unum(model.input_vocab() as u64));
             f.insert("n_out".to_string(), unum(model.n_out() as u64));
             f.insert("trace_every".to_string(), unum(tr.every()));
@@ -300,6 +304,10 @@ impl Server {
             f.insert(
                 "kernel_tier".to_string(),
                 Json::Str(snap.kernel_tier.name().to_string()),
+            );
+            f.insert(
+                "kernel_isa".to_string(),
+                Json::Str(snap.kernel_isa.name().to_string()),
             );
             f.insert("kernel_profile".to_string(), kernel_profile_json(&tr.kernel_profile()));
             let mut t = BTreeMap::new();

@@ -160,6 +160,24 @@ impl ServeModel {
         Ok(())
     }
 
+    /// Select the SIMD execution path (`--kernel-isa`) on every stack
+    /// the model holds — same load-time-only contract as
+    /// [`Self::set_kernel_tier`], and bit-identical across paths
+    /// ([`crate::qmath::simd`]).
+    pub fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) -> Result<()> {
+        let Some(stack) = Arc::get_mut(&mut self.stack) else {
+            bail!("kernel isa must be selected before the model is shared across workers");
+        };
+        stack.set_kernel_isa(isa);
+        if let Some(dec) = &mut self.decoder {
+            let Some(dec) = Arc::get_mut(dec) else {
+                bail!("kernel isa must be selected before the model is shared across workers");
+            };
+            dec.set_kernel_isa(isa);
+        }
+        Ok(())
+    }
+
     /// Vocabulary the client's input tokens are validated against
     /// (the source vocabulary for mt).
     pub fn input_vocab(&self) -> usize {

@@ -17,7 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::benchlib::Percentiles;
-use crate::qmath::KernelTier;
+use crate::qmath::{IsaPath, KernelTier};
 use crate::telemetry::{Counter, Gauge, Histogram, SampleWindow};
 use crate::tensorfile::json::Json;
 
@@ -68,6 +68,9 @@ pub struct ShardStats {
     /// active forward-kernel tier (0 = decoded, 1 = shiftadd) — set
     /// once by the worker at spawn so bench rows are self-describing
     kernel_tier: Gauge,
+    /// active SIMD execution path ([`IsaPath::index`] encoding) — set
+    /// once by the worker at spawn, beside the tier
+    kernel_isa: Gauge,
     /// scheduler queue high-water mark, republished at batch
     /// boundaries from [`super::scheduler::RequestQueue::high_water`]
     queue_high_water: Gauge,
@@ -99,6 +102,8 @@ pub struct StatsSnapshot {
     pub occupancy_hist: [u64; 8],
     /// active forward-kernel tier the shard's worker served with
     pub kernel_tier: KernelTier,
+    /// active SIMD execution path the shard's worker served with
+    pub kernel_isa: IsaPath,
     /// deepest the shard's scheduler queue has been (merged: the max
     /// across shards — the backpressure headline)
     pub queue_high_water: u64,
@@ -118,6 +123,7 @@ impl ShardStats {
             occupancy: Histogram::new(&OCCUPANCY_BOUNDS),
             latencies: Mutex::new(SampleWindow::new(LATENCY_WINDOW)),
             kernel_tier: Gauge::new(),
+            kernel_isa: Gauge::new(),
             queue_high_water: Gauge::new(),
         }
     }
@@ -128,6 +134,11 @@ impl ShardStats {
             KernelTier::Decoded => 0,
             KernelTier::ShiftAdd => 1,
         });
+    }
+
+    /// Publish the SIMD path the worker serves with (once, at spawn).
+    pub fn set_kernel_isa(&self, isa: IsaPath) {
+        self.kernel_isa.set(isa.index() as u64);
     }
 
     /// Republish the scheduler queue's high-water mark (worker-side,
@@ -191,6 +202,7 @@ impl ShardStats {
             } else {
                 KernelTier::ShiftAdd
             },
+            kernel_isa: IsaPath::from_index(self.kernel_isa.get() as u8),
             queue_high_water: self.queue_high_water.get(),
             latency: Percentiles::of(&mut samples),
         }
@@ -224,8 +236,9 @@ pub fn merged(shards: &[Arc<ShardStats>]) -> StatsSnapshot {
         }
         if i == 0 {
             // every worker serves the same shared model, so the tier
-            // is uniform across shards
+            // and ISA are uniform across shards
             out.kernel_tier = snap.kernel_tier;
+            out.kernel_isa = snap.kernel_isa;
         }
         out.queue_high_water = out.queue_high_water.max(snap.queue_high_water);
         samples.extend_from_slice(s.latencies.lock().unwrap().samples());
@@ -261,6 +274,7 @@ impl StatsSnapshot {
         m.insert("batches".to_string(), num(self.batches));
         m.insert("sessions".to_string(), num(self.sessions));
         m.insert("kernel_tier".to_string(), Json::Str(self.kernel_tier.name().to_string()));
+        m.insert("kernel_isa".to_string(), Json::Str(self.kernel_isa.name().to_string()));
         m.insert("queue_high_water".to_string(), num(self.queue_high_water));
         m.insert("mean_occupancy".to_string(), Json::Num(self.mean_occupancy));
         m.insert("per_kind".to_string(), Json::Obj(kinds));
@@ -307,12 +321,15 @@ mod tests {
         b.set_queue_high_water(9);
         a.set_kernel_tier(KernelTier::ShiftAdd);
         b.set_kernel_tier(KernelTier::ShiftAdd);
+        a.set_kernel_isa(IsaPath::Scalar);
+        b.set_kernel_isa(IsaPath::Scalar);
         let m = merged(&[a, b]);
         assert_eq!(m.tokens, 12);
         assert_eq!(m.batches, 3);
         assert_eq!(m.sessions, 5);
         assert_eq!(m.queue_high_water, 9, "merged high water is the max across shards");
         assert_eq!(m.kernel_tier, KernelTier::ShiftAdd);
+        assert_eq!(m.kernel_isa, IsaPath::Scalar);
         assert_eq!(m.latency.n, 12);
         assert_eq!(m.latency.max, Duration::from_micros(30));
         // occupancy: batches of 4, 2, 6 → buckets (≤4), (≤2), (≤8)
@@ -353,6 +370,7 @@ mod tests {
         s.record_batch(2, 5, &[Duration::from_micros(10), Duration::from_micros(20)]);
         s.record_kinds(&[1, 1, 0, 0], &[1, 4, 0, 0]);
         s.set_kernel_tier(KernelTier::ShiftAdd);
+        s.set_kernel_isa(IsaPath::Scalar);
         s.set_queue_high_water(7);
         let j1 = s.snapshot().telemetry_json();
         let j2 = s.snapshot().telemetry_json();
@@ -362,6 +380,11 @@ mod tests {
             j1.get("kernel_tier").and_then(Json::as_str),
             Some("shiftadd"),
             "bench rows are self-describing about the tier"
+        );
+        assert_eq!(
+            j1.get("kernel_isa").and_then(Json::as_str),
+            Some("scalar"),
+            "the active ISA rides beside the tier"
         );
         assert_eq!(j1.get("queue_high_water").and_then(Json::as_f64), Some(7.0));
         let kinds = j1.get("per_kind").expect("per_kind block");

@@ -128,6 +128,7 @@ fn run_worker(
     let mut dec_scratch =
         model.decoder.as_ref().map(|d| d.scratch(max_batch.max(MAX_BEAM_WIDTH)));
     stats.set_kernel_tier(model.stack.kernel_tier());
+    stats.set_kernel_isa(model.stack.kernel_isa());
 
     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
     let mut closes: Vec<SessionId> = Vec::new();

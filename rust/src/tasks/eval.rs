@@ -13,6 +13,12 @@
 //! (fixed key order via `BTreeMap`, deterministic generators, no
 //! timestamps). Pinned by `tests/tasks_train.rs`.
 //!
+//! Two saved reports diff against each other with `floatsd-lstm
+//! report --diff a.json b.json` ([`crate::telemetry::report`]): the
+//! same `--sat-delta-pp` / `--span-regression-pct` thresholds that
+//! govern trace diffs flag per-task accuracy drift and loss/ppl
+//! regressions between a baseline grid and a candidate grid.
+//!
 //! Report schema (`schema = "floatsd-eval-v1"`):
 //!
 //! ```json
@@ -41,7 +47,7 @@ use crate::lstm::model::ParamBag;
 use crate::tensorfile::json::Json;
 use crate::tensorfile::read_tensors;
 
-use crate::qmath::KernelTier;
+use crate::qmath::{IsaPath, KernelTier};
 
 use super::{build_task, load_task, TaskConfig, TaskEval, TaskKind};
 
@@ -62,6 +68,18 @@ pub fn evaluate_checkpoint_tier(
     threads: usize,
     tier: KernelTier,
 ) -> Result<(TaskConfig, TaskEval)> {
+    evaluate_checkpoint_exec(path, threads, tier, IsaPath::detect())
+}
+
+/// [`evaluate_checkpoint_tier`] with an explicit SIMD execution path
+/// (`--kernel-isa`) — another runtime-only knob; reports are
+/// bit-identical across every path.
+pub fn evaluate_checkpoint_exec(
+    path: &Path,
+    threads: usize,
+    tier: KernelTier,
+    isa: IsaPath,
+) -> Result<(TaskConfig, TaskEval)> {
     let tensors = read_tensors(path)?;
     let mut cfg = super::read_task_cfg(&tensors)?.with_context(|| {
         format!(
@@ -72,6 +90,7 @@ pub fn evaluate_checkpoint_tier(
     })?;
     cfg.threads = threads;
     cfg.kernel_tier = tier;
+    cfg.kernel_isa = isa;
     let bag = ParamBag::from_tensors(tensors);
     let head = load_task(cfg.clone(), &bag)?;
     Ok((cfg, head.evaluate()))
@@ -136,7 +155,19 @@ pub fn build_report(models: &[PathBuf], threads: usize) -> Result<Json> {
 /// byte-identical to a `decoded` one (pinned by
 /// `tests/shiftadd_equivalence.rs`).
 pub fn build_report_tier(models: &[PathBuf], threads: usize, tier: KernelTier) -> Result<Json> {
-    build_report_traced(models, threads, tier, None)
+    build_report_exec(models, threads, tier, IsaPath::detect())
+}
+
+/// [`build_report_tier`] with an explicit SIMD execution path — the
+/// report never mentions the ISA either: every path must produce the
+/// same bytes (pinned by `tests/shiftadd_equivalence.rs`).
+pub fn build_report_exec(
+    models: &[PathBuf],
+    threads: usize,
+    tier: KernelTier,
+    isa: IsaPath,
+) -> Result<Json> {
+    build_report_traced(models, threads, tier, isa, None)
 }
 
 /// [`build_report_tier`] with an optional trace sink: each task's
@@ -149,6 +180,7 @@ pub fn build_report_traced(
     models: &[PathBuf],
     threads: usize,
     tier: KernelTier,
+    isa: IsaPath,
     mut trace: Option<&mut crate::telemetry::TraceSink>,
 ) -> Result<Json> {
     let mut emit_spans = |sink: &mut Option<&mut crate::telemetry::TraceSink>,
@@ -170,7 +202,7 @@ pub fn build_report_traced(
     };
     let mut tasks: BTreeMap<String, Json> = BTreeMap::new();
     for path in models {
-        let (cfg, eval) = evaluate_checkpoint_tier(path, threads, tier)
+        let (cfg, eval) = evaluate_checkpoint_exec(path, threads, tier, isa)
             .with_context(|| format!("evaluate {}", path.display()))?;
         let name = cfg.task.name().to_string();
         if tasks.contains_key(&name) {
@@ -186,13 +218,15 @@ pub fn build_report_traced(
         let mut cfg = TaskConfig::preset(kind);
         cfg.threads = threads;
         cfg.kernel_tier = tier;
+        cfg.kernel_isa = isa;
         let head = build_task(&cfg)?;
         let eval = head.evaluate();
         emit_spans(&mut trace, kind.name(), &eval);
         tasks.insert(kind.name().to_string(), entry(&cfg, &eval, "init"));
     }
     let mut root = BTreeMap::new();
-    root.insert("schema".to_string(), Json::Str("floatsd-eval-v1".to_string()));
+    let schema = crate::telemetry::report::EVAL_SCHEMA;
+    root.insert("schema".to_string(), Json::Str(schema.to_string()));
     root.insert("tasks".to_string(), Json::Obj(tasks));
     Ok(Json::Obj(root))
 }
@@ -210,11 +244,12 @@ pub fn run_cli(args: &Args) -> Result<()> {
     models.extend(args.positionals.iter().map(PathBuf::from));
     let threads = args.opt_usize("threads", 1)?;
     let tier = KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?;
+    let isa = IsaPath::parse(args.opt_or("kernel-isa", "auto"))?;
     let mut sink = match args.opt("trace") {
         Some(path) => Some(crate::telemetry::TraceSink::create(Path::new(path))?),
         None => None,
     };
-    let report = build_report_traced(&models, threads, tier, sink.as_mut())?;
+    let report = build_report_traced(&models, threads, tier, isa, sink.as_mut())?;
     if let Some(sink) = &mut sink {
         sink.finish()?;
     }

@@ -42,14 +42,14 @@ use crate::lstm::cell::QLstmCell;
 use crate::lstm::model::{Dense, Embedding, ParamBag, QLstmLayer};
 use crate::lstm::QLstmStack;
 use crate::qmath::vector::QMatrix;
-use crate::qmath::KernelTier;
+use crate::qmath::{IsaPath, KernelTier};
 use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
 use crate::tensorfile::json::Json;
 use crate::tensorfile::Tensor;
 use crate::train::optimizer::MasterCell;
 use crate::train::{
-    check_threads, finalize_grads, lane_spans, merge_shards, LaneShard, LossScaler, MasterStack,
-    PresetTier, ScaleEvent, StackGrads, StackTape, StepOutcome,
+    check_threads, finalize_grads, lane_spans, merge_finalize_overlapped, merge_shards, LaneShard,
+    LossScaler, MasterStack, PresetTier, ScaleEvent, StackGrads, StackTape, StepOutcome,
 };
 
 /// The four offline task heads (paper Table IV).
@@ -133,6 +133,10 @@ pub struct TaskConfig {
     /// `--kernel-tier`: forward matvec/matmul tier (runtime-only —
     /// never checkpointed; see [`crate::qmath::shiftadd`])
     pub kernel_tier: KernelTier,
+    /// `--kernel-isa`: SIMD execution path of the forward kernels
+    /// (runtime-only — never checkpointed, bit-identical across
+    /// paths; see [`crate::qmath::simd`])
+    pub kernel_isa: IsaPath,
 }
 
 impl TaskConfig {
@@ -163,6 +167,7 @@ impl TaskConfig {
             trace: None,
             trace_every: 1,
             kernel_tier: KernelTier::Decoded,
+            kernel_isa: IsaPath::detect(),
         };
         match task {
             TaskKind::Lm => {}
@@ -454,9 +459,15 @@ pub trait TaskHead {
     /// Write a `.tensors` checkpoint carrying `meta/task_cfg` so
     /// `floatsd-lstm eval` can rebuild the task from the file alone.
     fn save_checkpoint(&self, path: &Path) -> Result<()>;
+    /// Force the merged gradient buffers of the last
+    /// [`Self::compute_window`] to materialize (the window's tree
+    /// reduction is otherwise deferred into [`Self::apply_update`]);
+    /// must run before [`Self::grad_tensors`] on traced steps.
+    fn merge_grads(&mut self);
     /// Named merged gradient tensors of the last
     /// [`Self::compute_window`], still loss-scaled — the telemetry
-    /// scan surface ([`crate::telemetry::grad_saturation`]).
+    /// scan surface ([`crate::telemetry::grad_saturation`]); call
+    /// [`Self::merge_grads`] first.
     fn grad_tensors(&self) -> Vec<(String, &[f32])>;
     /// Named live FloatSD8 weight matrices — the re-encode saturation
     /// scan surface ([`crate::telemetry::code_stats`]).
@@ -465,6 +476,9 @@ pub trait TaskHead {
     /// (runtime-only; applied by [`build_task`]/[`load_task`] from
     /// `cfg.kernel_tier`, so heads never persist it).
     fn set_kernel_tier(&mut self, tier: KernelTier);
+    /// Select the SIMD execution path on every stack the head owns
+    /// (runtime-only, like the tier; applied from `cfg.kernel_isa`).
+    fn set_kernel_isa(&mut self, isa: IsaPath);
 }
 
 /// Build a fresh (deterministically initialized) head for a config.
@@ -477,6 +491,7 @@ pub fn build_task(cfg: &TaskConfig) -> Result<Box<dyn TaskHead>> {
         TaskKind::Mt => Box::new(mt::MtTask::new(cfg.clone())),
     };
     head.set_kernel_tier(cfg.kernel_tier);
+    head.set_kernel_isa(cfg.kernel_isa);
     Ok(head)
 }
 
@@ -496,6 +511,7 @@ pub fn read_task_cfg(tensors: &[Tensor]) -> Result<Option<TaskConfig>> {
 pub fn load_task(cfg: TaskConfig, bag: &ParamBag) -> Result<Box<dyn TaskHead>> {
     validate(&cfg)?;
     let tier = cfg.kernel_tier;
+    let isa = cfg.kernel_isa;
     let mut head: Box<dyn TaskHead> = match cfg.task {
         TaskKind::Lm => Box::new(lm::LmTask::from_bag(cfg, bag)?),
         TaskKind::Pos => Box::new(pos::PosTask::from_bag(cfg, bag)?),
@@ -503,6 +519,7 @@ pub fn load_task(cfg: TaskConfig, bag: &ParamBag) -> Result<Box<dyn TaskHead>> {
         TaskKind::Mt => Box::new(mt::MtTask::from_bag(cfg, bag)?),
     };
     head.set_kernel_tier(tier);
+    head.set_kernel_isa(isa);
     Ok(head)
 }
 
@@ -543,8 +560,10 @@ fn validate(cfg: &TaskConfig) -> Result<()> {
 /// shard owns its lanes' carried recurrent state, trace scratches,
 /// and gradient buffers, so a window's shards can run on the parallel
 /// engine ([`crate::train::run_shards`]) with no shared mutable
-/// state; [`Self::collect_window`] then tree-merges the shard
-/// gradients into [`Self::grads`] in the fixed canonical order.
+/// state; [`Self::collect_window`] folds the loss sums and leaves the
+/// fixed-order gradient tree reduction pending so [`Self::apply`] can
+/// overlap it with the finalize (or [`Self::ensure_merged`] runs it
+/// eagerly for readers of [`Self::grads`]).
 pub(crate) struct SingleStack {
     pub stack: QLstmStack,
     pub masters: MasterStack,
@@ -553,6 +572,12 @@ pub(crate) struct SingleStack {
     /// the fixed lane partition's shards (a function of `batch` only)
     pub shards: Vec<LaneShard>,
     pub batch: usize,
+    /// `true` while the last window's shard gradients are still
+    /// unmerged — [`Self::collect_window`] defers the tree reduction
+    /// so [`Self::apply`] can overlap it with the gradient finalize
+    /// ([`merge_finalize_overlapped`]); [`Self::ensure_merged`] forces
+    /// the classic merge for any path that reads [`Self::grads`].
+    pending_merge: bool,
 }
 
 impl SingleStack {
@@ -573,7 +598,7 @@ impl SingleStack {
     pub fn from_parts(stack: QLstmStack, masters: MasterStack, batch: usize) -> Self {
         let shards = LaneShard::build(&stack, batch);
         let grads = StackGrads::zeros(&stack);
-        SingleStack { stack, masters, grads, shards, batch }
+        SingleStack { stack, masters, grads, shards, batch, pending_merge: false }
     }
 
     /// Zero every shard's carried recurrent state (per-window reset
@@ -593,18 +618,54 @@ impl SingleStack {
         self.stack.forward_batch_traced(ids, &mut hs, &mut cs, &mut scr, &mut tape)
     }
 
-    /// Merge the shards' window results (fixed-order tree reduction,
-    /// see [`merge_shards`]) into [`Self::grads`]; returns the summed
-    /// `(loss, scored)` over all lanes.
+    /// Collect the shards' window results: the `(loss, scored)` sums
+    /// fold immediately (in fixed shard order), but the gradient tree
+    /// reduction is *deferred* — [`Self::apply`] overlaps it with the
+    /// finalize, and [`Self::ensure_merged`] runs it on demand for
+    /// readers of [`Self::grads`] (the telemetry gradient scan, the
+    /// `mt` cross-stack overflow check).
     pub fn collect_window(&mut self) -> (f64, usize) {
-        let SingleStack { shards, grads, .. } = self;
-        let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
-        merge_shards(&mut refs, grads)
+        let mut loss = 0f64;
+        let mut scored = 0usize;
+        for s in &self.shards {
+            loss += s.loss;
+            scored += s.scored;
+        }
+        self.pending_merge = true;
+        (loss, scored)
     }
 
-    /// Finalize + apply the merged gradients (single-stack heads).
+    /// Force the classic fixed-order tree reduction ([`merge_shards`])
+    /// into [`Self::grads`] if the last window is still unmerged.
+    pub fn ensure_merged(&mut self) {
+        if !self.pending_merge {
+            return;
+        }
+        self.pending_merge = false;
+        let SingleStack { shards, grads, .. } = self;
+        let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
+        merge_shards(&mut refs, grads);
+    }
+
+    /// Finalize + apply the merged gradients (single-stack heads). On
+    /// the common path (window still unmerged, no clip norm) the tree
+    /// merge overlaps slot-by-slot with the finalize
+    /// ([`merge_finalize_overlapped`]) — bit-identical to the classic
+    /// two-phase sequence, which still runs whenever [`Self::grads`]
+    /// was already materialized or a global clip norm needs every slot
+    /// merged first.
     pub fn apply(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
-        if !finalize_grads(&mut self.grads, scale, clip) {
+        let applied = if self.pending_merge && clip.is_none() {
+            self.pending_merge = false;
+            let SingleStack { shards, grads, .. } = self;
+            let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
+            let (_loss, _scored, ok) = merge_finalize_overlapped(&mut refs, grads, scale);
+            ok
+        } else {
+            self.ensure_merged();
+            finalize_grads(&mut self.grads, scale, clip)
+        };
+        if !applied {
             return false;
         }
         self.masters.apply(&mut self.stack, &self.grads, lr, momentum);
@@ -899,8 +960,12 @@ impl TaskTrainer {
         let scale = self.scaler.scale;
         let loss = self.head.compute_window(scale);
         // telemetry: the merged gradients are still loss-scaled here —
-        // scan before apply_update finalizes them in place
-        let grads_ev = sampled.then(|| trace::grads_json(&self.head.grad_tensors()));
+        // force the deferred merge, then scan before apply_update
+        // finalizes them in place
+        let grads_ev = sampled.then(|| {
+            self.head.merge_grads();
+            trace::grads_json(&self.head.grad_tensors())
+        });
         let applied = self.head.apply_update(scale, lr, momentum, clip);
         let scale_ev = if applied {
             self.steps_applied += 1;
@@ -1091,6 +1156,7 @@ pub fn run_train_cli(args: &Args) -> Result<()> {
         trace: args.opt("trace").map(PathBuf::from),
         trace_every: args.opt_usize("trace-every", 1)?,
         kernel_tier: KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?,
+        kernel_isa: IsaPath::parse(args.opt_or("kernel-isa", "auto"))?,
     };
     println!(
         "offline FloatSD8 multi-task training [{} preset]: task={} vocab={}{} dim={} hidden={} \

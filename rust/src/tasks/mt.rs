@@ -200,6 +200,11 @@ impl TaskHead for MtTask {
     }
 
     fn apply_update(&mut self, scale: f32, lr: f32, momentum: f32, clip: Option<f32>) -> bool {
+        // the cross-stack overflow verdict needs both merged gradient
+        // buffers up front, so mt always takes the classic two-phase
+        // path (no merge/finalize overlap)
+        self.enc.ensure_merged();
+        self.dec.ensure_merged();
         // all-or-nothing across both stacks: a half-applied step would
         // desynchronize the encoder/decoder pair
         let overflow = self.enc.grads.slices_mut().iter().any(|s| grads_overflow(s))
@@ -319,6 +324,11 @@ impl TaskHead for MtTask {
         write_tensors(path, &tensors)
     }
 
+    fn merge_grads(&mut self) {
+        self.enc.ensure_merged();
+        self.dec.ensure_merged();
+    }
+
     fn grad_tensors(&self) -> Vec<(String, &[f32])> {
         let mut v = self.enc.grads.named_slices("enc");
         v.extend(self.dec.grads.named_slices("dec"));
@@ -334,6 +344,11 @@ impl TaskHead for MtTask {
     fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
         self.enc.stack.set_kernel_tier(tier);
         self.dec.stack.set_kernel_tier(tier);
+    }
+
+    fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        self.enc.stack.set_kernel_isa(isa);
+        self.dec.stack.set_kernel_isa(isa);
     }
 }
 
@@ -359,6 +374,7 @@ mod tests {
         let mut task = MtTask::new(tiny_cfg());
         let loss = task.compute_window(1024.0);
         assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        task.merge_grads();
         let enc_wx: f32 = task.enc.grads.layers[0].dwx.iter().map(|g| g.abs()).sum();
         assert!(enc_wx > 0.0, "no gradient crossed the encoder/decoder bridge");
         let enc_emb: f32 = task.enc.grads.emb.iter().map(|g| g.abs()).sum();

@@ -168,6 +168,10 @@ impl TaskHead for NliTask {
         write_tensors(path, &tensors)
     }
 
+    fn merge_grads(&mut self) {
+        self.core.ensure_merged();
+    }
+
     fn grad_tensors(&self) -> Vec<(String, &[f32])> {
         self.core.grads.named_slices("")
     }
@@ -178,6 +182,10 @@ impl TaskHead for NliTask {
 
     fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
         self.core.stack.set_kernel_tier(tier);
+    }
+
+    fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        self.core.stack.set_kernel_isa(isa);
     }
 }
 
@@ -210,6 +218,7 @@ mod tests {
     fn gradient_reaches_the_embedding_through_the_final_step_only() {
         let mut task = NliTask::new(tiny_cfg());
         task.compute_window(1024.0);
+        task.merge_grads();
         let emb_g: f32 = task.core.grads.emb.iter().map(|g| g.abs()).sum();
         assert!(emb_g > 0.0, "final-step loss must reach the embedding via recurrence");
     }

@@ -178,6 +178,10 @@ impl TaskHead for PosTask {
         write_tensors(path, &tensors)
     }
 
+    fn merge_grads(&mut self) {
+        self.core.ensure_merged();
+    }
+
     fn grad_tensors(&self) -> Vec<(String, &[f32])> {
         self.core.grads.named_slices("")
     }
@@ -188,6 +192,10 @@ impl TaskHead for PosTask {
 
     fn set_kernel_tier(&mut self, tier: crate::qmath::KernelTier) {
         self.core.stack.set_kernel_tier(tier);
+    }
+
+    fn set_kernel_isa(&mut self, isa: crate::qmath::IsaPath) {
+        self.core.stack.set_kernel_isa(isa);
     }
 }
 

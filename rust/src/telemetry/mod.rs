@@ -49,7 +49,7 @@ use crate::formats::fp8::F8_MAX;
 use crate::formats::{round_f8, FLOAT_SD8};
 use crate::lstm::QLstmStack;
 use crate::qmath::vector::QMatrix;
-use crate::qmath::KernelTier;
+use crate::qmath::{IsaPath, KernelTier};
 
 // ---------------------------------------------------------------------
 // global enable gate
@@ -325,12 +325,14 @@ impl KernelOp {
 }
 
 /// Shape-class slots in the kernel-profile table. A served model has a
-/// handful of distinct `(op, tier, rows, cols, batch)` classes (one per
-/// weight matrix × batch width actually formed), so 64 is generous;
-/// spills land in [`KERNEL_OVERFLOW`] rather than being dropped.
+/// handful of distinct `(op, tier, isa, rows, cols, batch)` classes
+/// (one per weight matrix × batch width actually formed), so 64 is
+/// generous; spills land in [`KERNEL_OVERFLOW`] rather than dropping.
 const KP_SLOTS: usize = 64;
-/// Bits per packed dimension (rows/cols/batch clamp to `2^20 - 1`).
-const KP_DIM_BITS: u64 = 20;
+/// Bits per packed dimension (rows/cols/batch clamp to `2^19 - 1`;
+/// one bit narrower than pre-ISA profiles to make room for the 2-bit
+/// ISA field — far above every real matrix dimension here).
+const KP_DIM_BITS: u64 = 19;
 const KP_DIM_MAX: u64 = (1 << KP_DIM_BITS) - 1;
 
 struct KpSlot {
@@ -352,10 +354,18 @@ static KERNEL_TABLE: [KpSlot; KP_SLOTS] = [KP_EMPTY; KP_SLOTS];
 /// table reads as an audited spill, not a silently lossy profile.
 static KERNEL_OVERFLOW: KpSlot = KP_EMPTY;
 
-/// Pack `(op, tier, rows, cols, batch)` into a nonzero slot key. The
-/// top bit is always set so an occupied slot can never collide with
-/// the empty-key sentinel 0.
-fn kp_key(op: KernelOp, tier: KernelTier, rows: usize, cols: usize, batch: usize) -> u64 {
+/// Pack `(op, tier, isa, rows, cols, batch)` into a nonzero slot key.
+/// The top bit is always set so an occupied slot can never collide
+/// with the empty-key sentinel 0; the 2-bit ISA field sits at bits
+/// 60–59 ([`IsaPath::index`]).
+fn kp_key(
+    op: KernelOp,
+    tier: KernelTier,
+    isa: IsaPath,
+    rows: usize,
+    cols: usize,
+    batch: usize,
+) -> u64 {
     let op_b = match op {
         KernelOp::Matvec => 0u64,
         KernelOp::Matmul => 1,
@@ -368,26 +378,29 @@ fn kp_key(op: KernelOp, tier: KernelTier, rows: usize, cols: usize, batch: usize
     (1 << 63)
         | (op_b << 62)
         | (tier_b << 61)
+        | ((isa.index() as u64) << (3 * KP_DIM_BITS + 2))
         | (clamp(rows) << (2 * KP_DIM_BITS))
         | (clamp(cols) << KP_DIM_BITS)
         | clamp(batch)
 }
 
 /// Record one forward-kernel wall-clock span, labeled by
-/// [`KernelTier`] and shape class. Callers gate on [`hot_enabled`]
-/// first (the disabled path is one relaxed load + branch, the same
-/// contract as [`note_sigmoid`]); with the gate open this is a probe
-/// over preallocated atomic slots — write-only from compute, so the
-/// profile can never perturb a computed bit.
+/// [`KernelTier`], dispatched [`IsaPath`], and shape class. Callers
+/// gate on [`hot_enabled`] first (the disabled path is one relaxed
+/// load + branch, the same contract as [`note_sigmoid`]); with the
+/// gate open this is a probe over preallocated atomic slots —
+/// write-only from compute, so the profile can never perturb a
+/// computed bit.
 pub fn note_kernel(
     op: KernelOp,
     tier: KernelTier,
+    isa: IsaPath,
     rows: usize,
     cols: usize,
     batch: usize,
     d: Duration,
 ) {
-    let key = kp_key(op, tier, rows, cols, batch);
+    let key = kp_key(op, tier, isa, rows, cols, batch);
     let nanos = d.as_nanos().min(u64::MAX as u128) as u64;
     let mut idx = (key % KP_SLOTS as u64) as usize;
     for _ in 0..KP_SLOTS {
@@ -419,6 +432,9 @@ pub fn note_kernel(
 pub struct KernelProfileRow {
     pub op: &'static str,
     pub tier: &'static str,
+    /// the SIMD execution path the class dispatched to
+    /// ([`IsaPath::name`]; `"any"` on the overflow row)
+    pub isa: &'static str,
     pub rows: u64,
     pub cols: u64,
     pub batch: u64,
@@ -428,8 +444,8 @@ pub struct KernelProfileRow {
 
 impl KernelProfileRow {
     /// Shape-class identity (everything but the accumulators).
-    fn class(&self) -> (&'static str, &'static str, u64, u64, u64) {
-        (self.op, self.tier, self.rows, self.cols, self.batch)
+    fn class(&self) -> (&'static str, &'static str, &'static str, u64, u64, u64) {
+        (self.op, self.tier, self.isa, self.rows, self.cols, self.batch)
     }
 }
 
@@ -455,6 +471,7 @@ pub fn kernel_profile() -> Vec<KernelProfileRow> {
         .map(|(k, calls, nanos)| KernelProfileRow {
             op: if (k >> 62) & 1 == 0 { "matvec" } else { "matmul" },
             tier: if (k >> 61) & 1 == 0 { "decoded" } else { "shiftadd" },
+            isa: IsaPath::from_index(((k >> (3 * KP_DIM_BITS + 2)) & 0b11) as u8).name(),
             rows: (k >> (2 * KP_DIM_BITS)) & KP_DIM_MAX,
             cols: (k >> KP_DIM_BITS) & KP_DIM_MAX,
             batch: k & KP_DIM_MAX,
@@ -467,6 +484,7 @@ pub fn kernel_profile() -> Vec<KernelProfileRow> {
         out.push(KernelProfileRow {
             op: "overflow",
             tier: "any",
+            isa: "any",
             rows: 0,
             cols: 0,
             batch: 0,
@@ -644,20 +662,32 @@ mod tests {
         // hold the gate open) can never land in the same class
         let (r, c) = (1111usize, 222usize);
         let base = kernel_profile();
-        note_kernel(KernelOp::Matvec, KernelTier::Decoded, r, c, 1, Duration::from_nanos(100));
-        note_kernel(KernelOp::Matvec, KernelTier::Decoded, r, c, 1, Duration::from_nanos(50));
-        note_kernel(KernelOp::Matmul, KernelTier::ShiftAdd, r, c, 8, Duration::from_nanos(10));
+        let sc = IsaPath::Scalar;
+        note_kernel(KernelOp::Matvec, KernelTier::Decoded, sc, r, c, 1, Duration::from_nanos(100));
+        note_kernel(KernelOp::Matvec, KernelTier::Decoded, sc, r, c, 1, Duration::from_nanos(50));
+        note_kernel(
+            KernelOp::Matmul,
+            KernelTier::ShiftAdd,
+            IsaPath::Sse2,
+            r,
+            c,
+            8,
+            Duration::from_nanos(10),
+        );
         let since = kernel_profile_since(&base);
         let mv = since
             .iter()
             .find(|x| x.op == "matvec" && x.rows == r as u64 && x.batch == 1)
             .expect("matvec class recorded");
-        assert_eq!((mv.tier, mv.cols, mv.calls, mv.nanos), ("decoded", c as u64, 2, 150));
+        assert_eq!(
+            (mv.tier, mv.isa, mv.cols, mv.calls, mv.nanos),
+            ("decoded", "scalar", c as u64, 2, 150)
+        );
         let mm = since
             .iter()
             .find(|x| x.op == "matmul" && x.rows == r as u64 && x.batch == 8)
             .expect("matmul class recorded");
-        assert_eq!((mm.tier, mm.calls, mm.nanos), ("shiftadd", 1, 10));
+        assert_eq!((mm.tier, mm.isa, mm.calls, mm.nanos), ("shiftadd", "sse2", 1, 10));
         // a second diff against the advanced profile drops both classes
         let now = kernel_profile();
         assert!(kernel_profile_since(&now)

@@ -1,6 +1,6 @@
 //! `floatsd-lstm report <trace.jsonl>` — render a trace stream into a
-//! human-readable summary. Both trace schemas are understood, detected
-//! from the stream itself:
+//! human-readable summary. Three document schemas are understood,
+//! detected from the stream itself:
 //!
 //! * `floatsd-trace-v1` ([`super::trace`]): numerics health — loss-
 //!   scale event history, per-tensor FP8 gradient saturation rates,
@@ -8,14 +8,19 @@
 //! * `floatsd-serve-trace-v1` ([`super::serve_trace`]): request
 //!   lifecycle — per-kind request/work counts, batch occupancy, queue
 //!   depth and high-water, session lifecycle, queue-wait/service span
-//!   percentiles, and the per-tier kernel profile.
+//!   percentiles, and the per-tier kernel profile;
+//! * [`EVAL_SCHEMA`] (`floatsd-eval-v1`, [`crate::tasks::eval`]): the
+//!   Table-IV eval grid — per-task loss/metric/count rows.
 //!
-//! `floatsd-lstm report --diff <a.jsonl> <b.jsonl>` compares two
-//! traces of the same schema side by side and flags regressions:
-//! loss-scale event-count drift, gradient-saturation deltas above
-//! [`SAT_DELTA_PP`] percentage points, and p50/p99 span regressions
-//! above [`SPAN_REGRESSION_PCT`] percent. Both thresholds are tunable
-//! per invocation — `--sat-delta-pp X` and `--span-regression-pct Y`
+//! `floatsd-lstm report --diff <a> <b>` compares two documents of the
+//! same schema side by side and flags regressions: loss-scale
+//! event-count drift, gradient-saturation deltas above
+//! [`SAT_DELTA_PP`] percentage points, p50/p99 span regressions above
+//! [`SPAN_REGRESSION_PCT`] percent — and, for a pair of eval reports,
+//! per-task metric drift (accuracy drift in percentage points against
+//! `--sat-delta-pp`, loss/ppl regressions in percent against
+//! `--span-regression-pct`). Both thresholds are tunable per
+//! invocation — `--sat-delta-pp X` and `--span-regression-pct Y`
 //! override the defaults (values must be finite and non-negative).
 
 use std::collections::BTreeMap;
@@ -28,6 +33,10 @@ use crate::tensorfile::json::Json;
 
 use super::serve_trace::SERVE_TRACE_SCHEMA;
 use super::trace::TRACE_SCHEMA;
+
+/// The eval-grid document schema ([`crate::tasks::eval`] writes it;
+/// `report`/`report --diff` consume it).
+pub const EVAL_SCHEMA: &str = "floatsd-eval-v1";
 
 /// `--diff` flags gradient/weight saturation-rate deltas above this
 /// many percentage points (default for `--sat-delta-pp`).
@@ -104,7 +113,9 @@ pub fn run_cli(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Which trace schema a stream carries, from its first non-empty line.
+/// Which document schema a stream carries, from its first non-empty
+/// line (an eval report is a single JSON object, so its first line is
+/// the whole document).
 fn detect_schema(text: &str) -> Result<&'static str> {
     for line in text.lines() {
         if line.trim().is_empty() {
@@ -114,8 +125,10 @@ fn detect_schema(text: &str) -> Result<&'static str> {
         return match j.get("schema").and_then(Json::as_str) {
             Some(s) if s == TRACE_SCHEMA => Ok(TRACE_SCHEMA),
             Some(s) if s == SERVE_TRACE_SCHEMA => Ok(SERVE_TRACE_SCHEMA),
+            Some(s) if s == EVAL_SCHEMA => Ok(EVAL_SCHEMA),
             other => bail!(
-                "trace line 1: schema {other:?}, expected {TRACE_SCHEMA:?} or {SERVE_TRACE_SCHEMA:?}"
+                "trace line 1: schema {other:?}, expected {TRACE_SCHEMA:?}, \
+                 {SERVE_TRACE_SCHEMA:?}, or {EVAL_SCHEMA:?}"
             ),
         };
     }
@@ -128,13 +141,14 @@ fn detect_schema(text: &str) -> Result<&'static str> {
 pub fn summarize(text: &str) -> Result<String> {
     match detect_schema(text)? {
         SERVE_TRACE_SCHEMA => Ok(render_serve(&parse_serve(text)?)),
+        EVAL_SCHEMA => Ok(render_eval(&parse_eval(text)?)),
         _ => Ok(render_train(&parse_train(text)?)),
     }
 }
 
-/// Side-by-side comparison of two traces of the same schema, flagging
-/// loss-scale drift, saturation deltas, and span regressions at the
-/// default thresholds.
+/// Side-by-side comparison of two documents of the same schema,
+/// flagging loss-scale drift, saturation deltas, span regressions,
+/// and per-task eval metric drift at the default thresholds.
 pub fn diff(a: &str, b: &str) -> Result<String> {
     diff_with(a, b, DiffThresholds::default())
 }
@@ -145,10 +159,10 @@ pub fn diff_with(a: &str, b: &str, th: DiffThresholds) -> Result<String> {
     if sa != sb {
         bail!("cannot diff traces of different schemas ({sa} vs {sb})");
     }
-    if sa == SERVE_TRACE_SCHEMA {
-        Ok(diff_serve(&parse_serve(a)?, &parse_serve(b)?, th))
-    } else {
-        Ok(diff_train(&parse_train(a)?, &parse_train(b)?, th))
+    match sa {
+        SERVE_TRACE_SCHEMA => Ok(diff_serve(&parse_serve(a)?, &parse_serve(b)?, th)),
+        EVAL_SCHEMA => Ok(diff_eval(&parse_eval(a)?, &parse_eval(b)?, th)),
+        _ => Ok(diff_train(&parse_train(a)?, &parse_train(b)?, th)),
     }
 }
 
@@ -672,6 +686,134 @@ fn diff_serve(a: &ServeAgg, b: &ServeAgg, th: DiffThresholds) -> String {
     out
 }
 
+// ----------------------------------------------------------------- eval
+
+/// One task's row out of a `floatsd-eval-v1` grid document.
+struct EvalTask {
+    source: String,
+    loss: f64,
+    metric: f64,
+    metric_name: String,
+    count: u64,
+}
+
+struct EvalAgg {
+    tasks: BTreeMap<String, EvalTask>,
+}
+
+fn parse_eval(text: &str) -> Result<EvalAgg> {
+    let j = Json::parse(text.trim()).context("eval report")?;
+    match j.get("schema").and_then(Json::as_str) {
+        Some(EVAL_SCHEMA) => {}
+        other => bail!("eval report: schema {other:?}, expected {EVAL_SCHEMA:?}"),
+    }
+    let Some(map) = j.get("tasks").and_then(Json::as_obj) else {
+        bail!("eval report: missing tasks object");
+    };
+    let mut tasks = BTreeMap::new();
+    for (name, e) in map {
+        let num = |k: &str| {
+            e.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("eval report: task {name}: missing {k}"))
+        };
+        tasks.insert(
+            name.clone(),
+            EvalTask {
+                source: e.get("source").and_then(Json::as_str).unwrap_or("?").to_string(),
+                loss: num("loss")?,
+                metric: num("metric")?,
+                metric_name: e
+                    .get("metric_name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("metric")
+                    .to_string(),
+                count: num("count")? as u64,
+            },
+        );
+    }
+    if tasks.is_empty() {
+        bail!("eval report: empty tasks object");
+    }
+    Ok(EvalAgg { tasks })
+}
+
+fn render_eval(a: &EvalAgg) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "report: {EVAL_SCHEMA}, {} tasks", a.tasks.len());
+    for (name, t) in &a.tasks {
+        let _ = writeln!(
+            out,
+            "  {name:<4} loss {:.4}  {} {:.4}  ({} positions)  [{}]",
+            t.loss, t.metric_name, t.metric, t.count, t.source
+        );
+    }
+    out
+}
+
+/// Eval-grid diff (`report --diff a.json b.json` on two eval
+/// reports): per-task metric drift under the same CLI-tunable
+/// thresholds as the trace diffs. Accuracy-style metrics (`*_acc`
+/// fractions) flag on absolute drift above `--sat-delta-pp`
+/// percentage points in either direction; loss and loss-derived
+/// metrics (ppl) flag on relative regressions above
+/// `--span-regression-pct` percent. Eval-set size or metric-name
+/// changes always flag — the two reports no longer measure the same
+/// thing.
+fn diff_eval(a: &EvalAgg, b: &EvalAgg, th: DiffThresholds) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "diff ({EVAL_SCHEMA}): a={} tasks, b={} tasks",
+        a.tasks.len(),
+        b.tasks.len()
+    );
+    let names: std::collections::BTreeSet<&String> = a.tasks.keys().chain(b.tasks.keys()).collect();
+    for name in names {
+        let (Some(ta), Some(tb)) = (a.tasks.get(name), b.tasks.get(name)) else {
+            let side = if a.tasks.contains_key(name) { "b" } else { "a" };
+            let _ = writeln!(out, "  {name:<4} [FLAG: task missing from {side}]");
+            continue;
+        };
+        let mut flags: Vec<String> = Vec::new();
+        if ta.count != tb.count {
+            flags.push(format!("eval-set size drift ({} -> {})", ta.count, tb.count));
+        }
+        if ta.metric_name != tb.metric_name {
+            flags.push(format!("metric changed ({} -> {})", ta.metric_name, tb.metric_name));
+        }
+        let dloss = if ta.loss > 0.0 { 100.0 * (tb.loss - ta.loss) / ta.loss } else { 0.0 };
+        if dloss > th.span_regression_pct {
+            flags.push(format!("loss regression > {}%", th.span_regression_pct));
+        }
+        if ta.metric_name == tb.metric_name {
+            if ta.metric_name.ends_with("acc") {
+                let dpp = 100.0 * (tb.metric - ta.metric);
+                if dpp.abs() > th.sat_delta_pp {
+                    flags.push(format!("accuracy drift > {}pp", th.sat_delta_pp));
+                }
+            } else {
+                let rel =
+                    if ta.metric > 0.0 { 100.0 * (tb.metric - ta.metric) / ta.metric } else { 0.0 };
+                if rel > th.span_regression_pct {
+                    flags.push(format!("metric regression > {}%", th.span_regression_pct));
+                }
+            }
+        }
+        let flag_s = if flags.is_empty() {
+            String::new()
+        } else {
+            format!("  [FLAG: {}]", flags.join("; "))
+        };
+        let _ = writeln!(
+            out,
+            "  {name:<4} loss {:.4} -> {:.4} ({dloss:+.1}%)  {} {:.4} -> {:.4}{flag_s}",
+            ta.loss, tb.loss, ta.metric_name, ta.metric, tb.metric
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -721,6 +863,12 @@ mod tests {
             r#""ev":"serve_end","tokens":1,"requests":1,"batches":1,"sessions":0,"queue_high_water":3,"kernel_tier":"decoded","kernel_profile":[{"op":"matvec","tier":"decoded","rows":12,"cols":8,"batch":1,"calls":4,"timing":{"total_ms":0.004,"mean_us":1.0}}],"timing":{"p50_us":40,"p99_us":40}"#,
         ));
         t
+    }
+
+    fn eval_report(lm_ppl: f64, pos_acc: f64, count: u64) -> String {
+        format!(
+            r#"{{"schema":"floatsd-eval-v1","tasks":{{"lm":{{"config":{{"vocab":64}},"count":{count},"loss":2.31,"metric":{lm_ppl},"metric_name":"ppl","source":"init"}},"pos":{{"config":{{"vocab":48}},"count":{count},"loss":0.9,"metric":{pos_acc},"metric_name":"tag_acc","source":"checkpoint:pos.tensors"}}}}}}"#
+        ) + "\n"
     }
 
     #[test]
@@ -791,6 +939,37 @@ mod tests {
         assert!(!ok.contains("[FLAG"), "{ok}");
         // schema mismatch is an error, not a garbage report
         assert!(diff(&serve_trace(100.0), &train_trace(1, 4)).is_err());
+    }
+
+    #[test]
+    fn summarize_auto_detects_the_eval_schema() {
+        let s = summarize(&eval_report(10.1, 0.75, 512)).unwrap();
+        assert!(s.contains(EVAL_SCHEMA), "{s}");
+        assert!(s.contains("lm") && s.contains("ppl 10.1000"), "{s}");
+        assert!(s.contains("tag_acc 0.7500") && s.contains("512 positions"), "{s}");
+        assert!(s.contains("[checkpoint:pos.tensors]"), "{s}");
+    }
+
+    #[test]
+    fn diff_flags_eval_metric_drift_per_task() {
+        // a +30% ppl regression and a -20pp accuracy drop both flag
+        let d = diff(&eval_report(10.0, 0.75, 512), &eval_report(13.0, 0.55, 512)).unwrap();
+        assert!(d.contains("metric regression > 20%"), "{d}");
+        assert!(d.contains("accuracy drift > 5pp"), "{d}");
+        // identical reports raise no flags
+        let clean = diff(&eval_report(10.0, 0.75, 512), &eval_report(10.0, 0.75, 512)).unwrap();
+        assert!(!clean.contains("[FLAG"), "{clean}");
+        // an eval-set size change always flags: the two grids no
+        // longer measure the same held-out set
+        let sized = diff(&eval_report(10.0, 0.75, 512), &eval_report(10.0, 0.75, 256)).unwrap();
+        assert!(sized.contains("eval-set size drift"), "{sized}");
+        // thresholds stay CLI-tunable: the same +30% is silent at 50%
+        let th = DiffThresholds { span_regression_pct: 50.0, ..DiffThresholds::default() };
+        let loose =
+            diff_with(&eval_report(10.0, 0.75, 512), &eval_report(13.0, 0.75, 512), th).unwrap();
+        assert!(!loose.contains("metric regression"), "{loose}");
+        // an eval report never diffs against a trace stream
+        assert!(diff(&eval_report(10.0, 0.75, 512), &train_trace(1, 4)).is_err());
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! carry `"shard"`. Event kinds:
 //!
 //! * `serve_start` — server-scoped config: `"task"`, `"workers"`,
-//!   `"max_batch"`, `"window_us"`, `"kernel_tier"`, `"vocab"`,
-//!   `"n_out"`;
+//!   `"max_batch"`, `"window_us"`, `"kernel_tier"`, `"kernel_isa"`,
+//!   `"vocab"`, `"n_out"`;
 //! * `session_open` — a request created session state on its shard:
 //!   `"session"`;
 //! * `session_close` — a close drained at a batch boundary:
@@ -27,8 +27,9 @@
 //!   and a `"timing"` block attributing `queue_wait_us` (enqueue →
 //!   batch formation) and `service_us` (enqueue → reply ready);
 //! * `serve_end` — run totals (`"tokens"`, `"requests"`, `"batches"`,
-//!   `"queue_high_water"`) plus `"kernel_profile"`: per-tier
-//!   decoded-vs-shiftadd wall time per matvec/matmul shape class,
+//!   `"queue_high_water"`) plus `"kernel_profile"`: wall time per
+//!   matvec/matmul shape class, split by kernel tier
+//!   (decoded/shiftadd) and dispatched SIMD path (`"isa"`),
 //!   accumulated since the sink opened the gate (see
 //!   [`super::note_kernel`]).
 //!
@@ -172,9 +173,10 @@ pub fn unum(v: u64) -> Json {
     Json::Num(v as f64)
 }
 
-/// Kernel-profile block: one row per `(op, tier, rows, cols, batch)`
-/// shape class. `calls` and the shape labels are deterministic for a
-/// fixed schedule; the accumulated wall time lives under `"timing"`.
+/// Kernel-profile block: one row per `(op, tier, isa, rows, cols,
+/// batch)` shape class. `calls` and the shape labels are deterministic
+/// for a fixed schedule; the accumulated wall time lives under
+/// `"timing"`.
 pub fn kernel_profile_json(rows: &[KernelProfileRow]) -> Json {
     Json::Arr(
         rows.iter()
@@ -182,6 +184,7 @@ pub fn kernel_profile_json(rows: &[KernelProfileRow]) -> Json {
                 let mut m = BTreeMap::new();
                 m.insert("op".to_string(), Json::Str(r.op.to_string()));
                 m.insert("tier".to_string(), Json::Str(r.tier.to_string()));
+                m.insert("isa".to_string(), Json::Str(r.isa.to_string()));
                 m.insert("rows".to_string(), unum(r.rows));
                 m.insert("cols".to_string(), unum(r.cols));
                 m.insert("batch".to_string(), unum(r.batch));
@@ -236,6 +239,7 @@ mod tests {
         let rows = [KernelProfileRow {
             op: "matvec",
             tier: "shiftadd",
+            isa: "sse2",
             rows: 192,
             cols: 64,
             batch: 4,
@@ -245,6 +249,7 @@ mod tests {
         let j = kernel_profile_json(&rows);
         let r = &j.as_arr().unwrap()[0];
         assert_eq!(r.get("tier").unwrap().as_str(), Some("shiftadd"));
+        assert_eq!(r.get("isa").unwrap().as_str(), Some("sse2"));
         assert_eq!(r.get("calls").unwrap().as_usize(), Some(10));
         assert_eq!(r.get("timing").unwrap().get("total_ms").unwrap().as_f64(), Some(0.005));
         assert!(r.get("nanos").is_none(), "raw nanos never leave the timing block");

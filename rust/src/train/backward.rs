@@ -128,6 +128,48 @@ impl StackGrads {
         out
     }
 
+    /// Number of independent gradient tensors ("slots") — `3 +
+    /// 3·layers` — the unit of the overlapped merge/finalize pipeline
+    /// ([`crate::train::merge_finalize_overlapped`]).
+    pub fn slot_count(&self) -> usize {
+        3 + 3 * self.layers.len()
+    }
+
+    /// Slot `i` read-only, in [`Self::slices_mut`] order: emb, head.w,
+    /// head.b, then wx/wh/b per layer.
+    pub fn slot(&self, i: usize) -> &[f32] {
+        match i {
+            0 => &self.emb,
+            1 => &self.head_w,
+            2 => &self.head_b,
+            _ => {
+                let g = &self.layers[(i - 3) / 3];
+                match (i - 3) % 3 {
+                    0 => &g.dwx,
+                    1 => &g.dwh,
+                    _ => &g.db,
+                }
+            }
+        }
+    }
+
+    /// Slot `i` mutable — same order as [`Self::slot`].
+    pub fn slot_mut(&mut self, i: usize) -> &mut [f32] {
+        match i {
+            0 => &mut self.emb,
+            1 => &mut self.head_w,
+            2 => &mut self.head_b,
+            _ => {
+                let g = &mut self.layers[(i - 3) / 3];
+                match (i - 3) % 3 {
+                    0 => &mut g.dwx,
+                    1 => &mut g.dwh,
+                    _ => &mut g.db,
+                }
+            }
+        }
+    }
+
     /// The same tensors read-only, named for telemetry's per-tensor
     /// FP8 saturation scans ("emb", "l1.wx", …, "head.b"); `prefix`
     /// (e.g. the mt encoder's "enc") is dot-joined in front when

@@ -50,8 +50,8 @@ pub use backward::{CellGrads, StackGrads, StateCot};
 pub use loss::{cross_entropy_grad, eval_ce, masked_cross_entropy_grad};
 pub use optimizer::{finalize_grads, LossScaler, MasterStack, ScaleEvent};
 pub use parallel::{
-    check_threads, lane_slice_ids, lane_spans, merge_shards, run_shards, LaneShard,
-    LANE_SHARDS_MAX,
+    check_threads, lane_slice_ids, lane_spans, merge_finalize_overlapped, merge_shards,
+    run_shards, LaneShard, LANE_SHARDS_MAX,
 };
 pub use tape::{CellTape, StackTape};
 pub use trainer::{run_cli, PresetTier, StepOutcome, TrainConfig, TrainReport, Trainer};

@@ -26,15 +26,25 @@
 //! (pinned end-to-end — checkpoints and per-step loss traces — by
 //! `tests/train_parallel.rs`).
 //!
+//! [`merge_finalize_overlapped`] pipelines the same fixed-order tree
+//! **slot by slot** against the optimizer's gradient finalize
+//! (overflow check → FP8 quantize → exact unscale) on a worker
+//! thread, so the merge overlaps the update instead of strictly
+//! preceding it — per-slot order is unchanged, so the bits are too.
+//!
 //! Threads beyond the shard count idle; shards beyond the thread count
 //! queue onto the same threads in fixed chunks. [`LANE_SHARDS_MAX`]
 //! caps per-window gradient-buffer memory (one [`StackGrads`] per
 //! shard) and is the parallelism ceiling.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+
 use anyhow::bail;
 
 use crate::lstm::cell::BatchScratch;
 use crate::lstm::QLstmStack;
+use crate::qmath::grad::{grads_overflow, quantize_fp8_inplace};
 
 use super::backward::{StackGrads, StateCot};
 use super::tape::StackTape;
@@ -254,6 +264,98 @@ pub fn merge_shards(shards: &mut [&mut LaneShard], out: &mut StackGrads) -> (f64
     (loss, scored)
 }
 
+/// Elementwise slot accumulate — the per-tensor half of
+/// [`StackGrads::add_assign`], applied to one slot of the tree.
+fn add_slot(dst: &mut [f32], src: &[f32]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+/// [`merge_shards`] fused with the finalize half of
+/// [`super::finalize_grads`]: the tree reduction is folded **slot by
+/// slot** (one slot = one gradient tensor, in [`StackGrads::slot`]
+/// order), and as soon as a slot's tree completes it is handed to a
+/// finalize worker thread that overflow-checks, FP8-quantizes, and
+/// exactly unscales it while the merging thread folds the next slot —
+/// the merge overlaps the update's gradient post-processing instead
+/// of running strictly before it.
+///
+/// Bit-identity with the classic two-phase path holds because the
+/// fold stays in the **same fixed pairwise order per slot**
+/// ([`StackGrads::add_assign`] is elementwise per tensor, so a
+/// whole-struct tree and per-slot trees produce the same sums), and
+/// the finalize math is elementwise per slot — thread count never
+/// enters either. `--threads N` therefore stays byte-identical to
+/// `--threads 1` (pinned by `tests/train_parallel.rs`).
+///
+/// Returns `(loss, scored, applied)`. `applied == false` means a slot
+/// overflowed the FP8 grid and the step must be skipped, exactly as
+/// with [`super::finalize_grads`]; the merged buffer is left
+/// partially finalized in that case, which is unobservable — a
+/// skipped window's gradients are never read, and every shard rewrites
+/// its buffers at the next [`LaneShard::begin_window`].
+///
+/// Callers that need the merged-but-still-scaled gradients (the
+/// trace's gradient scan) or a global clip norm (which must see every
+/// slot before any scaling decision) must keep using
+/// [`merge_shards`] + [`super::finalize_grads`].
+pub fn merge_finalize_overlapped(
+    shards: &mut [&mut LaneShard],
+    out: &mut StackGrads,
+    scale: f32,
+) -> (f64, usize, bool) {
+    let n = shards.len();
+    assert!(n >= 1, "merge needs at least one shard");
+    let mut loss = 0f64;
+    let mut scored = 0usize;
+    for s in shards.iter() {
+        loss += s.loss;
+        scored += s.scored;
+    }
+    let inv = 1.0 / scale;
+    let overflowed = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let overflowed = &overflowed;
+        let (tx, rx) = mpsc::channel::<&mut [f32]>();
+        scope.spawn(move || {
+            for slot in rx {
+                if grads_overflow(slot) {
+                    overflowed.store(true, Ordering::Relaxed);
+                }
+                // once any slot overflowed the step is skipped, so the
+                // remaining slots keep their raw merged values (never
+                // read — see the doc note above)
+                if overflowed.load(Ordering::Relaxed) {
+                    continue;
+                }
+                quantize_fp8_inplace(slot);
+                for g in slot.iter_mut() {
+                    *g *= inv;
+                }
+            }
+        });
+        for (i, dst) in out.slices_mut().into_iter().enumerate() {
+            // the same fixed pairwise tree merge_shards runs,
+            // restricted to slot i
+            let mut stride = 1usize;
+            while stride < n {
+                let mut j = 0usize;
+                while j + stride < n {
+                    let (left, right) = shards.split_at_mut(j + stride);
+                    add_slot(left[j].grads.slot_mut(i), right[0].grads.slot(i));
+                    j += 2 * stride;
+                }
+                stride *= 2;
+            }
+            dst.copy_from_slice(shards[0].grads.slot(i));
+            tx.send(dst).expect("the finalize worker outlives the sender");
+        }
+        drop(tx);
+    });
+    (loss, scored, !overflowed.load(Ordering::Relaxed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,5 +403,78 @@ mod tests {
         assert!(check_threads(1).is_ok());
         assert!(check_threads(256).is_ok());
         assert!(check_threads(257).is_err());
+    }
+
+    #[test]
+    fn overlapped_merge_finalize_matches_the_classic_two_phase_path() {
+        use crate::train::optimizer::finalize_grads;
+        use crate::train::MasterStack;
+
+        let (_, stack) = MasterStack::init_with_stack(12, 4, 6, 2, 5);
+        let scale = 1024.0;
+        for shard_count in [1usize, 2, 3, 5, 8] {
+            // same-seed builds so both paths fold identical inputs
+            let build = || {
+                let mut rng = crate::rng::SplitMix64::new(shard_count as u64 * 31 + 7);
+                (0..shard_count)
+                    .map(|i| {
+                        let mut s = LaneShard::new(&stack, i, i + 1);
+                        s.loss = i as f64 + 0.25;
+                        s.scored = 10 + i;
+                        for slot in s.grads.slices_mut() {
+                            for g in slot.iter_mut() {
+                                *g = rng.uniform(-300.0, 300.0);
+                            }
+                        }
+                        s
+                    })
+                    .collect::<Vec<LaneShard>>()
+            };
+
+            let mut a = build();
+            let mut out_a = StackGrads::zeros(&stack);
+            let (loss_a, scored_a) = {
+                let mut refs: Vec<&mut LaneShard> = a.iter_mut().collect();
+                merge_shards(&mut refs, &mut out_a)
+            };
+            let ok_a = finalize_grads(&mut out_a, scale, None);
+
+            let mut b = build();
+            let mut out_b = StackGrads::zeros(&stack);
+            let (loss_b, scored_b, ok_b) = {
+                let mut refs: Vec<&mut LaneShard> = b.iter_mut().collect();
+                merge_finalize_overlapped(&mut refs, &mut out_b, scale)
+            };
+
+            assert_eq!(loss_b.to_bits(), loss_a.to_bits(), "shards {shard_count}");
+            assert_eq!(scored_b, scored_a, "shards {shard_count}");
+            assert!(ok_a && ok_b, "in-range gradients must not overflow");
+            for i in 0..out_a.slot_count() {
+                let (sa, sb) = (out_a.slot(i), out_b.slot(i));
+                assert_eq!(sa.len(), sb.len());
+                for (x, y) in sa.iter().zip(sb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "shards {shard_count} slot {i}");
+                }
+            }
+        }
+
+        // an overflow in a late slot skips the step on both paths
+        let poison = |shards: &mut [LaneShard]| {
+            let last = shards.last_mut().unwrap();
+            let n_slots = last.grads.slot_count();
+            last.grads.slot_mut(n_slots - 1)[0] = f32::INFINITY;
+        };
+        let mut a: Vec<LaneShard> = (0..3).map(|i| LaneShard::new(&stack, i, i + 1)).collect();
+        poison(&mut a);
+        let mut out_a = StackGrads::zeros(&stack);
+        let mut refs: Vec<&mut LaneShard> = a.iter_mut().collect();
+        merge_shards(&mut refs, &mut out_a);
+        assert!(!finalize_grads(&mut out_a, scale, None));
+        let mut b: Vec<LaneShard> = (0..3).map(|i| LaneShard::new(&stack, i, i + 1)).collect();
+        poison(&mut b);
+        let mut out_b = StackGrads::zeros(&stack);
+        let mut refs: Vec<&mut LaneShard> = b.iter_mut().collect();
+        let (_, _, ok) = merge_finalize_overlapped(&mut refs, &mut out_b, scale);
+        assert!(!ok, "the overlapped path must report the overflow verdict");
     }
 }

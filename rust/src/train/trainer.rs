@@ -26,7 +26,7 @@ use crate::cli::Args;
 use crate::data::lm::LmGen;
 use crate::data::BatchSource;
 use crate::lstm::QLstmStack;
-use crate::qmath::KernelTier;
+use crate::qmath::{IsaPath, KernelTier};
 use crate::telemetry::{self, trace, ActSnapshot, SpanTimer, TraceSink};
 use crate::tensorfile::json::Json;
 use crate::tensorfile::{write_tensors, Tensor};
@@ -34,7 +34,9 @@ use crate::tensorfile::{write_tensors, Tensor};
 use super::backward::StackGrads;
 use super::loss::cross_entropy_grad;
 use super::optimizer::{finalize_grads, LossScaler, MasterStack, ScaleEvent};
-use super::parallel::{check_threads, lane_slice_ids, merge_shards, run_shards, LaneShard};
+use super::parallel::{
+    check_threads, lane_slice_ids, merge_finalize_overlapped, merge_shards, run_shards, LaneShard,
+};
 
 /// The three size tiers every trainer CLI accepts via `--preset`:
 /// `tiny` (CI smoke scale), `default` (the historical miniature), and
@@ -98,6 +100,9 @@ pub struct TrainConfig {
     /// `--kernel-tier`: forward matvec/matmul tier (runtime-only —
     /// never written into checkpoints; see `qmath::shiftadd`)
     pub kernel_tier: KernelTier,
+    /// `--kernel-isa`: SIMD execution path of the forward kernels
+    /// (runtime-only, bit-identical across paths; see `qmath::simd`)
+    pub kernel_isa: IsaPath,
 }
 
 impl Default for TrainConfig {
@@ -128,6 +133,7 @@ impl TrainConfig {
             trace: None,
             trace_every: 1,
             kernel_tier: KernelTier::Decoded,
+            kernel_isa: IsaPath::detect(),
         };
         match tier {
             PresetTier::Default => {}
@@ -231,6 +237,7 @@ impl Trainer {
             cfg.seed,
         );
         stack.set_kernel_tier(cfg.kernel_tier);
+        stack.set_kernel_isa(cfg.kernel_isa);
         let data = LmGen::char_lm(cfg.batch, cfg.seq, cfg.vocab, cfg.seed ^ 0xDA7A);
         let shards = LaneShard::build(&stack, cfg.batch);
         let grads = StackGrads::zeros(&stack);
@@ -262,9 +269,12 @@ impl Trainer {
 
     /// One truncated-BPTT window: every lane shard runs its traced
     /// forward + loss + BPTT (in parallel over `cfg.threads`), the
-    /// fixed-order tree reduction merges the shard gradients, then the
-    /// single FP16-master/FloatSD8 update applies (or the loss scaler
-    /// skips on overflow).
+    /// fixed-order tree reduction merges the shard gradients — on
+    /// untraced steps without a clip norm, overlapped slot-by-slot
+    /// with the update's gradient finalize
+    /// ([`merge_finalize_overlapped`]) — then the single
+    /// FP16-master/FloatSD8 update applies (or the loss scaler skips
+    /// on overflow).
     pub fn step(&mut self) -> StepOutcome {
         // wall-clock is telemetry-only: it lands in the trace's marked
         // `timing` field and never influences any computed value;
@@ -312,18 +322,31 @@ impl Trainer {
             shard.scored = lanes * seq;
             shard.backward(stack, &tape, &dlogits);
         });
-        let (loss_sum, _scored) = {
+        let (loss_sum, grads_ev, applied) = if sampled || self.cfg.clip_norm.is_some() {
+            // classic two-phase path: the trace's gradient scan needs
+            // the merged, still-scaled gradients, and a global clip
+            // norm must see every slot before any scaling decision
+            let (loss_sum, _scored) = {
+                let Trainer { shards, grads, .. } = self;
+                let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
+                merge_shards(&mut refs, grads)
+            };
+            // telemetry: scan the merged, still-scaled gradients
+            // *before* finalize_grads quantizes them in place
+            // (read-only scan, only when a sink is open)
+            let grads_ev = sampled.then(|| trace::grads_json(&self.grads.named_slices("")));
+            let applied = finalize_grads(&mut self.grads, scale, self.cfg.clip_norm);
+            (loss_sum, grads_ev, applied)
+        } else {
+            // hot path: fold the gradient tree slot by slot while a
+            // worker thread finalizes each completed slot —
+            // bit-identical to the two-phase path by the fixed
+            // per-slot pairwise order (see `merge_finalize_overlapped`)
             let Trainer { shards, grads, .. } = self;
             let mut refs: Vec<&mut LaneShard> = shards.iter_mut().collect();
-            merge_shards(&mut refs, grads)
+            let (loss_sum, _scored, applied) = merge_finalize_overlapped(&mut refs, grads, scale);
+            (loss_sum, None, applied)
         };
-
-        // telemetry: scan the merged, still-scaled gradients *before*
-        // finalize_grads quantizes them in place (read-only scan, only
-        // when a sink is open)
-        let grads_ev = sampled.then(|| trace::grads_json(&self.grads.named_slices("")));
-
-        let applied = finalize_grads(&mut self.grads, scale, self.cfg.clip_norm);
         let scale_ev = if applied {
             self.masters.apply(&mut self.stack, &self.grads, self.cfg.lr, self.cfg.momentum);
             self.steps_applied += 1;
@@ -579,6 +602,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         trace: args.opt("trace").map(PathBuf::from),
         trace_every: args.opt_usize("trace-every", 1)?,
         kernel_tier: KernelTier::parse(args.opt_or("kernel-tier", "decoded"))?,
+        kernel_isa: IsaPath::parse(args.opt_or("kernel-isa", "auto"))?,
     };
     println!(
         "offline FloatSD8 training [{} preset]: vocab={} dim={} hidden={} layers={} | batch={} \
@@ -635,6 +659,7 @@ mod tests {
             trace: None,
             trace_every: 1,
             kernel_tier: KernelTier::Decoded,
+            kernel_isa: IsaPath::detect(),
         }
     }
 

@@ -481,16 +481,17 @@ fn trace_every_samples_batch_lines_without_perturbing_served_bits() {
 
 #[test]
 fn eval_report_bytes_are_identical_with_and_without_a_trace_sink() {
-    use floatsd_lstm::qmath::KernelTier;
+    use floatsd_lstm::qmath::{IsaPath, KernelTier};
     use floatsd_lstm::tasks::eval::{build_report_tier, build_report_traced};
 
     let dir = test_dir();
     let plain = build_report_tier(&[], 2, KernelTier::Decoded).unwrap().to_string();
     let trace = dir.join("eval_spans.jsonl");
     let mut sink = TraceSink::create(&trace).unwrap();
-    let traced = build_report_traced(&[], 2, KernelTier::Decoded, Some(&mut sink))
-        .unwrap()
-        .to_string();
+    let traced =
+        build_report_traced(&[], 2, KernelTier::Decoded, IsaPath::detect(), Some(&mut sink))
+            .unwrap()
+            .to_string();
     sink.finish().unwrap();
     drop(sink);
     assert_eq!(traced, plain, "eval report bytes changed with a trace sink attached");

@@ -12,6 +12,12 @@
 //!   shiftadd tier reproduce the decoded tier exactly for all four
 //!   task heads (loss bits, checkpoint bytes, report bytes, decode
 //!   tokens/scores);
+//! * ISA level — the runtime-dispatched SIMD paths (`qmath::simd`:
+//!   sse2, avx2) are pinned bit-identical to the scalar path on both
+//!   tiers, at every forced tile width, across padded-stride shapes
+//!   and the adversarial activation classes, and end to end (training
+//!   loss bits + checkpoint bytes, eval report bytes, streamed logits,
+//!   decode tokens) — ISAs the host lacks are skipped with a notice;
 //! * the whole-row single-rounding variant `dot_row_sa_wide` is *not*
 //!   pinned — its divergence from the chained reference is
 //!   characterized by an explicit error bound instead.
@@ -24,11 +30,11 @@ use floatsd_lstm::hardware::mac_sim::MacPipeline;
 use floatsd_lstm::lstm::synthetic_stack;
 use floatsd_lstm::qmath::mac::MAC_GROUP;
 use floatsd_lstm::qmath::shiftadd::{decompose_x, dot_row_sa_wide, WeightDigits};
-use floatsd_lstm::qmath::vector::{matmul_fast, matmul_tiled, matvec_fast, QMatrix};
-use floatsd_lstm::qmath::KernelTier;
+use floatsd_lstm::qmath::vector::{matmul_fast, matmul_isa, matmul_tiled, matvec_fast, QMatrix};
+use floatsd_lstm::qmath::{IsaPath, KernelTier};
 use floatsd_lstm::rng::SplitMix64;
 use floatsd_lstm::serve::ServeModel;
-use floatsd_lstm::tasks::eval::build_report_tier;
+use floatsd_lstm::tasks::eval::{build_report_exec, build_report_tier};
 use floatsd_lstm::tasks::{TaskConfig, TaskKind, TaskTrainer};
 use floatsd_lstm::train::PresetTier;
 
@@ -65,16 +71,11 @@ fn assert_matvec_parity(w: &mut QMatrix, x: &[f32], bias: &[f32], what: &str) {
     }
 }
 
-#[test]
-fn all_256_codes_match_decoded_for_every_activation_class() {
-    let mut w = all_codes_matrix();
-    let mut rng = SplitMix64::new(0xC0DE);
-    let cols = w.cols;
-
-    // the adversarial operand classes the fallback rule must catch:
-    // f32 denormals (below the frame LSB), the denormal boundary,
-    // magnitudes past the frame cap, non-finite values, signed zero
-    let specials: Vec<f32> = vec![
+/// The adversarial operand classes the fallback rule must catch:
+/// f32 denormals (below the frame LSB), the denormal boundary,
+/// magnitudes past the frame cap, non-finite values, signed zero.
+fn adversarial_activations() -> Vec<f32> {
+    vec![
         0.0,
         -0.0,
         f32::MIN_POSITIVE,        // 2^-126
@@ -91,7 +92,16 @@ fn all_256_codes_match_decoded_for_every_activation_class() {
         f32::INFINITY,
         f32::NEG_INFINITY,
         f32::NAN,
-    ];
+    ]
+}
+
+#[test]
+fn all_256_codes_match_decoded_for_every_activation_class() {
+    let mut w = all_codes_matrix();
+    let mut rng = SplitMix64::new(0xC0DE);
+    let cols = w.cols;
+
+    let specials = adversarial_activations();
 
     // pure-class sweeps: each special value broadcast across a vector
     for (i, &v) in specials.iter().enumerate() {
@@ -412,5 +422,218 @@ fn streamed_logits_are_tier_invariant_and_tier_set_is_load_time_only() {
     let mut model = ServeModel::lm(Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3))).unwrap();
     let _alias = model.stack.clone();
     let err = model.set_kernel_tier(KernelTier::ShiftAdd).expect_err("aliased stack");
+    assert!(err.to_string().contains("before the model is shared"), "got: {err}");
+}
+
+// ---------------------------------------------------------------------
+// ISA dispatch parity (qmath::simd)
+// ---------------------------------------------------------------------
+
+/// Every ISA the host can run, scalar first; prints a notice for each
+/// path the host lacks instead of silently shrinking coverage.
+fn available_isas() -> Vec<IsaPath> {
+    let isas: Vec<IsaPath> = [IsaPath::Scalar, IsaPath::Sse2, IsaPath::Avx2]
+        .into_iter()
+        .filter(|i| i.available())
+        .collect();
+    for missing in [IsaPath::Sse2, IsaPath::Avx2] {
+        if !isas.contains(&missing) {
+            eprintln!(
+                "note: {} unsupported on this host — its parity lanes are skipped",
+                missing.name()
+            );
+        }
+    }
+    isas
+}
+
+/// `scalar` plus the widest ISA the host dispatches — the end-to-end
+/// pair the auto path actually exercises.
+fn isa_pair() -> Vec<IsaPath> {
+    let mut v = vec![IsaPath::Scalar];
+    if IsaPath::detect() != IsaPath::Scalar {
+        v.push(IsaPath::detect());
+    }
+    v
+}
+
+#[test]
+fn forced_isa_sweeps_are_bit_identical_to_scalar_on_both_tiers() {
+    let isas = available_isas();
+    let mut rng = SplitMix64::new(0x51D);
+    // the same adversarial operand classes the tier sweep uses — every
+    // SIMD lane must reproduce the scalar fallback decisions exactly
+    let specials = adversarial_activations();
+    // widths just below / on / above the digit planes' 16-lane padded
+    // stride (15/16/17, 31, 48) plus off-MAC_GROUP shapes
+    for &(rows, cols) in &[
+        (4usize, 15usize),
+        (4, 16),
+        (4, 17),
+        (3, 31),
+        (2, 48),
+        (5, 33),
+        (3, 7),
+    ] {
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut w = QMatrix::from_f32(rows, cols, &data);
+        let bias: Vec<f32> = (0..rows).map(|_| round_f16(rng.uniform(-0.5, 0.5))).collect();
+        for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+            w.set_kernel_tier(tier);
+            for batch in 1usize..=17 {
+                // specials scattered among grid and off-grid randoms so
+                // fast and fallback groups interleave inside the tiles
+                let xs: Vec<f32> = (0..batch * cols)
+                    .map(|i| match i % 4 {
+                        0 => specials[(batch + i) % specials.len()],
+                        1 => round_f8(rng.uniform(-4.0, 4.0)),
+                        _ => rng.uniform(-1.0, 1.0) * 2f32.powi(i as i32 % 45 - 22),
+                    })
+                    .collect();
+                for max_tile in [1usize, 4, 8] {
+                    let mut want = vec![0f32; batch * rows];
+                    matmul_isa(&w, &xs, batch, &bias, &mut want, max_tile, IsaPath::Scalar);
+                    let want: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    for &isa in &isas {
+                        let mut got = vec![0f32; batch * rows];
+                        matmul_isa(&w, &xs, batch, &bias, &mut got, max_tile, isa);
+                        let got: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(
+                            got,
+                            want,
+                            "({rows}x{cols}) batch {batch} tile {max_tile} {} {} diverged",
+                            tier.name(),
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn training_is_isa_invariant_for_all_tasks_on_both_tiers() {
+    let dir = test_dir();
+    let isas = isa_pair();
+    if isas.len() == 1 {
+        eprintln!("note: scalar-only host — cross-ISA training runs would be identical builds");
+        return;
+    }
+    for kind in TaskKind::ALL {
+        for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+            let mut runs = Vec::new();
+            for &isa in &isas {
+                let ckpt = dir.join(format!(
+                    "train_isa_{}_{}_{}.tensors",
+                    kind.name(),
+                    tier.name(),
+                    isa.name()
+                ));
+                let mut cfg = tiny_cfg(kind, tier);
+                cfg.kernel_isa = isa;
+                cfg.checkpoint = Some(ckpt.clone());
+                let report = TaskTrainer::new(cfg).unwrap().train().unwrap();
+                let bits: Vec<u64> = report.losses.iter().map(|l| l.to_bits()).collect();
+                runs.push((bits, std::fs::read(&ckpt).unwrap()));
+            }
+            assert_eq!(
+                runs[1].0,
+                runs[0].0,
+                "{} {}: loss trace diverged across ISAs",
+                kind.name(),
+                tier.name()
+            );
+            assert_eq!(
+                runs[1].1,
+                runs[0].1,
+                "{} {}: checkpoint bytes diverged across ISAs",
+                kind.name(),
+                tier.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_report_bytes_are_isa_invariant() {
+    let dir = test_dir();
+    let isas = isa_pair();
+    let ckpt = dir.join("eval_isa.tensors");
+    let mut cfg = tiny_cfg(TaskKind::Pos, KernelTier::Decoded);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+
+    let models = vec![ckpt];
+    for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+        let want = build_report_exec(&models, 1, tier, IsaPath::Scalar).unwrap().to_string();
+        for &isa in &isas[1..] {
+            let got = build_report_exec(&models, 1, tier, isa).unwrap().to_string();
+            assert_eq!(
+                got,
+                want,
+                "{}: eval report bytes diverged under {}",
+                tier.name(),
+                isa.name()
+            );
+        }
+        // like the tier, the dispatched ISA must never leak into the
+        // deterministic report bytes
+        for leak in ["scalar", "sse2", "avx2", "kernel_isa"] {
+            assert!(!want.contains(leak), "ISA leaked into the report: {leak}");
+        }
+    }
+}
+
+#[test]
+fn served_outputs_are_isa_invariant_and_isa_set_is_load_time_only() {
+    let isas = isa_pair();
+
+    // lm streamed logits through the streaming forward, both tiers
+    for tier in [KernelTier::Decoded, KernelTier::ShiftAdd] {
+        let mut bits = Vec::new();
+        for &isa in &isas {
+            let mut model =
+                ServeModel::lm(Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3))).unwrap();
+            model.set_kernel_tier(tier).unwrap();
+            model.set_kernel_isa(isa).unwrap();
+            let mut state = model.stack.new_stream_state();
+            let logits = model.stack.forward_from(&[1, 5, 9, 13, 2], &mut state);
+            bits.push(
+                logits
+                    .iter()
+                    .flat_map(|row| row.iter().map(|v| v.to_bits()))
+                    .collect::<Vec<u32>>(),
+            );
+        }
+        for b in &bits[1..] {
+            assert_eq!(b, &bits[0], "{}: streamed lm logits diverged across ISAs", tier.name());
+        }
+    }
+
+    // mt decode loop on the shift-add tier (the deepest kernel path)
+    let dir = test_dir();
+    let ckpt = dir.join("serve_isa_mt.tensors");
+    let mut cfg = tiny_cfg(TaskKind::Mt, KernelTier::Decoded);
+    cfg.checkpoint = Some(ckpt.clone());
+    TaskTrainer::new(cfg).unwrap().train().unwrap();
+    let src: Vec<usize> = vec![3, 1, 7, 2];
+    let mut results = Vec::new();
+    for &isa in &isas {
+        let mut model = ServeModel::load(&ckpt).expect("mt checkpoint loads");
+        model.set_kernel_tier(KernelTier::ShiftAdd).expect("exclusive at load time");
+        model.set_kernel_isa(isa).expect("exclusive at load time");
+        let (tokens, score) = model.reference_greedy_decode(&src, 8).unwrap();
+        results.push((tokens, score.to_bits()));
+    }
+    for r in &results[1..] {
+        assert_eq!(r, &results[0], "mt decode diverged across ISAs");
+    }
+
+    // once the stacks are shared, switching the ISA must refuse just
+    // like switching the tier does
+    let mut model = ServeModel::lm(Arc::new(synthetic_stack(16, 4, 6, 1, 16, 3))).unwrap();
+    let _alias = model.stack.clone();
+    let err = model.set_kernel_isa(IsaPath::Scalar).expect_err("aliased stack");
     assert!(err.to_string().contains("before the model is shared"), "got: {err}");
 }

@@ -28,6 +28,7 @@ fn smoke_cfg() -> TrainConfig {
         trace: None,
         trace_every: 1,
         kernel_tier: KernelTier::Decoded,
+        kernel_isa: floatsd_lstm::qmath::IsaPath::detect(),
     }
 }
 
